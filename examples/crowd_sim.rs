@@ -1,0 +1,108 @@
+//! END-TO-END DRIVER: the paper's pedestrian application (§5) over the full
+//! three-layer stack, with a CPU-baseline comparison.
+//!
+//! Two groups of agents cross a corridor; every step builds one velocity LP
+//! per agent (one constraint per neighbor, exactly the batch structure the
+//! paper motivates), solves the whole batch through the AOT RGB kernel on
+//! PJRT, and integrates. The same run is repeated on the multicore CPU
+//! baseline and the speed ratio reported — the paper's "~11x vs a CPU
+//! implementation" experiment, scaled to this substrate.
+//!
+//! ```sh
+//! cargo run --release --example crowd_sim [-- <agents> <steps>]
+//! ```
+
+use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::sim::{Backend, World, WorldParams};
+use batch_lp2d::solvers::batch_cpu::{self, Algo};
+use batch_lp2d::util::{Rng, Timer};
+
+struct RunReport {
+    wall_s: f64,
+    solve_ms_total: f64,
+    lps: usize,
+    infeasible: usize,
+    final_goal_dist: f64,
+    min_separation: f64,
+}
+
+fn run(world: &mut World, backend: &Backend<'_>, steps: usize, seed: u64) -> anyhow::Result<RunReport> {
+    let mut rng = Rng::new(seed);
+    let t0 = Timer::start();
+    let mut solve_ns = 0u64;
+    let mut lps = 0usize;
+    let mut infeasible = 0usize;
+    for _ in 0..steps {
+        let st = world.step(backend, &mut rng)?;
+        solve_ns += st.solve_ns;
+        lps += st.lps;
+        infeasible += st.infeasible;
+    }
+    Ok(RunReport {
+        wall_s: t0.elapsed_ns() as f64 / 1e9,
+        solve_ms_total: solve_ns as f64 / 1e6,
+        lps,
+        infeasible,
+        final_goal_dist: world.mean_goal_distance(),
+        min_separation: world.min_pairwise_distance(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let agents: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(512);
+    let steps: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(120);
+
+    let params = WorldParams::default();
+    println!("crowd_sim: {agents} agents x {steps} steps (max {} neighbours/agent)", params.max_neighbors);
+
+    // --- RGB through the engine (the paper's GPU path). ---
+    let engine = Engine::new(batch_lp2d::runtime::default_artifact_dir())?;
+    let mut world = World::crossing_groups(&mut Rng::new(42), agents, params);
+    let backend = Backend::Engine { engine: &engine, variant: Variant::Rgb };
+    // Warm the executable cache outside the timed region (XLA compile).
+    {
+        let mut w = World::crossing_groups(&mut Rng::new(42), agents, params);
+        let mut rng = Rng::new(0);
+        w.step(&backend, &mut rng)?;
+    }
+    let rgb = run(&mut world, &backend, steps, 7)?;
+
+    // --- Multicore CPU baseline (the paper's CPU comparison). ---
+    let threads = batch_cpu::default_threads();
+    let mut world_cpu = World::crossing_groups(&mut Rng::new(42), agents, params);
+    let cpu_backend = Backend::Cpu { algo: Algo::Seidel, threads };
+    let cpu = run(&mut world_cpu, &cpu_backend, steps, 7)?;
+
+    let report = |name: &str, r: &RunReport| {
+        println!(
+            "  {name:<12} {:>7.2}s wall | {:>8.1} ms solve | {:>6.1} steps/s | {:>9.0} LPs/s | infeasible {} | goal_dist {:.2} | min_sep {:.2}",
+            r.wall_s,
+            r.solve_ms_total,
+            steps as f64 / r.wall_s,
+            r.lps as f64 / r.wall_s,
+            r.infeasible,
+            r.final_goal_dist,
+            r.min_separation,
+        );
+    };
+    println!("\nresults:");
+    report("RGB/PJRT", &rgb);
+    report(&format!("CPU x{threads}"), &cpu);
+    println!(
+        "\nsolve-time ratio (CPU / RGB): {:.2}x   end-to-end ratio: {:.2}x",
+        cpu.solve_ms_total / rgb.solve_ms_total,
+        cpu.wall_s / rgb.wall_s
+    );
+
+    // Sanity: both runs must actually simulate the same scenario.
+    anyhow::ensure!(rgb.lps == cpu.lps, "LP counts diverged");
+    anyhow::ensure!(
+        (rgb.final_goal_dist - cpu.final_goal_dist).abs() < 1.0,
+        "trajectories diverged: {} vs {}",
+        rgb.final_goal_dist,
+        cpu.final_goal_dist
+    );
+    println!("crowd_sim OK");
+    Ok(())
+}

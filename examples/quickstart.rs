@@ -1,0 +1,82 @@
+//! Quickstart: build a few 2-D LPs by hand, solve them through the full
+//! AOT-kernel stack, and cross-check against the CPU reference solver.
+//!
+//! Run after `make artifacts`:
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use batch_lp2d::lp::types::{HalfPlane, Problem, Status};
+use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::solvers::seidel;
+use batch_lp2d::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The engine loads artifacts/manifest.tsv and compiles kernels
+    //    on demand (one XLA compile per (batch, m) bucket, then cached).
+    let engine = Engine::new(batch_lp2d::runtime::default_artifact_dir())?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. Problems are half-plane lists plus a linear objective.
+    //    maximize x + y  s.t.  x <= 2, y <= 3, x + y <= 4
+    let p1 = Problem::new(
+        vec![
+            HalfPlane::new(1.0, 0.0, 2.0),
+            HalfPlane::new(0.0, 1.0, 3.0),
+            HalfPlane::new(1.0, 1.0, 4.0),
+        ],
+        [1.0, 1.0],
+    );
+    // An infeasible one: x <= -1 and x >= 1.
+    let p2 = Problem::new(
+        vec![HalfPlane::new(1.0, 0.0, -1.0), HalfPlane::new(-1.0, 0.0, -1.0)],
+        [1.0, 0.0],
+    );
+    // And a degenerate one: single point (0, 0).
+    let p3 = Problem::new(
+        vec![
+            HalfPlane::new(1.0, 0.0, 0.0),
+            HalfPlane::new(-1.0, 0.0, 0.0),
+            HalfPlane::new(0.0, 1.0, 0.0),
+            HalfPlane::new(0.0, -1.0, 0.0),
+        ],
+        [0.7, 0.7],
+    );
+
+    // 3. Solve the batch on the RGB kernel. The runtime pads the batch to
+    //    the nearest compiled bucket and shuffles constraint order per
+    //    problem (Seidel's randomization).
+    let problems = vec![p1, p2, p3];
+    let mut rng = Rng::new(7);
+    // First call compiles the bucket's XLA module (cached thereafter);
+    // do it outside the timed call so the split below shows steady state.
+    engine.solve(Variant::Rgb, &problems, Some(&mut rng))?;
+    let (solutions, timing) = engine.solve(Variant::Rgb, &problems, Some(&mut rng))?;
+
+    for (i, (p, s)) in problems.iter().zip(&solutions).enumerate() {
+        match s.status {
+            Status::Optimal => println!(
+                "problem {i}: optimal at ({:+.3}, {:+.3}), objective {:+.3}",
+                s.point[0],
+                s.point[1],
+                s.objective(p)
+            ),
+            Status::Infeasible => println!("problem {i}: infeasible"),
+        }
+        // Cross-check against the sequential CPU solver.
+        let cpu = seidel::solve(p, &mut rng);
+        assert_eq!(cpu.status, s.status, "CPU/kernel disagreement!");
+    }
+
+    println!(
+        "\nbatch wall time: {:.3} ms (pack {:.3} | stage {:.3} | execute {:.3} | unpack {:.3})",
+        timing.total_ns() as f64 / 1e6,
+        timing.pack_ns as f64 / 1e6,
+        timing.transfer_ns as f64 / 1e6,
+        timing.execute_ns as f64 / 1e6,
+        timing.unpack_ns as f64 / 1e6,
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT export: lower every (variant, batch, m) bucket to HLO text.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under --out-dir (default: <repo>/artifacts):
+
+  <variant>_b<B>_m<M>.hlo.txt   one module per bucket
+  manifest.json                 [{variant, batch, m, block_b, chunk, file}]
+
+The Rust runtime (rust/src/runtime/) reads the manifest, compiles each
+module once on the PJRT CPU client, and caches the executables.
+
+Run ``python -m compile.aot --quick`` for the small bucket set used by
+integration tests; the full set backs the figure benchmarks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import rgb as rgb_kernel
+
+# Full bucket set, sized for the figure sweeps (DESIGN.md §5).  Scaled from
+# the paper's maxima because the execution substrate is XLA-CPU under Pallas
+# interpret mode (see EXPERIMENTS.md for the paper-vs-measured mapping).
+SIZE_SWEEP = (16, 32, 64, 128, 256)
+BATCH_SWEEP = (128, 256, 512, 1024, 2048, 4096)
+
+
+def tuned_params(m: int) -> dict:
+    """Per-LP-size kernel tile tuning (EXPERIMENTS.md SPerf).
+
+    The paper's own discussion (S5) notes performance peaks where the block
+    size matches the LP size and suggests "tailoring block sizes to the
+    expected LP size"; the same holds on this substrate. Measured through
+    the Rust/PJRT path: for m <= 128 a large batch tile (512) with a
+    32-wide work-unit chunk wins (fewer grid iterations, better intra-op
+    threading); at m = 256 the (TB, M) planes are already large enough and
+    a smaller tile avoids cache thrash.
+    """
+    if m <= 128:
+        return {"block_b": 512, "chunk": 32}
+    return {"block_b": 128, "chunk": 64}
+
+
+def full_buckets():
+    out = []
+    for b in BATCH_SWEEP:
+        for m in SIZE_SWEEP:
+            out.append(("rgb", b, m))
+    for b in (1024, 4096):           # Fig 7 naive-vs-rgb pairs
+        for m in SIZE_SWEEP:
+            out.append(("naive", b, m))
+    for b in (128, 1024):            # Gurung & Ray comparator (small m only)
+        for m in (16, 32, 64):
+            out.append(("simplex", b, m))
+    out.append(("ref", 256, 32))     # Rust-runtime integration oracle
+    return out
+
+
+def quick_buckets():
+    return [("rgb", 256, 32), ("naive", 256, 32), ("simplex", 128, 16),
+            ("ref", 256, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_bucket(variant: str, batch: int, m: int, out_dir: pathlib.Path,
+                  block_b: int = rgb_kernel.DEFAULT_BLOCK_B,
+                  chunk: int = rgb_kernel.DEFAULT_CHUNK) -> dict:
+    block_b = min(block_b, batch)
+    chunk = min(chunk, m)
+    fn = model.build_fn(variant, block_b=block_b, chunk=chunk)
+    lowered = jax.jit(fn).lower(*model.abstract_inputs(batch, m))
+    text = to_hlo_text(lowered)
+    name = f"{variant}_b{batch}_m{m}.hlo.txt"
+    (out_dir / name).write_text(text)
+    return {"variant": variant, "batch": batch, "m": m,
+            "block_b": block_b, "chunk": chunk, "file": name}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    ap.add_argument("--quick", action="store_true",
+                    help="export only the small integration-test bucket set")
+    args = ap.parse_args()
+
+    repo = pathlib.Path(__file__).resolve().parents[2]
+    out_dir = pathlib.Path(args.out_dir) if args.out_dir else repo / "artifacts"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    buckets = quick_buckets() if args.quick else full_buckets()
+    manifest = []
+    t_total = time.time()
+    for variant, batch, m in buckets:
+        t0 = time.time()
+        tuned = tuned_params(m) if variant in ("rgb", "naive") else {}
+        entry = export_bucket(variant, batch, m, out_dir, **tuned)
+        manifest.append(entry)
+        print(f"  {entry['file']:<28} {time.time() - t0:6.2f}s")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    # TSV twin for the Rust runtime (no JSON dependency in the offline build).
+    rows = ["variant\tbatch\tm\tblock_b\tchunk\tfile"]
+    rows += [f"{e['variant']}\t{e['batch']}\t{e['m']}\t{e['block_b']}"
+             f"\t{e['chunk']}\t{e['file']}" for e in manifest]
+    (out_dir / "manifest.tsv").write_text("\n".join(rows) + "\n")
+    print(f"wrote {len(manifest)} modules + manifest.json "
+          f"to {out_dir} in {time.time() - t_total:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Batched dense-tableau simplex: the Gurung & Ray comparator.
+
+The paper benchmarks RGB against Gurung & Ray's batch GPU *simplex* solver
+(arXiv:1609.08114): one dense simplex instance per thread/problem, pivoting
+in lockstep.  We rebuild that comparator on the same JAX/XLA path so the
+RGB-vs-batch-simplex crossover (Figs 3-4) can be reproduced: a batched
+two-phase primal simplex over a (B, R, C) tableau with masked lockstep
+pivots.
+
+Formulation.  The 2-D LP  max c.x  s.t.  A x <= b,  |x|,|y| <= M_BIG  is
+shifted to u = x + M_BIG >= 0 and augmented with the two upper box rows,
+giving R = m + 2 rows.  Every row gets a slack and an artificial column
+(uniform static shape across the batch; rows that start with a nonnegative
+RHS simply never use their artificial).  Phase 1 minimizes the artificial
+sum; phase 2 minimizes -c.u with artificials barred from entering.
+
+Like Gurung & Ray's implementation (capped at 511x511), this comparator is
+intended for small/medium m: per-problem work is O(iters * R * C) =~ O(m^3),
+which is exactly the scaling disadvantage versus RGB that the paper reports.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..problems import M_BIG  # noqa: F401  (kept for interface docs)
+
+_TOL = 1.0e-5
+
+# The comparator's own bounding box.  Much tighter than the RGB kernel's
+# M_BIG=1e4 so the float32 tableau stays well-conditioned -- the analog of
+# Gurung & Ray's hard 511x511 size cap.  Problems whose optimum |coord|
+# exceeds SIMPLEX_BOX are outside this comparator's domain (benchmarks only
+# feed it problems with interior optima; see rust/src/gen/).
+SIMPLEX_BOX = 256.0
+
+
+def _pivot(tab, red, basis, enter, leave, active):
+    """One masked lockstep pivot over the whole batch.
+
+    tab:   (B, R, C) tableau rows (RHS in the last column).
+    red:   (B, C)    reduced-cost row.
+    basis: (B, R)    basic-variable column index per row.
+    enter/leave: (B,) chosen pivot column/row; active: (B,) problems that
+    actually pivot this iteration (others pass through unchanged).
+    """
+    B, R, C = tab.shape
+    brange = jnp.arange(B)
+
+    prow = tab[brange, leave, :]                       # (B, C)
+    pcol = tab[brange, :, enter]                       # (B, R)
+    piv = prow[brange, enter]                          # (B,)
+    piv = jnp.where(jnp.abs(piv) < 1e-12, 1.0, piv)
+    prow_n = prow / piv[:, None]
+
+    # Rows != leave get (row - pcol * prow_n); the leave row becomes prow_n.
+    onehot_r = jax.nn.one_hot(leave, R, dtype=tab.dtype)          # (B, R)
+    elim = pcol[:, :, None] * prow_n[:, None, :]                  # (B, R, C)
+    new_tab = jnp.where(onehot_r[:, :, None] > 0.5,
+                        jnp.broadcast_to(prow_n[:, None, :], tab.shape),
+                        tab - elim)
+
+    rc_e = red[brange, enter]                                     # (B,)
+    new_red = red - rc_e[:, None] * prow_n
+
+    new_basis = jnp.where(jnp.arange(R)[None, :] == leave[:, None],
+                          enter[:, None], basis)
+
+    tab = jnp.where(active[:, None, None], new_tab, tab)
+    red = jnp.where(active[:, None], new_red, red)
+    basis = jnp.where(active[:, None], new_basis, basis)
+    return tab, red, basis
+
+
+def _run_phase(tab, red, basis, allow_mask, max_iter):
+    """Dantzig-rule pivoting until no negative reduced cost (or cap).
+
+    allow_mask: (C-1,) bool -- columns allowed to enter (bars artificials in
+    phase 2).  Returns updated (tab, red, basis).
+    """
+    B, R, C = tab.shape
+
+    def body(state):
+        it, tab, red, basis = state
+        rc = jnp.where(allow_mask[None, :], red[:, :C - 1], jnp.inf)
+        enter = jnp.argmin(rc, axis=1)                            # (B,)
+        can = rc[jnp.arange(B), enter] < -_TOL                    # (B,)
+
+        col = tab[jnp.arange(B)[:, None], jnp.arange(R)[None, :], enter[:, None]]
+        rhs = tab[:, :, C - 1]
+        ratio = jnp.where(col > _TOL, rhs / jnp.maximum(col, _TOL), jnp.inf)
+        leave = jnp.argmin(ratio, axis=1)                         # (B,)
+        bounded = jnp.isfinite(ratio[jnp.arange(B), leave])
+
+        active = can & bounded
+        tab, red, basis = _pivot(tab, red, basis, enter, leave, active)
+        return it + 1, tab, red, basis
+
+    def cond(state):
+        it, tab, red, basis = state
+        rc = jnp.where(allow_mask[None, :], red[:, :C - 1], jnp.inf)
+        any_improving = jnp.any(jnp.min(rc, axis=1) < -_TOL)
+        return (it < max_iter) & any_improving
+
+    _, tab, red, basis = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), tab, red, basis))
+    return tab, red, basis
+
+
+def simplex_solve(lines, obj, *, max_iter: int | None = None):
+    """Solve a batch of 2-D LPs with the batched two-phase simplex.
+
+    Same interface as ``rgb.rgb_solve``: ``(B, M, 4), (B, 2) ->
+    ((B, 2) solution, (B,) int32 status)`` with 0=optimal, 1=infeasible.
+    Padding rows (valid=0) become vacuous ``0.u <= 1`` constraints.
+    """
+    B, M, _ = lines.shape
+    R = M + 2                       # + two upper box rows
+    C = 2 + R + R + 1               # u(2) + slacks(R) + artificials(R) + RHS
+    max_iter = max_iter or 4 * R
+
+    nx, ny, bb = lines[:, :, 0], lines[:, :, 1], lines[:, :, 2]
+    valid = lines[:, :, 3] > 0.5
+    # Padding -> vacuous row 0.u <= 1 (slack basic, never binding).
+    nx = jnp.where(valid, nx, 0.0)
+    ny = jnp.where(valid, ny, 0.0)
+    bb = jnp.where(valid, bb, 1.0)  # vacuous 0.u <= 1 row
+
+    # Shift x = u - SIMPLEX_BOX: A u <= b + BOX*(a_x + a_y); add u <= 2*BOX.
+    bshift = bb + SIMPLEX_BOX * (nx + ny)
+    ax = jnp.concatenate([nx, jnp.ones((B, 1)), jnp.zeros((B, 1))], axis=1)
+    ay = jnp.concatenate([ny, jnp.zeros((B, 1)), jnp.ones((B, 1))], axis=1)
+    rhs = jnp.concatenate(
+        [bshift, jnp.full((B, 2), 2.0 * SIMPLEX_BOX)], axis=1)          # (B, R)
+
+    # Rows with negative RHS are sign-flipped; artificial becomes basic there.
+    neg = rhs < 0
+    sgn = jnp.where(neg, -1.0, 1.0)
+    ax, ay, rhs = ax * sgn, ay * sgn, rhs * sgn
+
+    rr = jnp.arange(R)
+    eye = jnp.eye(R)
+    tab = jnp.zeros((B, R, C))
+    tab = tab.at[:, :, 0].set(ax)
+    tab = tab.at[:, :, 1].set(ay)
+    tab = tab.at[:, :, 2:2 + R].set(sgn[:, :, None] * eye[None, :, :])
+    art_coef = jnp.where(neg, 1.0, 0.0)
+    tab = tab.at[:, :, 2 + R:2 + 2 * R].set(art_coef[:, :, None] * eye[None, :, :])
+    tab = tab.at[:, :, C - 1].set(rhs)
+
+    basis = jnp.where(neg, 2 + R + rr[None, :], 2 + rr[None, :])  # (B, R)
+
+    # ---- Phase 1: minimize sum of artificials. ----
+    # reduced costs = c1 - sum over rows with artificial basic of that row.
+    c1 = jnp.zeros((C,)).at[2 + R:2 + 2 * R].set(1.0)
+    red1 = c1[None, :] - jnp.sum(jnp.where(neg[:, :, None], tab, 0.0), axis=1)
+    allow1 = jnp.ones((C - 1,), bool)
+    tab, red1, basis = _run_phase(tab, red1, basis, allow1, max_iter)
+
+    # Phase-1 residual, computed freshly from the basis (the accumulated
+    # reduced-cost RHS drifts in float32): sum of still-basic artificials.
+    rhs_p1 = tab[:, :, C - 1]
+    art_basic = basis >= 2 + R
+    p1_resid = jnp.sum(jnp.where(art_basic, jnp.maximum(rhs_p1, 0.0), 0.0), axis=1)
+    infeasible = p1_resid > 0.05
+
+    # ---- Phase 2: minimize -c.u, artificials barred. ----
+    c2 = jnp.zeros((B, C)).at[:, 0].set(-obj[:, 0]).at[:, 1].set(-obj[:, 1])
+    cb = jnp.take_along_axis(c2, basis, axis=1)                   # (B, R)
+    red2 = c2 - jnp.einsum('br,brc->bc', cb, tab)
+    allow2 = jnp.ones((C - 1,), bool).at[2 + R:2 + 2 * R].set(False)
+    tab, red2, basis = _run_phase(tab, red2, basis, allow2, max_iter)
+
+    # Read off u from the basis, x = u - M_BIG.
+    rhs_fin = tab[:, :, C - 1]
+    ux = jnp.sum(jnp.where(basis == 0, rhs_fin, 0.0), axis=1)
+    uy = jnp.sum(jnp.where(basis == 1, rhs_fin, 0.0), axis=1)
+    sol = jnp.stack([ux - SIMPLEX_BOX, uy - SIMPLEX_BOX], axis=1).astype(jnp.float32)
+    status = jnp.where(infeasible, 1, 0).astype(jnp.int32)
+    return sol, status

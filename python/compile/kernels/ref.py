@@ -1,0 +1,200 @@
+"""Correctness oracles for the batch 2-D LP solver.
+
+Three independent implementations, ordered by trustworthiness:
+
+  * ``brute_force``   -- O(m^3) vertex enumeration in float64 numpy; the
+                         ground truth for tests.
+  * ``seidel_np``     -- sequential Seidel incremental LP in float64 numpy,
+                         written in the textbook per-problem style (no
+                         vectorization tricks shared with the kernel).
+  * ``solve_batch_ref`` -- batched pure-jnp implementation with the same
+                         (B, M, 4)/(B, 2) interface as the Pallas kernel;
+                         exportable through the same AOT path as variant
+                         ``"ref"``.
+
+Status codes (shared with the kernel and the Rust layer):
+  0 = optimal, 1 = infeasible.
+All problems are implicitly bounded by the box |x|, |y| <= M_BIG.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..problems import M_BIG, EPS
+
+OPTIMAL = 0
+INFEASIBLE = 1
+
+_EPS_PAR = 1.0e-7  # parallel-line threshold for unit-ish normals
+
+
+# ---------------------------------------------------------------------------
+# Brute force: enumerate every pairwise line intersection, keep feasible ones.
+# ---------------------------------------------------------------------------
+
+def brute_force(lines: np.ndarray, obj: np.ndarray):
+    """Ground-truth optimum by vertex enumeration (float64).
+
+    ``lines`` is (m, 4) with a valid flag in column 3; ``obj`` is (2,).
+    Returns ``(status, value, point)`` where ``value``/``point`` are None for
+    infeasible problems.  The implicit box is included as four extra lines.
+    """
+    lines = np.asarray(lines, dtype=np.float64)
+    obj = np.asarray(obj, dtype=np.float64)
+    act = lines[lines[:, 3] > 0.5][:, :3]
+    box = np.array([
+        [1.0, 0.0, M_BIG],
+        [-1.0, 0.0, M_BIG],
+        [0.0, 1.0, M_BIG],
+        [0.0, -1.0, M_BIG],
+    ])
+    allc = np.concatenate([act, box], axis=0)
+    n = allc.shape[0]
+
+    best_v, best_p = None, None
+    for i, j in itertools.combinations(range(n), 2):
+        a1, a2 = allc[i], allc[j]
+        det = a1[0] * a2[1] - a1[1] * a2[0]
+        if abs(det) < 1e-12:
+            continue
+        x = (a1[2] * a2[1] - a2[2] * a1[1]) / det
+        y = (a1[0] * a2[2] - a2[0] * a1[2]) / det
+        p = np.array([x, y])
+        tol = 1e-6 * np.maximum(1.0, np.abs(allc[:, 2]))
+        if np.all(allc[:, 0] * x + allc[:, 1] * y <= allc[:, 2] + tol):
+            v = obj @ p
+            if best_v is None or v > best_v:
+                best_v, best_p = v, p
+    if best_v is None:
+        return INFEASIBLE, None, None
+    return OPTIMAL, best_v, best_p
+
+
+# ---------------------------------------------------------------------------
+# Sequential Seidel (textbook form, float64).
+# ---------------------------------------------------------------------------
+
+def _clip_1d(t_lo, t_hi, ad, num):
+    """Intersect the 1-D feasible interval with ``t * ad <= num``."""
+    if ad > _EPS_PAR:
+        t_hi = min(t_hi, num / ad)
+    elif ad < -_EPS_PAR:
+        t_lo = max(t_lo, num / ad)
+    elif num < -EPS:
+        return t_lo, t_hi, True  # parallel and violated: empty line
+    return t_lo, t_hi, False
+
+
+def seidel_np(lines: np.ndarray, obj: np.ndarray):
+    """Sequential incremental 2-D LP (Seidel) over one problem, float64.
+
+    Processes constraints in the order given (the caller shuffles).
+    Returns ``(status, point)``.
+    """
+    lines = np.asarray(lines, dtype=np.float64)
+    cx, cy = float(obj[0]), float(obj[1])
+    sx = M_BIG if cx >= 0 else -M_BIG
+    sy = M_BIG if cy >= 0 else -M_BIG
+
+    act = [row for row in lines if row[3] > 0.5]
+    for i, row in enumerate(act):
+        nx, ny, b = row[0], row[1], row[2]
+        if nx * sx + ny * sy <= b + EPS:
+            continue
+        # Re-solve on the line nx*x + ny*y = b.
+        den = nx * nx + ny * ny
+        if den < 1e-18:
+            continue
+        p0 = np.array([nx * b / den, ny * b / den])
+        d = np.array([-ny, nx])
+        t_lo, t_hi = -4.0 * M_BIG, 4.0 * M_BIG
+        bad = False
+        for axd, num in ((d[0], M_BIG - p0[0]), (-d[0], M_BIG + p0[0]),
+                         (d[1], M_BIG - p0[1]), (-d[1], M_BIG + p0[1])):
+            t_lo, t_hi, pb = _clip_1d(t_lo, t_hi, axd, num)
+            bad = bad or pb
+        for h in range(i):
+            hr = act[h]
+            ad = hr[0] * d[0] + hr[1] * d[1]
+            num = hr[2] - (hr[0] * p0[0] + hr[1] * p0[1])
+            t_lo, t_hi, pb = _clip_1d(t_lo, t_hi, ad, num)
+            bad = bad or pb
+        if bad or t_lo > t_hi + EPS:
+            return INFEASIBLE, None
+        cd = cx * d[0] + cy * d[1]
+        t = t_hi if cd > 0 else t_lo
+        sx, sy = p0[0] + t * d[0], p0[1] + t * d[1]
+    return OPTIMAL, np.array([sx, sy])
+
+
+# ---------------------------------------------------------------------------
+# Batched pure-jnp reference with the kernel's exact interface.
+# ---------------------------------------------------------------------------
+
+def _solve_one_jnp(lines, obj):
+    """Per-problem Seidel in jnp; vmapped by ``solve_batch_ref``."""
+    m = lines.shape[0]
+    nx, ny, bb, valid = lines[:, 0], lines[:, 1], lines[:, 2], lines[:, 3] > 0.5
+    cx, cy = obj[0], obj[1]
+
+    sx0 = jnp.where(cx >= 0, M_BIG, -M_BIG).astype(jnp.float32)
+    sy0 = jnp.where(cy >= 0, M_BIG, -M_BIG).astype(jnp.float32)
+
+    def clip(state, ad, num):
+        t_lo, t_hi, bad = state
+        tc = num / jnp.where(jnp.abs(ad) < _EPS_PAR, 1.0, ad)
+        t_hi = jnp.where(ad > _EPS_PAR, jnp.minimum(t_hi, tc), t_hi)
+        t_lo = jnp.where(ad < -_EPS_PAR, jnp.maximum(t_lo, tc), t_lo)
+        bad = bad | ((jnp.abs(ad) <= _EPS_PAR) & (num < -EPS))
+        return t_lo, t_hi, bad
+
+    def step(i, state):
+        sx, sy, feas = state
+        lnx = jax.lax.dynamic_index_in_dim(nx, i, keepdims=False)
+        lny = jax.lax.dynamic_index_in_dim(ny, i, keepdims=False)
+        lb = jax.lax.dynamic_index_in_dim(bb, i, keepdims=False)
+        lv = jax.lax.dynamic_index_in_dim(valid, i, keepdims=False)
+        viol = lv & feas & (lnx * sx + lny * sy > lb + EPS)
+
+        den = jnp.maximum(lnx * lnx + lny * lny, 1e-12)
+        p0x, p0y = lnx * lb / den, lny * lb / den
+        dx, dy = -lny, lnx
+        st = (jnp.float32(-4.0 * M_BIG), jnp.float32(4.0 * M_BIG),
+              jnp.bool_(False))
+        st = clip(st, dx, M_BIG - p0x)
+        st = clip(st, -dx, M_BIG + p0x)
+        st = clip(st, dy, M_BIG - p0y)
+        st = clip(st, -dy, M_BIG + p0y)
+        t_lo, t_hi, bad = st
+
+        hmask = valid & (jnp.arange(m) < i)
+        ad = nx * dx + ny * dy
+        num = bb - (nx * p0x + ny * p0y)
+        tc = num / jnp.where(jnp.abs(ad) < _EPS_PAR, 1.0, ad)
+        t_hi = jnp.minimum(t_hi, jnp.min(jnp.where(hmask & (ad > _EPS_PAR), tc, 4.0 * M_BIG)))
+        t_lo = jnp.maximum(t_lo, jnp.max(jnp.where(hmask & (ad < -_EPS_PAR), tc, -4.0 * M_BIG)))
+        bad = bad | jnp.any(hmask & (jnp.abs(ad) <= _EPS_PAR) & (num < -EPS))
+
+        infeas = bad | (t_lo > t_hi + EPS)
+        cd = cx * dx + cy * dy
+        t = jnp.where(cd > 0, t_hi, t_lo)
+        upd = viol & ~infeas
+        sx = jnp.where(upd, p0x + t * dx, sx)
+        sy = jnp.where(upd, p0y + t * dy, sy)
+        feas = feas & ~(viol & infeas)
+        return sx, sy, feas
+
+    sx, sy, feas = jax.lax.fori_loop(0, m, step, (sx0, sy0, jnp.bool_(True)))
+    sol = jnp.stack([sx, sy])
+    status = jnp.where(feas, OPTIMAL, INFEASIBLE).astype(jnp.int32)
+    return sol, status
+
+
+def solve_batch_ref(lines, obj):
+    """Batched jnp reference: ``(B, M, 4), (B, 2) -> ((B, 2), (B,))``."""
+    return jax.vmap(_solve_one_jnp)(lines, obj)

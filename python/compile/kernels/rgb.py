@@ -1,0 +1,223 @@
+"""RGB: the paper's randomized batch 2-D LP solver as a Pallas kernel.
+
+TPU adaptation of Charlton/Maddock/Richmond's CUDA kernel (DESIGN.md §7):
+
+  * CUDA thread block + shared-memory staging  ->  a (TB, M, 4) constraint
+    tile staged HBM->VMEM once per grid step via BlockSpec, resident across
+    the whole incremental loop.
+  * one-thread-one-LP warp divergence           ->  lane-vectorized violation
+    mask over the tile.
+  * cooperative-thread-array work-unit sharing  ->  the dense (TB, CH)
+    intersection plane: the VPU computes all work units of the tile in
+    lockstep, perfectly balanced by construction.
+  * shared-memory atomicMin/atomicMax           ->  masked min/max tree
+    reductions along the constraint axis (contention-free).
+
+Two variants are exported:
+
+  * ``optimized=True``  (paper's RGB): a tile-level early exit skips the 1-D
+    LP entirely when no problem in the tile violates constraint ``i``, and
+    the previous-constraint scan is chunked so the work per step is
+    proportional to ``i`` (the paper's ``wu_count = active_threads * n``),
+    not to the padded maximum M.
+  * ``optimized=False`` (paper's NaiveRGB): the full (TB, M) plane is
+    evaluated unconditionally at every step -- the lockstep cost of the
+    divergent one-thread-one-LP port that Figure 7 measures against.
+
+Interpret mode only: ``interpret=True`` lowers the kernel to plain HLO so the
+CPU PJRT client (and the Rust runtime) can execute it.  Real-TPU lowering
+would emit a Mosaic custom call; DESIGN.md estimates its VMEM/VPU profile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..problems import M_BIG, EPS
+
+_EPS_PAR = 1.0e-7   # parallel-line threshold (normals are ~unit length)
+_T_BIG = 4.0 * M_BIG  # initial 1-D parameter bounds; > diameter of the box
+
+# Default tile sizes.  TB=128 problems x M=512 constraints x 4 f32 = 1 MiB of
+# VMEM, leaving room for the (TB, CH) intersection plane and double buffering.
+DEFAULT_BLOCK_B = 128
+DEFAULT_CHUNK = 64
+
+
+def _plane_pass(nx, ny, bb, valid, i, chunk_off, chunk_len,
+                dx, dy, p0x, p0y, t_lo, t_hi, bad):
+    """One (TB, chunk_len) slab of the 1-D LP: intersect line ``i`` with the
+    previous constraints in ``[chunk_off, chunk_off + chunk_len)``.
+
+    This is the paper's work-unit plane: every lane computes one
+    (problem, previous-constraint) intersection sigma(h, l) and the bounds
+    are folded with masked min/max reductions (the shared-memory-atomic
+    analog).  Returns updated ``(t_lo, t_hi, bad)``.
+    """
+    tb = dx.shape[0]
+    cnx = jax.lax.dynamic_slice(nx, (0, chunk_off), (tb, chunk_len))
+    cny = jax.lax.dynamic_slice(ny, (0, chunk_off), (tb, chunk_len))
+    cbb = jax.lax.dynamic_slice(bb, (0, chunk_off), (tb, chunk_len))
+    cvd = jax.lax.dynamic_slice(valid, (0, chunk_off), (tb, chunk_len))
+
+    gcol = chunk_off + jax.lax.broadcasted_iota(jnp.int32, (tb, chunk_len), 1)
+    hmask = cvd & (gcol < i)
+
+    ad = cnx * dx[:, None] + cny * dy[:, None]
+    num = cbb - (cnx * p0x[:, None] + cny * p0y[:, None])
+    tc = num / jnp.where(jnp.abs(ad) < _EPS_PAR, 1.0, ad)
+
+    t_hi = jnp.minimum(t_hi, jnp.min(
+        jnp.where(hmask & (ad > _EPS_PAR), tc, _T_BIG), axis=1))
+    t_lo = jnp.maximum(t_lo, jnp.max(
+        jnp.where(hmask & (ad < -_EPS_PAR), tc, -_T_BIG), axis=1))
+    bad = bad | jnp.any(hmask & (jnp.abs(ad) <= _EPS_PAR) & (num < -EPS),
+                        axis=1)
+    return t_lo, t_hi, bad
+
+
+def _rgb_kernel(lines_ref, obj_ref, sol_ref, status_ref, *,
+                m: int, chunk: int, optimized: bool):
+    """Kernel body.  Reads the tile once, runs the incremental loop over
+    values only, writes the two outputs at the end."""
+    lines = lines_ref[...]                      # (TB, M, 4), VMEM resident
+    nx, ny, bb = lines[:, :, 0], lines[:, :, 1], lines[:, :, 2]
+    valid = lines[:, :, 3] > 0.5
+    obj = obj_ref[...]
+    cx, cy = obj[:, 0], obj[:, 1]
+    tb = nx.shape[0]
+
+    # Start at the box corner optimal for the objective (Seidel's +-M init).
+    sx0 = jnp.where(cx >= 0, M_BIG, -M_BIG).astype(jnp.float32)
+    sy0 = jnp.where(cy >= 0, M_BIG, -M_BIG).astype(jnp.float32)
+    feas0 = jnp.ones((tb,), jnp.bool_)
+
+    def clip_box(t_lo, t_hi, bad, ad, num):
+        """Fold one analytic box constraint ``t * ad <= num`` into the bounds."""
+        tc = num / jnp.where(jnp.abs(ad) < _EPS_PAR, 1.0, ad)
+        t_hi = jnp.where(ad > _EPS_PAR, jnp.minimum(t_hi, tc), t_hi)
+        t_lo = jnp.where(ad < -_EPS_PAR, jnp.maximum(t_lo, tc), t_lo)
+        bad = bad | ((jnp.abs(ad) <= _EPS_PAR) & (num < -EPS))
+        return t_lo, t_hi, bad
+
+    def solve_1d(i, lnx, lny, lb):
+        """The set of 1-D LPs on line ``i`` (paper eqs. (3)/(4)), batched over
+        the tile.  Returns (new_x, new_y, infeasible)."""
+        den = jnp.maximum(lnx * lnx + lny * lny, 1e-12)
+        p0x, p0y = lnx * lb / den, lny * lb / den
+        dx, dy = -lny, lnx
+
+        t_lo = jnp.full((tb,), -_T_BIG, jnp.float32)
+        t_hi = jnp.full((tb,), _T_BIG, jnp.float32)
+        bad = jnp.zeros((tb,), jnp.bool_)
+        t_lo, t_hi, bad = clip_box(t_lo, t_hi, bad, dx, M_BIG - p0x)
+        t_lo, t_hi, bad = clip_box(t_lo, t_hi, bad, -dx, M_BIG + p0x)
+        t_lo, t_hi, bad = clip_box(t_lo, t_hi, bad, dy, M_BIG - p0y)
+        t_lo, t_hi, bad = clip_box(t_lo, t_hi, bad, -dy, M_BIG + p0y)
+
+        if optimized:
+            # Work proportional to i: scan ceil(i / chunk) slabs only.
+            n_chunks = (i + chunk - 1) // chunk
+
+            def body(state):
+                c, t_lo, t_hi, bad = state
+                t_lo, t_hi, bad = _plane_pass(
+                    nx, ny, bb, valid, i, c * chunk, chunk,
+                    dx, dy, p0x, p0y, t_lo, t_hi, bad)
+                return c + 1, t_lo, t_hi, bad
+
+            _, t_lo, t_hi, bad = jax.lax.while_loop(
+                lambda s: s[0] < n_chunks, body, (jnp.int32(0), t_lo, t_hi, bad))
+        else:
+            # NaiveRGB: the full padded plane, every time.
+            t_lo, t_hi, bad = _plane_pass(
+                nx, ny, bb, valid, i, 0, m, dx, dy, p0x, p0y, t_lo, t_hi, bad)
+
+        infeas = bad | (t_lo > t_hi + EPS)
+        cd = cx * dx + cy * dy
+        t = jnp.where(cd > 0, t_hi, t_lo)
+        return p0x + t * dx, p0y + t * dy, infeas
+
+    def step(i, state):
+        sx, sy, feas = state
+        lnx = jax.lax.dynamic_index_in_dim(nx, i, axis=1, keepdims=False)
+        lny = jax.lax.dynamic_index_in_dim(ny, i, axis=1, keepdims=False)
+        lb = jax.lax.dynamic_index_in_dim(bb, i, axis=1, keepdims=False)
+        lv = jax.lax.dynamic_index_in_dim(valid, i, axis=1, keepdims=False)
+        viol = lv & feas & (lnx * sx + lny * sy > lb + EPS)
+
+        def recompute(args):
+            sx, sy, feas = args
+            nsx, nsy, infeas = solve_1d(i, lnx, lny, lb)
+            upd = viol & ~infeas
+            return (jnp.where(upd, nsx, sx), jnp.where(upd, nsy, sy),
+                    feas & ~(viol & infeas))
+
+        if optimized:
+            # Tile-level early exit: if no problem in the tile violates, the
+            # whole 1-D LP is skipped (the cooperative analog of idle warps).
+            return jax.lax.cond(jnp.any(viol), recompute, lambda a: a,
+                                (sx, sy, feas))
+        return recompute((sx, sy, feas))
+
+    sx, sy, feas = jax.lax.fori_loop(0, m, step, (sx0, sy0, feas0))
+    sol_ref[...] = jnp.stack([sx, sy], axis=1)
+    status_ref[...] = jnp.where(feas, 0, 1).astype(jnp.int32)
+
+
+def rgb_solve(lines, obj, *, block_b: int = DEFAULT_BLOCK_B,
+              chunk: int = DEFAULT_CHUNK, optimized: bool = True,
+              interpret: bool = True):
+    """Solve a batch of 2-D LPs.
+
+    Args:
+      lines: float32 (B, M, 4) packed constraints ``[nx, ny, b, valid]``.
+      obj:   float32 (B, 2) objective; maximize ``c . x``.
+      block_b: problems per tile (grid = B / block_b).
+      chunk: slab width of the previous-constraint scan (optimized variant).
+      optimized: RGB (True) or NaiveRGB (False) -- see module docstring.
+      interpret: must stay True on CPU PJRT (Mosaic is TPU-only).
+
+    Returns:
+      (solution float32 (B, 2), status int32 (B,)) with 0=optimal,
+      1=infeasible.  Solutions of infeasible problems are undefined.
+    """
+    B, M, four = lines.shape
+    assert four == 4, f"lines must be (B, M, 4), got {lines.shape}"
+    block_b = min(block_b, B)
+    if B % block_b != 0:
+        raise ValueError(f"batch {B} not divisible by block_b {block_b}")
+    chunk = min(chunk, M)
+    if M % chunk != 0:
+        raise ValueError(f"m {M} not divisible by chunk {chunk}")
+
+    kern = functools.partial(_rgb_kernel, m=M, chunk=chunk,
+                             optimized=optimized)
+    return pl.pallas_call(
+        kern,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, M, 4), lambda g: (g, 0, 0)),
+            pl.BlockSpec((block_b, 2), lambda g: (g, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 2), lambda g: (g, 0)),
+            pl.BlockSpec((block_b,), lambda g: (g,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 2), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lines, obj)
+
+
+def naive_solve(lines, obj, *, block_b: int = DEFAULT_BLOCK_B,
+                interpret: bool = True):
+    """NaiveRGB: the unoptimized one-thread-one-LP port (Fig 7 baseline)."""
+    return rgb_solve(lines, obj, block_b=block_b, optimized=False,
+                     interpret=interpret)

@@ -1,0 +1,60 @@
+"""L2: batch 2-D LP solve entry points, one per (variant, batch, m) bucket.
+
+Each entry point is a pure jax function ``(lines, obj) -> (solution, status)``
+over static shapes, suitable for ``jax.jit(...).lower(...)`` and AOT export
+(see aot.py).  The constraint-order randomization that Seidel's algorithm
+needs happens host-side (Rust runtime / Python tests) so these functions are
+deterministic.
+
+Variants:
+  rgb     -- the paper's optimized algorithm (Pallas kernel, work-unit
+             chunking + tile early exit).
+  naive   -- NaiveRGB (Pallas kernel, full-plane lockstep; Fig 7 baseline).
+  ref     -- pure-jnp oracle (kernels/ref.py), exported for integration
+             tests of the Rust runtime.
+  simplex -- batched two-phase simplex (Gurung & Ray comparator).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rgb as rgb_kernel
+from .kernels import ref as ref_kernel
+from .kernels import batch_simplex
+
+VARIANTS = ("rgb", "naive", "ref", "simplex")
+
+
+def build_fn(variant: str, *, block_b: int = rgb_kernel.DEFAULT_BLOCK_B,
+             chunk: int = rgb_kernel.DEFAULT_CHUNK):
+    """Return the solve callable for ``variant``.
+
+    The callable maps ``(lines (B, M, 4) f32, obj (B, 2) f32)`` to
+    ``(solution (B, 2) f32, status (B,) i32)``.
+    """
+    if variant == "rgb":
+        return functools.partial(rgb_kernel.rgb_solve, block_b=block_b,
+                                 chunk=chunk, optimized=True, interpret=True)
+    if variant == "naive":
+        return functools.partial(rgb_kernel.rgb_solve, block_b=block_b,
+                                 optimized=False, interpret=True)
+    if variant == "ref":
+        return ref_kernel.solve_batch_ref
+    if variant == "simplex":
+        return batch_simplex.simplex_solve
+    raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+
+
+def solve_batch(variant: str, lines, obj, **kw):
+    """Convenience eager entry point (tests / notebooks)."""
+    return build_fn(variant, **kw)(lines, obj)
+
+
+def abstract_inputs(batch: int, m: int):
+    """ShapeDtypeStructs for lowering a (batch, m) bucket."""
+    return (jax.ShapeDtypeStruct((batch, m, 4), jnp.float32),
+            jax.ShapeDtypeStruct((batch, 2), jnp.float32))

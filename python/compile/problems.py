@@ -1,0 +1,106 @@
+"""Random 2-D LP problem generation and packing, mirroring the paper's setup.
+
+The paper (§4) generates problems as "random feasible constraints in
+two-dimensions: constraint lines are generated randomly and tested to ensure
+a solution is possible".  We guarantee feasibility constructively instead of
+by rejection: sample an interior point, then sample half-planes that keep it
+strictly feasible.  The Rust workload generator (rust/src/gen/) implements
+the identical scheme so Python tests and Rust benches agree on the problem
+distribution.
+
+Packed layout (shared with the kernels and the Rust runtime):
+
+  lines : float32 (B, M, 4)  -- [nx, ny, b, valid] per constraint, meaning
+                                nx*x + ny*y <= b ; valid > 0.5 marks a real
+                                constraint, 0.0 marks padding.
+  obj   : float32 (B, 2)     -- objective c, maximize c . x.
+
+All problems are implicitly intersected with the box |x|,|y| <= M_BIG (the
+paper's +-M bound from Seidel's algorithm); the solvers handle the box
+analytically so it never appears in `lines`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Analytic bounding box half-width (Seidel's M).  Kept moderate so float32
+# arithmetic on box-corner coordinates stays well-conditioned.
+M_BIG = 1.0e4
+
+# Feasibility / violation tolerance used throughout the Python layer.
+EPS = 1.0e-4
+
+
+def generate_feasible(rng: np.random.Generator, m: int, *, radius: float = 8.0,
+                      slack_lo: float = 0.05, slack_hi: float = 4.0):
+    """One random feasible LP with exactly ``m`` constraints.
+
+    Returns ``(lines (m, 4) float32, obj (2,) float32)``.  An interior point
+    is sampled inside a disc of ``radius``; each constraint is a unit-normal
+    half-plane pushed away from it by a positive slack, so the problem is
+    strictly feasible by construction.
+    """
+    theta0 = rng.uniform(0.0, 2.0 * np.pi)
+    r0 = radius * np.sqrt(rng.uniform())
+    x0 = np.array([r0 * np.cos(theta0), r0 * np.sin(theta0)])
+
+    ang = rng.uniform(0.0, 2.0 * np.pi, size=m)
+    normals = np.stack([np.cos(ang), np.sin(ang)], axis=1)  # unit normals
+    slack = rng.uniform(slack_lo, slack_hi, size=m)
+    b = normals @ x0 + slack
+
+    lines = np.concatenate(
+        [normals, b[:, None], np.ones((m, 1))], axis=1
+    ).astype(np.float32)
+
+    oang = rng.uniform(0.0, 2.0 * np.pi)
+    obj = np.array([np.cos(oang), np.sin(oang)], dtype=np.float32)
+    return lines, obj
+
+
+def generate_infeasible(rng: np.random.Generator, m: int):
+    """One random infeasible LP: a feasible base plus a contradicting pair."""
+    assert m >= 2
+    lines, obj = generate_feasible(rng, m)
+    # Overwrite two constraints with an empty slab: n.x <= -1 and -n.x <= -1.
+    ang = rng.uniform(0.0, 2.0 * np.pi)
+    n = np.array([np.cos(ang), np.sin(ang)], dtype=np.float32)
+    lines[m - 2] = [n[0], n[1], -1.0, 1.0]
+    lines[m - 1] = [-n[0], -n[1], -1.0, 1.0]
+    return lines, obj
+
+
+def pack_batch(problems, m_pad: int, rng: np.random.Generator | None = None):
+    """Pack a list of ``(lines, obj)`` into batch arrays, padding to ``m_pad``.
+
+    If ``rng`` is given, each problem's constraint order is randomly permuted
+    first -- the randomization Seidel's algorithm needs for its expected-O(m)
+    bound (the paper's host-side shuffle; the Rust runtime does the same).
+    """
+    B = len(problems)
+    lines = np.zeros((B, m_pad, 4), dtype=np.float32)
+    obj = np.zeros((B, 2), dtype=np.float32)
+    for i, (pl_lines, pl_obj) in enumerate(problems):
+        m = pl_lines.shape[0]
+        if m > m_pad:
+            raise ValueError(f"problem {i} has {m} > m_pad={m_pad} constraints")
+        src = pl_lines
+        if rng is not None:
+            src = src[rng.permutation(m)]
+        lines[i, :m] = src
+        obj[i] = pl_obj
+    return lines, obj
+
+
+def random_batch(rng: np.random.Generator, batch: int, m: int, m_pad: int | None = None,
+                 infeasible_frac: float = 0.0):
+    """Convenience: ``batch`` random problems of size ``m`` packed to ``m_pad``."""
+    m_pad = m_pad or m
+    probs = []
+    for _ in range(batch):
+        if infeasible_frac > 0.0 and rng.uniform() < infeasible_frac:
+            probs.append(generate_infeasible(rng, m))
+        else:
+            probs.append(generate_feasible(rng, m))
+    return pack_batch(probs, m_pad, rng)

@@ -1,0 +1,85 @@
+"""Batched two-phase simplex (Gurung & Ray comparator) correctness."""
+
+import numpy as np
+import pytest
+
+from compile import problems
+from compile.kernels import batch_simplex, ref
+
+
+def _bounded_batch(rng, batch, m, m_pad):
+    """Problems whose optimum is interior to the comparator's SIMPLEX_BOX."""
+    probs = []
+    for _ in range(batch):
+        lines, obj = problems.generate_feasible(rng, m - 4)
+        caps = np.array([
+            [1.0, 0.0, 100.0, 1.0],
+            [-1.0, 0.0, 100.0, 1.0],
+            [0.0, 1.0, 100.0, 1.0],
+            [0.0, -1.0, 100.0, 1.0],
+        ], dtype=np.float32)
+        probs.append((np.concatenate([lines, caps]), obj))
+    return problems.pack_batch(probs, m_pad, rng)
+
+
+def test_matches_brute_force_on_bounded_problems():
+    rng = np.random.default_rng(900)
+    lines, obj = _bounded_batch(rng, 24, 10, 12)
+    sol, status = batch_simplex.simplex_solve(lines, obj)
+    sol, status = np.asarray(sol), np.asarray(status)
+    for i in range(24):
+        st_b, v_b, _ = ref.brute_force(lines[i], obj[i])
+        assert status[i] == st_b == ref.OPTIMAL
+        got = float(obj[i].astype(np.float64) @ sol[i])
+        assert abs(got - v_b) < 1e-2 + 1e-4 * abs(v_b), (i, got, v_b)
+
+
+def test_detects_infeasible():
+    rng = np.random.default_rng(901)
+    probs = [problems.generate_infeasible(rng, 8) for _ in range(8)]
+    lines, obj = problems.pack_batch(probs, 8, rng)
+    _, status = batch_simplex.simplex_solve(lines, obj)
+    assert (np.asarray(status) == ref.INFEASIBLE).all()
+
+
+def test_mixed_feasible_infeasible():
+    rng = np.random.default_rng(902)
+    probs = []
+    want = []
+    for k in range(12):
+        if k % 3 == 0:
+            probs.append(problems.generate_infeasible(rng, 8))
+            want.append(ref.INFEASIBLE)
+        else:
+            lines, obj = problems.generate_feasible(rng, 4)
+            caps = np.array([[1, 0, 50, 1], [-1, 0, 50, 1],
+                             [0, 1, 50, 1], [0, -1, 50, 1]], dtype=np.float32)
+            probs.append((np.concatenate([lines, caps]), obj))
+            want.append(ref.OPTIMAL)
+    lines, obj = problems.pack_batch(probs, 8, rng)
+    _, status = batch_simplex.simplex_solve(lines, obj)
+    np.testing.assert_array_equal(np.asarray(status), want)
+
+
+def test_padding_rows_are_vacuous():
+    rng = np.random.default_rng(903)
+    lines, obj = _bounded_batch(rng, 4, 8, 8)
+    sol8, st8 = batch_simplex.simplex_solve(lines, obj)
+    lines16 = np.zeros((4, 16, 4), dtype=np.float32)
+    lines16[:, :8] = lines
+    sol16, st16 = batch_simplex.simplex_solve(lines16, obj)
+    np.testing.assert_array_equal(np.asarray(st8), np.asarray(st16))
+    np.testing.assert_allclose(np.asarray(sol8), np.asarray(sol16), atol=1e-2)
+
+
+def test_agrees_with_rgb_kernel():
+    from compile.kernels import rgb
+    rng = np.random.default_rng(904)
+    lines, obj = _bounded_batch(rng, 16, 12, 16)
+    s_sx, st_sx = batch_simplex.simplex_solve(lines, obj)
+    s_rgb, st_rgb = rgb.rgb_solve(lines, obj, block_b=16)
+    np.testing.assert_array_equal(np.asarray(st_sx), np.asarray(st_rgb))
+    for i in range(16):
+        v1 = float(obj[i] @ np.asarray(s_sx)[i])
+        v2 = float(obj[i] @ np.asarray(s_rgb)[i])
+        assert abs(v1 - v2) < 1e-2 + 1e-4 * abs(v1)

@@ -1,0 +1,65 @@
+"""Generator & packing invariants."""
+
+import numpy as np
+import pytest
+
+from compile import problems
+from compile.kernels import ref
+
+
+def test_feasible_has_interior_point():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        lines, obj = problems.generate_feasible(rng, 16)
+        st, v, p = ref.brute_force(lines, obj)
+        assert st == ref.OPTIMAL
+
+
+def test_normals_unit_length():
+    rng = np.random.default_rng(1)
+    lines, _ = problems.generate_feasible(rng, 32)
+    n = lines[:, :2]
+    np.testing.assert_allclose((n ** 2).sum(1), 1.0, rtol=1e-5)
+
+
+def test_infeasible_is_infeasible():
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        lines, obj = problems.generate_infeasible(rng, 8)
+        st, _, _ = ref.brute_force(lines, obj)
+        assert st == ref.INFEASIBLE
+
+
+def test_pack_pads_with_invalid_rows():
+    rng = np.random.default_rng(3)
+    p1 = problems.generate_feasible(rng, 4)
+    p2 = problems.generate_feasible(rng, 7)
+    lines, obj = problems.pack_batch([p1, p2], m_pad=8)
+    assert lines.shape == (2, 8, 4)
+    assert (lines[0, 4:, 3] == 0).all()
+    assert (lines[0, :4, 3] == 1).all()
+    assert (lines[1, 7:, 3] == 0).all()
+
+
+def test_pack_rejects_oversize():
+    rng = np.random.default_rng(4)
+    p = problems.generate_feasible(rng, 10)
+    with pytest.raises(ValueError):
+        problems.pack_batch([p], m_pad=8)
+
+
+def test_pack_shuffle_is_permutation():
+    rng = np.random.default_rng(5)
+    p = problems.generate_feasible(rng, 12)
+    lines, _ = problems.pack_batch([p], m_pad=12, rng=np.random.default_rng(9))
+    got = np.sort(lines[0, :, :3], axis=0)
+    want = np.sort(p[0][:, :3], axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_random_batch_shapes():
+    rng = np.random.default_rng(6)
+    lines, obj = problems.random_batch(rng, 5, 6, 8)
+    assert lines.shape == (5, 8, 4)
+    assert obj.shape == (5, 2)
+    assert lines.dtype == np.float32

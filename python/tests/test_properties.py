@@ -1,0 +1,115 @@
+"""Hypothesis property sweeps over the kernel: shapes, geometry, dtypes.
+
+The L1 contract under test:
+  * kernel status == brute-force status for any packed batch;
+  * optimal solutions are feasible (within tolerance) and optimal
+    (objective matches the brute-force optimum);
+  * the kernel is invariant to constraint order and to batch/chunk tiling.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import problems
+from compile.kernels import ref, rgb
+
+# Interpret-mode pallas is slow; keep case counts tight but meaningful.
+COMMON = dict(deadline=None, max_examples=25)
+
+
+@st.composite
+def packed_batch(draw, max_batch=8, max_m=12):
+    seed = draw(st.integers(0, 2**32 - 1))
+    batch = draw(st.integers(1, max_batch))
+    m_pad = draw(st.integers(2, max_m))
+    infeas = draw(st.sampled_from([0.0, 0.3]))
+    rng = np.random.default_rng(seed)
+    probs = []
+    for _ in range(batch):
+        m = int(rng.integers(1, m_pad + 1))
+        if infeas > 0 and m >= 2 and rng.uniform() < infeas:
+            probs.append(problems.generate_infeasible(rng, m))
+        else:
+            probs.append(problems.generate_feasible(rng, m))
+    lines, obj = problems.pack_batch(probs, m_pad, rng)
+    return lines, obj
+
+
+@given(packed_batch())
+@settings(**COMMON)
+def test_kernel_status_matches_brute_force(batch):
+    lines, obj = batch
+    sol, status = rgb.rgb_solve(lines, obj, block_b=lines.shape[0])
+    status = np.asarray(status)
+    for i in range(lines.shape[0]):
+        st_b, v_b, _ = ref.brute_force(lines[i], obj[i])
+        assert status[i] == st_b
+
+
+@given(packed_batch())
+@settings(**COMMON)
+def test_optimal_solutions_are_feasible_and_optimal(batch):
+    lines, obj = batch
+    sol, status = rgb.rgb_solve(lines, obj, block_b=lines.shape[0])
+    sol, status = np.asarray(sol, np.float64), np.asarray(status)
+    for i in range(lines.shape[0]):
+        if status[i] != ref.OPTIMAL:
+            continue
+        x, y = sol[i]
+        act = lines[i][lines[i][:, 3] > 0.5]
+        viol = act[:, 0] * x + act[:, 1] * y - act[:, 2]
+        assert viol.max(initial=-np.inf) < 2e-3, viol.max()
+        assert abs(x) <= problems.M_BIG * (1 + 1e-5)
+        assert abs(y) <= problems.M_BIG * (1 + 1e-5)
+        _, v_b, _ = ref.brute_force(lines[i], obj[i])
+        got = float(obj[i].astype(np.float64) @ sol[i])
+        assert got > v_b - (2e-3 + 1e-4 * abs(v_b))
+
+
+@given(packed_batch(max_batch=4, max_m=10), st.integers(0, 2**31 - 1))
+@settings(**COMMON)
+def test_constraint_order_invariance(batch, perm_seed):
+    lines, obj = batch
+    rng = np.random.default_rng(perm_seed)
+    shuffled = lines.copy()
+    for i in range(lines.shape[0]):
+        shuffled[i] = lines[i][rng.permutation(lines.shape[1])]
+    s1, st1 = rgb.rgb_solve(lines, obj, block_b=lines.shape[0])
+    s2, st2 = rgb.rgb_solve(shuffled, obj, block_b=lines.shape[0])
+    st1, st2 = np.asarray(st1), np.asarray(st2)
+    np.testing.assert_array_equal(st1, st2)
+    for i in range(lines.shape[0]):
+        if st1[i] == ref.OPTIMAL:
+            v1 = float(obj[i] @ np.asarray(s1)[i])
+            v2 = float(obj[i] @ np.asarray(s2)[i])
+            assert abs(v1 - v2) < 2e-3 + 1e-4 * abs(v1)
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([1, 2, 4, 8]))
+@settings(**COMMON)
+def test_block_tiling_invariance(seed, block_b):
+    rng = np.random.default_rng(seed)
+    lines, obj = problems.random_batch(rng, 8, 8, 8, infeasible_frac=0.2)
+    base_s, base_st = rgb.rgb_solve(lines, obj, block_b=8)
+    s, st_ = rgb.rgb_solve(lines, obj, block_b=block_b)
+    np.testing.assert_array_equal(np.asarray(st_), np.asarray(base_st))
+    feas = np.asarray(base_st) == 0
+    np.testing.assert_allclose(np.asarray(s)[feas], np.asarray(base_s)[feas],
+                               atol=1e-5)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(**COMMON)
+def test_objective_rotation_consistency(seed):
+    """Rotating the objective never lowers the achievable optimum below any
+    feasible vertex value (sanity of the objective-direction handling)."""
+    rng = np.random.default_rng(seed)
+    p_lines, _ = problems.generate_feasible(rng, 8)
+    for ang in (0.0, 0.5, 2.0, 3.9):
+        obj = np.array([np.cos(ang), np.sin(ang)], dtype=np.float32)
+        lines, objb = problems.pack_batch([(p_lines, obj)], 8)
+        sol, status = rgb.rgb_solve(lines, objb, block_b=1)
+        assert int(np.asarray(status)[0]) == ref.OPTIMAL
+        st_b, v_b, _ = ref.brute_force(lines[0], objb[0])
+        got = float(objb[0] @ np.asarray(sol)[0])
+        assert abs(got - v_b) < 2e-3 + 1e-4 * abs(v_b)

@@ -1,0 +1,74 @@
+"""Cross-checks among the three oracles (brute force / seidel_np / jnp ref)."""
+
+import numpy as np
+
+from compile import problems
+from compile.kernels import ref
+
+
+def _obj_value(obj, point):
+    return float(obj @ np.asarray(point, dtype=np.float64))
+
+
+def test_seidel_np_matches_brute_force():
+    rng = np.random.default_rng(10)
+    for trial in range(25):
+        m = int(rng.integers(1, 24))
+        lines, obj = problems.generate_feasible(rng, m)
+        st_b, v_b, _ = ref.brute_force(lines, obj)
+        st_s, p_s = ref.seidel_np(lines, obj)
+        assert st_s == st_b == ref.OPTIMAL
+        assert abs(_obj_value(obj, p_s) - v_b) < 1e-3, (trial, m)
+
+
+def test_seidel_np_detects_infeasible():
+    rng = np.random.default_rng(11)
+    for _ in range(15):
+        lines, obj = problems.generate_infeasible(rng, 10)
+        # shuffle so the contradicting pair is in random positions
+        lines = lines[rng.permutation(len(lines))]
+        st, _ = ref.seidel_np(lines, obj)
+        assert st == ref.INFEASIBLE
+
+
+def test_jnp_ref_matches_brute_force_batch():
+    rng = np.random.default_rng(12)
+    lines, obj = problems.random_batch(rng, 32, 10, 16, infeasible_frac=0.25)
+    sol, status = ref.solve_batch_ref(lines, obj)
+    sol, status = np.asarray(sol), np.asarray(status)
+    for i in range(32):
+        st_b, v_b, _ = ref.brute_force(lines[i], obj[i])
+        assert status[i] == st_b
+        if st_b == ref.OPTIMAL:
+            assert abs(_obj_value(obj[i], sol[i]) - v_b) < 2e-3
+
+
+def test_order_invariance_of_objective():
+    rng = np.random.default_rng(13)
+    lines, obj = problems.generate_feasible(rng, 12)
+    vals = []
+    for _ in range(5):
+        perm = rng.permutation(12)
+        st, p = ref.seidel_np(lines[perm], obj)
+        assert st == ref.OPTIMAL
+        vals.append(_obj_value(obj, p))
+    assert np.ptp(vals) < 1e-6
+
+
+def test_empty_problem_box_corner():
+    lines = np.zeros((0, 4), dtype=np.float32)
+    obj = np.array([1.0, -1.0], dtype=np.float32)
+    st, p = ref.seidel_np(lines, obj)
+    assert st == ref.OPTIMAL
+    assert p[0] == problems.M_BIG and p[1] == -problems.M_BIG
+
+
+def test_redundant_parallel_constraints():
+    lines = np.array([
+        [1.0, 0.0, 5.0, 1.0],
+        [1.0, 0.0, 2.0, 1.0],
+    ], dtype=np.float32)
+    obj = np.array([1.0, 0.0], dtype=np.float32)
+    st, p = ref.seidel_np(lines, obj)
+    assert st == ref.OPTIMAL
+    assert abs(p[0] - 2.0) < 1e-6

@@ -1,0 +1,140 @@
+"""RGB Pallas kernel vs the oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+
+from compile import problems
+from compile.kernels import ref, rgb
+
+
+def _objective(obj, sol):
+    return float(np.asarray(obj, np.float64) @ np.asarray(sol, np.float64))
+
+
+def _check_against_brute(lines, obj, sol, status, tol=2e-3):
+    st_b, v_b, _ = ref.brute_force(lines, obj)
+    assert status == st_b
+    if st_b == ref.OPTIMAL:
+        got = _objective(obj, sol)
+        assert abs(got - v_b) < tol + 1e-4 * abs(v_b), (got, v_b)
+
+
+@pytest.mark.parametrize("block_b", [4, 8, 16])
+def test_rgb_matches_brute_force(block_b):
+    rng = np.random.default_rng(100 + block_b)
+    lines, obj = problems.random_batch(rng, 16, 12, 16, infeasible_frac=0.25)
+    sol, status = rgb.rgb_solve(lines, obj, block_b=block_b)
+    sol, status = np.asarray(sol), np.asarray(status)
+    for i in range(16):
+        _check_against_brute(lines[i], obj[i], sol[i], status[i])
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_chunk_size_does_not_change_results(chunk):
+    rng = np.random.default_rng(200)
+    lines, obj = problems.random_batch(rng, 8, 14, 16, infeasible_frac=0.2)
+    base_sol, base_st = rgb.rgb_solve(lines, obj, block_b=8, chunk=16)
+    sol, st = rgb.rgb_solve(lines, obj, block_b=8, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(st), np.asarray(base_st))
+    feas = np.asarray(base_st) == 0
+    np.testing.assert_allclose(
+        np.asarray(sol)[feas], np.asarray(base_sol)[feas], atol=1e-4)
+
+
+def test_naive_equals_rgb():
+    rng = np.random.default_rng(300)
+    lines, obj = problems.random_batch(rng, 32, 10, 16, infeasible_frac=0.3)
+    s1, st1 = rgb.rgb_solve(lines, obj, block_b=16)
+    s0, st0 = rgb.naive_solve(lines, obj, block_b=16)
+    np.testing.assert_array_equal(np.asarray(st1), np.asarray(st0))
+    feas = np.asarray(st1) == 0
+    np.testing.assert_allclose(np.asarray(s1)[feas], np.asarray(s0)[feas],
+                               atol=1e-4)
+
+
+def test_kernel_equals_jnp_ref():
+    rng = np.random.default_rng(400)
+    lines, obj = problems.random_batch(rng, 32, 16, 16, infeasible_frac=0.2)
+    sk, stk = rgb.rgb_solve(lines, obj, block_b=8)
+    sr, str_ = ref.solve_batch_ref(lines, obj)
+    np.testing.assert_array_equal(np.asarray(stk), np.asarray(str_))
+    feas = np.asarray(stk) == 0
+    # Identical formulas; allow float32 noise only.
+    np.testing.assert_allclose(np.asarray(sk)[feas], np.asarray(sr)[feas],
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_mixed_problem_sizes_in_one_batch():
+    rng = np.random.default_rng(500)
+    probs = [problems.generate_feasible(rng, m) for m in (1, 3, 8, 15)]
+    lines, obj = problems.pack_batch(probs, m_pad=16, rng=rng)
+    sol, status = rgb.rgb_solve(lines, obj, block_b=4)
+    for i in range(4):
+        _check_against_brute(lines[i], obj[i], np.asarray(sol)[i],
+                             np.asarray(status)[i])
+
+
+def test_all_padding_batch():
+    # A batch slot with zero valid constraints solves to the box corner.
+    lines = np.zeros((4, 8, 4), dtype=np.float32)
+    obj = np.tile(np.array([1.0, -1.0], np.float32), (4, 1))
+    sol, status = rgb.rgb_solve(lines, obj, block_b=4)
+    assert (np.asarray(status) == 0).all()
+    np.testing.assert_allclose(
+        np.asarray(sol), [[problems.M_BIG, -problems.M_BIG]] * 4)
+
+
+def test_duplicate_constraints():
+    rng = np.random.default_rng(600)
+    base = problems.generate_feasible(rng, 6)
+    lines0 = np.concatenate([base[0], base[0]], axis=0)  # duplicated set
+    lines, obj = problems.pack_batch([(lines0, base[1])], m_pad=12)
+    sol, status = rgb.rgb_solve(lines, obj, block_b=1)
+    _check_against_brute(lines[0], obj[0], np.asarray(sol)[0],
+                         np.asarray(status)[0])
+
+
+def test_tight_single_point_region():
+    # x <= 0, -x <= 0, y <= 0, -y <= 0: feasible region is the origin.
+    rows = np.array([
+        [1.0, 0.0, 0.0, 1.0],
+        [-1.0, 0.0, 0.0, 1.0],
+        [0.0, 1.0, 0.0, 1.0],
+        [0.0, -1.0, 0.0, 1.0],
+    ], dtype=np.float32)
+    lines = rows[None]
+    obj = np.array([[0.6, 0.8]], dtype=np.float32)
+    sol, status = rgb.rgb_solve(lines, obj, block_b=1)
+    assert int(np.asarray(status)[0]) == 0
+    np.testing.assert_allclose(np.asarray(sol)[0], [0.0, 0.0], atol=1e-3)
+
+
+def test_infeasible_slab_any_position():
+    rng = np.random.default_rng(700)
+    for _ in range(5):
+        lines, obj = problems.generate_infeasible(rng, 10)
+        lines = lines[rng.permutation(10)]
+        l, o = problems.pack_batch([(lines, obj)], m_pad=16)
+        _, status = rgb.rgb_solve(l, o, block_b=1)
+        assert int(np.asarray(status)[0]) == ref.INFEASIBLE
+
+
+def test_rejects_bad_shapes():
+    lines = np.zeros((6, 8, 4), dtype=np.float32)
+    obj = np.zeros((6, 2), dtype=np.float32)
+    with pytest.raises(ValueError):
+        rgb.rgb_solve(lines, obj, block_b=4)  # 6 % 4 != 0
+    with pytest.raises(ValueError):
+        rgb.rgb_solve(lines, obj, block_b=6, chunk=3)  # 8 % 3 != 0
+
+
+def test_jit_compiles_and_matches_eager():
+    import jax
+    rng = np.random.default_rng(800)
+    lines, obj = problems.random_batch(rng, 8, 8, 8)
+    eager_sol, eager_st = rgb.rgb_solve(lines, obj, block_b=8)
+    jit_fn = jax.jit(lambda l, o: rgb.rgb_solve(l, o, block_b=8))
+    jit_sol, jit_st = jit_fn(lines, obj)
+    np.testing.assert_array_equal(np.asarray(eager_st), np.asarray(jit_st))
+    np.testing.assert_allclose(np.asarray(eager_sol), np.asarray(jit_sol),
+                               atol=1e-5)

@@ -1,0 +1,25 @@
+//! Ablation bench: randomization order, padding waste, replicated-vs-
+//! independent batches, serving batch window.  `cargo bench --bench ablations`
+
+use batch_lp2d::bench::ablations;
+use batch_lp2d::bench::BenchOpts;
+use batch_lp2d::runtime::{default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::from_env();
+    let dir = default_artifact_dir();
+    let engine = Engine::new(&dir)?;
+
+    println!("\n## Ablation: constraint-order randomization (Seidel, CPU)\n");
+    print!("{}", ablations::randomization_table(&[64, 256, 1024, 4096], opts).to_markdown());
+
+    println!("\n## Ablation: bucket padding waste (batch 1024, true m 16)\n");
+    print!("{}", ablations::padding_table(&engine, 1024, 16, &[16, 32, 64, 128, 256], opts)?.to_markdown());
+
+    println!("\n## Ablation: replicated vs independent batches (batch 1024)\n");
+    print!("{}", ablations::batch_mix_table(&engine, 1024, &[16, 64, 256], opts)?.to_markdown());
+
+    println!("\n## Ablation: serving batch window (2000 x m<=64 requests)\n");
+    print!("{}", ablations::batch_window_table(&dir, &[1, 2, 5, 10, 20], 2000, 48)?.to_markdown());
+    Ok(())
+}

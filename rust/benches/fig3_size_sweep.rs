@@ -1,0 +1,17 @@
+//! Figures 3a-3c: batch-solve time vs LP size at fixed batch counts
+//! (128 / 2048 / 4096-scaled), all series.  `cargo bench --bench fig3_size_sweep`
+
+use batch_lp2d::bench::figures::{self, FigureCtx};
+use batch_lp2d::runtime::{default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(default_artifact_dir())?;
+    let ctx = FigureCtx::new(&engine);
+    for (name, batch) in [("3a", 128usize), ("3b", 2048), ("3c", 4096)] {
+        eprintln!("figure {name}: batch {batch}");
+        let t = figures::fig3(&ctx, batch, figures::SIZES);
+        println!("\n## Figure {name} (time_ms vs lp_size, batch {batch})\n");
+        print!("{}", t.to_markdown());
+    }
+    Ok(())
+}

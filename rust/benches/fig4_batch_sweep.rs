@@ -1,0 +1,17 @@
+//! Figures 4a-4b: batch-solve time vs batch count at fixed LP sizes
+//! (64 and 256-scaled-from-8192).  `cargo bench --bench fig4_batch_sweep`
+
+use batch_lp2d::bench::figures::{self, FigureCtx};
+use batch_lp2d::runtime::{default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(default_artifact_dir())?;
+    let ctx = FigureCtx::new(&engine);
+    for (name, m) in [("4a", 64usize), ("4b", 256)] {
+        eprintln!("figure {name}: m {m}");
+        let t = figures::fig4(&ctx, m, figures::BATCHES);
+        println!("\n## Figure {name} (time_ms vs batch, lp_size {m})\n");
+        print!("{}", t.to_markdown());
+    }
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Figure 5: fraction of RGB wall time spent on memory management
+//! (pack + literal staging + unpack) over a (batch x size) grid.
+//! `cargo bench --bench fig5_memory_split`
+
+use batch_lp2d::bench::figures::{self, FigureCtx};
+use batch_lp2d::runtime::{default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(default_artifact_dir())?;
+    let ctx = FigureCtx::new(&engine);
+    let t = figures::fig5(&ctx, &[128, 512, 2048, 4096], &[16, 32, 64, 128, 256])?;
+    println!("\n## Figure 5 (memory-management fraction)\n");
+    print!("{}", t.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Figure 6: reduction mechanism performance vs contention (2..512).
+//! Pure-CPU bench (no artifacts needed).  `cargo bench --bench fig6_contention`
+
+use batch_lp2d::bench::contention::{run, Method, Workload, CONTENTIONS};
+use batch_lp2d::bench::{bench, BenchOpts};
+use batch_lp2d::util::{Rng, Table};
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let n = 1 << 22; // 4M elements, matching a large-batch reduction load
+    let mut table = Table::new(&["contention", "global_atomic_ms", "sharded_atomic_ms", "segmented_reduce_ms"]);
+
+    for &c in CONTENTIONS {
+        let mut rng = Rng::new(2019 ^ c as u64);
+        let w = Workload::new(&mut rng, n, c);
+        let mut row = vec![c.to_string()];
+        for method in Method::all() {
+            let r = bench(&format!("{}/c{c}", method.label()), opts, || {
+                std::hint::black_box(run(method, &w, threads));
+            });
+            row.push(format!("{:.3}", r.mean_ms()));
+        }
+        eprintln!("  {}", row.join("\t"));
+        table.push_row(row);
+    }
+    println!("\n## Figure 6 (reduction vs contention, {n} elems, {threads} threads)\n");
+    print!("{}", table.to_markdown());
+}

@@ -1,0 +1,18 @@
+//! Figures 7a-7b: speedup of optimized RGB over NaiveRGB (kernel time only)
+//! vs LP size, at batch 1024 and 4096(-scaled-from-32768).
+//! `cargo bench --bench fig7_naive_vs_rgb`
+
+use batch_lp2d::bench::figures::{self, FigureCtx};
+use batch_lp2d::runtime::{default_artifact_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(default_artifact_dir())?;
+    let ctx = FigureCtx::new(&engine);
+    for (name, batch) in [("7a", 1024usize), ("7b", 4096)] {
+        eprintln!("figure {name}: batch {batch}");
+        let t = figures::fig7(&ctx, batch, figures::SIZES)?;
+        println!("\n## Figure {name} (naive/rgb kernel speedup, batch {batch})\n");
+        print!("{}", t.to_markdown());
+    }
+    Ok(())
+}

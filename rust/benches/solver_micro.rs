@@ -1,0 +1,45 @@
+//! Microbenchmarks of the CPU substrate: per-solver single-problem cost
+//! across sizes, multicore batch scaling, packing throughput. Complements
+//! the figure benches with component-level numbers for the perf log.
+
+use batch_lp2d::bench::{bench, report_line, BenchOpts};
+use batch_lp2d::gen;
+use batch_lp2d::runtime::pack;
+use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
+use batch_lp2d::util::Rng;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut rng = Rng::new(7);
+
+    println!("## per-solver single-problem cost");
+    for m in [16usize, 64, 256, 1024] {
+        let p = gen::feasible(&mut rng, m);
+        let mut r1 = Rng::new(1);
+        println!("{}", report_line(&bench(&format!("seidel/m{m}"), opts, || {
+            std::hint::black_box(seidel::solve(&p, &mut r1));
+        })));
+        if m <= 256 {
+            println!("{}", report_line(&bench(&format!("simplex/m{m}"), opts, || {
+                std::hint::black_box(simplex::solve(&p));
+            })));
+        }
+    }
+
+    println!("\n## multicore batch scaling (seidel, batch 4096 x m 64)");
+    let problems = gen::independent_batch(&mut rng, 4096, 64);
+    for threads in [1usize, 2, 4, 8] {
+        println!("{}", report_line(&bench(&format!("batch_cpu/t{threads}"), opts, || {
+            std::hint::black_box(batch_cpu::solve_batch(&problems, Algo::Seidel, threads, 0));
+        })));
+    }
+
+    println!("\n## packing throughput (4096 x m 64 -> bucket)");
+    let mut prng = Rng::new(3);
+    println!("{}", report_line(&bench("pack/shuffled", opts, || {
+        std::hint::black_box(pack::pack(&problems, 4096, 64, Some(&mut prng)).unwrap());
+    })));
+    println!("{}", report_line(&bench("pack/plain", opts, || {
+        std::hint::black_box(pack::pack(&problems, 4096, 64, None).unwrap());
+    })));
+}

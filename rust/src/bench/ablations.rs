@@ -1,0 +1,221 @@
+//! Ablation studies of the design choices DESIGN.md calls out.
+//!
+//! * **Randomization** — Seidel's namesake shuffle. An adversarially sorted
+//!   constraint order forces a re-solve at (nearly) every step (the paper's
+//!   §2.1 "worst case input set"); random order restores expected O(m).
+//! * **Padding waste** — the cost of routing problems of size m into a
+//!   compiled bucket of size M > m (the price of AOT shape bucketing).
+//! * **Replicated vs independent batches** — the paper benchmarks one LP
+//!   copied B times; independent problems change the tile early-exit odds.
+//! * **Batch window** — serving latency/throughput against the batcher's
+//!   deadline (the dynamic-batching knob).
+
+use std::time::Duration;
+
+use crate::bench::harness::{bench, BenchOpts};
+use crate::coordinator::{Config, Service};
+use crate::gen;
+use crate::lp::types::{HalfPlane, Problem};
+use crate::runtime::{Engine, Variant};
+use crate::solvers::seidel;
+use crate::util::{Rng, Table, Timer};
+
+/// An adversarial 2-D problem: m constraints at slowly rotating angles with
+/// shrinking offsets, sorted so each one cuts the previous optimum —
+/// processed in the given order, Seidel re-solves at nearly every step.
+pub fn adversarial_problem(m: usize) -> Problem {
+    let mut cons = Vec::with_capacity(m);
+    for k in 0..m {
+        // Nearly-horizontal ceilings descending toward y <= 2: each one cuts
+        // the previous optimum (which sits on the previous, higher ceiling).
+        // A small alternating tilt keeps intersections well-defined.
+        let tilt = 1e-3 * (1.0 + (k % 7) as f64) * if k % 2 == 0 { 1.0 } else { -1.0 };
+        let b = 10.0 - 8.0 * (k as f64 + 1.0) / m.max(1) as f64;
+        cons.push(HalfPlane::new(tilt, 1.0, b).normalized());
+    }
+    Problem::new(cons, [0.0, 1.0])
+}
+
+/// Ablation 1: sorted (adversarial) vs shuffled constraint order, CPU
+/// Seidel, sweeping m. Columns are total work units (the O(m) vs O(m^2)
+/// contrast) and wall time.
+pub fn randomization_table(sizes: &[usize], opts: BenchOpts) -> Table {
+    let mut table = Table::new(&[
+        "m",
+        "sorted_wu",
+        "shuffled_wu",
+        "sorted_ms",
+        "shuffled_ms",
+        "wu_ratio",
+    ]);
+    for &m in sizes {
+        let p = adversarial_problem(m);
+        let (_, st_sorted) = seidel::solve_ordered_with_stats(&p);
+
+        // Average shuffled work units over a few permutations.
+        let mut rng = Rng::new(0xAB1);
+        let mut wu_sh = 0usize;
+        const REPS: usize = 8;
+        for _ in 0..REPS {
+            let perm = rng.permutation(m);
+            let shuffled = Problem {
+                constraints: perm.iter().map(|&i| p.constraints[i as usize]).collect(),
+                obj: p.obj,
+            };
+            let (_, st) = seidel::solve_ordered_with_stats(&shuffled);
+            wu_sh += st.work_units;
+        }
+        wu_sh /= REPS;
+
+        let sorted_ms = bench(&format!("sorted/m{m}"), opts, || {
+            std::hint::black_box(seidel::solve_ordered(&p));
+        })
+        .mean_ms();
+        let mut rng2 = Rng::new(0xAB2);
+        let shuffled_ms = bench(&format!("shuffled/m{m}"), opts, || {
+            std::hint::black_box(seidel::solve(&p, &mut rng2));
+        })
+        .mean_ms();
+
+        table.push_row(vec![
+            m.to_string(),
+            st_sorted.work_units.to_string(),
+            wu_sh.to_string(),
+            format!("{sorted_ms:.4}"),
+            format!("{shuffled_ms:.4}"),
+            format!("{:.1}", st_sorted.work_units as f64 / wu_sh.max(1) as f64),
+        ]);
+    }
+    table
+}
+
+/// Ablation 2: padding waste — time to solve B problems of true size m
+/// through buckets of increasing M (same problems, same batch).
+pub fn padding_table(
+    engine: &Engine,
+    batch: usize,
+    true_m: usize,
+    bucket_sizes: &[usize],
+    opts: BenchOpts,
+) -> anyhow::Result<Table> {
+    let mut table = Table::new(&["bucket_m", "waste_frac", "time_ms", "overhead_vs_exact"]);
+    let mut rng = Rng::new(0xAB3);
+    let problems = gen::independent_batch(&mut rng, batch, true_m);
+    let mut exact_ms = None;
+    for &bm in bucket_sizes {
+        if bm < true_m || engine.manifest().find(Variant::Rgb, batch, bm).is_none() {
+            continue;
+        }
+        let bucket = engine.manifest().find(Variant::Rgb, batch, bm).unwrap().clone();
+        let mut rng2 = Rng::new(0xAB4);
+        let pb = crate::runtime::pack(&problems, bucket.batch, bucket.m, Some(&mut rng2))?;
+        engine.execute_packed(&bucket, &pb)?; // warm
+        let r = bench(&format!("pad/m{bm}"), opts, || {
+            engine.execute_packed(&bucket, &pb).expect("exec");
+        });
+        let ms = r.mean_ms();
+        if exact_ms.is_none() {
+            exact_ms = Some(ms);
+        }
+        table.push_row(vec![
+            bm.to_string(),
+            format!("{:.3}", 1.0 - true_m as f64 / bm as f64),
+            format!("{ms:.3}"),
+            format!("{:.2}x", ms / exact_ms.unwrap()),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Ablation 3: replicated (paper methodology) vs independent batches.
+pub fn batch_mix_table(
+    engine: &Engine,
+    batch: usize,
+    sizes: &[usize],
+    opts: BenchOpts,
+) -> anyhow::Result<Table> {
+    let mut table = Table::new(&["m", "replicated_ms", "independent_ms", "ratio"]);
+    for &m in sizes {
+        if engine.manifest().fit(Variant::Rgb, batch, m).is_none() {
+            continue;
+        }
+        let time_for = |problems: &[Problem]| -> f64 {
+            let mut rng = Rng::new(1);
+            engine.solve(Variant::Rgb, problems, Some(&mut rng)).expect("warm");
+            bench(&format!("mix/m{m}"), opts, || {
+                engine
+                    .solve(Variant::Rgb, problems, Some(&mut rng))
+                    .expect("solve");
+            })
+            .mean_ms()
+        };
+        let mut rng = Rng::new(0xAB5 ^ m as u64);
+        let rep = time_for(&gen::replicated_batch(&mut rng, batch, m));
+        let ind = time_for(&gen::independent_batch(&mut rng, batch, m));
+        table.push_row(vec![
+            m.to_string(),
+            format!("{rep:.3}"),
+            format!("{ind:.3}"),
+            format!("{:.2}", ind / rep),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Ablation 4: serving batch-window sweep — throughput and mean batch
+/// occupancy versus the batcher deadline under a fixed offered load.
+pub fn batch_window_table(
+    artifact_dir: &std::path::Path,
+    waits_ms: &[u64],
+    requests: usize,
+    m: usize,
+) -> anyhow::Result<Table> {
+    let mut table = Table::new(&["max_wait_ms", "throughput_lps", "batches", "occupancy"]);
+    for &w in waits_ms {
+        let config = Config {
+            max_wait: Duration::from_millis(w),
+            ..Config::default()
+        };
+        let service = Service::start(artifact_dir, config)?;
+        let mut rng = Rng::new(0xAB6);
+        let problems = gen::independent_batch(&mut rng, requests, m);
+        let t = Timer::start();
+        service.solve_all(&problems)?;
+        let secs = t.elapsed_ns() as f64 / 1e9;
+        let snap = service.metrics().snapshot();
+        table.push_row(vec![
+            w.to_string(),
+            format!("{:.0}", requests as f64 / secs),
+            snap.batches.to_string(),
+            format!("{:.3}", snap.mean_occupancy),
+        ]);
+        service.shutdown();
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::brute;
+    use crate::lp::types::Status;
+
+    #[test]
+    fn adversarial_problem_is_feasible_and_forcing() {
+        let p = adversarial_problem(32);
+        assert_eq!(brute::solve(&p).status, Status::Optimal);
+        let (_, st) = seidel::solve_ordered_with_stats(&p);
+        // Sorted order must force many re-solves (that is its purpose).
+        assert!(st.violations > 16, "violations {}", st.violations);
+    }
+
+    #[test]
+    fn randomization_table_shape() {
+        let opts = BenchOpts { warmup_iters: 0, measure_iters: 1, max_seconds: 5.0 };
+        let t = randomization_table(&[32, 64], opts);
+        assert_eq!(t.rows.len(), 2);
+        // Work-unit ratio must show the sorted order doing more work.
+        let ratio: f64 = t.rows[1][5].parse().unwrap();
+        assert!(ratio > 1.5, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Figure 6: reduction-strategy performance versus contention.
+//!
+//! The paper compares CUDA shared-memory atomics, global atomics, and CUB
+//! device-wide segmented reduction while varying *contention* — how many
+//! elements fold into one output cell (2 .. 512, the kernel block size).
+//! The RGB kernel's u_left/u_right accumulation is exactly such a folding.
+//!
+//! Host-ISA analog (DESIGN.md §2): the same three mechanisms expressed with
+//! CPU threads —
+//!   * `GlobalAtomic`:  all threads `fetch_min` into one shared output
+//!     array (cache-line ping-pong grows with contention, like global
+//!     atomics in DRAM/L2);
+//!   * `ShardedAtomic`: each thread folds into a private shard, then a
+//!     merge pass (the shared-memory-atomics analog: contention never
+//!     leaves the local fast path);
+//!   * `SegmentedReduce`: contiguous segments split across threads, each
+//!     reduced serially (the CUB device-segmented-reduce analog).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::util::Rng;
+
+/// The three mechanisms of Figure 6.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    GlobalAtomic,
+    ShardedAtomic,
+    SegmentedReduce,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::GlobalAtomic => "global-atomic",
+            Method::ShardedAtomic => "sharded-atomic",
+            Method::SegmentedReduce => "segmented-reduce",
+        }
+    }
+
+    pub fn all() -> [Method; 3] {
+        [Method::GlobalAtomic, Method::ShardedAtomic, Method::SegmentedReduce]
+    }
+}
+
+/// Workload: `n` u32 values; `contention` consecutive values fold into one
+/// output cell via `min` (n must be divisible by contention).
+pub struct Workload {
+    pub data: Vec<u32>,
+    pub contention: usize,
+}
+
+impl Workload {
+    pub fn new(rng: &mut Rng, n: usize, contention: usize) -> Workload {
+        assert!(contention > 0 && n % contention == 0);
+        let data = (0..n).map(|_| rng.next_u64() as u32 | 1).collect();
+        Workload { data, contention }
+    }
+
+    pub fn cells(&self) -> usize {
+        self.data.len() / self.contention
+    }
+}
+
+/// Reference serial result (tests).
+pub fn reduce_serial(w: &Workload) -> Vec<u32> {
+    w.data
+        .chunks(w.contention)
+        .map(|c| c.iter().copied().min().unwrap())
+        .collect()
+}
+
+/// All threads fetch_min into one shared output array.
+pub fn reduce_global_atomic(w: &Workload, threads: usize) -> Vec<u32> {
+    let cells: Vec<AtomicU32> = (0..w.cells()).map(|_| AtomicU32::new(u32::MAX)).collect();
+    let chunk = w.data.len().div_ceil(threads.max(1));
+    std::thread::scope(|s| {
+        for (t, slice) in w.data.chunks(chunk).enumerate() {
+            let cells = &cells;
+            let base = t * chunk;
+            s.spawn(move || {
+                for (k, &v) in slice.iter().enumerate() {
+                    let cell = (base + k) / w.contention;
+                    cells[cell].fetch_min(v, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    cells.into_iter().map(|c| c.into_inner()).collect()
+}
+
+/// Per-thread private shards, merged at the end (shared-memory analog).
+pub fn reduce_sharded_atomic(w: &Workload, threads: usize) -> Vec<u32> {
+    let ncells = w.cells();
+    let chunk = w.data.len().div_ceil(threads.max(1));
+    let shards: Vec<Vec<u32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = w
+            .data
+            .chunks(chunk)
+            .enumerate()
+            .map(|(t, slice)| {
+                let base = t * chunk;
+                s.spawn(move || {
+                    // Shard covers only the cell range this thread touches.
+                    let lo = base / w.contention;
+                    let hi = (base + slice.len() - 1) / w.contention;
+                    let mut local = vec![u32::MAX; hi - lo + 1];
+                    for (k, &v) in slice.iter().enumerate() {
+                        let cell = (base + k) / w.contention - lo;
+                        if v < local[cell] {
+                            local[cell] = v;
+                        }
+                    }
+                    (lo, local)
+                })
+            })
+            .collect();
+        let mut out = vec![Vec::new(); handles.len()];
+        let mut offs = vec![0usize; handles.len()];
+        for (i, h) in handles.into_iter().enumerate() {
+            let (lo, local) = h.join().unwrap();
+            offs[i] = lo;
+            out[i] = local;
+        }
+        // Merge pass.
+        let mut merged = vec![u32::MAX; ncells];
+        for (lo, local) in offs.into_iter().zip(out) {
+            for (k, v) in local.into_iter().enumerate() {
+                if v < merged[lo + k] {
+                    merged[lo + k] = v;
+                }
+            }
+        }
+        vec![merged]
+    });
+    shards.into_iter().next().unwrap()
+}
+
+/// Contiguous segments split across threads, reduced serially.
+pub fn reduce_segmented(w: &Workload, threads: usize) -> Vec<u32> {
+    let ncells = w.cells();
+    let mut out = vec![u32::MAX; ncells];
+    let cell_chunk = ncells.div_ceil(threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        for (t, out_slice) in out.chunks_mut(cell_chunk).enumerate() {
+            let data = &w.data;
+            let first_cell = t * cell_chunk;
+            s.spawn(move || {
+                for (k, o) in out_slice.iter_mut().enumerate() {
+                    let cell = first_cell + k;
+                    let seg = &data[cell * w.contention..(cell + 1) * w.contention];
+                    *o = seg.iter().copied().min().unwrap();
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Run one method.
+pub fn run(method: Method, w: &Workload, threads: usize) -> Vec<u32> {
+    match method {
+        Method::GlobalAtomic => reduce_global_atomic(w, threads),
+        Method::ShardedAtomic => reduce_sharded_atomic(w, threads),
+        Method::SegmentedReduce => reduce_segmented(w, threads),
+    }
+}
+
+/// Contention levels of the paper's Figure 6 (2 .. 512).
+pub const CONTENTIONS: &[usize] = &[2, 4, 8, 16, 32, 64, 128, 256, 512];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload(contention: usize) -> Workload {
+        let mut rng = Rng::new(42);
+        Workload::new(&mut rng, 1 << 14, contention)
+    }
+
+    #[test]
+    fn all_methods_agree_with_serial() {
+        for contention in [2, 16, 512] {
+            let w = workload(contention);
+            let want = reduce_serial(&w);
+            for m in Method::all() {
+                assert_eq!(run(m, &w, 4), want, "{m:?} c={contention}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let w = workload(8);
+        let want = reduce_serial(&w);
+        for m in Method::all() {
+            assert_eq!(run(m, &w, 1), want, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn cell_count() {
+        let w = workload(16);
+        assert_eq!(w.cells(), (1 << 14) / 16);
+    }
+}

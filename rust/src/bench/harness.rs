@@ -1,0 +1,105 @@
+//! Micro/macro benchmark harness (the vendor set has no criterion).
+//!
+//! Warmup + repeated timed runs with summary statistics; benches built on
+//! this print one TSV/markdown row per measurement so the figure harness
+//! and `cargo bench` share machinery.
+
+use crate::util::{Summary, Timer};
+
+/// Harness options.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard wall-clock budget for the measurement loop; once exceeded, stop
+    /// early (keeps O(m^3) baselines from stalling a sweep).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 2, measure_iters: 7, max_seconds: 20.0 }
+    }
+}
+
+impl BenchOpts {
+    /// Environment override: `BATCH_LP2D_BENCH_FAST=1` shrinks every loop
+    /// (CI smoke mode).
+    pub fn from_env() -> BenchOpts {
+        let fast = std::env::var("BATCH_LP2D_BENCH_FAST").is_ok_and(|v| v != "0");
+        if fast {
+            BenchOpts { warmup_iters: 1, measure_iters: 3, max_seconds: 5.0 }
+        } else {
+            BenchOpts::default()
+        }
+    }
+}
+
+/// One benchmark result (times in milliseconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub ms: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.ms.mean
+    }
+}
+
+/// Time `f` under `opts`; `f` must perform one full unit of work per call.
+pub fn bench<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let budget = Timer::start();
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    for _ in 0..opts.measure_iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_ms());
+        if budget.elapsed_ms() > opts.max_seconds * 1e3 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters: samples.len(), ms: Summary::of(&samples) }
+}
+
+/// Pretty one-line report (mean ± std over iters).
+pub fn report_line(r: &BenchResult) -> String {
+    format!(
+        "{:<44} {:>10.3} ms ±{:>8.3} (n={})",
+        r.name, r.ms.mean, r.ms.std, r.iters
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let opts = BenchOpts { warmup_iters: 1, measure_iters: 5, max_seconds: 30.0 };
+        let mut calls = 0usize;
+        let r = bench("noop", opts, || calls += 1);
+        assert_eq!(r.iters, 5);
+        assert_eq!(calls, 6); // warmup + measured
+        assert!(r.ms.mean >= 0.0);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let opts = BenchOpts { warmup_iters: 0, measure_iters: 1000, max_seconds: 0.05 };
+        let r = bench("sleepy", opts, || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(r.iters < 1000, "iters {}", r.iters);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let opts = BenchOpts { warmup_iters: 0, measure_iters: 2, max_seconds: 1.0 };
+        let r = bench("my-case", opts, || {});
+        assert!(report_line(&r).contains("my-case"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Figures 1/2: workload distribution across a warp, naive vs cooperative.
+//!
+//! The paper's Figures 1 and 2 are schematic; we reproduce them as a
+//! *measured* statistic. Running the serial Seidel solver per problem with
+//! work-unit accounting (`SolveStats`) gives each thread's load under the
+//! naive one-thread-one-LP mapping; the cooperative mapping spreads the
+//! same total across the warp. The imbalance factor (max/mean per warp) is
+//! the quantity Figure 1's ragged bars depict.
+
+use crate::gen;
+use crate::lp::types::Problem;
+use crate::solvers::seidel;
+use crate::util::{Rng, Table};
+
+/// Work-unit loads of one warp of problems under both mappings.
+#[derive(Clone, Debug)]
+pub struct WarpLoad {
+    /// Per-thread work units, naive mapping (one LP per thread).
+    pub naive: Vec<usize>,
+    /// Per-thread work units after cooperative redistribution (even split).
+    pub cooperative: Vec<usize>,
+}
+
+impl WarpLoad {
+    pub fn imbalance(loads: &[usize]) -> f64 {
+        let max = *loads.iter().max().unwrap_or(&0) as f64;
+        let mean = loads.iter().sum::<usize>() as f64 / loads.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Measure a warp's load distribution. `problems.len()` is the warp width.
+pub fn warp_load(problems: &[Problem]) -> WarpLoad {
+    let naive: Vec<usize> = problems
+        .iter()
+        .map(|p| {
+            let (_, st) = seidel::solve_ordered_with_stats(p);
+            st.work_units + p.m() // violation scans + the per-constraint checks
+        })
+        .collect();
+    let total: usize = naive.iter().sum();
+    let w = problems.len().max(1);
+    let mut cooperative = vec![total / w; w];
+    for c in cooperative.iter_mut().take(total % w) {
+        *c += 1;
+    }
+    WarpLoad { naive, cooperative }
+}
+
+/// Sweep warp imbalance over LP sizes: the Fig 1-vs-Fig 2 contrast as
+/// numbers (mean over `warps` random warps of 32 threads each).
+pub fn imbalance_table(seed: u64, sizes: &[usize], warps: usize) -> Table {
+    let mut table = Table::new(&[
+        "lp_size",
+        "naive_imbalance",
+        "coop_imbalance",
+        "naive_max_wu",
+        "mean_wu",
+    ]);
+    let mut rng = Rng::new(seed);
+    for &m in sizes {
+        let mut naive_imb = 0.0;
+        let mut coop_imb = 0.0;
+        let mut naive_max = 0usize;
+        let mut mean_wu = 0.0;
+        for _ in 0..warps {
+            let problems = gen::independent_batch(&mut rng, 32, m);
+            let wl = warp_load(&problems);
+            naive_imb += WarpLoad::imbalance(&wl.naive);
+            coop_imb += WarpLoad::imbalance(&wl.cooperative);
+            naive_max = naive_max.max(*wl.naive.iter().max().unwrap());
+            mean_wu += wl.naive.iter().sum::<usize>() as f64 / 32.0;
+        }
+        let w = warps as f64;
+        table.push_row(vec![
+            m.to_string(),
+            format!("{:.3}", naive_imb / w),
+            format!("{:.3}", coop_imb / w),
+            naive_max.to_string(),
+            format!("{:.1}", mean_wu / w),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cooperative_is_balanced() {
+        let mut rng = Rng::new(1);
+        let problems = gen::independent_batch(&mut rng, 32, 24);
+        let wl = warp_load(&problems);
+        assert!(WarpLoad::imbalance(&wl.cooperative) < 1.05);
+        assert_eq!(
+            wl.naive.iter().sum::<usize>(),
+            wl.cooperative.iter().sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn naive_is_imbalanced_for_random_lps() {
+        let mut rng = Rng::new(2);
+        let problems = gen::independent_batch(&mut rng, 32, 64);
+        let wl = warp_load(&problems);
+        // Random LPs have wildly varying violation patterns; imbalance > 1.
+        assert!(WarpLoad::imbalance(&wl.naive) > 1.1, "{:?}", wl.naive);
+    }
+
+    #[test]
+    fn table_has_one_row_per_size() {
+        let t = imbalance_table(3, &[8, 16], 2);
+        assert_eq!(t.rows.len(), 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Benchmark harness and figure-reproduction sweeps.
+//!
+//! * [`harness`]    -- warmup/measure micro-bench core (criterion stand-in).
+//! * [`figures`]    -- Figures 3, 4, 5, 7 sweep runners over the engine +
+//!   CPU baselines.
+//! * [`contention`] -- Figure 6 reduction-vs-contention mechanisms.
+//! * [`imbalance`]  -- Figures 1/2 warp work-unit distribution statistics.
+//! * [`ablations`]  -- randomization / padding / batch-mix / batch-window
+//!   ablations of the design choices.
+
+pub mod ablations;
+pub mod contention;
+pub mod figures;
+pub mod harness;
+pub mod imbalance;
+
+pub use harness::{bench, report_line, BenchOpts, BenchResult};

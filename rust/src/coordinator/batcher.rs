@@ -1,0 +1,206 @@
+//! Deadline/size-triggered batch accumulation, one queue per size class.
+//!
+//! Pure data structure (no threads, no clocks of its own): the service's
+//! dispatcher drives it with explicit timestamps, which makes every policy
+//! decision unit-testable. A batch closes when
+//!
+//!   * the class queue reaches its capacity (a full bucket), or
+//!   * its oldest entry has waited `max_wait` (bounded latency), or
+//!   * `flush` is called (shutdown / drain).
+
+use std::time::{Duration, Instant};
+
+/// An entry queued for batching; `T` is the service's pending-request type.
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+/// A closed batch ready for execution.
+#[derive(Debug)]
+pub struct ReadyBatch<T> {
+    pub class_m: usize,
+    pub items: Vec<T>,
+    /// Queueing delay of the oldest item at close time.
+    pub oldest_wait: Duration,
+}
+
+/// Per-class queues with a shared wait bound.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    classes: Vec<usize>,
+    capacity: Vec<usize>,
+    queues: Vec<Vec<Entry<T>>>,
+    max_wait: Duration,
+}
+
+impl<T> Batcher<T> {
+    /// `classes` ascending distinct size classes; `capacity[i]` the batch
+    /// size that closes class `i`; `max_wait` the deadline bound.
+    pub fn new(classes: Vec<usize>, capacity: Vec<usize>, max_wait: Duration) -> Batcher<T> {
+        assert_eq!(classes.len(), capacity.len());
+        assert!(capacity.iter().all(|&c| c > 0));
+        let queues = classes.iter().map(|_| Vec::new()).collect();
+        Batcher { classes, capacity, queues, max_wait }
+    }
+
+    fn class_index(&self, class_m: usize) -> usize {
+        self.classes
+            .binary_search(&class_m)
+            .unwrap_or_else(|_| panic!("unknown size class {class_m}"))
+    }
+
+    /// Queue an item; returns a batch if this push filled the class.
+    pub fn push(&mut self, class_m: usize, item: T, now: Instant) -> Option<ReadyBatch<T>> {
+        let idx = self.class_index(class_m);
+        self.queues[idx].push(Entry { item, enqueued: now });
+        if self.queues[idx].len() >= self.capacity[idx] {
+            return Some(self.close(idx, now));
+        }
+        None
+    }
+
+    /// Close every class whose oldest entry has exceeded `max_wait`.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<ReadyBatch<T>> {
+        let mut out = Vec::new();
+        for idx in 0..self.classes.len() {
+            if let Some(oldest) = self.queues[idx].first() {
+                if now.duration_since(oldest.enqueued) >= self.max_wait {
+                    out.push(self.close(idx, now));
+                }
+            }
+        }
+        out
+    }
+
+    /// Time until the next deadline would fire (None if all queues empty).
+    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.first())
+            .map(|e| {
+                self.max_wait
+                    .saturating_sub(now.duration_since(e.enqueued))
+            })
+            .min()
+    }
+
+    /// Drain everything (shutdown).
+    pub fn flush(&mut self, now: Instant) -> Vec<ReadyBatch<T>> {
+        let mut out = Vec::new();
+        for i in 0..self.classes.len() {
+            if !self.queues[i].is_empty() {
+                out.push(self.close(i, now));
+            }
+        }
+        out
+    }
+
+    /// Total queued items across classes.
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn close(&mut self, idx: usize, now: Instant) -> ReadyBatch<T> {
+        let entries = std::mem::take(&mut self.queues[idx]);
+        let oldest_wait = entries
+            .first()
+            .map(|e| now.duration_since(e.enqueued))
+            .unwrap_or_default();
+        ReadyBatch {
+            class_m: self.classes[idx],
+            items: entries.into_iter().map(|e| e.item).collect(),
+            oldest_wait,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher(cap: usize) -> Batcher<u32> {
+        Batcher::new(vec![16, 64], vec![cap, cap], Duration::from_millis(10))
+    }
+
+    #[test]
+    fn fills_close_at_capacity() {
+        let mut b = batcher(3);
+        let t = Instant::now();
+        assert!(b.push(16, 1, t).is_none());
+        assert!(b.push(16, 2, t).is_none());
+        let ready = b.push(16, 3, t).expect("third push closes");
+        assert_eq!(ready.class_m, 16);
+        assert_eq!(ready.items, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn classes_are_independent() {
+        let mut b = batcher(2);
+        let t = Instant::now();
+        assert!(b.push(16, 1, t).is_none());
+        assert!(b.push(64, 2, t).is_none());
+        assert_eq!(b.len(), 2);
+        let ready = b.push(64, 3, t).unwrap();
+        assert_eq!(ready.class_m, 64);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let mut b = batcher(100);
+        let t0 = Instant::now();
+        b.push(16, 1, t0);
+        assert!(b.poll_expired(t0).is_empty());
+        let late = t0 + Duration::from_millis(11);
+        let ready = b.poll_expired(late);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].items, vec![1]);
+        assert!(ready[0].oldest_wait >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = batcher(100);
+        let t0 = Instant::now();
+        assert_eq!(b.next_deadline_in(t0), None);
+        b.push(16, 1, t0);
+        let d = b.next_deadline_in(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6), "{d:?}");
+    }
+
+    #[test]
+    fn flush_drains_all() {
+        let mut b = batcher(100);
+        let t = Instant::now();
+        b.push(16, 1, t);
+        b.push(64, 2, t);
+        let batches = b.flush(t);
+        assert_eq!(batches.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn preserves_fifo_order_within_class() {
+        let mut b = batcher(4);
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(16, i, t);
+        }
+        let ready = b.push(16, 3, t).unwrap();
+        assert_eq!(ready.items, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown size class")]
+    fn unknown_class_panics() {
+        let mut b = batcher(2);
+        b.push(32, 1, Instant::now());
+    }
+}

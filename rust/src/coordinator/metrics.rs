@@ -1,0 +1,163 @@
+//! Service metrics: counters and latency histograms for the serving layer.
+//!
+//! Shared via `Arc<Metrics>`; updates take one short mutex section per
+//! event (the batch level, not the per-problem level, keeps this off the
+//! per-request hot path).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::runtime::ExecTiming;
+use crate::util::LatencyHistogram;
+
+#[derive(Clone, Debug, Default)]
+struct Inner {
+    submitted: u64,
+    solved: u64,
+    infeasible: u64,
+    rejected: u64,
+    batches: u64,
+    /// Sum of batch occupancy (used/capacity) to average later.
+    occupancy_sum: f64,
+    queue_wait: LatencyHistogram,
+    exec_latency: LatencyHistogram,
+    exec_timing: ExecTimingTotals,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecTimingTotals {
+    pub pack_ns: u64,
+    pub transfer_ns: u64,
+    pub execute_ns: u64,
+    pub unpack_ns: u64,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub solved: u64,
+    pub infeasible: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub mean_occupancy: f64,
+    pub queue_wait_p50_ns: u64,
+    pub queue_wait_p99_ns: u64,
+    pub exec_p50_ns: u64,
+    pub exec_p99_ns: u64,
+    pub exec_mean_ns: f64,
+    pub timing: ExecTimingTotals,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Record a completed batch: per-problem outcomes plus the exec split.
+    pub fn on_batch(
+        &self,
+        used: usize,
+        capacity: usize,
+        infeasible: usize,
+        queue_wait: Duration,
+        timing: &ExecTiming,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.solved += used as u64;
+        g.infeasible += infeasible as u64;
+        g.occupancy_sum += used as f64 / capacity.max(1) as f64;
+        g.queue_wait.record(queue_wait.as_nanos() as u64);
+        g.exec_latency.record(timing.total_ns());
+        g.exec_timing.pack_ns += timing.pack_ns;
+        g.exec_timing.transfer_ns += timing.transfer_ns;
+        g.exec_timing.execute_ns += timing.execute_ns;
+        g.exec_timing.unpack_ns += timing.unpack_ns;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            submitted: g.submitted,
+            solved: g.solved,
+            infeasible: g.infeasible,
+            rejected: g.rejected,
+            batches: g.batches,
+            mean_occupancy: if g.batches > 0 {
+                g.occupancy_sum / g.batches as f64
+            } else {
+                0.0
+            },
+            queue_wait_p50_ns: g.queue_wait.percentile_ns(50.0),
+            queue_wait_p99_ns: g.queue_wait.percentile_ns(99.0),
+            exec_p50_ns: g.exec_latency.percentile_ns(50.0),
+            exec_p99_ns: g.exec_latency.percentile_ns(99.0),
+            exec_mean_ns: g.exec_latency.mean_ns(),
+            timing: g.exec_timing,
+        }
+    }
+}
+
+impl Snapshot {
+    /// Figure-5 style memory-management fraction over the whole run.
+    pub fn memory_fraction(&self) -> f64 {
+        let t = &self.timing;
+        let total = (t.pack_ns + t.transfer_ns + t.execute_ns + t.unpack_ns).max(1) as f64;
+        (t.pack_ns + t.transfer_ns + t.unpack_ns) as f64 / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(
+            2,
+            4,
+            1,
+            Duration::from_micros(5),
+            &ExecTiming { pack_ns: 1, transfer_ns: 2, execute_ns: 6, unpack_ns: 1 },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.solved, 2);
+        assert_eq!(s.infeasible, 1);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_occupancy - 0.5).abs() < 1e-12);
+        assert!((s.memory_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.solved, 0);
+        assert_eq!(s.mean_occupancy, 0.0);
+    }
+
+    #[test]
+    fn rejection_counter() {
+        let m = Metrics::new();
+        m.on_reject();
+        assert_eq!(m.snapshot().rejected, 1);
+    }
+}

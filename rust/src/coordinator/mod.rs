@@ -1,0 +1,15 @@
+//! L3 coordinator: the serving layer over the AOT kernels.
+//!
+//! * [`router`]  -- size-class assignment (problem m -> compiled bucket m).
+//! * [`batcher`] -- capacity/deadline batch accumulation per class.
+//! * [`service`] -- submit/await facade over dispatcher + executor threads.
+//! * [`metrics`] -- counters and latency histograms.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use metrics::{Metrics, Snapshot};
+pub use router::Router;
+pub use service::{Config, Service, SubmitError, Ticket};

@@ -1,0 +1,133 @@
+//! Size-class routing: assign each incoming problem to the bucket family
+//! that will solve it.
+//!
+//! The AOT step compiles one executable per (batch, m) shape, so the router
+//! quantizes a problem's constraint count up to the nearest compiled m
+//! (its *size class*). Batching then happens within a class, which is how
+//! the system supports "different-sized individual LPs within the batches"
+//! (paper §6) without recompilation: padding inside a class, classes for
+//! the rest.
+
+use crate::runtime::manifest::{Manifest, Variant};
+
+/// A router over the size classes available for one variant.
+#[derive(Clone, Debug)]
+pub struct Router {
+    variant: Variant,
+    /// Ascending distinct m values with at least one bucket.
+    classes: Vec<usize>,
+    /// Max batch capacity per class (largest compiled batch for that m).
+    capacity: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(manifest: &Manifest, variant: Variant) -> anyhow::Result<Router> {
+        let mut classes: Vec<usize> = manifest
+            .of_variant(variant)
+            .iter()
+            .map(|b| b.m)
+            .collect();
+        classes.sort_unstable();
+        classes.dedup();
+        anyhow::ensure!(
+            !classes.is_empty(),
+            "manifest has no buckets for variant {}",
+            variant.as_str()
+        );
+        let capacity = classes
+            .iter()
+            .map(|&m| {
+                manifest
+                    .of_variant(variant)
+                    .iter()
+                    .filter(|b| b.m == m)
+                    .map(|b| b.batch)
+                    .max()
+                    .unwrap()
+            })
+            .collect();
+        Ok(Router { variant, classes, capacity })
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// All size classes (ascending).
+    pub fn classes(&self) -> &[usize] {
+        &self.classes
+    }
+
+    /// Size class for a problem of `m` constraints: the smallest compiled m
+    /// that fits. None if the problem exceeds every compiled bucket.
+    pub fn route(&self, m: usize) -> Option<usize> {
+        self.classes.iter().copied().find(|&c| c >= m)
+    }
+
+    /// Index of a class in `classes()`.
+    pub fn class_index(&self, class_m: usize) -> Option<usize> {
+        self.classes.binary_search(&class_m).ok()
+    }
+
+    /// Batch capacity of a class (the largest compiled batch for that m).
+    pub fn capacity(&self, class_m: usize) -> Option<usize> {
+        self.class_index(class_m).map(|i| self.capacity[i])
+    }
+
+    /// Padding waste of routing an m-sized problem: fraction of the padded
+    /// row that is dead work. Used by ablation benches.
+    pub fn padding_waste(&self, m: usize) -> Option<f64> {
+        self.route(m).map(|c| 1.0 - m as f64 / c as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                    rgb\t256\t16\t128\t16\ta\n\
+                    rgb\t1024\t16\t128\t16\tb\n\
+                    rgb\t512\t64\t128\t64\tc\n\
+                    naive\t256\t32\t128\t32\td\n";
+        Manifest::parse(text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn classes_are_sorted_distinct() {
+        let r = Router::new(&manifest(), Variant::Rgb).unwrap();
+        assert_eq!(r.classes(), &[16, 64]);
+    }
+
+    #[test]
+    fn routes_round_up() {
+        let r = Router::new(&manifest(), Variant::Rgb).unwrap();
+        assert_eq!(r.route(1), Some(16));
+        assert_eq!(r.route(16), Some(16));
+        assert_eq!(r.route(17), Some(64));
+        assert_eq!(r.route(65), None);
+    }
+
+    #[test]
+    fn capacity_is_largest_batch() {
+        let r = Router::new(&manifest(), Variant::Rgb).unwrap();
+        assert_eq!(r.capacity(16), Some(1024));
+        assert_eq!(r.capacity(64), Some(512));
+        assert_eq!(r.capacity(32), None);
+    }
+
+    #[test]
+    fn missing_variant_errors() {
+        assert!(Router::new(&manifest(), Variant::Simplex).is_err());
+    }
+
+    #[test]
+    fn padding_waste() {
+        let r = Router::new(&manifest(), Variant::Rgb).unwrap();
+        assert_eq!(r.padding_waste(16), Some(0.0));
+        let w = r.padding_waste(17).unwrap();
+        assert!((w - (1.0 - 17.0 / 64.0)).abs() < 1e-12);
+    }
+}

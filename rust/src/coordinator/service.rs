@@ -1,0 +1,341 @@
+//! The serving facade: submit problems, get solutions back, batching and
+//! execution handled by background threads.
+//!
+//! Topology (std threads; the offline vendor set has no tokio):
+//!
+//! ```text
+//!   submit() ──sync_channel──▶ dispatcher ──channel──▶ executor pool (N)
+//!      ▲                        (router +                 (engine.solve)
+//!      │                         batcher)                      │
+//!      └────────── per-request reply channel ◀────────────────┘
+//! ```
+//!
+//! * The bounded submit channel is the backpressure surface.
+//! * The dispatcher owns the `Batcher` and closes batches on capacity or
+//!   deadline; it never touches PJRT.
+//! * Executors run whole batches on the `Engine` and fan results out to the
+//!   per-request reply channels.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, ReadyBatch};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::Router;
+use crate::lp::types::{Problem, Solution, Status};
+use crate::runtime::{Engine, Manifest, Variant};
+use crate::util::Rng;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Which compiled kernel family serves requests.
+    pub variant: Variant,
+    /// Batch close deadline: max time the oldest request waits.
+    pub max_wait: Duration,
+    /// Cap on per-class batch size (None = the bucket capacity).
+    pub max_batch: Option<usize>,
+    /// Executor threads running PJRT batches. The `xla` client is not
+    /// shareable across threads, so each executor owns a *separate* Engine
+    /// (its own PJRT client + executable cache). 1 is usually right on CPU:
+    /// XLA already parallelizes inside one execution.
+    pub executors: usize,
+    /// Bounded submit-queue depth (backpressure).
+    pub queue_depth: usize,
+    /// Pre-compile each size class's executables before serving (start()
+    /// blocks until done). Avoids multi-second head-of-line blocking on
+    /// first-touch XLA compilation.
+    pub warm: bool,
+    /// Seed for the per-problem constraint shuffles.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            variant: Variant::Rgb,
+            max_wait: Duration::from_millis(2),
+            max_batch: None,
+            executors: 1,
+            queue_depth: 8192,
+            warm: true,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Submission error.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Problem has more constraints than any compiled bucket.
+    TooLarge { m: usize, max_m: usize },
+    /// Service is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::TooLarge { m, max_m } => {
+                write!(f, "problem with {m} constraints exceeds largest bucket m={max_m}")
+            }
+            SubmitError::Closed => write!(f, "service is closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Awaitable solution handle.
+pub struct Ticket {
+    rx: mpsc::Receiver<anyhow::Result<Solution>>,
+}
+
+impl Ticket {
+    /// Block until the solution arrives.
+    pub fn wait(self) -> anyhow::Result<Solution> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service dropped the request"))?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> anyhow::Result<Solution> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => anyhow::bail!("timed out"),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("service dropped the request")
+            }
+        }
+    }
+}
+
+struct Pending {
+    problem: Problem,
+    reply: mpsc::Sender<anyhow::Result<Solution>>,
+}
+
+enum Msg {
+    Request(usize, Pending), // class_m, request
+    Shutdown,
+}
+
+/// The running service.
+pub struct Service {
+    tx: mpsc::SyncSender<Msg>,
+    router: Router,
+    metrics: Arc<Metrics>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    executors: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start dispatcher + executor threads over an artifact directory.
+    ///
+    /// Each executor thread owns a private [`Engine`] (PJRT client +
+    /// executable cache); engines are constructed here so any setup error
+    /// surfaces synchronously, then *moved* into their threads.
+    pub fn start(artifact_dir: impl AsRef<Path>, config: Config) -> anyhow::Result<Service> {
+        let dir: PathBuf = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let router = Router::new(&manifest, config.variant)?;
+        let metrics = Arc::new(Metrics::new());
+
+        let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_depth);
+        let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+
+        // Executor pool: one Engine per thread (see Config::executors).
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let mut executors = Vec::with_capacity(config.executors.max(1));
+        for e in 0..config.executors.max(1) {
+            let engine = Engine::new(&dir)?;
+            let metrics = metrics.clone();
+            let batch_rx = batch_rx.clone();
+            let router = router.clone();
+            let variant = config.variant;
+            let warm = config.warm;
+            let ready_tx = ready_tx.clone();
+            let seed = config.seed ^ (e as u64).wrapping_mul(0xA5A5_5A5A_1234_5678);
+            executors.push(std::thread::spawn(move || {
+                if warm {
+                    let _ = ready_tx.send(warm_classes(&engine, &router, variant));
+                } else {
+                    let _ = ready_tx.send(Ok(()));
+                }
+                drop(ready_tx);
+                let mut rng = Rng::new(seed);
+                loop {
+                    let batch = {
+                        let guard = batch_rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    run_batch(&engine, &router, variant, batch, &metrics, &mut rng);
+                }
+            }));
+        }
+        drop(ready_tx);
+        // Block until every executor reports readiness (warm or not).
+        for _ in 0..executors.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => return Err(e.context("executor warmup failed")),
+                Err(_) => anyhow::bail!("executor died during startup"),
+            }
+        }
+
+        // Dispatcher.
+        let dispatcher = {
+            let router = router.clone();
+            let config = config.clone();
+            std::thread::spawn(move || {
+                let capacities: Vec<usize> = router
+                    .classes()
+                    .iter()
+                    .map(|&c| {
+                        let cap = router.capacity(c).unwrap();
+                        config.max_batch.map_or(cap, |mb| mb.min(cap))
+                    })
+                    .collect();
+                let mut batcher: Batcher<Pending> =
+                    Batcher::new(router.classes().to_vec(), capacities, config.max_wait);
+                loop {
+                    let now = Instant::now();
+                    let timeout = batcher
+                        .next_deadline_in(now)
+                        .unwrap_or(Duration::from_millis(50));
+                    match rx.recv_timeout(timeout) {
+                        Ok(Msg::Request(class_m, pending)) => {
+                            let now = Instant::now();
+                            if let Some(ready) = batcher.push(class_m, pending, now) {
+                                let _ = batch_tx.send(ready);
+                            }
+                        }
+                        Ok(Msg::Shutdown) => break,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                    let now = Instant::now();
+                    for ready in batcher.poll_expired(now) {
+                        let _ = batch_tx.send(ready);
+                    }
+                }
+                // Drain on shutdown.
+                for ready in batcher.flush(Instant::now()) {
+                    let _ = batch_tx.send(ready);
+                }
+                drop(batch_tx); // closes the executor pool
+            })
+        };
+
+        Ok(Service { tx, router, metrics, dispatcher: Some(dispatcher), executors })
+    }
+
+    /// Submit one problem; blocks if the queue is full (backpressure).
+    pub fn submit(&self, problem: Problem) -> Result<Ticket, SubmitError> {
+        let class_m = self.router.route(problem.m()).ok_or(SubmitError::TooLarge {
+            m: problem.m(),
+            max_m: *self.router.classes().last().unwrap(),
+        })?;
+        self.metrics.on_submit();
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Request(class_m, Pending { problem, reply }))
+            .map_err(|_| SubmitError::Closed)?;
+        Ok(Ticket { rx })
+    }
+
+    /// Submit a whole slice and wait for all solutions (in input order).
+    pub fn solve_all(&self, problems: &[Problem]) -> anyhow::Result<Vec<Solution>> {
+        let tickets: Result<Vec<Ticket>, SubmitError> =
+            problems.iter().map(|p| self.submit(p.clone())).collect();
+        let tickets = tickets.map_err(|e| anyhow::anyhow!("{e}"))?;
+        tickets.into_iter().map(|t| t.wait()).collect()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Graceful shutdown: flush queues, join threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for e in self.executors.drain(..) {
+            let _ = e.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        if self.dispatcher.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+/// Pre-compile the executables a class's traffic will hit: the smallest
+/// bucket (light load) and the capacity bucket (saturated load) per class.
+fn warm_classes(engine: &Engine, router: &Router, variant: Variant) -> anyhow::Result<()> {
+    for &class in router.classes() {
+        let cap = router.capacity(class).unwrap_or(1);
+        for n in [1usize, cap] {
+            if let Some(bucket) = engine.manifest().fit(variant, n, class) {
+                let bucket = bucket.clone();
+                engine.load(&bucket)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_batch(
+    engine: &Engine,
+    router: &Router,
+    variant: Variant,
+    batch: ReadyBatch<Pending>,
+    metrics: &Metrics,
+    rng: &mut Rng,
+) {
+    let problems: Vec<Problem> = batch.items.iter().map(|p| p.problem.clone()).collect();
+    // Occupancy accounting is against the bucket that will actually run.
+    let m_max = problems.iter().map(|p| p.m()).max().unwrap_or(batch.class_m);
+    let capacity = engine
+        .manifest()
+        .fit(variant, problems.len(), m_max)
+        .map(|b| b.batch)
+        .or_else(|| router.capacity(batch.class_m))
+        .unwrap_or(problems.len());
+    match engine.solve(variant, &problems, Some(rng)) {
+        Ok((solutions, timing)) => {
+            let infeasible = solutions
+                .iter()
+                .filter(|s| s.status == Status::Infeasible)
+                .count();
+            metrics.on_batch(problems.len(), capacity, infeasible, batch.oldest_wait, &timing);
+            for (pending, sol) in batch.items.into_iter().zip(solutions) {
+                let _ = pending.reply.send(Ok(sol));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch execution failed: {e}");
+            for pending in batch.items {
+                let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
+            }
+        }
+    }
+}

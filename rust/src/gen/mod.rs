@@ -1,0 +1,167 @@
+//! Workload generation: random feasible/infeasible 2-D LPs and batch
+//! traces, mirroring the paper's methodology (§4: "random feasible
+//! constraints ... constraint lines are generated randomly and tested to
+//! ensure a solution is possible") and `python/compile/problems.py`.
+
+pub mod trace;
+
+use crate::lp::types::{HalfPlane, Problem};
+use crate::util::Rng;
+
+/// Parameters of the random-feasible generator; defaults match the Python
+/// layer so the two sides sample the same distribution family.
+#[derive(Clone, Copy, Debug)]
+pub struct GenParams {
+    /// Interior points are sampled in a disc of this radius.
+    pub radius: f64,
+    /// Constraint slack range pushed away from the interior point.
+    pub slack_lo: f64,
+    pub slack_hi: f64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams { radius: 8.0, slack_lo: 0.05, slack_hi: 4.0 }
+    }
+}
+
+/// One feasible problem with exactly `m` constraints (strictly feasible by
+/// construction: every half-plane keeps a sampled interior point inside).
+pub fn feasible_with(rng: &mut Rng, m: usize, gp: GenParams) -> Problem {
+    let theta0 = rng.range_f64(0.0, std::f64::consts::TAU);
+    let r0 = gp.radius * rng.f64().sqrt();
+    let (x0, y0) = (r0 * theta0.cos(), r0 * theta0.sin());
+
+    let mut cons = Vec::with_capacity(m);
+    for _ in 0..m {
+        let ang = rng.range_f64(0.0, std::f64::consts::TAU);
+        let (nx, ny) = (ang.cos(), ang.sin());
+        let slack = rng.range_f64(gp.slack_lo, gp.slack_hi);
+        cons.push(HalfPlane::new(nx, ny, nx * x0 + ny * y0 + slack));
+    }
+    let oang = rng.range_f64(0.0, std::f64::consts::TAU);
+    Problem::new(cons, [oang.cos(), oang.sin()])
+}
+
+/// `feasible_with` under default parameters.
+pub fn feasible(rng: &mut Rng, m: usize) -> Problem {
+    feasible_with(rng, m, GenParams::default())
+}
+
+/// A feasible problem whose optimum is guaranteed interior to
+/// `|x|,|y| <= bound` (adds four axis-aligned cap constraints), required by
+/// comparisons against the batch-simplex comparator (its SIMPLEX_BOX domain).
+pub fn feasible_bounded(rng: &mut Rng, m: usize, bound: f64) -> Problem {
+    assert!(m >= 4, "need m >= 4 to embed the cap constraints");
+    let mut p = feasible_with(rng, m - 4, GenParams::default());
+    p.constraints.push(HalfPlane::new(1.0, 0.0, bound));
+    p.constraints.push(HalfPlane::new(-1.0, 0.0, bound));
+    p.constraints.push(HalfPlane::new(0.0, 1.0, bound));
+    p.constraints.push(HalfPlane::new(0.0, -1.0, bound));
+    p
+}
+
+/// An infeasible problem: a feasible base plus a contradicting slab
+/// (`n.x <= -1` and `-n.x <= -1`).
+pub fn infeasible(rng: &mut Rng, m: usize) -> Problem {
+    assert!(m >= 2);
+    let mut p = feasible(rng, m - 2);
+    let ang = rng.range_f64(0.0, std::f64::consts::TAU);
+    let (nx, ny) = (ang.cos(), ang.sin());
+    p.constraints.push(HalfPlane::new(nx, ny, -1.0));
+    p.constraints.push(HalfPlane::new(-nx, -ny, -1.0));
+    p
+}
+
+/// The paper's batch construction: ONE random problem replicated `batch`
+/// times ("Only one LP is generated per run, and copied multiple times into
+/// memory to simulate batch numbers", §4).
+pub fn replicated_batch(rng: &mut Rng, batch: usize, m: usize) -> Vec<Problem> {
+    let p = feasible(rng, m);
+    vec![p; batch]
+}
+
+/// Independent problems (the harder, more realistic batch).
+pub fn independent_batch(rng: &mut Rng, batch: usize, m: usize) -> Vec<Problem> {
+    (0..batch).map(|_| feasible(rng, m)).collect()
+}
+
+/// Batch with a fraction of infeasible problems mixed in.
+pub fn mixed_batch(rng: &mut Rng, batch: usize, m: usize, infeasible_frac: f64) -> Vec<Problem> {
+    (0..batch)
+        .map(|_| {
+            if rng.f64() < infeasible_frac && m >= 2 {
+                infeasible(rng, m)
+            } else {
+                feasible(rng, m)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::brute;
+    use crate::lp::types::Status;
+
+    #[test]
+    fn feasible_problems_are_feasible() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let p = feasible(&mut rng, 12);
+            assert_eq!(p.m(), 12);
+            assert_eq!(brute::solve(&p).status, Status::Optimal);
+        }
+    }
+
+    #[test]
+    fn normals_are_unit() {
+        let mut rng = Rng::new(2);
+        let p = feasible(&mut rng, 8);
+        for h in &p.constraints {
+            assert!((h.nx * h.nx + h.ny * h.ny - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn infeasible_problems_are_infeasible() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let p = infeasible(&mut rng, 10);
+            assert_eq!(p.m(), 10);
+            assert_eq!(brute::solve(&p).status, Status::Infeasible);
+        }
+    }
+
+    #[test]
+    fn bounded_optimum_is_interior() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let p = feasible_bounded(&mut rng, 12, 100.0);
+            let s = brute::solve(&p);
+            assert_eq!(s.status, Status::Optimal);
+            assert!(s.point[0].abs() <= 100.0 + 1e-6);
+            assert!(s.point[1].abs() <= 100.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn replicated_batch_is_identical() {
+        let mut rng = Rng::new(5);
+        let b = replicated_batch(&mut rng, 16, 6);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|p| *p == b[0]));
+    }
+
+    #[test]
+    fn mixed_batch_fraction() {
+        let mut rng = Rng::new(6);
+        let b = mixed_batch(&mut rng, 400, 8, 0.5);
+        let infeas = b
+            .iter()
+            .filter(|p| brute::solve(p).status == Status::Infeasible)
+            .count();
+        assert!((100..300).contains(&infeas), "infeasible count {infeas}");
+    }
+}

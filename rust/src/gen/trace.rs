@@ -1,0 +1,121 @@
+//! Request traces for the serving experiments: sequences of (arrival time,
+//! problem) pairs driving the coordinator under open-loop load.
+//!
+//! The paper's batches are static; the coordinator generalizes them to a
+//! stream ("the allowance for different-sized individual LPs within the
+//! batches", §6), so the trace generator produces mixed-size Poisson
+//! arrivals as the synthetic serving workload.
+
+use crate::lp::types::Problem;
+use crate::util::Rng;
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct TracedRequest {
+    /// Arrival offset from trace start, nanoseconds.
+    pub at_ns: u64,
+    pub problem: Problem,
+}
+
+/// Trace parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceParams {
+    /// Mean arrival rate, requests/second (Poisson process).
+    pub rate: f64,
+    /// Problem sizes drawn log-uniformly from this inclusive range.
+    pub m_lo: usize,
+    pub m_hi: usize,
+    /// Fraction of infeasible problems.
+    pub infeasible_frac: f64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams { rate: 50_000.0, m_lo: 8, m_hi: 128, infeasible_frac: 0.02 }
+    }
+}
+
+/// Generate `n` requests with exponential inter-arrival gaps.
+pub fn poisson_trace(rng: &mut Rng, n: usize, tp: TraceParams) -> Vec<TracedRequest> {
+    assert!(tp.m_lo >= 2 && tp.m_lo <= tp.m_hi);
+    let mut t_ns = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let gap_s = -rng.f64().max(1e-12).ln() / tp.rate;
+        t_ns += (gap_s * 1e9) as u64;
+        let m = log_uniform(rng, tp.m_lo, tp.m_hi);
+        let problem = if rng.f64() < tp.infeasible_frac {
+            super::infeasible(rng, m)
+        } else {
+            super::feasible(rng, m)
+        };
+        out.push(TracedRequest { at_ns: t_ns, problem });
+    }
+    out
+}
+
+/// Closed batch of mixed sizes (the paper's "different-sized individual LPs
+/// within the batches").
+pub fn mixed_size_batch(rng: &mut Rng, n: usize, m_lo: usize, m_hi: usize) -> Vec<Problem> {
+    (0..n)
+        .map(|_| {
+            let m = log_uniform(rng, m_lo, m_hi);
+            super::feasible(rng, m)
+        })
+        .collect()
+}
+
+/// Log-uniform integer in [lo, hi] — small sizes common, large sizes rare,
+/// the shape of per-agent neighbour counts in the crowd workload.
+fn log_uniform(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    if lo == hi {
+        return lo;
+    }
+    let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+    let v = rng.range_f64(llo, lhi).exp().round() as usize;
+    v.clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_monotonic() {
+        let mut rng = Rng::new(8);
+        let tr = poisson_trace(&mut rng, 200, TraceParams::default());
+        assert_eq!(tr.len(), 200);
+        for w in tr.windows(2) {
+            assert!(w[0].at_ns <= w[1].at_ns);
+        }
+    }
+
+    #[test]
+    fn sizes_within_range() {
+        let mut rng = Rng::new(9);
+        let tp = TraceParams { m_lo: 4, m_hi: 32, ..Default::default() };
+        let tr = poisson_trace(&mut rng, 500, tp);
+        assert!(tr.iter().all(|r| (4..=32).contains(&r.problem.m())));
+        // log-uniform: small sizes should dominate
+        let small = tr.iter().filter(|r| r.problem.m() <= 11).count();
+        assert!(small > 150, "small sizes {small}/500");
+    }
+
+    #[test]
+    fn rate_roughly_respected() {
+        let mut rng = Rng::new(10);
+        let tp = TraceParams { rate: 1e6, ..Default::default() };
+        let tr = poisson_trace(&mut rng, 2000, tp);
+        let span_s = tr.last().unwrap().at_ns as f64 / 1e9;
+        let rate = 2000.0 / span_s;
+        assert!((0.8e6..1.25e6).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn mixed_batch_sizes_vary() {
+        let mut rng = Rng::new(11);
+        let b = mixed_size_batch(&mut rng, 100, 4, 64);
+        let distinct: std::collections::HashSet<usize> = b.iter().map(|p| p.m()).collect();
+        assert!(distinct.len() > 5, "sizes {distinct:?}");
+    }
+}

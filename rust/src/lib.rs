@@ -1,0 +1,35 @@
+//! batch-lp2d: batch two-dimensional linear programming.
+//!
+//! Reproduction of *Two-Dimensional Batch Linear Programming on the GPU*
+//! (Charlton, Maddock, Richmond; JPDC 2019) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * L1 (`python/compile/kernels/rgb.py`): the RGB incremental-LP kernel.
+//! * L2 (`python/compile/model.py`): batched solve entry points, AOT-lowered
+//!   to HLO text once by `make artifacts`.
+//! * L3 (this crate): problem model, CPU baseline solvers, the PJRT runtime
+//!   that executes the AOT modules, a batching/serving coordinator, the
+//!   crowd-simulation workload, and the figure-reproduction bench harness.
+//!
+//! Quick start (after `make artifacts`):
+//!
+//! ```no_run
+//! use batch_lp2d::{gen, runtime::{Engine, Variant}, util::Rng};
+//!
+//! let engine = Engine::new("artifacts").unwrap();
+//! let mut rng = Rng::new(42);
+//! let problems = gen::independent_batch(&mut rng, 256, 32);
+//! let (solutions, timing) = engine
+//!     .solve(Variant::Rgb, &problems, Some(&mut rng))
+//!     .unwrap();
+//! println!("solved {} LPs in {} ns", solutions.len(), timing.total_ns());
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod gen;
+pub mod lp;
+pub mod runtime;
+pub mod sim;
+pub mod solvers;
+pub mod util;

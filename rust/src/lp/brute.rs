@@ -1,0 +1,114 @@
+//! Brute-force vertex-enumeration oracle: the Rust-side ground truth.
+//!
+//! The optimum of a (box-bounded) feasible 2-D LP lies at a vertex of the
+//! feasible polygon, i.e. at the intersection of two constraint lines
+//! (counting the four box edges). Enumerating all O(m^2) intersections and
+//! keeping the best feasible one is O(m^3) — far too slow to serve, exactly
+//! right as a test oracle.
+
+use super::types::{HalfPlane, Problem, Solution, M_BIG};
+
+/// Relative feasibility slack used when filtering candidate vertices; a bit
+/// looser than solver EPS so boundary vertices are never rejected for
+/// float noise.
+const VERTEX_TOL: f64 = 1e-6;
+
+/// Solve by vertex enumeration (float64, exact-ish).
+pub fn solve(p: &Problem) -> Solution {
+    let mut all: Vec<HalfPlane> = Vec::with_capacity(p.constraints.len() + 4);
+    all.extend(p.constraints.iter().map(|h| h.normalized()));
+    all.push(HalfPlane::new(1.0, 0.0, M_BIG));
+    all.push(HalfPlane::new(-1.0, 0.0, M_BIG));
+    all.push(HalfPlane::new(0.0, 1.0, M_BIG));
+    all.push(HalfPlane::new(0.0, -1.0, M_BIG));
+
+    let mut best: Option<(f64, [f64; 2])> = None;
+    for i in 0..all.len() {
+        for j in (i + 1)..all.len() {
+            let (a, b) = (&all[i], &all[j]);
+            let det = a.nx * b.ny - a.ny * b.nx;
+            if det.abs() < 1e-12 {
+                continue;
+            }
+            let x = (a.b * b.ny - b.b * a.ny) / det;
+            let y = (a.nx * b.b - b.nx * a.b) / det;
+            let feasible = all.iter().all(|h| {
+                h.violation(x, y) <= VERTEX_TOL * h.b.abs().max(1.0)
+            });
+            if feasible {
+                let v = p.objective_at(x, y);
+                if best.map_or(true, |(bv, _)| v > bv) {
+                    best = Some((v, [x, y]));
+                }
+            }
+        }
+    }
+    match best {
+        Some((_, pt)) => Solution::optimal(pt[0], pt[1]),
+        None => Solution::infeasible(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::types::Status;
+
+    #[test]
+    fn unconstrained_hits_box_corner() {
+        let p = Problem::new(vec![], [1.0, 1.0]);
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.point[0] - M_BIG).abs() < 1e-6);
+        assert!((s.point[1] - M_BIG).abs() < 1e-6);
+    }
+
+    #[test]
+    fn simple_triangle() {
+        // x <= 1, y <= 1, maximize x + y  -> (1, 1).
+        let p = Problem::new(
+            vec![HalfPlane::new(1.0, 0.0, 1.0), HalfPlane::new(0.0, 1.0, 1.0)],
+            [1.0, 1.0],
+        );
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.point[0] - 1.0).abs() < 1e-9);
+        assert!((s.point[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diagonal_cut() {
+        // x + y <= 1, maximize x + y: any point on the segment works.
+        let p = Problem::new(vec![HalfPlane::new(1.0, 1.0, 1.0)], [1.0, 1.0]);
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective(&p) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible_slab() {
+        // x <= -1 and -x <= -1 (i.e. x >= 1): empty.
+        let p = Problem::new(
+            vec![HalfPlane::new(1.0, 0.0, -1.0), HalfPlane::new(-1.0, 0.0, -1.0)],
+            [1.0, 0.0],
+        );
+        assert_eq!(solve(&p).status, Status::Infeasible);
+    }
+
+    #[test]
+    fn single_point_region() {
+        // x <= 0, -x <= 0, y <= 0, -y <= 0: exactly the origin.
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.0, 0.0),
+                HalfPlane::new(-1.0, 0.0, 0.0),
+                HalfPlane::new(0.0, 1.0, 0.0),
+                HalfPlane::new(0.0, -1.0, 0.0),
+            ],
+            [1.0, 1.0],
+        );
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!(s.point[0].abs() < 1e-9 && s.point[1].abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Core 2-D LP model: problem/solution types, the brute-force oracle, and
+//! solution validation. Everything else in the crate builds on this module.
+
+pub mod brute;
+pub mod types;
+pub mod validate;
+
+pub use types::{HalfPlane, Problem, Solution, Status, EPS, M_BIG};
+pub use validate::{Tolerance, Verdict};

@@ -1,0 +1,164 @@
+//! Core 2-D linear-programming types shared across the whole stack.
+//!
+//! A problem is `maximize c.x` subject to half-plane constraints
+//! `n.x <= b`, implicitly intersected with the box `|x|,|y| <= M_BIG`
+//! (Seidel's +-M device for a guaranteed finite optimum; the paper's §2.1).
+
+/// Bounding-box half-width; must match `python/compile/problems.py::M_BIG`.
+pub const M_BIG: f64 = 1.0e4;
+
+/// Feasibility / violation tolerance; matches the Python layer's `EPS`.
+pub const EPS: f64 = 1.0e-4;
+
+/// One half-plane constraint: `nx * x + ny * y <= b`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HalfPlane {
+    pub nx: f64,
+    pub ny: f64,
+    pub b: f64,
+}
+
+impl HalfPlane {
+    pub fn new(nx: f64, ny: f64, b: f64) -> HalfPlane {
+        HalfPlane { nx, ny, b }
+    }
+
+    /// Signed violation of a point: positive means outside the half-plane.
+    #[inline]
+    pub fn violation(&self, x: f64, y: f64) -> f64 {
+        self.nx * x + self.ny * y - self.b
+    }
+
+    #[inline]
+    pub fn contains(&self, x: f64, y: f64) -> bool {
+        self.violation(x, y) <= EPS
+    }
+
+    /// Normalize so |n| = 1 (keeps the kernels well-conditioned).
+    pub fn normalized(&self) -> HalfPlane {
+        let len = (self.nx * self.nx + self.ny * self.ny).sqrt();
+        if len < 1e-12 {
+            *self
+        } else {
+            HalfPlane { nx: self.nx / len, ny: self.ny / len, b: self.b / len }
+        }
+    }
+}
+
+/// One 2-D LP: maximize `obj . x` subject to `constraints` (+ the box).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Problem {
+    pub constraints: Vec<HalfPlane>,
+    /// Objective direction; maximize `obj . x`.
+    pub obj: [f64; 2],
+}
+
+impl Problem {
+    pub fn new(constraints: Vec<HalfPlane>, obj: [f64; 2]) -> Problem {
+        Problem { constraints, obj }
+    }
+
+    pub fn m(&self) -> usize {
+        self.constraints.len()
+    }
+
+    pub fn objective_at(&self, x: f64, y: f64) -> f64 {
+        self.obj[0] * x + self.obj[1] * y
+    }
+
+    /// Max constraint violation at a point (includes the implicit box);
+    /// <= EPS means feasible.
+    pub fn max_violation(&self, x: f64, y: f64) -> f64 {
+        let mut v: f64 = (x.abs()).max(y.abs()) - M_BIG;
+        for h in &self.constraints {
+            v = v.max(h.violation(x, y));
+        }
+        v
+    }
+
+    pub fn is_feasible_point(&self, x: f64, y: f64) -> bool {
+        self.max_violation(x, y) <= EPS
+    }
+}
+
+/// Solve outcome. Numeric values match the kernel/AOT status codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(i32)]
+pub enum Status {
+    Optimal = 0,
+    Infeasible = 1,
+}
+
+impl Status {
+    pub fn from_code(code: i32) -> anyhow::Result<Status> {
+        match code {
+            0 => Ok(Status::Optimal),
+            1 => Ok(Status::Infeasible),
+            other => anyhow::bail!("unknown status code {other}"),
+        }
+    }
+}
+
+/// A solution to one problem.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Solution {
+    pub status: Status,
+    /// Optimal point; meaningful only when `status == Optimal`.
+    pub point: [f64; 2],
+}
+
+impl Solution {
+    pub fn optimal(x: f64, y: f64) -> Solution {
+        Solution { status: Status::Optimal, point: [x, y] }
+    }
+
+    pub fn infeasible() -> Solution {
+        Solution { status: Status::Infeasible, point: [f64::NAN, f64::NAN] }
+    }
+
+    pub fn objective(&self, p: &Problem) -> f64 {
+        p.objective_at(self.point[0], self.point[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halfplane_contains() {
+        let h = HalfPlane::new(1.0, 0.0, 2.0); // x <= 2
+        assert!(h.contains(1.9, 100.0));
+        assert!(!h.contains(2.1, 0.0));
+        assert!(h.contains(2.0, 0.0)); // boundary within EPS
+    }
+
+    #[test]
+    fn normalization_preserves_geometry() {
+        let h = HalfPlane::new(3.0, 4.0, 10.0).normalized();
+        assert!((h.nx * h.nx + h.ny * h.ny - 1.0).abs() < 1e-12);
+        // Same boundary line: 3x + 4y = 10  <=>  0.6x + 0.8y = 2
+        assert!((h.b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn problem_feasibility_includes_box() {
+        let p = Problem::new(vec![], [1.0, 0.0]);
+        assert!(p.is_feasible_point(0.0, 0.0));
+        assert!(!p.is_feasible_point(M_BIG + 1.0, 0.0));
+    }
+
+    #[test]
+    fn status_codes_roundtrip() {
+        assert_eq!(Status::from_code(0).unwrap(), Status::Optimal);
+        assert_eq!(Status::from_code(1).unwrap(), Status::Infeasible);
+        assert!(Status::from_code(7).is_err());
+    }
+
+    #[test]
+    fn solution_objective() {
+        let p = Problem::new(vec![], [2.0, -1.0]);
+        let s = Solution::optimal(3.0, 4.0);
+        assert!((s.objective(&p) - 2.0).abs() < 1e-12);
+    }
+}

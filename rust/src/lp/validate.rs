@@ -1,0 +1,158 @@
+//! Solution validation: feasibility and optimality certificates used by
+//! tests, the coordinator's (optional) verify mode, and the bench harness's
+//! cross-solver consistency checks.
+
+use super::brute;
+use super::types::{Problem, Solution, Status};
+
+/// Tolerances for cross-solver agreement. The paper (§4) applies a
+/// 5-significant-figure tolerance to reconcile CPU/GPU float accumulation;
+/// we keep an absolute + relative pair in the same spirit.
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerance {
+    pub abs: f64,
+    pub rel: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { abs: 2e-3, rel: 1e-4 }
+    }
+}
+
+impl Tolerance {
+    pub fn close(&self, a: f64, b: f64) -> bool {
+        (a - b).abs() <= self.abs + self.rel * a.abs().max(b.abs())
+    }
+}
+
+/// Why a solution was rejected.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    Ok,
+    /// Claimed optimal but violates a constraint by this much.
+    InfeasiblePoint { violation: f64 },
+    /// Claimed optimal but the reference found a better objective.
+    Suboptimal { got: f64, want: f64 },
+    /// Claimed infeasible but the reference found a feasible point.
+    WronglyInfeasible,
+    /// Claimed optimal but the reference says infeasible.
+    WronglyFeasible,
+}
+
+impl Verdict {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Verdict::Ok)
+    }
+}
+
+/// Cheap check: does the claimed solution satisfy its own constraints?
+pub fn check_feasibility(p: &Problem, s: &Solution) -> Verdict {
+    if s.status != Status::Optimal {
+        return Verdict::Ok; // nothing to check without a reference
+    }
+    let v = p.max_violation(s.point[0], s.point[1]);
+    if v > 2e-3 {
+        Verdict::InfeasiblePoint { violation: v }
+    } else {
+        Verdict::Ok
+    }
+}
+
+/// Full check against the brute-force oracle (O(m^3): tests only).
+pub fn check_against_brute(p: &Problem, s: &Solution, tol: Tolerance) -> Verdict {
+    let reference = brute::solve(p);
+    match (s.status, reference.status) {
+        (Status::Infeasible, Status::Infeasible) => Verdict::Ok,
+        (Status::Infeasible, Status::Optimal) => Verdict::WronglyInfeasible,
+        (Status::Optimal, Status::Infeasible) => Verdict::WronglyFeasible,
+        (Status::Optimal, Status::Optimal) => {
+            if let Verdict::InfeasiblePoint { violation } = check_feasibility(p, s) {
+                return Verdict::InfeasiblePoint { violation };
+            }
+            let got = s.objective(p);
+            let want = reference.objective(p);
+            if got + tol.abs + tol.rel * want.abs().max(1.0) < want {
+                Verdict::Suboptimal { got, want }
+            } else {
+                Verdict::Ok
+            }
+        }
+    }
+}
+
+/// Agreement between two solvers on one problem (status + objective value).
+pub fn agree(p: &Problem, a: &Solution, b: &Solution, tol: Tolerance) -> bool {
+    match (a.status, b.status) {
+        (Status::Optimal, Status::Optimal) => tol.close(a.objective(p), b.objective(p)),
+        (x, y) => x == y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::types::HalfPlane;
+
+    fn unit_square() -> Problem {
+        Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.0, 1.0),
+                HalfPlane::new(-1.0, 0.0, 0.0),
+                HalfPlane::new(0.0, 1.0, 1.0),
+                HalfPlane::new(0.0, -1.0, 0.0),
+            ],
+            [1.0, 1.0],
+        )
+    }
+
+    #[test]
+    fn accepts_true_optimum() {
+        let p = unit_square();
+        let s = Solution::optimal(1.0, 1.0);
+        assert!(check_against_brute(&p, &s, Tolerance::default()).is_ok());
+    }
+
+    #[test]
+    fn rejects_suboptimal() {
+        let p = unit_square();
+        let s = Solution::optimal(0.0, 0.0);
+        match check_against_brute(&p, &s, Tolerance::default()) {
+            Verdict::Suboptimal { got, want } => {
+                assert!(got < want);
+            }
+            v => panic!("expected Suboptimal, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_infeasible_point() {
+        let p = unit_square();
+        let s = Solution::optimal(2.0, 2.0);
+        assert!(matches!(
+            check_against_brute(&p, &s, Tolerance::default()),
+            Verdict::InfeasiblePoint { .. }
+        ));
+    }
+
+    #[test]
+    fn rejects_wrong_infeasibility() {
+        let p = unit_square();
+        let s = Solution::infeasible();
+        assert_eq!(
+            check_against_brute(&p, &s, Tolerance::default()),
+            Verdict::WronglyInfeasible
+        );
+    }
+
+    #[test]
+    fn agree_on_equal_objectives() {
+        let p = unit_square();
+        // Different vertices with the same objective need not agree; use
+        // points with equal objective value.
+        let a = Solution::optimal(1.0, 1.0);
+        let b = Solution::optimal(1.0, 1.0);
+        assert!(agree(&p, &a, &b, Tolerance::default()));
+        assert!(!agree(&p, &a, &Solution::infeasible(), Tolerance::default()));
+    }
+}

@@ -1,0 +1,314 @@
+//! batch-lp2d CLI: the leader entrypoint over the library.
+//!
+//! Subcommands (hand-rolled parsing; the offline vendor set has no clap):
+//!
+//!   info                              -- platform + artifact inventory
+//!   solve    [--batch N] [--m M] ...  -- generate + solve one batch
+//!   serve    [--requests N] ...       -- run the coordinator under load
+//!   crowd    [--agents N] ...         -- crowd simulation end to end
+//!   figures  [--fig 3a|3b|3c|4a|4b|5|7a|7b|imbalance|all]
+//!                                     -- regenerate the paper's figures
+//!
+//! Everything prints TSV or markdown tables suitable for EXPERIMENTS.md.
+
+use std::collections::HashMap;
+
+use batch_lp2d::bench::figures::{self, FigureCtx};
+use batch_lp2d::bench::imbalance;
+use batch_lp2d::coordinator::{Config, Service};
+use batch_lp2d::gen::{self, trace};
+use batch_lp2d::lp::types::Status;
+use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::sim::{Backend, World, WorldParams};
+use batch_lp2d::solvers::batch_cpu::{self, Algo};
+use batch_lp2d::util::{Rng, Timer};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, flags) = parse(&args);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&flags),
+        "solve" => cmd_solve(&flags),
+        "serve" => cmd_serve(&flags),
+        "crowd" => cmd_crowd(&flags),
+        "figures" => cmd_figures(&flags),
+        "help" | "" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "batch-lp2d -- batch 2-D linear programming (Charlton et al., JPDC 2019)\n\
+         \n\
+         usage: batch-lp2d <command> [--flag value]...\n\
+         \n\
+         commands:\n\
+           info                         platform + compiled artifact inventory\n\
+           solve    --batch 1024 --m 64 [--variant rgb|naive|simplex] [--seed S]\n\
+                                        generate and solve one batch, print timing\n\
+           serve    --requests 6000 [--rate 2000] [--max-wait-ms 2]\n\
+                                        run the coordinator under a Poisson trace\n\
+           crowd    --agents 512 --steps 100 [--backend engine|cpu]\n\
+                                        crowd simulation (paper Sec. 5 application)\n\
+           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance [--fast]\n\
+                                        regenerate the paper's figures as tables\n\
+         \n\
+         flags:\n\
+           --artifacts DIR              artifact directory (default: artifacts)"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse(args: &[String]) -> (String, Flags) {
+    let mut cmd = String::new();
+    let mut flags = Flags::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "1".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else if cmd.is_empty() {
+            cmd = a.clone();
+        } else {
+            eprintln!("ignoring stray argument '{a}'");
+        }
+        i += 1;
+    }
+    (cmd, flags)
+}
+
+fn flag<T: std::str::FromStr>(flags: &Flags, name: &str, default: T) -> T {
+    flags
+        .get(name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn artifact_dir(flags: &Flags) -> String {
+    flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn cmd_info(flags: &Flags) -> anyhow::Result<()> {
+    let engine = Engine::new(artifact_dir(flags))?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts ({}):", engine.manifest().dir.display());
+    for b in &engine.manifest().buckets {
+        println!(
+            "  {:<8} batch={:<6} m={:<5} block_b={:<4} chunk={:<4} {}",
+            b.variant.as_str(),
+            b.batch,
+            b.m,
+            b.block_b,
+            b.chunk,
+            b.path.file_name().unwrap().to_string_lossy()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_solve(flags: &Flags) -> anyhow::Result<()> {
+    let batch = flag(flags, "batch", 1024usize);
+    let m = flag(flags, "m", 64usize);
+    let seed = flag(flags, "seed", 2019u64);
+    let variant = match flags.get("variant").map(String::as_str) {
+        None | Some("rgb") => Variant::Rgb,
+        Some("naive") => Variant::Naive,
+        Some("simplex") => Variant::Simplex,
+        Some("ref") => Variant::Ref,
+        Some(v) => anyhow::bail!("unknown variant '{v}'"),
+    };
+    let engine = Engine::new(artifact_dir(flags))?;
+    let mut rng = Rng::new(seed);
+    let problems = gen::independent_batch(&mut rng, batch, m);
+
+    // Warm (compile) then measure.
+    let t = Timer::start();
+    engine.solve(variant, &problems, Some(&mut rng))?;
+    let compile_ms = t.elapsed_ms();
+    let t = Timer::start();
+    let (solutions, timing) = engine.solve(variant, &problems, Some(&mut rng))?;
+    let solve_ms = t.elapsed_ms();
+
+    let infeasible = solutions.iter().filter(|s| s.status == Status::Infeasible).count();
+    println!("variant={} batch={batch} m={m}", variant.as_str());
+    println!("first-call (incl. XLA compile): {compile_ms:.1} ms");
+    println!(
+        "steady-state: {solve_ms:.3} ms  ({:.1} k LPs/s)",
+        batch as f64 / solve_ms
+    );
+    println!(
+        "timing split: pack {:.3} ms | transfer {:.3} ms | execute {:.3} ms | unpack {:.3} ms (mem {:.1}%)",
+        timing.pack_ns as f64 / 1e6,
+        timing.transfer_ns as f64 / 1e6,
+        timing.execute_ns as f64 / 1e6,
+        timing.unpack_ns as f64 / 1e6,
+        100.0 * timing.memory_fraction()
+    );
+    println!("optimal: {}  infeasible: {infeasible}", solutions.len() - infeasible);
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
+    let requests = flag(flags, "requests", 6_000usize);
+    let rate = flag(flags, "rate", 2_000.0f64);
+    let max_wait_ms = flag(flags, "max-wait-ms", 2u64);
+    let seed = flag(flags, "seed", 7u64);
+
+    let config = Config {
+        max_wait: std::time::Duration::from_millis(max_wait_ms),
+        ..Config::default()
+    };
+    let service = Service::start(artifact_dir(flags), config)?;
+
+    let mut rng = Rng::new(seed);
+    let tp = trace::TraceParams { rate, m_lo: 8, m_hi: 64, infeasible_frac: 0.02 };
+    let reqs = trace::poisson_trace(&mut rng, requests, tp);
+
+    println!("serving {requests} requests at ~{rate:.0}/s (open loop)...");
+    let t0 = Timer::start();
+    let mut tickets = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        // Open-loop pacing.
+        while t0.elapsed_ns() < r.at_ns {
+            std::hint::spin_loop();
+        }
+        tickets.push(service.submit(r.problem).map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    let mut infeasible = 0usize;
+    for t in tickets {
+        if t.wait()?.status == Status::Infeasible {
+            infeasible += 1;
+        }
+    }
+    let wall_s = t0.elapsed_ns() as f64 / 1e9;
+    let snap = service.metrics().snapshot();
+    println!("done in {wall_s:.2}s -> {:.0} solved LPs/s", requests as f64 / wall_s);
+    println!(
+        "batches: {}  mean occupancy: {:.1}%  infeasible: {infeasible}",
+        snap.batches,
+        100.0 * snap.mean_occupancy
+    );
+    println!(
+        "queue wait p50/p99: {:.2}/{:.2} ms   batch exec p50/p99: {:.2}/{:.2} ms",
+        snap.queue_wait_p50_ns as f64 / 1e6,
+        snap.queue_wait_p99_ns as f64 / 1e6,
+        snap.exec_p50_ns as f64 / 1e6,
+        snap.exec_p99_ns as f64 / 1e6
+    );
+    println!("exec memory fraction: {:.1}%", 100.0 * snap.memory_fraction());
+    service.shutdown();
+    Ok(())
+}
+
+fn cmd_crowd(flags: &Flags) -> anyhow::Result<()> {
+    let agents = flag(flags, "agents", 512usize);
+    let steps = flag(flags, "steps", 100usize);
+    let seed = flag(flags, "seed", 42u64);
+    let backend_name = flags.get("backend").cloned().unwrap_or_else(|| "engine".into());
+
+    let mut rng = Rng::new(seed);
+    let mut world = World::crossing_groups(&mut rng, agents, WorldParams::default());
+
+    let engine;
+    let backend = match backend_name.as_str() {
+        "engine" => {
+            engine = Engine::new(artifact_dir(flags))?;
+            Backend::Engine { engine: &engine, variant: Variant::Rgb }
+        }
+        "cpu" => Backend::Cpu { algo: Algo::Seidel, threads: batch_cpu::default_threads() },
+        other => anyhow::bail!("unknown backend '{other}' (engine|cpu)"),
+    };
+
+    println!("crowd: {agents} agents, {steps} steps, backend={backend_name}");
+    let t0 = Timer::start();
+    let mut total_lps = 0usize;
+    let mut total_infeasible = 0usize;
+    for step in 0..steps {
+        let st = world.step(&backend, &mut rng)?;
+        total_lps += st.lps;
+        total_infeasible += st.infeasible;
+        if step % 20 == 0 {
+            println!(
+                "  step {step:>4}: mean_m={:.1} solve={:.2} ms arrived={} goal_dist={:.2}",
+                st.mean_m,
+                st.solve_ns as f64 / 1e6,
+                st.arrived,
+                world.mean_goal_distance()
+            );
+        }
+    }
+    let wall_s = t0.elapsed_ns() as f64 / 1e9;
+    println!(
+        "done: {:.2}s wall, {:.1} steps/s, {:.0} LPs/s, infeasible {total_infeasible}",
+        wall_s,
+        steps as f64 / wall_s,
+        total_lps as f64 / wall_s
+    );
+    Ok(())
+}
+
+fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
+    if flags.contains_key("fast") {
+        std::env::set_var("BATCH_LP2D_BENCH_FAST", "1");
+    }
+    let which = flags.get("fig").cloned().unwrap_or_else(|| "all".to_string());
+    let engine = Engine::new(artifact_dir(flags))?;
+    let ctx = FigureCtx::new(&engine);
+
+    let emit = |name: &str, table: batch_lp2d::util::Table| {
+        println!("\n## Figure {name}\n");
+        print!("{}", table.to_markdown());
+    };
+
+    let all = which == "all";
+    if all || which == "imbalance" {
+        emit("1/2 (imbalance)", imbalance::imbalance_table(3, &[16, 64, 256], 8));
+    }
+    if all || which == "3a" {
+        emit("3a (time vs size, batch 128)", figures::fig3(&ctx, 128, figures::SIZES));
+    }
+    if all || which == "3b" {
+        emit("3b (time vs size, batch 2048)", figures::fig3(&ctx, 2048, figures::SIZES));
+    }
+    if all || which == "3c" {
+        emit("3c (time vs size, batch 4096)", figures::fig3(&ctx, 4096, figures::SIZES));
+    }
+    if all || which == "4a" {
+        emit("4a (time vs batch, m 64)", figures::fig4(&ctx, 64, figures::BATCHES));
+    }
+    if all || which == "4b" {
+        emit("4b (time vs batch, m 256)", figures::fig4(&ctx, 256, figures::BATCHES));
+    }
+    if all || which == "5" {
+        emit(
+            "5 (memory fraction)",
+            figures::fig5(&ctx, &[128, 512, 2048], &[16, 64, 256])?,
+        );
+    }
+    if all || which == "7a" {
+        emit("7a (naive vs rgb, batch 1024)", figures::fig7(&ctx, 1024, figures::SIZES)?);
+    }
+    if all || which == "7b" {
+        emit("7b (naive vs rgb, batch 4096)", figures::fig7(&ctx, 4096, figures::SIZES)?);
+    }
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! PJRT execution engine: loads AOT HLO-text modules, compiles them once on
+//! the CPU PJRT client, caches the executables, and runs packed batches.
+//!
+//! The per-call wall time is split into pack / transfer(h2d literal build) /
+//! execute / unpack — the decomposition Figure 5 reports ("proportion of
+//! time spent copying memory compared to total execution time").
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::lp::types::{Problem, Solution};
+use crate::runtime::manifest::{Bucket, Manifest, Variant};
+use crate::runtime::pack::{pack_into, unpack, PackedBatch};
+use crate::util::{Rng, Timer};
+
+/// Timing split of one executed batch, nanoseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecTiming {
+    /// Building the packed host buffers (incl. constraint shuffle).
+    pub pack_ns: u64,
+    /// Host literal construction (the h2d staging the CPU plugin performs).
+    pub transfer_ns: u64,
+    /// PJRT execute + device->host literal sync.
+    pub execute_ns: u64,
+    /// Decoding literals into `Solution`s.
+    pub unpack_ns: u64,
+}
+
+impl ExecTiming {
+    pub fn total_ns(&self) -> u64 {
+        self.pack_ns + self.transfer_ns + self.execute_ns + self.unpack_ns
+    }
+
+    /// Fraction of wall time spent managing memory rather than computing —
+    /// Figure 5's y-quantity.
+    pub fn memory_fraction(&self) -> f64 {
+        let total = self.total_ns().max(1) as f64;
+        (self.pack_ns + self.transfer_ns + self.unpack_ns) as f64 / total
+    }
+
+    pub fn accumulate(&mut self, other: &ExecTiming) {
+        self.pack_ns += other.pack_ns;
+        self.transfer_ns += other.transfer_ns;
+        self.execute_ns += other.execute_ns;
+        self.unpack_ns += other.unpack_ns;
+    }
+}
+
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq)]
+struct Key {
+    variant: Variant,
+    batch: usize,
+    m: usize,
+}
+
+/// The engine: a PJRT CPU client plus a compile-once executable cache.
+///
+/// Thread model: the `xla` crate's client wraps a non-atomic `Rc` and raw
+/// PJRT pointers, so `Engine` is **not Sync** and all PJRT calls must come
+/// from the thread currently owning it. It *is* safe to move wholesale to
+/// another thread (`unsafe impl Send` below): every internal `Rc` clone is
+/// confined to this struct (`load` hands out no handles), so transferring
+/// ownership transfers the whole reference graph with it. The coordinator
+/// exploits exactly that: each executor thread owns its own `Engine`.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<HashMap<Key, xla::PjRtLoadedExecutable>>,
+    /// Reused packing buffers (steady-state solve allocates nothing).
+    scratch: RefCell<PackedBatch>,
+    /// Reused input literals per (batch, m) shape (avoids re-allocating the
+    /// multi-MB host staging buffers on every call).
+    literals: RefCell<HashMap<(usize, usize), (xla::Literal, xla::Literal)>>,
+}
+
+// SAFETY: see the struct docs — all Rc/raw-pointer state is confined to the
+// struct; nothing hands out clones, so a move transfers every reference.
+unsafe impl Send for Engine {}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory (reads manifest.tsv).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            scratch: RefCell::new(PackedBatch {
+                batch: 0,
+                m: 0,
+                lines: Vec::new(),
+                obj: Vec::new(),
+                used: 0,
+            }),
+            literals: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure a bucket's module is compiled and cached; runs the provided
+    /// closure with a borrow of the executable (handles never escape, which
+    /// is what keeps the `Send` justification sound).
+    fn with_executable<R>(
+        &self,
+        bucket: &Bucket,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> anyhow::Result<R>,
+    ) -> anyhow::Result<R> {
+        let key = Key { variant: bucket.variant, batch: bucket.batch, m: bucket.m };
+        if !self.executables.borrow().contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&bucket.path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", bucket.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", bucket.path.display()))?;
+            self.executables.borrow_mut().insert(key, exe);
+        }
+        let cache = self.executables.borrow();
+        f(cache.get(&key).expect("just inserted"))
+    }
+
+    /// Compile a bucket's module into the cache (no execution).
+    pub fn load(&self, bucket: &Bucket) -> anyhow::Result<()> {
+        self.with_executable(bucket, |_| Ok(()))
+    }
+
+    /// Warm the executable cache for every bucket of a variant.
+    pub fn warmup(&self, variant: Variant) -> anyhow::Result<usize> {
+        let buckets: Vec<Bucket> =
+            self.manifest.of_variant(variant).into_iter().cloned().collect();
+        for b in &buckets {
+            self.load(b)?;
+        }
+        Ok(buckets.len())
+    }
+
+    /// Execute a packed batch on a bucket's executable.
+    pub fn execute_packed(
+        &self,
+        bucket: &Bucket,
+        pb: &PackedBatch,
+    ) -> anyhow::Result<(Vec<Solution>, ExecTiming)> {
+        anyhow::ensure!(
+            pb.batch == bucket.batch && pb.m == bucket.m,
+            "packed shape ({}, {}) does not match bucket ({}, {})",
+            pb.batch,
+            pb.m,
+            bucket.batch,
+            bucket.m
+        );
+        let mut timing = ExecTiming::default();
+
+        // Host -> device staging: copy into reused per-shape literals
+        // (create-once + copy_raw_from beats re-allocating the multi-MB
+        // staging buffers every call; EXPERIMENTS.md SPerf).
+        let t = Timer::start();
+        {
+            let mut lits = self.literals.borrow_mut();
+            let (lines_lit, obj_lit) =
+                lits.entry((pb.batch, pb.m)).or_insert_with(|| {
+                    (
+                        xla::Literal::create_from_shape(
+                            xla::PrimitiveType::F32,
+                            &[pb.batch, pb.m, 4],
+                        ),
+                        xla::Literal::create_from_shape(
+                            xla::PrimitiveType::F32,
+                            &[pb.batch, 2],
+                        ),
+                    )
+                });
+            lines_lit
+                .copy_raw_from(&pb.lines)
+                .map_err(|e| anyhow::anyhow!("lines literal: {e:?}"))?;
+            obj_lit
+                .copy_raw_from(&pb.obj)
+                .map_err(|e| anyhow::anyhow!("obj literal: {e:?}"))?;
+        }
+        timing.transfer_ns = t.elapsed_ns();
+
+        // Execute and sync back.
+        let t = Timer::start();
+        let lits = self.literals.borrow();
+        let (lines_lit, obj_lit) = lits.get(&(pb.batch, pb.m)).expect("just inserted");
+        let out = self.with_executable(bucket, |exe| {
+            let result = exe
+                .execute::<&xla::Literal>(&[lines_lit, obj_lit])
+                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+            result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))
+        })?;
+        drop(lits);
+        timing.execute_ns = t.elapsed_ns();
+
+        // Decode.
+        let t = Timer::start();
+        let (sol_lit, status_lit) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("expected 2-tuple output: {e:?}"))?;
+        let sol: Vec<f32> = sol_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("solution literal: {e:?}"))?;
+        let status: Vec<i32> = status_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("status literal: {e:?}"))?;
+        let solutions = unpack(&sol, &status, pb.used)?;
+        timing.unpack_ns = t.elapsed_ns();
+
+        Ok((solutions, timing))
+    }
+
+    /// Pack + execute a slice of problems on the smallest fitting bucket.
+    ///
+    /// `rng`: per-problem constraint shuffle (Seidel randomization); pass
+    /// None for reproducible unshuffled runs (e.g. numeric comparisons).
+    pub fn solve(
+        &self,
+        variant: Variant,
+        problems: &[Problem],
+        mut rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Solution>, ExecTiming)> {
+        anyhow::ensure!(!problems.is_empty(), "empty problem slice");
+        let m_max = problems.iter().map(|p| p.m()).max().unwrap();
+        let bucket = self
+            .manifest
+            .fit(variant, problems.len(), m_max)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {} bucket fits n={} m={} (max m {:?})",
+                    variant.as_str(),
+                    problems.len(),
+                    m_max,
+                    self.manifest.max_m(variant)
+                )
+            })?
+            .clone();
+
+        // Reuse the engine's scratch buffers: steady-state packing performs
+        // no allocation (EXPERIMENTS.md §Perf).
+        let t = Timer::start();
+        let mut pb = self.scratch.borrow_mut();
+        pack_into(problems, bucket.batch, bucket.m, rng.as_deref_mut(), &mut pb)?;
+        let pack_ns = t.elapsed_ns();
+
+        let (solutions, mut timing) = self.execute_packed(&bucket, &pb)?;
+        timing.pack_ns = pack_ns;
+        Ok((solutions, timing))
+    }
+}
+
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_memory_fraction() {
+        let t = ExecTiming { pack_ns: 10, transfer_ns: 20, execute_ns: 60, unpack_ns: 10 };
+        assert_eq!(t.total_ns(), 100);
+        assert!((t.memory_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timing_accumulate() {
+        let mut a = ExecTiming { pack_ns: 1, transfer_ns: 2, execute_ns: 3, unpack_ns: 4 };
+        a.accumulate(&ExecTiming { pack_ns: 1, transfer_ns: 1, execute_ns: 1, unpack_ns: 1 });
+        assert_eq!(a.total_ns(), 14);
+    }
+
+}

@@ -1,0 +1,181 @@
+//! Artifact manifest: which AOT-compiled (variant, batch, m) buckets exist.
+//!
+//! `python -m compile.aot` (run once by `make artifacts`) writes
+//! `artifacts/manifest.tsv`; this module parses it and answers bucket
+//! queries for the router. Python never runs again after that — the Rust
+//! binary is self-contained.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::table::{column, parse_tsv};
+
+/// Kernel variant names as emitted by the AOT step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Variant {
+    /// Optimized RGB (work-unit chunking + tile early exit).
+    Rgb,
+    /// NaiveRGB (full-plane lockstep; Fig 7 baseline).
+    Naive,
+    /// Pure-jnp reference (integration tests).
+    Ref,
+    /// Batched two-phase simplex (Gurung & Ray comparator).
+    Simplex,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> anyhow::Result<Variant> {
+        match s {
+            "rgb" => Ok(Variant::Rgb),
+            "naive" => Ok(Variant::Naive),
+            "ref" => Ok(Variant::Ref),
+            "simplex" => Ok(Variant::Simplex),
+            other => anyhow::bail!("unknown variant '{other}'"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Rgb => "rgb",
+            Variant::Naive => "naive",
+            Variant::Ref => "ref",
+            Variant::Simplex => "simplex",
+        }
+    }
+}
+
+/// One AOT bucket: a compiled module solving exactly (batch, m)-shaped input.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub variant: Variant,
+    pub batch: usize,
+    pub m: usize,
+    pub block_b: usize,
+    pub chunk: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest with bucket lookup.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<Bucket>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (tests use this directly).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let (header, rows) = parse_tsv(text)?;
+        let c_variant = column(&header, "variant")?;
+        let c_batch = column(&header, "batch")?;
+        let c_m = column(&header, "m")?;
+        let c_block = column(&header, "block_b")?;
+        let c_chunk = column(&header, "chunk")?;
+        let c_file = column(&header, "file")?;
+
+        let mut buckets = Vec::with_capacity(rows.len());
+        for row in rows {
+            buckets.push(Bucket {
+                variant: Variant::parse(&row[c_variant])?,
+                batch: row[c_batch].parse()?,
+                m: row[c_m].parse()?,
+                block_b: row[c_block].parse()?,
+                chunk: row[c_chunk].parse()?,
+                path: dir.join(&row[c_file]),
+            });
+        }
+        Ok(Manifest { dir, buckets })
+    }
+
+    /// All buckets of a variant, sorted by (m, batch).
+    pub fn of_variant(&self, v: Variant) -> Vec<&Bucket> {
+        let mut out: Vec<&Bucket> = self.buckets.iter().filter(|b| b.variant == v).collect();
+        out.sort_by_key(|b| (b.m, b.batch));
+        out
+    }
+
+    /// Exact bucket lookup.
+    pub fn find(&self, v: Variant, batch: usize, m: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.variant == v && b.batch == batch && b.m == m)
+    }
+
+    /// Smallest bucket of `v` that fits a problem of `m` constraints and a
+    /// group of `n` problems (used by the router; both dims round up).
+    pub fn fit(&self, v: Variant, n: usize, m: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.variant == v && b.m >= m && b.batch >= n)
+            .min_by_key(|b| (b.m, b.batch))
+    }
+
+    /// The largest m any bucket of `v` supports.
+    pub fn max_m(&self, v: Variant) -> Option<usize> {
+        self.buckets.iter().filter(|b| b.variant == v).map(|b| b.m).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                          rgb\t256\t32\t128\t32\trgb_b256_m32.hlo.txt\n\
+                          rgb\t1024\t64\t128\t64\trgb_b1024_m64.hlo.txt\n\
+                          naive\t256\t32\t128\t32\tnaive_b256_m32.hlo.txt\n";
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap()
+    }
+
+    #[test]
+    fn parses_rows() {
+        let m = sample();
+        assert_eq!(m.buckets.len(), 3);
+        assert_eq!(m.buckets[0].variant, Variant::Rgb);
+        assert_eq!(m.buckets[0].path, PathBuf::from("/tmp/a/rgb_b256_m32.hlo.txt"));
+    }
+
+    #[test]
+    fn find_exact() {
+        let m = sample();
+        assert!(m.find(Variant::Rgb, 256, 32).is_some());
+        assert!(m.find(Variant::Rgb, 256, 64).is_none());
+    }
+
+    #[test]
+    fn fit_rounds_up() {
+        let m = sample();
+        let b = m.fit(Variant::Rgb, 100, 33).unwrap();
+        assert_eq!((b.batch, b.m), (1024, 64));
+        assert!(m.fit(Variant::Rgb, 100, 65).is_none());
+        assert!(m.fit(Variant::Naive, 300, 16).is_none());
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in [Variant::Rgb, Variant::Naive, Variant::Ref, Variant::Simplex] {
+            assert_eq!(Variant::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(Variant::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn max_m() {
+        assert_eq!(sample().max_m(Variant::Rgb), Some(64));
+        assert_eq!(sample().max_m(Variant::Simplex), None);
+    }
+}

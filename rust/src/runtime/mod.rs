@@ -1,0 +1,28 @@
+//! Runtime layer: the bridge from the Rust coordinator to the AOT-compiled
+//! XLA modules (PJRT CPU client; see /opt/xla-example for the pattern).
+//!
+//! * [`manifest`] -- which (variant, batch, m) buckets exist on disk.
+//! * [`pack`]     -- problems <-> the kernels' packed wire format.
+//! * [`engine`]   -- compile-once executable cache + timed execution.
+
+pub mod engine;
+pub mod manifest;
+pub mod pack;
+
+pub use engine::{Engine, ExecTiming};
+pub use manifest::{Bucket, Manifest, Variant};
+pub use pack::{pack, unpack, PackedBatch};
+
+/// Locate the artifact directory: `$BATCH_LP2D_ARTIFACTS`, then
+/// `./artifacts`, then `<repo>/artifacts` (compile-time path). Examples and
+/// benches use this so they work from any working directory.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("BATCH_LP2D_ARTIFACTS") {
+        return dir.into();
+    }
+    let local = std::path::PathBuf::from("artifacts");
+    if local.join("manifest.tsv").exists() {
+        return local;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

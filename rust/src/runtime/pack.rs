@@ -1,0 +1,185 @@
+//! Packing problems into the kernels' (B, M, 4)/(B, 2) wire format and
+//! unpacking solutions, including the host-side randomization (per-problem
+//! constraint shuffle) that Seidel's algorithm requires.
+//!
+//! Layout notes (DESIGN.md §7): constraints are stored as a float4
+//! `[nx, ny, b, valid]` so one lane-quad load fetches a whole constraint —
+//! the paper's vectorized-load optimization; padding rows carry valid=0 and
+//! are masked inside the kernel.
+
+use crate::lp::types::{Problem, Solution, Status};
+use crate::util::Rng;
+
+/// A packed batch ready for the PJRT executable.
+#[derive(Clone, Debug)]
+pub struct PackedBatch {
+    pub batch: usize,
+    pub m: usize,
+    /// (B, M, 4) row-major f32.
+    pub lines: Vec<f32>,
+    /// (B, 2) row-major f32.
+    pub obj: Vec<f32>,
+    /// How many of the B slots hold real problems (rest are padding).
+    pub used: usize,
+}
+
+/// Pack up to `batch` problems into a (batch, m) bucket.
+///
+/// * Problems are truncated nowhere: callers guarantee `p.m() <= m`
+///   (checked). Missing slots are filled with a vacuous problem.
+/// * With `shuffle`, each problem's constraint order is permuted via a
+///   per-problem RNG stream forked from `rng`.
+pub fn pack(
+    problems: &[Problem],
+    batch: usize,
+    m: usize,
+    rng: Option<&mut Rng>,
+) -> anyhow::Result<PackedBatch> {
+    let mut pb = PackedBatch { batch: 0, m: 0, lines: Vec::new(), obj: Vec::new(), used: 0 };
+    pack_into(problems, batch, m, rng, &mut pb)?;
+    Ok(pb)
+}
+
+/// `pack` into a reused [`PackedBatch`] (hot path: the engine keeps one as
+/// scratch so steady-state packing performs no allocation).
+pub fn pack_into(
+    problems: &[Problem],
+    batch: usize,
+    m: usize,
+    rng: Option<&mut Rng>,
+    out: &mut PackedBatch,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        problems.len() <= batch,
+        "{} problems exceed bucket batch {batch}",
+        problems.len()
+    );
+    out.batch = batch;
+    out.m = m;
+    out.used = problems.len();
+    out.lines.clear();
+    out.lines.resize(batch * m * 4, 0.0);
+    out.obj.clear();
+    out.obj.resize(batch * 2, 0.0);
+    let lines = &mut out.lines;
+    let obj = &mut out.obj;
+    let mut rng = rng;
+    let mut perm_buf: Vec<u32> = Vec::new();
+
+    for (i, p) in problems.iter().enumerate() {
+        anyhow::ensure!(
+            p.m() <= m,
+            "problem {i} has {} constraints, bucket m is {m}",
+            p.m()
+        );
+        let perm: Option<&[u32]> = match rng.as_deref_mut() {
+            Some(r) => {
+                r.permute_into(&mut perm_buf, p.m());
+                Some(&perm_buf)
+            }
+            None => None,
+        };
+        let base = i * m * 4;
+        for (slot, k) in (0..p.m()).enumerate() {
+            let src = perm.map_or(k, |pm| pm[k] as usize);
+            let h = p.constraints[src].normalized();
+            let off = base + slot * 4;
+            lines[off] = h.nx as f32;
+            lines[off + 1] = h.ny as f32;
+            lines[off + 2] = h.b as f32;
+            lines[off + 3] = 1.0;
+        }
+        obj[i * 2] = p.obj[0] as f32;
+        obj[i * 2 + 1] = p.obj[1] as f32;
+    }
+    // Padding problems keep all-zero constraints (valid=0) and a unit
+    // objective so their solve is trivially the box corner.
+    for i in problems.len()..batch {
+        obj[i * 2] = 1.0;
+    }
+    Ok(())
+}
+
+/// Unpack kernel outputs for the first `used` slots.
+pub fn unpack(sol: &[f32], status: &[i32], used: usize) -> anyhow::Result<Vec<Solution>> {
+    anyhow::ensure!(sol.len() >= used * 2, "solution buffer too short");
+    anyhow::ensure!(status.len() >= used, "status buffer too short");
+    let mut out = Vec::with_capacity(used);
+    for i in 0..used {
+        let st = Status::from_code(status[i])?;
+        out.push(match st {
+            Status::Optimal => Solution::optimal(sol[i * 2] as f64, sol[i * 2 + 1] as f64),
+            Status::Infeasible => Solution::infeasible(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::lp::types::HalfPlane;
+
+    #[test]
+    fn pack_layout_no_shuffle() {
+        let p = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0)], [0.0, 1.0]);
+        let pb = pack(&[p], 2, 3, None).unwrap();
+        assert_eq!(pb.lines.len(), 2 * 3 * 4);
+        // First constraint row.
+        assert_eq!(&pb.lines[0..4], &[1.0, 0.0, 2.0, 1.0]);
+        // Its padding rows are invalid.
+        assert_eq!(pb.lines[4 + 3], 0.0);
+        assert_eq!(pb.lines[8 + 3], 0.0);
+        // Second (padding) problem: all invalid, unit objective.
+        assert!(pb.lines[12..24].iter().all(|&v| v == 0.0));
+        assert_eq!(pb.obj, vec![0.0, 1.0, 1.0, 0.0]);
+        assert_eq!(pb.used, 1);
+    }
+
+    #[test]
+    fn shuffle_keeps_constraint_set() {
+        let mut rng = Rng::new(3);
+        let p = gen::feasible(&mut rng, 8);
+        let mut shuffle_rng = Rng::new(7);
+        let pb = pack(&[p.clone()], 1, 8, Some(&mut shuffle_rng)).unwrap();
+        // Collect packed rows and check it is a permutation of the inputs.
+        let mut packed: Vec<[f32; 3]> = (0..8)
+            .map(|k| [pb.lines[k * 4], pb.lines[k * 4 + 1], pb.lines[k * 4 + 2]])
+            .collect();
+        let mut orig: Vec<[f32; 3]> = p
+            .constraints
+            .iter()
+            .map(|h| {
+                let n = h.normalized();
+                [n.nx as f32, n.ny as f32, n.b as f32]
+            })
+            .collect();
+        let key = |r: &[f32; 3]| (r[0].to_bits(), r[1].to_bits(), r[2].to_bits());
+        packed.sort_by_key(key);
+        orig.sort_by_key(key);
+        assert_eq!(packed, orig);
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let mut rng = Rng::new(1);
+        let p = gen::feasible(&mut rng, 10);
+        assert!(pack(&[p.clone()], 1, 8, None).is_err());
+        assert!(pack(&[p.clone(), p], 1, 16, None).is_err());
+    }
+
+    #[test]
+    fn unpack_statuses() {
+        let sol = vec![1.0f32, 2.0, 3.0, 4.0];
+        let status = vec![0i32, 1];
+        let out = unpack(&sol, &status, 2).unwrap();
+        assert_eq!(out[0], Solution::optimal(1.0, 2.0));
+        assert_eq!(out[1].status, Status::Infeasible);
+    }
+
+    #[test]
+    fn unpack_rejects_bad_code() {
+        assert!(unpack(&[0.0, 0.0], &[9], 1).is_err());
+    }
+}

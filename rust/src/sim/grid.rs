@@ -1,0 +1,118 @@
+//! Uniform-grid neighbor search for the crowd simulation.
+//!
+//! Cell size equals the interaction radius, so each query touches at most
+//! the 3x3 cell neighborhood — the standard O(n) broad phase used by
+//! GPU crowd simulators (and by the paper's pedestrian application, §5).
+
+use std::collections::HashMap;
+
+/// Spatial hash over agent positions.
+pub struct Grid {
+    cell: f64,
+    map: HashMap<(i32, i32), Vec<u32>>,
+}
+
+impl Grid {
+    /// Build from positions with the given cell size (= interaction radius).
+    pub fn build(positions: &[[f64; 2]], cell: f64) -> Grid {
+        assert!(cell > 0.0);
+        let mut map: HashMap<(i32, i32), Vec<u32>> = HashMap::new();
+        for (i, p) in positions.iter().enumerate() {
+            map.entry(Self::key(p, cell)).or_default().push(i as u32);
+        }
+        Grid { cell, map }
+    }
+
+    #[inline]
+    fn key(p: &[f64; 2], cell: f64) -> (i32, i32) {
+        ((p[0] / cell).floor() as i32, (p[1] / cell).floor() as i32)
+    }
+
+    /// Indices of agents within `radius` of agent `i` (excluding `i`),
+    /// appended to `out` with their squared distances.
+    pub fn neighbors_of(
+        &self,
+        i: usize,
+        positions: &[[f64; 2]],
+        radius: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
+        let p = positions[i];
+        let (cx, cy) = Self::key(&p, self.cell);
+        let r2 = radius * radius;
+        let reach = (radius / self.cell).ceil() as i32;
+        for dx in -reach..=reach {
+            for dy in -reach..=reach {
+                if let Some(ids) = self.map.get(&(cx + dx, cy + dy)) {
+                    for &j in ids {
+                        if j as usize == i {
+                            continue;
+                        }
+                        let q = positions[j as usize];
+                        let (ex, ey) = (q[0] - p[0], q[1] - p[1]);
+                        let d2 = ex * ex + ey * ey;
+                        if d2 <= r2 {
+                            out.push((j, d2));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_close_pairs_only() {
+        let pos = vec![[0.0, 0.0], [0.5, 0.0], [10.0, 10.0]];
+        let g = Grid::build(&pos, 1.0);
+        let mut out = Vec::new();
+        g.neighbors_of(0, &pos, 1.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 1);
+        assert!((out[0].1 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn excludes_self() {
+        let pos = vec![[0.0, 0.0]];
+        let g = Grid::build(&pos, 1.0);
+        let mut out = Vec::new();
+        g.neighbors_of(0, &pos, 5.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn radius_larger_than_cell() {
+        let pos = vec![[0.0, 0.0], [2.5, 0.0]];
+        let g = Grid::build(&pos, 1.0);
+        let mut out = Vec::new();
+        g.neighbors_of(0, &pos, 3.0, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn symmetric_neighborhoods() {
+        let pos = vec![[0.0, 0.0], [0.9, 0.0], [0.0, 0.9], [-0.9, 0.0]];
+        let g = Grid::build(&pos, 1.0);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        g.neighbors_of(0, &pos, 1.0, &mut a);
+        g.neighbors_of(1, &pos, 1.0, &mut b);
+        assert!(a.iter().any(|&(j, _)| j == 1));
+        assert!(b.iter().any(|&(j, _)| j == 0));
+    }
+
+    #[test]
+    fn negative_coordinates() {
+        let pos = vec![[-0.1, -0.1], [0.1, 0.1]];
+        let g = Grid::build(&pos, 1.0);
+        let mut out = Vec::new();
+        g.neighbors_of(0, &pos, 1.0, &mut out);
+        assert_eq!(out.len(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Crowd-simulation workload: the paper's motivating application (§1, §5).
+//!
+//! * [`grid`]  -- uniform-grid neighbor broad phase.
+//! * [`avoid`] -- per-neighbor velocity half-planes (linearized velocity
+//!   obstacles) and the per-agent LP.
+//! * [`world`] -- the stepping loop over a pluggable batch-solve backend
+//!   (CPU baseline or the PJRT RGB path).
+
+pub mod avoid;
+pub mod grid;
+pub mod world;
+
+pub use avoid::AvoidParams;
+pub use world::{Backend, StepStats, World, WorldParams};

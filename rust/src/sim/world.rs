@@ -1,0 +1,296 @@
+//! Crowd-simulation world: agents with goals, per-step batch LP solving.
+//!
+//! Each step (the paper's §5 loop):
+//!   1. broad phase: uniform-grid neighbor query per agent;
+//!   2. build one velocity LP per agent (sim::avoid);
+//!   3. solve the whole batch — through the PJRT engine (the RGB path) or
+//!      the multicore CPU baseline — "a batch of LPs, one for each person";
+//!   4. integrate positions with the new velocities.
+//!
+//! Infeasible/degenerate LPs fall back to v = 0 ("additional computation is
+//! required due to not guaranteeing LPs to be feasible", §5).
+
+use crate::lp::types::{Problem, Solution, Status};
+use crate::runtime::{Engine, Variant};
+use crate::sim::avoid::{build_lp, AvoidParams};
+use crate::sim::grid::Grid;
+use crate::solvers::batch_cpu::{self, Algo};
+use crate::util::{Rng, Timer};
+
+/// Which solver runs the per-step batch.
+pub enum Backend<'a> {
+    /// Multicore CPU baseline (the paper's mGLPK-analog).
+    Cpu { algo: Algo, threads: usize },
+    /// AOT kernels through the PJRT engine (the RGB path).
+    Engine { engine: &'a Engine, variant: Variant },
+}
+
+/// World configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WorldParams {
+    pub avoid: AvoidParams,
+    /// Neighbor interaction radius (grid cell size).
+    pub neighbor_radius: f64,
+    /// Cap on neighbors per agent => cap on LP size (bucket bound - 4).
+    pub max_neighbors: usize,
+    /// Integration step, seconds.
+    pub dt: f64,
+    /// Goal capture distance.
+    pub goal_eps: f64,
+}
+
+impl Default for WorldParams {
+    fn default() -> Self {
+        WorldParams {
+            avoid: AvoidParams::default(),
+            neighbor_radius: 4.0,
+            max_neighbors: 12,
+            dt: 0.1,
+            goal_eps: 0.25,
+        }
+    }
+}
+
+/// Per-step statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub lps: usize,
+    pub infeasible: usize,
+    pub max_m: usize,
+    pub mean_m: f64,
+    pub build_ns: u64,
+    pub solve_ns: u64,
+    pub integrate_ns: u64,
+    pub arrived: usize,
+}
+
+/// The simulation state.
+pub struct World {
+    pub params: WorldParams,
+    pub positions: Vec<[f64; 2]>,
+    pub velocities: Vec<[f64; 2]>,
+    pub goals: Vec<[f64; 2]>,
+    scratch_neighbors: Vec<(u32, f64)>,
+    step_count: u64,
+}
+
+impl World {
+    pub fn new(params: WorldParams, positions: Vec<[f64; 2]>, goals: Vec<[f64; 2]>) -> World {
+        assert_eq!(positions.len(), goals.len());
+        let n = positions.len();
+        World {
+            params,
+            positions,
+            velocities: vec![[0.0, 0.0]; n],
+            goals,
+            scratch_neighbors: Vec::new(),
+            step_count: 0,
+        }
+    }
+
+    /// Two opposing groups crossing a corridor — the classic stress test
+    /// that makes avoidance constraints bind.
+    pub fn crossing_groups(rng: &mut Rng, n: usize, params: WorldParams) -> World {
+        let mut positions = Vec::with_capacity(n);
+        let mut goals = Vec::with_capacity(n);
+        let half = n / 2;
+        let rows = (half as f64).sqrt().ceil() as usize;
+        let spacing = 1.2;
+        for i in 0..n {
+            let (side, k) = if i < half { (-1.0, i) } else { (1.0, i - half) };
+            let (row, col) = (k / rows, k % rows);
+            let x = side * (12.0 + row as f64 * spacing) + 0.2 * (rng.f64() - 0.5);
+            let y = (col as f64 - rows as f64 / 2.0) * spacing + 0.2 * (rng.f64() - 0.5);
+            positions.push([x, y]);
+            goals.push([-side * 14.0, y]);
+        }
+        World::new(params, positions, goals)
+    }
+
+    pub fn len(&self) -> usize {
+        self.positions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positions.is_empty()
+    }
+
+    /// Build each agent's velocity LP for the current configuration.
+    pub fn build_problems(&mut self) -> Vec<Problem> {
+        let n = self.len();
+        let grid = Grid::build(&self.positions, self.params.neighbor_radius);
+        let mut problems = Vec::with_capacity(n);
+        for i in 0..n {
+            grid.neighbors_of(
+                i,
+                &self.positions,
+                self.params.neighbor_radius,
+                &mut self.scratch_neighbors,
+            );
+            // Nearest-first cap keeps the LP inside the compiled bucket.
+            self.scratch_neighbors
+                .sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            self.scratch_neighbors.truncate(self.params.max_neighbors);
+
+            let p = self.positions[i];
+            let rel: Vec<([f64; 2], f64)> = self
+                .scratch_neighbors
+                .iter()
+                .map(|&(j, d2)| {
+                    let q = self.positions[j as usize];
+                    ([q[0] - p[0], q[1] - p[1]], d2.sqrt())
+                })
+                .collect();
+
+            let g = self.goals[i];
+            let (gx, gy) = (g[0] - p[0], g[1] - p[1]);
+            let dist = (gx * gx + gy * gy).sqrt();
+            let goal_dir = if dist > self.params.goal_eps {
+                [gx / dist, gy / dist]
+            } else {
+                [0.0, 0.0] // arrived: any feasible (slow) velocity is fine
+            };
+            problems.push(build_lp(&rel, goal_dir, &self.params.avoid));
+        }
+        problems
+    }
+
+    /// Advance one step using `backend` for the batch solve.
+    pub fn step(&mut self, backend: &Backend<'_>, rng: &mut Rng) -> anyhow::Result<StepStats> {
+        let mut stats = StepStats::default();
+        let t = Timer::start();
+        let problems = self.build_problems();
+        stats.build_ns = t.elapsed_ns();
+        stats.lps = problems.len();
+        stats.max_m = problems.iter().map(|p| p.m()).max().unwrap_or(0);
+        stats.mean_m = if problems.is_empty() {
+            0.0
+        } else {
+            problems.iter().map(|p| p.m()).sum::<usize>() as f64 / problems.len() as f64
+        };
+
+        let t = Timer::start();
+        let solutions: Vec<Solution> = match backend {
+            Backend::Cpu { algo, threads } => {
+                batch_cpu::solve_batch(&problems, *algo, *threads, self.step_count)
+            }
+            Backend::Engine { engine, variant } => {
+                engine.solve(*variant, &problems, Some(rng))?.0
+            }
+        };
+        stats.solve_ns = t.elapsed_ns();
+
+        let t = Timer::start();
+        let dt = self.params.dt;
+        for i in 0..self.len() {
+            let v = match solutions[i].status {
+                Status::Optimal => solutions[i].point,
+                Status::Infeasible => {
+                    stats.infeasible += 1;
+                    [0.0, 0.0]
+                }
+            };
+            self.velocities[i] = v;
+            self.positions[i][0] += v[0] * dt;
+            self.positions[i][1] += v[1] * dt;
+            let g = self.goals[i];
+            let (dx, dy) = (g[0] - self.positions[i][0], g[1] - self.positions[i][1]);
+            if (dx * dx + dy * dy).sqrt() <= self.params.goal_eps {
+                stats.arrived += 1;
+            }
+        }
+        stats.integrate_ns = t.elapsed_ns();
+        self.step_count += 1;
+        Ok(stats)
+    }
+
+    /// Smallest pairwise distance (collision check: must stay >= 2r - eps).
+    pub fn min_pairwise_distance(&self) -> f64 {
+        let mut best = f64::INFINITY;
+        for i in 0..self.len() {
+            for j in (i + 1)..self.len() {
+                let (a, b) = (self.positions[i], self.positions[j]);
+                let d = ((a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2)).sqrt();
+                best = best.min(d);
+            }
+        }
+        best
+    }
+
+    /// Mean distance still to travel.
+    pub fn mean_goal_distance(&self) -> f64 {
+        let n = self.len().max(1);
+        self.positions
+            .iter()
+            .zip(&self.goals)
+            .map(|(p, g)| ((p[0] - g[0]).powi(2) + (p[1] - g[1]).powi(2)).sqrt())
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_world(n: usize, seed: u64) -> (World, Rng) {
+        let mut rng = Rng::new(seed);
+        let w = World::crossing_groups(&mut rng, n, WorldParams::default());
+        (w, rng)
+    }
+
+    #[test]
+    fn problems_respect_neighbor_cap() {
+        let (mut w, _) = tiny_world(20, 1);
+        let probs = w.build_problems();
+        assert_eq!(probs.len(), 20);
+        for p in &probs {
+            assert!(p.m() <= w.params.max_neighbors + 4);
+            assert!(p.m() >= 4); // at least the speed caps
+        }
+    }
+
+    #[test]
+    fn cpu_step_moves_agents_toward_goals() {
+        let (mut w, mut rng) = tiny_world(16, 2);
+        let before = w.mean_goal_distance();
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 2 };
+        for _ in 0..5 {
+            w.step(&backend, &mut rng).unwrap();
+        }
+        assert!(w.mean_goal_distance() < before);
+    }
+
+    #[test]
+    fn velocities_respect_speed_cap() {
+        let (mut w, mut rng) = tiny_world(16, 3);
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 2 };
+        w.step(&backend, &mut rng).unwrap();
+        let cap = w.params.avoid.max_speed + 1e-6;
+        for v in &w.velocities {
+            assert!(v[0].abs() <= cap && v[1].abs() <= cap, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn no_interpenetration_over_run() {
+        let (mut w, mut rng) = tiny_world(24, 4);
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 2 };
+        for _ in 0..30 {
+            w.step(&backend, &mut rng).unwrap();
+        }
+        // Discs of radius 0.3: separations should stay near or above 2r.
+        // The linearized horizon admits small transient overlap; bound it.
+        assert!(w.min_pairwise_distance() > 0.3, "{}", w.min_pairwise_distance());
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let (mut w, mut rng) = tiny_world(12, 5);
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 1 };
+        let st = w.step(&backend, &mut rng).unwrap();
+        assert_eq!(st.lps, 12);
+        assert!(st.solve_ns > 0);
+        assert!(st.max_m >= 4);
+    }
+}

@@ -1,0 +1,132 @@
+//! Multicore CPU batch drivers: the "mGLPK" analog.
+//!
+//! The paper parallelizes GLPK over LPs ("different threads solve separate
+//! problems", §4). We do the same over our CPU solvers with std scoped
+//! threads: the batch is split into contiguous chunks, one per worker, and
+//! each worker solves its chunk sequentially. Deterministic per-problem RNG
+//! streams keep results independent of the thread count.
+
+use crate::lp::types::{Problem, Solution};
+use crate::solvers::{seidel, simplex};
+use crate::util::Rng;
+
+/// Which per-problem algorithm the batch driver runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Randomized incremental LP (the serial form of RGB).
+    Seidel,
+    /// Dense two-phase simplex (the GLPK/CLP analog).
+    Simplex,
+}
+
+/// Solve every problem, one thread per chunk.
+///
+/// `seed` derives one RNG stream per problem (used by Seidel's shuffle), so
+/// the output is reproducible and independent of `threads`.
+pub fn solve_batch(problems: &[Problem], algo: Algo, threads: usize, seed: u64) -> Vec<Solution> {
+    let threads = threads.max(1).min(problems.len().max(1));
+    let mut out = vec![Solution::infeasible(); problems.len()];
+    if problems.is_empty() {
+        return out;
+    }
+    let chunk = problems.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, (probs, outs)) in problems
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .enumerate()
+        {
+            scope.spawn(move || {
+                for (i, (p, o)) in probs.iter().zip(outs.iter_mut()).enumerate() {
+                    let global_idx = t * chunk + i;
+                    *o = solve_one(p, algo, seed, global_idx as u64);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Serial batch solve (threads = 1); the CPU baseline's lower bound.
+pub fn solve_batch_serial(problems: &[Problem], algo: Algo, seed: u64) -> Vec<Solution> {
+    problems
+        .iter()
+        .enumerate()
+        .map(|(i, p)| solve_one(p, algo, seed, i as u64))
+        .collect()
+}
+
+#[inline]
+fn solve_one(p: &Problem, algo: Algo, seed: u64, idx: u64) -> Solution {
+    match algo {
+        Algo::Seidel => {
+            let mut rng = Rng::new(seed ^ idx.wrapping_mul(0x9e3779b97f4a7c15));
+            seidel::solve(p, &mut rng)
+        }
+        Algo::Simplex => simplex::solve(p),
+    }
+}
+
+/// Reasonable default worker count (the paper used a 6-core i7).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::lp::validate::{agree, Tolerance};
+
+    fn problems(n: usize, m: usize, seed: u64) -> Vec<Problem> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| gen::feasible(&mut rng, m)).collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let probs = problems(64, 12, 7);
+        let serial = solve_batch_serial(&probs, Algo::Seidel, 42);
+        let par = solve_batch(&probs, Algo::Seidel, 4, 42);
+        for ((p, a), b) in probs.iter().zip(&serial).zip(&par) {
+            assert!(agree(p, a, b, Tolerance::default()), "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let probs = problems(33, 9, 11);
+        let t2 = solve_batch(&probs, Algo::Seidel, 2, 5);
+        let t7 = solve_batch(&probs, Algo::Seidel, 7, 5);
+        assert_eq!(t2.len(), t7.len());
+        for (a, b) in t2.iter().zip(&t7) {
+            assert_eq!(a.status, b.status);
+            if a.status == crate::lp::Status::Optimal {
+                assert!((a.point[0] - b.point[0]).abs() < 1e-12);
+                assert!((a.point[1] - b.point[1]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn seidel_and_simplex_agree_across_batch() {
+        let probs = problems(48, 10, 13);
+        let a = solve_batch(&probs, Algo::Seidel, 4, 1);
+        let b = solve_batch(&probs, Algo::Simplex, 4, 1);
+        for ((p, x), y) in probs.iter().zip(&a).zip(&b) {
+            assert!(agree(p, x, y, Tolerance::default()), "{x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn empty_batch() {
+        assert!(solve_batch(&[], Algo::Seidel, 4, 0).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_problems() {
+        let probs = problems(3, 8, 17);
+        let out = solve_batch(&probs, Algo::Simplex, 64, 0);
+        assert_eq!(out.len(), 3);
+    }
+}

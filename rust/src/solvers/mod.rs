@@ -1,0 +1,15 @@
+//! CPU solver fleet: the baselines the paper benchmarks RGB against, plus
+//! the serial form of the RGB algorithm itself.
+//!
+//! * [`seidel`]    -- randomized incremental LP, expected O(m) per problem.
+//! * [`simplex`]   -- dense two-phase tableau simplex (GLPK/CLP analog).
+//! * [`batch_cpu`] -- multicore batch drivers over either ("mGLPK" analog).
+//! * [`seidel_nd`] -- d-dimensional recursive Seidel (the paper's stated
+//!   future-work extension, d <= ~5).
+
+pub mod batch_cpu;
+pub mod seidel;
+pub mod seidel_nd;
+pub mod simplex;
+
+pub use batch_cpu::Algo;

@@ -1,0 +1,197 @@
+//! Sequential Seidel randomized incremental 2-D LP (expected O(m)).
+//!
+//! This is the serial CPU form of the algorithm the paper's RGB kernel
+//! parallelizes (§2.1): consider constraints one at a time; when the new
+//! constraint invalidates the current optimum, re-solve a 1-D LP along its
+//! boundary line over all previously considered constraints.
+//!
+//! Float64 throughout; used as the trusted medium-size oracle, as the
+//! per-problem CPU baseline, and (via `solvers::batch_cpu`) as the
+//! multicore "mGLPK-analog" baseline.
+
+use crate::lp::types::{Problem, Solution, EPS, M_BIG};
+use crate::util::Rng;
+
+/// Parallel-line threshold for unit-ish normals.
+const EPS_PAR: f64 = 1e-9;
+
+/// Per-solve statistics (used by the imbalance experiment, Fig 1/2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveStats {
+    /// Constraints that invalidated the intermediate optimum.
+    pub violations: usize,
+    /// Total 1-D work units executed (sum of i over violating steps).
+    pub work_units: usize,
+}
+
+/// Solve with the constraint order as given (caller already shuffled).
+pub fn solve_ordered(p: &Problem) -> Solution {
+    solve_ordered_with_stats(p).0
+}
+
+/// Solve in a random order derived from `rng` (the algorithm's namesake
+/// randomization; gives the expected-O(m) bound).
+pub fn solve(p: &Problem, rng: &mut Rng) -> Solution {
+    if p.constraints.len() < 2 {
+        return solve_ordered(p);
+    }
+    let perm = rng.permutation(p.constraints.len());
+    let shuffled = Problem {
+        constraints: perm.iter().map(|&i| p.constraints[i as usize]).collect(),
+        obj: p.obj,
+    };
+    solve_ordered(&shuffled)
+}
+
+/// `solve_ordered`, also reporting the work-unit statistics.
+pub fn solve_ordered_with_stats(p: &Problem) -> (Solution, SolveStats) {
+    let (cx, cy) = (p.obj[0], p.obj[1]);
+    let mut sx = if cx >= 0.0 { M_BIG } else { -M_BIG };
+    let mut sy = if cy >= 0.0 { M_BIG } else { -M_BIG };
+    let mut stats = SolveStats::default();
+
+    let cons = &p.constraints;
+    for i in 0..cons.len() {
+        let c = &cons[i];
+        if c.nx * sx + c.ny * sy <= c.b + EPS {
+            continue; // current optimum still satisfied
+        }
+        stats.violations += 1;
+        stats.work_units += i;
+
+        // 1-D LP on the boundary line of constraint i.
+        let den = c.nx * c.nx + c.ny * c.ny;
+        if den < 1e-18 {
+            continue; // degenerate all-zero normal: ignore
+        }
+        let p0x = c.nx * c.b / den;
+        let p0y = c.ny * c.b / den;
+        let (dx, dy) = (-c.ny, c.nx);
+
+        let mut t_lo = -4.0 * M_BIG;
+        let mut t_hi = 4.0 * M_BIG;
+        let mut bad = false;
+        // Analytic box clip.
+        for (ad, num) in [
+            (dx, M_BIG - p0x),
+            (-dx, M_BIG + p0x),
+            (dy, M_BIG - p0y),
+            (-dy, M_BIG + p0y),
+        ] {
+            clip(&mut t_lo, &mut t_hi, &mut bad, ad, num);
+        }
+        // All previously considered constraints.
+        for h in &cons[..i] {
+            let ad = h.nx * dx + h.ny * dy;
+            let num = h.b - (h.nx * p0x + h.ny * p0y);
+            clip(&mut t_lo, &mut t_hi, &mut bad, ad, num);
+            if bad {
+                break;
+            }
+        }
+        if bad || t_lo > t_hi + EPS {
+            return (Solution::infeasible(), stats);
+        }
+        let cd = cx * dx + cy * dy;
+        let t = if cd > 0.0 { t_hi } else { t_lo };
+        sx = p0x + t * dx;
+        sy = p0y + t * dy;
+    }
+    (Solution::optimal(sx, sy), stats)
+}
+
+/// Fold the 1-D constraint `t * ad <= num` into `[t_lo, t_hi]`.
+#[inline]
+fn clip(t_lo: &mut f64, t_hi: &mut f64, bad: &mut bool, ad: f64, num: f64) {
+    if ad > EPS_PAR {
+        *t_hi = t_hi.min(num / ad);
+    } else if ad < -EPS_PAR {
+        *t_lo = t_lo.max(num / ad);
+    } else if num < -EPS {
+        *bad = true; // parallel and violated: the line is entirely infeasible
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::brute;
+    use crate::lp::types::{HalfPlane, Status};
+    use crate::lp::validate::{check_against_brute, Tolerance};
+
+    #[test]
+    fn empty_problem_returns_box_corner() {
+        let p = Problem::new(vec![], [1.0, -1.0]);
+        let s = solve_ordered(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert_eq!(s.point, [M_BIG, -M_BIG]);
+    }
+
+    #[test]
+    fn matches_brute_on_triangle() {
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.0, 2.0),
+                HalfPlane::new(0.0, 1.0, 3.0),
+                HalfPlane::new(-1.0, -1.0, 0.0),
+            ],
+            [1.0, 2.0],
+        );
+        let s = solve_ordered(&p);
+        assert!(check_against_brute(&p, &s, Tolerance::default()).is_ok());
+    }
+
+    #[test]
+    fn order_does_not_change_objective() {
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.3, 2.0).normalized(),
+                HalfPlane::new(-0.2, 1.0, 1.5).normalized(),
+                HalfPlane::new(-1.0, -0.1, 3.0).normalized(),
+                HalfPlane::new(0.4, -1.0, 2.5).normalized(),
+            ],
+            [0.6, 0.8],
+        );
+        let v0 = solve_ordered(&p).objective(&p);
+        let mut rng = Rng::new(99);
+        for _ in 0..20 {
+            let s = solve(&p, &mut rng);
+            assert_eq!(s.status, Status::Optimal);
+            assert!((s.objective(&p) - v0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn infeasible_slab() {
+        let p = Problem::new(
+            vec![HalfPlane::new(1.0, 0.0, -1.0), HalfPlane::new(-1.0, 0.0, -1.0)],
+            [0.0, 1.0],
+        );
+        assert_eq!(solve_ordered(&p).status, Status::Infeasible);
+        assert_eq!(brute::solve(&p).status, Status::Infeasible);
+    }
+
+    #[test]
+    fn parallel_redundant_constraints_ok() {
+        // Two parallel constraints, one redundant.
+        let p = Problem::new(
+            vec![HalfPlane::new(1.0, 0.0, 5.0), HalfPlane::new(1.0, 0.0, 2.0)],
+            [1.0, 0.0],
+        );
+        let s = solve_ordered(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.point[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_count_violations() {
+        // Constraints arranged so each new one cuts the previous optimum.
+        let p = Problem::new(
+            vec![HalfPlane::new(1.0, 0.0, 5.0), HalfPlane::new(1.0, 0.0, 2.0)],
+            [1.0, 0.0],
+        );
+        let (_, st) = solve_ordered_with_stats(&p);
+        assert_eq!(st.violations, 2);
+        assert_eq!(st.work_units, 1); // 0 + 1
+    }
+}

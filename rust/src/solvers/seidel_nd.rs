@@ -1,0 +1,483 @@
+//! d-dimensional randomized incremental LP (Seidel's recursion).
+//!
+//! The paper's stated future direction (§6): "examine the applications and
+//! performance of the model extended to higher dimensions ... expected to
+//! scale favourably for low dimensional problems, up to around 5
+//! dimensions". This module implements that extension on the CPU side:
+//! Seidel's algorithm in its full recursive form — a violated constraint in
+//! dimension d spawns a (d-1)-dimensional LP on its boundary hyperplane —
+//! with expected O(d! m) running time.
+//!
+//! Geometry: maximize `c . x` subject to `a_i . x <= b_i` plus the implicit
+//! box `|x_j| <= M_BIG`. The d = 1 base case is interval clipping; the
+//! recursion projects constraints onto a hyperplane's orthonormal frame.
+
+use crate::lp::types::{EPS, M_BIG};
+
+/// One half-space in d dimensions: `a . x <= b`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HalfSpace {
+    pub a: Vec<f64>,
+    pub b: f64,
+}
+
+impl HalfSpace {
+    pub fn new(a: Vec<f64>, b: f64) -> HalfSpace {
+        HalfSpace { a, b }
+    }
+
+    fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    fn violation(&self, x: &[f64]) -> f64 {
+        dot(&self.a, x) - self.b
+    }
+}
+
+/// Outcome of an n-d solve.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NdSolution {
+    Optimal(Vec<f64>),
+    Infeasible,
+}
+
+const EPS_PAR: f64 = 1e-9;
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Solve max c.x s.t. constraints (+ box) in `d = c.len()` dimensions.
+/// Constraints are considered in the order given; the caller shuffles
+/// (`solve_shuffled` does it for you).
+pub fn solve_ordered(constraints: &[HalfSpace], c: &[f64]) -> NdSolution {
+    let d = c.len();
+    assert!(d >= 1, "dimension must be >= 1");
+    for (i, h) in constraints.iter().enumerate() {
+        assert_eq!(h.dim(), d, "constraint {i} has wrong dimension");
+    }
+    // Base case and recursion share one driver. The top level uses the
+    // problem's own implicit box; recursive levels get a wider safety bound
+    // because the *projected* box faces travel down explicitly and frame
+    // coordinates of in-box points can exceed M_BIG (up to sqrt(d) * 2M).
+    solve_rec(constraints, c, M_BIG)
+}
+
+/// `solve_ordered` with a pre-shuffle from `rng` (the expected-O(m) form).
+pub fn solve_shuffled(
+    constraints: &[HalfSpace],
+    c: &[f64],
+    rng: &mut crate::util::Rng,
+) -> NdSolution {
+    let perm = rng.permutation(constraints.len());
+    let shuffled: Vec<HalfSpace> =
+        perm.iter().map(|&i| constraints[i as usize].clone()).collect();
+    solve_ordered(&shuffled, c)
+}
+
+fn solve_rec(constraints: &[HalfSpace], c: &[f64], bound: f64) -> NdSolution {
+    let d = c.len();
+    if d == 1 {
+        return solve_1d(constraints, c[0], bound);
+    }
+
+    // Start at the bound corner optimal for c.
+    let mut x: Vec<f64> = c.iter().map(|&ci| if ci >= 0.0 { bound } else { -bound }).collect();
+
+    for i in 0..constraints.len() {
+        let h = &constraints[i];
+        if h.violation(&x) <= EPS {
+            continue;
+        }
+        // Optimum must lie on the hyperplane a.x = b. Build an orthonormal
+        // frame (u_1..u_{d-1}) of the hyperplane and recurse in d-1 dims.
+        let an = norm(&h.a);
+        if an < 1e-12 {
+            if h.b < -EPS {
+                return NdSolution::Infeasible; // 0 <= b < 0
+            }
+            continue;
+        }
+        let unit: Vec<f64> = h.a.iter().map(|v| v / an).collect();
+        let p0: Vec<f64> = unit.iter().map(|v| v * h.b / an).collect();
+        let frame = hyperplane_frame(&unit);
+
+        // Project previous constraints + the box onto the frame:
+        //   a.(p0 + F t) <= b  ->  (a F) . t <= b - a.p0
+        // Each projection is re-normalized: an almost-parallel constraint
+        // projects to a tiny normal whose implied line sits at rhs/|proj|
+        // — far outside any fixed bound — which would otherwise read as a
+        // spurious infeasibility in the sub-LP.
+        let mut sub: Vec<HalfSpace> = Vec::with_capacity(i + 2 * d);
+        for g in constraints[..i].iter().chain(box_faces(d, bound).iter()) {
+            let proj: Vec<f64> = frame.iter().map(|u| dot(&g.a, u)).collect();
+            let rhs = g.b - dot(&g.a, &p0);
+            let pn = norm(&proj);
+            if pn < EPS_PAR * norm(&g.a).max(1.0) {
+                if rhs < -EPS {
+                    return NdSolution::Infeasible; // hyperplane misses g entirely
+                }
+                continue; // parallel and satisfied
+            }
+            sub.push(HalfSpace::new(proj.iter().map(|v| v / pn).collect(), rhs / pn));
+        }
+        let sub_c: Vec<f64> = frame.iter().map(|u| dot(c, u)).collect();
+        // Bound growth: a violated, box-intersecting hyperplane has
+        // ||p0|| <= sqrt(d) * bound, so feasible frame coordinates stay
+        // within ~2 sqrt(d) * bound; 8x headroom per level is ample (d<=5).
+        match solve_rec(&sub, &sub_c, 8.0 * bound) {
+            NdSolution::Infeasible => return NdSolution::Infeasible,
+            NdSolution::Optimal(t) => {
+                for j in 0..d {
+                    x[j] = p0[j] + frame.iter().zip(&t).map(|(u, tk)| u[j] * tk).sum::<f64>();
+                }
+            }
+        }
+    }
+    NdSolution::Optimal(x)
+}
+
+/// 1-D base case: clip the interval [-bound, bound].
+fn solve_1d(constraints: &[HalfSpace], c: f64, bound: f64) -> NdSolution {
+    let mut lo = -bound;
+    let mut hi = bound;
+    for h in constraints {
+        let a = h.a[0];
+        if a > EPS_PAR {
+            hi = hi.min(h.b / a);
+        } else if a < -EPS_PAR {
+            lo = lo.max(h.b / a);
+        } else if h.b < -EPS {
+            return NdSolution::Infeasible;
+        }
+    }
+    if lo > hi + EPS {
+        return NdSolution::Infeasible;
+    }
+    NdSolution::Optimal(vec![if c >= 0.0 { hi } else { lo }])
+}
+
+/// Orthonormal basis of the hyperplane with unit normal `n` (d-1 vectors),
+/// via Gram-Schmidt against the most-orthogonal coordinate axes.
+fn hyperplane_frame(n: &[f64]) -> Vec<Vec<f64>> {
+    let d = n.len();
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(d - 1);
+    // Candidate axes sorted by |n_j| ascending: most orthogonal first.
+    let mut axes: Vec<usize> = (0..d).collect();
+    axes.sort_by(|&i, &j| n[i].abs().partial_cmp(&n[j].abs()).unwrap());
+    for &ax in axes.iter().take(d - 1) {
+        let mut v = vec![0.0; d];
+        v[ax] = 1.0;
+        // Remove the normal component, then prior basis components.
+        let nv = dot(&v, n);
+        for j in 0..d {
+            v[j] -= nv * n[j];
+        }
+        for u in &basis {
+            let uv = dot(&v, u);
+            for j in 0..d {
+                v[j] -= uv * u[j];
+            }
+        }
+        let len = norm(&v);
+        debug_assert!(len > 1e-9, "degenerate frame axis");
+        for vj in v.iter_mut() {
+            *vj /= len;
+        }
+        basis.push(v);
+    }
+    basis
+}
+
+/// The 2d faces of the axis box |x_j| <= bound as explicit half-spaces.
+/// At the top level this is the problem's +-M_BIG box; at recursive levels
+/// it is that level's *own* implicit bound (the real box constraints travel
+/// down separately as projections — clipping deeper frames back to +-M_BIG
+/// would wrongly truncate frame coordinates, which legitimately exceed it).
+fn box_faces(d: usize, bound: f64) -> Vec<HalfSpace> {
+    let mut out = Vec::with_capacity(2 * d);
+    for j in 0..d {
+        let mut a = vec![0.0; d];
+        a[j] = 1.0;
+        out.push(HalfSpace::new(a.clone(), bound));
+        a[j] = -1.0;
+        out.push(HalfSpace::new(a, bound));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Brute-force n-d oracle: enumerate all d-subsets of constraints (+ box),
+// solve the linear system, filter feasible. O(C(m, d) * m d^3): tests only.
+// ---------------------------------------------------------------------------
+
+/// Ground-truth optimum by vertex enumeration (tests only; d <= ~4, small m).
+pub fn brute_force_nd(constraints: &[HalfSpace], c: &[f64]) -> NdSolution {
+    let d = c.len();
+    let mut all: Vec<HalfSpace> = constraints.to_vec();
+    all.extend(box_faces(d, M_BIG));
+    let n = all.len();
+
+    let mut best: Option<(f64, Vec<f64>)> = None;
+    let mut idx: Vec<usize> = (0..d).collect();
+    loop {
+        if let Some(x) = solve_square(&all, &idx) {
+            let feasible = all
+                .iter()
+                .all(|h| h.violation(&x) <= 1e-6 * h.b.abs().max(1.0));
+            if feasible {
+                let v = dot(c, &x);
+                if best.as_ref().map_or(true, |(bv, _)| v > *bv) {
+                    best = Some((v, x));
+                }
+            }
+        }
+        // next combination
+        let mut k = d;
+        loop {
+            if k == 0 {
+                return match best {
+                    Some((_, x)) => NdSolution::Optimal(x),
+                    None => NdSolution::Infeasible,
+                };
+            }
+            k -= 1;
+            if idx[k] + (d - k) < n {
+                idx[k] += 1;
+                for j in k + 1..d {
+                    idx[j] = idx[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Solve the d x d system a_i . x = b_i for the given subset (Gaussian
+/// elimination with partial pivoting); None if singular.
+fn solve_square(all: &[HalfSpace], idx: &[usize]) -> Option<Vec<f64>> {
+    let d = idx.len();
+    let mut m = vec![vec![0.0; d + 1]; d];
+    for (r, &i) in idx.iter().enumerate() {
+        m[r][..d].copy_from_slice(&all[i].a);
+        m[r][d] = all[i].b;
+    }
+    for col in 0..d {
+        let piv = (col..d).max_by(|&i, &j| {
+            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-10 {
+            return None;
+        }
+        m.swap(col, piv);
+        let p = m[col][col];
+        for r in 0..d {
+            if r == col {
+                continue;
+            }
+            let f = m[r][col] / p;
+            for k in col..=d {
+                m[r][k] -= f * m[col][k];
+            }
+        }
+    }
+    Some((0..d).map(|r| m[r][d] / m[r][r]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random feasible d-dim problem around a known interior point.
+    fn random_feasible(rng: &mut Rng, d: usize, m: usize) -> (Vec<HalfSpace>, Vec<f64>) {
+        let x0: Vec<f64> = (0..d).map(|_| 8.0 * (rng.f64() - 0.5)).collect();
+        let mut cons = Vec::with_capacity(m);
+        for _ in 0..m {
+            let mut a: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let len = norm(&a).max(1e-9);
+            a.iter_mut().for_each(|v| *v /= len);
+            let b = dot(&a, &x0) + rng.range_f64(0.05, 3.0);
+            cons.push(HalfSpace::new(a, b));
+        }
+        let mut c: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let len = norm(&c).max(1e-9);
+        c.iter_mut().for_each(|v| *v /= len);
+        (cons, c)
+    }
+
+    #[test]
+    fn matches_2d_solver() {
+        use crate::lp::types::{HalfPlane, Problem};
+        use crate::solvers::seidel;
+        let mut rng = Rng::new(1);
+        for _ in 0..25 {
+            let (cons, c) = random_feasible(&mut rng, 2, 10);
+            let p2 = Problem::new(
+                cons.iter().map(|h| HalfPlane::new(h.a[0], h.a[1], h.b)).collect(),
+                [c[0], c[1]],
+            );
+            let s2 = seidel::solve_ordered(&p2);
+            match solve_ordered(&cons, &c) {
+                NdSolution::Optimal(x) => {
+                    let got = dot(&c, &x);
+                    let want = s2.objective(&p2);
+                    assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+                }
+                NdSolution::Infeasible => panic!("feasible problem"),
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_3d() {
+        let mut rng = Rng::new(2);
+        for _ in 0..15 {
+            let (cons, c) = random_feasible(&mut rng, 3, 8);
+            let got = solve_ordered(&cons, &c);
+            let want = brute_force_nd(&cons, &c);
+            match (got, want) {
+                (NdSolution::Optimal(x), NdSolution::Optimal(y)) => {
+                    assert!((dot(&c, &x) - dot(&c, &y)).abs() < 1e-4,
+                            "{} vs {}", dot(&c, &x), dot(&c, &y));
+                }
+                (a, b) => panic!("status mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_4d() {
+        let mut rng = Rng::new(3);
+        for _ in 0..6 {
+            let (cons, c) = random_feasible(&mut rng, 4, 7);
+            let got = solve_ordered(&cons, &c);
+            let want = brute_force_nd(&cons, &c);
+            match (got, want) {
+                (NdSolution::Optimal(x), NdSolution::Optimal(y)) => {
+                    assert!((dot(&c, &x) - dot(&c, &y)).abs() < 1e-3);
+                }
+                (a, b) => panic!("status mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn detects_3d_infeasible() {
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            let (mut cons, c) = random_feasible(&mut rng, 3, 6);
+            // Contradictory slab along a random direction.
+            let a: Vec<f64> = vec![1.0, 0.0, 0.0];
+            cons.push(HalfSpace::new(a.clone(), -1.0));
+            cons.push(HalfSpace::new(a.iter().map(|v| -v).collect(), -1.0));
+            assert_eq!(solve_ordered(&cons, &c), NdSolution::Infeasible);
+        }
+    }
+
+    #[test]
+    fn shuffled_matches_ordered_objective() {
+        let mut rng = Rng::new(5);
+        let (cons, c) = random_feasible(&mut rng, 3, 12);
+        let v0 = match solve_ordered(&cons, &c) {
+            NdSolution::Optimal(x) => dot(&c, &x),
+            _ => panic!(),
+        };
+        for _ in 0..5 {
+            match solve_shuffled(&cons, &c, &mut rng) {
+                NdSolution::Optimal(x) => assert!((dot(&c, &x) - v0).abs() < 1e-4),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn unconstrained_5d_hits_box_corner() {
+        let c = vec![1.0, -1.0, 1.0, -1.0, 1.0];
+        match solve_ordered(&[], &c) {
+            NdSolution::Optimal(x) => {
+                assert_eq!(x, vec![M_BIG, -M_BIG, M_BIG, -M_BIG, M_BIG]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn frame_is_orthonormal() {
+        let mut rng = Rng::new(6);
+        for d in 2..=5 {
+            let mut n: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let len = norm(&n);
+            n.iter_mut().for_each(|v| *v /= len);
+            let f = hyperplane_frame(&n);
+            assert_eq!(f.len(), d - 1);
+            for (i, u) in f.iter().enumerate() {
+                assert!((norm(u) - 1.0).abs() < 1e-9);
+                assert!(dot(u, &n).abs() < 1e-9);
+                for v in &f[..i] {
+                    assert!(dot(u, v).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod debug_tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    #[ignore]
+    fn minimize_failure() {
+        let mut rng = Rng::new(2);
+        for trial in 0..15 {
+            let x0: Vec<f64> = (0..3).map(|_| 8.0 * (rng.f64() - 0.5)).collect();
+            let mut cons = Vec::new();
+            for _ in 0..8 {
+                let mut a: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+                let len = norm(&a).max(1e-9);
+                a.iter_mut().for_each(|v| *v /= len);
+                let b = dot(&a, &x0) + rng.range_f64(0.05, 3.0);
+                cons.push(HalfSpace::new(a, b));
+            }
+            let mut c: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+            let len = norm(&c).max(1e-9);
+            c.iter_mut().for_each(|v| *v /= len);
+            let got = solve_ordered(&cons, &c);
+            let want = brute_force_nd(&cons, &c);
+            let bad = matches!((&got, &want), (NdSolution::Infeasible, NdSolution::Optimal(_)));
+            if bad {
+                // shrink: try removing constraints one at a time
+                let mut cur = cons.clone();
+                loop {
+                    let mut shrunk = false;
+                    for k in 0..cur.len() {
+                        let mut t = cur.clone();
+                        t.remove(k);
+                        let g = solve_ordered(&t, &c);
+                        let w = brute_force_nd(&t, &c);
+                        if matches!((&g, &w), (NdSolution::Infeasible, NdSolution::Optimal(_))) {
+                            cur = t;
+                            shrunk = true;
+                            break;
+                        }
+                    }
+                    if !shrunk { break; }
+                }
+                eprintln!("trial {trial}: minimal failing set ({} cons):", cur.len());
+                for h in &cur {
+                    eprintln!("  a={:?} b={}", h.a, h.b);
+                }
+                eprintln!("  c={c:?}");
+                return;
+            }
+        }
+        eprintln!("no failure found");
+    }
+}

@@ -1,0 +1,283 @@
+//! Dense two-phase tableau simplex for 2-D LPs: the CPU comparator.
+//!
+//! Plays the role of the paper's GLPK/CLP/CPLEX baselines: a general
+//! simplex method run per problem on the CPU. Like those solvers it carries
+//! per-pivot O(R*C) dense-tableau cost, so it scales worse in m than Seidel
+//! — the scaling contrast the paper's Figures 3-4 measure.
+//!
+//! Formulation (float64): shift x = u - M_BIG so u >= 0, add the two upper
+//! box rows, give every row a slack, and rows with negative shifted RHS an
+//! artificial. Phase 1 minimizes the artificial sum (infeasible iff its
+//! optimum is positive); phase 2 minimizes -c.u with artificials barred.
+//! Bland's rule breaks ties, so no cycling.
+
+use crate::lp::types::{Problem, Solution, M_BIG};
+
+const TOL: f64 = 1e-9;
+
+/// Dense tableau state for one problem.
+struct Tableau {
+    /// rows x cols, row-major; last column is the RHS.
+    t: Vec<f64>,
+    rows: usize,
+    cols: usize,
+    /// Reduced-cost row (cols wide; last entry tracks -objective).
+    red: Vec<f64>,
+    /// Basic variable (column index) per row.
+    basis: Vec<usize>,
+}
+
+impl Tableau {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.t[r * self.cols + c]
+    }
+
+    #[inline]
+    fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.t[r * self.cols + c]
+    }
+
+    fn pivot(&mut self, pr: usize, pc: usize) {
+        let cols = self.cols;
+        let piv = self.at(pr, pc);
+        debug_assert!(piv.abs() > 1e-12);
+        let inv = 1.0 / piv;
+        for c in 0..cols {
+            *self.at_mut(pr, c) *= inv;
+        }
+        for r in 0..self.rows {
+            if r == pr {
+                continue;
+            }
+            let f = self.at(r, pc);
+            if f.abs() < 1e-14 {
+                continue;
+            }
+            for c in 0..cols {
+                let v = self.at(pr, c);
+                *self.at_mut(r, c) -= f * v;
+            }
+        }
+        let f = self.red[pc];
+        if f.abs() > 0.0 {
+            for c in 0..cols {
+                self.red[c] -= f * self.at(pr, c);
+            }
+        }
+        self.basis[pr] = pc;
+    }
+
+    /// Bland's rule phase: pivot until no entering column (or iteration cap).
+    /// `allow` restricts which columns may enter. Returns false if the cap
+    /// was hit (numerical trouble; callers treat the result as best-effort).
+    fn run(&mut self, allow: impl Fn(usize) -> bool, max_iter: usize) -> bool {
+        let ncols = self.cols - 1; // exclude RHS
+        for _ in 0..max_iter {
+            // Bland: smallest-index column with negative reduced cost.
+            let mut enter = None;
+            for c in 0..ncols {
+                if allow(c) && self.red[c] < -TOL {
+                    enter = Some(c);
+                    break;
+                }
+            }
+            let Some(pc) = enter else { return true };
+            // Ratio test, Bland tie-break on smallest basis index.
+            let mut leave: Option<(usize, f64)> = None;
+            for r in 0..self.rows {
+                let a = self.at(r, pc);
+                if a > TOL {
+                    let ratio = self.at(r, self.cols - 1) / a;
+                    let better = match leave {
+                        None => true,
+                        Some((lr, lratio)) => {
+                            ratio < lratio - TOL
+                                || (ratio < lratio + TOL && self.basis[r] < self.basis[lr])
+                        }
+                    };
+                    if better {
+                        leave = Some((r, ratio));
+                    }
+                }
+            }
+            let Some((pr, _)) = leave else {
+                // Unbounded entering direction. The box rows make the real
+                // problem bounded, so this is numerical noise: stop.
+                return true;
+            };
+            self.pivot(pr, pc);
+        }
+        false
+    }
+}
+
+/// Solve one problem with the two-phase dense simplex.
+pub fn solve(p: &Problem) -> Solution {
+    let m = p.constraints.len();
+    let rows = m + 2; // + upper box rows for u_x, u_y
+    let n_struct = 2;
+    let cols = n_struct + rows + rows + 1; // u, slacks, artificials, RHS
+    let art0 = n_struct + rows;
+
+    // Build A u <= b' with u = x + M_BIG.
+    let mut a = Vec::with_capacity(rows);
+    for h in &p.constraints {
+        let hb = h.normalized();
+        a.push((hb.nx, hb.ny, hb.b + M_BIG * (hb.nx + hb.ny)));
+    }
+    a.push((1.0, 0.0, 2.0 * M_BIG));
+    a.push((0.0, 1.0, 2.0 * M_BIG));
+
+    let mut tab = Tableau {
+        t: vec![0.0; rows * cols],
+        rows,
+        cols,
+        red: vec![0.0; cols],
+        basis: vec![0; rows],
+    };
+
+    let mut any_art = false;
+    for (r, &(ax, ay, b)) in a.iter().enumerate() {
+        let sgn = if b < 0.0 { -1.0 } else { 1.0 };
+        *tab.at_mut(r, 0) = sgn * ax;
+        *tab.at_mut(r, 1) = sgn * ay;
+        *tab.at_mut(r, n_struct + r) = sgn; // slack
+        *tab.at_mut(r, cols - 1) = sgn * b;
+        if b < 0.0 {
+            *tab.at_mut(r, art0 + r) = 1.0; // artificial
+            tab.basis[r] = art0 + r;
+            any_art = true;
+        } else {
+            tab.basis[r] = n_struct + r;
+        }
+    }
+
+    // ---- Phase 1: minimize sum of artificials. ----
+    if any_art {
+        // reduced costs: 1 on artificial cols, then zero out basic ones.
+        for c in art0..art0 + rows {
+            tab.red[c] = 1.0;
+        }
+        for r in 0..rows {
+            if tab.basis[r] >= art0 {
+                for c in 0..cols {
+                    let v = tab.at(r, c);
+                    tab.red[c] -= v;
+                }
+            }
+        }
+        tab.run(|_| true, 50 * rows.max(8));
+        // Residual infeasibility: any artificial still basic at positive value.
+        let resid: f64 = (0..rows)
+            .filter(|&r| tab.basis[r] >= art0)
+            .map(|r| tab.at(r, cols - 1).max(0.0))
+            .sum();
+        if resid > 1e-6 * M_BIG.max(1.0) * 1e-2 {
+            // 1e-6 relative to the box scale (values up to 2e4).
+            return Solution::infeasible();
+        }
+    }
+
+    // ---- Phase 2: minimize -c.u (maximize c.x), artificials barred. ----
+    let c2 = {
+        let mut c2 = vec![0.0; cols];
+        c2[0] = -p.obj[0];
+        c2[1] = -p.obj[1];
+        c2
+    };
+    tab.red.copy_from_slice(&c2);
+    for r in 0..rows {
+        let cb = c2[tab.basis[r]];
+        if cb != 0.0 {
+            for c in 0..cols {
+                let v = tab.at(r, c);
+                tab.red[c] -= cb * v;
+            }
+        }
+    }
+    tab.run(|c| c < art0, 50 * rows.max(8));
+
+    // Read u off the basis.
+    let mut u = [0.0f64; 2];
+    for r in 0..rows {
+        if tab.basis[r] < 2 {
+            u[tab.basis[r]] = tab.at(r, cols - 1);
+        }
+    }
+    Solution::optimal(u[0] - M_BIG, u[1] - M_BIG)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::types::{HalfPlane, Status};
+    use crate::lp::validate::{check_against_brute, Tolerance};
+
+    #[test]
+    fn unconstrained_reaches_box_corner() {
+        let p = Problem::new(vec![], [1.0, 1.0]);
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.point[0] - M_BIG).abs() < 1e-6, "{:?}", s.point);
+        assert!((s.point[1] - M_BIG).abs() < 1e-6);
+    }
+
+    #[test]
+    fn triangle_optimum() {
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.0, 2.0),
+                HalfPlane::new(0.0, 1.0, 3.0),
+                HalfPlane::new(-1.0, -1.0, 0.0),
+            ],
+            [1.0, 2.0],
+        );
+        let s = solve(&p);
+        assert!(check_against_brute(&p, &s, Tolerance::default()).is_ok(), "{s:?}");
+    }
+
+    #[test]
+    fn negative_quadrant_optimum() {
+        // Feasible region around (-5, -5); origin infeasible -> phase 1 runs.
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.0, -4.0),  // x <= -4
+                HalfPlane::new(0.0, 1.0, -4.0),  // y <= -4
+                HalfPlane::new(-1.0, 0.0, 6.0),  // x >= -6
+                HalfPlane::new(0.0, -1.0, 6.0),  // y >= -6
+            ],
+            [1.0, 1.0],
+        );
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.point[0] + 4.0).abs() < 1e-6, "{:?}", s.point);
+        assert!((s.point[1] + 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn infeasible_slab_detected() {
+        let p = Problem::new(
+            vec![HalfPlane::new(1.0, 0.0, -1.0), HalfPlane::new(-1.0, 0.0, -1.0)],
+            [1.0, 0.0],
+        );
+        assert_eq!(solve(&p).status, Status::Infeasible);
+    }
+
+    #[test]
+    fn degenerate_vertex_no_cycle() {
+        // Four constraints meeting at one point; Bland's rule must terminate.
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.0, 1.0),
+                HalfPlane::new(0.0, 1.0, 1.0),
+                HalfPlane::new(1.0, 1.0, 2.0),
+                HalfPlane::new(1.0, -1.0, 0.0),
+            ],
+            [1.0, 1.0],
+        );
+        let s = solve(&p);
+        assert_eq!(s.status, Status::Optimal);
+        assert!((s.objective(&p) - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,42 @@
+//! Shared infrastructure: deterministic RNG, statistics, property-test
+//! harness, and TSV/markdown tables. No external deps (offline build).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::{LatencyHistogram, Summary};
+pub use table::Table;
+
+/// Monotonic wall-clock timer returning nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(std::time::Instant::now())
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed_ns();
+        let b = t.elapsed_ns();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,153 @@
+//! TSV/markdown table emission for the bench harness and CLI output, plus
+//! the TSV parser used for `artifacts/manifest.tsv` (the vendor set has no
+//! serde, so TSV is the Rust-side interchange format).
+
+use std::fmt::Write as _;
+
+/// A simple column-oriented table: header + string rows.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Tab-separated form (machine-readable; consumed by plotting scripts).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join("\t"));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown form (pasted into EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(width) {
+                let _ = write!(line, " {c:<w$} |");
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            let _ = write!(sep, "{:-<1$}|", "", w + 2);
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Parse a TSV file with a header row into (header, rows of fields).
+/// Empty lines are skipped; no quoting/escaping (none is emitted).
+pub fn parse_tsv(text: &str) -> anyhow::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<String> = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty TSV"))?
+        .split('\t')
+        .map(|s| s.to_string())
+        .collect();
+    let mut rows = Vec::new();
+    for (idx, line) in lines.enumerate() {
+        let fields: Vec<String> = line.split('\t').map(|s| s.to_string()).collect();
+        if fields.len() != header.len() {
+            anyhow::bail!(
+                "TSV row {} has {} fields, header has {}",
+                idx + 2,
+                fields.len(),
+                header.len()
+            );
+        }
+        rows.push(fields);
+    }
+    Ok((header, rows))
+}
+
+/// Look up a column index by name.
+pub fn column(header: &[String], name: &str) -> anyhow::Result<usize> {
+    header
+        .iter()
+        .position(|h| h == name)
+        .ok_or_else(|| anyhow::anyhow!("TSV is missing column '{name}' (have {header:?})"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push_row(vec!["1".into(), "x".into()]);
+        t.push_row(vec!["2".into(), "y".into()]);
+        let (h, rows) = parse_tsv(&t.to_tsv()).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec!["1", "x"], vec!["2", "y"]]);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["col", "value"]);
+        t.push_row(vec!["x".into(), "1.5".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| col"), "{md}");
+        assert_eq!(md.lines().count(), 3);
+    }
+
+    #[test]
+    fn parse_rejects_ragged_rows() {
+        assert!(parse_tsv("a\tb\n1\n").is_err());
+    }
+
+    #[test]
+    fn parse_skips_blank_lines() {
+        let (_, rows) = parse_tsv("a\tb\n\n1\t2\n\n").unwrap();
+        assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn column_lookup() {
+        let h = vec!["x".to_string(), "y".to_string()];
+        assert_eq!(column(&h, "y").unwrap(), 1);
+        assert!(column(&h, "z").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn push_row_checks_arity() {
+        let mut t = Table::new(&["a"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+    }
+}

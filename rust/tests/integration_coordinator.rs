@@ -1,0 +1,133 @@
+//! Coordinator integration: the full submit -> batch -> PJRT -> reply path.
+//! Skipped when artifacts are missing (run `make artifacts`).
+
+use std::time::Duration;
+
+use batch_lp2d::coordinator::{Config, Service, SubmitError};
+use batch_lp2d::gen::{self, trace};
+use batch_lp2d::lp::brute;
+use batch_lp2d::lp::types::Status;
+use batch_lp2d::lp::validate::{agree, Tolerance};
+use batch_lp2d::runtime::Variant;
+use batch_lp2d::util::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn service(max_wait_ms: u64) -> Option<Service> {
+    let dir = artifacts()?;
+    let config = Config {
+        variant: Variant::Rgb,
+        max_wait: Duration::from_millis(max_wait_ms),
+        ..Config::default()
+    };
+    Some(Service::start(dir, config).expect("service"))
+}
+
+#[test]
+fn solve_all_returns_correct_solutions_in_order() {
+    let Some(svc) = service(2) else { return };
+    let mut rng = Rng::new(1);
+    let problems = gen::mixed_batch(&mut rng, 200, 24, 0.15);
+    let solutions = svc.solve_all(&problems).expect("solve_all");
+    assert_eq!(solutions.len(), problems.len());
+    for (p, s) in problems.iter().zip(&solutions) {
+        let want = brute::solve(p);
+        assert_eq!(s.status, want.status);
+        if s.status == Status::Optimal {
+            assert!(agree(p, s, &want, Tolerance::default()), "{s:?} vs {want:?}");
+        }
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.solved, 200);
+    assert!(snap.batches >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_sizes_route_to_different_classes() {
+    let Some(svc) = service(2) else { return };
+    let mut rng = Rng::new(2);
+    // Sizes straddling several compiled m classes (16/32/64/...).
+    let problems = trace::mixed_size_batch(&mut rng, 120, 4, 120);
+    let solutions = svc.solve_all(&problems).expect("solve_all");
+    for (p, s) in problems.iter().zip(&solutions) {
+        let want = brute::solve(p);
+        assert_eq!(s.status, want.status, "m={}", p.m());
+        if s.status == Status::Optimal {
+            assert!(agree(p, s, &want, Tolerance::default()));
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn deadline_flushes_partial_batches() {
+    let Some(svc) = service(5) else { return };
+    let mut rng = Rng::new(3);
+    // A single problem can never fill a bucket; only the deadline can close.
+    let p = gen::feasible(&mut rng, 10);
+    let t0 = std::time::Instant::now();
+    let ticket = svc.submit(p).expect("submit");
+    let sol = ticket.wait_timeout(Duration::from_secs(30)).expect("wait");
+    assert_eq!(sol.status, Status::Optimal);
+    // Generous bound: deadline 5ms + one batch execution.
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    svc.shutdown();
+}
+
+#[test]
+fn oversize_problems_are_rejected_cleanly() {
+    let Some(svc) = service(2) else { return };
+    let mut rng = Rng::new(4);
+    let p = gen::feasible(&mut rng, 100_000);
+    match svc.submit(p) {
+        Err(SubmitError::TooLarge { m, .. }) => assert_eq!(m, 100_000),
+        Err(e) => panic!("expected TooLarge, got {e:?}"),
+        Ok(_) => panic!("expected TooLarge, got Ok"),
+    }
+    assert_eq!(svc.metrics().snapshot().rejected, 0); // rejected pre-submit
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_requests() {
+    let Some(svc) = service(1000) else { return }; // long deadline: only
+                                                   // shutdown can flush
+    let mut rng = Rng::new(5);
+    let problems = gen::independent_batch(&mut rng, 5, 12);
+    let tickets: Vec<_> = problems
+        .iter()
+        .map(|p| svc.submit(p.clone()).expect("submit"))
+        .collect();
+    svc.shutdown();
+    for t in tickets {
+        let sol = t.wait().expect("drained solution");
+        assert_eq!(sol.status, Status::Optimal);
+    }
+}
+
+#[test]
+fn two_executors_work() {
+    let Some(dir) = artifacts() else { return };
+    let config = Config {
+        executors: 2,
+        max_wait: Duration::from_millis(1),
+        ..Config::default()
+    };
+    let svc = Service::start(dir, config).expect("service");
+    let mut rng = Rng::new(6);
+    let problems = gen::independent_batch(&mut rng, 300, 16);
+    let solutions = svc.solve_all(&problems).expect("solve_all");
+    for (p, s) in problems.iter().zip(&solutions) {
+        assert!(agree(p, s, &brute::solve(p), Tolerance::default()));
+    }
+    svc.shutdown();
+}

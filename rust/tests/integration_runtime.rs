@@ -1,0 +1,143 @@
+//! End-to-end runtime integration: load the AOT HLO artifacts, execute them
+//! on the PJRT CPU client, and check the numerics against the Rust-side CPU
+//! solvers and the brute-force oracle.
+//!
+//! Requires `make artifacts` (or at least `python -m compile.aot --quick`).
+//! Tests are skipped (not failed) when artifacts are missing so `cargo
+//! test` stays runnable before the Python step.
+
+use batch_lp2d::gen;
+use batch_lp2d::lp::brute;
+use batch_lp2d::lp::types::Status;
+use batch_lp2d::lp::validate::{agree, Tolerance};
+use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo};
+use batch_lp2d::util::Rng;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine() -> Option<Engine> {
+    artifact_dir().map(|d| Engine::new(d).expect("engine"))
+}
+
+#[test]
+fn rgb_artifact_matches_brute_force() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(2019);
+    let problems = gen::mixed_batch(&mut rng, 64, 24, 0.2);
+    let (solutions, timing) = engine
+        .solve(Variant::Rgb, &problems, Some(&mut rng))
+        .expect("solve");
+    assert_eq!(solutions.len(), 64);
+    assert!(timing.total_ns() > 0);
+    for (p, s) in problems.iter().zip(&solutions) {
+        let want = brute::solve(p);
+        assert_eq!(s.status, want.status, "status mismatch");
+        if s.status == Status::Optimal {
+            assert!(
+                agree(p, s, &want, Tolerance::default()),
+                "objective mismatch: got {:?} want {:?}",
+                s.point,
+                want.point
+            );
+        }
+    }
+}
+
+#[test]
+fn rgb_matches_cpu_seidel_batch() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(7);
+    let problems = gen::independent_batch(&mut rng, 100, 30);
+    let (gpu_like, _) = engine
+        .solve(Variant::Rgb, &problems, Some(&mut rng))
+        .expect("solve");
+    let cpu = batch_cpu::solve_batch(&problems, Algo::Seidel, 4, 99);
+    for ((p, a), b) in problems.iter().zip(&gpu_like).zip(&cpu) {
+        assert!(agree(p, a, b, Tolerance::default()), "{a:?} vs {b:?}");
+    }
+}
+
+#[test]
+fn naive_and_rgb_variants_agree() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(11);
+    let problems = gen::mixed_batch(&mut rng, 48, 20, 0.3);
+    // No shuffle so both variants see the same constraint order.
+    let (a, _) = engine.solve(Variant::Rgb, &problems, None).expect("rgb");
+    let (b, _) = engine.solve(Variant::Naive, &problems, None).expect("naive");
+    for ((p, x), y) in problems.iter().zip(&a).zip(&b) {
+        assert!(agree(p, x, y, Tolerance::default()), "{x:?} vs {y:?}");
+    }
+}
+
+#[test]
+fn ref_variant_agrees_with_rgb() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(13);
+    let problems = gen::independent_batch(&mut rng, 32, 16);
+    let (a, _) = engine.solve(Variant::Rgb, &problems, None).expect("rgb");
+    let (b, _) = engine.solve(Variant::Ref, &problems, None).expect("ref");
+    for ((p, x), y) in problems.iter().zip(&a).zip(&b) {
+        assert!(agree(p, x, y, Tolerance::default()), "{x:?} vs {y:?}");
+    }
+}
+
+#[test]
+fn simplex_variant_agrees_on_bounded_problems() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(17);
+    // The batched-simplex comparator solves within its SIMPLEX_BOX domain;
+    // cap the optimum well inside it.
+    let problems: Vec<_> = (0..32)
+        .map(|_| gen::feasible_bounded(&mut rng, 12, 100.0))
+        .collect();
+    let (a, _) = engine.solve(Variant::Simplex, &problems, None).expect("simplex");
+    let cpu = batch_cpu::solve_batch(&problems, Algo::Seidel, 4, 5);
+    for ((p, x), y) in problems.iter().zip(&a).zip(&cpu) {
+        assert!(agree(p, x, y, Tolerance::default()), "{x:?} vs {y:?}");
+    }
+}
+
+#[test]
+fn bucket_padding_is_transparent() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(23);
+    // 10 problems of size 5 into a bucket of (256, 32): heavy padding on
+    // both axes must not change results.
+    let problems = gen::independent_batch(&mut rng, 10, 5);
+    let (sols, _) = engine.solve(Variant::Rgb, &problems, None).expect("solve");
+    assert_eq!(sols.len(), 10);
+    for (p, s) in problems.iter().zip(&sols) {
+        let want = brute::solve(p);
+        assert!(agree(p, s, &want, Tolerance::default()));
+    }
+}
+
+#[test]
+fn oversize_problem_is_rejected() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(29);
+    let max_m = engine.manifest().max_m(Variant::Rgb).unwrap();
+    let p = gen::feasible(&mut rng, max_m + 1);
+    assert!(engine.solve(Variant::Rgb, &[p], None).is_err());
+}
+
+#[test]
+fn timing_split_is_populated() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(31);
+    let problems = gen::independent_batch(&mut rng, 64, 16);
+    let (_, t) = engine.solve(Variant::Rgb, &problems, None).expect("solve");
+    assert!(t.pack_ns > 0);
+    assert!(t.execute_ns > 0);
+    assert!(t.memory_fraction() > 0.0 && t.memory_fraction() < 1.0);
+}

@@ -1,0 +1,86 @@
+//! Crowd simulation through the full PJRT path (paper Sec. 5 application).
+//! Skipped when artifacts are missing.
+
+use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::sim::{Backend, World, WorldParams};
+use batch_lp2d::solvers::batch_cpu::Algo;
+use batch_lp2d::util::Rng;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(Engine::new(dir).expect("engine"))
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_backend_progresses_agents() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(10);
+    let mut world = World::crossing_groups(&mut rng, 64, WorldParams::default());
+    let before = world.mean_goal_distance();
+    let backend = Backend::Engine { engine: &engine, variant: Variant::Rgb };
+    for _ in 0..10 {
+        world.step(&backend, &mut rng).expect("step");
+    }
+    assert!(world.mean_goal_distance() < before - 0.5);
+}
+
+#[test]
+fn engine_and_cpu_backends_agree_statistically() {
+    let Some(engine) = engine() else { return };
+    // Same initial world, two backends; trajectories should stay close in
+    // aggregate (identical LPs; objective ties may differ per agent).
+    let mk = || {
+        let mut rng = Rng::new(11);
+        World::crossing_groups(&mut rng, 48, WorldParams::default())
+    };
+    let mut w_gpu = mk();
+    let mut w_cpu = mk();
+    let mut rng1 = Rng::new(12);
+    let mut rng2 = Rng::new(12);
+    let be_gpu = Backend::Engine { engine: &engine, variant: Variant::Rgb };
+    let be_cpu = Backend::Cpu { algo: Algo::Seidel, threads: 2 };
+    for _ in 0..5 {
+        w_gpu.step(&be_gpu, &mut rng1).unwrap();
+        w_cpu.step(&be_cpu, &mut rng2).unwrap();
+    }
+    let d_gpu = w_gpu.mean_goal_distance();
+    let d_cpu = w_cpu.mean_goal_distance();
+    assert!(
+        (d_gpu - d_cpu).abs() < 0.5,
+        "goal-distance divergence: engine {d_gpu} vs cpu {d_cpu}"
+    );
+}
+
+#[test]
+fn separation_is_maintained_under_engine_backend() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(13);
+    let mut world = World::crossing_groups(&mut rng, 32, WorldParams::default());
+    let backend = Backend::Engine { engine: &engine, variant: Variant::Rgb };
+    for _ in 0..25 {
+        world.step(&backend, &mut rng).unwrap();
+    }
+    assert!(world.min_pairwise_distance() > 0.3, "{}", world.min_pairwise_distance());
+}
+
+#[test]
+fn infeasible_fallback_does_not_crash() {
+    let Some(engine) = engine() else { return };
+    // Pathological dense cluster: many agents in a tiny area.
+    let mut rng = Rng::new(14);
+    let positions: Vec<[f64; 2]> = (0..24)
+        .map(|_| [0.3 * rng.f64(), 0.3 * rng.f64()])
+        .collect();
+    let goals: Vec<[f64; 2]> = (0..24).map(|i| [(i % 5) as f64 * 3.0, 10.0]).collect();
+    let mut world = World::new(WorldParams::default(), positions, goals);
+    let backend = Backend::Engine { engine: &engine, variant: Variant::Rgb };
+    for _ in 0..5 {
+        let st = world.step(&backend, &mut rng).expect("step survives");
+        assert_eq!(st.lps, 24);
+    }
+}

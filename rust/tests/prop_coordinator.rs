@@ -1,0 +1,175 @@
+//! Property tests on coordinator invariants: routing totality, batching
+//! order/loss/deadline discipline, packing round-trips. Pure-Rust (no
+//! PJRT): the batcher and router are plain data structures.
+
+use std::time::{Duration, Instant};
+
+use batch_lp2d::coordinator::batcher::Batcher;
+use batch_lp2d::coordinator::router::Router;
+use batch_lp2d::runtime::manifest::{Manifest, Variant};
+use batch_lp2d::runtime::pack;
+use batch_lp2d::gen;
+use batch_lp2d::util::prop::check;
+use batch_lp2d::util::Rng;
+
+/// Random manifest text with rgb buckets at random (batch, m) points.
+fn random_manifest(rng: &mut Rng) -> Manifest {
+    let mut text = String::from("variant\tbatch\tm\tblock_b\tchunk\tfile\n");
+    let n = rng.range_usize(1, 6);
+    for i in 0..n {
+        let m = 1 << rng.range_usize(3, 9);
+        let b = 1 << rng.range_usize(5, 12);
+        text.push_str(&format!("rgb\t{b}\t{m}\t128\t64\tf{i}\n"));
+    }
+    Manifest::parse(&text, std::path::PathBuf::from("/tmp")).unwrap()
+}
+
+#[test]
+fn prop_router_totality_and_minimality() {
+    check("router totality", 200, |rng| {
+        let manifest = random_manifest(rng);
+        let router = Router::new(&manifest, Variant::Rgb).unwrap();
+        let max_class = *router.classes().last().unwrap();
+        for _ in 0..50 {
+            let m = rng.range_usize(1, max_class + 16);
+            match router.route(m) {
+                Some(c) => {
+                    assert!(c >= m, "class {c} < m {m}");
+                    // Minimality: no smaller class fits.
+                    for &other in router.classes() {
+                        if other >= m {
+                            assert!(c <= other);
+                        }
+                    }
+                }
+                None => assert!(m > max_class),
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_no_loss_no_duplication() {
+    check("batcher conservation", 200, |rng| {
+        let classes = vec![16usize, 64, 256];
+        let caps = vec![
+            rng.range_usize(1, 8),
+            rng.range_usize(1, 8),
+            rng.range_usize(1, 8),
+        ];
+        let mut b: Batcher<u64> = Batcher::new(classes.clone(), caps, Duration::from_millis(5));
+        let t0 = Instant::now();
+        let n = rng.range_usize(1, 200);
+        let mut emitted = Vec::new();
+        for i in 0..n as u64 {
+            let class = classes[rng.below(3)];
+            if let Some(ready) = b.push(class, i, t0) {
+                assert_eq!(ready.class_m, class);
+                emitted.extend(ready.items);
+            }
+        }
+        for ready in b.flush(t0) {
+            emitted.extend(ready.items);
+        }
+        emitted.sort_unstable();
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(emitted, want, "lost or duplicated items");
+        assert!(b.is_empty());
+    });
+}
+
+#[test]
+fn prop_batcher_fifo_within_class() {
+    check("batcher FIFO", 150, |rng| {
+        let cap = rng.range_usize(2, 10);
+        let mut b: Batcher<u64> = Batcher::new(vec![32], vec![cap], Duration::from_secs(1));
+        let t0 = Instant::now();
+        let mut last_emitted: i64 = -1;
+        for i in 0..rng.range_usize(1, 100) as u64 {
+            if let Some(ready) = b.push(32, i, t0) {
+                for &x in &ready.items {
+                    assert_eq!(x as i64, last_emitted + 1, "out of order");
+                    last_emitted = x as i64;
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_deadline_bound() {
+    check("batcher deadline", 150, |rng| {
+        let wait = Duration::from_millis(rng.range_usize(1, 50) as u64);
+        let mut b: Batcher<u32> = Batcher::new(vec![8], vec![1000], wait);
+        let t0 = Instant::now();
+        b.push(8, 1, t0);
+        // Just before the deadline: nothing fires.
+        let early = t0 + wait - Duration::from_nanos(1);
+        assert!(b.poll_expired(early).is_empty());
+        // At/after the deadline: exactly one batch with the item.
+        let late = t0 + wait;
+        let ready = b.poll_expired(late);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].items, vec![1]);
+        // Deadline reporting is consistent.
+        b.push(8, 2, late);
+        let d = b.next_deadline_in(late).unwrap();
+        assert!(d <= wait);
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip_shapes() {
+    check("pack shapes", 150, |rng| {
+        let n = rng.range_usize(1, 16);
+        let m_max = rng.range_usize(1, 12);
+        let bucket_b = n + rng.range_usize(0, 8);
+        let bucket_m = m_max + rng.range_usize(0, 8);
+        let problems: Vec<_> = (0..n)
+            .map(|_| {
+                let m = rng.range_usize(1, m_max);
+                gen::feasible(rng, m)
+            })
+            .collect();
+        let pb = pack::pack(&problems, bucket_b, bucket_m, Some(rng)).unwrap();
+        assert_eq!(pb.lines.len(), bucket_b * bucket_m * 4);
+        assert_eq!(pb.obj.len(), bucket_b * 2);
+        assert_eq!(pb.used, n);
+        // Valid flags: exactly p.m() per used slot, 0 for padding slots.
+        for (i, p) in problems.iter().enumerate() {
+            let valid: usize = (0..bucket_m)
+                .filter(|k| pb.lines[i * bucket_m * 4 + k * 4 + 3] > 0.5)
+                .count();
+            assert_eq!(valid, p.m());
+        }
+        for i in n..bucket_b {
+            let valid: usize = (0..bucket_m)
+                .filter(|k| pb.lines[i * bucket_m * 4 + k * 4 + 3] > 0.5)
+                .count();
+            assert_eq!(valid, 0);
+        }
+    });
+}
+
+#[test]
+fn prop_pack_preserves_constraint_multiset() {
+    check("pack multiset", 100, |rng| {
+        let m = rng.range_usize(1, 10);
+        let p = gen::feasible(rng, m);
+        let pb = pack::pack(std::slice::from_ref(&p), 1, m, Some(rng)).unwrap();
+        let mut packed: Vec<u32> = (0..m)
+            .map(|k| pb.lines[k * 4].to_bits() ^ pb.lines[k * 4 + 1].to_bits())
+            .collect();
+        let mut orig: Vec<u32> = p
+            .constraints
+            .iter()
+            .map(|h| {
+                let hn = h.normalized();
+                (hn.nx as f32).to_bits() ^ (hn.ny as f32).to_bits()
+            })
+            .collect();
+        packed.sort_unstable();
+        orig.sort_unstable();
+        assert_eq!(packed, orig);
+    });
+}

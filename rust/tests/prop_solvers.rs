@@ -1,0 +1,204 @@
+//! Property tests over the CPU solver fleet (in-repo harness; see
+//! `util::prop`). These are pure-Rust: no artifacts needed.
+
+use batch_lp2d::gen::{self, GenParams};
+use batch_lp2d::lp::brute;
+use batch_lp2d::lp::types::{HalfPlane, Problem, Status, EPS, M_BIG};
+use batch_lp2d::lp::validate::{agree, check_against_brute, Tolerance, Verdict};
+use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
+use batch_lp2d::util::prop::check;
+use batch_lp2d::util::Rng;
+
+fn random_problem(rng: &mut Rng) -> Problem {
+    let m = rng.range_usize(1, 24);
+    gen::feasible(rng, m)
+}
+
+#[test]
+fn prop_seidel_matches_brute_force() {
+    check("seidel == brute", 300, |rng| {
+        let p = random_problem(rng);
+        let s = seidel::solve(&p, rng);
+        let v = check_against_brute(&p, &s, Tolerance::default());
+        assert!(v.is_ok(), "{v:?} on m={}", p.m());
+    });
+}
+
+#[test]
+fn prop_simplex_matches_brute_force() {
+    check("simplex == brute", 200, |rng| {
+        let p = random_problem(rng);
+        let s = simplex::solve(&p);
+        let v = check_against_brute(&p, &s, Tolerance::default());
+        assert!(v.is_ok(), "{v:?} on m={}", p.m());
+    });
+}
+
+#[test]
+fn prop_seidel_and_simplex_agree() {
+    check("seidel == simplex", 200, |rng| {
+        let p = random_problem(rng);
+        let a = seidel::solve(&p, rng);
+        let b = simplex::solve(&p);
+        assert!(agree(&p, &a, &b, Tolerance::default()), "{a:?} vs {b:?}");
+    });
+}
+
+#[test]
+fn prop_infeasible_detected_by_all() {
+    check("infeasible detected", 150, |rng| {
+        let m = rng.range_usize(2, 20);
+        let p = gen::infeasible(rng, m);
+        assert_eq!(seidel::solve(&p, rng).status, Status::Infeasible, "seidel");
+        assert_eq!(simplex::solve(&p).status, Status::Infeasible, "simplex");
+    });
+}
+
+#[test]
+fn prop_solution_is_feasible_point() {
+    check("solution feasibility", 300, |rng| {
+        let p = random_problem(rng);
+        let s = seidel::solve(&p, rng);
+        if s.status == Status::Optimal {
+            let viol = p.max_violation(s.point[0], s.point[1]);
+            assert!(viol <= 10.0 * EPS, "violation {viol}");
+        }
+    });
+}
+
+#[test]
+fn prop_order_invariance() {
+    check("order invariance", 150, |rng| {
+        let p = random_problem(rng);
+        let v0 = seidel::solve_ordered(&p);
+        let v1 = seidel::solve(&p, rng);
+        assert!(agree(&p, &v0, &v1, Tolerance::default()));
+    });
+}
+
+#[test]
+fn prop_adding_redundant_constraint_keeps_optimum() {
+    check("redundant constraint", 150, |rng| {
+        let p = random_problem(rng);
+        let s0 = seidel::solve_ordered(&p);
+        if s0.status != Status::Optimal {
+            return;
+        }
+        // A constraint through a point far outside, oriented away: redundant.
+        let mut p2 = p.clone();
+        let ang = rng.range_f64(0.0, std::f64::consts::TAU);
+        let (nx, ny) = (ang.cos(), ang.sin());
+        let b = nx * s0.point[0] + ny * s0.point[1] + rng.range_f64(1.0, 50.0);
+        if b < M_BIG {
+            p2.constraints.push(HalfPlane::new(nx, ny, b));
+            let s1 = seidel::solve_ordered(&p2);
+            assert!(agree(&p2, &s0, &s1, Tolerance::default()), "{s0:?} vs {s1:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_tightening_never_improves_objective() {
+    check("monotonicity", 150, |rng| {
+        let p = random_problem(rng);
+        let s0 = seidel::solve_ordered(&p);
+        if s0.status != Status::Optimal {
+            return;
+        }
+        // Shrink a random constraint's b: feasible region only shrinks.
+        let mut p2 = p.clone();
+        if p2.constraints.is_empty() {
+            return;
+        }
+        let k = rng.below(p2.constraints.len());
+        p2.constraints[k].b -= rng.range_f64(0.0, 2.0);
+        let s1 = seidel::solve_ordered(&p2);
+        if s1.status == Status::Optimal {
+            assert!(
+                s1.objective(&p2) <= s0.objective(&p) + 1e-3,
+                "tightened LP improved: {} > {}",
+                s1.objective(&p2),
+                s0.objective(&p)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_batch_cpu_matches_per_problem() {
+    check("batch == per-problem", 60, |rng| {
+        let n = rng.range_usize(1, 40);
+        let problems: Vec<Problem> = (0..n).map(|_| random_problem(rng)).collect();
+        let batch = batch_cpu::solve_batch(&problems, Algo::Simplex, 3, 0);
+        for (p, s) in problems.iter().zip(&batch) {
+            let direct = simplex::solve(p);
+            assert!(agree(p, s, &direct, Tolerance::default()));
+        }
+    });
+}
+
+#[test]
+fn prop_degenerate_narrow_cones() {
+    // Nearly-parallel constraint pairs (ill-conditioned intersections).
+    check("narrow cones", 100, |rng| {
+        let base = rng.range_f64(0.0, std::f64::consts::TAU);
+        let eps = rng.range_f64(1e-4, 1e-2);
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(base.cos(), base.sin(), 1.0),
+                HalfPlane::new((base + eps).cos(), (base + eps).sin(), 1.0),
+                HalfPlane::new((base + std::f64::consts::PI / 3.0).cos(),
+                               (base + std::f64::consts::PI / 3.0).sin(), 2.0),
+            ],
+            [rng.f64() - 0.5, rng.f64() - 0.5],
+        );
+        let s = seidel::solve_ordered(&p);
+        let b = brute::solve(&p);
+        assert_eq!(s.status, b.status);
+        if s.status == Status::Optimal {
+            // Ill-conditioned: compare with a looser tolerance.
+            let tol = Tolerance { abs: 5e-2, rel: 1e-3 };
+            assert!(agree(&p, &s, &b, tol), "{s:?} vs {b:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_generator_params_respected() {
+    check("generator bounds", 100, |rng| {
+        let gp = GenParams { radius: 3.0, slack_lo: 0.1, slack_hi: 0.5 };
+        let p = gen::feasible_with(rng, 8, gp);
+        assert_eq!(p.m(), 8);
+        for h in &p.constraints {
+            let norm = (h.nx * h.nx + h.ny * h.ny).sqrt();
+            assert!((norm - 1.0).abs() < 1e-9);
+        }
+        // The sampled interior disc + max slack bounds |b|.
+        for h in &p.constraints {
+            assert!(h.b.abs() <= 3.0 + 0.5 + 1e-9, "b={}", h.b);
+        }
+    });
+}
+
+#[test]
+fn prop_verdict_catches_planted_errors() {
+    // Meta-test: the validator itself must reject corrupted solutions.
+    check("validator sensitivity", 80, |rng| {
+        let p = gen::feasible(rng, 10);
+        let s = seidel::solve(&p, rng);
+        if s.status != Status::Optimal {
+            return;
+        }
+        // Plant a regression along -obj: must be flagged as suboptimal or
+        // infeasible-point.
+        let bad = batch_lp2d::lp::types::Solution::optimal(
+            s.point[0] - 5.0 * p.obj[0],
+            s.point[1] - 5.0 * p.obj[1],
+        );
+        let v = check_against_brute(&p, &bad, Tolerance::default());
+        assert!(
+            matches!(v, Verdict::Suboptimal { .. } | Verdict::InfeasiblePoint { .. }),
+            "{v:?}"
+        );
+    });
+}

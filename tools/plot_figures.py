@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Render the paper's figures from the bench harness's markdown tables.
+
+Usage:
+    python tools/plot_figures.py [bench_output.txt|results/figures_full.md] [-o results/plots]
+
+Parses every "## Figure ..." markdown table emitted by the bench binaries
+(`cargo bench | tee bench_output.txt`) and renders one PNG per figure with
+the paper's axes: log-log timing sweeps for Figs 3/4, a heatmap for Fig 5,
+grouped lines for Figs 6/7. Purely offline post-processing — not part of
+the build or the timed path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+import numpy as np
+
+
+def parse_tables(text: str):
+    """Yield (title, header, rows) for every '## <title>' + markdown table."""
+    blocks = re.split(r"^## ", text, flags=re.M)[1:]
+    for block in blocks:
+        lines = block.strip().splitlines()
+        title = lines[0].strip()
+        rows = [l for l in lines[1:] if l.strip().startswith("|")]
+        if len(rows) < 3:
+            continue
+        split = lambda l: [c.strip() for c in l.strip().strip("|").split("|")]
+        header = split(rows[0])
+        body = [split(r) for r in rows[2:]]
+        yield title, header, body
+
+
+def fnum(s: str):
+    try:
+        return float(s.rstrip("x"))
+    except ValueError:
+        return None
+
+
+def plot_sweep(title, header, body, out: pathlib.Path):
+    """Figs 3/4 and 6: x in column 0, one series per remaining column."""
+    x = [fnum(r[0]) for r in body]
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for ci in range(1, len(header)):
+        y = [fnum(r[ci]) for r in body]
+        pts = [(xi, yi) for xi, yi in zip(x, y) if yi is not None]
+        if not pts:
+            continue
+        ax.plot(*zip(*pts), marker="o", label=header[ci])
+    ax.set_xscale("log", base=2)
+    ax.set_yscale("log")
+    ax.set_xlabel(header[0])
+    ax.set_ylabel("time (ms)")
+    ax.set_title(title, fontsize=9)
+    ax.legend(fontsize=7)
+    ax.grid(True, which="both", alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(out, dpi=130)
+    plt.close(fig)
+
+
+def plot_fig5(title, header, body, out: pathlib.Path):
+    """Fig 5: (batch, lp_size) -> mem_frac heatmap (the paper's surface)."""
+    batches = sorted({int(r[0]) for r in body})
+    sizes = sorted({int(r[1]) for r in body})
+    grid = np.full((len(batches), len(sizes)), np.nan)
+    for r in body:
+        grid[batches.index(int(r[0])), sizes.index(int(r[1]))] = fnum(r[2])
+    fig, ax = plt.subplots(figsize=(5.5, 4))
+    im = ax.imshow(grid, origin="lower", aspect="auto", cmap="viridis")
+    ax.set_xticks(range(len(sizes)), sizes)
+    ax.set_yticks(range(len(batches)), batches)
+    ax.set_xlabel("lp_size")
+    ax.set_ylabel("batch")
+    ax.set_title(title, fontsize=9)
+    fig.colorbar(im, label="memory-management fraction")
+    fig.tight_layout()
+    fig.savefig(out, dpi=130)
+    plt.close(fig)
+
+
+def plot_fig7(title, header, body, out: pathlib.Path):
+    """Fig 7: speedup bar per lp_size (paper's relative-timing panels)."""
+    x = [r[0] for r in body]
+    sp = [fnum(r[header.index("speedup")]) for r in body]
+    fig, ax = plt.subplots(figsize=(5.5, 3.5))
+    ax.bar(x, sp, color="#3b6ea5")
+    ax.axhline(1.0, color="k", lw=0.8, ls="--")
+    ax.set_xlabel("lp_size")
+    ax.set_ylabel("NaiveRGB / RGB (kernel time)")
+    ax.set_title(title, fontsize=9)
+    fig.tight_layout()
+    fig.savefig(out, dpi=130)
+    plt.close(fig)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("input", nargs="?", default="bench_output.txt")
+    ap.add_argument("-o", "--out-dir", default="results/plots")
+    args = ap.parse_args()
+
+    text = pathlib.Path(args.input).read_text()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    count = 0
+    for title, header, body in parse_tables(text):
+        slug = re.sub(r"[^a-z0-9]+", "_", title.lower()).strip("_")[:48]
+        out = out_dir / f"{slug}.png"
+        if "memory-management" in title or "memory fraction" in title.lower():
+            plot_fig5(title, header, body, out)
+        elif "speedup" in header:
+            plot_fig7(title, header, body, out)
+        elif header[0] in ("lp_size", "batch", "contention", "max_wait_ms", "m", "bucket_m"):
+            plot_sweep(title, header, body, out)
+        else:
+            continue
+        print(f"wrote {out}")
+        count += 1
+    if count == 0:
+        raise SystemExit("no tables found — run `cargo bench | tee bench_output.txt` first")
+
+
+if __name__ == "__main__":
+    main()
