@@ -87,6 +87,12 @@ fn main() -> anyhow::Result<()> {
         "  exec split: memory fraction {:.1}% (Fig-5 quantity, serving mode)",
         100.0 * snap.memory_fraction()
     );
+    println!(
+        "  pipelining: {:.3} ms critical path vs {:.3} ms summed stages ({:.2}x overlap)",
+        snap.timing.critical_path_ns as f64 / 1e6,
+        snap.timing.total_ns() as f64 / 1e6,
+        snap.overlap_ratio()
+    );
     service.shutdown();
     println!("serve OK");
     Ok(())

@@ -11,5 +11,11 @@ fn main() -> anyhow::Result<()> {
     let t = figures::fig5(&ctx, &[128, 512, 2048, 4096], &[16, 32, 64, 128, 256])?;
     println!("\n## Figure 5 (memory-management fraction)\n");
     print!("{}", t.to_markdown());
+
+    // Companion: how much of that memory time the double-buffered stream
+    // hides behind execution.
+    let t = figures::fig5_pipeline(&ctx, 512, 64, &[2, 4, 8, 16])?;
+    println!("\n## Figure 5 companion (pipelined solve_stream overlap)\n");
+    print!("{}", t.to_markdown());
     Ok(())
 }

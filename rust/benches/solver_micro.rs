@@ -1,12 +1,144 @@
 //! Microbenchmarks of the CPU substrate: per-solver single-problem cost
-//! across sizes, multicore batch scaling, packing throughput. Complements
-//! the figure benches with component-level numbers for the perf log.
+//! across sizes, multicore batch scaling, packing throughput, and the
+//! double-buffered pipeline's overlap win. Complements the figure benches
+//! with component-level numbers for the perf log.
+//!
+//! Emits `BENCH_pipeline.json` (throughput + memory fraction + overlap) so
+//! the perf trajectory is tracked across PRs.
 
 use batch_lp2d::bench::{bench, report_line, BenchOpts};
 use batch_lp2d::gen;
-use batch_lp2d::runtime::pack;
+use batch_lp2d::lp::types::Problem;
+use batch_lp2d::runtime::pack::{self, PackedBatch};
+use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
+use batch_lp2d::runtime::{default_artifact_dir, Engine, Variant};
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
-use batch_lp2d::util::Rng;
+use batch_lp2d::util::{Rng, Timer};
+
+/// Pipeline worker over the CPU substrate: the stage thread packs chunks
+/// into wire format (the Fig-5 "memory management" cost) while the caller
+/// thread solves them — the same overlap `Engine::solve_stream` gets from
+/// PJRT, runnable without artifacts.
+struct CpuStage<'a> {
+    pool: Vec<PackedBatch>,
+    rng: Rng,
+    _tie: std::marker::PhantomData<&'a ()>,
+}
+
+impl<'a> StageWorker for CpuStage<'a> {
+    type Chunk = &'a [Problem];
+    type Staged = (PackedBatch, &'a [Problem]);
+    type Raw = PackedBatch;
+    type Out = ();
+
+    fn stage(&mut self, _idx: usize, chunk: &'a [Problem]) -> anyhow::Result<Self::Staged> {
+        let mut pb = self.pool.pop().unwrap_or_else(PackedBatch::empty);
+        let m = chunk.iter().map(|p| p.m()).max().unwrap_or(1);
+        pack::pack_into(chunk, chunk.len(), m, Some(&mut self.rng), &mut pb)?;
+        Ok((pb, chunk))
+    }
+
+    fn finish(&mut self, _idx: usize, pb: PackedBatch) -> anyhow::Result<()> {
+        self.pool.push(pb);
+        Ok(())
+    }
+}
+
+fn pipeline_report(problems: &[Problem], chunk: usize, threads: usize) -> String {
+    let chunks: Vec<&[Problem]> = problems.chunks(chunk).collect();
+    let n_chunks = chunks.len();
+
+    // Serial reference: pack then solve, chunk after chunk, one thread's
+    // worth of wall time with no overlap.
+    let mut pb = PackedBatch::empty();
+    let mut rng = Rng::new(21);
+    let mut pack_ns = 0u64;
+    let mut solve_ns = 0u64;
+    for c in &chunks {
+        let m = c.iter().map(|p| p.m()).max().unwrap_or(1);
+        let t = Timer::start();
+        pack::pack_into(*c, c.len(), m, Some(&mut rng), &mut pb).expect("pack");
+        pack_ns += t.elapsed_ns();
+        let t = Timer::start();
+        std::hint::black_box(batch_cpu::solve_batch(c, Algo::Seidel, threads, 7));
+        solve_ns += t.elapsed_ns();
+    }
+    let serial_ns = pack_ns + solve_ns;
+
+    // Pipelined: stage thread packs chunk k+1 while we solve chunk k.
+    let worker = CpuStage {
+        pool: vec![PackedBatch::empty(), PackedBatch::empty(), PackedBatch::empty()],
+        rng: Rng::new(21),
+        _tie: std::marker::PhantomData,
+    };
+    let (result, _, stats) =
+        run_pipelined(chunks.iter().copied(), worker, 2, |_, (pb, probs)| {
+            std::hint::black_box(batch_cpu::solve_batch(probs, Algo::Seidel, threads, 7));
+            Ok(pb)
+        });
+    result.expect("pipeline");
+
+    let lps = problems.len() as f64 / (stats.critical_path_ns.max(1) as f64 / 1e9);
+    let mem_frac = pack_ns as f64 / serial_ns.max(1) as f64;
+    let speedup = serial_ns as f64 / stats.critical_path_ns.max(1) as f64;
+    println!(
+        "pipeline: {n_chunks} chunks x {chunk} LPs  serial {:.3} ms  pipelined {:.3} ms  \
+         speedup {speedup:.3}x  overlap {:.3}",
+        serial_ns as f64 / 1e6,
+        stats.critical_path_ns as f64 / 1e6,
+        stats.overlap_ratio(),
+    );
+    format!(
+        "{{\n  \"bench\": \"pipeline_cpu\",\n  \"chunks\": {n_chunks},\n  \"chunk_size\": {chunk},\n  \
+         \"throughput_lps\": {lps:.1},\n  \"memory_fraction\": {mem_frac:.4},\n  \
+         \"serial_ms\": {:.3},\n  \"pipelined_ms\": {:.3},\n  \"overlap_speedup\": {speedup:.4},\n  \
+         \"stage_busy_ms\": {:.3},\n  \"execute_busy_ms\": {:.3}\n}}",
+        serial_ns as f64 / 1e6,
+        stats.critical_path_ns as f64 / 1e6,
+        stats.stage_busy_ns as f64 / 1e6,
+        stats.execute_busy_ns as f64 / 1e6,
+    )
+}
+
+/// Engine-path pipeline numbers; None when artifacts (or the real PJRT
+/// backend) are unavailable.
+fn engine_pipeline_report(problems: &[Problem], chunk: usize) -> Option<String> {
+    let engine = Engine::new(default_artifact_dir()).ok()?;
+    let chunks: Vec<&[Problem]> = problems.chunks(chunk).collect();
+
+    // Warm the executable cache so the serial baseline doesn't charge the
+    // one-time XLA compile to "pipelining win".
+    let mut rng = Rng::new(5);
+    engine.solve(Variant::Rgb, chunks[0], Some(&mut rng)).ok()?;
+
+    let mut rng = Rng::new(5);
+    let mut serial = batch_lp2d::runtime::ExecTiming::default();
+    for c in &chunks {
+        let (_, t) = engine.solve(Variant::Rgb, *c, Some(&mut rng)).ok()?;
+        serial.accumulate(&t);
+    }
+    let mut rng = Rng::new(5);
+    let (_, stream) = engine
+        .solve_stream(Variant::Rgb, chunks.iter().copied(), Some(&mut rng))
+        .ok()?;
+    let lps = problems.len() as f64 / (stream.critical_path_ns.max(1) as f64 / 1e9);
+    println!(
+        "pipeline(engine): serial {:.3} ms  pipelined {:.3} ms  overlap {:.3}",
+        serial.critical_path_ns as f64 / 1e6,
+        stream.critical_path_ns as f64 / 1e6,
+        stream.overlap_ratio(),
+    );
+    Some(format!(
+        "{{\n  \"bench\": \"pipeline_engine_rgb\",\n  \"chunks\": {},\n  \"chunk_size\": {chunk},\n  \
+         \"throughput_lps\": {lps:.1},\n  \"memory_fraction\": {:.4},\n  \
+         \"serial_ms\": {:.3},\n  \"pipelined_ms\": {:.3},\n  \"overlap_speedup\": {:.4}\n}}",
+        chunks.len(),
+        stream.memory_fraction(),
+        serial.critical_path_ns as f64 / 1e6,
+        stream.critical_path_ns as f64 / 1e6,
+        serial.critical_path_ns as f64 / stream.critical_path_ns.max(1) as f64,
+    ))
+}
 
 fn main() {
     let opts = BenchOpts::from_env();
@@ -42,4 +174,22 @@ fn main() {
     println!("{}", report_line(&bench("pack/plain", opts, || {
         std::hint::black_box(pack::pack(&problems, 4096, 64, None).unwrap());
     })));
+
+    println!("\n## double-buffered pipeline (pack overlapped with solve)");
+    // Single-threaded solve keeps the execute stage comparable to the pack
+    // stage so the overlap is visible on any core count.
+    let json_cpu = pipeline_report(&problems, 512, 1);
+    let json_engine = engine_pipeline_report(&problems, 512);
+
+    let mut body = String::from("[\n");
+    body.push_str(&json_cpu);
+    if let Some(j) = &json_engine {
+        body.push_str(",\n");
+        body.push_str(j);
+    }
+    body.push_str("\n]\n");
+    match std::fs::write("BENCH_pipeline.json", &body) {
+        Ok(()) => println!("wrote BENCH_pipeline.json"),
+        Err(e) => eprintln!("could not write BENCH_pipeline.json: {e}"),
+    }
 }

@@ -188,6 +188,70 @@ pub fn fig5(ctx: &FigureCtx<'_>, batches: &[usize], sizes: &[usize]) -> anyhow::
     Ok(table)
 }
 
+/// Figure-5 companion: the pipelining win. A fixed (chunk, m) workload is
+/// split into `n_chunks` chunks and run twice — serially (one
+/// `Engine::solve` per chunk) and through the double-buffered
+/// `Engine::solve_stream` — reporting wall time, overlap ratio, and the
+/// memory fraction. The pipelined column's critical path dropping below
+/// the serial column is the win Figure 5 motivates.
+pub fn fig5_pipeline(
+    ctx: &FigureCtx<'_>,
+    chunk: usize,
+    m: usize,
+    chunk_counts: &[usize],
+) -> anyhow::Result<Table> {
+    let mut table = Table::new(&[
+        "chunks",
+        "serial_ms",
+        "pipelined_ms",
+        "speedup",
+        "overlap",
+        "mem_frac",
+    ]);
+    if ctx.engine.manifest().fit(Variant::Rgb, chunk, m).is_none() {
+        return Ok(table);
+    }
+    for &n_chunks in chunk_counts {
+        let problems = ctx.problems(chunk * n_chunks, m);
+        let chunks: Vec<&[Problem]> = problems.chunks(chunk).collect();
+        if chunks.is_empty() {
+            continue;
+        }
+
+        // Warm the executable cache so neither path pays the one-time
+        // XLA compile inside its timed region.
+        let mut rng = Rng::new(ctx.seed);
+        ctx.engine.solve(Variant::Rgb, chunks[0], Some(&mut rng))?;
+
+        // Serial: one engine call per chunk.
+        let mut rng = Rng::new(ctx.seed);
+        let mut serial = crate::runtime::ExecTiming::default();
+        for c in &chunks {
+            let (_, t) = ctx.engine.solve(Variant::Rgb, *c, Some(&mut rng))?;
+            serial.accumulate(&t);
+        }
+
+        // Pipelined: same chunks, same seed, one stream.
+        let mut rng = Rng::new(ctx.seed);
+        let (_, stream) =
+            ctx.engine
+                .solve_stream(Variant::Rgb, chunks.iter().copied(), Some(&mut rng))?;
+
+        let serial_ms = serial.critical_path_ns as f64 / 1e6;
+        let stream_ms = stream.critical_path_ns as f64 / 1e6;
+        table.push_row(vec![
+            n_chunks.to_string(),
+            format!("{serial_ms:.3}"),
+            format!("{stream_ms:.3}"),
+            format!("{:.3}", serial_ms / stream_ms.max(1e-9)),
+            format!("{:.3}", stream.overlap_ratio()),
+            format!("{:.4}", stream.memory_fraction()),
+        ]);
+        eprintln!("  {}", table.rows.last().unwrap().join("\t"));
+    }
+    Ok(table)
+}
+
 /// Figures 7a-7b: speedup of optimized RGB over NaiveRGB, kernel time only
 /// (the paper excludes transfer), versus LP size at a fixed batch.
 ///

@@ -30,6 +30,18 @@ pub struct ExecTimingTotals {
     pub transfer_ns: u64,
     pub execute_ns: u64,
     pub unpack_ns: u64,
+    /// Summed executor critical paths. With pipelined executors the pack
+    /// stage overlaps execution, so this is less than the four stage sums;
+    /// the ratio is the serving-path pipelining win.
+    pub critical_path_ns: u64,
+}
+
+impl ExecTimingTotals {
+    /// Summed stage time (the serial-execution cost), mirroring
+    /// `ExecTiming::total_ns`.
+    pub fn total_ns(&self) -> u64 {
+        self.pack_ns + self.transfer_ns + self.execute_ns + self.unpack_ns
+    }
 }
 
 /// Thread-safe metrics sink.
@@ -88,6 +100,7 @@ impl Metrics {
         g.exec_timing.transfer_ns += timing.transfer_ns;
         g.exec_timing.execute_ns += timing.execute_ns;
         g.exec_timing.unpack_ns += timing.unpack_ns;
+        g.exec_timing.critical_path_ns += timing.critical_path_ns;
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -117,8 +130,15 @@ impl Snapshot {
     /// Figure-5 style memory-management fraction over the whole run.
     pub fn memory_fraction(&self) -> f64 {
         let t = &self.timing;
-        let total = (t.pack_ns + t.transfer_ns + t.execute_ns + t.unpack_ns).max(1) as f64;
+        let total = t.total_ns().max(1) as f64;
         (t.pack_ns + t.transfer_ns + t.unpack_ns) as f64 / total
+    }
+
+    /// Summed stage time over summed executor critical path: ~1 for serial
+    /// executors, > 1 once the pack stage overlaps execution.
+    pub fn overlap_ratio(&self) -> f64 {
+        let t = &self.timing;
+        t.total_ns() as f64 / t.critical_path_ns.max(1) as f64
     }
 }
 
@@ -136,7 +156,13 @@ mod tests {
             4,
             1,
             Duration::from_micros(5),
-            &ExecTiming { pack_ns: 1, transfer_ns: 2, execute_ns: 6, unpack_ns: 1 },
+            &ExecTiming {
+                pack_ns: 1,
+                transfer_ns: 2,
+                execute_ns: 6,
+                unpack_ns: 1,
+                critical_path_ns: 9,
+            },
         );
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
@@ -145,6 +171,8 @@ mod tests {
         assert_eq!(s.batches, 1);
         assert!((s.mean_occupancy - 0.5).abs() < 1e-12);
         assert!((s.memory_fraction() - 0.4).abs() < 1e-12);
+        // Pack (1ns) overlapped execution: 10ns of stages in 9ns of wall.
+        assert!((s.overlap_ratio() - 10.0 / 9.0).abs() < 1e-12);
     }
 
     #[test]

@@ -4,17 +4,26 @@
 //! Topology (std threads; the offline vendor set has no tokio):
 //!
 //! ```text
-//!   submit() ──sync_channel──▶ dispatcher ──channel──▶ executor pool (N)
-//!      ▲                        (router +                 (engine.solve)
-//!      │                         batcher)                      │
-//!      └────────── per-request reply channel ◀────────────────┘
+//!   submit() ──sync_channel──▶ dispatcher ──channel──▶ executor pairs (N)
+//!      ▲                        (router +      ┌──────────────┐
+//!      │                         batcher)      │ pack stage   │ (pack_into)
+//!      │                                       │   │ sync_channel(depth 2)
+//!      │                                       │ execute stage│ (engine)
+//!      │                                       └──────────────┘
+//!      └────────── per-request reply channel ◀────────┘
 //! ```
 //!
 //! * The bounded submit channel is the backpressure surface.
 //! * The dispatcher owns the `Batcher` and closes batches on capacity or
 //!   deadline; it never touches PJRT.
-//! * Executors run whole batches on the `Engine` and fan results out to the
-//!   per-request reply channels.
+//! * Each executor is a **pipelined pair**: a pack-stage thread pulls ready
+//!   batches, packs them into rotating `PackedBatch` buffers (no `Problem`
+//!   clones — it packs straight from borrowed pending requests), and feeds
+//!   a depth-bounded channel; an execute-stage thread owns the `Engine`,
+//!   runs transfer/execute/unpack, fans results out to the per-request
+//!   reply channels, and recycles buffers back to the pack stage. Packing
+//!   batch k+1 thus overlaps executing batch k — the same double-buffering
+//!   `Engine::solve_stream` does, applied to the serving path.
 
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -25,8 +34,13 @@ use crate::coordinator::batcher::{Batcher, ReadyBatch};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
-use crate::runtime::{Engine, Manifest, Variant};
+use crate::runtime::pack::{pack_into, PackedBatch};
+use crate::runtime::{Bucket, Engine, Manifest, Variant};
 use crate::util::Rng;
+
+/// How many packed batches may queue between an executor's pack stage and
+/// its execute stage (2 = double buffering; also bounds buffer-pool size).
+const PIPELINE_DEPTH: usize = 2;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -37,10 +51,11 @@ pub struct Config {
     pub max_wait: Duration,
     /// Cap on per-class batch size (None = the bucket capacity).
     pub max_batch: Option<usize>,
-    /// Executor threads running PJRT batches. The `xla` client is not
+    /// Executor pairs running PJRT batches. The `xla` client is not
     /// shareable across threads, so each executor owns a *separate* Engine
-    /// (its own PJRT client + executable cache). 1 is usually right on CPU:
-    /// XLA already parallelizes inside one execution.
+    /// (its own PJRT client + executable cache) plus a dedicated pack-stage
+    /// thread. 1 is usually right on CPU: XLA already parallelizes inside
+    /// one execution, and the pack stage overlaps it.
     pub executors: usize,
     /// Bounded submit-queue depth (backpressure).
     pub queue_depth: usize,
@@ -117,9 +132,31 @@ struct Pending {
     reply: mpsc::Sender<anyhow::Result<Solution>>,
 }
 
+// Lets the pack stage feed `pack_into` straight from the borrowed request
+// slice — no `Problem` clones, no per-batch ref-vec. (`Pending` is `Sync`:
+// `mpsc::Sender` has been `Sync` since Rust 1.72.)
+impl std::borrow::Borrow<Problem> for Pending {
+    fn borrow(&self) -> &Problem {
+        &self.problem
+    }
+}
+
 enum Msg {
     Request(usize, Pending), // class_m, request
     Shutdown,
+}
+
+/// A batch packed by an executor's pack stage, awaiting device execution.
+/// Occupancy accounting uses `bucket.batch` (the capacity that will run).
+struct StagedBatch {
+    bucket: Bucket,
+    pb: PackedBatch,
+    items: Vec<Pending>,
+    oldest_wait: Duration,
+    /// When packing ran, so the execute stage can measure how much of it
+    /// was actually hidden behind the previous batch's execution.
+    pack_started: Instant,
+    pack_finished: Instant,
 }
 
 /// The running service.
@@ -132,11 +169,12 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start dispatcher + executor threads over an artifact directory.
+    /// Start dispatcher + executor-pair threads over an artifact directory.
     ///
-    /// Each executor thread owns a private [`Engine`] (PJRT client +
-    /// executable cache); engines are constructed here so any setup error
-    /// surfaces synchronously, then *moved* into their threads.
+    /// Each executor pair owns a private [`Engine`] (PJRT client +
+    /// executable cache) on its execute-stage thread; engines are
+    /// constructed here so any setup error surfaces synchronously, then
+    /// *moved* into their threads.
     pub fn start(artifact_dir: impl AsRef<Path>, config: Config) -> anyhow::Result<Service> {
         let dir: PathBuf = artifact_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
@@ -147,39 +185,78 @@ impl Service {
         let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
         let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
 
-        // Executor pool: one Engine per thread (see Config::executors).
+        // Executor pool: one pack/execute pair per executor.
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        let mut executors = Vec::with_capacity(config.executors.max(1));
-        for e in 0..config.executors.max(1) {
+        let n_executors = config.executors.max(1);
+        let mut executors = Vec::with_capacity(n_executors * 2);
+        for e in 0..n_executors {
             let engine = Engine::new(&dir)?;
-            let metrics = metrics.clone();
-            let batch_rx = batch_rx.clone();
-            let router = router.clone();
-            let variant = config.variant;
-            let warm = config.warm;
-            let ready_tx = ready_tx.clone();
+            // The pack stage never touches PJRT; it gets its own manifest
+            // copy for bucket fitting.
+            let pack_manifest = engine.manifest().clone();
+            let (staged_tx, staged_rx) = mpsc::sync_channel::<StagedBatch>(PIPELINE_DEPTH);
+            let (recycle_tx, recycle_rx) = mpsc::channel::<PackedBatch>();
             let seed = config.seed ^ (e as u64).wrapping_mul(0xA5A5_5A5A_1234_5678);
-            executors.push(std::thread::spawn(move || {
-                if warm {
-                    let _ = ready_tx.send(warm_classes(&engine, &router, variant));
-                } else {
-                    let _ = ready_tx.send(Ok(()));
-                }
-                drop(ready_tx);
-                let mut rng = Rng::new(seed);
-                loop {
-                    let batch = {
-                        let guard = batch_rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(batch) = batch else { break };
-                    run_batch(&engine, &router, variant, batch, &metrics, &mut rng);
-                }
-            }));
+
+            // Pack stage: ready batches -> packed buffers.
+            {
+                let batch_rx = batch_rx.clone();
+                let variant = config.variant;
+                executors.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    loop {
+                        let batch = {
+                            let guard = batch_rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(batch) = batch else { break };
+                        stage_batch(
+                            &pack_manifest,
+                            variant,
+                            batch,
+                            &mut rng,
+                            &staged_tx,
+                            &recycle_rx,
+                        );
+                    }
+                    // Dropping staged_tx drains the execute stage.
+                }));
+            }
+
+            // Execute stage: packed buffers -> PJRT -> replies.
+            {
+                let metrics = metrics.clone();
+                let router = router.clone();
+                let variant = config.variant;
+                let warm = config.warm;
+                let ready_tx = ready_tx.clone();
+                executors.push(std::thread::spawn(move || {
+                    if warm {
+                        let _ = ready_tx.send(warm_classes(&engine, &router, variant));
+                    } else {
+                        let _ = ready_tx.send(Ok(()));
+                    }
+                    drop(ready_tx);
+                    // Reused decode buffer: steady-state executors allocate
+                    // nothing per batch beyond the PJRT d2h staging.
+                    let mut solutions: Vec<Solution> = Vec::new();
+                    let mut last_done: Option<Instant> = None;
+                    while let Ok(staged) = staged_rx.recv() {
+                        run_staged(
+                            &engine,
+                            staged,
+                            &metrics,
+                            &mut solutions,
+                            &recycle_tx,
+                            &mut last_done,
+                        );
+                    }
+                }));
+            }
         }
         drop(ready_tx);
         // Block until every executor reports readiness (warm or not).
-        for _ in 0..executors.len() {
+        for _ in 0..n_executors {
             match ready_rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => return Err(e.context("executor warmup failed")),
@@ -227,7 +304,7 @@ impl Service {
                 for ready in batcher.flush(Instant::now()) {
                     let _ = batch_tx.send(ready);
                 }
-                drop(batch_tx); // closes the executor pool
+                drop(batch_tx); // closes the executor pack stages
             })
         };
 
@@ -240,11 +317,13 @@ impl Service {
             m: problem.m(),
             max_m: *self.router.classes().last().unwrap(),
         })?;
-        self.metrics.on_submit();
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Request(class_m, Pending { problem, reply }))
             .map_err(|_| SubmitError::Closed)?;
+        // Count only after the send succeeded: a Closed service must not
+        // inflate the submit counter.
+        self.metrics.on_submit();
         Ok(Ticket { rx })
     }
 
@@ -303,39 +382,113 @@ fn warm_classes(engine: &Engine, router: &Router, variant: Variant) -> anyhow::R
     Ok(())
 }
 
-fn run_batch(
-    engine: &Engine,
-    router: &Router,
+/// Pack-stage half of an executor pair: pack a ready batch straight from
+/// the borrowed pending requests (no `Problem` clones) into a recycled
+/// buffer and hand it to the execute stage. The bounded `staged_tx` is the
+/// pipeline's depth control: at most `PIPELINE_DEPTH` packed batches wait
+/// while the engine executes.
+fn stage_batch(
+    manifest: &Manifest,
     variant: Variant,
     batch: ReadyBatch<Pending>,
-    metrics: &Metrics,
     rng: &mut Rng,
+    staged_tx: &mpsc::SyncSender<StagedBatch>,
+    recycle_rx: &mpsc::Receiver<PackedBatch>,
 ) {
-    let problems: Vec<Problem> = batch.items.iter().map(|p| p.problem.clone()).collect();
-    // Occupancy accounting is against the bucket that will actually run.
-    let m_max = problems.iter().map(|p| p.m()).max().unwrap_or(batch.class_m);
-    let capacity = engine
-        .manifest()
-        .fit(variant, problems.len(), m_max)
-        .map(|b| b.batch)
-        .or_else(|| router.capacity(batch.class_m))
-        .unwrap_or(problems.len());
-    match engine.solve(variant, &problems, Some(rng)) {
-        Ok((solutions, timing)) => {
+    let m_max = batch
+        .items
+        .iter()
+        .map(|p| p.problem.m())
+        .max()
+        .unwrap_or(batch.class_m);
+    let Some(bucket) = manifest.fit(variant, batch.items.len(), m_max).cloned() else {
+        let msg = format!(
+            "no {} bucket fits batch (n={}, m={m_max})",
+            variant.as_str(),
+            batch.items.len()
+        );
+        for pending in batch.items {
+            let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
+        }
+        return;
+    };
+
+    let mut pb = recycle_rx.try_recv().unwrap_or_else(|_| PackedBatch::empty());
+    let pack_started = Instant::now();
+    let packed = pack_into(&batch.items, bucket.batch, bucket.m, Some(rng), &mut pb);
+    let pack_finished = Instant::now();
+    if let Err(e) = packed {
+        let msg = format!("batch packing failed: {e}");
+        for pending in batch.items {
+            let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
+        }
+        return;
+    }
+
+    let staged = StagedBatch {
+        bucket,
+        pb,
+        items: batch.items,
+        oldest_wait: batch.oldest_wait,
+        pack_started,
+        pack_finished,
+    };
+    // Blocks when the execute stage is PIPELINE_DEPTH batches behind
+    // (backpressure). On shutdown the execute stage is gone; fail the
+    // requests instead of dropping them silently.
+    if let Err(mpsc::SendError(staged)) = staged_tx.send(staged) {
+        for pending in staged.items {
+            let _ = pending
+                .reply
+                .send(Err(anyhow::anyhow!("service executor shut down")));
+        }
+    }
+}
+
+/// Execute-stage half of an executor pair: run a staged batch on the
+/// engine, fan results out, recycle the packed buffer. `last_done` is the
+/// end of this executor's previous execution (None before the first).
+fn run_staged(
+    engine: &Engine,
+    staged: StagedBatch,
+    metrics: &Metrics,
+    solutions: &mut Vec<Solution>,
+    recycle_tx: &mpsc::Sender<PackedBatch>,
+    last_done: &mut Option<Instant>,
+) {
+    let StagedBatch { bucket, pb, items, oldest_wait, pack_started, pack_finished } = staged;
+    match engine.execute_packed_into(&bucket, &pb, solutions) {
+        Ok(mut timing) => {
+            // Pack ran on the stage thread; only the part that was NOT
+            // hidden behind this executor's previous execution counts
+            // toward the critical path. On an idle service (nothing to
+            // overlap with) that is the whole pack, so overlap_ratio
+            // stays ~1 — the metric reports measured overlap, not an
+            // assumption.
+            let hidden_until = match *last_done {
+                Some(done) => done.max(pack_started),
+                None => pack_started,
+            };
+            let exposed_pack = pack_finished.saturating_duration_since(hidden_until);
+            timing.pack_ns =
+                pack_finished.duration_since(pack_started).as_nanos() as u64;
+            timing.critical_path_ns += exposed_pack.as_nanos() as u64;
             let infeasible = solutions
                 .iter()
                 .filter(|s| s.status == Status::Infeasible)
                 .count();
-            metrics.on_batch(problems.len(), capacity, infeasible, batch.oldest_wait, &timing);
-            for (pending, sol) in batch.items.into_iter().zip(solutions) {
-                let _ = pending.reply.send(Ok(sol));
+            metrics.on_batch(items.len(), bucket.batch, infeasible, oldest_wait, &timing);
+            for (pending, sol) in items.into_iter().zip(solutions.iter()) {
+                let _ = pending.reply.send(Ok(*sol));
             }
         }
         Err(e) => {
             let msg = format!("batch execution failed: {e}");
-            for pending in batch.items {
+            for pending in items {
                 let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
             }
         }
     }
+    *last_done = Some(Instant::now());
+    let _ = recycle_tx.send(pb);
 }

@@ -24,6 +24,50 @@
 //!     .unwrap();
 //! println!("solved {} LPs in {} ns", solutions.len(), timing.total_ns());
 //! ```
+//!
+//! For multi-batch workloads, the pipelined streaming API overlaps host
+//! staging (pack/unpack, on a dedicated stage thread) with PJRT execution
+//! (on the calling thread) — double buffering through a rotating pool of
+//! packed-batch buffers. Results are bit-identical to calling `solve` once
+//! per chunk with the same RNG; `ExecTiming::critical_path_ns` vs
+//! `ExecTiming::total_ns()` exposes the overlap win (Figure 5's memory
+//! cost, hidden rather than paid):
+//!
+//! ```no_run
+//! use batch_lp2d::{gen, runtime::{Engine, Variant}, util::Rng};
+//!
+//! let engine = Engine::new("artifacts").unwrap();
+//! let mut rng = Rng::new(42);
+//! let problems = gen::independent_batch(&mut rng, 4096, 32);
+//! let (per_chunk, timing) = engine
+//!     .solve_stream(Variant::Rgb, problems.chunks(512), Some(&mut rng))
+//!     .unwrap();
+//! println!(
+//!     "{} chunks, {:.2}x overlap (critical path {} ns vs {} ns serial)",
+//!     per_chunk.len(),
+//!     timing.overlap_ratio(),
+//!     timing.critical_path_ns,
+//!     timing.total_ns(),
+//! );
+//! ```
+//!
+//! The serving layer ([`coordinator::Service`]) uses the same design: each
+//! executor is a pack-stage/execute-stage thread pair, so packing batch
+//! k+1 overlaps executing batch k under live traffic.
+
+// Style lints that conflict with this codebase's idioms (index-heavy
+// numeric kernels, tuple-typed pipeline channels, many-argument packing
+// internals, f64 literal tolerances). Correctness lints stay on; CI runs
+// `cargo clippy -- -D warnings` over the lib and bin targets.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::excessive_precision,
+    clippy::many_single_char_names,
+    clippy::manual_range_contains,
+    clippy::large_enum_variant
+)]
 
 pub mod bench;
 pub mod coordinator;

@@ -11,6 +11,16 @@
 //!
 //! Everything prints TSV or markdown tables suitable for EXPERIMENTS.md.
 
+// Mirror the library crate root's style-lint policy (see src/lib.rs).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::excessive_precision,
+    clippy::many_single_char_names,
+    clippy::manual_range_contains
+)]
+
 use std::collections::HashMap;
 
 use batch_lp2d::bench::figures::{self, FigureCtx};

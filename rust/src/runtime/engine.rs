@@ -3,40 +3,63 @@
 //!
 //! The per-call wall time is split into pack / transfer(h2d literal build) /
 //! execute / unpack — the decomposition Figure 5 reports ("proportion of
-//! time spent copying memory compared to total execution time").
+//! time spent copying memory compared to total execution time"). On top of
+//! the serial [`Engine::solve`], [`Engine::solve_stream`] runs a
+//! double-buffered pipeline that overlaps host staging with device
+//! execution (see [`crate::runtime::stream`]); [`ExecTiming`] carries both
+//! the per-stage sums and the pipelined critical path so the overlap win is
+//! directly observable.
 
+use std::borrow::Borrow;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::lp::types::{Problem, Solution};
 use crate::runtime::manifest::{Bucket, Manifest, Variant};
-use crate::runtime::pack::{pack_into, unpack, PackedBatch};
+use crate::runtime::pack::{pack_into, unpack, unpack_into, PackedBatch};
+use crate::runtime::stream::{run_pipelined, StageWorker};
 use crate::util::{Rng, Timer};
 
-/// Timing split of one executed batch, nanoseconds.
+/// Timing split of one executed batch (or a whole stream), nanoseconds.
+///
+/// The four stage fields are *summed busy time*; `critical_path_ns` is the
+/// wall time the caller actually waited. For serial execution they are
+/// equal (minus measurement noise); for pipelined execution the critical
+/// path is shorter because pack/unpack overlap transfer/execute — the gap
+/// is the pipelining win.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExecTiming {
     /// Building the packed host buffers (incl. constraint shuffle).
     pub pack_ns: u64,
-    /// Host literal construction (the h2d staging the CPU plugin performs).
+    /// Host literal construction (the h2d staging the CPU plugin performs)
+    /// plus device->host output staging on the stream path.
     pub transfer_ns: u64,
     /// PJRT execute + device->host literal sync.
     pub execute_ns: u64,
     /// Decoding literals into `Solution`s.
     pub unpack_ns: u64,
+    /// Wall time of the call; less than `total_ns()` when stages overlapped.
+    pub critical_path_ns: u64,
 }
 
 impl ExecTiming {
+    /// Summed stage time — what a fully serial execution costs.
     pub fn total_ns(&self) -> u64 {
         self.pack_ns + self.transfer_ns + self.execute_ns + self.unpack_ns
     }
 
-    /// Fraction of wall time spent managing memory rather than computing —
+    /// Fraction of stage time spent managing memory rather than computing —
     /// Figure 5's y-quantity.
     pub fn memory_fraction(&self) -> f64 {
         let total = self.total_ns().max(1) as f64;
         (self.pack_ns + self.transfer_ns + self.unpack_ns) as f64 / total
+    }
+
+    /// Summed stage time over wall time: ~1 for serial execution, > 1 when
+    /// the pipeline overlapped host staging with device execution.
+    pub fn overlap_ratio(&self) -> f64 {
+        self.total_ns() as f64 / self.critical_path_ns.max(1) as f64
     }
 
     pub fn accumulate(&mut self, other: &ExecTiming) {
@@ -44,6 +67,7 @@ impl ExecTiming {
         self.transfer_ns += other.transfer_ns;
         self.execute_ns += other.execute_ns;
         self.unpack_ns += other.unpack_ns;
+        self.critical_path_ns += other.critical_path_ns;
     }
 }
 
@@ -54,24 +78,46 @@ struct Key {
     m: usize,
 }
 
+/// A reusable (lines, obj) input-literal pair for one (batch, m) shape.
+struct LiteralPair {
+    lines: xla::Literal,
+    obj: xla::Literal,
+}
+
+/// How many chunks the stream path stages ahead of the executor.
+const STREAM_DEPTH: usize = 2;
+
 /// The engine: a PJRT CPU client plus a compile-once executable cache.
 ///
-/// Thread model: the `xla` crate's client wraps a non-atomic `Rc` and raw
-/// PJRT pointers, so `Engine` is **not Sync** and all PJRT calls must come
-/// from the thread currently owning it. It *is* safe to move wholesale to
-/// another thread (`unsafe impl Send` below): every internal `Rc` clone is
-/// confined to this struct (`load` hands out no handles), so transferring
-/// ownership transfers the whole reference graph with it. The coordinator
-/// exploits exactly that: each executor thread owns its own `Engine`.
+/// # Thread model
+///
+/// The `xla` crate's client wraps a non-atomic `Rc` and raw PJRT pointers,
+/// so `Engine` is **not Sync** and all PJRT calls must come from the thread
+/// currently owning it. It *is* safe to move wholesale to another thread
+/// (`unsafe impl Send` below): every internal `Rc` clone is confined to
+/// this struct (`load` hands out no handles), so transferring ownership
+/// transfers the whole reference graph with it. The coordinator exploits
+/// exactly that: each executor thread owns its own `Engine`.
+///
+/// The double-buffered [`Engine::solve_stream`] path keeps this sound by
+/// construction: the dedicated stage thread only ever touches plain host
+/// buffers ([`PackedBatch`]s rotated out of `scratch`, raw `f32`/`i32`
+/// vectors awaiting decode) and the shuffle RNG. Every PJRT handle —
+/// client, executables, literals — stays on the calling thread, which runs
+/// the transfer/execute stages. No `xla` type ever crosses the channel.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     executables: RefCell<HashMap<Key, xla::PjRtLoadedExecutable>>,
-    /// Reused packing buffers (steady-state solve allocates nothing).
-    scratch: RefCell<PackedBatch>,
+    /// Rotating pool of packed-batch buffers. Serial `solve` uses one;
+    /// `solve_stream` checks out `STREAM_DEPTH + 1` so pack of chunk k+1
+    /// proceeds while chunk k's buffer is still being transferred.
+    /// Steady-state solve allocates nothing.
+    scratch: RefCell<Vec<PackedBatch>>,
     /// Reused input literals per (batch, m) shape (avoids re-allocating the
-    /// multi-MB host staging buffers on every call).
-    literals: RefCell<HashMap<(usize, usize), (xla::Literal, xla::Literal)>>,
+    /// multi-MB host staging buffers on every call). A small pool per shape
+    /// for the same reason as `scratch`.
+    literals: RefCell<HashMap<(usize, usize), Vec<LiteralPair>>>,
 }
 
 // SAFETY: see the struct docs — all Rc/raw-pointer state is confined to the
@@ -88,13 +134,7 @@ impl Engine {
             client,
             manifest,
             executables: RefCell::new(HashMap::new()),
-            scratch: RefCell::new(PackedBatch {
-                batch: 0,
-                m: 0,
-                lines: Vec::new(),
-                obj: Vec::new(),
-                used: 0,
-            }),
+            scratch: RefCell::new(vec![PackedBatch::empty()]),
             literals: RefCell::new(HashMap::new()),
         })
     }
@@ -145,12 +185,98 @@ impl Engine {
         Ok(buckets.len())
     }
 
+    // ---- buffer pools -----------------------------------------------------
+
+    fn take_scratch(&self) -> PackedBatch {
+        self.scratch.borrow_mut().pop().unwrap_or_else(PackedBatch::empty)
+    }
+
+    fn put_scratch(&self, pb: PackedBatch) {
+        self.scratch.borrow_mut().push(pb);
+    }
+
+    fn take_literal_pair(&self, batch: usize, m: usize) -> LiteralPair {
+        self.literals
+            .borrow_mut()
+            .entry((batch, m))
+            .or_default()
+            .pop()
+            .unwrap_or_else(|| LiteralPair {
+                lines: xla::Literal::create_from_shape(
+                    xla::PrimitiveType::F32,
+                    &[batch, m, 4],
+                ),
+                obj: xla::Literal::create_from_shape(xla::PrimitiveType::F32, &[batch, 2]),
+            })
+    }
+
+    fn put_literal_pair(&self, batch: usize, m: usize, pair: LiteralPair) {
+        self.literals.borrow_mut().entry((batch, m)).or_default().push(pair);
+    }
+
+    // ---- single-batch execution ------------------------------------------
+
+    /// Host -> device staging: copy a packed batch into reused per-shape
+    /// literals (create-once + copy_raw_from beats re-allocating the
+    /// multi-MB staging buffers every call; EXPERIMENTS.md §Perf).
+    fn transfer(&self, pb: &PackedBatch) -> anyhow::Result<LiteralPair> {
+        let mut pair = self.take_literal_pair(pb.batch, pb.m);
+        pair.lines
+            .copy_raw_from(&pb.lines)
+            .map_err(|e| anyhow::anyhow!("lines literal: {e:?}"))?;
+        pair.obj
+            .copy_raw_from(&pb.obj)
+            .map_err(|e| anyhow::anyhow!("obj literal: {e:?}"))?;
+        Ok(pair)
+    }
+
+    /// Execute staged literals on a bucket's executable and sync the output
+    /// back to a host literal.
+    fn execute_pair(&self, bucket: &Bucket, pair: &LiteralPair) -> anyhow::Result<xla::Literal> {
+        self.with_executable(bucket, |exe| {
+            let result = exe
+                .execute::<&xla::Literal>(&[&pair.lines, &pair.obj])
+                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+            result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))
+        })
+    }
+
+    /// Decode the output tuple literal into raw host vectors.
+    fn fetch_raw(out: xla::Literal) -> anyhow::Result<(Vec<f32>, Vec<i32>)> {
+        let (sol_lit, status_lit) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("expected 2-tuple output: {e:?}"))?;
+        let sol: Vec<f32> = sol_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("solution literal: {e:?}"))?;
+        let status: Vec<i32> = status_lit
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("status literal: {e:?}"))?;
+        Ok((sol, status))
+    }
+
     /// Execute a packed batch on a bucket's executable.
     pub fn execute_packed(
         &self,
         bucket: &Bucket,
         pb: &PackedBatch,
     ) -> anyhow::Result<(Vec<Solution>, ExecTiming)> {
+        let mut solutions = Vec::with_capacity(pb.used);
+        let timing = self.execute_packed_into(bucket, pb, &mut solutions)?;
+        Ok((solutions, timing))
+    }
+
+    /// `execute_packed` into a reused solution buffer (the coordinator's
+    /// executors keep one per thread so steady-state decode allocates
+    /// nothing beyond the PJRT d2h staging itself).
+    pub fn execute_packed_into(
+        &self,
+        bucket: &Bucket,
+        pb: &PackedBatch,
+        out: &mut Vec<Solution>,
+    ) -> anyhow::Result<ExecTiming> {
         anyhow::ensure!(
             pb.batch == bucket.batch && pb.m == bucket.m,
             "packed shape ({}, {}) does not match bucket ({}, {})",
@@ -161,106 +287,208 @@ impl Engine {
         );
         let mut timing = ExecTiming::default();
 
-        // Host -> device staging: copy into reused per-shape literals
-        // (create-once + copy_raw_from beats re-allocating the multi-MB
-        // staging buffers every call; EXPERIMENTS.md SPerf).
         let t = Timer::start();
-        {
-            let mut lits = self.literals.borrow_mut();
-            let (lines_lit, obj_lit) =
-                lits.entry((pb.batch, pb.m)).or_insert_with(|| {
-                    (
-                        xla::Literal::create_from_shape(
-                            xla::PrimitiveType::F32,
-                            &[pb.batch, pb.m, 4],
-                        ),
-                        xla::Literal::create_from_shape(
-                            xla::PrimitiveType::F32,
-                            &[pb.batch, 2],
-                        ),
-                    )
-                });
-            lines_lit
-                .copy_raw_from(&pb.lines)
-                .map_err(|e| anyhow::anyhow!("lines literal: {e:?}"))?;
-            obj_lit
-                .copy_raw_from(&pb.obj)
-                .map_err(|e| anyhow::anyhow!("obj literal: {e:?}"))?;
-        }
+        let pair = self.transfer(pb)?;
         timing.transfer_ns = t.elapsed_ns();
 
-        // Execute and sync back.
         let t = Timer::start();
-        let lits = self.literals.borrow();
-        let (lines_lit, obj_lit) = lits.get(&(pb.batch, pb.m)).expect("just inserted");
-        let out = self.with_executable(bucket, |exe| {
-            let result = exe
-                .execute::<&xla::Literal>(&[lines_lit, obj_lit])
-                .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
-            result[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("to_literal_sync: {e:?}"))
-        })?;
-        drop(lits);
+        let out_lit = self.execute_pair(bucket, &pair)?;
         timing.execute_ns = t.elapsed_ns();
+        self.put_literal_pair(pb.batch, pb.m, pair);
 
-        // Decode.
         let t = Timer::start();
-        let (sol_lit, status_lit) = out
-            .to_tuple2()
-            .map_err(|e| anyhow::anyhow!("expected 2-tuple output: {e:?}"))?;
-        let sol: Vec<f32> = sol_lit
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("solution literal: {e:?}"))?;
-        let status: Vec<i32> = status_lit
-            .to_vec()
-            .map_err(|e| anyhow::anyhow!("status literal: {e:?}"))?;
-        let solutions = unpack(&sol, &status, pb.used)?;
+        let (sol, status) = Self::fetch_raw(out_lit)?;
+        unpack_into(&sol, &status, pb.used, out)?;
         timing.unpack_ns = t.elapsed_ns();
 
-        Ok((solutions, timing))
+        timing.critical_path_ns =
+            timing.transfer_ns + timing.execute_ns + timing.unpack_ns;
+        Ok(timing)
     }
 
-    /// Pack + execute a slice of problems on the smallest fitting bucket.
-    ///
-    /// `rng`: per-problem constraint shuffle (Seidel randomization); pass
-    /// None for reproducible unshuffled runs (e.g. numeric comparisons).
-    pub fn solve(
-        &self,
-        variant: Variant,
-        problems: &[Problem],
-        mut rng: Option<&mut Rng>,
-    ) -> anyhow::Result<(Vec<Solution>, ExecTiming)> {
-        anyhow::ensure!(!problems.is_empty(), "empty problem slice");
-        let m_max = problems.iter().map(|p| p.m()).max().unwrap();
-        let bucket = self
-            .manifest
-            .fit(variant, problems.len(), m_max)
+    /// Pick the smallest bucket fitting `n` problems of max size `m_max`.
+    fn fit_bucket(&self, variant: Variant, n: usize, m_max: usize) -> anyhow::Result<Bucket> {
+        self.manifest
+            .fit(variant, n, m_max)
+            .cloned()
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "no {} bucket fits n={} m={} (max m {:?})",
                     variant.as_str(),
-                    problems.len(),
+                    n,
                     m_max,
                     self.manifest.max_m(variant)
                 )
-            })?
-            .clone();
+            })
+    }
 
-        // Reuse the engine's scratch buffers: steady-state packing performs
-        // no allocation (EXPERIMENTS.md §Perf).
+    /// Pack + execute a slice of problems on the smallest fitting bucket.
+    ///
+    /// `problems` is anything borrowing as [`Problem`] (`&[Problem]`,
+    /// `&[&Problem]`, ...), so serving-path callers pack without cloning.
+    ///
+    /// `rng`: per-problem constraint shuffle (Seidel randomization); pass
+    /// None for reproducible unshuffled runs (e.g. numeric comparisons).
+    pub fn solve<P: Borrow<Problem> + Sync>(
+        &self,
+        variant: Variant,
+        problems: &[P],
+        rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Solution>, ExecTiming)> {
+        let mut solutions = Vec::with_capacity(problems.len());
+        let timing = self.solve_into(variant, problems, rng, &mut solutions)?;
+        Ok((solutions, timing))
+    }
+
+    /// `solve` into a reused solution buffer.
+    pub fn solve_into<P: Borrow<Problem> + Sync>(
+        &self,
+        variant: Variant,
+        problems: &[P],
+        rng: Option<&mut Rng>,
+        out: &mut Vec<Solution>,
+    ) -> anyhow::Result<ExecTiming> {
+        anyhow::ensure!(!problems.is_empty(), "empty problem slice");
+        let m_max = problems.iter().map(|p| p.borrow().m()).max().unwrap();
+        let bucket = self.fit_bucket(variant, problems.len(), m_max)?;
+
+        // Reuse a pooled packing buffer: steady-state packing performs no
+        // allocation (EXPERIMENTS.md §Perf).
+        let mut pb = self.take_scratch();
         let t = Timer::start();
-        let mut pb = self.scratch.borrow_mut();
-        pack_into(problems, bucket.batch, bucket.m, rng.as_deref_mut(), &mut pb)?;
+        let packed = pack_into(problems, bucket.batch, bucket.m, rng, &mut pb);
         let pack_ns = t.elapsed_ns();
+        if let Err(e) = packed {
+            self.put_scratch(pb);
+            return Err(e);
+        }
 
-        let (solutions, mut timing) = self.execute_packed(&bucket, &pb)?;
+        let executed = self.execute_packed_into(&bucket, &pb, out);
+        self.put_scratch(pb);
+        let mut timing = executed?;
         timing.pack_ns = pack_ns;
+        timing.critical_path_ns += pack_ns; // serial: pack is on the path
+        Ok(timing)
+    }
+
+    /// Solve a stream of problem chunks through the double-buffered
+    /// pipeline: a dedicated stage thread packs chunk k+1 (and decodes
+    /// chunk k-1) while this thread runs PJRT on chunk k.
+    ///
+    /// Results are bit-identical to calling [`Engine::solve`] once per
+    /// chunk with the same `rng`: chunks are packed in order by a single
+    /// stage thread, so shuffle streams are consumed identically. The
+    /// returned [`ExecTiming`] sums the per-chunk stages;
+    /// `critical_path_ns` is the stream's wall time, so
+    /// `overlap_ratio() > 1` demonstrates the pipelining win.
+    pub fn solve_stream<'p>(
+        &self,
+        variant: Variant,
+        chunks: impl IntoIterator<Item = &'p [Problem]>,
+        rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Vec<Solution>>, ExecTiming)> {
+        // Check out the rotation pool for the stage thread. PJRT handles
+        // (literals, executables) stay on this thread; see the struct docs.
+        let mut pool = Vec::with_capacity(STREAM_DEPTH + 1);
+        for _ in 0..STREAM_DEPTH + 1 {
+            pool.push(self.take_scratch());
+        }
+        let worker = StreamWorker {
+            pool,
+            rng,
+            pack_ns: 0,
+            unpack_ns: 0,
+            _marker: std::marker::PhantomData,
+        };
+
+        // Bucket fitting happens lazily on this thread as chunks are pulled.
+        let chunks = chunks.into_iter().map(|chunk| -> anyhow::Result<_> {
+            anyhow::ensure!(!chunk.is_empty(), "empty problem chunk");
+            let m_max = chunk.iter().map(|p| p.m()).max().unwrap();
+            let bucket = self.fit_bucket(variant, chunk.len(), m_max)?;
+            Ok((chunk, bucket))
+        });
+
+        let mut timing = ExecTiming::default();
+        let (result, worker, stats) =
+            run_pipelined(chunks, worker, STREAM_DEPTH, |_, (pb, bucket): (PackedBatch, Bucket)| {
+                let t = Timer::start();
+                let pair = self.transfer(&pb)?;
+                timing.transfer_ns += t.elapsed_ns();
+
+                let t = Timer::start();
+                let out_lit = self.execute_pair(&bucket, &pair)?;
+                timing.execute_ns += t.elapsed_ns();
+                self.put_literal_pair(pb.batch, pb.m, pair);
+
+                // Device->host output staging happens here (PJRT handles
+                // cannot cross to the stage thread); decode of the raw
+                // vectors is the stage thread's job.
+                let t = Timer::start();
+                let (sol, status) = Self::fetch_raw(out_lit)?;
+                timing.transfer_ns += t.elapsed_ns();
+                Ok((pb, sol, status))
+            });
+
+        // Return the rotation pool even on error.
+        for pb in worker.pool {
+            self.put_scratch(pb);
+        }
+        let solutions = result?;
+        timing.pack_ns = worker.pack_ns;
+        timing.unpack_ns = worker.unpack_ns;
+        timing.critical_path_ns = stats.critical_path_ns;
         Ok((solutions, timing))
     }
 }
 
+/// Host-side pipeline worker for [`Engine::solve_stream`]: packs chunks
+/// into pooled buffers and decodes raw outputs. Runs on the stage thread;
+/// holds no PJRT state.
+struct StreamWorker<'r, 'p> {
+    pool: Vec<PackedBatch>,
+    rng: Option<&'r mut Rng>,
+    pack_ns: u64,
+    unpack_ns: u64,
+    // Ties the problem-slice lifetime 'p into the worker type (it appears
+    // only in the `Chunk` associated type below).
+    _marker: std::marker::PhantomData<&'p ()>,
+}
 
+impl<'r, 'p> StageWorker for StreamWorker<'r, 'p> {
+    type Chunk = anyhow::Result<(&'p [Problem], Bucket)>;
+    type Staged = (PackedBatch, Bucket);
+    type Raw = (PackedBatch, Vec<f32>, Vec<i32>);
+    type Out = Vec<Solution>;
+
+    fn stage(&mut self, _idx: usize, chunk: Self::Chunk) -> anyhow::Result<Self::Staged> {
+        let (problems, bucket) = chunk?;
+        let mut pb = self.pool.pop().unwrap_or_else(PackedBatch::empty);
+        let t = Timer::start();
+        let packed = pack_into(
+            problems,
+            bucket.batch,
+            bucket.m,
+            self.rng.as_deref_mut(),
+            &mut pb,
+        );
+        self.pack_ns += t.elapsed_ns();
+        if let Err(e) = packed {
+            self.pool.push(pb);
+            return Err(e);
+        }
+        Ok((pb, bucket))
+    }
+
+    fn finish(&mut self, _idx: usize, raw: Self::Raw) -> anyhow::Result<Self::Out> {
+        let (pb, sol, status) = raw;
+        let t = Timer::start();
+        let solutions = unpack(&sol, &status, pb.used);
+        self.unpack_ns += t.elapsed_ns();
+        self.pool.push(pb);
+        solutions
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -268,16 +496,50 @@ mod tests {
 
     #[test]
     fn timing_memory_fraction() {
-        let t = ExecTiming { pack_ns: 10, transfer_ns: 20, execute_ns: 60, unpack_ns: 10 };
+        let t = ExecTiming {
+            pack_ns: 10,
+            transfer_ns: 20,
+            execute_ns: 60,
+            unpack_ns: 10,
+            ..ExecTiming::default()
+        };
         assert_eq!(t.total_ns(), 100);
         assert!((t.memory_fraction() - 0.4).abs() < 1e-12);
     }
 
     #[test]
     fn timing_accumulate() {
-        let mut a = ExecTiming { pack_ns: 1, transfer_ns: 2, execute_ns: 3, unpack_ns: 4 };
-        a.accumulate(&ExecTiming { pack_ns: 1, transfer_ns: 1, execute_ns: 1, unpack_ns: 1 });
+        let mut a = ExecTiming {
+            pack_ns: 1,
+            transfer_ns: 2,
+            execute_ns: 3,
+            unpack_ns: 4,
+            critical_path_ns: 10,
+        };
+        a.accumulate(&ExecTiming {
+            pack_ns: 1,
+            transfer_ns: 1,
+            execute_ns: 1,
+            unpack_ns: 1,
+            critical_path_ns: 4,
+        });
         assert_eq!(a.total_ns(), 14);
+        assert_eq!(a.critical_path_ns, 14);
     }
 
+    #[test]
+    fn overlap_ratio_reads_pipelining() {
+        // Serial: critical path == stage sum -> ratio 1.
+        let serial = ExecTiming {
+            pack_ns: 25,
+            transfer_ns: 25,
+            execute_ns: 25,
+            unpack_ns: 25,
+            critical_path_ns: 100,
+        };
+        assert!((serial.overlap_ratio() - 1.0).abs() < 1e-12);
+        // Pipelined: host stages hidden behind execution -> ratio > 1.
+        let pipelined = ExecTiming { critical_path_ns: 60, ..serial };
+        assert!(pipelined.overlap_ratio() > 1.6);
+    }
 }

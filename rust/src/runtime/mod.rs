@@ -3,15 +3,19 @@
 //!
 //! * [`manifest`] -- which (variant, batch, m) buckets exist on disk.
 //! * [`pack`]     -- problems <-> the kernels' packed wire format.
-//! * [`engine`]   -- compile-once executable cache + timed execution.
+//! * [`stream`]   -- double-buffered stage/execute pipeline driver.
+//! * [`engine`]   -- compile-once executable cache + timed execution,
+//!   serial (`solve`) and pipelined (`solve_stream`).
 
 pub mod engine;
 pub mod manifest;
 pub mod pack;
+pub mod stream;
 
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
-pub use pack::{pack, unpack, PackedBatch};
+pub use pack::{pack, pack_into, unpack, unpack_into, PackedBatch};
+pub use stream::{run_pipelined, PipelineStats, StageWorker};
 
 /// Locate the artifact directory: `$BATCH_LP2D_ARTIFACTS`, then
 /// `./artifacts`, then `<repo>/artifacts` (compile-time path). Examples and

@@ -6,12 +6,29 @@
 //! `[nx, ny, b, valid]` so one lane-quad load fetches a whole constraint —
 //! the paper's vectorized-load optimization; padding rows carry valid=0 and
 //! are masked inside the kernel.
+//!
+//! Packing is the pipeline's stage-thread hot path, so it is built to be
+//! allocation-free in steady state ([`PackedBatch`] carries its own scratch
+//! and is rotated through the engine's buffer pool) and to fan out over
+//! scoped threads for large chunks. Shuffle streams are derived per problem
+//! from one base draw, so packed bytes are identical whatever the thread
+//! count — and identical between `Engine::solve` and `Engine::solve_stream`.
+
+use std::borrow::Borrow;
 
 use crate::lp::types::{Problem, Solution, Status};
 use crate::util::Rng;
 
+/// Problems-per-chunk at which [`pack_into`] fans out over scoped threads.
+/// Below this, thread spawn overhead (~tens of µs) beats the win.
+pub const PAR_PACK_THRESHOLD: usize = 512;
+
+/// Per-problem shuffle streams derive as `base ^ idx * GOLDEN` (the same
+/// SplitMix-style stream splitting `solvers::batch_cpu` uses).
+const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+
 /// A packed batch ready for the PJRT executable.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct PackedBatch {
     pub batch: usize,
     pub m: usize,
@@ -21,6 +38,16 @@ pub struct PackedBatch {
     pub obj: Vec<f32>,
     /// How many of the B slots hold real problems (rest are padding).
     pub used: usize,
+    /// Reused permutation scratch for the serial pack path (hot path: no
+    /// allocation once grown to the bucket's m).
+    perm_scratch: Vec<u32>,
+}
+
+impl PackedBatch {
+    /// An empty buffer ready to be filled by [`pack_into`].
+    pub fn empty() -> PackedBatch {
+        PackedBatch::default()
+    }
 }
 
 /// Pack up to `batch` problems into a (batch, m) bucket.
@@ -28,22 +55,26 @@ pub struct PackedBatch {
 /// * Problems are truncated nowhere: callers guarantee `p.m() <= m`
 ///   (checked). Missing slots are filled with a vacuous problem.
 /// * With `shuffle`, each problem's constraint order is permuted via a
-///   per-problem RNG stream forked from `rng`.
-pub fn pack(
-    problems: &[Problem],
+///   per-problem RNG stream derived from one draw off `rng`.
+pub fn pack<P: Borrow<Problem> + Sync>(
+    problems: &[P],
     batch: usize,
     m: usize,
     rng: Option<&mut Rng>,
 ) -> anyhow::Result<PackedBatch> {
-    let mut pb = PackedBatch { batch: 0, m: 0, lines: Vec::new(), obj: Vec::new(), used: 0 };
+    let mut pb = PackedBatch::empty();
     pack_into(problems, batch, m, rng, &mut pb)?;
     Ok(pb)
 }
 
-/// `pack` into a reused [`PackedBatch`] (hot path: the engine keeps one as
-/// scratch so steady-state packing performs no allocation).
-pub fn pack_into(
-    problems: &[Problem],
+/// `pack` into a reused [`PackedBatch`] (hot path: the engine rotates a
+/// pool of these so steady-state packing performs no allocation).
+///
+/// Accepts anything that borrows as [`Problem`] (`&[Problem]`,
+/// `&[&Problem]`, ...) so callers like the coordinator can pack straight
+/// from their request structs without cloning problems.
+pub fn pack_into<P: Borrow<Problem> + Sync>(
+    problems: &[P],
     batch: usize,
     m: usize,
     rng: Option<&mut Rng>,
@@ -54,6 +85,11 @@ pub fn pack_into(
         "{} problems exceed bucket batch {batch}",
         problems.len()
     );
+    // Validate up front so the fan-out below can be infallible.
+    for (i, p) in problems.iter().enumerate() {
+        let pm = p.borrow().m();
+        anyhow::ensure!(pm <= m, "problem {i} has {pm} constraints, bucket m is {m}");
+    }
     out.batch = batch;
     out.m = m;
     out.used = problems.len();
@@ -61,29 +97,75 @@ pub fn pack_into(
     out.lines.resize(batch * m * 4, 0.0);
     out.obj.clear();
     out.obj.resize(batch * 2, 0.0);
-    let lines = &mut out.lines;
-    let obj = &mut out.obj;
-    let mut rng = rng;
-    let mut perm_buf: Vec<u32> = Vec::new();
 
+    // One base draw per call; every problem's shuffle stream derives from
+    // it by index. This keeps packed bytes identical across thread counts
+    // and between the serial and parallel paths below.
+    let base: Option<u64> = rng.map(|r| r.next_u64());
+
+    let threads = if problems.len() >= PAR_PACK_THRESHOLD {
+        crate::solvers::batch_cpu::default_threads().min(problems.len())
+    } else {
+        1
+    };
+    let used_lines = &mut out.lines[..problems.len() * m * 4];
+    let used_obj = &mut out.obj[..problems.len() * 2];
+    if threads <= 1 {
+        pack_range(problems, m, base, 0, used_lines, used_obj, &mut out.perm_scratch);
+    } else {
+        let chunk = problems.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (t, ((probs, lines), obj)) in problems
+                .chunks(chunk)
+                .zip(used_lines.chunks_mut(chunk * m * 4))
+                .zip(used_obj.chunks_mut(chunk * 2))
+                .enumerate()
+            {
+                scope.spawn(move || {
+                    // Worker-local scratch: one allocation per worker per
+                    // call, amortized over >= PAR_PACK_THRESHOLD problems.
+                    let mut perm = Vec::new();
+                    pack_range(probs, m, base, t * chunk, lines, obj, &mut perm);
+                });
+            }
+        });
+    }
+
+    // Padding problems keep all-zero constraints (valid=0) and a unit
+    // objective so their solve is trivially the box corner.
+    for i in problems.len()..batch {
+        out.obj[i * 2] = 1.0;
+    }
+    Ok(())
+}
+
+/// Pack a contiguous range of problems into its slice of the wire buffers.
+/// `start_idx` is the range's global offset (for shuffle-stream derivation);
+/// `lines`/`obj` are the range's sub-slices. Caller has validated sizes.
+fn pack_range<P: Borrow<Problem>>(
+    problems: &[P],
+    m: usize,
+    base: Option<u64>,
+    start_idx: usize,
+    lines: &mut [f32],
+    obj: &mut [f32],
+    perm_scratch: &mut Vec<u32>,
+) {
     for (i, p) in problems.iter().enumerate() {
-        anyhow::ensure!(
-            p.m() <= m,
-            "problem {i} has {} constraints, bucket m is {m}",
-            p.m()
-        );
-        let perm: Option<&[u32]> = match rng.as_deref_mut() {
-            Some(r) => {
-                r.permute_into(&mut perm_buf, p.m());
-                Some(&perm_buf)
+        let p = p.borrow();
+        let perm: Option<&[u32]> = match base {
+            Some(b) => {
+                let mut r = Rng::new(b ^ ((start_idx + i) as u64).wrapping_mul(GOLDEN));
+                r.permute_into(perm_scratch, p.m());
+                Some(perm_scratch)
             }
             None => None,
         };
-        let base = i * m * 4;
+        let row = i * m * 4;
         for (slot, k) in (0..p.m()).enumerate() {
             let src = perm.map_or(k, |pm| pm[k] as usize);
             let h = p.constraints[src].normalized();
-            let off = base + slot * 4;
+            let off = row + slot * 4;
             lines[off] = h.nx as f32;
             lines[off + 1] = h.ny as f32;
             lines[off + 2] = h.b as f32;
@@ -92,19 +174,28 @@ pub fn pack_into(
         obj[i * 2] = p.obj[0] as f32;
         obj[i * 2 + 1] = p.obj[1] as f32;
     }
-    // Padding problems keep all-zero constraints (valid=0) and a unit
-    // objective so their solve is trivially the box corner.
-    for i in problems.len()..batch {
-        obj[i * 2] = 1.0;
-    }
-    Ok(())
 }
 
 /// Unpack kernel outputs for the first `used` slots.
 pub fn unpack(sol: &[f32], status: &[i32], used: usize) -> anyhow::Result<Vec<Solution>> {
+    let mut out = Vec::with_capacity(used);
+    unpack_into(sol, status, used, &mut out)?;
+    Ok(out)
+}
+
+/// `unpack` into a reused buffer (hot path: the engine's decode stage and
+/// the coordinator's executors keep one per thread, so steady-state
+/// unpacking performs no allocation).
+pub fn unpack_into(
+    sol: &[f32],
+    status: &[i32],
+    used: usize,
+    out: &mut Vec<Solution>,
+) -> anyhow::Result<()> {
     anyhow::ensure!(sol.len() >= used * 2, "solution buffer too short");
     anyhow::ensure!(status.len() >= used, "status buffer too short");
-    let mut out = Vec::with_capacity(used);
+    out.clear();
+    out.reserve(used);
     for i in 0..used {
         let st = Status::from_code(status[i])?;
         out.push(match st {
@@ -112,7 +203,7 @@ pub fn unpack(sol: &[f32], status: &[i32], used: usize) -> anyhow::Result<Vec<So
             Status::Infeasible => Solution::infeasible(),
         });
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -170,12 +261,74 @@ mod tests {
     }
 
     #[test]
+    fn pack_from_borrowed_refs_matches_owned() {
+        let mut rng = Rng::new(5);
+        let problems: Vec<Problem> = (0..6).map(|_| gen::feasible(&mut rng, 7)).collect();
+        let refs: Vec<&Problem> = problems.iter().collect();
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = pack(&problems, 8, 8, Some(&mut r1)).unwrap();
+        let b = pack(&refs, 8, 8, Some(&mut r2)).unwrap();
+        assert_eq!(a.lines, b.lines);
+        assert_eq!(a.obj, b.obj);
+    }
+
+    #[test]
+    fn parallel_pack_matches_serial_bytes() {
+        // Same inputs packed above and below the fan-out threshold must
+        // produce identical bytes: shuffle streams derive per problem, not
+        // from a shared sequential stream.
+        let mut rng = Rng::new(11);
+        let m = 12;
+        let problems: Vec<Problem> = (0..PAR_PACK_THRESHOLD + 37)
+            .map(|_| gen::feasible(&mut rng, m))
+            .collect();
+        let mut r1 = Rng::new(99);
+        let big = pack(&problems, problems.len(), m, Some(&mut r1)).unwrap();
+        // Pack the same problems in sub-threshold slices with per-slice
+        // RNGs primed to the same derived streams.
+        let base = Rng::new(99).next_u64();
+        let mut lines = vec![0.0f32; problems.len() * m * 4];
+        let mut obj = vec![0.0f32; problems.len() * 2];
+        let mut scratch = Vec::new();
+        pack_range(&problems, m, Some(base), 0, &mut lines, &mut obj, &mut scratch);
+        assert_eq!(big.lines, lines);
+        assert_eq!(big.obj, obj);
+    }
+
+    #[test]
+    fn pack_into_reuses_capacity() {
+        let mut rng = Rng::new(13);
+        let problems: Vec<Problem> = (0..4).map(|_| gen::feasible(&mut rng, 6)).collect();
+        let mut pb = PackedBatch::empty();
+        pack_into(&problems, 8, 8, Some(&mut rng), &mut pb).unwrap();
+        let cap_lines = pb.lines.capacity();
+        let cap_obj = pb.obj.capacity();
+        // Repacking the same shape must not reallocate.
+        pack_into(&problems, 8, 8, Some(&mut rng), &mut pb).unwrap();
+        assert_eq!(pb.lines.capacity(), cap_lines);
+        assert_eq!(pb.obj.capacity(), cap_obj);
+    }
+
+    #[test]
     fn unpack_statuses() {
         let sol = vec![1.0f32, 2.0, 3.0, 4.0];
         let status = vec![0i32, 1];
         let out = unpack(&sol, &status, 2).unwrap();
         assert_eq!(out[0], Solution::optimal(1.0, 2.0));
         assert_eq!(out[1].status, Status::Infeasible);
+    }
+
+    #[test]
+    fn unpack_into_reuses_buffer() {
+        let sol = vec![1.0f32, 2.0, 3.0, 4.0];
+        let status = vec![0i32, 0];
+        let mut out = Vec::new();
+        unpack_into(&sol, &status, 2, &mut out).unwrap();
+        let cap = out.capacity();
+        unpack_into(&sol, &status, 2, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out.capacity(), cap);
     }
 
     #[test]

@@ -31,20 +31,27 @@ pub fn solve_ordered(p: &Problem) -> Solution {
 
 /// Solve in a random order derived from `rng` (the algorithm's namesake
 /// randomization; gives the expected-O(m) bound).
+///
+/// The shuffle is an index permutation applied in place: the constraint
+/// vector is never copied, the solve just walks it through `perm` (one
+/// `Problem` clone per LP removed from the CPU-baseline hot path).
 pub fn solve(p: &Problem, rng: &mut Rng) -> Solution {
     if p.constraints.len() < 2 {
         return solve_ordered(p);
     }
     let perm = rng.permutation(p.constraints.len());
-    let shuffled = Problem {
-        constraints: perm.iter().map(|&i| p.constraints[i as usize]).collect(),
-        obj: p.obj,
-    };
-    solve_ordered(&shuffled)
+    solve_indexed(p, |k| perm[k] as usize).0
 }
 
 /// `solve_ordered`, also reporting the work-unit statistics.
 pub fn solve_ordered_with_stats(p: &Problem) -> (Solution, SolveStats) {
+    solve_indexed(p, |k| k)
+}
+
+/// Seidel's incremental solve visiting constraints in the order
+/// `cons[at(0)], cons[at(1)], ...` — `at` is either the identity or a
+/// random permutation lookup.
+fn solve_indexed(p: &Problem, at: impl Fn(usize) -> usize) -> (Solution, SolveStats) {
     let (cx, cy) = (p.obj[0], p.obj[1]);
     let mut sx = if cx >= 0.0 { M_BIG } else { -M_BIG };
     let mut sy = if cy >= 0.0 { M_BIG } else { -M_BIG };
@@ -52,7 +59,7 @@ pub fn solve_ordered_with_stats(p: &Problem) -> (Solution, SolveStats) {
 
     let cons = &p.constraints;
     for i in 0..cons.len() {
-        let c = &cons[i];
+        let c = &cons[at(i)];
         if c.nx * sx + c.ny * sy <= c.b + EPS {
             continue; // current optimum still satisfied
         }
@@ -81,7 +88,8 @@ pub fn solve_ordered_with_stats(p: &Problem) -> (Solution, SolveStats) {
             clip(&mut t_lo, &mut t_hi, &mut bad, ad, num);
         }
         // All previously considered constraints.
-        for h in &cons[..i] {
+        for j in 0..i {
+            let h = &cons[at(j)];
             let ad = h.nx * dx + h.ny * dy;
             let num = h.b - (h.nx * p0x + h.ny * p0y);
             clip(&mut t_lo, &mut t_hi, &mut bad, ad, num);

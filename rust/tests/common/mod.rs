@@ -1,0 +1,20 @@
+//! Shared gating for PJRT-path integration tests.
+//!
+//! Engine/Service construction fails under the offline `xla` stub even
+//! when artifacts exist (see rust/Cargo.toml), so tests skip rather than
+//! panic. CI against the real bindings must set
+//! `BATCH_LP2D_REQUIRE_ENGINE` so a broken engine fails loudly instead of
+//! silently skipping every PJRT test.
+
+pub fn engine_or_skip<T>(what: &str, result: anyhow::Result<T>) -> Option<T> {
+    match result {
+        Ok(v) => Some(v),
+        Err(e) => {
+            if std::env::var_os("BATCH_LP2D_REQUIRE_ENGINE").is_some() {
+                panic!("{what} required but unavailable: {e}");
+            }
+            eprintln!("skipping: {what} unavailable ({e})");
+            None
+        }
+    }
+}

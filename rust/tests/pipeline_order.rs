@@ -1,0 +1,155 @@
+//! Ordering guarantees of the pipelined execution path, pure Rust (no
+//! PJRT, no artifacts): the stream driver must return chunk results in
+//! submission order, and a batcher feeding a pack-stage/execute-stage pair
+//! (the coordinator's executor wiring) must route every reply back to the
+//! request that asked for it, under concurrent submitters.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use batch_lp2d::coordinator::batcher::Batcher;
+use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
+use batch_lp2d::util::Rng;
+
+/// Worker with pseudo-random stage delays: order must come from the
+/// driver's FIFO discipline, not from timing luck.
+struct JitterWorker {
+    rng: Rng,
+}
+
+impl StageWorker for JitterWorker {
+    type Chunk = usize;
+    type Staged = usize;
+    type Raw = usize;
+    type Out = usize;
+
+    fn stage(&mut self, idx: usize, chunk: usize) -> anyhow::Result<usize> {
+        assert_eq!(idx, chunk, "chunks must be staged in submission order");
+        std::thread::sleep(Duration::from_micros(self.rng.below(300) as u64));
+        Ok(chunk)
+    }
+
+    fn finish(&mut self, _idx: usize, raw: usize) -> anyhow::Result<usize> {
+        std::thread::sleep(Duration::from_micros(self.rng.below(300) as u64));
+        Ok(raw)
+    }
+}
+
+#[test]
+fn stream_results_arrive_in_submission_order() {
+    let worker = JitterWorker { rng: Rng::new(17) };
+    let mut jitter = Rng::new(23);
+    let (result, _, stats) = run_pipelined(0..64usize, worker, 2, |_, staged| {
+        std::thread::sleep(Duration::from_micros(jitter.below(300) as u64));
+        Ok(staged)
+    });
+    let outs = result.unwrap();
+    assert_eq!(outs, (0..64).collect::<Vec<_>>());
+    assert_eq!(stats.chunks, 64);
+}
+
+/// Simulated request: id + per-request reply channel, like the service's
+/// `Pending`.
+struct Req {
+    id: u64,
+    reply: mpsc::Sender<u64>,
+}
+
+/// Wire a `Batcher` into a pack-stage/execute-stage thread pair exactly
+/// like `coordinator::service` does (staged sync_channel of depth 2), with
+/// a stub "solve" that echoes request ids. Concurrent submitters then
+/// verify that every reply carries their own id — the pipelined hand-off
+/// must not reorder or cross-wire requests within a batch.
+#[test]
+fn pipelined_executor_pair_preserves_request_reply_pairing() {
+    const SUBMITTERS: usize = 4;
+    const PER_SUBMITTER: usize = 200;
+
+    let batcher = Arc::new(Mutex::new(Batcher::<Req>::new(
+        vec![16, 64],
+        vec![8, 8],
+        Duration::from_millis(1),
+    )));
+    let (batch_tx, batch_rx) = mpsc::channel::<Vec<Req>>();
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Dispatcher stand-in: flush deadline-expired partial batches while
+    // submitters push directly. Exits once submitters are done (at which
+    // point every request has been replied to, so the queues are empty).
+    let poller = {
+        let batcher = batcher.clone();
+        let batch_tx = batch_tx.clone();
+        let done = done.clone();
+        std::thread::spawn(move || loop {
+            if done.load(Ordering::Relaxed) && batcher.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(300));
+            let expired = batcher.lock().unwrap().poll_expired(Instant::now());
+            for b in expired {
+                let _ = batch_tx.send(b.items);
+            }
+        })
+    };
+
+    // Pack stage: "packs" by snapshotting the ids, forwards over a
+    // depth-bounded channel (the service's PIPELINE_DEPTH).
+    let (staged_tx, staged_rx) = mpsc::sync_channel::<(Vec<u64>, Vec<Req>)>(2);
+    let pack = std::thread::spawn(move || {
+        while let Ok(items) = batch_rx.recv() {
+            let ids: Vec<u64> = items.iter().map(|r| r.id).collect();
+            if staged_tx.send((ids, items)).is_err() {
+                break;
+            }
+        }
+    });
+
+    // Execute stage: stub solve = identity over ids; fan out replies.
+    let exec = std::thread::spawn(move || {
+        while let Ok((ids, items)) = staged_rx.recv() {
+            for (req, id) in items.into_iter().zip(ids) {
+                let _ = req.reply.send(id);
+            }
+        }
+    });
+
+    // Concurrent submitters, each with its own id space.
+    std::thread::scope(|scope| {
+        for s in 0..SUBMITTERS as u64 {
+            let batcher = batcher.clone();
+            let batch_tx = batch_tx.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(s + 1);
+                let mut tickets = Vec::new();
+                for i in 0..PER_SUBMITTER as u64 {
+                    let id = (s << 32) | i;
+                    let class = if rng.below(2) == 0 { 16 } else { 64 };
+                    let (reply, rx) = mpsc::channel();
+                    let ready = batcher
+                        .lock()
+                        .unwrap()
+                        .push(class, Req { id, reply }, Instant::now());
+                    if let Some(b) = ready {
+                        let _ = batch_tx.send(b.items);
+                    }
+                    tickets.push((id, rx));
+                }
+                for (id, rx) in tickets {
+                    let got = rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .expect("reply arrived");
+                    assert_eq!(got, id, "reply cross-wired between requests");
+                }
+            });
+        }
+    });
+
+    // Teardown: stop the poller, drop the producers, join the pipeline.
+    done.store(true, Ordering::Relaxed);
+    poller.join().unwrap();
+    drop(batch_tx);
+    pack.join().unwrap();
+    exec.join().unwrap();
+}

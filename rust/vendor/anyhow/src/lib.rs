@@ -1,0 +1,171 @@
+//! Minimal offline drop-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! provides exactly the surface `batch_lp2d` uses:
+//!
+//! * [`Error`] / [`Result`] — a message-chain error type (`Send + Sync`).
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//! * `Error::context` and the [`Context`] extension trait.
+//! * Blanket `From<E: std::error::Error>` so `?` converts std errors.
+//!
+//! Deliberately NOT implemented: backtraces and `downcast` (nothing in the
+//! workspace uses them). Like real anyhow, `Error` does not implement
+//! `std::error::Error` itself — that is what keeps the blanket `From`
+//! coherent.
+
+use std::fmt;
+
+/// A chain of error messages; the head is the most recent context.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a pre-formatted message (used by the macros).
+    pub fn from_msg(msg: String) -> Error {
+        Error { msg, source: None }
+    }
+
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error::from_msg(m.to_string())
+    }
+
+    /// Wrap with an outer context message (matches `anyhow::Error::context`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut source = self.source.as_deref();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = source {
+            write!(f, "\n    {}", e.msg)?;
+            source = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_msg(e.to_string())
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::from_msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::from_msg(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond)).to_string(),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // std error converts via blanket From
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn from_std_error_and_ensure() {
+        assert_eq!(parse("3").unwrap(), 3);
+        assert!(parse("x").is_err());
+        assert_eq!(parse("-1").unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = anyhow!("inner {}", 1).context("outer");
+        assert_eq!(e.to_string(), "outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "inner 1"]);
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f() -> Result<()> {
+            bail!("boom {}", 7);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+}

@@ -1,0 +1,179 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment ships no libpjrt, so this crate mirrors
+//! exactly the API surface `batch_lp2d::runtime::engine` consumes — enough
+//! for the full stack (runtime, coordinator, benches, examples) to compile
+//! and for every non-PJRT test to run. Constructing a [`PjRtClient`]
+//! returns an explicit "backend unavailable" error, which the engine
+//! surfaces from `Engine::new`; all PJRT-touching tests gate on compiled
+//! artifacts being present and skip cleanly.
+//!
+//! To execute the AOT artifacts for real, replace this path dependency in
+//! `rust/Cargo.toml` with the actual `xla` bindings (the types and method
+//! signatures here match their call shapes 1:1, so no engine change is
+//! needed).
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every device-touching call fails with this.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT backend unavailable (offline `xla` stub; swap in the \
+             real bindings in rust/Cargo.toml to execute artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element dtypes the engine stages host buffers as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Rust scalar types a [`Literal`] can decode to.
+pub trait NativeType: Copy + Default {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side tensor buffer handle.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: PrimitiveType,
+    dims: Vec<usize>,
+}
+
+impl Literal {
+    /// Allocate a zeroed literal of the given shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        Literal { ty, dims: dims.to_vec() }
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Copy a host slice into the literal's backing store.
+    pub fn copy_raw_from(&mut self, _src: &[f32]) -> Result<()> {
+        Err(Error::unavailable("Literal::copy_raw_from"))
+    }
+
+    /// Decode the literal into a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    /// Split a 2-tuple literal into its elements.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple2"))
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle. The real binding wraps a non-atomic `Rc` and raw
+/// PJRT pointers (not `Sync`); the stub mirrors that so the engine's thread
+/// model is exercised identically in both builds.
+pub struct PjRtClient {
+    _not_sync: std::marker::PhantomData<std::rc::Rc<()>>,
+}
+
+impl PjRtClient {
+    /// Connect to the CPU PJRT plugin. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _not_sync: std::marker::PhantomData<std::rc::Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; returns per-device,
+    /// per-output buffers.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _not_sync: std::marker::PhantomData<std::rc::Rc<()>>,
+}
+
+impl PjRtBuffer {
+    /// Synchronously copy the device buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("backend unavailable"));
+    }
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let l = Literal::create_from_shape(PrimitiveType::F32, &[4, 8, 4]);
+        assert_eq!(l.dims(), &[4, 8, 4]);
+        assert_eq!(l.primitive_type(), PrimitiveType::F32);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
