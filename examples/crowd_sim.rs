@@ -26,7 +26,12 @@ struct RunReport {
     min_separation: f64,
 }
 
-fn run(world: &mut World, backend: &Backend<'_>, steps: usize, seed: u64) -> anyhow::Result<RunReport> {
+fn run(
+    world: &mut World,
+    backend: &Backend<'_>,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<RunReport> {
     let mut rng = Rng::new(seed);
     let t0 = Timer::start();
     let mut solve_ns = 0u64;
@@ -54,7 +59,10 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(120);
 
     let params = WorldParams::default();
-    println!("crowd_sim: {agents} agents x {steps} steps (max {} neighbours/agent)", params.max_neighbors);
+    println!(
+        "crowd_sim: {agents} agents x {steps} steps (max {} neighbours/agent)",
+        params.max_neighbors
+    );
 
     // --- RGB through the engine (the paper's GPU path). ---
     let engine = Engine::new(batch_lp2d::runtime::default_artifact_dir())?;

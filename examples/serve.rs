@@ -6,8 +6,11 @@
 //! batched per class under a deadline, and executed on the AOT kernels.
 //!
 //! ```sh
-//! cargo run --release --example serve [-- <requests> <rate_per_s>]
+//! cargo run --release --example serve [-- <requests> <rate_per_s> [--shards N]]
 //! ```
+//!
+//! `--shards N` runs N executor shards (one engine each) behind the
+//! shortest-staged-queue dispatcher and reports the per-shard load split.
 
 use std::time::{Duration, Instant};
 
@@ -18,11 +21,29 @@ use batch_lp2d::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(6_000);
-    let rate: f64 = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(2_000.0);
+    let mut requests: usize = 6_000;
+    let mut rate: f64 = 2_000.0;
+    let mut shards: usize = 1;
+    let mut positional = 0usize;
+    let mut i = 0usize;
+    while i < args.len() {
+        if args[i] == "--shards" {
+            i += 1;
+            shards = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(1);
+        } else {
+            match positional {
+                0 => requests = args[i].parse().unwrap_or(requests),
+                1 => rate = args[i].parse().unwrap_or(rate),
+                _ => eprintln!("ignoring stray argument '{}'", args[i]),
+            }
+            positional += 1;
+        }
+        i += 1;
+    }
 
     let config = Config {
         max_wait: Duration::from_millis(10),
+        executors: shards.max(1),
         ..Config::default()
     };
     let service = Service::start(batch_lp2d::runtime::default_artifact_dir(), config)?;
@@ -35,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     let tp = TraceParams { rate, m_lo: 6, m_hi: 64, infeasible_frac: 0.03 };
     let reqs = poisson_trace(&mut rng, requests, tp);
 
-    println!("driving {requests} requests at ~{rate:.0}/s ...");
+    println!("driving {requests} requests at ~{rate:.0}/s across {shards} shard(s)...");
     let t0 = Instant::now();
     // Collector thread waits tickets concurrently with the driver so the
     // measured latency is (completion - submission), not (drive end - sub).
@@ -67,7 +88,9 @@ fn main() -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
 
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies_ms[((p / 100.0 * (requests - 1) as f64) as usize).min(requests - 1)];
+    let pct = |p: f64| {
+        latencies_ms[((p / 100.0 * (requests - 1) as f64) as usize).min(requests - 1)]
+    };
     let snap = service.metrics().snapshot();
 
     println!("\nresults:");
@@ -93,6 +116,14 @@ fn main() -> anyhow::Result<()> {
         snap.timing.total_ns() as f64 / 1e6,
         snap.overlap_ratio()
     );
+    for (s, load) in snap.per_shard.iter().enumerate() {
+        println!(
+            "  shard {s}: {} batches  {} LPs  busy {:.3} ms",
+            load.batches,
+            load.solved,
+            load.busy_ns as f64 / 1e6
+        );
+    }
     service.shutdown();
     println!("serve OK");
     Ok(())

@@ -14,7 +14,10 @@ fn main() -> anyhow::Result<()> {
     print!("{}", ablations::randomization_table(&[64, 256, 1024, 4096], opts).to_markdown());
 
     println!("\n## Ablation: bucket padding waste (batch 1024, true m 16)\n");
-    print!("{}", ablations::padding_table(&engine, 1024, 16, &[16, 32, 64, 128, 256], opts)?.to_markdown());
+    print!(
+        "{}",
+        ablations::padding_table(&engine, 1024, 16, &[16, 32, 64, 128, 256], opts)?.to_markdown()
+    );
 
     println!("\n## Ablation: replicated vs independent batches (batch 1024)\n");
     print!("{}", ablations::batch_mix_table(&engine, 1024, &[16, 64, 256], opts)?.to_markdown());

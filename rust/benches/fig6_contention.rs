@@ -9,7 +9,12 @@ fn main() {
     let opts = BenchOpts::from_env();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let n = 1 << 22; // 4M elements, matching a large-batch reduction load
-    let mut table = Table::new(&["contention", "global_atomic_ms", "sharded_atomic_ms", "segmented_reduce_ms"]);
+    let mut table = Table::new(&[
+        "contention",
+        "global_atomic_ms",
+        "sharded_atomic_ms",
+        "segmented_reduce_ms",
+    ]);
 
     for &c in CONTENTIONS {
         let mut rng = Rng::new(2019 ^ c as u64);

@@ -11,7 +11,9 @@ use batch_lp2d::gen;
 use batch_lp2d::lp::types::Problem;
 use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
-use batch_lp2d::runtime::{default_artifact_dir, Engine, Variant};
+use batch_lp2d::runtime::{
+    default_artifact_dir, CpuShardExecutor, Engine, Manifest, ShardedEngine, Variant,
+};
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
 use batch_lp2d::util::{Rng, Timer};
 
@@ -100,6 +102,100 @@ fn pipeline_report(problems: &[Problem], chunk: usize, threads: usize) -> String
     )
 }
 
+/// Shard counts the sweep reports (the CI perf gate tracks each).
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Sharded-execution sweep over the deterministic CPU backend: the same
+/// workload through `ShardedEngine` at 1/2/4 shards. Runs on any host (no
+/// artifacts, no PJRT) — the executors solve straight from the packed
+/// bytes — so CI can gate on the shard-scaling trajectory.
+fn shard_sweep_reports(problems: &[Problem]) -> Vec<String> {
+    // Synthetic bucket inventory for the chunk policy; the CPU executors
+    // never open bucket files.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t128\t64\t128\t64\tcpu\n\
+                rgb\t256\t64\t128\t64\tcpu\n\
+                rgb\t512\t64\t128\t64\tcpu\n\
+                rgb\t1024\t64\t128\t64\tcpu\n";
+    let manifest =
+        Manifest::parse(text, std::path::PathBuf::from("cpu-fallback")).expect("manifest");
+
+    let mut out = Vec::new();
+    let mut base_ns: Option<u64> = None;
+    for shards in SHARD_COUNTS {
+        let executors: Vec<CpuShardExecutor> = (0..shards).map(|_| CpuShardExecutor).collect();
+        let mut sharded =
+            ShardedEngine::from_executors(manifest.clone(), executors).expect("sharded engine");
+        let chunk = sharded
+            .plan_chunk(Variant::Rgb, problems.len(), 64)
+            .expect("chunk plan");
+        let mut rng = Rng::new(33);
+        let (solutions, report) = sharded
+            .solve_all(Variant::Rgb, problems, Some(&mut rng))
+            .expect("sharded solve_all");
+        assert_eq!(solutions.len(), problems.len());
+
+        let wall_ns = report.timing.critical_path_ns.max(1);
+        let base = *base_ns.get_or_insert(wall_ns);
+        let lps = problems.len() as f64 / (wall_ns as f64 / 1e9);
+        let speedup = base as f64 / wall_ns as f64;
+        println!(
+            "shards {shards}: chunk {chunk}  {:.3} ms  {:.0} LPs/s  speedup {speedup:.3}x  \
+             balance {:.3}",
+            wall_ns as f64 / 1e6,
+            lps,
+            report.balance(),
+        );
+        out.push(format!(
+            "{{\n  \"bench\": \"pipeline_shard_cpu\",\n  \"shards\": {shards},\n  \
+             \"chunk_size\": {chunk},\n  \"throughput_lps\": {lps:.1},\n  \
+             \"wall_ms\": {:.3},\n  \"speedup_vs_1shard\": {speedup:.4},\n  \
+             \"balance\": {:.3}\n}}",
+            wall_ns as f64 / 1e6,
+            report.balance(),
+        ));
+    }
+    out
+}
+
+/// Engine-path shard sweep; empty when artifacts (or the real PJRT
+/// backend) are unavailable.
+fn engine_shard_sweep(problems: &[Problem]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut base_ns: Option<u64> = None;
+    for shards in SHARD_COUNTS {
+        let Ok(mut sharded) = ShardedEngine::new(default_artifact_dir(), shards) else {
+            return out;
+        };
+        let mut rng = Rng::new(5);
+        // Warm every shard's executable cache outside the timed run.
+        if sharded.solve_all(Variant::Rgb, problems, Some(&mut rng)).is_err() {
+            return out;
+        }
+        let mut rng = Rng::new(5);
+        let Ok((_, report)) = sharded.solve_all(Variant::Rgb, problems, Some(&mut rng)) else {
+            return out;
+        };
+        let wall_ns = report.timing.critical_path_ns.max(1);
+        let base = *base_ns.get_or_insert(wall_ns);
+        let lps = problems.len() as f64 / (wall_ns as f64 / 1e9);
+        println!(
+            "shards(engine) {shards}: {:.3} ms  {:.0} LPs/s  speedup {:.3}x",
+            wall_ns as f64 / 1e6,
+            lps,
+            base as f64 / wall_ns as f64,
+        );
+        out.push(format!(
+            "{{\n  \"bench\": \"pipeline_shard_engine\",\n  \"shards\": {shards},\n  \
+             \"throughput_lps\": {lps:.1},\n  \"wall_ms\": {:.3},\n  \
+             \"speedup_vs_1shard\": {:.4}\n}}",
+            wall_ns as f64 / 1e6,
+            base as f64 / wall_ns as f64,
+        ));
+    }
+    out
+}
+
 /// Engine-path pipeline numbers; None when artifacts (or the real PJRT
 /// backend) are unavailable.
 fn engine_pipeline_report(problems: &[Problem], chunk: usize) -> Option<String> {
@@ -181,12 +277,16 @@ fn main() {
     let json_cpu = pipeline_report(&problems, 512, 1);
     let json_engine = engine_pipeline_report(&problems, 512);
 
+    println!("\n## sharded execution sweep (shortest-staged-queue dispatch)");
+    let json_shards = shard_sweep_reports(&problems);
+    let json_engine_shards = engine_shard_sweep(&problems);
+
+    let mut entries: Vec<String> = vec![json_cpu];
+    entries.extend(json_engine);
+    entries.extend(json_shards);
+    entries.extend(json_engine_shards);
     let mut body = String::from("[\n");
-    body.push_str(&json_cpu);
-    if let Some(j) = &json_engine {
-        body.push_str(",\n");
-        body.push_str(j);
-    }
+    body.push_str(&entries.join(",\n"));
     body.push_str("\n]\n");
     match std::fs::write("BENCH_pipeline.json", &body) {
         Ok(()) => println!("wrote BENCH_pipeline.json"),

@@ -14,7 +14,7 @@
 use crate::bench::harness::{bench, BenchOpts};
 use crate::gen;
 use crate::lp::types::Problem;
-use crate::runtime::{Engine, Variant};
+use crate::runtime::{Engine, ShardedEngine, Variant};
 use crate::solvers::batch_cpu::{self, Algo};
 use crate::util::{Rng, Table};
 
@@ -180,7 +180,10 @@ pub fn fig5(ctx: &FigureCtx<'_>, batches: &[usize], sizes: &[usize]) -> anyhow::
                 batch.to_string(),
                 m.to_string(),
                 format!("{:.4}", acc.memory_fraction()),
-                format!("{:.3}", acc.total_ns() as f64 / 1e6 / ctx.opts.measure_iters.max(1) as f64),
+                format!(
+                    "{:.3}",
+                    acc.total_ns() as f64 / 1e6 / ctx.opts.measure_iters.max(1) as f64
+                ),
             ]);
             eprintln!("  {}", table.rows.last().unwrap().join("\t"));
         }
@@ -246,6 +249,50 @@ pub fn fig5_pipeline(
             format!("{:.3}", serial_ms / stream_ms.max(1e-9)),
             format!("{:.3}", stream.overlap_ratio()),
             format!("{:.4}", stream.memory_fraction()),
+        ]);
+        eprintln!("  {}", table.rows.last().unwrap().join("\t"));
+    }
+    Ok(table)
+}
+
+/// Shard-count sweep: the same workload through [`ShardedEngine`] at each
+/// shard count — wall time, speedup over one shard, busy-time balance, and
+/// the chunk size the batch-size-aware policy picked. One engine (PJRT
+/// client + executable cache) is built per shard, mirroring the one-client-
+/// per-device deployment; warmup happens outside the timed region.
+pub fn fig_shard_sweep(
+    artifact_dir: &std::path::Path,
+    n: usize,
+    m: usize,
+    shard_counts: &[usize],
+) -> anyhow::Result<Table> {
+    let mut table = Table::new(&["shards", "chunk", "wall_ms", "speedup", "balance", "klps"]);
+    // Honour the fast-mode convention the figure benches use (main.rs
+    // exports the env var under --fast).
+    let n = if std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some() {
+        n.min(512)
+    } else {
+        n
+    };
+    let mut prng = Rng::new(2019 ^ ((n as u64) << 32) ^ m as u64);
+    let problems = gen::independent_batch(&mut prng, n, m);
+    let mut base_ms: Option<f64> = None;
+    for &shards in shard_counts {
+        let mut sharded = ShardedEngine::new(artifact_dir, shards)?;
+        sharded.warmup(Variant::Rgb)?;
+        let chunk = sharded.plan_chunk(Variant::Rgb, n, m)?;
+        let mut rng = Rng::new(2019);
+        let (solutions, report) = sharded.solve_all(Variant::Rgb, &problems, Some(&mut rng))?;
+        anyhow::ensure!(solutions.len() == n, "lost solutions in shard sweep");
+        let wall_ms = report.timing.critical_path_ns.max(1) as f64 / 1e6;
+        let base = *base_ms.get_or_insert(wall_ms);
+        table.push_row(vec![
+            shards.to_string(),
+            chunk.to_string(),
+            format!("{wall_ms:.3}"),
+            format!("{:.3}", base / wall_ms),
+            format!("{:.3}", report.balance()),
+            format!("{:.1}", n as f64 / wall_ms),
         ]);
         eprintln!("  {}", table.rows.last().unwrap().join("\t"));
     }

@@ -1,0 +1,248 @@
+//! CI perf-regression gate: diff a fresh `BENCH_pipeline.json` against the
+//! committed `BENCH_baseline.json` and fail on a throughput regression.
+//!
+//! ```sh
+//! bench_gate <baseline.json> <fresh.json> [--tolerance 0.15]
+//! ```
+//!
+//! Records are matched by `bench` name (plus the `shards` count when
+//! present). A record regresses when its fresh `throughput_lps` drops more
+//! than `tolerance` below the baseline's; any regression — or a baseline
+//! record missing from the fresh run — exits non-zero, which is what fails
+//! the workflow. Baseline records with `throughput_lps <= 0` are
+//! *bootstrap* rows: they pin the expected record set without pinning a
+//! number yet (refresh by copying a representative runner's
+//! `BENCH_pipeline.json` over `BENCH_baseline.json`).
+//!
+//! The parser is a minimal field scanner for the flat `[{...}, ...]`
+//! array `solver_micro` emits — the offline vendor set has no serde, and
+//! the gate must not drag a JSON crate into the build.
+
+use std::process::ExitCode;
+
+/// Default relative throughput drop that fails the gate.
+const DEFAULT_TOLERANCE: f64 = 0.15;
+
+/// One comparable bench record: match key + throughput.
+#[derive(Clone, Debug, PartialEq)]
+struct Record {
+    key: String,
+    throughput_lps: f64,
+}
+
+/// Extract a string field (`"field": "value"`) from one flat JSON object.
+fn extract_str(obj: &str, field: &str) -> Option<String> {
+    let pat = format!("\"{field}\"");
+    let rest = &obj[obj.find(&pat)? + pat.len()..];
+    let rest = rest.split_once(':')?.1.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    Some(rest.split('"').next()?.to_string())
+}
+
+/// Extract a numeric field (`"field": 123.4`) from one flat JSON object.
+fn extract_num(obj: &str, field: &str) -> Option<f64> {
+    let pat = format!("\"{field}\"");
+    let rest = &obj[obj.find(&pat)? + pat.len()..];
+    let rest = rest.split_once(':')?.1.trim_start();
+    let num: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+        .collect();
+    num.parse().ok()
+}
+
+/// Parse every `{...}` object carrying a `bench` + `throughput_lps` pair.
+fn parse_records(text: &str) -> Vec<Record> {
+    let mut out = Vec::new();
+    for obj in text.split('{').skip(1) {
+        let obj = obj.split('}').next().unwrap_or("");
+        let (Some(bench), Some(lps)) =
+            (extract_str(obj, "bench"), extract_num(obj, "throughput_lps"))
+        else {
+            continue;
+        };
+        let key = match extract_num(obj, "shards") {
+            Some(s) => format!("{bench}/shards={}", s as u64),
+            None => bench,
+        };
+        out.push(Record { key, throughput_lps: lps });
+    }
+    out
+}
+
+/// Compare fresh against baseline; Ok carries the report lines, Err the
+/// report lines plus the failure summary.
+fn compare(
+    baseline: &[Record],
+    fresh: &[Record],
+    tolerance: f64,
+) -> Result<Vec<String>, Vec<String>> {
+    let mut lines = Vec::new();
+    let mut failures = 0usize;
+    for b in baseline {
+        let Some(f) = fresh.iter().find(|f| f.key == b.key) else {
+            failures += 1;
+            lines.push(format!("FAIL  {:<40} missing from fresh run", b.key));
+            continue;
+        };
+        if b.throughput_lps <= 0.0 {
+            lines.push(format!(
+                "boot  {:<40} baseline unset, fresh {:.1} LPs/s (refresh baseline)",
+                b.key, f.throughput_lps
+            ));
+            continue;
+        }
+        let ratio = f.throughput_lps / b.throughput_lps;
+        let verdict = if ratio < 1.0 - tolerance {
+            failures += 1;
+            "FAIL"
+        } else {
+            "ok  "
+        };
+        lines.push(format!(
+            "{verdict}  {:<40} base {:.1}  fresh {:.1}  ({:+.1}%)",
+            b.key,
+            b.throughput_lps,
+            f.throughput_lps,
+            (ratio - 1.0) * 100.0
+        ));
+    }
+    for f in fresh {
+        if !baseline.iter().any(|b| b.key == f.key) {
+            lines.push(format!(
+                "new   {:<40} fresh {:.1} LPs/s (no baseline yet)",
+                f.key, f.throughput_lps
+            ));
+        }
+    }
+    if failures > 0 {
+        lines.push(format!(
+            "bench gate: {failures} regression(s) beyond {:.0}% tolerance",
+            tolerance * 100.0
+        ));
+        Err(lines)
+    } else {
+        Ok(lines)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths: Vec<&String> = Vec::new();
+    let mut tolerance = std::env::var("BENCH_GATE_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_TOLERANCE);
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tolerance" {
+            i += 1;
+            tolerance = args.get(i).and_then(|v| v.parse().ok()).unwrap_or(tolerance);
+        } else {
+            paths.push(&args[i]);
+        }
+        i += 1;
+    }
+    if paths.len() != 2 {
+        eprintln!("usage: bench_gate <baseline.json> <fresh.json> [--tolerance 0.15]");
+        return ExitCode::from(2);
+    }
+    let read = |path: &str| match std::fs::read_to_string(path) {
+        Ok(text) => Some(text),
+        Err(e) => {
+            eprintln!("bench_gate: cannot read {path}: {e}");
+            None
+        }
+    };
+    let (Some(base_text), Some(fresh_text)) = (read(paths[0]), read(paths[1])) else {
+        return ExitCode::from(2);
+    };
+    let baseline = parse_records(&base_text);
+    let fresh = parse_records(&fresh_text);
+    if baseline.is_empty() {
+        eprintln!("bench_gate: no comparable records in {}", paths[0]);
+        return ExitCode::from(2);
+    }
+    println!(
+        "bench gate: {} baseline record(s), {} fresh, tolerance {:.0}%",
+        baseline.len(),
+        fresh.len(),
+        tolerance * 100.0
+    );
+    match compare(&baseline, &fresh, tolerance) {
+        Ok(lines) => {
+            for l in lines {
+                println!("{l}");
+            }
+            println!("bench gate: OK");
+            ExitCode::SUCCESS
+        }
+        Err(lines) => {
+            for l in lines {
+                println!("{l}");
+            }
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+  {
+    "bench": "pipeline_cpu",
+    "chunks": 8,
+    "throughput_lps": 1000.5
+  },
+  {
+    "bench": "pipeline_shard_cpu",
+    "shards": 2,
+    "throughput_lps": 1800.0
+  }
+]"#;
+
+    fn rec(key: &str, lps: f64) -> Record {
+        Record { key: key.to_string(), throughput_lps: lps }
+    }
+
+    #[test]
+    fn parses_keys_and_throughput() {
+        let records = parse_records(SAMPLE);
+        assert_eq!(
+            records,
+            vec![rec("pipeline_cpu", 1000.5), rec("pipeline_shard_cpu/shards=2", 1800.0)]
+        );
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = vec![rec("a", 100.0)];
+        let fresh = vec![rec("a", 90.0)]; // -10% with 15% tolerance
+        assert!(compare(&base, &fresh, 0.15).is_ok());
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let base = vec![rec("a", 100.0), rec("b", 50.0)];
+        let fresh = vec![rec("a", 80.0), rec("b", 50.0)]; // a: -20%
+        let lines = compare(&base, &fresh, 0.15).unwrap_err();
+        assert!(lines.iter().any(|l| l.starts_with("FAIL") && l.contains('a')));
+    }
+
+    #[test]
+    fn missing_fresh_record_fails() {
+        let base = vec![rec("a", 100.0)];
+        assert!(compare(&base, &[], 0.15).is_err());
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_and_improvements_pass() {
+        let base = vec![rec("a", 0.0), rec("b", 100.0)];
+        let fresh = vec![rec("a", 5000.0), rec("b", 400.0), rec("c", 1.0)];
+        let lines = compare(&base, &fresh, 0.15).unwrap();
+        assert!(lines.iter().any(|l| l.starts_with("boot")));
+        assert!(lines.iter().any(|l| l.starts_with("new")));
+    }
+}

@@ -22,6 +22,19 @@ struct Inner {
     queue_wait: LatencyHistogram,
     exec_latency: LatencyHistogram,
     exec_timing: ExecTimingTotals,
+    /// Per-shard (executor) load; grows to the highest shard id seen.
+    per_shard: Vec<ShardLoad>,
+}
+
+/// One executor shard's share of the served load — how evenly the
+/// shortest-staged-queue dispatch spread the batches.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ShardLoad {
+    pub batches: u64,
+    pub solved: u64,
+    /// Summed stage time (pack+transfer+execute+unpack) of this shard's
+    /// batches — its busy share of the run.
+    pub busy_ns: u64,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -65,6 +78,8 @@ pub struct Snapshot {
     pub exec_p99_ns: u64,
     pub exec_mean_ns: f64,
     pub timing: ExecTimingTotals,
+    /// Per-shard load split (index = shard/executor id).
+    pub per_shard: Vec<ShardLoad>,
 }
 
 impl Metrics {
@@ -76,13 +91,25 @@ impl Metrics {
         self.inner.lock().unwrap().submitted += 1;
     }
 
+    /// Pre-size the per-shard table so idle shards still show up (as
+    /// zero rows) in [`Snapshot::per_shard`] — an operator must be able
+    /// to tell "shard starved" from "shard not configured".
+    pub fn ensure_shards(&self, shards: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if g.per_shard.len() < shards {
+            g.per_shard.resize(shards, ShardLoad::default());
+        }
+    }
+
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// Record a completed batch: per-problem outcomes plus the exec split.
+    /// Record a completed batch on shard `shard`: per-problem outcomes
+    /// plus the exec split, attributed to the executor that ran it.
     pub fn on_batch(
         &self,
+        shard: usize,
         used: usize,
         capacity: usize,
         infeasible: usize,
@@ -101,6 +128,13 @@ impl Metrics {
         g.exec_timing.execute_ns += timing.execute_ns;
         g.exec_timing.unpack_ns += timing.unpack_ns;
         g.exec_timing.critical_path_ns += timing.critical_path_ns;
+        if g.per_shard.len() <= shard {
+            g.per_shard.resize(shard + 1, ShardLoad::default());
+        }
+        let s = &mut g.per_shard[shard];
+        s.batches += 1;
+        s.solved += used as u64;
+        s.busy_ns += timing.total_ns();
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -122,6 +156,7 @@ impl Metrics {
             exec_p99_ns: g.exec_latency.percentile_ns(99.0),
             exec_mean_ns: g.exec_latency.mean_ns(),
             timing: g.exec_timing,
+            per_shard: g.per_shard.clone(),
         }
     }
 }
@@ -152,6 +187,7 @@ mod tests {
         m.on_submit();
         m.on_submit();
         m.on_batch(
+            0,
             2,
             4,
             1,
@@ -173,6 +209,39 @@ mod tests {
         assert!((s.memory_fraction() - 0.4).abs() < 1e-12);
         // Pack (1ns) overlapped execution: 10ns of stages in 9ns of wall.
         assert!((s.overlap_ratio() - 10.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ensure_shards_presizes_zero_rows() {
+        let m = Metrics::new();
+        m.ensure_shards(3);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard.len(), 3);
+        assert!(s.per_shard.iter().all(|l| *l == ShardLoad::default()));
+        // Never shrinks.
+        m.ensure_shards(1);
+        assert_eq!(m.snapshot().per_shard.len(), 3);
+    }
+
+    #[test]
+    fn per_shard_split() {
+        let m = Metrics::new();
+        let t = ExecTiming {
+            pack_ns: 1,
+            transfer_ns: 1,
+            execute_ns: 7,
+            unpack_ns: 1,
+            critical_path_ns: 10,
+        };
+        m.on_batch(0, 4, 4, 0, Duration::ZERO, &t);
+        m.on_batch(2, 2, 4, 0, Duration::ZERO, &t);
+        m.on_batch(2, 3, 4, 0, Duration::ZERO, &t);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard.len(), 3);
+        assert_eq!(s.per_shard[0], ShardLoad { batches: 1, solved: 4, busy_ns: 10 });
+        assert_eq!(s.per_shard[1], ShardLoad::default());
+        assert_eq!(s.per_shard[2], ShardLoad { batches: 2, solved: 5, busy_ns: 20 });
+        assert_eq!(s.solved, 9);
     }
 
     #[test]

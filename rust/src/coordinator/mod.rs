@@ -10,6 +10,6 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{Metrics, ShardLoad, Snapshot};
 pub use router::Router;
 pub use service::{Config, Service, SubmitError, Ticket};

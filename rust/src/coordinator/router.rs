@@ -18,6 +18,9 @@ pub struct Router {
     classes: Vec<usize>,
     /// Max batch capacity per class (largest compiled batch for that m).
     capacity: Vec<usize>,
+    /// Ascending distinct compiled batch sizes per class — the bucket
+    /// inventory the chunking policy picks from.
+    batches: Vec<Vec<usize>>,
 }
 
 impl Router {
@@ -34,19 +37,22 @@ impl Router {
             "manifest has no buckets for variant {}",
             variant.as_str()
         );
-        let capacity = classes
+        let batches: Vec<Vec<usize>> = classes
             .iter()
             .map(|&m| {
-                manifest
+                let mut sizes: Vec<usize> = manifest
                     .of_variant(variant)
                     .iter()
                     .filter(|b| b.m == m)
                     .map(|b| b.batch)
-                    .max()
-                    .unwrap()
+                    .collect();
+                sizes.sort_unstable();
+                sizes.dedup();
+                sizes
             })
             .collect();
-        Ok(Router { variant, classes, capacity })
+        let capacity = batches.iter().map(|sizes| *sizes.last().unwrap()).collect();
+        Ok(Router { variant, classes, capacity, batches })
     }
 
     pub fn variant(&self) -> Variant {
@@ -78,6 +84,19 @@ impl Router {
     /// row that is dead work. Used by ablation benches.
     pub fn padding_waste(&self, m: usize) -> Option<f64> {
         self.route(m).map(|c| 1.0 - m as f64 / c as f64)
+    }
+
+    /// A class's compiled batch inventory (ascending distinct batch sizes).
+    pub fn batch_sizes(&self, class_m: usize) -> Option<&[usize]> {
+        self.class_index(class_m).map(|i| self.batches[i].as_slice())
+    }
+
+    /// Batch-size-aware chunk size for running `n` problems of a class
+    /// across `shards` devices: delegates to the runtime's policy
+    /// ([`crate::runtime::shard::pick_chunk_size`]) over this class's
+    /// bucket inventory.
+    pub fn plan_chunk(&self, class_m: usize, n: usize, shards: usize) -> Option<usize> {
+        crate::runtime::shard::pick_chunk_size(self.batch_sizes(class_m)?, n, shards)
     }
 }
 
@@ -129,5 +148,25 @@ mod tests {
         assert_eq!(r.padding_waste(16), Some(0.0));
         let w = r.padding_waste(17).unwrap();
         assert!((w - (1.0 - 17.0 / 64.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_inventory_per_class() {
+        let r = Router::new(&manifest(), Variant::Rgb).unwrap();
+        assert_eq!(r.batch_sizes(16), Some(&[256usize, 1024][..]));
+        assert_eq!(r.batch_sizes(64), Some(&[512usize][..]));
+        assert_eq!(r.batch_sizes(32), None);
+    }
+
+    #[test]
+    fn plan_chunk_follows_inventory_and_shards() {
+        let r = Router::new(&manifest(), Variant::Rgb).unwrap();
+        // One shard, big backlog: largest compiled batch of the class.
+        assert_eq!(r.plan_chunk(16, 10_000, 1), Some(1024));
+        // Four shards need >= 8 chunks: 10000/1024 > 8, still 1024.
+        assert_eq!(r.plan_chunk(16, 10_000, 4), Some(1024));
+        // 2048 problems on 4 shards: 1024 gives 2 chunks, 256 gives 8.
+        assert_eq!(r.plan_chunk(16, 2048, 4), Some(256));
+        assert_eq!(r.plan_chunk(32, 100, 1), None);
     }
 }

@@ -4,28 +4,35 @@
 //! Topology (std threads; the offline vendor set has no tokio):
 //!
 //! ```text
-//!   submit() ──sync_channel──▶ dispatcher ──channel──▶ executor pairs (N)
-//!      ▲                        (router +      ┌──────────────┐
-//!      │                         batcher)      │ pack stage   │ (pack_into)
-//!      │                                       │   │ sync_channel(depth 2)
-//!      │                                       │ execute stage│ (engine)
-//!      │                                       └──────────────┘
-//!      └────────── per-request reply channel ◀────────┘
+//!   submit() ──sync_channel──▶ dispatcher ──per-shard channel──▶ shard e of N
+//!      ▲                        (router +                ┌──────────────┐
+//!      │                         batcher +               │ pack stage   │
+//!      │                         shortest-queue          │   │ sync_channel
+//!      │                         dispatch)               │ execute stage│
+//!      │                                                 └──────────────┘
+//!      └────────── per-request reply channel ◀──────────────────┘
 //! ```
 //!
 //! * The bounded submit channel is the backpressure surface.
 //! * The dispatcher owns the `Batcher` and closes batches on capacity or
-//!   deadline; it never touches PJRT.
-//! * Each executor is a **pipelined pair**: a pack-stage thread pulls ready
-//!   batches, packs them into rotating `PackedBatch` buffers (no `Problem`
-//!   clones — it packs straight from borrowed pending requests), and feeds
-//!   a depth-bounded channel; an execute-stage thread owns the `Engine`,
-//!   runs transfer/execute/unpack, fans results out to the per-request
-//!   reply channels, and recycles buffers back to the pack stage. Packing
-//!   batch k+1 thus overlaps executing batch k — the same double-buffering
-//!   `Engine::solve_stream` does, applied to the serving path.
+//!   deadline; it never touches PJRT. A closed batch is routed to the
+//!   executor shard with the **shortest staged queue** (fewest batches
+//!   dispatched but not yet executed, ties to the lowest shard id) — no
+//!   shared MPMC hand-off, so a slow shard never head-of-line blocks the
+//!   others and the load split is observable per shard
+//!   ([`Snapshot::per_shard`](crate::coordinator::metrics::Snapshot)).
+//! * Each executor shard is a **pipelined pair**: a pack-stage thread pulls
+//!   its shard's ready batches, packs them into rotating `PackedBatch`
+//!   buffers (no `Problem` clones — it packs straight from borrowed
+//!   pending requests), and feeds a depth-bounded channel; an
+//!   execute-stage thread owns the `Engine`, runs transfer/execute/unpack,
+//!   fans results out to the per-request reply channels, and recycles
+//!   buffers back to the pack stage. Packing batch k+1 thus overlaps
+//!   executing batch k — the same double-buffering `Engine::solve_stream`
+//!   does, applied to the serving path.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -51,11 +58,13 @@ pub struct Config {
     pub max_wait: Duration,
     /// Cap on per-class batch size (None = the bucket capacity).
     pub max_batch: Option<usize>,
-    /// Executor pairs running PJRT batches. The `xla` client is not
-    /// shareable across threads, so each executor owns a *separate* Engine
+    /// Executor shards running PJRT batches. The `xla` client is not
+    /// shareable across threads, so each shard owns a *separate* Engine
     /// (its own PJRT client + executable cache) plus a dedicated pack-stage
-    /// thread. 1 is usually right on CPU: XLA already parallelizes inside
-    /// one execution, and the pack stage overlaps it.
+    /// thread; the dispatcher routes each closed batch to the shard with
+    /// the shortest staged queue. 1 is usually right on CPU (XLA already
+    /// parallelizes inside one execution); raise it to one per device once
+    /// real multi-GPU PJRT clients land.
     pub executors: usize,
     /// Bounded submit-queue depth (backpressure).
     pub queue_depth: usize,
@@ -180,37 +189,41 @@ impl Service {
         let manifest = Manifest::load(&dir)?;
         let router = Router::new(&manifest, config.variant)?;
         let metrics = Arc::new(Metrics::new());
+        // Idle shards must still appear (as zero rows) in the load split.
+        metrics.ensure_shards(config.executors.max(1));
 
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_depth);
-        let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
-        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
 
-        // Executor pool: one pack/execute pair per executor.
+        // Executor pool: one pack/execute pair per shard, each with its own
+        // ready-batch queue. `outstanding[e]` counts batches dispatched to
+        // shard e and not yet executed — the staged-queue depth the
+        // dispatcher minimizes.
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
         let n_executors = config.executors.max(1);
+        let outstanding: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_executors).map(|_| AtomicUsize::new(0)).collect());
+        let mut batch_txs: Vec<mpsc::Sender<ReadyBatch<Pending>>> =
+            Vec::with_capacity(n_executors);
         let mut executors = Vec::with_capacity(n_executors * 2);
         for e in 0..n_executors {
             let engine = Engine::new(&dir)?;
             // The pack stage never touches PJRT; it gets its own manifest
             // copy for bucket fitting.
             let pack_manifest = engine.manifest().clone();
+            let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
+            batch_txs.push(batch_tx);
             let (staged_tx, staged_rx) = mpsc::sync_channel::<StagedBatch>(PIPELINE_DEPTH);
             let (recycle_tx, recycle_rx) = mpsc::channel::<PackedBatch>();
             let seed = config.seed ^ (e as u64).wrapping_mul(0xA5A5_5A5A_1234_5678);
 
-            // Pack stage: ready batches -> packed buffers.
+            // Pack stage: this shard's ready batches -> packed buffers.
             {
-                let batch_rx = batch_rx.clone();
                 let variant = config.variant;
+                let outstanding = outstanding.clone();
                 executors.push(std::thread::spawn(move || {
                     let mut rng = Rng::new(seed);
-                    loop {
-                        let batch = {
-                            let guard = batch_rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        let Ok(batch) = batch else { break };
-                        stage_batch(
+                    while let Ok(batch) = batch_rx.recv() {
+                        let staged = stage_batch(
                             &pack_manifest,
                             variant,
                             batch,
@@ -218,6 +231,13 @@ impl Service {
                             &staged_tx,
                             &recycle_rx,
                         );
+                        if !staged {
+                            // The batch died before reaching the execute
+                            // stage (unroutable size, pack failure, or
+                            // shutdown): settle its staged-queue slot here
+                            // so it cannot wedge this shard's queue depth.
+                            outstanding[e].fetch_sub(1, Ordering::Relaxed);
+                        }
                     }
                     // Dropping staged_tx drains the execute stage.
                 }));
@@ -230,6 +250,7 @@ impl Service {
                 let variant = config.variant;
                 let warm = config.warm;
                 let ready_tx = ready_tx.clone();
+                let outstanding = outstanding.clone();
                 executors.push(std::thread::spawn(move || {
                     if warm {
                         let _ = ready_tx.send(warm_classes(&engine, &router, variant));
@@ -244,12 +265,14 @@ impl Service {
                     while let Ok(staged) = staged_rx.recv() {
                         run_staged(
                             &engine,
+                            e,
                             staged,
                             &metrics,
                             &mut solutions,
                             &recycle_tx,
                             &mut last_done,
                         );
+                        outstanding[e].fetch_sub(1, Ordering::Relaxed);
                     }
                 }));
             }
@@ -268,6 +291,7 @@ impl Service {
         let dispatcher = {
             let router = router.clone();
             let config = config.clone();
+            let outstanding = outstanding.clone();
             std::thread::spawn(move || {
                 let capacities: Vec<usize> = router
                     .classes()
@@ -279,6 +303,20 @@ impl Service {
                     .collect();
                 let mut batcher: Batcher<Pending> =
                     Batcher::new(router.classes().to_vec(), capacities, config.max_wait);
+                // Shortest-staged-queue dispatch: a closed batch goes to
+                // the shard with the fewest batches in flight (ties to the
+                // lowest shard id).
+                let dispatch = |ready: ReadyBatch<Pending>| {
+                    let target = (0..batch_txs.len())
+                        .min_by_key(|&s| outstanding[s].load(Ordering::Relaxed))
+                        .unwrap_or(0);
+                    outstanding[target].fetch_add(1, Ordering::Relaxed);
+                    if batch_txs[target].send(ready).is_err() {
+                        // Shard already gone (shutdown); the requests were
+                        // dropped with the channel and reply with errors.
+                        outstanding[target].fetch_sub(1, Ordering::Relaxed);
+                    }
+                };
                 loop {
                     let now = Instant::now();
                     let timeout = batcher
@@ -288,7 +326,7 @@ impl Service {
                         Ok(Msg::Request(class_m, pending)) => {
                             let now = Instant::now();
                             if let Some(ready) = batcher.push(class_m, pending, now) {
-                                let _ = batch_tx.send(ready);
+                                dispatch(ready);
                             }
                         }
                         Ok(Msg::Shutdown) => break,
@@ -297,14 +335,14 @@ impl Service {
                     }
                     let now = Instant::now();
                     for ready in batcher.poll_expired(now) {
-                        let _ = batch_tx.send(ready);
+                        dispatch(ready);
                     }
                 }
                 // Drain on shutdown.
                 for ready in batcher.flush(Instant::now()) {
-                    let _ = batch_tx.send(ready);
+                    dispatch(ready);
                 }
-                drop(batch_tx); // closes the executor pack stages
+                drop(batch_txs); // closes the executor pack stages
             })
         };
 
@@ -312,11 +350,18 @@ impl Service {
     }
 
     /// Submit one problem; blocks if the queue is full (backpressure).
+    ///
+    /// Unroutable sizes are rejected *here*, before anything is enqueued:
+    /// they count toward `rejected` (never `submitted`) and can neither
+    /// occupy a shard's staged queue nor skew batch metrics.
     pub fn submit(&self, problem: Problem) -> Result<Ticket, SubmitError> {
-        let class_m = self.router.route(problem.m()).ok_or(SubmitError::TooLarge {
-            m: problem.m(),
-            max_m: *self.router.classes().last().unwrap(),
-        })?;
+        let Some(class_m) = self.router.route(problem.m()) else {
+            self.metrics.on_reject();
+            return Err(SubmitError::TooLarge {
+                m: problem.m(),
+                max_m: *self.router.classes().last().unwrap(),
+            });
+        };
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Request(class_m, Pending { problem, reply }))
@@ -387,6 +432,9 @@ fn warm_classes(engine: &Engine, router: &Router, variant: Variant) -> anyhow::R
 /// buffer and hand it to the execute stage. The bounded `staged_tx` is the
 /// pipeline's depth control: at most `PIPELINE_DEPTH` packed batches wait
 /// while the engine executes.
+///
+/// Returns whether the batch reached the execute stage — `false` means the
+/// caller must settle the shard's staged-queue accounting itself.
 fn stage_batch(
     manifest: &Manifest,
     variant: Variant,
@@ -394,7 +442,7 @@ fn stage_batch(
     rng: &mut Rng,
     staged_tx: &mpsc::SyncSender<StagedBatch>,
     recycle_rx: &mpsc::Receiver<PackedBatch>,
-) {
+) -> bool {
     let m_max = batch
         .items
         .iter()
@@ -410,7 +458,7 @@ fn stage_batch(
         for pending in batch.items {
             let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
         }
-        return;
+        return false;
     };
 
     let mut pb = recycle_rx.try_recv().unwrap_or_else(|_| PackedBatch::empty());
@@ -422,7 +470,7 @@ fn stage_batch(
         for pending in batch.items {
             let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
         }
-        return;
+        return false;
     }
 
     let staged = StagedBatch {
@@ -442,14 +490,18 @@ fn stage_batch(
                 .reply
                 .send(Err(anyhow::anyhow!("service executor shut down")));
         }
+        return false;
     }
+    true
 }
 
 /// Execute-stage half of an executor pair: run a staged batch on the
-/// engine, fan results out, recycle the packed buffer. `last_done` is the
-/// end of this executor's previous execution (None before the first).
+/// engine, fan results out, recycle the packed buffer. `shard` is this
+/// executor's id (for the per-shard metrics split); `last_done` is the end
+/// of this executor's previous execution (None before the first).
 fn run_staged(
     engine: &Engine,
+    shard: usize,
     staged: StagedBatch,
     metrics: &Metrics,
     solutions: &mut Vec<Solution>,
@@ -477,7 +529,7 @@ fn run_staged(
                 .iter()
                 .filter(|s| s.status == Status::Infeasible)
                 .count();
-            metrics.on_batch(items.len(), bucket.batch, infeasible, oldest_wait, &timing);
+            metrics.on_batch(shard, items.len(), bucket.batch, infeasible, oldest_wait, &timing);
             for (pending, sol) in items.into_iter().zip(solutions.iter()) {
                 let _ = pending.reply.send(Ok(*sol));
             }

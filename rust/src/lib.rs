@@ -51,14 +51,25 @@
 //! );
 //! ```
 //!
+//! For multi-device execution, [`runtime::ShardedEngine`] owns one engine
+//! per device behind a single stage loop: chunks are packed in order
+//! (keeping results bit-identical to serial execution for any shard
+//! count), dispatched to the shard with the shortest staged queue, and
+//! reassembled in input order; `solve_all` picks the chunk size from the
+//! compiled bucket inventory and shard count automatically.
+//!
 //! The serving layer ([`coordinator::Service`]) uses the same design: each
-//! executor is a pack-stage/execute-stage thread pair, so packing batch
-//! k+1 overlaps executing batch k under live traffic.
+//! executor shard is a pack-stage/execute-stage thread pair fed by
+//! shortest-staged-queue dispatch, so packing batch k+1 overlaps executing
+//! batch k under live traffic and the load split is visible per shard.
 
 // Style lints that conflict with this codebase's idioms (index-heavy
 // numeric kernels, tuple-typed pipeline channels, many-argument packing
 // internals, f64 literal tolerances). Correctness lints stay on; CI runs
-// `cargo clippy -- -D warnings` over the lib and bin targets.
+// `cargo clippy --all-targets -- -D warnings`, with the same allow list
+// applied to every target (benches/tests/examples included) via
+// `[lints.clippy]` in Cargo.toml — this inner attribute is the pre-1.74
+// fallback for the lib target.
 #![allow(
     clippy::needless_range_loop,
     clippy::too_many_arguments,

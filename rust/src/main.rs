@@ -68,11 +68,11 @@ fn print_help() {
            info                         platform + compiled artifact inventory\n\
            solve    --batch 1024 --m 64 [--variant rgb|naive|simplex] [--seed S]\n\
                                         generate and solve one batch, print timing\n\
-           serve    --requests 6000 [--rate 2000] [--max-wait-ms 2]\n\
+           serve    --requests 6000 [--rate 2000] [--max-wait-ms 2] [--shards 1]\n\
                                         run the coordinator under a Poisson trace\n\
            crowd    --agents 512 --steps 100 [--backend engine|cpu]\n\
                                         crowd simulation (paper Sec. 5 application)\n\
-           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance [--fast]\n\
+           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards [--fast]\n\
                                         regenerate the paper's figures as tables\n\
          \n\
          flags:\n\
@@ -182,9 +182,11 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let rate = flag(flags, "rate", 2_000.0f64);
     let max_wait_ms = flag(flags, "max-wait-ms", 2u64);
     let seed = flag(flags, "seed", 7u64);
+    let shards = flag(flags, "shards", 1usize);
 
     let config = Config {
         max_wait: std::time::Duration::from_millis(max_wait_ms),
+        executors: shards.max(1),
         ..Config::default()
     };
     let service = Service::start(artifact_dir(flags), config)?;
@@ -225,6 +227,14 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         snap.exec_p99_ns as f64 / 1e6
     );
     println!("exec memory fraction: {:.1}%", 100.0 * snap.memory_fraction());
+    for (s, load) in snap.per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: {} batches  {} LPs  busy {:.3} ms",
+            load.batches,
+            load.solved,
+            load.busy_ns as f64 / 1e6
+        );
+    }
     service.shutdown();
     Ok(())
 }
@@ -319,6 +329,18 @@ fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
     }
     if all || which == "7b" {
         emit("7b (naive vs rgb, batch 4096)", figures::fig7(&ctx, 4096, figures::SIZES)?);
+    }
+    if all || which == "shards" {
+        // fig_shard_sweep builds its own engines (one per shard).
+        emit(
+            "S (shard-count sweep)",
+            figures::fig_shard_sweep(
+                std::path::Path::new(&artifact_dir(flags)),
+                2048,
+                64,
+                &[1, 2, 4],
+            )?,
+        );
     }
     Ok(())
 }

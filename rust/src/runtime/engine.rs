@@ -306,6 +306,47 @@ impl Engine {
         Ok(timing)
     }
 
+    /// `execute_packed_into` minus the decode: run the device stages and
+    /// return the raw output vectors, leaving `unpack` to the caller. This
+    /// is the execution primitive the pipelined paths build on — the stage
+    /// thread (or a sharded stage loop, see [`crate::runtime::shard`])
+    /// decodes while the device runs the next batch. The returned timing
+    /// counts d2h output staging as transfer; `critical_path_ns` covers
+    /// transfer + execute only (decode happens elsewhere).
+    pub fn execute_packed_raw(
+        &self,
+        bucket: &Bucket,
+        pb: &PackedBatch,
+    ) -> anyhow::Result<(Vec<f32>, Vec<i32>, ExecTiming)> {
+        anyhow::ensure!(
+            pb.batch == bucket.batch && pb.m == bucket.m,
+            "packed shape ({}, {}) does not match bucket ({}, {})",
+            pb.batch,
+            pb.m,
+            bucket.batch,
+            bucket.m
+        );
+        let mut timing = ExecTiming::default();
+
+        let t = Timer::start();
+        let pair = self.transfer(pb)?;
+        timing.transfer_ns = t.elapsed_ns();
+
+        let t = Timer::start();
+        let out_lit = self.execute_pair(bucket, &pair)?;
+        timing.execute_ns = t.elapsed_ns();
+        self.put_literal_pair(pb.batch, pb.m, pair);
+
+        // Device->host output staging (PJRT handles cannot leave this
+        // thread); decoding the raw vectors is the caller's job.
+        let t = Timer::start();
+        let (sol, status) = Self::fetch_raw(out_lit)?;
+        timing.transfer_ns += t.elapsed_ns();
+
+        timing.critical_path_ns = timing.transfer_ns + timing.execute_ns;
+        Ok((sol, status, timing))
+    }
+
     /// Pick the smallest bucket fitting `n` problems of max size `m_max`.
     fn fit_bucket(&self, variant: Variant, n: usize, m_max: usize) -> anyhow::Result<Bucket> {
         self.manifest
@@ -412,21 +453,9 @@ impl Engine {
         let mut timing = ExecTiming::default();
         let (result, worker, stats) =
             run_pipelined(chunks, worker, STREAM_DEPTH, |_, (pb, bucket): (PackedBatch, Bucket)| {
-                let t = Timer::start();
-                let pair = self.transfer(&pb)?;
-                timing.transfer_ns += t.elapsed_ns();
-
-                let t = Timer::start();
-                let out_lit = self.execute_pair(&bucket, &pair)?;
-                timing.execute_ns += t.elapsed_ns();
-                self.put_literal_pair(pb.batch, pb.m, pair);
-
-                // Device->host output staging happens here (PJRT handles
-                // cannot cross to the stage thread); decode of the raw
-                // vectors is the stage thread's job.
-                let t = Timer::start();
-                let (sol, status) = Self::fetch_raw(out_lit)?;
-                timing.transfer_ns += t.elapsed_ns();
+                let (sol, status, t) = self.execute_packed_raw(&bucket, &pb)?;
+                timing.transfer_ns += t.transfer_ns;
+                timing.execute_ns += t.execute_ns;
                 Ok((pb, sol, status))
             });
 
@@ -439,6 +468,34 @@ impl Engine {
         timing.unpack_ns = worker.unpack_ns;
         timing.critical_path_ns = stats.critical_path_ns;
         Ok((solutions, timing))
+    }
+
+    /// [`Engine::solve_stream`] with the chunking chosen automatically by
+    /// the batch-size-aware policy (`runtime::shard::plan_chunk_size`):
+    /// the chunk size comes from the compiled bucket inventory of the
+    /// problems' size class instead of the caller, and the per-chunk
+    /// solutions are returned flattened in input order.
+    pub fn solve_stream_auto(
+        &self,
+        variant: Variant,
+        problems: &[Problem],
+        rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Solution>, ExecTiming)> {
+        anyhow::ensure!(!problems.is_empty(), "empty problem slice");
+        let m_max = problems.iter().map(|p| p.m()).max().unwrap();
+        let chunk = crate::runtime::shard::plan_chunk_size(
+            &self.manifest,
+            variant,
+            problems.len(),
+            m_max,
+            1,
+        )?;
+        let (per_chunk, timing) = self.solve_stream(variant, problems.chunks(chunk), rng)?;
+        let mut flat = Vec::with_capacity(problems.len());
+        for chunk_sols in per_chunk {
+            flat.extend(chunk_sols);
+        }
+        Ok((flat, timing))
     }
 }
 

@@ -6,15 +6,23 @@
 //! * [`stream`]   -- double-buffered stage/execute pipeline driver.
 //! * [`engine`]   -- compile-once executable cache + timed execution,
 //!   serial (`solve`) and pipelined (`solve_stream`).
+//! * [`shard`]    -- multi-device sharded execution: one stage loop
+//!   feeding N engines with shortest-staged-queue dispatch and the
+//!   batch-size-aware chunk policy.
 
 pub mod engine;
 pub mod manifest;
 pub mod pack;
+pub mod shard;
 pub mod stream;
 
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
-pub use pack::{pack, pack_into, unpack, unpack_into, PackedBatch};
+pub use pack::{pack, pack_into, pack_into_indexed, unpack, unpack_into, PackedBatch};
+pub use shard::{
+    pick_chunk_size, plan_chunk_size, CpuShardExecutor, ShardExecutor, ShardReport,
+    ShardStats, ShardedEngine,
+};
 pub use stream::{run_pipelined, PipelineStats, StageWorker};
 
 /// Locate the artifact directory: `$BATCH_LP2D_ARTIFACTS`, then

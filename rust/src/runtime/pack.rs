@@ -80,6 +80,30 @@ pub fn pack_into<P: Borrow<Problem> + Sync>(
     rng: Option<&mut Rng>,
     out: &mut PackedBatch,
 ) -> anyhow::Result<()> {
+    // One base draw per call; every problem's shuffle stream derives from
+    // it by index. This keeps packed bytes identical across thread counts
+    // and between the serial and parallel paths below.
+    let base: Option<u64> = rng.map(|r| r.next_u64());
+    pack_into_indexed(problems, batch, m, base, 0, out)
+}
+
+/// `pack_into` with the shuffle derivation made explicit: `base` is the one
+/// RNG draw the per-problem streams derive from, and `start_idx` is the
+/// global workload index of `problems[0]`.
+///
+/// Two calls covering disjoint ranges of a workload with the same `base`
+/// produce exactly the per-problem rows one call over the whole workload
+/// would — whatever the chunk boundaries or bucket shapes. This is what
+/// makes chunked/sharded execution ([`crate::runtime::shard`]) bit-identical
+/// to a single serial pack of the same seed.
+pub fn pack_into_indexed<P: Borrow<Problem> + Sync>(
+    problems: &[P],
+    batch: usize,
+    m: usize,
+    base: Option<u64>,
+    start_idx: usize,
+    out: &mut PackedBatch,
+) -> anyhow::Result<()> {
     anyhow::ensure!(
         problems.len() <= batch,
         "{} problems exceed bucket batch {batch}",
@@ -98,11 +122,6 @@ pub fn pack_into<P: Borrow<Problem> + Sync>(
     out.obj.clear();
     out.obj.resize(batch * 2, 0.0);
 
-    // One base draw per call; every problem's shuffle stream derives from
-    // it by index. This keeps packed bytes identical across thread counts
-    // and between the serial and parallel paths below.
-    let base: Option<u64> = rng.map(|r| r.next_u64());
-
     let threads = if problems.len() >= PAR_PACK_THRESHOLD {
         crate::solvers::batch_cpu::default_threads().min(problems.len())
     } else {
@@ -111,7 +130,7 @@ pub fn pack_into<P: Borrow<Problem> + Sync>(
     let used_lines = &mut out.lines[..problems.len() * m * 4];
     let used_obj = &mut out.obj[..problems.len() * 2];
     if threads <= 1 {
-        pack_range(problems, m, base, 0, used_lines, used_obj, &mut out.perm_scratch);
+        pack_range(problems, m, base, start_idx, used_lines, used_obj, &mut out.perm_scratch);
     } else {
         let chunk = problems.len().div_ceil(threads);
         std::thread::scope(|scope| {
@@ -125,7 +144,7 @@ pub fn pack_into<P: Borrow<Problem> + Sync>(
                     // Worker-local scratch: one allocation per worker per
                     // call, amortized over >= PAR_PACK_THRESHOLD problems.
                     let mut perm = Vec::new();
-                    pack_range(probs, m, base, t * chunk, lines, obj, &mut perm);
+                    pack_range(probs, m, base, start_idx + t * chunk, lines, obj, &mut perm);
                 });
             }
         });
@@ -294,6 +313,31 @@ mod tests {
         pack_range(&problems, m, Some(base), 0, &mut lines, &mut obj, &mut scratch);
         assert_eq!(big.lines, lines);
         assert_eq!(big.obj, obj);
+    }
+
+    #[test]
+    fn indexed_chunked_pack_matches_single_pack() {
+        // Packing a workload in chunks with an explicit (base, start_idx)
+        // must reproduce the per-problem rows of one big pack with the same
+        // seed — the invariant sharded execution's bit-identical guarantee
+        // rests on.
+        let mut rng = Rng::new(17);
+        let problems: Vec<Problem> = (0..10).map(|_| gen::feasible(&mut rng, 9)).collect();
+        let mut r = Rng::new(55);
+        let whole = pack(&problems, 16, 12, Some(&mut r)).unwrap();
+        let base = Rng::new(55).next_u64();
+        for (c, chunk) in problems.chunks(4).enumerate() {
+            let mut pb = PackedBatch::empty();
+            pack_into_indexed(chunk, 4, 12, Some(base), c * 4, &mut pb).unwrap();
+            for i in 0..chunk.len() {
+                let g = (c * 4 + i) * 12 * 4;
+                assert_eq!(
+                    &whole.lines[g..g + 12 * 4],
+                    &pb.lines[i * 12 * 4..(i + 1) * 12 * 4],
+                    "chunk {c} problem {i}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,866 @@
+//! Multi-device sharded execution: one stage loop feeding N engines.
+//!
+//! [`Engine::solve_stream`] overlaps host staging with one device;
+//! throughput is still capped by a single device's execution rate. This
+//! module owns **N executors** ("shards") and keeps them all fed from a
+//! single packing loop, so packing chunk k for shard i overlaps execution
+//! of earlier chunks on shards j != i.
+//!
+//! # Ownership / thread model
+//!
+//! ```text
+//!   caller thread (stage loop)           shard threads (scoped)
+//!   ─────────────────────────            ─────────────────────
+//!   fit bucket, pack chunk k ──sync_channel(depth 2, per shard)──▶ shard s:
+//!   pick s = argmin staged-queue                                   execute_raw
+//!   decode finished chunks    ◀──────── completion channel ─────── (device)
+//!   reassemble in input order
+//! ```
+//!
+//! * The **stage loop runs on the caller thread** and is the only consumer
+//!   of the RNG: chunks are packed strictly in submission order, so shuffle
+//!   streams are consumed exactly as a serial loop would consume them —
+//!   results are bit-identical to single-engine serial execution whatever
+//!   the shard count or dispatch interleaving.
+//! * Each **shard executor lives on its own scoped thread** for the
+//!   duration of a call. `Engine` is `Send` but not `Sync` (its PJRT
+//!   handles must stay on one thread), so each shard owns a whole engine —
+//!   its own client, executable cache, and literal pools — and only plain
+//!   host buffers ([`PackedBatch`]es, raw output vectors) cross the
+//!   channels.
+//! * **Dispatch is shortest-staged-queue**: a packed chunk goes to the
+//!   shard with the fewest chunks dispatched-but-not-completed (ties break
+//!   to the lowest shard index). The per-shard channel is bounded at
+//!   [`SHARD_QUEUE_DEPTH`], which doubles as backpressure when every shard
+//!   is saturated.
+//! * Packed-buffer rotation: buffers cycle caller -> shard -> caller
+//!   through the completion channel, so the steady state allocates nothing
+//!   beyond the raw output vectors.
+//!
+//! # How real multi-GPU PJRT slots in
+//!
+//! Under the offline `vendor/xla` stub, `ShardedEngine::new` fails exactly
+//! like `Engine::new` does (no PJRT backend), and [`CpuShardExecutor`]
+//! stands in as a deterministic host-side device so the whole dispatch /
+//! reassembly layer stays testable. When the real bindings land, each
+//! shard's `Engine` should be constructed against a distinct
+//! `PjRtClient` device ordinal (one client per GPU); nothing in this
+//! module changes — the executor trait already confines every device
+//! handle to its shard thread, which is the same isolation a per-GPU
+//! context needs.
+
+use std::path::Path;
+use std::sync::mpsc;
+
+use crate::lp::types::{HalfPlane, Problem, Solution, Status};
+use crate::runtime::engine::{Engine, ExecTiming};
+use crate::runtime::manifest::{Bucket, Manifest, Variant};
+use crate::runtime::pack::{pack_into, pack_into_indexed, unpack, PackedBatch};
+use crate::solvers::seidel;
+use crate::util::{Rng, Timer};
+
+/// Staged chunks a shard may hold before the stage loop's send blocks
+/// (2 = double buffering per shard, mirroring the engine's stream depth).
+pub const SHARD_QUEUE_DEPTH: usize = 2;
+
+/// Raw device output of one executed batch: flat solution/status vectors in
+/// the kernels' wire format, plus the device-side timing split.
+pub type RawExec = (Vec<f32>, Vec<i32>, ExecTiming);
+
+/// One shard's device half: executes packed batches, returns raw outputs.
+///
+/// Implementations run on a dedicated shard thread and must keep any
+/// non-`Sync` device state (PJRT handles) confined to `self`. Decoding raw
+/// outputs back into [`Solution`]s is the stage loop's job.
+pub trait ShardExecutor: Send {
+    /// Short backend label for diagnostics.
+    fn backend(&self) -> &'static str {
+        "shard"
+    }
+
+    /// Execute one packed batch against its bucket.
+    ///
+    /// Must be deterministic in `(bucket, pb)`: the sharded driver's
+    /// bit-identical guarantee assumes a chunk's result does not depend on
+    /// which shard ran it or when.
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec>;
+}
+
+impl ShardExecutor for Engine {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        Engine::execute_packed_raw(self, bucket, pb)
+    }
+}
+
+/// Deterministic host-side stand-in device: reconstructs each packed slot
+/// and solves it with Seidel **in packed order** (the pack-time shuffle
+/// already randomized the constraints), encoding results in the kernels'
+/// output wire format. Because the result depends only on the packed
+/// bytes, it is shard- and chunking-invariant — which is what lets the
+/// sharded driver be exercised end to end under the offline `xla` stub and
+/// benchmarked on hosts without a PJRT backend.
+pub struct CpuShardExecutor;
+
+impl ShardExecutor for CpuShardExecutor {
+    fn backend(&self) -> &'static str {
+        "cpu-seidel"
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        anyhow::ensure!(
+            pb.batch == bucket.batch && pb.m == bucket.m,
+            "packed shape ({}, {}) does not match bucket ({}, {})",
+            pb.batch,
+            pb.m,
+            bucket.batch,
+            bucket.m
+        );
+        let t = Timer::start();
+        let mut sol = vec![0.0f32; pb.used * 2];
+        let mut status = vec![0i32; pb.used];
+        let mut cons: Vec<HalfPlane> = Vec::with_capacity(pb.m);
+        for i in 0..pb.used {
+            let row = i * pb.m * 4;
+            cons.clear();
+            for k in 0..pb.m {
+                let off = row + k * 4;
+                // Valid rows are contiguous from slot 0 (pack layout).
+                if pb.lines[off + 3] < 0.5 {
+                    break;
+                }
+                cons.push(HalfPlane::new(
+                    pb.lines[off] as f64,
+                    pb.lines[off + 1] as f64,
+                    pb.lines[off + 2] as f64,
+                ));
+            }
+            let p = Problem::new(
+                std::mem::take(&mut cons),
+                [pb.obj[i * 2] as f64, pb.obj[i * 2 + 1] as f64],
+            );
+            let s = seidel::solve_ordered(&p);
+            cons = p.constraints;
+            match s.status {
+                Status::Optimal => {
+                    sol[i * 2] = s.point[0] as f32;
+                    sol[i * 2 + 1] = s.point[1] as f32;
+                    status[i] = 0;
+                }
+                Status::Infeasible => status[i] = 1,
+            }
+        }
+        let execute_ns = t.elapsed_ns();
+        let timing = ExecTiming {
+            execute_ns,
+            critical_path_ns: execute_ns,
+            ..ExecTiming::default()
+        };
+        Ok((sol, status, timing))
+    }
+}
+
+/// Per-shard accounting for one sharded run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// Chunks dispatched to this shard.
+    pub chunks: usize,
+    /// Problems this shard solved.
+    pub problems: usize,
+    /// Device-side stage sums for this shard; `critical_path_ns` is the
+    /// shard thread's busy wall time (its share of the run).
+    pub timing: ExecTiming,
+}
+
+/// Aggregate + per-shard timing of one sharded run.
+#[derive(Clone, Debug, Default)]
+pub struct ShardReport {
+    /// Workload-level split: pack/unpack are the stage loop's busy time,
+    /// transfer/execute sum over shards, `critical_path_ns` is the wall
+    /// time of the whole call (so `overlap_ratio()` reads the combined
+    /// pipelining + sharding win).
+    pub timing: ExecTiming,
+    pub per_shard: Vec<ShardStats>,
+}
+
+impl ShardReport {
+    /// Problems solved across all shards.
+    pub fn problems(&self) -> usize {
+        self.per_shard.iter().map(|s| s.problems).sum()
+    }
+
+    /// Busy-time balance: max over mean of per-shard busy wall time.
+    /// 1.0 is perfectly even; large values mean the dispatch policy (or
+    /// the workload) starved some shards.
+    pub fn balance(&self) -> f64 {
+        let max = self
+            .per_shard
+            .iter()
+            .map(|s| s.timing.critical_path_ns)
+            .max()
+            .unwrap_or(0) as f64;
+        let sum: u64 = self.per_shard.iter().map(|s| s.timing.critical_path_ns).sum();
+        let mean = sum as f64 / self.per_shard.len().max(1) as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Batch-size-aware chunk policy over a class's compiled batch inventory
+/// (`batch_sizes` ascending, non-empty): pick the **largest** compiled
+/// batch that still yields at least `2 * shards` chunks — enough to fill
+/// every shard's depth-2 staged queue — falling back to the smallest
+/// compiled batch when the workload is too small to feed everyone.
+pub fn pick_chunk_size(batch_sizes: &[usize], n: usize, shards: usize) -> Option<usize> {
+    let smallest = *batch_sizes.first()?;
+    let target_chunks = 2 * shards.max(1);
+    for &b in batch_sizes.iter().rev() {
+        if n.div_ceil(b) >= target_chunks {
+            return Some(b);
+        }
+    }
+    Some(smallest)
+}
+
+/// [`pick_chunk_size`] against a manifest: route `m_max` to its size class
+/// (smallest compiled m that fits), then pick from that class's batch
+/// inventory.
+pub fn plan_chunk_size(
+    manifest: &Manifest,
+    variant: Variant,
+    n: usize,
+    m_max: usize,
+    shards: usize,
+) -> anyhow::Result<usize> {
+    let buckets = manifest.of_variant(variant);
+    let class = buckets
+        .iter()
+        .map(|b| b.m)
+        .filter(|&m| m >= m_max)
+        .min()
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no {} bucket fits m={m_max} (max m {:?})",
+                variant.as_str(),
+                manifest.max_m(variant)
+            )
+        })?;
+    let mut sizes: Vec<usize> =
+        buckets.iter().filter(|b| b.m == class).map(|b| b.batch).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    Ok(pick_chunk_size(&sizes, n, shards).expect("size class has at least one bucket"))
+}
+
+/// A packed chunk en route to a shard.
+struct StagedChunk {
+    idx: usize,
+    bucket: Bucket,
+    pb: PackedBatch,
+}
+
+/// A shard's finished chunk on its way back to the stage loop.
+struct Completion {
+    idx: usize,
+    shard: usize,
+    pb: PackedBatch,
+    /// Shard-thread wall time spent on this chunk.
+    busy_ns: u64,
+    result: anyhow::Result<RawExec>,
+}
+
+/// N executors fed by one stage loop — see the module docs for the thread
+/// model and the bit-identical guarantee.
+pub struct ShardedEngine<X: ShardExecutor = Engine> {
+    manifest: Manifest,
+    executors: Vec<X>,
+    /// Rotation pool for packed chunks (recycled through completions).
+    pool: Vec<PackedBatch>,
+}
+
+impl ShardedEngine<Engine> {
+    /// One [`Engine`] per shard over a shared artifact directory. Under the
+    /// offline stub this fails exactly like `Engine::new` (tests skip);
+    /// with real bindings each engine owns its own PJRT client, which is
+    /// where per-GPU device ordinals slot in.
+    pub fn new(artifact_dir: impl AsRef<Path>, shards: usize) -> anyhow::Result<Self> {
+        let dir = artifact_dir.as_ref();
+        let mut executors = Vec::with_capacity(shards.max(1));
+        for _ in 0..shards.max(1) {
+            executors.push(Engine::new(dir)?);
+        }
+        let manifest = executors[0].manifest().clone();
+        Self::from_executors(manifest, executors)
+    }
+
+    /// Warm every shard's executable cache for a variant; returns the total
+    /// number of (shard, bucket) compilations.
+    pub fn warmup(&self, variant: Variant) -> anyhow::Result<usize> {
+        let mut total = 0;
+        for engine in &self.executors {
+            total += engine.warmup(variant)?;
+        }
+        Ok(total)
+    }
+}
+
+impl<X: ShardExecutor> ShardedEngine<X> {
+    /// Build over explicit executors (the manifest supplies bucket
+    /// fitting; executors never open bucket files unless they are real
+    /// engines).
+    pub fn from_executors(manifest: Manifest, executors: Vec<X>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!executors.is_empty(), "at least one shard executor required");
+        Ok(ShardedEngine { manifest, executors, pool: Vec::new() })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.executors.len()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The chunk size [`ShardedEngine::solve_all`] would pick for this
+    /// workload (exposed so benches/tests can report it).
+    pub fn plan_chunk(&self, variant: Variant, n: usize, m_max: usize) -> anyhow::Result<usize> {
+        plan_chunk_size(&self.manifest, variant, n, m_max, self.executors.len())
+    }
+
+    /// Sharded counterpart of [`Engine::solve_stream`]: caller-supplied
+    /// chunks, packed in order on the calling thread, executed across all
+    /// shards, results reassembled in input order.
+    ///
+    /// Bit-identical to a serial loop of `Engine::solve` per chunk with the
+    /// same `rng`, for any shard count: packing order (and therefore RNG
+    /// consumption) is the serial order, and execution is deterministic in
+    /// the packed bytes.
+    pub fn solve_stream<'p>(
+        &mut self,
+        variant: Variant,
+        chunks: impl IntoIterator<Item = &'p [Problem]>,
+        mut rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Vec<Solution>>, ShardReport)> {
+        self.solve_stream_inner(variant, chunks, move |chunk, bucket, _offset, pb| {
+            pack_into(chunk, bucket.batch, bucket.m, rng.as_deref_mut(), pb)
+        })
+    }
+
+    /// Solve a whole slice through the shards in fixed-size chunks,
+    /// returning the flattened solutions in input order.
+    ///
+    /// Shuffle streams derive from **one** base draw plus each problem's
+    /// global index ([`pack_into_indexed`]), so the packed rows — and the
+    /// results — are identical to a single serial `Engine::solve` over the
+    /// whole slice with the same `rng`, whatever `chunk` or the shard
+    /// count.
+    pub fn solve_chunked(
+        &mut self,
+        variant: Variant,
+        problems: &[Problem],
+        chunk: usize,
+        rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Solution>, ShardReport)> {
+        anyhow::ensure!(chunk > 0, "chunk size must be positive");
+        anyhow::ensure!(!problems.is_empty(), "empty problem slice");
+        let base = rng.map(|r| r.next_u64());
+        let (per_chunk, report) =
+            self.solve_stream_inner(variant, problems.chunks(chunk), move |c, bucket, offset, pb| {
+                pack_into_indexed(c, bucket.batch, bucket.m, base, offset, pb)
+            })?;
+        let mut flat = Vec::with_capacity(problems.len());
+        for sols in per_chunk {
+            flat.extend(sols);
+        }
+        Ok((flat, report))
+    }
+
+    /// [`ShardedEngine::solve_chunked`] with the chunk size picked by the
+    /// batch-size-aware policy (bucket inventory x shard count).
+    pub fn solve_all(
+        &mut self,
+        variant: Variant,
+        problems: &[Problem],
+        rng: Option<&mut Rng>,
+    ) -> anyhow::Result<(Vec<Solution>, ShardReport)> {
+        let m_max = problems
+            .iter()
+            .map(|p| p.m())
+            .max()
+            .ok_or_else(|| anyhow::anyhow!("empty problem slice"))?;
+        let chunk = self.plan_chunk(variant, problems.len(), m_max)?;
+        self.solve_chunked(variant, problems, chunk, rng)
+    }
+
+    /// The sharded driver: stage loop on the caller thread, one scoped
+    /// thread per shard. `pack_chunk(chunk, bucket, global_offset, out)`
+    /// fills a pooled buffer; it runs strictly in chunk order.
+    fn solve_stream_inner<'p>(
+        &mut self,
+        variant: Variant,
+        chunks: impl IntoIterator<Item = &'p [Problem]>,
+        mut pack_chunk: impl FnMut(
+            &'p [Problem],
+            &Bucket,
+            usize,
+            &mut PackedBatch,
+        ) -> anyhow::Result<()>,
+    ) -> anyhow::Result<(Vec<Vec<Solution>>, ShardReport)> {
+        let ShardedEngine { manifest, executors, pool } = self;
+        let shards = executors.len();
+        let wall = Timer::start();
+        while pool.len() < shards * SHARD_QUEUE_DEPTH + 1 {
+            pool.push(PackedBatch::empty());
+        }
+
+        let mut report = ShardReport {
+            timing: ExecTiming::default(),
+            per_shard: vec![ShardStats::default(); shards],
+        };
+        let mut outputs: Vec<Option<Vec<Solution>>> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+
+        std::thread::scope(|scope| {
+            let (done_tx, done_rx) = mpsc::channel::<Completion>();
+            let mut staged_txs: Vec<mpsc::SyncSender<StagedChunk>> = Vec::with_capacity(shards);
+            for (shard, ex) in executors.iter_mut().enumerate() {
+                let (tx, rx) = mpsc::sync_channel::<StagedChunk>(SHARD_QUEUE_DEPTH);
+                staged_txs.push(tx);
+                let done_tx = done_tx.clone();
+                scope.spawn(move || {
+                    while let Ok(StagedChunk { idx, bucket, pb }) = rx.recv() {
+                        let t = Timer::start();
+                        let result = ex.execute_raw(&bucket, &pb);
+                        let busy_ns = t.elapsed_ns();
+                        if done_tx
+                            .send(Completion { idx, shard, pb, busy_ns, result })
+                            .is_err()
+                        {
+                            break; // stage loop aborted
+                        }
+                    }
+                });
+            }
+            drop(done_tx);
+
+            // Chunks dispatched to each shard and not yet completed — the
+            // "staged queue" the dispatch policy minimizes.
+            let mut inflight = vec![0usize; shards];
+            let mut dispatched = 0usize;
+            let mut completed = 0usize;
+            let mut offset = 0usize;
+
+            'staging: for chunk in chunks {
+                if chunk.is_empty() {
+                    first_err = Some(anyhow::anyhow!("empty problem chunk"));
+                    break 'staging;
+                }
+                let m_max = chunk.iter().map(|p| p.m()).max().unwrap();
+                let bucket = match manifest.fit(variant, chunk.len(), m_max) {
+                    Some(b) => b.clone(),
+                    None => {
+                        first_err = Some(anyhow::anyhow!(
+                            "no {} bucket fits chunk (n={}, m={m_max})",
+                            variant.as_str(),
+                            chunk.len()
+                        ));
+                        break 'staging;
+                    }
+                };
+
+                // Reclaim a packing buffer. When the pool is dry every
+                // buffer is in flight, so absorbing one completion must
+                // free one.
+                let mut pb = loop {
+                    if let Some(pb) = pool.pop() {
+                        break pb;
+                    }
+                    match done_rx.recv() {
+                        Ok(c) => absorb(
+                            c,
+                            &mut outputs,
+                            &mut report,
+                            &mut inflight,
+                            pool,
+                            &mut completed,
+                            &mut first_err,
+                        ),
+                        Err(_) => {
+                            first_err.get_or_insert_with(|| {
+                                anyhow::anyhow!("shard executors exited early")
+                            });
+                            break 'staging;
+                        }
+                    }
+                    if first_err.is_some() {
+                        break 'staging;
+                    }
+                };
+
+                let t = Timer::start();
+                let packed = pack_chunk(chunk, &bucket, offset, &mut pb);
+                report.timing.pack_ns += t.elapsed_ns();
+                if let Err(e) = packed {
+                    pool.push(pb);
+                    first_err = Some(e);
+                    break 'staging;
+                }
+                offset += chunk.len();
+
+                // Fold in any finished chunks so queue-depth estimates are
+                // fresh before choosing a shard.
+                while let Ok(c) = done_rx.try_recv() {
+                    absorb(
+                        c,
+                        &mut outputs,
+                        &mut report,
+                        &mut inflight,
+                        pool,
+                        &mut completed,
+                        &mut first_err,
+                    );
+                }
+                if first_err.is_some() {
+                    pool.push(pb);
+                    break 'staging;
+                }
+
+                // Shortest-staged-queue dispatch; ties go to the lowest
+                // shard index. The bounded send blocks only when every
+                // queue is full (backpressure).
+                let target = (0..shards).min_by_key(|&s| inflight[s]).unwrap();
+                outputs.push(None);
+                if staged_txs[target]
+                    .send(StagedChunk { idx: dispatched, bucket, pb })
+                    .is_err()
+                {
+                    outputs.pop();
+                    first_err = Some(anyhow::anyhow!("shard {target} exited early"));
+                    break 'staging;
+                }
+                inflight[target] += 1;
+                report.per_shard[target].chunks += 1;
+                dispatched += 1;
+            }
+
+            // Closing the staged channels lets the shard threads drain and
+            // exit; collect everything still in flight.
+            drop(staged_txs);
+            while completed < dispatched {
+                match done_rx.recv() {
+                    Ok(c) => absorb(
+                        c,
+                        &mut outputs,
+                        &mut report,
+                        &mut inflight,
+                        pool,
+                        &mut completed,
+                        &mut first_err,
+                    ),
+                    Err(_) => {
+                        first_err.get_or_insert_with(|| {
+                            anyhow::anyhow!(
+                                "pipeline lost {} chunk(s)",
+                                dispatched - completed
+                            )
+                        });
+                        break;
+                    }
+                }
+            }
+        });
+
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let mut out = Vec::with_capacity(outputs.len());
+        for (idx, sols) in outputs.into_iter().enumerate() {
+            out.push(sols.ok_or_else(|| anyhow::anyhow!("missing output for chunk {idx}"))?);
+        }
+        report.timing.critical_path_ns = wall.elapsed_ns();
+        Ok((out, report))
+    }
+}
+
+/// Fold one shard completion into the stage loop's state: free its queue
+/// slot, account timing, decode the raw output into its chunk slot, and
+/// recycle the packed buffer.
+fn absorb(
+    c: Completion,
+    outputs: &mut Vec<Option<Vec<Solution>>>,
+    report: &mut ShardReport,
+    inflight: &mut [usize],
+    pool: &mut Vec<PackedBatch>,
+    completed: &mut usize,
+    first_err: &mut Option<anyhow::Error>,
+) {
+    *completed += 1;
+    inflight[c.shard] -= 1;
+    let used = c.pb.used;
+    match c.result {
+        Ok((sol, status, timing)) => {
+            let stats = &mut report.per_shard[c.shard];
+            stats.problems += used;
+            stats.timing.transfer_ns += timing.transfer_ns;
+            stats.timing.execute_ns += timing.execute_ns;
+            stats.timing.critical_path_ns += c.busy_ns;
+            report.timing.transfer_ns += timing.transfer_ns;
+            report.timing.execute_ns += timing.execute_ns;
+            let t = Timer::start();
+            match unpack(&sol, &status, used) {
+                Ok(sols) => {
+                    if let Some(slot) = outputs.get_mut(c.idx) {
+                        *slot = Some(sols);
+                    }
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+            report.timing.unpack_ns += t.elapsed_ns();
+        }
+        Err(e) => {
+            first_err.get_or_insert(e);
+        }
+    }
+    pool.push(c.pb);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::lp::brute;
+    use crate::lp::validate::{agree, Tolerance};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    /// rgb buckets: m-16 class {8, 32}, m-64 class {8, 32, 128, 512}.
+    fn manifest() -> Manifest {
+        let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                    rgb\t8\t16\t8\t16\ta\n\
+                    rgb\t32\t16\t8\t16\tb\n\
+                    rgb\t8\t64\t8\t64\tc\n\
+                    rgb\t32\t64\t8\t64\td\n\
+                    rgb\t128\t64\t8\t64\te\n\
+                    rgb\t512\t64\t8\t64\tf\n";
+        Manifest::parse(text, PathBuf::from("/tmp")).unwrap()
+    }
+
+    /// Mock device: encodes (slot index, used) into each solution so order
+    /// scrambling would be visible after reassembly.
+    struct MockExecutor {
+        delay: Duration,
+        fail_on_used: Option<usize>,
+    }
+
+    impl ShardExecutor for MockExecutor {
+        fn execute_raw(&mut self, _bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+            if self.fail_on_used == Some(pb.used) {
+                anyhow::bail!("mock failure on used={}", pb.used);
+            }
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            let mut sol = vec![0.0f32; pb.used * 2];
+            let status = vec![0i32; pb.used];
+            for i in 0..pb.used {
+                sol[i * 2] = i as f32;
+                sol[i * 2 + 1] = pb.used as f32;
+            }
+            let timing =
+                ExecTiming { execute_ns: 1, critical_path_ns: 1, ..ExecTiming::default() };
+            Ok((sol, status, timing))
+        }
+    }
+
+    fn mocks(n: usize, delay_ms: u64) -> Vec<MockExecutor> {
+        (0..n)
+            .map(|_| MockExecutor {
+                delay: Duration::from_millis(delay_ms),
+                fail_on_used: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pick_chunk_size_prefers_large_but_feeds_all_shards() {
+        let sizes = [8usize, 32, 128, 512];
+        // Plenty of work for one shard: the largest batch still yields >= 2
+        // chunks of 512.
+        assert_eq!(pick_chunk_size(&sizes, 4096, 1), Some(512));
+        // 4 shards need >= 8 chunks: 4096/512 = 8 still fine.
+        assert_eq!(pick_chunk_size(&sizes, 4096, 4), Some(512));
+        // 1024 problems on 4 shards: 512 gives 2 chunks, 128 gives 8.
+        assert_eq!(pick_chunk_size(&sizes, 1024, 4), Some(128));
+        // Tiny workload: falls back to the smallest compiled batch.
+        assert_eq!(pick_chunk_size(&sizes, 3, 4), Some(8));
+        // More shards never pick a larger chunk.
+        for n in [1usize, 10, 100, 1000, 10_000] {
+            let mut last = usize::MAX;
+            for shards in 1..=8 {
+                let c = pick_chunk_size(&sizes, n, shards).unwrap();
+                assert!(sizes.contains(&c));
+                assert!(c <= last, "chunk grew with shard count (n={n})");
+                last = c;
+            }
+        }
+        assert_eq!(pick_chunk_size(&[], 100, 2), None);
+    }
+
+    #[test]
+    fn plan_chunk_routes_to_size_class() {
+        let m = manifest();
+        // m=10 routes to the 16-class whose inventory is {8, 32}.
+        assert_eq!(plan_chunk_size(&m, Variant::Rgb, 1000, 10, 1).unwrap(), 32);
+        // m=40 routes to the 64-class; 1 shard takes the largest feasible.
+        assert_eq!(plan_chunk_size(&m, Variant::Rgb, 4096, 40, 1).unwrap(), 512);
+        assert!(plan_chunk_size(&m, Variant::Rgb, 10, 65, 1).is_err());
+        assert!(plan_chunk_size(&m, Variant::Simplex, 10, 10, 1).is_err());
+    }
+
+    #[test]
+    fn outputs_preserve_input_order_across_shards() {
+        let mut rng = Rng::new(3);
+        // Distinguishable chunk lengths (used is encoded in the output).
+        let chunks: Vec<Vec<Problem>> = [3usize, 5, 2, 7, 4, 6, 1, 8]
+            .iter()
+            .map(|&n| (0..n).map(|_| gen::feasible(&mut rng, 6)).collect())
+            .collect();
+        let mut se = ShardedEngine::from_executors(manifest(), mocks(4, 2)).unwrap();
+        let (out, report) = se
+            .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), None)
+            .unwrap();
+        assert_eq!(out.len(), chunks.len());
+        for (k, (chunk, sols)) in chunks.iter().zip(&out).enumerate() {
+            assert_eq!(sols.len(), chunk.len(), "chunk {k}");
+            for (i, s) in sols.iter().enumerate() {
+                assert_eq!(s.point[0], i as f64, "chunk {k} slot {i}");
+                assert_eq!(s.point[1], chunk.len() as f64, "chunk {k} slot {i}");
+            }
+        }
+        let total_chunks: usize = report.per_shard.iter().map(|s| s.chunks).sum();
+        assert_eq!(total_chunks, chunks.len());
+        assert_eq!(report.problems(), chunks.iter().map(|c| c.len()).sum::<usize>());
+        assert!(report.timing.critical_path_ns > 0);
+    }
+
+    #[test]
+    fn shortest_queue_dispatch_uses_every_shard() {
+        let mut rng = Rng::new(5);
+        let chunks: Vec<Vec<Problem>> = (0..12)
+            .map(|_| (0..4).map(|_| gen::feasible(&mut rng, 6)).collect())
+            .collect();
+        // Slow executors: the stage loop outpaces them, so the first wave
+        // of dispatches must fan out across all queues.
+        let mut se = ShardedEngine::from_executors(manifest(), mocks(3, 5)).unwrap();
+        let (_, report) = se
+            .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), None)
+            .unwrap();
+        assert_eq!(report.per_shard.len(), 3);
+        for (s, stats) in report.per_shard.iter().enumerate() {
+            assert!(stats.chunks >= 1, "shard {s} never dispatched to");
+        }
+    }
+
+    #[test]
+    fn executor_error_aborts_without_hanging() {
+        let mut rng = Rng::new(7);
+        let chunks: Vec<Vec<Problem>> = [4usize, 3, 4]
+            .iter()
+            .map(|&n| (0..n).map(|_| gen::feasible(&mut rng, 6)).collect())
+            .collect();
+        let executors = vec![
+            MockExecutor { delay: Duration::ZERO, fail_on_used: Some(3) },
+            MockExecutor { delay: Duration::ZERO, fail_on_used: Some(3) },
+        ];
+        let mut se = ShardedEngine::from_executors(manifest(), executors).unwrap();
+        let err = se
+            .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), None)
+            .unwrap_err();
+        assert!(err.to_string().contains("mock failure"), "{err}");
+    }
+
+    #[test]
+    fn oversize_chunk_surfaces_cleanly() {
+        let mut rng = Rng::new(9);
+        let good: Vec<Problem> = (0..4).map(|_| gen::feasible(&mut rng, 6)).collect();
+        let bad = vec![gen::feasible(&mut rng, 65)];
+        let chunks: Vec<&[Problem]> = vec![&good, &bad];
+        let mut se = ShardedEngine::from_executors(manifest(), mocks(2, 0)).unwrap();
+        let err = se
+            .solve_stream(Variant::Rgb, chunks.iter().copied(), None)
+            .unwrap_err();
+        assert!(err.to_string().contains("no rgb bucket fits"), "{err}");
+    }
+
+    #[test]
+    fn empty_stream_is_ok() {
+        let mut se = ShardedEngine::from_executors(manifest(), mocks(2, 0)).unwrap();
+        let (out, report) = se.solve_stream(Variant::Rgb, std::iter::empty(), None).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(report.problems(), 0);
+    }
+
+    #[test]
+    fn cpu_executor_solves_correctly() {
+        let mut rng = Rng::new(11);
+        let problems: Vec<Problem> = (0..40).map(|_| gen::feasible(&mut rng, 12)).collect();
+        let executors = vec![CpuShardExecutor, CpuShardExecutor];
+        let mut se = ShardedEngine::from_executors(manifest(), executors).unwrap();
+        let mut srng = Rng::new(77);
+        let (sols, _) = se.solve_all(Variant::Rgb, &problems, Some(&mut srng)).unwrap();
+        assert_eq!(sols.len(), problems.len());
+        for (p, s) in problems.iter().zip(&sols) {
+            let want = brute::solve(p);
+            assert_eq!(s.status, want.status);
+            assert!(agree(p, s, &want, Tolerance::default()), "{s:?} vs {want:?}");
+        }
+    }
+
+    /// Bitwise solution equality (infeasible carries NaNs).
+    fn bit_identical(a: &Solution, b: &Solution) -> bool {
+        a.status == b.status
+            && (a.status == Status::Infeasible
+                || (a.point[0].to_bits() == b.point[0].to_bits()
+                    && a.point[1].to_bits() == b.point[1].to_bits()))
+    }
+
+    #[test]
+    fn solve_all_is_bit_identical_across_shard_counts() {
+        let mut rng = Rng::new(13);
+        let problems: Vec<Problem> = (0..100)
+            .map(|_| {
+                let m = 3 + (rng.next_u64() % 10) as usize;
+                gen::feasible(&mut rng, m)
+            })
+            .collect();
+        let seed = 0xC0FFEE;
+
+        // Single-executor reference (shards() == 1 plans its own chunking;
+        // the global-index shuffle derivation makes chunking irrelevant).
+        let mut reference =
+            ShardedEngine::from_executors(manifest(), vec![CpuShardExecutor]).unwrap();
+        let mut r = Rng::new(seed);
+        let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+
+        for shards in 2..=4 {
+            let executors: Vec<CpuShardExecutor> =
+                (0..shards).map(|_| CpuShardExecutor).collect();
+            let mut se = ShardedEngine::from_executors(manifest(), executors).unwrap();
+            let mut r = Rng::new(seed);
+            let (got, report) = se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+            assert_eq!(report.per_shard.len(), shards);
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(bit_identical(a, b), "shards={shards} problem {i}: {a:?} vs {b:?}");
+            }
+        }
+    }
+}

@@ -1,10 +1,17 @@
-//! Shared gating for PJRT-path integration tests.
+//! Shared helpers for the integration/property test crates: PJRT-skip
+//! gating and the bitwise solution comparator the equivalence tests use.
 //!
 //! Engine/Service construction fails under the offline `xla` stub even
 //! when artifacts exist (see rust/Cargo.toml), so tests skip rather than
 //! panic. CI against the real bindings must set
 //! `BATCH_LP2D_REQUIRE_ENGINE` so a broken engine fails loudly instead of
 //! silently skipping every PJRT test.
+
+// Each test binary compiles its own copy of this module and typically
+// uses only a subset of the helpers.
+#![allow(dead_code)]
+
+use batch_lp2d::lp::types::{Solution, Status};
 
 pub fn engine_or_skip<T>(what: &str, result: anyhow::Result<T>) -> Option<T> {
     match result {
@@ -17,4 +24,14 @@ pub fn engine_or_skip<T>(what: &str, result: anyhow::Result<T>) -> Option<T> {
             None
         }
     }
+}
+
+/// Bitwise solution equality; `Solution::infeasible()` carries NaNs, so
+/// `derive(PartialEq)` cannot be used for exactness checks. This is the
+/// comparator behind every "bit-identical to serial execution" test.
+pub fn bit_identical(a: &Solution, b: &Solution) -> bool {
+    a.status == b.status
+        && (a.status == Status::Infeasible
+            || (a.point[0].to_bits() == b.point[0].to_bits()
+                && a.point[1].to_bits() == b.point[1].to_bits()))
 }

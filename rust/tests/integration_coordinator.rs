@@ -95,7 +95,57 @@ fn oversize_problems_are_rejected_cleanly() {
         Err(e) => panic!("expected TooLarge, got {e:?}"),
         Ok(_) => panic!("expected TooLarge, got Ok"),
     }
-    assert_eq!(svc.metrics().snapshot().rejected, 0); // rejected pre-submit
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.rejected, 1); // counted as a rejection...
+    assert_eq!(snap.submitted, 0); // ...never as an accepted submit
+    svc.shutdown();
+}
+
+#[test]
+fn oversize_mid_stream_neither_wedges_nor_counts() {
+    // An unroutable problem submitted in the middle of live traffic must
+    // bounce at submit(): every accepted request still resolves (no shard's
+    // staged queue wedges behind it) and the accepted-problem metrics stay
+    // exact.
+    let Some(dir) = artifacts() else { return };
+    let config = Config {
+        executors: 2,
+        max_wait: Duration::from_millis(1),
+        ..Config::default()
+    };
+    let Some(svc) = common::engine_or_skip("service", Service::start(dir, config)) else {
+        return;
+    };
+    let mut rng = Rng::new(77);
+    let mut tickets = Vec::new();
+    let mut accepted = 0u64;
+    for i in 0..120 {
+        if i % 40 == 20 {
+            let big = gen::feasible(&mut rng, 100_000);
+            match svc.submit(big) {
+                Err(SubmitError::TooLarge { .. }) => {}
+                Err(e) => panic!("expected TooLarge mid-stream, got {e:?}"),
+                Ok(_) => panic!("expected TooLarge mid-stream, got Ok"),
+            }
+            continue;
+        }
+        let p = gen::feasible(&mut rng, 16);
+        tickets.push(svc.submit(p).expect("submit"));
+        accepted += 1;
+    }
+    for (i, t) in tickets.into_iter().enumerate() {
+        let sol = t
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("ticket {i} wedged: {e}"));
+        assert_eq!(sol.status, Status::Optimal, "ticket {i}");
+    }
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.submitted, accepted);
+    assert_eq!(snap.solved, accepted);
+    assert_eq!(snap.rejected, 3);
+    // Per-shard accounting is conserved: every solved problem is
+    // attributed to exactly one shard.
+    assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), accepted);
     svc.shutdown();
 }
 

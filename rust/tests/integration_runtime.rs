@@ -8,9 +8,9 @@
 
 use batch_lp2d::gen;
 use batch_lp2d::lp::brute;
-use batch_lp2d::lp::types::Status;
+use batch_lp2d::lp::types::{Problem, Status};
 use batch_lp2d::lp::validate::{agree, Tolerance};
-use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::runtime::{Engine, ShardedEngine, Variant};
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo};
 use batch_lp2d::util::Rng;
 
@@ -147,14 +147,7 @@ fn timing_split_is_populated() {
     assert!(t.critical_path_ns >= t.transfer_ns + t.execute_ns + t.unpack_ns);
 }
 
-/// Bitwise solution equality; `Solution::infeasible()` carries NaNs, so
-/// derive(PartialEq) cannot be used for exactness checks.
-fn bit_identical(a: &batch_lp2d::lp::types::Solution, b: &batch_lp2d::lp::types::Solution) -> bool {
-    a.status == b.status
-        && (a.status == Status::Infeasible
-            || (a.point[0].to_bits() == b.point[0].to_bits()
-                && a.point[1].to_bits() == b.point[1].to_bits()))
-}
+use common::bit_identical;
 
 #[test]
 fn solve_stream_is_bit_identical_to_repeated_solve() {
@@ -194,6 +187,114 @@ fn solve_stream_is_bit_identical_to_repeated_solve() {
     // runtime::stream unit tests; here we check the plumbing).
     assert!(stream_timing.critical_path_ns <= stream_timing.total_ns());
     assert!(stream_timing.pack_ns > 0 && stream_timing.unpack_ns > 0);
+}
+
+#[test]
+fn sharded_solve_stream_is_bit_identical_to_serial_solve() {
+    // The tentpole guarantee: sharded streaming over 1/2/4 engines equals
+    // the serial chunk-at-a-time loop bit for bit — the stage loop packs
+    // in submission order with the same RNG, and per-chunk execution is
+    // deterministic whichever shard runs it.
+    let Some(engine) = engine() else { return };
+    let Some(dir) = artifact_dir() else { return };
+    let mut gen_rng = Rng::new(61);
+    let chunks: Vec<Vec<Problem>> = [(64usize, 24usize), (32, 16), (100, 30), (8, 5), (48, 24)]
+        .iter()
+        .map(|&(n, m)| gen::mixed_batch(&mut gen_rng, n, m, 0.2))
+        .collect();
+
+    let mut rng = Rng::new(999);
+    let mut serial: Vec<Vec<_>> = Vec::new();
+    for c in &chunks {
+        serial.push(engine.solve(Variant::Rgb, c, Some(&mut rng)).expect("solve").0);
+    }
+
+    for shards in [1usize, 2, 4] {
+        let Some(mut sharded) =
+            common::engine_or_skip("sharded engine", ShardedEngine::new(&dir, shards))
+        else {
+            return;
+        };
+        let mut rng = Rng::new(999);
+        let (streamed, report) = sharded
+            .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), Some(&mut rng))
+            .expect("sharded solve_stream");
+        assert_eq!(report.per_shard.len(), shards);
+        assert_eq!(streamed.len(), serial.len());
+        for (k, (a, b)) in serial.iter().zip(&streamed).enumerate() {
+            assert_eq!(a.len(), b.len(), "shards={shards} chunk {k}");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    bit_identical(x, y),
+                    "shards={shards} chunk {k} problem {i}: {x:?} vs {y:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_solve_all_is_bit_identical_to_one_big_solve() {
+    // solve_all derives every problem's shuffle stream from one base draw
+    // plus its global index — exactly what a single Engine::solve call
+    // does — so the chunked, sharded run must reproduce the one-call
+    // result bitwise for every shard count.
+    let Some(engine) = engine() else { return };
+    let Some(dir) = artifact_dir() else { return };
+    let mut gen_rng = Rng::new(67);
+    let problems = gen::mixed_batch(&mut gen_rng, 200, 24, 0.2);
+
+    let mut rng = Rng::new(4321);
+    let (want, _) = engine.solve(Variant::Rgb, &problems, Some(&mut rng)).expect("solve");
+
+    for shards in [1usize, 2, 4] {
+        let Some(mut sharded) =
+            common::engine_or_skip("sharded engine", ShardedEngine::new(&dir, shards))
+        else {
+            return;
+        };
+        let mut rng = Rng::new(4321);
+        let (got, report) = sharded
+            .solve_all(Variant::Rgb, &problems, Some(&mut rng))
+            .expect("sharded solve_all");
+        assert_eq!(got.len(), want.len());
+        assert_eq!(report.problems(), problems.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert!(bit_identical(a, b), "shards={shards} problem {i}: {a:?} vs {b:?}");
+        }
+    }
+}
+
+#[test]
+fn solve_stream_auto_matches_explicit_chunking() {
+    // The batch-size-aware chunk policy must only change HOW the stream is
+    // chunked, not what it computes: auto-chunked results equal the same
+    // chunking done by hand.
+    let Some(engine) = engine() else { return };
+    let mut gen_rng = Rng::new(71);
+    let problems = gen::independent_batch(&mut gen_rng, 300, 20);
+    let mut rng = Rng::new(11);
+    let (auto_sols, _) = engine
+        .solve_stream_auto(Variant::Rgb, &problems, Some(&mut rng))
+        .expect("solve_stream_auto");
+    assert_eq!(auto_sols.len(), problems.len());
+
+    let chunk = batch_lp2d::runtime::plan_chunk_size(
+        engine.manifest(),
+        Variant::Rgb,
+        problems.len(),
+        20,
+        1,
+    )
+    .expect("plan");
+    let mut rng = Rng::new(11);
+    let (explicit, _) = engine
+        .solve_stream(Variant::Rgb, problems.chunks(chunk), Some(&mut rng))
+        .expect("solve_stream");
+    let flat: Vec<_> = explicit.into_iter().flatten().collect();
+    for (i, (a, b)) in flat.iter().zip(&auto_sols).enumerate() {
+        assert!(bit_identical(a, b), "problem {i}: {a:?} vs {b:?}");
+    }
 }
 
 #[test]

@@ -1,16 +1,23 @@
 //! Property tests on coordinator invariants: routing totality, batching
-//! order/loss/deadline discipline, packing round-trips. Pure-Rust (no
-//! PJRT): the batcher and router are plain data structures.
+//! order/loss/deadline discipline, packing round-trips, and sharded
+//! execution equivalence. Pure-Rust (no PJRT): the batcher and router are
+//! plain data structures, and the sharded driver runs over the
+//! deterministic CPU shard executor.
 
 use std::time::{Duration, Instant};
 
 use batch_lp2d::coordinator::batcher::Batcher;
 use batch_lp2d::coordinator::router::Router;
+use batch_lp2d::gen::{self, trace};
+use batch_lp2d::lp::types::{Problem, Solution};
 use batch_lp2d::runtime::manifest::{Manifest, Variant};
-use batch_lp2d::runtime::pack;
-use batch_lp2d::gen;
+use batch_lp2d::runtime::pack::{self, PackedBatch};
+use batch_lp2d::runtime::shard::{CpuShardExecutor, ShardExecutor, ShardedEngine};
 use batch_lp2d::util::prop::check;
 use batch_lp2d::util::Rng;
+
+mod common;
+use common::bit_identical;
 
 /// Random manifest text with rgb buckets at random (batch, m) points.
 fn random_manifest(rng: &mut Rng) -> Manifest {
@@ -147,6 +154,113 @@ fn prop_pack_unpack_roundtrip_shapes() {
                 .filter(|k| pb.lines[i * bucket_m * 4 + k * 4 + 3] > 0.5)
                 .count();
             assert_eq!(valid, 0);
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_solve_all_matches_single_engine() {
+    // Sharded `solve_all` over a mixed-size workload must be a
+    // permutation-free bitwise match of single-engine execution, for shard
+    // counts 1-4 — even though each shard count plans a different chunk
+    // size. The reference is the strictest one available: the WHOLE
+    // workload packed in one call with the same seed (exactly what a
+    // single serial `Engine::solve` does) and solved by one executor.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t8\t16\t8\t16\ta\n\
+                rgb\t32\t16\t8\t16\tb\n\
+                rgb\t8\t64\t8\t64\tc\n\
+                rgb\t32\t64\t8\t64\td\n\
+                rgb\t256\t64\t8\t64\te\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    check("sharded solve_all equivalence", 25, |rng| {
+        let n = rng.range_usize(1, 150);
+        let problems: Vec<Problem> = trace::mixed_size_batch(rng, n, 2, 60);
+        let seed = rng.next_u64();
+
+        // Single-engine serial reference: one pack of the whole workload,
+        // one executor, one decode.
+        let m_max = problems.iter().map(|p| p.m()).max().unwrap();
+        let bucket = manifest.fit(Variant::Rgb, n, m_max).unwrap().clone();
+        let mut pb = PackedBatch::empty();
+        let mut ref_rng = Rng::new(seed);
+        pack::pack_into(&problems, bucket.batch, bucket.m, Some(&mut ref_rng), &mut pb).unwrap();
+        let (sol, status, _) = CpuShardExecutor.execute_raw(&bucket, &pb).unwrap();
+        let want = pack::unpack(&sol, &status, n).unwrap();
+
+        for shards in 1..=4usize {
+            let executors: Vec<CpuShardExecutor> =
+                (0..shards).map(|_| CpuShardExecutor).collect();
+            let mut sharded =
+                ShardedEngine::from_executors(manifest.clone(), executors).unwrap();
+            let mut srng = Rng::new(seed);
+            let (got, report) = sharded
+                .solve_all(Variant::Rgb, &problems, Some(&mut srng))
+                .unwrap();
+            assert_eq!(got.len(), n, "shards={shards} lost solutions");
+            assert_eq!(report.per_shard.len(), shards);
+            assert_eq!(report.problems(), n, "shards={shards} problem accounting");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    bit_identical(a, b),
+                    "shards={shards} problem {i} (m={}): {a:?} vs {b:?}",
+                    problems[i].m()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_solve_stream_matches_serial_chunk_loop() {
+    // Caller-chunked sharded streaming must equal the serial
+    // chunk-at-a-time loop with a shared RNG, chunk for chunk.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t16\t32\t8\t32\ta\n\
+                rgb\t64\t32\t8\t32\tb\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    check("sharded solve_stream equivalence", 20, |rng| {
+        let n_chunks = rng.range_usize(1, 10);
+        let chunks: Vec<Vec<Problem>> = (0..n_chunks)
+            .map(|_| {
+                let len = rng.range_usize(1, 16);
+                trace::mixed_size_batch(rng, len, 2, 30)
+            })
+            .collect();
+        let seed = rng.next_u64();
+
+        // Serial reference: pack+execute+decode one chunk at a time with a
+        // single RNG, exactly like a loop of `Engine::solve` calls.
+        let mut srng = Rng::new(seed);
+        let mut want: Vec<Vec<Solution>> = Vec::new();
+        let mut pb = PackedBatch::empty();
+        for c in &chunks {
+            let m_max = c.iter().map(|p| p.m()).max().unwrap();
+            let bucket = manifest.fit(Variant::Rgb, c.len(), m_max).unwrap().clone();
+            pack::pack_into(c, bucket.batch, bucket.m, Some(&mut srng), &mut pb).unwrap();
+            let (sol, status, _) = CpuShardExecutor.execute_raw(&bucket, &pb).unwrap();
+            want.push(pack::unpack(&sol, &status, c.len()).unwrap());
+        }
+
+        for shards in 1..=4usize {
+            let executors: Vec<CpuShardExecutor> =
+                (0..shards).map(|_| CpuShardExecutor).collect();
+            let mut sharded =
+                ShardedEngine::from_executors(manifest.clone(), executors).unwrap();
+            let mut srng = Rng::new(seed);
+            let (got, _) = sharded
+                .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), Some(&mut srng))
+                .unwrap();
+            assert_eq!(got.len(), want.len());
+            for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.len(), b.len(), "shards={shards} chunk {k}");
+                for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert!(
+                        bit_identical(x, y),
+                        "shards={shards} chunk {k} problem {i}: {x:?} vs {y:?}"
+                    );
+                }
+            }
         }
     });
 }

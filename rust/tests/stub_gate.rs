@@ -1,0 +1,36 @@
+//! Guards the PJRT-skip plumbing in `tests/common/mod.rs` while the
+//! offline `xla` stub is in place: without `BATCH_LP2D_REQUIRE_ENGINE` a
+//! missing engine must skip quietly (returning None), and with the flag it
+//! must fail loudly with the documented message — never silently skip. CI
+//! runs this in the stub-guard job so the gate cannot rot before real
+//! bindings land.
+
+mod common;
+
+/// Both behaviours in one test: the flag manipulation is process-global,
+/// so keeping the sequence in a single #[test] avoids races with the
+/// harness's parallel test threads.
+#[test]
+fn engine_gate_skips_quietly_then_fails_loudly() {
+    // Without the flag: a broken engine is a clean skip (None).
+    std::env::remove_var("BATCH_LP2D_REQUIRE_ENGINE");
+    let skipped = common::engine_or_skip(
+        "gate-probe",
+        Err::<(), _>(anyhow::anyhow!("PJRT backend unavailable (offline stub)")),
+    );
+    assert!(skipped.is_none(), "missing engine must skip, not pass");
+
+    // With the flag: the same failure must panic with the documented
+    // message so CI against real bindings can never skip silently.
+    std::env::set_var("BATCH_LP2D_REQUIRE_ENGINE", "1");
+    let result = std::panic::catch_unwind(|| {
+        common::engine_or_skip("gate-probe", Err::<(), _>(anyhow::anyhow!("still broken")))
+    });
+    std::env::remove_var("BATCH_LP2D_REQUIRE_ENGINE");
+    let payload = result.expect_err("REQUIRE_ENGINE must make a missing engine fatal");
+    let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+    assert!(
+        msg.contains("required but unavailable"),
+        "panic message must carry the documented marker, got: {msg}"
+    );
+}
