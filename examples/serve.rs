@@ -3,20 +3,27 @@
 //!
 //! This is the "different-sized individual LPs within the batches" mode the
 //! paper's conclusion highlights: requests are routed to size classes,
-//! batched per class under a deadline, and executed on the AOT kernels.
+//! batched per class under a deadline, and executed across the configured
+//! executor shards.
 //!
 //! ```sh
-//! cargo run --release --example serve [-- <requests> <rate_per_s> [--shards N]]
+//! cargo run --release --example serve \
+//!     [-- <requests> <rate_per_s> [--shards N] [--depth D] [--backends LIST]]
 //! ```
 //!
-//! `--shards N` runs N executor shards (one engine each) behind the
-//! shortest-staged-queue dispatcher and reports the per-shard load split.
+//! `--shards N` runs N engine shards behind the weighted dispatcher;
+//! `--backends engine,cpu,batch-cpu:4` mixes shard backend types instead
+//! (heterogeneous sharding — CPU-only mixes serve without artifacts);
+//! `--depth D` sets the per-shard staged-queue (pipeline ring) depth. The
+//! report prints the per-shard load split including capacity weights and
+//! steal counts.
 
 use std::time::{Duration, Instant};
 
-use batch_lp2d::coordinator::{Config, Service};
+use batch_lp2d::coordinator::{BackendSpec, Config, Service};
 use batch_lp2d::gen::trace::{poisson_trace, TraceParams};
 use batch_lp2d::lp::types::Status;
+use batch_lp2d::runtime::PipelineDepth;
 use batch_lp2d::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -24,12 +31,23 @@ fn main() -> anyhow::Result<()> {
     let mut requests: usize = 6_000;
     let mut rate: f64 = 2_000.0;
     let mut shards: usize = 1;
+    let mut depth: usize = 2;
+    let mut backends: Vec<BackendSpec> = Vec::new();
     let mut positional = 0usize;
     let mut i = 0usize;
     while i < args.len() {
         if args[i] == "--shards" {
             i += 1;
             shards = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(1);
+        } else if args[i] == "--depth" {
+            i += 1;
+            depth = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(2);
+        } else if args[i] == "--backends" {
+            i += 1;
+            backends = match args.get(i) {
+                Some(list) => BackendSpec::parse_list(list)?,
+                None => Vec::new(),
+            };
         } else {
             match positional {
                 0 => requests = args[i].parse().unwrap_or(requests),
@@ -40,10 +58,15 @@ fn main() -> anyhow::Result<()> {
         }
         i += 1;
     }
+    let n_shards = if backends.is_empty() { shards.max(1) } else { backends.len() };
+    // Clamp once so every printed depth matches what the service runs.
+    let depth = PipelineDepth::new(depth);
 
     let config = Config {
         max_wait: Duration::from_millis(10),
         executors: shards.max(1),
+        backends,
+        depth,
         ..Config::default()
     };
     let service = Service::start(batch_lp2d::runtime::default_artifact_dir(), config)?;
@@ -51,12 +74,16 @@ fn main() -> anyhow::Result<()> {
         "size classes: {:?} (problems route to the smallest class that fits)",
         service.router().classes()
     );
+    println!(
+        "shard backends: {:?}  depth: {depth}",
+        service.shard_backends()
+    );
 
     let mut rng = Rng::new(99);
     let tp = TraceParams { rate, m_lo: 6, m_hi: 64, infeasible_frac: 0.03 };
     let reqs = poisson_trace(&mut rng, requests, tp);
 
-    println!("driving {requests} requests at ~{rate:.0}/s across {shards} shard(s)...");
+    println!("driving {requests} requests at ~{rate:.0}/s across {n_shards} shard(s)...");
     let t0 = Instant::now();
     // Collector thread waits tickets concurrently with the driver so the
     // measured latency is (completion - submission), not (drive end - sub).
@@ -111,17 +138,24 @@ fn main() -> anyhow::Result<()> {
         100.0 * snap.memory_fraction()
     );
     println!(
-        "  pipelining: {:.3} ms critical path vs {:.3} ms summed stages ({:.2}x overlap)",
+        "  pipelining: {:.3} ms critical path vs {:.3} ms summed stages ({:.2}x overlap)  \
+         depth {}  steals {}",
         snap.timing.critical_path_ns as f64 / 1e6,
         snap.timing.total_ns() as f64 / 1e6,
-        snap.overlap_ratio()
+        snap.overlap_ratio(),
+        snap.pipeline_depth,
+        snap.steals()
     );
+    let names = service.shard_backends().to_vec();
     for (s, load) in snap.per_shard.iter().enumerate() {
         println!(
-            "  shard {s}: {} batches  {} LPs  busy {:.3} ms",
+            "  shard {s} [{}] w={:.1}: {} batches  {} LPs  busy {:.3} ms  steals {}",
+            names.get(s).copied().unwrap_or("?"),
+            load.weight,
             load.batches,
             load.solved,
-            load.busy_ns as f64 / 1e6
+            load.busy_ns as f64 / 1e6,
+            load.steals
         );
     }
     service.shutdown();

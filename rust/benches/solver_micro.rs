@@ -12,7 +12,8 @@ use batch_lp2d::lp::types::Problem;
 use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
 use batch_lp2d::runtime::{
-    default_artifact_dir, CpuShardExecutor, Engine, Manifest, ShardedEngine, Variant,
+    default_artifact_dir, CpuShardExecutor, Engine, Manifest, PipelineDepth, ShardedEngine,
+    Variant,
 };
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
 use batch_lp2d::util::{Rng, Timer};
@@ -105,20 +106,26 @@ fn pipeline_report(problems: &[Problem], chunk: usize, threads: usize) -> String
 /// Shard counts the sweep reports (the CI perf gate tracks each).
 const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
 
-/// Sharded-execution sweep over the deterministic CPU backend: the same
-/// workload through `ShardedEngine` at 1/2/4 shards. Runs on any host (no
-/// artifacts, no PJRT) — the executors solve straight from the packed
-/// bytes — so CI can gate on the shard-scaling trajectory.
-fn shard_sweep_reports(problems: &[Problem]) -> Vec<String> {
-    // Synthetic bucket inventory for the chunk policy; the CPU executors
-    // never open bucket files.
+/// Pipeline depths the sweep reports (the CI perf gate tracks each).
+const DEPTHS: [usize; 3] = [2, 3, 4];
+
+/// Synthetic bucket inventory for the chunk policy; the CPU executors
+/// never open bucket files.
+fn cpu_manifest() -> Manifest {
     let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
                 rgb\t128\t64\t128\t64\tcpu\n\
                 rgb\t256\t64\t128\t64\tcpu\n\
                 rgb\t512\t64\t128\t64\tcpu\n\
                 rgb\t1024\t64\t128\t64\tcpu\n";
-    let manifest =
-        Manifest::parse(text, std::path::PathBuf::from("cpu-fallback")).expect("manifest");
+    Manifest::parse(text, std::path::PathBuf::from("cpu-fallback")).expect("manifest")
+}
+
+/// Sharded-execution sweep over the deterministic CPU backend: the same
+/// workload through `ShardedEngine` at 1/2/4 shards. Runs on any host (no
+/// artifacts, no PJRT) — the executors solve straight from the packed
+/// bytes — so CI can gate on the shard-scaling trajectory.
+fn shard_sweep_reports(problems: &[Problem]) -> Vec<String> {
+    let manifest = cpu_manifest();
 
     let mut out = Vec::new();
     let mut base_ns: Option<u64> = None;
@@ -153,6 +160,51 @@ fn shard_sweep_reports(problems: &[Problem]) -> Vec<String> {
              \"balance\": {:.3}\n}}",
             wall_ns as f64 / 1e6,
             report.balance(),
+        ));
+    }
+    out
+}
+
+/// Pipeline-depth sweep over the deterministic CPU backend: the same
+/// workload through a 2-shard `ShardedEngine` at staged-queue depths
+/// 2/3/4. Like the shard sweep it runs on any host, so the perf gate can
+/// track the depth trajectory alongside the shard trajectory.
+fn depth_sweep_reports(problems: &[Problem]) -> Vec<String> {
+    let manifest = cpu_manifest();
+    let mut out = Vec::new();
+    let mut base_ns: Option<u64> = None;
+    for depth in DEPTHS {
+        let executors: Vec<CpuShardExecutor> = (0..2).map(|_| CpuShardExecutor).collect();
+        let mut sharded = ShardedEngine::from_executors(manifest.clone(), executors)
+            .expect("sharded engine")
+            .with_depth(PipelineDepth::new(depth));
+        let chunk = sharded
+            .plan_chunk(Variant::Rgb, problems.len(), 64)
+            .expect("chunk plan");
+        let mut rng = Rng::new(33);
+        let (solutions, report) = sharded
+            .solve_all(Variant::Rgb, problems, Some(&mut rng))
+            .expect("sharded solve_all");
+        assert_eq!(solutions.len(), problems.len());
+
+        let wall_ns = report.timing.critical_path_ns.max(1);
+        let base = *base_ns.get_or_insert(wall_ns);
+        let lps = problems.len() as f64 / (wall_ns as f64 / 1e9);
+        let speedup = base as f64 / wall_ns as f64;
+        println!(
+            "depth {depth}: chunk {chunk}  {:.3} ms  {:.0} LPs/s  speedup {speedup:.3}x  \
+             steals {}",
+            wall_ns as f64 / 1e6,
+            lps,
+            report.steals(),
+        );
+        out.push(format!(
+            "{{\n  \"bench\": \"pipeline_depth_cpu\",\n  \"depth\": {depth},\n  \
+             \"chunk_size\": {chunk},\n  \"throughput_lps\": {lps:.1},\n  \
+             \"wall_ms\": {:.3},\n  \"speedup_vs_depth2\": {speedup:.4},\n  \
+             \"steals\": {}\n}}",
+            wall_ns as f64 / 1e6,
+            report.steals(),
         ));
     }
     out
@@ -277,14 +329,18 @@ fn main() {
     let json_cpu = pipeline_report(&problems, 512, 1);
     let json_engine = engine_pipeline_report(&problems, 512);
 
-    println!("\n## sharded execution sweep (shortest-staged-queue dispatch)");
+    println!("\n## sharded execution sweep (weighted dispatch + stealing)");
     let json_shards = shard_sweep_reports(&problems);
     let json_engine_shards = engine_shard_sweep(&problems);
+
+    println!("\n## pipeline-depth sweep (2 CPU shards, depth 2/3/4)");
+    let json_depths = depth_sweep_reports(&problems);
 
     let mut entries: Vec<String> = vec![json_cpu];
     entries.extend(json_engine);
     entries.extend(json_shards);
     entries.extend(json_engine_shards);
+    entries.extend(json_depths);
     let mut body = String::from("[\n");
     body.push_str(&entries.join(",\n"));
     body.push_str("\n]\n");

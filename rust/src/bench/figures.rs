@@ -299,6 +299,50 @@ pub fn fig_shard_sweep(
     Ok(table)
 }
 
+/// Pipeline-depth sweep (companion to the shard sweep): the same workload
+/// through a 2-shard [`ShardedEngine`] at each staged-queue depth — wall
+/// time, speedup over depth 2, busy-time balance, and steal counts. Deeper
+/// rings only help when execution times are bursty enough that double
+/// buffering drains; the steal column shows how much rebalancing the
+/// deeper backlog enabled.
+pub fn fig_depth_sweep(
+    artifact_dir: &std::path::Path,
+    n: usize,
+    m: usize,
+    depths: &[usize],
+) -> anyhow::Result<Table> {
+    let mut table = Table::new(&["depth", "chunk", "wall_ms", "speedup", "balance", "steals"]);
+    let n = if std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some() {
+        n.min(512)
+    } else {
+        n
+    };
+    let mut prng = Rng::new(2019 ^ ((n as u64) << 32) ^ m as u64);
+    let problems = gen::independent_batch(&mut prng, n, m);
+    let mut base_ms: Option<f64> = None;
+    for &depth in depths {
+        let mut sharded = ShardedEngine::new(artifact_dir, 2)?
+            .with_depth(crate::runtime::PipelineDepth::new(depth));
+        sharded.warmup(Variant::Rgb)?;
+        let chunk = sharded.plan_chunk(Variant::Rgb, n, m)?;
+        let mut rng = Rng::new(2019);
+        let (solutions, report) = sharded.solve_all(Variant::Rgb, &problems, Some(&mut rng))?;
+        anyhow::ensure!(solutions.len() == n, "lost solutions in depth sweep");
+        let wall_ms = report.timing.critical_path_ns.max(1) as f64 / 1e6;
+        let base = *base_ms.get_or_insert(wall_ms);
+        table.push_row(vec![
+            depth.to_string(),
+            chunk.to_string(),
+            format!("{wall_ms:.3}"),
+            format!("{:.3}", base / wall_ms),
+            format!("{:.3}", report.balance()),
+            report.steals().to_string(),
+        ]);
+        eprintln!("  {}", table.rows.last().unwrap().join("\t"));
+    }
+    Ok(table)
+}
+
 /// Figures 7a-7b: speedup of optimized RGB over NaiveRGB, kernel time only
 /// (the paper excludes transfer), versus LP size at a fixed batch.
 ///

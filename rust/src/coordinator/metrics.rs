@@ -19,6 +19,8 @@ struct Inner {
     batches: u64,
     /// Sum of batch occupancy (used/capacity) to average later.
     occupancy_sum: f64,
+    /// The service's configured staged-queue depth (0 until configured).
+    pipeline_depth: usize,
     queue_wait: LatencyHistogram,
     exec_latency: LatencyHistogram,
     exec_timing: ExecTimingTotals,
@@ -26,15 +28,26 @@ struct Inner {
     per_shard: Vec<ShardLoad>,
 }
 
-/// One executor shard's share of the served load — how evenly the
-/// shortest-staged-queue dispatch spread the batches.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+/// One executor shard's share of the served load — how evenly the weighted
+/// dispatch (plus work stealing) spread the batches.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ShardLoad {
     pub batches: u64,
     pub solved: u64,
     /// Summed stage time (pack+transfer+execute+unpack) of this shard's
     /// batches — its busy share of the run.
     pub busy_ns: u64,
+    /// Batches this shard stole from a peer's staged queue.
+    pub steals: u64,
+    /// The shard backend's relative capacity weight (the dispatch bias;
+    /// 1.0 until configured).
+    pub weight: f64,
+}
+
+impl Default for ShardLoad {
+    fn default() -> Self {
+        ShardLoad { batches: 0, solved: 0, busy_ns: 0, steals: 0, weight: 1.0 }
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -72,13 +85,16 @@ pub struct Snapshot {
     pub rejected: u64,
     pub batches: u64,
     pub mean_occupancy: f64,
+    /// The service's configured staged-queue depth (0 = not configured).
+    pub pipeline_depth: usize,
     pub queue_wait_p50_ns: u64,
     pub queue_wait_p99_ns: u64,
     pub exec_p50_ns: u64,
     pub exec_p99_ns: u64,
     pub exec_mean_ns: f64,
     pub timing: ExecTimingTotals,
-    /// Per-shard load split (index = shard/executor id).
+    /// Per-shard load split (index = shard/executor id), including steal
+    /// counts and capacity weights.
     pub per_shard: Vec<ShardLoad>,
 }
 
@@ -101,15 +117,37 @@ impl Metrics {
         }
     }
 
+    /// [`Metrics::ensure_shards`] for heterogeneous configs: pre-size one
+    /// row per backend — so every configured shard reports (a zero row at
+    /// worst) whatever mix the deployment runs — and record each backend's
+    /// capacity weight for the load-split report.
+    pub fn configure_shards(&self, weights: &[f64]) {
+        self.ensure_shards(weights.len());
+        let mut g = self.inner.lock().unwrap();
+        for (s, &w) in weights.iter().enumerate() {
+            g.per_shard[s].weight = w;
+        }
+    }
+
+    /// Record the service's staged-queue (pipeline ring) depth.
+    pub fn set_pipeline_depth(&self, depth: usize) {
+        self.inner.lock().unwrap().pipeline_depth = depth;
+    }
+
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
 
-    /// Record a completed batch on shard `shard`: per-problem outcomes
-    /// plus the exec split, attributed to the executor that ran it.
+    /// Record a completed batch: per-problem outcomes plus the exec split.
+    /// `shard` is the executor that ran it, `origin` the shard whose pack
+    /// stage staged it (they differ when `stolen`); pack time is credited
+    /// to the origin's busy share and everything else to the executor's,
+    /// so the per-shard load split stays honest under stealing.
     pub fn on_batch(
         &self,
         shard: usize,
+        origin: usize,
+        stolen: bool,
         used: usize,
         capacity: usize,
         infeasible: usize,
@@ -128,13 +166,18 @@ impl Metrics {
         g.exec_timing.execute_ns += timing.execute_ns;
         g.exec_timing.unpack_ns += timing.unpack_ns;
         g.exec_timing.critical_path_ns += timing.critical_path_ns;
-        if g.per_shard.len() <= shard {
-            g.per_shard.resize(shard + 1, ShardLoad::default());
+        let need = shard.max(origin) + 1;
+        if g.per_shard.len() < need {
+            g.per_shard.resize(need, ShardLoad::default());
         }
+        g.per_shard[origin].busy_ns += timing.pack_ns;
         let s = &mut g.per_shard[shard];
         s.batches += 1;
         s.solved += used as u64;
-        s.busy_ns += timing.total_ns();
+        s.busy_ns += timing.total_ns() - timing.pack_ns;
+        if stolen {
+            s.steals += 1;
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -150,6 +193,7 @@ impl Metrics {
             } else {
                 0.0
             },
+            pipeline_depth: g.pipeline_depth,
             queue_wait_p50_ns: g.queue_wait.percentile_ns(50.0),
             queue_wait_p99_ns: g.queue_wait.percentile_ns(99.0),
             exec_p50_ns: g.exec_latency.percentile_ns(50.0),
@@ -175,6 +219,11 @@ impl Snapshot {
         let t = &self.timing;
         t.total_ns() as f64 / t.critical_path_ns.max(1) as f64
     }
+
+    /// Batches stolen across all shards.
+    pub fn steals(&self) -> u64 {
+        self.per_shard.iter().map(|s| s.steals).sum()
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +237,8 @@ mod tests {
         m.on_submit();
         m.on_batch(
             0,
+            0,
+            false,
             2,
             4,
             1,
@@ -224,7 +275,22 @@ mod tests {
     }
 
     #[test]
-    fn per_shard_split() {
+    fn configure_shards_records_weights_and_presizes() {
+        let m = Metrics::new();
+        m.configure_shards(&[8.0, 1.0, 4.0]);
+        m.set_pipeline_depth(3);
+        let s = m.snapshot();
+        assert_eq!(s.pipeline_depth, 3);
+        assert_eq!(s.per_shard.len(), 3);
+        assert_eq!(s.per_shard[0].weight, 8.0);
+        assert_eq!(s.per_shard[1].weight, 1.0);
+        assert_eq!(s.per_shard[2].weight, 4.0);
+        // Shards configured but never hit still report zero load rows.
+        assert!(s.per_shard.iter().all(|l| l.batches == 0 && l.steals == 0));
+    }
+
+    #[test]
+    fn per_shard_split_credits_pack_to_origin_and_counts_steals() {
         let m = Metrics::new();
         let t = ExecTiming {
             pack_ns: 1,
@@ -233,15 +299,27 @@ mod tests {
             unpack_ns: 1,
             critical_path_ns: 10,
         };
-        m.on_batch(0, 4, 4, 0, Duration::ZERO, &t);
-        m.on_batch(2, 2, 4, 0, Duration::ZERO, &t);
-        m.on_batch(2, 3, 4, 0, Duration::ZERO, &t);
+        m.on_batch(0, 0, false, 4, 4, 0, Duration::ZERO, &t);
+        // Shard 2 steals a batch shard 1 packed: the 1ns pack goes to
+        // shard 1's busy share, the 9ns exec side to shard 2's.
+        m.on_batch(2, 1, true, 2, 4, 0, Duration::ZERO, &t);
+        m.on_batch(2, 2, false, 3, 4, 0, Duration::ZERO, &t);
         let s = m.snapshot();
         assert_eq!(s.per_shard.len(), 3);
-        assert_eq!(s.per_shard[0], ShardLoad { batches: 1, solved: 4, busy_ns: 10 });
-        assert_eq!(s.per_shard[1], ShardLoad::default());
-        assert_eq!(s.per_shard[2], ShardLoad { batches: 2, solved: 5, busy_ns: 20 });
+        assert_eq!(
+            s.per_shard[0],
+            ShardLoad { batches: 1, solved: 4, busy_ns: 10, steals: 0, weight: 1.0 }
+        );
+        assert_eq!(
+            s.per_shard[1],
+            ShardLoad { batches: 0, solved: 0, busy_ns: 1, steals: 0, weight: 1.0 }
+        );
+        assert_eq!(
+            s.per_shard[2],
+            ShardLoad { batches: 2, solved: 5, busy_ns: 19, steals: 1, weight: 1.0 }
+        );
         assert_eq!(s.solved, 9);
+        assert_eq!(s.steals(), 1);
     }
 
     #[test]
@@ -249,6 +327,8 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.solved, 0);
         assert_eq!(s.mean_occupancy, 0.0);
+        assert_eq!(s.pipeline_depth, 0);
+        assert_eq!(s.steals(), 0);
     }
 
     #[test]

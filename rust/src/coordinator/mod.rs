@@ -12,4 +12,4 @@ pub mod service;
 
 pub use metrics::{Metrics, ShardLoad, Snapshot};
 pub use router::Router;
-pub use service::{Config, Service, SubmitError, Ticket};
+pub use service::{BackendSpec, Config, Service, SubmitError, Ticket};

@@ -7,7 +7,7 @@
 //!   submit() ──sync_channel──▶ dispatcher ──per-shard channel──▶ shard e of N
 //!      ▲                        (router +                ┌──────────────┐
 //!      │                         batcher +               │ pack stage   │
-//!      │                         shortest-queue          │   │ sync_channel
+//!      │                         weighted                │   │ StealQueues
 //!      │                         dispatch)               │ execute stage│
 //!      │                                                 └──────────────┘
 //!      └────────── per-request reply channel ◀──────────────────┘
@@ -15,22 +15,30 @@
 //!
 //! * The bounded submit channel is the backpressure surface.
 //! * The dispatcher owns the `Batcher` and closes batches on capacity or
-//!   deadline; it never touches PJRT. A closed batch is routed to the
-//!   executor shard with the **shortest staged queue** (fewest batches
-//!   dispatched but not yet executed, ties to the lowest shard id) — no
-//!   shared MPMC hand-off, so a slow shard never head-of-line blocks the
-//!   others and the load split is observable per shard
+//!   deadline; it never touches a device. A closed batch is routed to the
+//!   executor shard with the **minimum weighted backlog**
+//!   (`outstanding / capacity_weight`, ties to the lowest shard id) — so
+//!   heavier backends draw proportionally more traffic and the load split
+//!   is observable per shard
 //!   ([`Snapshot::per_shard`](crate::coordinator::metrics::Snapshot)).
-//! * Each executor shard is a **pipelined pair**: a pack-stage thread pulls
-//!   its shard's ready batches, packs them into rotating `PackedBatch`
+//! * Each executor shard is a **pipelined pair** around one [`Backend`]
+//!   (a PJRT [`Engine`], or a CPU backend in heterogeneous/engine-free
+//!   deployments — see [`BackendSpec`]): a pack-stage thread pulls its
+//!   shard's ready batches, packs them into rotating `PackedBatch`
 //!   buffers (no `Problem` clones — it packs straight from borrowed
-//!   pending requests), and feeds a depth-bounded channel; an
-//!   execute-stage thread owns the `Engine`, runs transfer/execute/unpack,
-//!   fans results out to the per-request reply channels, and recycles
-//!   buffers back to the pack stage. Packing batch k+1 thus overlaps
-//!   executing batch k — the same double-buffering `Engine::solve_stream`
-//!   does, applied to the serving path.
+//!   pending requests), and feeds the shard's staged queue, bounded at the
+//!   configured [`PipelineDepth`]; an execute-stage thread owns the
+//!   backend, runs execute + decode, fans results out to the per-request
+//!   reply channels, and recycles buffers back to the pack stage. Packing
+//!   batch k+1 thus overlaps executing batch k — the same ring
+//!   `Engine::solve_stream` uses, applied to the serving path.
+//! * The staged queues are **work-stealing**
+//!   ([`crate::runtime::steal::StealQueues`]): an execute stage whose own
+//!   queue runs dry steals the newest staged batch from the most
+//!   backlogged peer, so a drained shard never idles behind the
+//!   dispatcher's estimates. Steals are counted per shard in the metrics.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -41,13 +49,64 @@ use crate::coordinator::batcher::{Batcher, ReadyBatch};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
-use crate::runtime::pack::{pack_into, PackedBatch};
+use crate::runtime::backend::{
+    batch_ests_ns, build_cost_table, Backend, BatchCpuBackend, CpuShardExecutor,
+};
+use crate::runtime::pack::{pack_into, unpack_into, PackedBatch};
+use crate::runtime::steal::StealQueues;
+use crate::runtime::stream::PipelineDepth;
 use crate::runtime::{Bucket, Engine, Manifest, Variant};
 use crate::util::Rng;
 
-/// How many packed batches may queue between an executor's pack stage and
-/// its execute stage (2 = double buffering; also bounds buffer-pool size).
-const PIPELINE_DEPTH: usize = 2;
+/// Which backend a shard runs — the heterogeneous-sharding knob. A
+/// deployment may mix engine shards with CPU shards (Gurung & Ray's
+/// CPU+GPU peer-solver scheme); engine-free configs run without artifacts
+/// (the manifest falls back to [`Manifest::cpu_fallback`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// A PJRT [`Engine`] over the artifact directory.
+    Engine,
+    /// The deterministic single-thread CPU stand-in ([`CpuShardExecutor`]).
+    Cpu,
+    /// The multicore CPU batch solver ([`BatchCpuBackend`]).
+    BatchCpu { threads: usize },
+}
+
+impl BackendSpec {
+    /// Parse one spec: `engine` | `cpu` | `batch-cpu` | `batch-cpu:<N>`.
+    pub fn parse(s: &str) -> anyhow::Result<BackendSpec> {
+        match s.trim() {
+            "engine" | "pjrt" => Ok(BackendSpec::Engine),
+            "cpu" => Ok(BackendSpec::Cpu),
+            "batch-cpu" => Ok(BackendSpec::BatchCpu {
+                threads: crate::solvers::batch_cpu::default_threads(),
+            }),
+            other => {
+                if let Some(n) = other.strip_prefix("batch-cpu:") {
+                    let threads: usize = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad thread count in '{other}'"))?;
+                    Ok(BackendSpec::BatchCpu { threads: threads.max(1) })
+                } else {
+                    anyhow::bail!("unknown backend '{other}' (engine|cpu|batch-cpu[:N])")
+                }
+            }
+        }
+    }
+
+    /// Parse a comma-separated shard list, e.g. `engine,cpu,batch-cpu:4`.
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<BackendSpec>> {
+        s.split(',').filter(|p| !p.trim().is_empty()).map(BackendSpec::parse).collect()
+    }
+
+    fn build(&self, artifact_dir: &Path) -> anyhow::Result<Box<dyn Backend>> {
+        Ok(match self {
+            BackendSpec::Engine => Box::new(Engine::new(artifact_dir)?),
+            BackendSpec::Cpu => Box::new(CpuShardExecutor),
+            BackendSpec::BatchCpu { threads } => Box::new(BatchCpuBackend::new(*threads)),
+        })
+    }
+}
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -58,14 +117,18 @@ pub struct Config {
     pub max_wait: Duration,
     /// Cap on per-class batch size (None = the bucket capacity).
     pub max_batch: Option<usize>,
-    /// Executor shards running PJRT batches. The `xla` client is not
-    /// shareable across threads, so each shard owns a *separate* Engine
-    /// (its own PJRT client + executable cache) plus a dedicated pack-stage
-    /// thread; the dispatcher routes each closed batch to the shard with
-    /// the shortest staged queue. 1 is usually right on CPU (XLA already
-    /// parallelizes inside one execution); raise it to one per device once
-    /// real multi-GPU PJRT clients land.
+    /// Executor shard count when `backends` is empty: that many [`Engine`]
+    /// shards (each owning its own PJRT client + executable cache). 1 is
+    /// usually right on CPU (XLA already parallelizes inside one
+    /// execution); raise it to one per device once real multi-GPU PJRT
+    /// clients land.
     pub executors: usize,
+    /// Explicit per-shard backend mix; overrides `executors` when
+    /// non-empty. CPU-only mixes serve without artifacts.
+    pub backends: Vec<BackendSpec>,
+    /// Staged-queue depth per shard (the pipeline ring depth; 2 = double
+    /// buffering).
+    pub depth: PipelineDepth,
     /// Bounded submit-queue depth (backpressure).
     pub queue_depth: usize,
     /// Pre-compile each size class's executables before serving (start()
@@ -83,6 +146,8 @@ impl Default for Config {
             max_wait: Duration::from_millis(2),
             max_batch: None,
             executors: 1,
+            backends: Vec::new(),
+            depth: PipelineDepth::default(),
             queue_depth: 8192,
             warm: true,
             seed: 0x5EED,
@@ -155,9 +220,13 @@ enum Msg {
     Shutdown,
 }
 
-/// A batch packed by an executor's pack stage, awaiting device execution.
-/// Occupancy accounting uses `bucket.batch` (the capacity that will run).
+/// A batch packed by an executor's pack stage, staged for execution on its
+/// origin shard (or a thief). Occupancy accounting uses `bucket.batch`
+/// (the capacity that will run).
 struct StagedBatch {
+    /// The shard whose pack stage staged this batch — the dispatcher's
+    /// target, whose `outstanding` count it settles on completion.
+    origin: usize,
     bucket: Bucket,
     pb: PackedBatch,
     items: Vec<Pending>,
@@ -168,11 +237,29 @@ struct StagedBatch {
     pack_finished: Instant,
 }
 
+/// Drop guard for the pack stages: the LAST one to exit — normal return
+/// or panic unwind — closes the staged queues so the execute stages drain
+/// and exit instead of blocking forever (the pack-side counterpart of the
+/// execute stages' [`crate::runtime::steal::PopperGuard`]).
+struct PackAliveGuard {
+    alive: Arc<AtomicUsize>,
+    queues: Arc<StealQueues<StagedBatch>>,
+}
+
+impl Drop for PackAliveGuard {
+    fn drop(&mut self) {
+        if self.alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queues.close();
+        }
+    }
+}
+
 /// The running service.
 pub struct Service {
     tx: mpsc::SyncSender<Msg>,
     router: Router,
     metrics: Arc<Metrics>,
+    backend_names: Vec<&'static str>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     executors: Vec<std::thread::JoinHandle<()>>,
 }
@@ -180,99 +267,170 @@ pub struct Service {
 impl Service {
     /// Start dispatcher + executor-pair threads over an artifact directory.
     ///
-    /// Each executor pair owns a private [`Engine`] (PJRT client +
-    /// executable cache) on its execute-stage thread; engines are
-    /// constructed here so any setup error surfaces synchronously, then
-    /// *moved* into their threads.
+    /// Each executor pair owns a private [`Backend`] on its execute-stage
+    /// thread; backends are constructed here so any setup error surfaces
+    /// synchronously, then *moved* into their threads. With an explicit
+    /// CPU-only `config.backends` mix, a missing artifact directory falls
+    /// back to the synthetic [`Manifest::cpu_fallback`] inventory — the
+    /// whole serving path then runs engine-free.
     pub fn start(artifact_dir: impl AsRef<Path>, config: Config) -> anyhow::Result<Service> {
         let dir: PathBuf = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
+        let specs: Vec<BackendSpec> = if config.backends.is_empty() {
+            vec![BackendSpec::Engine; config.executors.max(1)]
+        } else {
+            config.backends.clone()
+        };
+        let needs_engine = specs.iter().any(|s| matches!(s, BackendSpec::Engine));
+        let manifest = match Manifest::load(&dir) {
+            Ok(m) => m,
+            // Engine-free deployments run without artifacts — but only a
+            // MISSING manifest falls back to the synthetic inventory; a
+            // present-but-unparsable one is an error worth surfacing.
+            Err(_) if !needs_engine && !dir.join("manifest.tsv").exists() => {
+                Manifest::cpu_fallback()
+            }
+            Err(e) => return Err(e),
+        };
         let router = Router::new(&manifest, config.variant)?;
+
+        let mut backends: Vec<Box<dyn Backend>> = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            backends.push(spec.build(&dir)?);
+        }
+        let n_executors = backends.len();
+        let weights: Vec<f64> = backends.iter().map(|b| b.capacity_weight()).collect();
+        let backend_names: Vec<&'static str> = backends.iter().map(|b| b.name()).collect();
+        // Each backend's cost model evaluated over the bucket inventory
+        // (the backends move to their threads below): cost_tables[s]
+        // answers "what would shard s pay for a bucket-shaped batch",
+        // which is what steal/backlog estimates need.
+        let cost_tables: Arc<Vec<HashMap<(usize, usize), u64>>> =
+            Arc::new(build_cost_table(&backends, &manifest, config.variant));
+        let depth = config.depth.get();
+
         let metrics = Arc::new(Metrics::new());
-        // Idle shards must still appear (as zero rows) in the load split.
-        metrics.ensure_shards(config.executors.max(1));
+        // Idle shards must still appear (as zero rows) in the load split,
+        // with their capacity weights attached.
+        metrics.configure_shards(&weights);
+        metrics.set_pipeline_depth(depth);
 
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_depth);
 
-        // Executor pool: one pack/execute pair per shard, each with its own
-        // ready-batch queue. `outstanding[e]` counts batches dispatched to
-        // shard e and not yet executed — the staged-queue depth the
-        // dispatcher minimizes.
+        // Executor pool: one pack/execute pair per shard. Pack stages feed
+        // the shared work-stealing staged queues (bounded at `depth` per
+        // shard); `outstanding[e]` counts batches dispatched to shard e and
+        // not yet executed — the backlog the weighted dispatch minimizes.
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        let n_executors = config.executors.max(1);
         let outstanding: Arc<Vec<AtomicUsize>> =
             Arc::new((0..n_executors).map(|_| AtomicUsize::new(0)).collect());
+        let queues: Arc<StealQueues<StagedBatch>> =
+            Arc::new(StealQueues::new(n_executors, depth));
+        // The last pack stage to exit closes the staged queues, draining
+        // the execute stages.
+        let pack_alive = Arc::new(AtomicUsize::new(n_executors));
         let mut batch_txs: Vec<mpsc::Sender<ReadyBatch<Pending>>> =
             Vec::with_capacity(n_executors);
+        // Buffer recycling is routed by a batch's ORIGIN shard: a stolen
+        // batch's buffer must flow back to the pack stage that allocated
+        // it, or steady stealing would migrate every buffer into the
+        // thief's pool while the victim re-allocates.
+        let mut recycle_txs: Vec<mpsc::Sender<PackedBatch>> = Vec::with_capacity(n_executors);
+        let mut recycle_rxs: Vec<mpsc::Receiver<PackedBatch>> = Vec::with_capacity(n_executors);
+        for _ in 0..n_executors {
+            let (tx, rx) = mpsc::channel::<PackedBatch>();
+            recycle_txs.push(tx);
+            recycle_rxs.push(rx);
+        }
         let mut executors = Vec::with_capacity(n_executors * 2);
-        for e in 0..n_executors {
-            let engine = Engine::new(&dir)?;
-            // The pack stage never touches PJRT; it gets its own manifest
-            // copy for bucket fitting.
-            let pack_manifest = engine.manifest().clone();
+        for (e, (mut backend, recycle_rx)) in
+            backends.into_iter().zip(recycle_rxs).enumerate()
+        {
+            // The pack stage never touches the backend; it gets its own
+            // manifest copy for bucket fitting.
+            let pack_manifest = manifest.clone();
             let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
             batch_txs.push(batch_tx);
-            let (staged_tx, staged_rx) = mpsc::sync_channel::<StagedBatch>(PIPELINE_DEPTH);
-            let (recycle_tx, recycle_rx) = mpsc::channel::<PackedBatch>();
             let seed = config.seed ^ (e as u64).wrapping_mul(0xA5A5_5A5A_1234_5678);
 
-            // Pack stage: this shard's ready batches -> packed buffers.
+            // Pack stage: this shard's ready batches -> staged queue.
             {
                 let variant = config.variant;
                 let outstanding = outstanding.clone();
+                let queues = queues.clone();
+                let pack_alive = pack_alive.clone();
+                let cost_tables = cost_tables.clone();
                 executors.push(std::thread::spawn(move || {
+                    // Held for the thread's lifetime: the last pack stage
+                    // to exit (or unwind) closes the staged queues.
+                    let _alive =
+                        PackAliveGuard { alive: pack_alive, queues: queues.clone() };
                     let mut rng = Rng::new(seed);
                     while let Ok(batch) = batch_rx.recv() {
                         let staged = stage_batch(
                             &pack_manifest,
                             variant,
+                            e,
+                            &cost_tables,
                             batch,
                             &mut rng,
-                            &staged_tx,
+                            &queues,
                             &recycle_rx,
                         );
                         if !staged {
-                            // The batch died before reaching the execute
-                            // stage (unroutable size, pack failure, or
-                            // shutdown): settle its staged-queue slot here
-                            // so it cannot wedge this shard's queue depth.
+                            // The batch died before reaching a staged queue
+                            // (unroutable size or pack failure): settle its
+                            // backlog slot here so it cannot wedge this
+                            // shard's queue-depth accounting.
                             outstanding[e].fetch_sub(1, Ordering::Relaxed);
                         }
                     }
-                    // Dropping staged_tx drains the execute stage.
                 }));
             }
 
-            // Execute stage: packed buffers -> PJRT -> replies.
+            // Execute stage: staged batches (own or stolen) -> backend ->
+            // replies.
             {
                 let metrics = metrics.clone();
                 let router = router.clone();
+                let warm_manifest = manifest.clone();
                 let variant = config.variant;
                 let warm = config.warm;
                 let ready_tx = ready_tx.clone();
                 let outstanding = outstanding.clone();
+                let queues = queues.clone();
+                let recycle_txs = recycle_txs.clone();
                 executors.push(std::thread::spawn(move || {
+                    // Pack-side death detection: if every execute stage
+                    // dies (backend panic), blocked pushes fail and the
+                    // pending requests get error replies instead of the
+                    // service hanging.
+                    let _popper = queues.register_popper();
                     if warm {
-                        let _ = ready_tx.send(warm_classes(&engine, &router, variant));
+                        let warmed =
+                            warm_classes(backend.as_mut(), &warm_manifest, &router, variant);
+                        let _ = ready_tx.send(warmed);
                     } else {
                         let _ = ready_tx.send(Ok(()));
                     }
                     drop(ready_tx);
                     // Reused decode buffer: steady-state executors allocate
-                    // nothing per batch beyond the PJRT d2h staging.
+                    // nothing per batch beyond the raw output staging.
                     let mut solutions: Vec<Solution> = Vec::new();
                     let mut last_done: Option<Instant> = None;
-                    while let Ok(staged) = staged_rx.recv() {
+                    while let Some(popped) = queues.pop(e) {
+                        let origin = popped.item.origin;
                         run_staged(
-                            &engine,
+                            backend.as_mut(),
                             e,
-                            staged,
+                            popped.stolen,
+                            popped.item,
                             &metrics,
                             &mut solutions,
-                            &recycle_tx,
+                            &recycle_txs,
                             &mut last_done,
                         );
-                        outstanding[e].fetch_sub(1, Ordering::Relaxed);
+                        queues.complete(e, popped.est_ns);
+                        outstanding[origin].fetch_sub(1, Ordering::Relaxed);
                     }
                 }));
             }
@@ -292,6 +450,7 @@ impl Service {
             let router = router.clone();
             let config = config.clone();
             let outstanding = outstanding.clone();
+            let weights = weights.clone();
             std::thread::spawn(move || {
                 let capacities: Vec<usize> = router
                     .classes()
@@ -303,12 +462,20 @@ impl Service {
                     .collect();
                 let mut batcher: Batcher<Pending> =
                     Batcher::new(router.classes().to_vec(), capacities, config.max_wait);
-                // Shortest-staged-queue dispatch: a closed batch goes to
-                // the shard with the fewest batches in flight (ties to the
-                // lowest shard id).
+                // Weighted shortest-backlog dispatch: a closed batch goes
+                // to the shard minimizing (outstanding + 1) / weight (ties
+                // to the lowest shard id), so heavy backends draw
+                // proportionally more work. Stealing corrects whatever
+                // this estimate gets wrong.
                 let dispatch = |ready: ReadyBatch<Pending>| {
                     let target = (0..batch_txs.len())
-                        .min_by_key(|&s| outstanding[s].load(Ordering::Relaxed))
+                        .min_by(|&a, &b| {
+                            let la = (outstanding[a].load(Ordering::Relaxed) + 1) as f64
+                                / weights[a].max(1e-9);
+                            let lb = (outstanding[b].load(Ordering::Relaxed) + 1) as f64
+                                / weights[b].max(1e-9);
+                            la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+                        })
                         .unwrap_or(0);
                     outstanding[target].fetch_add(1, Ordering::Relaxed);
                     if batch_txs[target].send(ready).is_err() {
@@ -346,7 +513,14 @@ impl Service {
             })
         };
 
-        Ok(Service { tx, router, metrics, dispatcher: Some(dispatcher), executors })
+        Ok(Service {
+            tx,
+            router,
+            metrics,
+            backend_names,
+            dispatcher: Some(dispatcher),
+            executors,
+        })
     }
 
     /// Submit one problem; blocks if the queue is full (backpressure).
@@ -388,6 +562,11 @@ impl Service {
         &self.router
     }
 
+    /// The backend label of each executor shard (index = shard id).
+    pub fn shard_backends(&self) -> &[&'static str] {
+        &self.backend_names
+    }
+
     /// Graceful shutdown: flush queues, join threads.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -414,13 +593,19 @@ impl Drop for Service {
 
 /// Pre-compile the executables a class's traffic will hit: the smallest
 /// bucket (light load) and the capacity bucket (saturated load) per class.
-fn warm_classes(engine: &Engine, router: &Router, variant: Variant) -> anyhow::Result<()> {
+/// CPU backends have nothing to warm (`prepare` is a no-op).
+fn warm_classes(
+    backend: &mut dyn Backend,
+    manifest: &Manifest,
+    router: &Router,
+    variant: Variant,
+) -> anyhow::Result<()> {
     for &class in router.classes() {
         let cap = router.capacity(class).unwrap_or(1);
         for n in [1usize, cap] {
-            if let Some(bucket) = engine.manifest().fit(variant, n, class) {
+            if let Some(bucket) = manifest.fit(variant, n, class) {
                 let bucket = bucket.clone();
-                engine.load(&bucket)?;
+                backend.prepare(&bucket)?;
             }
         }
     }
@@ -429,18 +614,20 @@ fn warm_classes(engine: &Engine, router: &Router, variant: Variant) -> anyhow::R
 
 /// Pack-stage half of an executor pair: pack a ready batch straight from
 /// the borrowed pending requests (no `Problem` clones) into a recycled
-/// buffer and hand it to the execute stage. The bounded `staged_tx` is the
-/// pipeline's depth control: at most `PIPELINE_DEPTH` packed batches wait
-/// while the engine executes.
+/// buffer and stage it on this shard's steal queue. The bounded push is
+/// the pipeline's depth control: at most `depth` packed batches wait while
+/// the execute stages (this shard's, or a stealing peer's) catch up.
 ///
-/// Returns whether the batch reached the execute stage — `false` means the
-/// caller must settle the shard's staged-queue accounting itself.
+/// Returns whether the batch reached a staged queue — `false` means the
+/// caller must settle the shard's backlog accounting itself.
 fn stage_batch(
     manifest: &Manifest,
     variant: Variant,
+    shard: usize,
+    cost_tables: &[HashMap<(usize, usize), u64>],
     batch: ReadyBatch<Pending>,
     rng: &mut Rng,
-    staged_tx: &mpsc::SyncSender<StagedBatch>,
+    queues: &StealQueues<StagedBatch>,
     recycle_rx: &mpsc::Receiver<PackedBatch>,
 ) -> bool {
     let m_max = batch
@@ -473,7 +660,12 @@ fn stage_batch(
         return false;
     }
 
+    // Per-shard cost estimates from each backend's own cost model
+    // (bucket-shaped cost scaled by occupancy), so a steal re-costs the
+    // batch at the thief's rate.
+    let ests = batch_ests_ns(cost_tables, &bucket, batch.items.len());
     let staged = StagedBatch {
+        origin: shard,
         bucket,
         pb,
         items: batch.items,
@@ -481,47 +673,77 @@ fn stage_batch(
         pack_started,
         pack_finished,
     };
-    // Blocks when the execute stage is PIPELINE_DEPTH batches behind
-    // (backpressure). On shutdown the execute stage is gone; fail the
-    // requests instead of dropping them silently.
-    if let Err(mpsc::SendError(staged)) = staged_tx.send(staged) {
-        for pending in staged.items {
-            let _ = pending
-                .reply
-                .send(Err(anyhow::anyhow!("service executor shut down")));
+    // Blocks while this shard's staged queue is at depth (backpressure).
+    // If every execute stage died, the push fails and the requests get
+    // error replies — the same guarantee the old per-shard sync_channel's
+    // SendError provided.
+    match queues.push(shard, staged, ests) {
+        Ok(()) => true,
+        Err(staged) => {
+            for pending in staged.items {
+                let _ = pending
+                    .reply
+                    .send(Err(anyhow::anyhow!("service executor shut down")));
+            }
+            false
         }
-        return false;
     }
-    true
 }
 
-/// Execute-stage half of an executor pair: run a staged batch on the
-/// engine, fan results out, recycle the packed buffer. `shard` is this
-/// executor's id (for the per-shard metrics split); `last_done` is the end
-/// of this executor's previous execution (None before the first).
+/// Execute-stage half of an executor pair: run a staged batch on this
+/// shard's backend, fan results out, recycle the packed buffer **to the
+/// batch's origin shard** (the pack stage that allocated it — stealing
+/// must not migrate buffers between pools). `shard` is this executor's id
+/// (for the per-shard metrics split), `stolen` whether the batch came off
+/// a peer's queue; `last_done` is the end of this executor's previous
+/// execution (None before the first).
 fn run_staged(
-    engine: &Engine,
+    backend: &mut dyn Backend,
     shard: usize,
+    stolen: bool,
     staged: StagedBatch,
     metrics: &Metrics,
     solutions: &mut Vec<Solution>,
-    recycle_tx: &mpsc::Sender<PackedBatch>,
+    recycle_txs: &[mpsc::Sender<PackedBatch>],
     last_done: &mut Option<Instant>,
 ) {
-    let StagedBatch { bucket, pb, items, oldest_wait, pack_started, pack_finished } = staged;
-    match engine.execute_packed_into(&bucket, &pb, solutions) {
+    let StagedBatch {
+        origin,
+        bucket,
+        pb,
+        items,
+        oldest_wait,
+        pack_started,
+        pack_finished,
+    } = staged;
+    let executed = backend.execute_raw(&bucket, &pb).and_then(|(sol, status, mut timing)| {
+        let t = Instant::now();
+        unpack_into(&sol, &status, pb.used, solutions)?;
+        let unpack_ns = t.elapsed().as_nanos() as u64;
+        timing.unpack_ns = unpack_ns;
+        timing.critical_path_ns += unpack_ns;
+        Ok(timing)
+    });
+    match executed {
         Ok(mut timing) => {
-            // Pack ran on the stage thread; only the part that was NOT
-            // hidden behind this executor's previous execution counts
-            // toward the critical path. On an idle service (nothing to
-            // overlap with) that is the whole pack, so overlap_ratio
-            // stays ~1 — the metric reports measured overlap, not an
-            // assumption.
-            let hidden_until = match *last_done {
-                Some(done) => done.max(pack_started),
-                None => pack_started,
+            // Pack ran on the origin shard's stage thread; only the part
+            // that was NOT hidden behind this executor's previous
+            // execution counts toward the critical path. On an idle
+            // service (nothing to overlap with) that is the whole pack,
+            // so overlap_ratio stays ~1 — the metric reports measured
+            // overlap, not an assumption. For a STOLEN batch this
+            // executor's timeline says nothing about the origin's pack
+            // interval, so the pack counts as fully exposed
+            // (conservative: never claim unmeasured overlap).
+            let exposed_pack = if stolen {
+                pack_finished.duration_since(pack_started)
+            } else {
+                let hidden_until = match *last_done {
+                    Some(done) => done.max(pack_started),
+                    None => pack_started,
+                };
+                pack_finished.saturating_duration_since(hidden_until)
             };
-            let exposed_pack = pack_finished.saturating_duration_since(hidden_until);
             timing.pack_ns =
                 pack_finished.duration_since(pack_started).as_nanos() as u64;
             timing.critical_path_ns += exposed_pack.as_nanos() as u64;
@@ -529,7 +751,16 @@ fn run_staged(
                 .iter()
                 .filter(|s| s.status == Status::Infeasible)
                 .count();
-            metrics.on_batch(shard, items.len(), bucket.batch, infeasible, oldest_wait, &timing);
+            metrics.on_batch(
+                shard,
+                origin,
+                stolen,
+                items.len(),
+                bucket.batch,
+                infeasible,
+                oldest_wait,
+                &timing,
+            );
             for (pending, sol) in items.into_iter().zip(solutions.iter()) {
                 let _ = pending.reply.send(Ok(*sol));
             }
@@ -542,5 +773,37 @@ fn run_staged(
         }
     }
     *last_done = Some(Instant::now());
-    let _ = recycle_tx.send(pb);
+    let _ = recycle_txs[origin].send(pb);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_spec_parsing() {
+        assert_eq!(BackendSpec::parse("engine").unwrap(), BackendSpec::Engine);
+        assert_eq!(BackendSpec::parse("pjrt").unwrap(), BackendSpec::Engine);
+        assert_eq!(BackendSpec::parse("cpu").unwrap(), BackendSpec::Cpu);
+        assert_eq!(
+            BackendSpec::parse("batch-cpu:4").unwrap(),
+            BackendSpec::BatchCpu { threads: 4 }
+        );
+        assert!(matches!(
+            BackendSpec::parse("batch-cpu").unwrap(),
+            BackendSpec::BatchCpu { threads } if threads >= 1
+        ));
+        assert!(BackendSpec::parse("gpu").is_err());
+        assert!(BackendSpec::parse("batch-cpu:x").is_err());
+        let list = BackendSpec::parse_list("cpu, batch-cpu:2,engine").unwrap();
+        assert_eq!(
+            list,
+            vec![
+                BackendSpec::Cpu,
+                BackendSpec::BatchCpu { threads: 2 },
+                BackendSpec::Engine
+            ]
+        );
+        assert!(BackendSpec::parse_list("cpu,bogus").is_err());
+    }
 }

@@ -51,17 +51,25 @@
 //! );
 //! ```
 //!
-//! For multi-device execution, [`runtime::ShardedEngine`] owns one engine
-//! per device behind a single stage loop: chunks are packed in order
-//! (keeping results bit-identical to serial execution for any shard
-//! count), dispatched to the shard with the shortest staged queue, and
-//! reassembled in input order; `solve_all` picks the chunk size from the
-//! compiled bucket inventory and shard count automatically.
+//! For multi-device execution, [`runtime::ShardedEngine`] owns one
+//! [`runtime::Backend`] per shard — PJRT engines, CPU stand-ins, multicore
+//! CPU batch solvers, or any mix (heterogeneous sharding) — behind a
+//! single stage loop: chunks are packed in order (keeping results
+//! bit-identical to serial execution for any shard count when backends
+//! share one numeric path), dispatched by weighted estimated finish time,
+//! rebalanced by work stealing (an idle shard takes the newest staged
+//! chunk from the most backlogged peer), and reassembled in input order;
+//! `solve_all` picks the chunk size from the compiled bucket inventory and
+//! shard count automatically, and the staged-queue depth is the
+//! [`runtime::PipelineDepth`] knob.
 //!
-//! The serving layer ([`coordinator::Service`]) uses the same design: each
-//! executor shard is a pack-stage/execute-stage thread pair fed by
-//! shortest-staged-queue dispatch, so packing batch k+1 overlaps executing
-//! batch k under live traffic and the load split is visible per shard.
+//! The serving layer ([`coordinator::Service`]) uses the same executor
+//! abstraction: each shard is a pack-stage/execute-stage thread pair
+//! around one backend, fed by weighted dispatch through the same
+//! work-stealing staged queues, so packing batch k+1 overlaps executing
+//! batch k under live traffic and the load split — including capacity
+//! weights and steal counts — is visible per shard. CPU-only backend
+//! mixes serve without artifacts at all.
 
 // Style lints that conflict with this codebase's idioms (index-heavy
 // numeric kernels, tuple-typed pipeline channels, many-argument packing

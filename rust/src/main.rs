@@ -25,10 +25,10 @@ use std::collections::HashMap;
 
 use batch_lp2d::bench::figures::{self, FigureCtx};
 use batch_lp2d::bench::imbalance;
-use batch_lp2d::coordinator::{Config, Service};
+use batch_lp2d::coordinator::{BackendSpec, Config, Service};
 use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::types::Status;
-use batch_lp2d::runtime::{Engine, Variant};
+use batch_lp2d::runtime::{Engine, PipelineDepth, Variant};
 use batch_lp2d::sim::{Backend, World, WorldParams};
 use batch_lp2d::solvers::batch_cpu::{self, Algo};
 use batch_lp2d::util::{Rng, Timer};
@@ -69,10 +69,13 @@ fn print_help() {
            solve    --batch 1024 --m 64 [--variant rgb|naive|simplex] [--seed S]\n\
                                         generate and solve one batch, print timing\n\
            serve    --requests 6000 [--rate 2000] [--max-wait-ms 2] [--shards 1]\n\
+                    [--depth 2] [--backends engine,cpu,batch-cpu:N]\n\
                                         run the coordinator under a Poisson trace\n\
+                                        (--backends mixes shard types; CPU-only\n\
+                                        mixes serve without artifacts)\n\
            crowd    --agents 512 --steps 100 [--backend engine|cpu]\n\
                                         crowd simulation (paper Sec. 5 application)\n\
-           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards [--fast]\n\
+           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards|depth [--fast]\n\
                                         regenerate the paper's figures as tables\n\
          \n\
          flags:\n\
@@ -183,10 +186,17 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let max_wait_ms = flag(flags, "max-wait-ms", 2u64);
     let seed = flag(flags, "seed", 7u64);
     let shards = flag(flags, "shards", 1usize);
+    let depth = flag(flags, "depth", 2usize);
+    let backends = match flags.get("backends") {
+        Some(list) => BackendSpec::parse_list(list)?,
+        None => Vec::new(),
+    };
 
     let config = Config {
         max_wait: std::time::Duration::from_millis(max_wait_ms),
         executors: shards.max(1),
+        backends,
+        depth: PipelineDepth::new(depth),
         ..Config::default()
     };
     let service = Service::start(artifact_dir(flags), config)?;
@@ -227,12 +237,17 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         snap.exec_p99_ns as f64 / 1e6
     );
     println!("exec memory fraction: {:.1}%", 100.0 * snap.memory_fraction());
+    println!("pipeline depth: {}  steals: {}", snap.pipeline_depth, snap.steals());
+    let names = service.shard_backends().to_vec();
     for (s, load) in snap.per_shard.iter().enumerate() {
         println!(
-            "shard {s}: {} batches  {} LPs  busy {:.3} ms",
+            "shard {s} [{}] w={:.1}: {} batches  {} LPs  busy {:.3} ms  steals {}",
+            names.get(s).copied().unwrap_or("?"),
+            load.weight,
             load.batches,
             load.solved,
-            load.busy_ns as f64 / 1e6
+            load.busy_ns as f64 / 1e6,
+            load.steals
         );
     }
     service.shutdown();
@@ -339,6 +354,18 @@ fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
                 2048,
                 64,
                 &[1, 2, 4],
+            )?,
+        );
+    }
+    if all || which == "depth" {
+        // fig_depth_sweep builds its own 2-engine sharded setup per depth.
+        emit(
+            "D (pipeline-depth sweep)",
+            figures::fig_depth_sweep(
+                std::path::Path::new(&artifact_dir(flags)),
+                2048,
+                64,
+                &[2, 3, 4],
             )?,
         );
     }

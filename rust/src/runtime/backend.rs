@@ -1,0 +1,442 @@
+//! The unified executor abstraction: every execution unit — a PJRT engine,
+//! the deterministic single-thread CPU stand-in, a multicore CPU batch
+//! solver — is a [`Backend`]. A backend executes packed batches into the
+//! kernels' raw wire output, advertises a relative **capacity weight**, and
+//! carries a **cost model** for dispatch decisions.
+//!
+//! [`ShardedEngine`](crate::runtime::shard::ShardedEngine) and the
+//! coordinator's executor shards both drive `Backend`s, which is what lets
+//! one deployment mix engine shards and CPU shards (heterogeneous
+//! sharding — Gurung & Ray's CPU-and-GPU-as-peer-batch-solvers scheme,
+//! arXiv:1609.08114/1802.08557, applied to our executor layer).
+//!
+//! # Determinism contract
+//!
+//! `execute_raw` must be deterministic in `(bucket, packed bytes)`: the
+//! sharded driver's bit-identical guarantee assumes a chunk's result does
+//! not depend on which shard ran it or when. [`CpuShardExecutor`] and
+//! [`BatchCpuBackend`] share one slot-solving routine, so any mix of the
+//! two is bitwise equivalent to either alone. Mixing *numeric paths*
+//! (f32 PJRT kernels with the f64 CPU solvers) weakens the guarantee to
+//! status + tolerance agreement — see the shard module docs.
+
+use std::collections::HashMap;
+
+use crate::lp::types::{HalfPlane, Problem, Status};
+use crate::runtime::engine::{Engine, ExecTiming};
+use crate::runtime::manifest::{Bucket, Manifest, Variant};
+use crate::runtime::pack::PackedBatch;
+use crate::solvers::seidel;
+use crate::util::Timer;
+
+/// Raw device output of one executed batch: flat solution/status vectors in
+/// the kernels' wire format, plus the device-side timing split.
+pub type RawExec = (Vec<f32>, Vec<i32>, ExecTiming);
+
+/// Nominal busy-ns per packed constraint row on a weight-1.0 backend — the
+/// scale of the default cost model. Only *ratios* matter for dispatch, so
+/// the absolute value is uncalibrated on purpose.
+pub const NOMINAL_ROW_NS: u64 = 40;
+
+/// Relative capacity weight of a PJRT engine shard. The device executes a
+/// whole batch in lockstep, so it is worth several CPU workers; calibrate
+/// from measured throughput (`BENCH_pipeline.json`) when it matters.
+pub const ENGINE_CAPACITY_WEIGHT: f64 = 8.0;
+
+/// The default cost model: estimated busy-ns to chew through `rows` packed
+/// constraint rows on a backend of the given capacity weight.
+pub fn cost_model_ns(rows: usize, weight: f64) -> u64 {
+    ((rows as u64).saturating_mul(NOMINAL_ROW_NS) as f64 / weight.max(1e-9)) as u64
+}
+
+/// A shard set's cost models evaluated over a variant's bucket inventory:
+/// `table[s][(batch, m)]` is shard `s`'s estimated busy-ns for one full
+/// bucket-shaped batch ([`Backend::cost_ns`]). Built once per run/service
+/// — the backends move to their shard threads afterwards, where the
+/// dispatch loops can no longer reach them.
+pub fn build_cost_table<B: Backend>(
+    backends: &[B],
+    manifest: &Manifest,
+    variant: Variant,
+) -> Vec<HashMap<(usize, usize), u64>> {
+    backends
+        .iter()
+        .map(|b| {
+            manifest
+                .of_variant(variant)
+                .into_iter()
+                .map(|bk| ((bk.batch, bk.m), b.cost_ns(bk)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-shard cost estimates for one batch of `used` problems in `bucket`,
+/// against a prebuilt [`build_cost_table`]: the bucket-shaped cost scaled
+/// by slot occupancy (the CPU backends skip padding slots). Unknown
+/// bucket shapes fall back to a huge sentinel so dispatch shuns them
+/// rather than panicking.
+pub fn batch_ests_ns(
+    tables: &[HashMap<(usize, usize), u64>],
+    bucket: &Bucket,
+    used: usize,
+) -> Vec<u64> {
+    let key = (bucket.batch, bucket.m);
+    tables
+        .iter()
+        .map(|t| {
+            let full = t.get(&key).copied().unwrap_or(u64::MAX / 2);
+            scale_cost_ns(full, used, bucket.batch)
+        })
+        .collect()
+}
+
+/// Scale a bucket-shaped cost estimate to a batch's slot occupancy.
+pub fn scale_cost_ns(full_ns: u64, used: usize, batch: usize) -> u64 {
+    (full_ns as u128 * used as u128 / batch.max(1) as u128) as u64
+}
+
+/// One execution unit behind the sharded/coordinator executor layers.
+///
+/// Implementations run on a dedicated shard thread and must keep any
+/// non-`Sync` device state (PJRT handles) confined to `self`. Decoding raw
+/// outputs back into [`Solution`](crate::lp::types::Solution)s is the
+/// caller's job.
+pub trait Backend: Send {
+    /// Short backend label for diagnostics and load-split reporting.
+    fn name(&self) -> &'static str {
+        "backend"
+    }
+
+    /// Relative throughput weight (1.0 = one CPU worker solving packed
+    /// slots serially). Weighted dispatch sends proportionally more work to
+    /// heavier backends.
+    fn capacity_weight(&self) -> f64 {
+        1.0
+    }
+
+    /// Cost model: estimated busy-ns to execute one `bucket`-shaped batch
+    /// on this backend. The sharded driver evaluates this over the bucket
+    /// inventory at the start of each run and dispatches by estimated
+    /// finish time, so overriding it changes where chunks land. The
+    /// default scales the shape's constraint rows by [`NOMINAL_ROW_NS`]
+    /// and divides by the capacity weight — enough for relative dispatch
+    /// decisions; backends with real calibration can override.
+    fn cost_ns(&self, bucket: &Bucket) -> u64 {
+        cost_model_ns(bucket.batch * bucket.m, self.capacity_weight())
+    }
+
+    /// Warm whatever caches a bucket needs (e.g. XLA compilation) before
+    /// traffic hits it. Default: nothing to warm.
+    fn prepare(&mut self, bucket: &Bucket) -> anyhow::Result<()> {
+        let _ = bucket;
+        Ok(())
+    }
+
+    /// Execute one packed batch against its bucket. Must be deterministic
+    /// in `(bucket, pb)` — see the module docs.
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec>;
+}
+
+impl<B: Backend + ?Sized> Backend for Box<B> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn capacity_weight(&self) -> f64 {
+        (**self).capacity_weight()
+    }
+
+    fn cost_ns(&self, bucket: &Bucket) -> u64 {
+        (**self).cost_ns(bucket)
+    }
+
+    fn prepare(&mut self, bucket: &Bucket) -> anyhow::Result<()> {
+        (**self).prepare(bucket)
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        (**self).execute_raw(bucket, pb)
+    }
+}
+
+impl Backend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capacity_weight(&self) -> f64 {
+        ENGINE_CAPACITY_WEIGHT
+    }
+
+    fn prepare(&mut self, bucket: &Bucket) -> anyhow::Result<()> {
+        self.load(bucket)
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        Engine::execute_packed_raw(self, bucket, pb)
+    }
+}
+
+fn ensure_shape(bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        pb.batch == bucket.batch && pb.m == bucket.m,
+        "packed shape ({}, {}) does not match bucket ({}, {})",
+        pb.batch,
+        pb.m,
+        bucket.batch,
+        bucket.m
+    );
+    Ok(())
+}
+
+/// Reconstruct and solve packed slots `start..start + status.len()` with
+/// Seidel **in packed order** (the pack-time shuffle already randomized the
+/// constraints), encoding results in the kernels' output wire format.
+/// Slots are independent, so splitting a batch across ranges — however it
+/// is split — produces bytes identical to one serial pass: this one
+/// routine is what keeps [`CpuShardExecutor`] and [`BatchCpuBackend`]
+/// bitwise interchangeable.
+fn solve_packed_range(pb: &PackedBatch, start: usize, sol: &mut [f32], status: &mut [i32]) {
+    let mut cons: Vec<HalfPlane> = Vec::with_capacity(pb.m);
+    for i in 0..status.len() {
+        let slot = start + i;
+        let row = slot * pb.m * 4;
+        cons.clear();
+        for k in 0..pb.m {
+            let off = row + k * 4;
+            // Valid rows are contiguous from slot 0 (pack layout).
+            if pb.lines[off + 3] < 0.5 {
+                break;
+            }
+            cons.push(HalfPlane::new(
+                pb.lines[off] as f64,
+                pb.lines[off + 1] as f64,
+                pb.lines[off + 2] as f64,
+            ));
+        }
+        let p = Problem::new(
+            std::mem::take(&mut cons),
+            [pb.obj[slot * 2] as f64, pb.obj[slot * 2 + 1] as f64],
+        );
+        let s = seidel::solve_ordered(&p);
+        cons = p.constraints;
+        match s.status {
+            Status::Optimal => {
+                sol[i * 2] = s.point[0] as f32;
+                sol[i * 2 + 1] = s.point[1] as f32;
+                status[i] = 0;
+            }
+            Status::Infeasible => status[i] = 1,
+        }
+    }
+}
+
+/// Deterministic host-side stand-in device: solves each packed slot with
+/// Seidel on one thread. Because the result depends only on the packed
+/// bytes, it is shard-, chunking-, and steal-invariant — which is what
+/// lets the whole executor layer be exercised end to end under the offline
+/// `xla` stub and benchmarked on hosts without a PJRT backend.
+pub struct CpuShardExecutor;
+
+impl Backend for CpuShardExecutor {
+    fn name(&self) -> &'static str {
+        "cpu-seidel"
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        ensure_shape(bucket, pb)?;
+        let t = Timer::start();
+        let mut sol = vec![0.0f32; pb.used * 2];
+        let mut status = vec![0i32; pb.used];
+        solve_packed_range(pb, 0, &mut sol, &mut status);
+        let execute_ns = t.elapsed_ns();
+        let timing = ExecTiming {
+            execute_ns,
+            critical_path_ns: execute_ns,
+            ..ExecTiming::default()
+        };
+        Ok((sol, status, timing))
+    }
+}
+
+/// Multicore CPU batch backend: the "mGLPK" scheme of
+/// [`crate::solvers::batch_cpu`] applied at the executor layer — the batch
+/// is split into contiguous slot ranges, one scoped thread per worker, and
+/// each worker runs [`solve_packed_range`] over its range. Output bytes
+/// are identical to [`CpuShardExecutor`] for any thread count (slots are
+/// independent), so heterogeneous CPU deployments keep the bit-identical
+/// guarantee.
+pub struct BatchCpuBackend {
+    threads: usize,
+}
+
+impl BatchCpuBackend {
+    pub fn new(threads: usize) -> BatchCpuBackend {
+        BatchCpuBackend { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for BatchCpuBackend {
+    fn default() -> Self {
+        BatchCpuBackend::new(crate::solvers::batch_cpu::default_threads())
+    }
+}
+
+impl Backend for BatchCpuBackend {
+    fn name(&self) -> &'static str {
+        "batch-cpu"
+    }
+
+    fn capacity_weight(&self) -> f64 {
+        self.threads as f64
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        ensure_shape(bucket, pb)?;
+        let t = Timer::start();
+        let used = pb.used;
+        let mut sol = vec![0.0f32; used * 2];
+        let mut status = vec![0i32; used];
+        let threads = self.threads.min(used.max(1));
+        if threads <= 1 {
+            solve_packed_range(pb, 0, &mut sol, &mut status);
+        } else {
+            let chunk = used.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (w, (sol_c, status_c)) in sol
+                    .chunks_mut(chunk * 2)
+                    .zip(status.chunks_mut(chunk))
+                    .enumerate()
+                {
+                    scope.spawn(move || solve_packed_range(pb, w * chunk, sol_c, status_c));
+                }
+            });
+        }
+        let execute_ns = t.elapsed_ns();
+        let timing = ExecTiming {
+            execute_ns,
+            critical_path_ns: execute_ns,
+            ..ExecTiming::default()
+        };
+        Ok((sol, status, timing))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::lp::brute;
+    use crate::lp::validate::{agree, Tolerance};
+    use crate::runtime::manifest::Variant;
+    use crate::runtime::pack;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn bucket(batch: usize, m: usize) -> Bucket {
+        Bucket {
+            variant: Variant::Rgb,
+            batch,
+            m,
+            block_b: batch,
+            chunk: m,
+            path: PathBuf::from("test"),
+        }
+    }
+
+    fn packed(n: usize, m_max: usize, batch: usize, m: usize, seed: u64) -> PackedBatch {
+        let mut rng = Rng::new(seed);
+        let problems: Vec<Problem> = (0..n)
+            .map(|_| {
+                let pm = 1 + (rng.next_u64() as usize) % m_max;
+                gen::feasible(&mut rng, pm.max(1))
+            })
+            .collect();
+        let mut srng = Rng::new(seed ^ 0xABCD);
+        pack::pack(&problems, batch, m, Some(&mut srng)).unwrap()
+    }
+
+    #[test]
+    fn batch_cpu_matches_cpu_shard_executor_bitwise() {
+        let b = bucket(64, 16);
+        let pb = packed(50, 14, 64, 16, 7);
+        let (want_sol, want_status, _) =
+            CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+        for threads in [1usize, 2, 3, 7, 64] {
+            let (sol, status, _) =
+                BatchCpuBackend::new(threads).execute_raw(&b, &pb).unwrap();
+            let same = sol.iter().zip(&want_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+            assert!(same, "threads={threads} diverged from the serial slot solve");
+            assert_eq!(status, want_status, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cpu_backends_solve_correctly() {
+        let mut rng = Rng::new(11);
+        let problems: Vec<Problem> = (0..40).map(|_| gen::feasible(&mut rng, 12)).collect();
+        let mut srng = Rng::new(3);
+        let pb = pack::pack(&problems, 64, 16, Some(&mut srng)).unwrap();
+        let b = bucket(64, 16);
+        let (sol, status, timing) = BatchCpuBackend::new(4).execute_raw(&b, &pb).unwrap();
+        assert!(timing.execute_ns > 0);
+        let decoded = pack::unpack(&sol, &status, pb.used).unwrap();
+        for (p, s) in problems.iter().zip(&decoded) {
+            let want = brute::solve(p);
+            assert_eq!(s.status, want.status);
+            assert!(agree(p, s, &want, Tolerance::default()), "{s:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let pb = packed(4, 6, 8, 8, 5);
+        assert!(CpuShardExecutor.execute_raw(&bucket(8, 16), &pb).is_err());
+        assert!(BatchCpuBackend::new(2).execute_raw(&bucket(16, 8), &pb).is_err());
+    }
+
+    #[test]
+    fn cost_model_scales_with_rows_and_weight() {
+        assert!(cost_model_ns(1000, 1.0) > cost_model_ns(100, 1.0));
+        assert!(cost_model_ns(1000, 8.0) < cost_model_ns(1000, 1.0));
+        // Degenerate weight must not divide by zero.
+        assert!(cost_model_ns(10, 0.0) > 0);
+        let b = bucket(128, 64);
+        assert!(BatchCpuBackend::new(4).cost_ns(&b) < CpuShardExecutor.cost_ns(&b));
+    }
+
+    #[test]
+    fn cost_table_and_occupancy_scaling() {
+        let m = Manifest::cpu_fallback();
+        let backends: Vec<Box<dyn Backend>> =
+            vec![Box::new(CpuShardExecutor), Box::new(BatchCpuBackend::new(4))];
+        let table = build_cost_table(&backends, &m, Variant::Rgb);
+        assert_eq!(table.len(), 2);
+        let b = m.fit(Variant::Rgb, 32, 16).unwrap();
+        let ests = batch_ests_ns(&table, b, 16);
+        assert!(ests[1] < ests[0], "the 4-thread backend must look cheaper");
+        // Half the slots used -> half the full-bucket estimate.
+        let full = batch_ests_ns(&table, b, b.batch);
+        assert_eq!(ests[0], full[0] * 16 / b.batch as u64);
+        assert_eq!(scale_cost_ns(1000, 5, 10), 500);
+        // Unknown shapes fall back to the shun-me sentinel.
+        let alien = bucket(7, 7);
+        let alien_ests = batch_ests_ns(&table, &alien, 7);
+        assert!(alien_ests[0] > ests[0]);
+    }
+
+    #[test]
+    fn boxed_backends_delegate() {
+        let boxed: Box<dyn Backend> = Box::new(BatchCpuBackend::new(3));
+        assert_eq!(boxed.name(), "batch-cpu");
+        assert!((boxed.capacity_weight() - 3.0).abs() < 1e-12);
+        let boxed: Box<dyn Backend> = Box::new(CpuShardExecutor);
+        assert_eq!(boxed.name(), "cpu-seidel");
+        assert!((boxed.capacity_weight() - 1.0).abs() < 1e-12);
+    }
+}

@@ -18,7 +18,7 @@ use std::path::Path;
 use crate::lp::types::{Problem, Solution};
 use crate::runtime::manifest::{Bucket, Manifest, Variant};
 use crate::runtime::pack::{pack_into, unpack, unpack_into, PackedBatch};
-use crate::runtime::stream::{run_pipelined, StageWorker};
+use crate::runtime::stream::{run_pipelined, PipelineDepth, StageWorker};
 use crate::util::{Rng, Timer};
 
 /// Timing split of one executed batch (or a whole stream), nanoseconds.
@@ -84,9 +84,6 @@ struct LiteralPair {
     obj: xla::Literal,
 }
 
-/// How many chunks the stream path stages ahead of the executor.
-const STREAM_DEPTH: usize = 2;
-
 /// The engine: a PJRT CPU client plus a compile-once executable cache.
 ///
 /// # Thread model
@@ -110,7 +107,7 @@ pub struct Engine {
     manifest: Manifest,
     executables: RefCell<HashMap<Key, xla::PjRtLoadedExecutable>>,
     /// Rotating pool of packed-batch buffers. Serial `solve` uses one;
-    /// `solve_stream` checks out `STREAM_DEPTH + 1` so pack of chunk k+1
+    /// `solve_stream` checks out `depth + 1` so pack of chunk k+1
     /// proceeds while chunk k's buffer is still being transferred.
     /// Steady-state solve allocates nothing.
     scratch: RefCell<Vec<PackedBatch>>,
@@ -118,6 +115,9 @@ pub struct Engine {
     /// multi-MB host staging buffers on every call). A small pool per shape
     /// for the same reason as `scratch`.
     literals: RefCell<HashMap<(usize, usize), Vec<LiteralPair>>>,
+    /// How many chunks `solve_stream` stages ahead of the executor (the
+    /// pipeline ring depth; 2 = classic double buffering).
+    stream_depth: std::cell::Cell<usize>,
 }
 
 // SAFETY: see the struct docs — all Rc/raw-pointer state is confined to the
@@ -136,11 +136,29 @@ impl Engine {
             executables: RefCell::new(HashMap::new()),
             scratch: RefCell::new(vec![PackedBatch::empty()]),
             literals: RefCell::new(HashMap::new()),
+            stream_depth: std::cell::Cell::new(PipelineDepth::default().get()),
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Set the stream pipeline depth ([`PipelineDepth`]): how many chunks
+    /// the stage thread packs ahead of device execution, and how many
+    /// packed buffers the ring rotates through.
+    pub fn set_pipeline_depth(&self, depth: PipelineDepth) {
+        self.stream_depth.set(depth.get());
+    }
+
+    pub fn pipeline_depth(&self) -> usize {
+        self.stream_depth.get()
+    }
+
+    /// Builder form of [`Engine::set_pipeline_depth`].
+    pub fn with_pipeline_depth(self, depth: PipelineDepth) -> Engine {
+        self.set_pipeline_depth(depth);
+        self
     }
 
     pub fn platform(&self) -> String {
@@ -412,14 +430,16 @@ impl Engine {
         Ok(timing)
     }
 
-    /// Solve a stream of problem chunks through the double-buffered
-    /// pipeline: a dedicated stage thread packs chunk k+1 (and decodes
-    /// chunk k-1) while this thread runs PJRT on chunk k.
+    /// Solve a stream of problem chunks through the depth-N ring pipeline:
+    /// a dedicated stage thread packs chunks k+1..k+depth (and decodes
+    /// chunk k-1) while this thread runs PJRT on chunk k. The depth is the
+    /// engine's configured [`PipelineDepth`] (default 2 = classic double
+    /// buffering; see [`Engine::set_pipeline_depth`]).
     ///
     /// Results are bit-identical to calling [`Engine::solve`] once per
-    /// chunk with the same `rng`: chunks are packed in order by a single
-    /// stage thread, so shuffle streams are consumed identically. The
-    /// returned [`ExecTiming`] sums the per-chunk stages;
+    /// chunk with the same `rng`, whatever the depth: chunks are packed in
+    /// order by a single stage thread, so shuffle streams are consumed
+    /// identically. The returned [`ExecTiming`] sums the per-chunk stages;
     /// `critical_path_ns` is the stream's wall time, so
     /// `overlap_ratio() > 1` demonstrates the pipelining win.
     pub fn solve_stream<'p>(
@@ -430,8 +450,9 @@ impl Engine {
     ) -> anyhow::Result<(Vec<Vec<Solution>>, ExecTiming)> {
         // Check out the rotation pool for the stage thread. PJRT handles
         // (literals, executables) stay on this thread; see the struct docs.
-        let mut pool = Vec::with_capacity(STREAM_DEPTH + 1);
-        for _ in 0..STREAM_DEPTH + 1 {
+        let depth = self.stream_depth.get();
+        let mut pool = Vec::with_capacity(depth + 1);
+        for _ in 0..depth + 1 {
             pool.push(self.take_scratch());
         }
         let worker = StreamWorker {
@@ -452,7 +473,7 @@ impl Engine {
 
         let mut timing = ExecTiming::default();
         let (result, worker, stats) =
-            run_pipelined(chunks, worker, STREAM_DEPTH, |_, (pb, bucket): (PackedBatch, Bucket)| {
+            run_pipelined(chunks, worker, depth, |_, (pb, bucket): (PackedBatch, Bucket)| {
                 let (sol, status, t) = self.execute_packed_raw(&bucket, &pb)?;
                 timing.transfer_ns += t.transfer_ns;
                 timing.execute_ns += t.execute_ns;

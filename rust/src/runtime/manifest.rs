@@ -126,6 +126,23 @@ impl Manifest {
     pub fn max_m(&self, v: Variant) -> Option<usize> {
         self.buckets.iter().filter(|b| b.variant == v).map(|b| b.m).max()
     }
+
+    /// A synthetic bucket inventory for engine-free deployments: the CPU
+    /// backends solve straight from packed bytes and never open bucket
+    /// files, so all the router/batcher/chunk-policy need is a shape
+    /// inventory. Size classes 16/64 with batch inventories {32, 256} and
+    /// {32, 256, 1024} cover the serving examples' traffic (m up to 64)
+    /// and give the chunk policy real choices.
+    pub fn cpu_fallback() -> Manifest {
+        let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                    rgb\t32\t16\t32\t16\tcpu\n\
+                    rgb\t256\t16\t32\t16\tcpu\n\
+                    rgb\t32\t64\t32\t64\tcpu\n\
+                    rgb\t256\t64\t32\t64\tcpu\n\
+                    rgb\t1024\t64\t32\t64\tcpu\n";
+        Self::parse(text, PathBuf::from("cpu-fallback"))
+            .expect("static CPU-fallback manifest parses")
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +188,15 @@ mod tests {
             assert_eq!(Variant::parse(v.as_str()).unwrap(), v);
         }
         assert!(Variant::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn cpu_fallback_covers_serving_traffic() {
+        let m = Manifest::cpu_fallback();
+        assert_eq!(m.max_m(Variant::Rgb), Some(64));
+        assert!(m.fit(Variant::Rgb, 1, 6).is_some());
+        assert!(m.fit(Variant::Rgb, 1000, 64).is_some());
+        assert!(m.fit(Variant::Rgb, 1, 65).is_none());
     }
 
     #[test]

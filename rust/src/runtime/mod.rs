@@ -1,29 +1,46 @@
-//! Runtime layer: the bridge from the Rust coordinator to the AOT-compiled
-//! XLA modules (PJRT CPU client; see /opt/xla-example for the pattern).
+//! Runtime layer: the bridge from the Rust coordinator to the execution
+//! backends — AOT-compiled XLA modules on PJRT, and the CPU batch solvers
+//! standing in as peer devices.
 //!
-//! * [`manifest`] -- which (variant, batch, m) buckets exist on disk.
+//! * [`manifest`] -- which (variant, batch, m) buckets exist on disk (plus
+//!   the synthetic CPU-fallback inventory for engine-free deployments).
 //! * [`pack`]     -- problems <-> the kernels' packed wire format.
-//! * [`stream`]   -- double-buffered stage/execute pipeline driver.
+//! * [`stream`]   -- depth-N ring pipeline driver and [`PipelineDepth`],
+//!   the staging-depth knob every executor layer shares.
+//! * [`backend`]  -- the [`Backend`] trait: one execution unit (PJRT
+//!   engine, single-thread CPU stand-in, multicore [`BatchCpuBackend`])
+//!   with a capacity weight and a cost model for weighted dispatch.
+//! * [`steal`]    -- work-stealing staged queues: bounded per-shard deques
+//!   where an idle shard steals the newest chunk from the most backlogged
+//!   peer.
 //! * [`engine`]   -- compile-once executable cache + timed execution,
-//!   serial (`solve`) and pipelined (`solve_stream`).
-//! * [`shard`]    -- multi-device sharded execution: one stage loop
-//!   feeding N engines with shortest-staged-queue dispatch and the
-//!   batch-size-aware chunk policy.
+//!   serial (`solve`) and pipelined (`solve_stream`, depth-N).
+//! * [`shard`]    -- heterogeneous sharded execution: one stage loop
+//!   feeding N backends through the steal queues, weighted
+//!   estimated-finish dispatch, and the batch-size-aware chunk policy.
+//!   Results reassemble in input order; with backends sharing one numeric
+//!   path they are bit-identical to serial execution for any shard count,
+//!   depth, or steal interleaving.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod pack;
 pub mod shard;
+pub mod steal;
 pub mod stream;
 
+pub use backend::{
+    cost_model_ns, Backend, BatchCpuBackend, CpuShardExecutor, RawExec, ENGINE_CAPACITY_WEIGHT,
+};
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
 pub use pack::{pack, pack_into, pack_into_indexed, unpack, unpack_into, PackedBatch};
 pub use shard::{
-    pick_chunk_size, plan_chunk_size, CpuShardExecutor, ShardExecutor, ShardReport,
-    ShardStats, ShardedEngine,
+    pick_chunk_size, plan_chunk_size, ShardExecutor, ShardReport, ShardStats, ShardedEngine,
 };
-pub use stream::{run_pipelined, PipelineStats, StageWorker};
+pub use steal::{CloseGuard, Popped, PopperGuard, StealQueues};
+pub use stream::{run_pipelined, PipelineDepth, PipelineStats, StageWorker};
 
 /// Locate the artifact directory: `$BATCH_LP2D_ARTIFACTS`, then
 /// `./artifacts`, then `<repo>/artifacts` (compile-time path). Examples and

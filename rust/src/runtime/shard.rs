@@ -1,175 +1,101 @@
-//! Multi-device sharded execution: one stage loop feeding N engines.
+//! Heterogeneous sharded execution: one stage loop feeding N [`Backend`]s
+//! through work-stealing staged queues.
 //!
 //! [`Engine::solve_stream`] overlaps host staging with one device;
 //! throughput is still capped by a single device's execution rate. This
-//! module owns **N executors** ("shards") and keeps them all fed from a
+//! module owns **N backends** ("shards") — PJRT engines, CPU stand-ins,
+//! multicore CPU batch solvers, or any mix — and keeps them all fed from a
 //! single packing loop, so packing chunk k for shard i overlaps execution
 //! of earlier chunks on shards j != i.
 //!
 //! # Ownership / thread model
 //!
 //! ```text
-//!   caller thread (stage loop)           shard threads (scoped)
-//!   ─────────────────────────            ─────────────────────
-//!   fit bucket, pack chunk k ──sync_channel(depth 2, per shard)──▶ shard s:
-//!   pick s = argmin staged-queue                                   execute_raw
-//!   decode finished chunks    ◀──────── completion channel ─────── (device)
-//!   reassemble in input order
+//!   caller thread (stage loop)             shard threads (scoped)
+//!   ─────────────────────────              ─────────────────────
+//!   fit bucket, pack chunk k ──StealQueues(depth N per shard)──▶ shard s:
+//!   push_balanced (weighted                 pop own queue, or     execute_raw
+//!     estimated finish)                     steal newest from     (backend)
+//!   decode finished chunks    ◀── completion channel ──────────── most-backlogged
+//!   reassemble in input order                                     peer
 //! ```
 //!
 //! * The **stage loop runs on the caller thread** and is the only consumer
 //!   of the RNG: chunks are packed strictly in submission order, so shuffle
-//!   streams are consumed exactly as a serial loop would consume them —
-//!   results are bit-identical to single-engine serial execution whatever
-//!   the shard count or dispatch interleaving.
-//! * Each **shard executor lives on its own scoped thread** for the
+//!   streams are consumed exactly as a serial loop would consume them.
+//! * Each **shard backend lives on its own scoped thread** for the
 //!   duration of a call. `Engine` is `Send` but not `Sync` (its PJRT
-//!   handles must stay on one thread), so each shard owns a whole engine —
-//!   its own client, executable cache, and literal pools — and only plain
-//!   host buffers ([`PackedBatch`]es, raw output vectors) cross the
-//!   channels.
-//! * **Dispatch is shortest-staged-queue**: a packed chunk goes to the
-//!   shard with the fewest chunks dispatched-but-not-completed (ties break
-//!   to the lowest shard index). The per-shard channel is bounded at
-//!   [`SHARD_QUEUE_DEPTH`], which doubles as backpressure when every shard
-//!   is saturated.
+//!   handles must stay on one thread), so each shard owns a whole backend —
+//!   and only plain host buffers ([`PackedBatch`]es, raw output vectors)
+//!   cross the queues.
+//! * **Dispatch is weighted estimated-finish**: each backend's cost model
+//!   ([`Backend::cost_ns`]) is evaluated over the bucket inventory up
+//!   front, and a packed chunk goes to the shard minimizing
+//!   `pending_estimate + chunk_cost_on_that_shard` (ties to the shorter
+//!   queue, then the lowest shard index), so heavier backends draw
+//!   proportionally more work. Each shard's staged queue is bounded at
+//!   the configured [`PipelineDepth`], which doubles as backpressure when
+//!   every shard is saturated.
+//! * **Work stealing**: a shard whose queue runs dry steals the *newest*
+//!   staged chunk from the most backlogged peer
+//!   ([`crate::runtime::steal::StealQueues`]), so a drained shard never
+//!   idles while a backlogged one holds staged work. Steals are counted
+//!   per shard in [`ShardStats::steals`].
 //! * Packed-buffer rotation: buffers cycle caller -> shard -> caller
 //!   through the completion channel, so the steady state allocates nothing
 //!   beyond the raw output vectors.
 //!
+//! # Determinism
+//!
+//! Results are reassembled in input order by chunk index, and every
+//! backend must be deterministic in the packed bytes (the [`Backend`]
+//! contract) — so dispatch choices and steals cannot change results. With
+//! backends sharing one numeric path (any mix of [`CpuShardExecutor`] and
+//! [`BatchCpuBackend`]; or engines only), results are **bit-identical** to
+//! a serial single-executor loop over the same chunks and seed, whatever
+//! the shard count, pipeline depth, or steal interleaving (property-tested
+//! in `tests/prop_coordinator.rs`). Mixing numeric paths — f32 PJRT
+//! kernels alongside f64 CPU solvers — keeps ordering and determinism *per
+//! run configuration* but weakens cross-backend equivalence to status +
+//! tolerance agreement.
+//!
 //! # How real multi-GPU PJRT slots in
 //!
 //! Under the offline `vendor/xla` stub, `ShardedEngine::new` fails exactly
-//! like `Engine::new` does (no PJRT backend), and [`CpuShardExecutor`]
-//! stands in as a deterministic host-side device so the whole dispatch /
+//! like `Engine::new` does (no PJRT backend), and the CPU backends stand in
+//! as deterministic host-side devices so the whole dispatch / stealing /
 //! reassembly layer stays testable. When the real bindings land, each
-//! shard's `Engine` should be constructed against a distinct
-//! `PjRtClient` device ordinal (one client per GPU); nothing in this
-//! module changes — the executor trait already confines every device
-//! handle to its shard thread, which is the same isolation a per-GPU
-//! context needs.
+//! shard's `Engine` should be constructed against a distinct `PjRtClient`
+//! device ordinal (one client per GPU); nothing in this module changes —
+//! the `Backend` trait already confines every device handle to its shard
+//! thread.
 
 use std::path::Path;
 use std::sync::mpsc;
 
-use crate::lp::types::{HalfPlane, Problem, Solution, Status};
+use crate::lp::types::{Problem, Solution};
+use crate::runtime::backend::{batch_ests_ns, build_cost_table, Backend, RawExec};
 use crate::runtime::engine::{Engine, ExecTiming};
 use crate::runtime::manifest::{Bucket, Manifest, Variant};
 use crate::runtime::pack::{pack_into, pack_into_indexed, unpack, PackedBatch};
-use crate::solvers::seidel;
+use crate::runtime::steal::StealQueues;
+use crate::runtime::stream::PipelineDepth;
 use crate::util::{Rng, Timer};
 
-/// Staged chunks a shard may hold before the stage loop's send blocks
-/// (2 = double buffering per shard, mirroring the engine's stream depth).
-pub const SHARD_QUEUE_DEPTH: usize = 2;
-
-/// Raw device output of one executed batch: flat solution/status vectors in
-/// the kernels' wire format, plus the device-side timing split.
-pub type RawExec = (Vec<f32>, Vec<i32>, ExecTiming);
-
-/// One shard's device half: executes packed batches, returns raw outputs.
-///
-/// Implementations run on a dedicated shard thread and must keep any
-/// non-`Sync` device state (PJRT handles) confined to `self`. Decoding raw
-/// outputs back into [`Solution`]s is the stage loop's job.
-pub trait ShardExecutor: Send {
-    /// Short backend label for diagnostics.
-    fn backend(&self) -> &'static str {
-        "shard"
-    }
-
-    /// Execute one packed batch against its bucket.
-    ///
-    /// Must be deterministic in `(bucket, pb)`: the sharded driver's
-    /// bit-identical guarantee assumes a chunk's result does not depend on
-    /// which shard ran it or when.
-    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec>;
-}
-
-impl ShardExecutor for Engine {
-    fn backend(&self) -> &'static str {
-        "pjrt"
-    }
-
-    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
-        Engine::execute_packed_raw(self, bucket, pb)
-    }
-}
-
-/// Deterministic host-side stand-in device: reconstructs each packed slot
-/// and solves it with Seidel **in packed order** (the pack-time shuffle
-/// already randomized the constraints), encoding results in the kernels'
-/// output wire format. Because the result depends only on the packed
-/// bytes, it is shard- and chunking-invariant — which is what lets the
-/// sharded driver be exercised end to end under the offline `xla` stub and
-/// benchmarked on hosts without a PJRT backend.
-pub struct CpuShardExecutor;
-
-impl ShardExecutor for CpuShardExecutor {
-    fn backend(&self) -> &'static str {
-        "cpu-seidel"
-    }
-
-    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
-        anyhow::ensure!(
-            pb.batch == bucket.batch && pb.m == bucket.m,
-            "packed shape ({}, {}) does not match bucket ({}, {})",
-            pb.batch,
-            pb.m,
-            bucket.batch,
-            bucket.m
-        );
-        let t = Timer::start();
-        let mut sol = vec![0.0f32; pb.used * 2];
-        let mut status = vec![0i32; pb.used];
-        let mut cons: Vec<HalfPlane> = Vec::with_capacity(pb.m);
-        for i in 0..pb.used {
-            let row = i * pb.m * 4;
-            cons.clear();
-            for k in 0..pb.m {
-                let off = row + k * 4;
-                // Valid rows are contiguous from slot 0 (pack layout).
-                if pb.lines[off + 3] < 0.5 {
-                    break;
-                }
-                cons.push(HalfPlane::new(
-                    pb.lines[off] as f64,
-                    pb.lines[off + 1] as f64,
-                    pb.lines[off + 2] as f64,
-                ));
-            }
-            let p = Problem::new(
-                std::mem::take(&mut cons),
-                [pb.obj[i * 2] as f64, pb.obj[i * 2 + 1] as f64],
-            );
-            let s = seidel::solve_ordered(&p);
-            cons = p.constraints;
-            match s.status {
-                Status::Optimal => {
-                    sol[i * 2] = s.point[0] as f32;
-                    sol[i * 2 + 1] = s.point[1] as f32;
-                    status[i] = 0;
-                }
-                Status::Infeasible => status[i] = 1,
-            }
-        }
-        let execute_ns = t.elapsed_ns();
-        let timing = ExecTiming {
-            execute_ns,
-            critical_path_ns: execute_ns,
-            ..ExecTiming::default()
-        };
-        Ok((sol, status, timing))
-    }
-}
+pub use crate::runtime::backend::Backend as ShardExecutor;
+pub use crate::runtime::backend::{BatchCpuBackend, CpuShardExecutor};
 
 /// Per-shard accounting for one sharded run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ShardStats {
-    /// Chunks dispatched to this shard.
+    /// Chunks this shard executed (its own dispatches plus steals).
     pub chunks: usize,
+    /// Chunks this shard stole from a peer's staged queue.
+    pub steals: usize,
     /// Problems this shard solved.
     pub problems: usize,
+    /// The backend's relative capacity weight (the dispatch bias).
+    pub weight: f64,
     /// Device-side stage sums for this shard; `critical_path_ns` is the
     /// shard thread's busy wall time (its share of the run).
     pub timing: ExecTiming,
@@ -183,6 +109,8 @@ pub struct ShardReport {
     /// time of the whole call (so `overlap_ratio()` reads the combined
     /// pipelining + sharding win).
     pub timing: ExecTiming,
+    /// The pipeline depth the run used.
+    pub depth: usize,
     pub per_shard: Vec<ShardStats>,
 }
 
@@ -190,6 +118,11 @@ impl ShardReport {
     /// Problems solved across all shards.
     pub fn problems(&self) -> usize {
         self.per_shard.iter().map(|s| s.problems).sum()
+    }
+
+    /// Chunks stolen across all shards.
+    pub fn steals(&self) -> usize {
+        self.per_shard.iter().map(|s| s.steals).sum()
     }
 
     /// Busy-time balance: max over mean of per-shard busy wall time.
@@ -268,18 +201,22 @@ struct StagedChunk {
 /// A shard's finished chunk on its way back to the stage loop.
 struct Completion {
     idx: usize,
+    /// The shard that *executed* the chunk (its dispatch target, or the
+    /// thief when the chunk was stolen).
     shard: usize,
+    stolen: bool,
     pb: PackedBatch,
     /// Shard-thread wall time spent on this chunk.
     busy_ns: u64,
     result: anyhow::Result<RawExec>,
 }
 
-/// N executors fed by one stage loop — see the module docs for the thread
-/// model and the bit-identical guarantee.
-pub struct ShardedEngine<X: ShardExecutor = Engine> {
+/// N backends fed by one stage loop — see the module docs for the thread
+/// model and the determinism guarantees.
+pub struct ShardedEngine<X: Backend = Engine> {
     manifest: Manifest,
     executors: Vec<X>,
+    depth: PipelineDepth,
     /// Rotation pool for packed chunks (recycled through completions).
     pool: Vec<PackedBatch>,
 }
@@ -310,13 +247,32 @@ impl ShardedEngine<Engine> {
     }
 }
 
-impl<X: ShardExecutor> ShardedEngine<X> {
-    /// Build over explicit executors (the manifest supplies bucket
-    /// fitting; executors never open bucket files unless they are real
-    /// engines).
+impl<X: Backend> ShardedEngine<X> {
+    /// Build over explicit backends (the manifest supplies bucket fitting;
+    /// backends never open bucket files unless they are real engines).
+    /// Mixed backend types go through `Vec<Box<dyn Backend>>`.
     pub fn from_executors(manifest: Manifest, executors: Vec<X>) -> anyhow::Result<Self> {
         anyhow::ensure!(!executors.is_empty(), "at least one shard executor required");
-        Ok(ShardedEngine { manifest, executors, pool: Vec::new() })
+        Ok(ShardedEngine {
+            manifest,
+            executors,
+            depth: PipelineDepth::default(),
+            pool: Vec::new(),
+        })
+    }
+
+    /// Set the per-shard staged-queue depth (the pipeline ring depth).
+    pub fn with_depth(mut self, depth: PipelineDepth) -> Self {
+        self.depth = depth;
+        self
+    }
+
+    pub fn set_depth(&mut self, depth: PipelineDepth) {
+        self.depth = depth;
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.get()
     }
 
     pub fn shards(&self) -> usize {
@@ -338,9 +294,9 @@ impl<X: ShardExecutor> ShardedEngine<X> {
     /// shards, results reassembled in input order.
     ///
     /// Bit-identical to a serial loop of `Engine::solve` per chunk with the
-    /// same `rng`, for any shard count: packing order (and therefore RNG
-    /// consumption) is the serial order, and execution is deterministic in
-    /// the packed bytes.
+    /// same `rng`, for any shard count, depth, or steal interleaving —
+    /// packing order (and therefore RNG consumption) is the serial order,
+    /// and execution is deterministic in the packed bytes.
     pub fn solve_stream<'p>(
         &mut self,
         variant: Variant,
@@ -412,46 +368,66 @@ impl<X: ShardExecutor> ShardedEngine<X> {
             &mut PackedBatch,
         ) -> anyhow::Result<()>,
     ) -> anyhow::Result<(Vec<Vec<Solution>>, ShardReport)> {
-        let ShardedEngine { manifest, executors, pool } = self;
+        let depth = self.depth.get();
+        let ShardedEngine { manifest, executors, pool, .. } = self;
         let shards = executors.len();
+        let weights: Vec<f64> = executors.iter().map(|x| x.capacity_weight()).collect();
+        // Evaluate each backend's cost model over the variant's bucket
+        // inventory up front (once the scope starts the backends live on
+        // their shard threads).
+        let cost_table = build_cost_table(executors.as_slice(), manifest, variant);
         let wall = Timer::start();
-        while pool.len() < shards * SHARD_QUEUE_DEPTH + 1 {
+        while pool.len() < shards * depth + 1 {
             pool.push(PackedBatch::empty());
         }
 
         let mut report = ShardReport {
             timing: ExecTiming::default(),
+            depth,
             per_shard: vec![ShardStats::default(); shards],
         };
+        for (s, stats) in report.per_shard.iter_mut().enumerate() {
+            stats.weight = weights[s];
+        }
         let mut outputs: Vec<Option<Vec<Solution>>> = Vec::new();
         let mut first_err: Option<anyhow::Error> = None;
 
+        let queues: StealQueues<StagedChunk> = StealQueues::new(shards, depth);
         std::thread::scope(|scope| {
             let (done_tx, done_rx) = mpsc::channel::<Completion>();
-            let mut staged_txs: Vec<mpsc::SyncSender<StagedChunk>> = Vec::with_capacity(shards);
             for (shard, ex) in executors.iter_mut().enumerate() {
-                let (tx, rx) = mpsc::sync_channel::<StagedChunk>(SHARD_QUEUE_DEPTH);
-                staged_txs.push(tx);
                 let done_tx = done_tx.clone();
+                let queues = &queues;
                 scope.spawn(move || {
-                    while let Ok(StagedChunk { idx, bucket, pb }) = rx.recv() {
+                    // Producer-side death detection: if every shard thread
+                    // dies, blocked pushes fail instead of hanging.
+                    let _popper = queues.register_popper();
+                    while let Some(popped) = queues.pop(shard) {
+                        let StagedChunk { idx, bucket, pb } = popped.item;
                         let t = Timer::start();
                         let result = ex.execute_raw(&bucket, &pb);
                         let busy_ns = t.elapsed_ns();
-                        if done_tx
-                            .send(Completion { idx, shard, pb, busy_ns, result })
-                            .is_err()
-                        {
+                        queues.complete(shard, popped.est_ns);
+                        let c = Completion {
+                            idx,
+                            shard,
+                            stolen: popped.stolen,
+                            pb,
+                            busy_ns,
+                            result,
+                        };
+                        if done_tx.send(c).is_err() {
                             break; // stage loop aborted
                         }
                     }
                 });
             }
             drop(done_tx);
+            // Panic safety: if the stage loop unwinds, the guard still
+            // closes the queues so the shard threads exit and the scoped
+            // join cannot deadlock (close is idempotent).
+            let _close = queues.close_guard();
 
-            // Chunks dispatched to each shard and not yet completed — the
-            // "staged queue" the dispatch policy minimizes.
-            let mut inflight = vec![0usize; shards];
             let mut dispatched = 0usize;
             let mut completed = 0usize;
             let mut offset = 0usize;
@@ -486,7 +462,6 @@ impl<X: ShardExecutor> ShardedEngine<X> {
                             c,
                             &mut outputs,
                             &mut report,
-                            &mut inflight,
                             pool,
                             &mut completed,
                             &mut first_err,
@@ -513,14 +488,14 @@ impl<X: ShardExecutor> ShardedEngine<X> {
                 }
                 offset += chunk.len();
 
-                // Fold in any finished chunks so queue-depth estimates are
-                // fresh before choosing a shard.
+                // Fold in any finished chunks (recycles buffers and keeps
+                // the report fresh; dispatch freshness comes from the
+                // queues' own pending estimates).
                 while let Ok(c) = done_rx.try_recv() {
                     absorb(
                         c,
                         &mut outputs,
                         &mut report,
-                        &mut inflight,
                         pool,
                         &mut completed,
                         &mut first_err,
@@ -531,34 +506,40 @@ impl<X: ShardExecutor> ShardedEngine<X> {
                     break 'staging;
                 }
 
-                // Shortest-staged-queue dispatch; ties go to the lowest
-                // shard index. The bounded send blocks only when every
-                // queue is full (backpressure).
-                let target = (0..shards).min_by_key(|&s| inflight[s]).unwrap();
-                outputs.push(None);
-                if staged_txs[target]
-                    .send(StagedChunk { idx: dispatched, bucket, pb })
-                    .is_err()
-                {
-                    outputs.pop();
-                    first_err = Some(anyhow::anyhow!("shard {target} exited early"));
-                    break 'staging;
+                // Weighted estimated-finish dispatch: each shard's cost
+                // for this chunk comes from its backend's cost model; the
+                // queue picks the shard whose backlog + this chunk
+                // finishes first. The bounded push blocks only when the
+                // pick's queue is full (backpressure); an idle peer can
+                // still steal it later.
+                let ests = batch_ests_ns(&cost_table, &bucket, pb.used);
+                match queues.push_balanced(StagedChunk { idx: dispatched, bucket, pb }, ests) {
+                    Ok(_) => {
+                        outputs.push(None);
+                        dispatched += 1;
+                    }
+                    Err(chunk) => {
+                        // Every shard thread died (executor panic): stop
+                        // staging; the drain below reports what was lost.
+                        pool.push(chunk.pb);
+                        first_err.get_or_insert_with(|| {
+                            anyhow::anyhow!("shard executors exited early")
+                        });
+                        break 'staging;
+                    }
                 }
-                inflight[target] += 1;
-                report.per_shard[target].chunks += 1;
-                dispatched += 1;
             }
 
-            // Closing the staged channels lets the shard threads drain and
-            // exit; collect everything still in flight.
-            drop(staged_txs);
+            // Closing the queues lets the shard threads drain what is
+            // staged (stealing the stragglers) and exit; collect
+            // everything still in flight.
+            queues.close();
             while completed < dispatched {
                 match done_rx.recv() {
                     Ok(c) => absorb(
                         c,
                         &mut outputs,
                         &mut report,
-                        &mut inflight,
                         pool,
                         &mut completed,
                         &mut first_err,
@@ -588,24 +569,26 @@ impl<X: ShardExecutor> ShardedEngine<X> {
     }
 }
 
-/// Fold one shard completion into the stage loop's state: free its queue
-/// slot, account timing, decode the raw output into its chunk slot, and
-/// recycle the packed buffer.
+/// Fold one shard completion into the stage loop's state: account the
+/// executing shard's chunk/steal/timing, decode the raw output into its
+/// chunk slot, and recycle the packed buffer.
 fn absorb(
     c: Completion,
     outputs: &mut Vec<Option<Vec<Solution>>>,
     report: &mut ShardReport,
-    inflight: &mut [usize],
     pool: &mut Vec<PackedBatch>,
     completed: &mut usize,
     first_err: &mut Option<anyhow::Error>,
 ) {
     *completed += 1;
-    inflight[c.shard] -= 1;
     let used = c.pb.used;
+    let stats = &mut report.per_shard[c.shard];
+    stats.chunks += 1;
+    if c.stolen {
+        stats.steals += 1;
+    }
     match c.result {
         Ok((sol, status, timing)) => {
-            let stats = &mut report.per_shard[c.shard];
             stats.problems += used;
             stats.timing.transfer_ns += timing.transfer_ns;
             stats.timing.execute_ns += timing.execute_ns;
@@ -637,6 +620,7 @@ mod tests {
     use super::*;
     use crate::gen;
     use crate::lp::brute;
+    use crate::lp::types::Status;
     use crate::lp::validate::{agree, Tolerance};
     use std::path::PathBuf;
     use std::time::Duration;
@@ -660,7 +644,7 @@ mod tests {
         fail_on_used: Option<usize>,
     }
 
-    impl ShardExecutor for MockExecutor {
+    impl Backend for MockExecutor {
         fn execute_raw(&mut self, _bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
             if self.fail_on_used == Some(pb.used) {
                 anyhow::bail!("mock failure on used={}", pb.used);
@@ -749,10 +733,36 @@ mod tests {
         assert_eq!(total_chunks, chunks.len());
         assert_eq!(report.problems(), chunks.iter().map(|c| c.len()).sum::<usize>());
         assert!(report.timing.critical_path_ns > 0);
+        assert_eq!(report.depth, PipelineDepth::MIN);
     }
 
     #[test]
-    fn shortest_queue_dispatch_uses_every_shard() {
+    fn depth_sweep_preserves_order_and_results() {
+        let mut rng = Rng::new(21);
+        let chunks: Vec<Vec<Problem>> = (0..10)
+            .map(|k| (0..(k % 5) + 2).map(|_| gen::feasible(&mut rng, 6)).collect())
+            .collect();
+        for depth in 2..=4usize {
+            let mut se = ShardedEngine::from_executors(manifest(), mocks(3, 1))
+                .unwrap()
+                .with_depth(PipelineDepth::new(depth));
+            assert_eq!(se.depth(), depth);
+            let (out, report) = se
+                .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), None)
+                .unwrap();
+            assert_eq!(report.depth, depth);
+            assert_eq!(out.len(), chunks.len());
+            for (k, (chunk, sols)) in chunks.iter().zip(&out).enumerate() {
+                assert_eq!(sols.len(), chunk.len(), "depth {depth} chunk {k}");
+                for (i, s) in sols.iter().enumerate() {
+                    assert_eq!(s.point[0], i as f64, "depth {depth} chunk {k} slot {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_and_stealing_use_every_shard() {
         let mut rng = Rng::new(5);
         let chunks: Vec<Vec<Problem>> = (0..12)
             .map(|_| (0..4).map(|_| gen::feasible(&mut rng, 6)).collect())
@@ -765,8 +775,90 @@ mod tests {
             .unwrap();
         assert_eq!(report.per_shard.len(), 3);
         for (s, stats) in report.per_shard.iter().enumerate() {
-            assert!(stats.chunks >= 1, "shard {s} never dispatched to");
+            assert!(stats.chunks >= 1, "shard {s} never executed a chunk");
+            assert!(stats.steals <= stats.chunks, "shard {s} steal accounting");
+            assert!((stats.weight - 1.0).abs() < 1e-12, "mock weight default");
         }
+        assert_eq!(report.per_shard.iter().map(|s| s.chunks).sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn stealing_rebalances_away_from_a_slow_shard() {
+        let mut rng = Rng::new(15);
+        let chunks: Vec<Vec<Problem>> = (0..8)
+            .map(|_| (0..4).map(|_| gen::feasible(&mut rng, 6)).collect())
+            .collect();
+        // Shard 1 sleeps 40ms per chunk; shard 0 is instant and equally
+        // weighted, so it must end up executing most of the work (stealing
+        // any backlog shard 1 accumulates).
+        let executors = vec![
+            MockExecutor { delay: Duration::ZERO, fail_on_used: None },
+            MockExecutor { delay: Duration::from_millis(40), fail_on_used: None },
+        ];
+        let mut se = ShardedEngine::from_executors(manifest(), executors).unwrap();
+        let (out, report) = se
+            .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), None)
+            .unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(report.per_shard.iter().map(|s| s.chunks).sum::<usize>(), 8);
+        // The slow shard can hold at most its first pop plus whatever it
+        // grabbed before the fast shard drained the rest.
+        assert!(
+            report.per_shard[1].chunks <= 3,
+            "slow shard executed {} of 8 chunks despite an idle fast peer",
+            report.per_shard[1].chunks
+        );
+        assert_eq!(report.steals(), report.per_shard.iter().map(|s| s.steals).sum());
+    }
+
+    #[test]
+    fn weighted_dispatch_biases_toward_heavy_backends() {
+        // A genuinely faster shard advertising a matching weight must end
+        // up executing at least as much as the light one (dispatch offers
+        // it more, and stealing can only reinforce the fast shard). The
+        // exact weighted-argmin arithmetic is unit-tested deterministically
+        // in `runtime::steal`.
+        struct Weighted {
+            inner: MockExecutor,
+            weight: f64,
+        }
+        impl Backend for Weighted {
+            fn capacity_weight(&self) -> f64 {
+                self.weight
+            }
+            fn execute_raw(
+                &mut self,
+                bucket: &Bucket,
+                pb: &PackedBatch,
+            ) -> anyhow::Result<RawExec> {
+                self.inner.execute_raw(bucket, pb)
+            }
+        }
+        let mut rng = Rng::new(19);
+        let chunks: Vec<Vec<Problem>> = (0..12)
+            .map(|_| (0..4).map(|_| gen::feasible(&mut rng, 6)).collect())
+            .collect();
+        let executors = vec![
+            Weighted {
+                inner: MockExecutor { delay: Duration::from_millis(1), fail_on_used: None },
+                weight: 4.0,
+            },
+            Weighted {
+                inner: MockExecutor { delay: Duration::from_millis(5), fail_on_used: None },
+                weight: 1.0,
+            },
+        ];
+        let mut se = ShardedEngine::from_executors(manifest(), executors).unwrap();
+        let (_, report) = se
+            .solve_stream(Variant::Rgb, chunks.iter().map(|c| c.as_slice()), None)
+            .unwrap();
+        assert!((report.per_shard[0].weight - 4.0).abs() < 1e-12);
+        assert!(
+            report.per_shard[0].chunks >= report.per_shard[1].chunks,
+            "heavy shard got {} chunks vs light {}",
+            report.per_shard[0].chunks,
+            report.per_shard[1].chunks
+        );
     }
 
     #[test]
@@ -806,6 +898,7 @@ mod tests {
         let (out, report) = se.solve_stream(Variant::Rgb, std::iter::empty(), None).unwrap();
         assert!(out.is_empty());
         assert_eq!(report.problems(), 0);
+        assert_eq!(report.steals(), 0);
     }
 
     #[test]
@@ -833,7 +926,7 @@ mod tests {
     }
 
     #[test]
-    fn solve_all_is_bit_identical_across_shard_counts() {
+    fn solve_all_is_bit_identical_across_shard_counts_and_depths() {
         let mut rng = Rng::new(13);
         let problems: Vec<Problem> = (0..100)
             .map(|_| {
@@ -851,15 +944,62 @@ mod tests {
         let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
 
         for shards in 2..=4 {
-            let executors: Vec<CpuShardExecutor> =
-                (0..shards).map(|_| CpuShardExecutor).collect();
-            let mut se = ShardedEngine::from_executors(manifest(), executors).unwrap();
+            for depth in 2..=4 {
+                let executors: Vec<CpuShardExecutor> =
+                    (0..shards).map(|_| CpuShardExecutor).collect();
+                let mut se = ShardedEngine::from_executors(manifest(), executors)
+                    .unwrap()
+                    .with_depth(PipelineDepth::new(depth));
+                let mut r = Rng::new(seed);
+                let (got, report) =
+                    se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+                assert_eq!(report.per_shard.len(), shards);
+                assert_eq!(got.len(), want.len());
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        bit_identical(a, b),
+                        "shards={shards} depth={depth} problem {i}: {a:?} vs {b:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_cpu_backends_are_bit_identical_to_single_executor() {
+        // Heterogeneous shards sharing one numeric path (single-thread
+        // stand-in + multicore batch solver) must reproduce the
+        // single-executor result bitwise, stealing and all.
+        let mut rng = Rng::new(31);
+        let problems: Vec<Problem> = (0..90)
+            .map(|_| {
+                let m = 3 + (rng.next_u64() % 12) as usize;
+                gen::feasible(&mut rng, m)
+            })
+            .collect();
+        let seed = 0xBEEF;
+        let mut reference =
+            ShardedEngine::from_executors(manifest(), vec![CpuShardExecutor]).unwrap();
+        let mut r = Rng::new(seed);
+        let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+
+        for depth in 2..=4usize {
+            let executors: Vec<Box<dyn Backend>> = vec![
+                Box::new(CpuShardExecutor),
+                Box::new(BatchCpuBackend::new(3)),
+                Box::new(BatchCpuBackend::new(2)),
+            ];
+            let mut se = ShardedEngine::from_executors(manifest(), executors)
+                .unwrap()
+                .with_depth(PipelineDepth::new(depth));
             let mut r = Rng::new(seed);
             let (got, report) = se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
-            assert_eq!(report.per_shard.len(), shards);
             assert_eq!(got.len(), want.len());
+            // Weight plumbing: the multicore shards advertise their
+            // thread counts.
+            assert!((report.per_shard[1].weight - 3.0).abs() < 1e-12);
             for (i, (a, b)) in want.iter().zip(&got).enumerate() {
-                assert!(bit_identical(a, b), "shards={shards} problem {i}: {a:?} vs {b:?}");
+                assert!(bit_identical(a, b), "depth={depth} problem {i}: {a:?} vs {b:?}");
             }
         }
     }

@@ -1,0 +1,382 @@
+//! Work-stealing staged queues: the hand-off structure between a staging
+//! producer and N executor shards, with per-shard bounded depth and
+//! steal-on-idle.
+//!
+//! Each shard owns a FIFO deque of staged items bounded at the pipeline
+//! depth (the backpressure surface). A shard pops its own queue front in
+//! dispatch order; when its queue is dry it **steals the newest staged
+//! item from the most backlogged peer** (LIFO from the victim's back, so
+//! the victim keeps the items it is about to reach, and the thief takes
+//! work that would otherwise wait longest). The producer pushes either to
+//! an explicit shard ([`StealQueues::push`], the coordinator's per-shard
+//! pack stages) or to the shard with the minimum estimated backlog
+//! ([`StealQueues::push_balanced`], the sharded engine's weighted
+//! dispatch).
+//!
+//! Every item carries **one cost estimate per shard** (heterogeneous
+//! backends chew through the same bytes at different rates), so backlog
+//! accounting stays honest across a steal: the victim's pending estimate
+//! drops by *its* cost for the item, the thief's rises by *the thief's*
+//! cost.
+//!
+//! Stealing only moves *which executor* runs an item — result reassembly
+//! stays keyed by the item's own index, so the executor layers' ordering
+//! and bit-identical guarantees are untouched (see
+//! [`crate::runtime::shard`]).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// One item handed to an executor shard by [`StealQueues::pop`].
+pub struct Popped<T> {
+    pub item: T,
+    /// The item's cost estimate **on the popping shard** (hand back to
+    /// [`StealQueues::complete`] when done).
+    pub est_ns: u64,
+    /// Whether the popping shard stole this item from a peer's queue.
+    pub stolen: bool,
+}
+
+struct Entry<T> {
+    item: T,
+    /// Per-shard cost estimates (index = shard id).
+    ests: Vec<u64>,
+}
+
+struct State<T> {
+    queues: Vec<VecDeque<Entry<T>>>,
+    /// Estimated busy-ns queued + executing per shard (the dispatch
+    /// signal; an item stays pending on its holder until `complete`).
+    pending_ns: Vec<u64>,
+    /// Items each shard has stolen from a peer.
+    steals: Vec<u64>,
+    /// Registered consumer threads ([`StealQueues::register_popper`]).
+    poppers: usize,
+    /// Set when the last registered popper dropped: nothing will ever pop
+    /// again, so blocked producers must fail instead of waiting.
+    dead: bool,
+    closed: bool,
+}
+
+/// RAII registration of a consuming shard thread. When the **last** guard
+/// drops — normal exit or panic unwind — the queues are marked dead and
+/// every blocked or future push fails with its item instead of hanging:
+/// the replacement for the consumer-death detection a per-shard
+/// `sync_channel`'s `SendError` used to provide.
+pub struct PopperGuard<'q, T> {
+    queues: &'q StealQueues<T>,
+}
+
+impl<'q, T> Drop for PopperGuard<'q, T> {
+    fn drop(&mut self) {
+        let mut g = self.queues.state.lock().unwrap();
+        g.poppers -= 1;
+        if g.poppers == 0 {
+            g.dead = true;
+        }
+        drop(g);
+        self.queues.cv.notify_all();
+    }
+}
+
+/// Closes the queues on drop (see [`StealQueues::close_guard`]).
+pub struct CloseGuard<'q, T> {
+    queues: &'q StealQueues<T>,
+}
+
+impl<'q, T> Drop for CloseGuard<'q, T> {
+    fn drop(&mut self) {
+        self.queues.close();
+    }
+}
+
+/// N bounded staged queues with steal-on-idle; see the module docs.
+pub struct StealQueues<T> {
+    depth: usize,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> StealQueues<T> {
+    /// `shards` executor queues, each bounded at `depth` staged items.
+    pub fn new(shards: usize, depth: usize) -> StealQueues<T> {
+        let shards = shards.max(1);
+        let depth = depth.max(1);
+        StealQueues {
+            depth,
+            state: Mutex::new(State {
+                queues: (0..shards).map(|_| VecDeque::with_capacity(depth)).collect(),
+                pending_ns: vec![0; shards],
+                steals: vec![0; shards],
+                poppers: 0,
+                dead: false,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Register the calling shard thread as a consumer; hold the guard for
+    /// the thread's lifetime so producer blocking can detect total
+    /// consumer death (see [`PopperGuard`]).
+    pub fn register_popper(&self) -> PopperGuard<'_, T> {
+        self.state.lock().unwrap().poppers += 1;
+        PopperGuard { queues: self }
+    }
+
+    /// Push to an explicit shard's queue, blocking while it is full
+    /// (backpressure — the same bound the old per-shard `sync_channel`
+    /// provided, except a peer can now drain it by stealing). `ests[s]`
+    /// is the item's cost estimate on shard `s`. `Err(item)` when every
+    /// registered popper is gone (nothing would ever drain the queue).
+    pub fn push(&self, shard: usize, item: T, ests: Vec<u64>) -> Result<(), T> {
+        let mut g = self.state.lock().unwrap();
+        assert_eq!(ests.len(), g.queues.len(), "one cost estimate per shard");
+        while g.queues[shard].len() >= self.depth && !g.closed && !g.dead {
+            g = self.cv.wait(g).unwrap();
+        }
+        if g.dead {
+            return Err(item);
+        }
+        g.pending_ns[shard] += ests[shard];
+        g.queues[shard].push_back(Entry { item, ests });
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Push to the shard with the minimum estimated finish time:
+    /// `pending_ns[s] + ests[s]` (ties break to the shorter queue, then
+    /// the lower shard id). Blocks while the chosen shard's queue is full;
+    /// re-chooses on every wake so a drained peer can win the item.
+    /// `Ok(shard)` the item landed on; `Err(item)` when every registered
+    /// popper is gone.
+    pub fn push_balanced(&self, item: T, ests: Vec<u64>) -> Result<usize, T> {
+        let mut g = self.state.lock().unwrap();
+        assert_eq!(ests.len(), g.queues.len(), "one cost estimate per shard");
+        loop {
+            if g.dead {
+                return Err(item);
+            }
+            let target = (0..g.queues.len())
+                .min_by_key(|&s| (g.pending_ns[s].saturating_add(ests[s]), g.queues[s].len(), s))
+                .expect("at least one shard");
+            if g.queues[target].len() < self.depth {
+                g.pending_ns[target] += ests[target];
+                g.queues[target].push_back(Entry { item, ests });
+                self.cv.notify_all();
+                return Ok(target);
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Take the next item for shard `me`: its own queue front, else the
+    /// **newest** staged item of the most backlogged peer (a steal, which
+    /// re-costs the item at the thief's rate). Stealing is deliberately
+    /// work-conserving rather than cost-gated: an idle shard always takes
+    /// queued work, whatever its relative speed — on sustained streams
+    /// every execution unit then contributes in proportion to its
+    /// throughput (the paper's saturation goal), it keeps a struggling
+    /// peer's queue drainable, and the weighted *dispatch* already biases
+    /// placement so steals stay the correction, not the norm. Blocks
+    /// while every queue is empty; `None` once closed and drained.
+    pub fn pop(&self, me: usize) -> Option<Popped<T>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(e) = g.queues[me].pop_front() {
+                self.cv.notify_all();
+                return Some(Popped { est_ns: e.ests[me], item: e.item, stolen: false });
+            }
+            let victim = (0..g.queues.len())
+                .filter(|&s| s != me && !g.queues[s].is_empty())
+                .max_by_key(|&s| (g.queues[s].len(), std::cmp::Reverse(s)));
+            if let Some(v) = victim {
+                let e = g.queues[v].pop_back().expect("victim queue non-empty");
+                g.pending_ns[v] = g.pending_ns[v].saturating_sub(e.ests[v]);
+                g.pending_ns[me] += e.ests[me];
+                g.steals[me] += 1;
+                self.cv.notify_all();
+                return Some(Popped { est_ns: e.ests[me], item: e.item, stolen: true });
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Mark an item (popped by `shard`) finished, releasing its share of
+    /// the pending-load estimate.
+    pub fn complete(&self, shard: usize, est_ns: u64) {
+        let mut g = self.state.lock().unwrap();
+        g.pending_ns[shard] = g.pending_ns[shard].saturating_sub(est_ns);
+        self.cv.notify_all();
+    }
+
+    /// No more pushes: poppers drain what is queued, then see `None`.
+    /// Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// A guard that [`StealQueues::close`]s on drop — producer-side
+    /// panic safety: if the staging thread unwinds, blocked consumer
+    /// threads still drain and exit instead of deadlocking a join.
+    pub fn close_guard(&self) -> CloseGuard<'_, T> {
+        CloseGuard { queues: self }
+    }
+
+    /// Items each shard has stolen so far.
+    pub fn steal_counts(&self) -> Vec<u64> {
+        self.state.lock().unwrap().steals.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_prefers_own_queue_then_steals_newest_from_most_backlogged() {
+        let q: StealQueues<&'static str> = StealQueues::new(3, 4);
+        q.push(1, "old", vec![10, 20, 30]).unwrap();
+        q.push(1, "mid", vec![10, 20, 30]).unwrap();
+        q.push(1, "new", vec![10, 20, 30]).unwrap();
+        q.push(2, "only", vec![10, 20, 30]).unwrap();
+        // Shard 0 is dry: it must steal from shard 1 (longest queue), take
+        // the NEWEST staged item, and re-cost it at its own rate.
+        let p = q.pop(0).unwrap();
+        assert!(p.stolen);
+        assert_eq!(p.item, "new");
+        assert_eq!(p.est_ns, 10);
+        assert_eq!(q.steal_counts(), vec![1, 0, 0]);
+        // Shard 1 still drains its own queue in FIFO order, at its rate.
+        let p = q.pop(1).unwrap();
+        assert!(!p.stolen);
+        assert_eq!(p.item, "old");
+        assert_eq!(p.est_ns, 20);
+        // Shard 2 takes its own item before stealing.
+        let p = q.pop(2).unwrap();
+        assert!(!p.stolen);
+        assert_eq!(p.item, "only");
+        assert_eq!(p.est_ns, 30);
+        q.close();
+        // Remaining items drain after close, then poppers see None.
+        assert_eq!(q.pop(2).unwrap().item, "mid");
+        assert!(q.pop(0).is_none());
+        assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn push_balanced_follows_weighted_estimates() {
+        let q: StealQueues<u32> = StealQueues::new(2, 8);
+        // Shard 1 is 4x cheaper for every item: it wins pushes until its
+        // backlog estimate (3 x 100) ties shard 0's single-item cost.
+        assert_eq!(q.push_balanced(0, vec![400, 100]), Ok(1));
+        assert_eq!(q.push_balanced(1, vec![400, 100]), Ok(1));
+        assert_eq!(q.push_balanced(2, vec![400, 100]), Ok(1));
+        // 300 + 100 ties 0 + 400; the tie goes to the shorter queue.
+        assert_eq!(q.push_balanced(3, vec![400, 100]), Ok(0));
+        // pending_ns is now [400, 300]: shard 1 wins again.
+        assert_eq!(q.push_balanced(4, vec![400, 100]), Ok(1));
+        // Completing releases the estimate and keeps shard 1 preferred.
+        let p = q.pop(1).unwrap();
+        assert!(!p.stolen);
+        q.complete(1, p.est_ns);
+        assert_eq!(q.push_balanced(5, vec![400, 100]), Ok(1));
+        q.close();
+    }
+
+    #[test]
+    fn stealing_is_work_conserving_even_for_slow_thieves() {
+        // A slow shard (8x cost) still takes queued work when idle: on a
+        // sustained stream every unit contributing beats leaving staged
+        // work behind a busy peer.
+        let q: StealQueues<u32> = StealQueues::new(2, 4);
+        q.push(1, 9, vec![400, 50]).unwrap();
+        let p = q.pop(0).unwrap();
+        assert!(p.stolen);
+        assert_eq!(p.est_ns, 400);
+        q.complete(0, p.est_ns);
+        q.close();
+        assert!(q.pop(1).is_none());
+    }
+
+    #[test]
+    fn steal_recosts_pending_at_the_thief_rate() {
+        // An item staged on the slow shard (cost 800 there, 100 on the
+        // fast shard) must charge the thief only 100 once stolen — the
+        // fast shard stays preferred for the next balanced push.
+        let q: StealQueues<u32> = StealQueues::new(2, 4);
+        q.push(1, 7, vec![100, 800]).unwrap();
+        let p = q.pop(0).unwrap();
+        assert!(p.stolen);
+        assert_eq!(p.est_ns, 100);
+        // pending_ns is [100, 0]: a 100-vs-800 item still routes to the
+        // fast shard (100 + 100 < 0 + 800).
+        assert_eq!(q.push_balanced(8, vec![100, 800]), Ok(0));
+        q.complete(0, p.est_ns);
+        q.close();
+    }
+
+    #[test]
+    fn dead_poppers_fail_pushes_instead_of_hanging() {
+        let q: StealQueues<u32> = StealQueues::new(1, 1);
+        {
+            let _guard = q.register_popper();
+        } // last popper gone -> dead
+        assert_eq!(q.push(0, 7, vec![5]), Err(7));
+        assert_eq!(q.push_balanced(8, vec![5]), Err(8));
+    }
+
+    #[test]
+    fn popper_death_unblocks_a_full_queue_push() {
+        let q: StealQueues<u32> = StealQueues::new(1, 1);
+        q.push(0, 1, vec![5]).unwrap();
+        std::thread::scope(|scope| {
+            let guard = q.register_popper();
+            let pusher = scope.spawn(|| q.push(0, 2, vec![5]));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            assert!(!pusher.is_finished(), "push must block at depth");
+            drop(guard); // the only consumer "dies"
+            assert_eq!(pusher.join().unwrap(), Err(2));
+        });
+    }
+
+    #[test]
+    fn close_unblocks_empty_pop() {
+        let q: StealQueues<u32> = StealQueues::new(2, 2);
+        std::thread::scope(|scope| {
+            let h = scope.spawn(|| q.pop(0));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q.close();
+            assert!(h.join().unwrap().is_none());
+        });
+    }
+
+    #[test]
+    fn push_blocks_at_depth_until_a_pop_frees_a_slot() {
+        let q: StealQueues<u32> = StealQueues::new(1, 2);
+        q.push(0, 1, vec![5]).unwrap();
+        q.push(0, 2, vec![5]).unwrap();
+        std::thread::scope(|scope| {
+            let pusher = scope.spawn(|| {
+                q.push(0, 3, vec![5]).unwrap(); // blocks: queue is at depth
+            });
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            assert!(!pusher.is_finished(), "push must block at depth");
+            let p = q.pop(0).unwrap();
+            assert_eq!(p.item, 1);
+            pusher.join().unwrap();
+        });
+        q.close();
+        assert_eq!(q.pop(0).unwrap().item, 2);
+        assert_eq!(q.pop(0).unwrap().item, 3);
+        assert!(q.pop(0).is_none());
+    }
+}

@@ -1,4 +1,4 @@
-//! Double-buffered pipeline driver: overlap host staging with device
+//! Depth-N ring pipeline driver: overlap host staging with device
 //! execution.
 //!
 //! Figure 5 of the paper shows memory movement (pack / transfer / unpack)
@@ -7,27 +7,73 @@
 //! two-thread pipeline instead:
 //!
 //! ```text
-//!   stage thread:   pack k+1          unpack k-1   pack k+2   ...
-//!   caller thread:  transfer+execute k            transfer+execute k+1
+//!   stage thread:   pack k+1 .. k+depth   unpack k-1   pack k+depth+1  ...
+//!   caller thread:  transfer+execute k                 transfer+execute k+1
 //! ```
 //!
 //! The *caller* thread keeps every device (PJRT) call — the `xla` client is
 //! not `Sync`, so handles must never cross threads (see the `Engine` docs).
 //! The *stage* thread runs only host-side buffer work (packing problems
 //! into wire format, decoding raw outputs into `Solution`s) through the
-//! [`StageWorker`] trait. Chunks rotate through a small pool of reusable
-//! buffers owned by the worker, so the steady state allocates nothing.
+//! [`StageWorker`] trait. Chunks rotate through a ring of `depth + 1`
+//! reusable buffers owned by the worker, so the steady state allocates
+//! nothing: [`PipelineDepth`] is the one staging-depth knob every executor
+//! layer shares (`Engine::solve_stream`, `ShardedEngine`'s per-shard
+//! staged queues, the coordinator's executor shards). Depth 2 is classic
+//! double buffering; deeper rings absorb burstier stage times at the cost
+//! of one staged buffer per extra slot.
 //!
 //! The driver is generic and engine-free on purpose: `Engine::solve_stream`
-//! is built directly on it, the coordinator's executor pairs mirror the
-//! same design (their streaming per-request-reply shape doesn't fit this
-//! collect-at-end driver), and the overlap guarantee (critical path <
-//! summed stage time) is unit-tested here with synthetic stages — no PJRT
-//! or artifacts required.
+//! is built directly on it, the sharded/coordinator executors mirror the
+//! same design through [`crate::runtime::steal::StealQueues`] (their
+//! multi-consumer shape doesn't fit this collect-at-end driver), and the
+//! overlap guarantee (critical path < summed stage time) is unit-tested
+//! here with synthetic stages — no PJRT or artifacts required.
 
 use std::sync::mpsc;
 
 use crate::util::Timer;
+
+/// Staging depth shared by every executor layer: how many chunks may be
+/// staged ahead of an execution unit. Values are clamped to
+/// [`PipelineDepth::MIN`]`..=`[`PipelineDepth::MAX`] — anything below 2
+/// cannot overlap staging with execution, and very deep rings only cost
+/// staged-buffer memory without hiding more latency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PipelineDepth(usize);
+
+impl PipelineDepth {
+    /// Classic double buffering; the default and the floor.
+    pub const MIN: usize = 2;
+    /// Beyond this, extra slots only pin memory.
+    pub const MAX: usize = 32;
+
+    pub fn new(depth: usize) -> PipelineDepth {
+        PipelineDepth(depth.clamp(Self::MIN, Self::MAX))
+    }
+
+    pub fn get(self) -> usize {
+        self.0
+    }
+}
+
+impl Default for PipelineDepth {
+    fn default() -> Self {
+        PipelineDepth(Self::MIN)
+    }
+}
+
+impl From<usize> for PipelineDepth {
+    fn from(depth: usize) -> Self {
+        PipelineDepth::new(depth)
+    }
+}
+
+impl std::fmt::Display for PipelineDepth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
 
 /// Host-side half of the pipeline; runs on the dedicated stage thread.
 ///
@@ -348,5 +394,31 @@ mod tests {
         // depth 0 must still double-buffer rather than deadlock.
         let (result, ..) = run_pipelined(0..5u64, TestWorker::instant(), 0, |_, s: u64| Ok(s));
         assert_eq!(result.unwrap().len(), 5);
+    }
+
+    #[test]
+    fn deeper_rings_preserve_order_and_results() {
+        let want: Vec<u64> = (0..40).map(|c| c * 10 + 5 + 1).collect();
+        for depth in 2..=5usize {
+            let (result, worker, stats) = run_pipelined(
+                0..40u64,
+                TestWorker::instant(),
+                depth,
+                |_, staged| Ok(staged + 5),
+            );
+            assert_eq!(result.unwrap(), want, "depth {depth}");
+            assert_eq!(stats.chunks, 40);
+            assert_eq!(worker.staged, 40);
+        }
+    }
+
+    #[test]
+    fn pipeline_depth_clamps_and_converts() {
+        assert_eq!(PipelineDepth::default().get(), 2);
+        assert_eq!(PipelineDepth::new(0).get(), PipelineDepth::MIN);
+        assert_eq!(PipelineDepth::new(3).get(), 3);
+        assert_eq!(PipelineDepth::new(10_000).get(), PipelineDepth::MAX);
+        assert_eq!(PipelineDepth::from(4usize).get(), 4);
+        assert_eq!(format!("{}", PipelineDepth::new(3)), "3");
     }
 }

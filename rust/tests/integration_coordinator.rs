@@ -3,12 +3,12 @@
 
 use std::time::Duration;
 
-use batch_lp2d::coordinator::{Config, Service, SubmitError};
+use batch_lp2d::coordinator::{BackendSpec, Config, Service, SubmitError};
 use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::brute;
 use batch_lp2d::lp::types::Status;
 use batch_lp2d::lp::validate::{agree, Tolerance};
-use batch_lp2d::runtime::Variant;
+use batch_lp2d::runtime::{PipelineDepth, Variant};
 use batch_lp2d::util::Rng;
 
 mod common;
@@ -164,6 +164,51 @@ fn shutdown_drains_inflight_requests() {
         let sol = t.wait().expect("drained solution");
         assert_eq!(sol.status, Status::Optimal);
     }
+}
+
+#[test]
+fn heterogeneous_cpu_service_serves_without_artifacts() {
+    // CPU backends solve straight from packed bytes, so a mixed CPU-only
+    // shard set runs the FULL serving path — dispatcher, weighted routing,
+    // pack/execute pairs, stealing staged queues — under the offline xla
+    // stub with the fallback manifest. This test never skips.
+    let config = Config {
+        max_wait: Duration::from_millis(1),
+        backends: vec![
+            BackendSpec::BatchCpu { threads: 2 },
+            BackendSpec::Cpu,
+            BackendSpec::Cpu,
+        ],
+        depth: PipelineDepth::new(3),
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config)
+        .expect("CPU-only service must start without artifacts");
+    assert_eq!(svc.shard_backends(), &["batch-cpu", "cpu-seidel", "cpu-seidel"]);
+
+    let mut rng = Rng::new(9);
+    let problems = trace::mixed_size_batch(&mut rng, 300, 2, 60);
+    let solutions = svc.solve_all(&problems).expect("solve_all");
+    assert_eq!(solutions.len(), problems.len());
+    for (p, s) in problems.iter().zip(&solutions) {
+        let want = brute::solve(p);
+        assert_eq!(s.status, want.status, "m={}", p.m());
+        if s.status == Status::Optimal {
+            assert!(agree(p, s, &want, Tolerance::default()), "{s:?} vs {want:?}");
+        }
+    }
+
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.solved, 300);
+    assert_eq!(snap.pipeline_depth, 3);
+    assert_eq!(snap.per_shard.len(), 3);
+    // Heterogeneous pre-sizing: every configured shard reports a row with
+    // its capacity weight, hit or not.
+    assert!((snap.per_shard[0].weight - 2.0).abs() < 1e-9);
+    assert!((snap.per_shard[1].weight - 1.0).abs() < 1e-9);
+    // Per-problem conservation across the mixed shard set.
+    assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), 300);
+    svc.shutdown();
 }
 
 #[test]

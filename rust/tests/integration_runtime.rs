@@ -10,7 +10,9 @@ use batch_lp2d::gen;
 use batch_lp2d::lp::brute;
 use batch_lp2d::lp::types::{Problem, Status};
 use batch_lp2d::lp::validate::{agree, Tolerance};
-use batch_lp2d::runtime::{Engine, ShardedEngine, Variant};
+use batch_lp2d::runtime::{
+    Backend, BatchCpuBackend, CpuShardExecutor, Engine, PipelineDepth, ShardedEngine, Variant,
+};
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo};
 use batch_lp2d::util::Rng;
 
@@ -261,6 +263,92 @@ fn sharded_solve_all_is_bit_identical_to_one_big_solve() {
         assert_eq!(report.problems(), problems.len());
         for (i, (a, b)) in want.iter().zip(&got).enumerate() {
             assert!(bit_identical(a, b), "shards={shards} problem {i}: {a:?} vs {b:?}");
+        }
+    }
+}
+
+#[test]
+fn sharded_solve_all_with_stealing_is_bit_identical_across_depths() {
+    // Engine-path twin of the CPU property test: homogeneous engine shards
+    // (one numeric path) with work stealing enabled must reproduce the
+    // one-call result bitwise at every pipeline depth. Skipped under the
+    // offline stub; armed by BATCH_LP2D_REQUIRE_ENGINE against real
+    // bindings.
+    let Some(engine) = engine() else { return };
+    let Some(dir) = artifact_dir() else { return };
+    let mut gen_rng = Rng::new(73);
+    let problems = gen::mixed_batch(&mut gen_rng, 200, 24, 0.2);
+
+    let mut rng = Rng::new(8686);
+    let (want, _) = engine.solve(Variant::Rgb, &problems, Some(&mut rng)).expect("solve");
+
+    for shards in [2usize, 3] {
+        for depth in [2usize, 3, 4] {
+            let Some(sharded) =
+                common::engine_or_skip("sharded engine", ShardedEngine::new(&dir, shards))
+            else {
+                return;
+            };
+            let mut sharded = sharded.with_depth(PipelineDepth::new(depth));
+            let mut rng = Rng::new(8686);
+            let (got, report) = sharded
+                .solve_all(Variant::Rgb, &problems, Some(&mut rng))
+                .expect("sharded solve_all");
+            assert_eq!(report.depth, depth);
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    bit_identical(a, b),
+                    "shards={shards} depth={depth} problem {i}: {a:?} vs {b:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_engine_and_cpu_shards_agree_with_serial_solve() {
+    // Heterogeneous engine+CPU deployments mix numeric paths (f32 kernels
+    // vs f64 Seidel), so cross-backend equivalence is status + tolerance
+    // agreement rather than bitwise (see the runtime::shard module docs);
+    // ordering and per-problem pairing must still be exact.
+    let Some(engine) = engine() else { return };
+    let Some(dir) = artifact_dir() else { return };
+    let mut gen_rng = Rng::new(79);
+    let problems = gen::mixed_batch(&mut gen_rng, 150, 24, 0.2);
+
+    let mut rng = Rng::new(515);
+    let (want, _) = engine.solve(Variant::Rgb, &problems, Some(&mut rng)).expect("solve");
+
+    for depth in [2usize, 3, 4] {
+        let Some(shard_engine) = common::engine_or_skip("engine", Engine::new(&dir)) else {
+            return;
+        };
+        let executors: Vec<Box<dyn Backend>> = vec![
+            Box::new(shard_engine),
+            Box::new(CpuShardExecutor),
+            Box::new(BatchCpuBackend::new(2)),
+        ];
+        let manifest = engine.manifest().clone();
+        let mut sharded = ShardedEngine::from_executors(manifest, executors)
+            .expect("mixed sharded engine")
+            .with_depth(PipelineDepth::new(depth));
+        let mut rng = Rng::new(515);
+        let (got, report) = sharded
+            .solve_all(Variant::Rgb, &problems, Some(&mut rng))
+            .expect("mixed solve_all");
+        assert_eq!(got.len(), want.len());
+        assert_eq!(report.problems(), problems.len());
+        // The engine shard advertises its heavier capacity weight.
+        assert!(report.per_shard[0].weight > report.per_shard[1].weight);
+        for (i, (p, (a, b))) in problems.iter().zip(want.iter().zip(&got)).enumerate() {
+            assert_eq!(a.status, b.status, "depth={depth} problem {i} status");
+            if a.status == Status::Optimal {
+                assert!(
+                    agree(p, b, a, Tolerance::default()),
+                    "depth={depth} problem {i}: {a:?} vs {b:?}"
+                );
+            }
         }
     }
 }

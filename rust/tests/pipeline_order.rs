@@ -95,7 +95,7 @@ fn pipelined_executor_pair_preserves_request_reply_pairing() {
     };
 
     // Pack stage: "packs" by snapshotting the ids, forwards over a
-    // depth-bounded channel (the service's PIPELINE_DEPTH).
+    // depth-bounded channel (the service's staged-queue depth).
     let (staged_tx, staged_rx) = mpsc::sync_channel::<(Vec<u64>, Vec<Req>)>(2);
     let pack = std::thread::spawn(move || {
         while let Ok(items) = batch_rx.recv() {

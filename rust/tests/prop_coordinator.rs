@@ -12,7 +12,10 @@ use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::types::{Problem, Solution};
 use batch_lp2d::runtime::manifest::{Manifest, Variant};
 use batch_lp2d::runtime::pack::{self, PackedBatch};
-use batch_lp2d::runtime::shard::{CpuShardExecutor, ShardExecutor, ShardedEngine};
+use batch_lp2d::runtime::shard::{
+    BatchCpuBackend, CpuShardExecutor, ShardExecutor, ShardedEngine,
+};
+use batch_lp2d::runtime::PipelineDepth;
 use batch_lp2d::util::prop::check;
 use batch_lp2d::util::Rng;
 
@@ -258,6 +261,71 @@ fn prop_sharded_solve_stream_matches_serial_chunk_loop() {
                     assert!(
                         bit_identical(x, y),
                         "shards={shards} chunk {k} problem {i}: {x:?} vs {y:?}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_heterogeneous_stealing_solve_all_bit_identical() {
+    // The tentpole acceptance shape: `solve_all` over a MIXED CPU executor
+    // set (single-thread stand-in + multicore batch backends — the same
+    // numeric path the engine stand-in uses under the xla stub) with work
+    // stealing enabled must reproduce the single-executor serial result
+    // bit for bit, swept over shards 1-4 x pipeline depth 2-4. The
+    // engine-path twin (armed behind BATCH_LP2D_REQUIRE_ENGINE) lives in
+    // tests/integration_runtime.rs.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t8\t16\t8\t16\ta\n\
+                rgb\t32\t16\t8\t16\tb\n\
+                rgb\t8\t64\t8\t64\tc\n\
+                rgb\t32\t64\t8\t64\td\n\
+                rgb\t256\t64\t8\t64\te\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    check("heterogeneous stealing equivalence", 10, |rng| {
+        let n = rng.range_usize(1, 120);
+        let problems: Vec<Problem> = trace::mixed_size_batch(rng, n, 2, 60);
+        let seed = rng.next_u64();
+
+        // Single-executor serial reference.
+        let mut reference =
+            ShardedEngine::from_executors(manifest.clone(), vec![CpuShardExecutor]).unwrap();
+        let mut r = Rng::new(seed);
+        let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+
+        for shards in 1..=4usize {
+            for depth in 2..=4usize {
+                // Alternate backend kinds across the shard set.
+                let executors: Vec<Box<dyn ShardExecutor>> = (0..shards)
+                    .map(|s| -> Box<dyn ShardExecutor> {
+                        if s % 2 == 0 {
+                            Box::new(CpuShardExecutor)
+                        } else {
+                            Box::new(BatchCpuBackend::new(1 + s))
+                        }
+                    })
+                    .collect();
+                let mut se = ShardedEngine::from_executors(manifest.clone(), executors)
+                    .unwrap()
+                    .with_depth(PipelineDepth::new(depth));
+                let mut r = Rng::new(seed);
+                let (got, report) =
+                    se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+                assert_eq!(got.len(), n, "shards={shards} depth={depth} lost solutions");
+                assert_eq!(report.depth, depth);
+                assert_eq!(report.per_shard.len(), shards);
+                assert_eq!(report.problems(), n);
+                // Steal accounting is conserved.
+                let stolen: usize = report.per_shard.iter().map(|s| s.steals).sum();
+                let chunks: usize = report.per_shard.iter().map(|s| s.chunks).sum();
+                assert!(stolen <= chunks, "more steals than chunks");
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        bit_identical(a, b),
+                        "shards={shards} depth={depth} problem {i} (m={}): {a:?} vs {b:?}",
+                        problems[i].m()
                     );
                 }
             }
