@@ -1,29 +1,49 @@
-//! Serving example: the coordinator under an open-loop Poisson request
-//! stream of mixed-size LPs, reporting throughput and latency percentiles.
+//! Serving example: the coordinator under open-loop request streams of
+//! mixed-size LPs, reporting throughput, latency percentiles, and the
+//! admission pipeline's policy trace (close reasons, shed counts, padding
+//! waste per size class).
 //!
 //! This is the "different-sized individual LPs within the batches" mode the
 //! paper's conclusion highlights: requests are routed to size classes,
-//! batched per class under a deadline, and executed across the configured
+//! queued per deadline class (interactive vs bulk) under per-class SLOs,
+//! closed by the configured policy, and executed across the configured
 //! executor shards.
 //!
 //! ```sh
 //! cargo run --release --example serve \
-//!     [-- <requests> <rate_per_s> [--shards N] [--depth D] [--backends LIST]]
+//!     [-- <requests> <rate_per_s> [--shards N] [--depth D] [--backends LIST]
+//!         [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]
+//!         [--bulk-slo-ms MS] [--scenario NAME]]
 //! ```
 //!
-//! `--shards N` runs N engine shards behind the weighted dispatcher;
-//! `--backends engine,cpu,batch-cpu:4` mixes shard backend types instead
-//! (heterogeneous sharding — CPU-only mixes serve without artifacts);
-//! `--depth D` sets the per-shard staged-queue (pipeline ring) depth. The
-//! report prints the per-shard load split including capacity weights and
-//! steal counts.
+//! * `--shards N` runs N engine shards behind the weighted dispatcher;
+//!   `--backends engine,cpu,batch-cpu:4` mixes shard backend types instead
+//!   (heterogeneous sharding — CPU-only mixes serve without artifacts);
+//!   `--depth D` sets the per-shard staged-queue (pipeline ring) depth.
+//! * `--policy` picks the admission batch-close policy: `fixed` closes on
+//!   capacity or SLO deadline only; `adaptive` (default) also closes
+//!   partial batches when executor shards go idle (work-conserving) or
+//!   when the cost model says padding out now beats waiting.
+//! * `--max-queue N` bounds total admission queueing; over the bound, load
+//!   is shed bulk-before-interactive with typed error replies.
+//! * `--slo-ms MS` sets the interactive SLO (`--bulk-slo-ms` the bulk
+//!   bound, default 8x).
+//! * `--scenario poisson|bursty|diurnal|heavy-tail|flood|sim` swaps the
+//!   default Poisson trace for one of the scenario-diverse load models.
+//!
+//! The report prints e2e latency percentiles, the queue-wait vs
+//! execute-time split, close-reason counts, shed counts per deadline
+//! class, padding waste per size class, and the per-shard load split
+//! including capacity weights and steal counts.
 
 use std::time::{Duration, Instant};
 
-use batch_lp2d::coordinator::{BackendSpec, Config, Service};
+use batch_lp2d::coordinator::{BackendSpec, ClosePolicy, Config, DeadlineClass, Service};
+use batch_lp2d::gen::scenarios::{Scenario, ScenarioRequest};
 use batch_lp2d::gen::trace::{poisson_trace, TraceParams};
 use batch_lp2d::lp::types::Status;
 use batch_lp2d::runtime::PipelineDepth;
+use batch_lp2d::util::stats::percentile_sorted;
 use batch_lp2d::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -33,6 +53,11 @@ fn main() -> anyhow::Result<()> {
     let mut shards: usize = 1;
     let mut depth: usize = 2;
     let mut backends: Vec<BackendSpec> = Vec::new();
+    let mut policy = ClosePolicy::Adaptive;
+    let mut max_queue: usize = 32_768;
+    let mut slo_ms: u64 = 10;
+    let mut bulk_slo_ms: u64 = 0; // 0 = 8x the interactive SLO
+    let mut scenario: Option<Scenario> = None;
     let mut positional = 0usize;
     let mut i = 0usize;
     while i < args.len() {
@@ -48,6 +73,27 @@ fn main() -> anyhow::Result<()> {
                 Some(list) => BackendSpec::parse_list(list)?,
                 None => Vec::new(),
             };
+        } else if args[i] == "--policy" {
+            i += 1;
+            policy = match args.get(i) {
+                Some(p) => ClosePolicy::parse(p)?,
+                None => policy,
+            };
+        } else if args[i] == "--max-queue" {
+            i += 1;
+            max_queue = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(max_queue);
+        } else if args[i] == "--slo-ms" {
+            i += 1;
+            slo_ms = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(slo_ms);
+        } else if args[i] == "--bulk-slo-ms" {
+            i += 1;
+            bulk_slo_ms = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(0);
+        } else if args[i] == "--scenario" {
+            i += 1;
+            scenario = match args.get(i) {
+                Some(name) => Some(Scenario::parse(name)?),
+                None => None,
+            };
         } else {
             match positional {
                 0 => requests = args[i].parse().unwrap_or(requests),
@@ -61,9 +107,13 @@ fn main() -> anyhow::Result<()> {
     let n_shards = if backends.is_empty() { shards.max(1) } else { backends.len() };
     // Clamp once so every printed depth matches what the service runs.
     let depth = PipelineDepth::new(depth);
+    let bulk_slo_ms = if bulk_slo_ms == 0 { slo_ms * 8 } else { bulk_slo_ms };
 
     let config = Config {
-        max_wait: Duration::from_millis(10),
+        max_wait: Duration::from_millis(slo_ms),
+        bulk_wait: Duration::from_millis(bulk_slo_ms),
+        policy,
+        max_queue,
         executors: shards.max(1),
         backends,
         depth,
@@ -75,13 +125,30 @@ fn main() -> anyhow::Result<()> {
         service.router().classes()
     );
     println!(
-        "shard backends: {:?}  depth: {depth}",
-        service.shard_backends()
+        "shard backends: {:?}  depth: {depth}  policy: {}  slo: {slo_ms}ms/{bulk_slo_ms}ms  \
+         max-queue: {max_queue}",
+        service.shard_backends(),
+        policy.as_str()
     );
 
     let mut rng = Rng::new(99);
-    let tp = TraceParams { rate, m_lo: 6, m_hi: 64, infeasible_frac: 0.03 };
-    let reqs = poisson_trace(&mut rng, requests, tp);
+    let reqs: Vec<ScenarioRequest> = match scenario {
+        Some(sc) => {
+            println!("scenario: {}", sc.name());
+            sc.generate(&mut rng, requests, rate)
+        }
+        None => {
+            let tp = TraceParams { rate, m_lo: 6, m_hi: 64, infeasible_frac: 0.03 };
+            poisson_trace(&mut rng, requests, tp)
+                .into_iter()
+                .map(|r| ScenarioRequest {
+                    at_ns: r.at_ns,
+                    problem: r.problem,
+                    class: DeadlineClass::Interactive,
+                })
+                .collect()
+        }
+    };
 
     println!("driving {requests} requests at ~{rate:.0}/s across {n_shards} shard(s)...");
     let t0 = Instant::now();
@@ -91,14 +158,20 @@ fn main() -> anyhow::Result<()> {
     let collector = std::thread::spawn(move || {
         let mut latencies_ms: Vec<f64> = Vec::new();
         let mut infeasible = 0usize;
+        let mut shed = 0usize;
         while let Ok((t, at)) = tk_rx.recv() {
-            let sol = t.wait().expect("solution");
-            latencies_ms.push(at.elapsed().as_secs_f64() * 1e3);
-            if sol.status == Status::Infeasible {
-                infeasible += 1;
+            match t.wait() {
+                Ok(sol) => {
+                    latencies_ms.push(at.elapsed().as_secs_f64() * 1e3);
+                    if sol.status == Status::Infeasible {
+                        infeasible += 1;
+                    }
+                }
+                // Shed under overload: expected with a bounded queue.
+                Err(_) => shed += 1,
             }
         }
-        (latencies_ms, infeasible)
+        (latencies_ms, infeasible, shed)
     });
     for r in reqs {
         while (t0.elapsed().as_nanos() as u64) < r.at_ns {
@@ -106,32 +179,62 @@ fn main() -> anyhow::Result<()> {
         }
         let at = Instant::now();
         let ticket = service
-            .submit(r.problem)
+            .submit_with_class(r.problem, r.class)
             .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
         tk_tx.send((ticket, at)).expect("collector alive");
     }
     drop(tk_tx);
-    let (mut latencies_ms, infeasible) = collector.join().expect("collector");
+    let (mut latencies_ms, infeasible, shed) = collector.join().expect("collector");
     let wall = t0.elapsed().as_secs_f64();
 
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Same interpolated percentiles as the loadgen table, so the two
+    // reports agree on identical data.
     let pct = |p: f64| {
-        latencies_ms[((p / 100.0 * (requests - 1) as f64) as usize).min(requests - 1)]
+        if latencies_ms.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&latencies_ms, p)
+        }
     };
     let snap = service.metrics().snapshot();
 
     println!("\nresults:");
-    println!("  wall: {wall:.2}s  ->  {:.0} LPs/s sustained", requests as f64 / wall);
     println!(
-        "  e2e latency p50/p90/p99: {:.2} / {:.2} / {:.2} ms",
+        "  wall: {wall:.2}s  ->  {:.0} LPs/s sustained",
+        latencies_ms.len() as f64 / wall
+    );
+    println!(
+        "  e2e latency p50/p95/p99: {:.2} / {:.2} / {:.2} ms",
         pct(50.0),
-        pct(90.0),
+        pct(95.0),
         pct(99.0)
+    );
+    println!(
+        "  queue wait p50/p95/p99: {:.2} / {:.2} / {:.2} ms (the wait side of the split)",
+        snap.queue_wait_p50_ns as f64 / 1e6,
+        snap.queue_wait_p95_ns as f64 / 1e6,
+        snap.queue_wait_p99_ns as f64 / 1e6
     );
     println!(
         "  batches: {} (mean occupancy {:.1}%)  infeasible: {infeasible}",
         snap.batches,
         100.0 * snap.mean_occupancy
+    );
+    println!(
+        "  closes: {} full / {} deadline / {} idle / {} cost / {} flush",
+        snap.closes.full,
+        snap.closes.deadline,
+        snap.closes.idle,
+        snap.closes.cost,
+        snap.closes.flush
+    );
+    println!(
+        "  shed: {shed} observed ({} interactive, {} bulk in metrics)  \
+         padding waste {:.1}%",
+        snap.shed_interactive,
+        snap.shed_bulk,
+        100.0 * snap.padding_waste()
     );
     println!(
         "  exec split: memory fraction {:.1}% (Fig-5 quantity, serving mode)",

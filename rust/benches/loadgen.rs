@@ -1,0 +1,133 @@
+//! Latency-under-load bench: drive the serving layer with the
+//! scenario-diverse open-loop traffic models and emit the latency
+//! percentile table (p50/p95/p99 end-to-end, queue-wait vs execute split,
+//! shed counts) — the serving counterpart of `solver_micro`'s closed-loop
+//! throughput sweeps.
+//!
+//! ```sh
+//! cargo bench --bench loadgen -- \
+//!     [--scenario poisson,bursty,... | all] [--requests N] [--rate R] \
+//!     [--shards N] [--backends LIST] [--depth D] \
+//!     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS] \
+//!     [--bulk-slo-ms MS]
+//! ```
+//!
+//! Defaults run every scenario on a portable CPU-only heterogeneous shard
+//! mix (no artifacts needed). Results go three places: stdout (markdown
+//! table), `LOADGEN_table.md` (the CI artifact), and `BENCH_pipeline.json`
+//! (merged alongside the solver_micro records for the perf gate).
+//! `BATCH_LP2D_BENCH_FAST=1` shrinks the request counts for CI.
+
+use std::time::Duration;
+
+use batch_lp2d::bench::loadgen::{
+    json_record, merge_into_bench_json, run_scenario, table, LoadgenOpts,
+};
+use batch_lp2d::coordinator::{BackendSpec, ClosePolicy};
+use batch_lp2d::gen::scenarios::Scenario;
+use batch_lp2d::runtime::default_artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some();
+    let mut scenarios: Vec<Scenario> = Scenario::ALL.to_vec();
+    let mut opts = LoadgenOpts {
+        requests: if fast { 1_500 } else { 6_000 },
+        ..LoadgenOpts::default()
+    };
+    let mut shards = 0usize;
+
+    let mut i = 0usize;
+    while i < args.len() {
+        let flag = args[i].clone();
+        let mut value = || -> Option<String> {
+            i += 1;
+            args.get(i).cloned()
+        };
+        match flag.as_str() {
+            "--scenario" => {
+                scenarios = Scenario::parse_list(&value().unwrap_or_default())?;
+            }
+            "--requests" => {
+                opts.requests = value().and_then(|v| v.parse().ok()).unwrap_or(opts.requests);
+            }
+            "--rate" => {
+                opts.rate = value().and_then(|v| v.parse().ok()).unwrap_or(opts.rate);
+            }
+            "--shards" => {
+                shards = value().and_then(|v| v.parse().ok()).unwrap_or(0);
+            }
+            "--backends" => {
+                opts.backends = BackendSpec::parse_list(&value().unwrap_or_default())?;
+            }
+            "--depth" => {
+                opts.depth = value().and_then(|v| v.parse().ok()).unwrap_or(opts.depth);
+            }
+            "--policy" => {
+                opts.policy = ClosePolicy::parse(&value().unwrap_or_default())?;
+            }
+            "--max-queue" => {
+                opts.max_queue =
+                    value().and_then(|v| v.parse().ok()).unwrap_or(opts.max_queue);
+            }
+            "--slo-ms" => {
+                if let Some(ms) = value().and_then(|v| v.parse().ok()) {
+                    opts.slo = Duration::from_millis(ms);
+                }
+            }
+            "--bulk-slo-ms" => {
+                if let Some(ms) = value().and_then(|v| v.parse().ok()) {
+                    opts.bulk_slo = Duration::from_millis(ms);
+                }
+            }
+            // cargo bench passes through its own flags (e.g. --bench);
+            // ignore anything unrecognized rather than failing the run.
+            _ => {}
+        }
+        i += 1;
+    }
+    // `--shards N` without an explicit mix = N single-thread CPU shards
+    // (portable; use --backends for engines or heterogeneous sets).
+    if opts.backends.is_empty() && shards > 0 {
+        opts.backends = vec![BackendSpec::Cpu; shards];
+    }
+
+    println!(
+        "## loadgen: {} scenario(s), {} requests each at base rate {:.0}/s, policy {}",
+        scenarios.len(),
+        opts.requests,
+        opts.rate,
+        opts.policy.as_str()
+    );
+    let dir = default_artifact_dir();
+    let mut reports = Vec::new();
+    for sc in scenarios {
+        let r = run_scenario(&dir, sc, &opts)?;
+        println!(
+            "{:<11} {:>6} ok  {:>5} shed  p99 {:>8.3} ms  queue p99 {:>8.3} ms  \
+             {:>7.0} LPs/s  occ {:.2}  adaptive closes {}",
+            r.scenario,
+            r.completed,
+            r.shed(),
+            r.p99_ms,
+            r.queue_p99_ms,
+            r.throughput_lps,
+            r.mean_occupancy,
+            r.adaptive_closes,
+        );
+        reports.push(r);
+    }
+
+    let t = table(&reports);
+    println!("\n{}", t.to_markdown());
+
+    std::fs::write("LOADGEN_table.md", t.to_markdown())
+        .map_err(|e| anyhow::anyhow!("cannot write LOADGEN_table.md: {e}"))?;
+    let records: Vec<String> = reports.iter().map(json_record).collect();
+    merge_into_bench_json(std::path::Path::new("BENCH_pipeline.json"), &records)?;
+    println!(
+        "wrote LOADGEN_table.md and merged {} record(s) into BENCH_pipeline.json",
+        records.len()
+    );
+    Ok(())
+}

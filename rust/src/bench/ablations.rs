@@ -174,6 +174,9 @@ pub fn batch_window_table(
     for &w in waits_ms {
         let config = Config {
             max_wait: Duration::from_millis(w),
+            // The window sweep only means anything when the window is the
+            // sole early-close trigger, so pin the fixed policy here.
+            policy: crate::coordinator::ClosePolicy::Fixed,
             ..Config::default()
         };
         let service = Service::start(artifact_dir, config)?;

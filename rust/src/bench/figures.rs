@@ -385,6 +385,28 @@ pub fn fig7(ctx: &FigureCtx<'_>, batch: usize, sizes: &[usize]) -> anyhow::Resul
     Ok(table)
 }
 
+/// Companion table of the `loadgen` bench: latency percentiles under the
+/// scenario-diverse open-loop load models (p50/p95/p99 end-to-end,
+/// queue-wait vs execute split, shed counts), one row per scenario.
+/// Engine-free — the portable CPU-only shard mix serves without
+/// artifacts — so it runs on any host, like the loadgen CI leg.
+pub fn fig_loadgen(artifact_dir: &std::path::Path, requests: usize) -> anyhow::Result<Table> {
+    use crate::bench::loadgen::{run_scenario, table, LoadgenOpts};
+    use crate::gen::scenarios::Scenario;
+    let requests = if std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some() {
+        requests.min(1_200)
+    } else {
+        requests
+    };
+    let opts = LoadgenOpts { requests, ..LoadgenOpts::default() };
+    let mut reports = Vec::new();
+    for sc in Scenario::ALL {
+        reports.push(run_scenario(artifact_dir, sc, &opts)?);
+        eprintln!("  {} done", sc.name());
+    }
+    Ok(table(&reports))
+}
+
 /// Default sweep axes (must stay within the compiled artifact set).
 pub const SIZES: &[usize] = &[16, 32, 64, 128, 256];
 pub const BATCHES: &[usize] = &[128, 256, 512, 1024, 2048, 4096];

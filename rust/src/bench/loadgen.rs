@@ -1,0 +1,379 @@
+//! Open-loop load generator over the serving layer: drive the coordinator
+//! with a [`Scenario`] traffic model and report latency percentiles —
+//! the first benchmark measuring **latency under load** rather than
+//! closed-loop throughput.
+//!
+//! Each run starts a [`Service`], replays the scenario's arrival
+//! timestamps (open loop: the driver never waits for replies, so queueing
+//! is real), and measures per-request end-to-end latency client-side
+//! while the service's own metrics supply the queue-wait vs execute-time
+//! split, shed counts, and padding gauges. Reports render as a markdown
+//! table ([`table`]) and as flat JSON records merged into
+//! `BENCH_pipeline.json` ([`merge_into_bench_json`]) so the perf gate and
+//! the figure harness share one artifact.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{BackendSpec, ClosePolicy, Config, Service, Ticket};
+use crate::gen::scenarios::Scenario;
+use crate::runtime::PipelineDepth;
+use crate::util::stats::percentile_sorted;
+use crate::util::{Rng, Table};
+
+/// Load-generator knobs (service config + drive parameters).
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    pub requests: usize,
+    /// Base arrival rate, requests/second (scenarios shape around it).
+    pub rate: f64,
+    /// Shard backend mix; empty = a portable CPU-only default.
+    pub backends: Vec<BackendSpec>,
+    pub depth: usize,
+    pub policy: ClosePolicy,
+    pub max_queue: usize,
+    /// Interactive SLO (the `--slo-ms` knob) and the bulk bound.
+    pub slo: Duration,
+    pub bulk_slo: Duration,
+    pub seed: u64,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts {
+            requests: 6_000,
+            rate: 4_000.0,
+            backends: Vec::new(),
+            depth: 2,
+            policy: ClosePolicy::Adaptive,
+            max_queue: 4_096,
+            slo: Duration::from_millis(5),
+            bulk_slo: Duration::from_millis(40),
+            seed: 0x10AD,
+        }
+    }
+}
+
+impl LoadgenOpts {
+    /// The CPU-only shard mix used when none is given: two multicore
+    /// batch-CPU shards plus the single-thread stand-in — runs on any
+    /// host, no artifacts, heterogeneous weights.
+    pub fn default_backends() -> Vec<BackendSpec> {
+        vec![
+            BackendSpec::BatchCpu { threads: 2 },
+            BackendSpec::BatchCpu { threads: 2 },
+            BackendSpec::Cpu,
+        ]
+    }
+}
+
+/// One scenario's measured serving behaviour.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub scenario: &'static str,
+    pub policy: &'static str,
+    pub requests: usize,
+    /// Requests that completed with a solution (everything not shed).
+    pub completed: usize,
+    /// Requests shed by the bounded admission queue (ticket errors),
+    /// split interactive/bulk from the service metrics.
+    pub shed_interactive: u64,
+    pub shed_bulk: u64,
+    pub wall_s: f64,
+    pub throughput_lps: f64,
+    /// End-to-end latency percentiles (submit → solution), milliseconds.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Admission queue-wait percentiles (the wait side of the split).
+    pub queue_p50_ms: f64,
+    pub queue_p95_ms: f64,
+    pub queue_p99_ms: f64,
+    /// Batch execute-side p99 (the execute side of the split).
+    pub exec_p99_ms: f64,
+    pub mean_occupancy: f64,
+    pub padding_waste: f64,
+    /// Batches closed by the work-conserving rules (idle + cost).
+    pub adaptive_closes: u64,
+}
+
+impl ScenarioReport {
+    pub fn shed(&self) -> u64 {
+        self.shed_interactive + self.shed_bulk
+    }
+}
+
+/// Drive one scenario through a freshly started service and measure it.
+pub fn run_scenario(
+    artifact_dir: &Path,
+    scenario: Scenario,
+    opts: &LoadgenOpts,
+) -> anyhow::Result<ScenarioReport> {
+    let backends = if opts.backends.is_empty() {
+        LoadgenOpts::default_backends()
+    } else {
+        opts.backends.clone()
+    };
+    let config = Config {
+        max_wait: opts.slo,
+        bulk_wait: opts.bulk_slo,
+        policy: opts.policy,
+        max_queue: opts.max_queue,
+        backends,
+        depth: PipelineDepth::new(opts.depth),
+        ..Config::default()
+    };
+    let service = Service::start(artifact_dir, config)?;
+
+    let mut rng = Rng::new(opts.seed);
+    let reqs = scenario.generate(&mut rng, opts.requests, opts.rate);
+
+    // Collector thread waits tickets concurrently with the driver so the
+    // measured latency is (completion - submission), not (drive end - t).
+    let (tk_tx, tk_rx) = std::sync::mpsc::channel::<(Ticket, Instant)>();
+    let collector = std::thread::spawn(move || {
+        let mut latencies_ms: Vec<f64> = Vec::new();
+        let mut errors = 0usize;
+        while let Ok((t, at)) = tk_rx.recv() {
+            match t.wait() {
+                Ok(_) => latencies_ms.push(at.elapsed().as_secs_f64() * 1e3),
+                // Shed replies surface as ticket errors; they are counted
+                // from the service metrics, not the latency sample.
+                Err(_) => errors += 1,
+            }
+        }
+        (latencies_ms, errors)
+    });
+
+    let t0 = Instant::now();
+    for r in reqs {
+        while (t0.elapsed().as_nanos() as u64) < r.at_ns {
+            std::hint::spin_loop();
+        }
+        let at = Instant::now();
+        let ticket = service
+            .submit_with_class(r.problem, r.class)
+            .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+        tk_tx.send((ticket, at)).expect("collector alive");
+    }
+    drop(tk_tx);
+    let (mut latencies_ms, _errors) = collector.join().expect("collector");
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = service.metrics().snapshot();
+    service.shutdown();
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| {
+        if latencies_ms.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&latencies_ms, p)
+        }
+    };
+    Ok(ScenarioReport {
+        scenario: scenario.name(),
+        policy: opts.policy.as_str(),
+        requests: opts.requests,
+        completed: latencies_ms.len(),
+        shed_interactive: snap.shed_interactive,
+        shed_bulk: snap.shed_bulk,
+        wall_s,
+        throughput_lps: latencies_ms.len() as f64 / wall_s.max(1e-9),
+        p50_ms: pct(50.0),
+        p95_ms: pct(95.0),
+        p99_ms: pct(99.0),
+        queue_p50_ms: snap.queue_wait_p50_ns as f64 / 1e6,
+        queue_p95_ms: snap.queue_wait_p95_ns as f64 / 1e6,
+        queue_p99_ms: snap.queue_wait_p99_ns as f64 / 1e6,
+        exec_p99_ms: snap.exec_p99_ns as f64 / 1e6,
+        mean_occupancy: snap.mean_occupancy,
+        padding_waste: snap.padding_waste(),
+        adaptive_closes: snap.closes.adaptive(),
+    })
+}
+
+/// The latency table: one row per scenario, the percentile columns the
+/// acceptance gate greps for (`p99`, `shed`).
+pub fn table(reports: &[ScenarioReport]) -> Table {
+    let mut t = Table::new(&[
+        "scenario",
+        "policy",
+        "requests",
+        "completed",
+        "shed",
+        "LPs/s",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "queue_p99_ms",
+        "exec_p99_ms",
+        "occupancy",
+        "padding_waste",
+        "adaptive_closes",
+    ]);
+    for r in reports {
+        t.push_row(vec![
+            r.scenario.to_string(),
+            r.policy.to_string(),
+            r.requests.to_string(),
+            r.completed.to_string(),
+            r.shed().to_string(),
+            format!("{:.0}", r.throughput_lps),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p95_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.3}", r.queue_p99_ms),
+            format!("{:.3}", r.exec_p99_ms),
+            format!("{:.3}", r.mean_occupancy),
+            format!("{:.3}", r.padding_waste),
+            r.adaptive_closes.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render one report as the flat JSON object shape `BENCH_pipeline.json`
+/// carries (the bench-gate field scanner reads it).
+pub fn json_record(r: &ScenarioReport) -> String {
+    format!(
+        "{{\n  \"bench\": \"loadgen_{}\",\n  \"scenario\": \"{}\",\n  \
+         \"policy\": \"{}\",\n  \"requests\": {},\n  \"completed\": {},\n  \
+         \"shed\": {},\n  \"throughput_lps\": {:.1},\n  \"p50_ms\": {:.3},\n  \
+         \"p95_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"queue_p99_ms\": {:.3},\n  \
+         \"exec_p99_ms\": {:.3},\n  \"occupancy\": {:.4},\n  \
+         \"padding_waste\": {:.4},\n  \"adaptive_closes\": {}\n}}",
+        r.scenario,
+        r.scenario,
+        r.policy,
+        r.requests,
+        r.completed,
+        r.shed(),
+        r.throughput_lps,
+        r.p50_ms,
+        r.p95_ms,
+        r.p99_ms,
+        r.queue_p99_ms,
+        r.exec_p99_ms,
+        r.mean_occupancy,
+        r.padding_waste,
+        r.adaptive_closes,
+    )
+}
+
+/// Split a flat JSON array (`[{...}, {...}]`, no nested objects — the
+/// only shape our bench files emit) into raw object bodies. The one
+/// splitter for `BENCH_pipeline.json`-shaped files: `bench_gate`'s field
+/// scanner walks the same bodies, so the two parsers cannot drift.
+pub fn split_flat_objects(text: &str) -> Vec<String> {
+    text.split('{')
+        .skip(1)
+        .filter_map(|chunk| chunk.split('}').next())
+        .map(|s| s.trim().trim_end_matches(',').trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Merge loadgen records into `BENCH_pipeline.json`: keep every existing
+/// non-loadgen record (the solver_micro pipeline/shard/depth sweeps),
+/// replace any stale loadgen rows, append the new ones. Idempotent —
+/// re-running loadgen never duplicates rows. (`solver_micro` rewrites the
+/// file wholesale, so run it first, as CI's bench job does.)
+pub fn merge_into_bench_json(path: &Path, records: &[String]) -> anyhow::Result<()> {
+    let mut bodies: Vec<String> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        for obj in split_flat_objects(&text) {
+            let is_loadgen = obj.contains("\"bench\"") && obj.contains("\"loadgen_");
+            if !is_loadgen {
+                bodies.push(format!("{{\n  {obj}\n}}"));
+            }
+        }
+    }
+    bodies.extend(records.iter().cloned());
+    let mut out = String::from("[\n");
+    out.push_str(&bodies.join(",\n"));
+    out.push_str("\n]\n");
+    std::fs::write(path, out)
+        .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(name: &'static str) -> ScenarioReport {
+        ScenarioReport {
+            scenario: name,
+            policy: "adaptive",
+            requests: 100,
+            completed: 90,
+            shed_interactive: 2,
+            shed_bulk: 8,
+            wall_s: 1.0,
+            throughput_lps: 90.0,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            queue_p50_ms: 0.2,
+            queue_p95_ms: 0.6,
+            queue_p99_ms: 0.8,
+            exec_p99_ms: 1.5,
+            mean_occupancy: 0.7,
+            padding_waste: 0.2,
+            adaptive_closes: 4,
+        }
+    }
+
+    #[test]
+    fn table_has_the_gated_columns() {
+        let t = table(&[report("bursty")]);
+        assert!(t.header.iter().any(|h| h == "p99_ms"));
+        assert!(t.header.iter().any(|h| h == "shed"));
+        let md = t.to_markdown();
+        assert!(md.contains("bursty"));
+        assert!(md.contains("10")); // shed total = 2 + 8
+    }
+
+    #[test]
+    fn json_record_is_scannable() {
+        let rec = json_record(&report("flood"));
+        assert!(rec.contains("\"bench\": \"loadgen_flood\""));
+        assert!(rec.contains("\"throughput_lps\": 90.0"));
+        assert!(rec.contains("\"shed\": 10"));
+    }
+
+    #[test]
+    fn merge_keeps_foreign_records_and_replaces_loadgen() {
+        let dir = std::env::temp_dir().join(format!(
+            "loadgen_merge_test_{}_{}",
+            std::process::id(),
+            std::thread::current().name().unwrap_or("t").len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_pipeline.json");
+        std::fs::write(
+            &path,
+            "[\n{\n  \"bench\": \"pipeline_cpu\",\n  \"throughput_lps\": 10.0\n},\n\
+             {\n  \"bench\": \"loadgen_flood\",\n  \"throughput_lps\": 1.0\n}\n]\n",
+        )
+        .unwrap();
+        let fresh = vec![json_record(&report("flood")), json_record(&report("bursty"))];
+        merge_into_bench_json(&path, &fresh).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("pipeline_cpu"));
+        assert!(text.contains("loadgen_bursty"));
+        // The stale flood row (1.0 LPs/s) was replaced by the fresh one.
+        assert_eq!(text.matches("loadgen_flood").count(), 1);
+        assert!(text.contains("\"throughput_lps\": 90.0"));
+        // Idempotent: merging again changes nothing.
+        merge_into_bench_json(&path, &fresh).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn split_flat_objects_handles_trailing_commas() {
+        let objs = split_flat_objects("[\n{ \"a\": 1 },\n{ \"b\": 2 }\n]\n");
+        assert_eq!(objs.len(), 2);
+        assert!(objs[0].contains("\"a\""));
+    }
+}

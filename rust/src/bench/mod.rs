@@ -7,11 +7,14 @@
 //! * [`imbalance`]  -- Figures 1/2 warp work-unit distribution statistics.
 //! * [`ablations`]  -- randomization / padding / batch-mix / batch-window
 //!   ablations of the design choices.
+//! * [`loadgen`]    -- open-loop latency-under-load scenario driver over
+//!   the serving layer (p50/p95/p99, queue-wait vs execute split, shed).
 
 pub mod ablations;
 pub mod contention;
 pub mod figures;
 pub mod harness;
 pub mod imbalance;
+pub mod loadgen;
 
 pub use harness::{bench, report_line, BenchOpts, BenchResult};

@@ -18,7 +18,9 @@
 //! run's records (dropping engine-path records, which stay out of the
 //! baseline until real PJRT bindings run in CI), preserving the documented
 //! header comment. Run it on the reference runner after a representative
-//! `cargo bench --bench solver_micro`.
+//! `cargo bench --bench solver_micro` followed by `cargo bench --bench
+//! loadgen` (solver_micro rewrites `BENCH_pipeline.json`; loadgen merges
+//! its latency-under-load records into it).
 //!
 //! The parser is a minimal field scanner for the flat `[{...}, ...]`
 //! array `solver_micro` emits — the offline vendor set has no serde, and
@@ -33,10 +35,12 @@ const DEFAULT_TOLERANCE: f64 = 0.15;
 const BASELINE_HEADER: &str = "Committed perf baseline for the CI bench-regression gate \
 (bench_gate). Rows with throughput_lps <= 0 are bootstrap rows: they pin the record set the \
 fresh run must produce, without pinning a number yet. Refresh on the reference runner with: \
-BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro && cargo run --release --bin \
-bench_gate -- --refresh BENCH_baseline.json BENCH_pipeline.json. Engine-path records \
-(pipeline_engine_*, pipeline_shard_engine) are excluded automatically until the real PJRT \
-bindings replace the offline xla stub in CI.";
+BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro && BATCH_LP2D_BENCH_FAST=1 cargo \
+bench --bench loadgen && cargo run --release --bin bench_gate -- --refresh \
+BENCH_baseline.json BENCH_pipeline.json (solver_micro rewrites BENCH_pipeline.json, loadgen \
+merges its loadgen_* records into it — run them in that order or the loadgen rows never \
+reach the baseline). Engine-path records (pipeline_engine_*, pipeline_shard_engine) are \
+excluded automatically until the real PJRT bindings replace the offline xla stub in CI.";
 
 /// One comparable bench record: match key + throughput, plus the fields
 /// the key derives from (so `--refresh` can re-emit the record).
@@ -71,10 +75,13 @@ fn extract_num(obj: &str, field: &str) -> Option<f64> {
 }
 
 /// Parse every `{...}` object carrying a `bench` + `throughput_lps` pair.
+/// Object splitting is shared with the loadgen merge path
+/// (`batch_lp2d::bench::loadgen::split_flat_objects`) so the two
+/// readers of `BENCH_pipeline.json` cannot drift.
 fn parse_records(text: &str) -> Vec<Record> {
     let mut out = Vec::new();
-    for obj in text.split('{').skip(1) {
-        let obj = obj.split('}').next().unwrap_or("");
+    for obj in batch_lp2d::bench::loadgen::split_flat_objects(text) {
+        let obj = obj.as_str();
         let (Some(bench), Some(lps)) =
             (extract_str(obj, "bench"), extract_num(obj, "throughput_lps"))
         else {
@@ -92,6 +99,32 @@ fn parse_records(text: &str) -> Vec<Record> {
         out.push(Record { key, bench, shards, depth, throughput_lps: lps });
     }
     out
+}
+
+/// True when not a single baseline record pins a number — the gate can
+/// only check record-set presence, not performance. CI output must say so
+/// loudly instead of printing an ordinary pass.
+fn baseline_unarmed(baseline: &[Record]) -> bool {
+    baseline.iter().all(|b| b.throughput_lps <= 0.0)
+}
+
+/// The loud banner printed when the committed baseline is still all
+/// bootstrap rows, with the exact refresh command.
+fn unarmed_warning(baseline_path: &str) -> String {
+    format!(
+        "##############################################################\n\
+         # BASELINE UNARMED: every record in {baseline_path} is a\n\
+         # bootstrap row (throughput_lps <= 0). The bench gate checked\n\
+         # only that the record set matches — NO throughput regression\n\
+         # was (or could be) detected. Arm it on the reference runner\n\
+         # (in this order — solver_micro rewrites the snapshot, loadgen\n\
+         # merges into it):\n\
+         #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro\n\
+         #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench loadgen\n\
+         #   cargo run --release --bin bench_gate -- --refresh \\\n\
+         #     BENCH_baseline.json BENCH_pipeline.json\n\
+         ##############################################################"
+    )
 }
 
 /// Compare fresh against baseline; Ok carries the report lines, Err the
@@ -256,7 +289,14 @@ fn main() -> ExitCode {
             for l in lines {
                 println!("{l}");
             }
-            println!("bench gate: OK");
+            // A bootstrap-only baseline must never read as a quiet pass:
+            // the gate checked nothing but record presence.
+            if baseline_unarmed(&baseline) {
+                println!("{}", unarmed_warning(paths[0]));
+                println!("bench gate: OK (record set only — BASELINE UNARMED)");
+            } else {
+                println!("bench gate: OK");
+            }
             ExitCode::SUCCESS
         }
         Err(lines) => {
@@ -358,6 +398,23 @@ mod tests {
         let lines = compare(&base, &fresh, 0.15).unwrap();
         assert!(lines.iter().any(|l| l.starts_with("boot")));
         assert!(lines.iter().any(|l| l.starts_with("new")));
+    }
+
+    #[test]
+    fn unarmed_detection_and_warning_text() {
+        // All-bootstrap baseline: unarmed, and the warning names the file,
+        // the condition, and the exact refresh command.
+        let boot = vec![rec("a", 0.0), rec("b", -1.0)];
+        assert!(baseline_unarmed(&boot));
+        // One armed record is enough to count as armed.
+        let mixed = vec![rec("a", 0.0), rec("b", 100.0)];
+        assert!(!baseline_unarmed(&mixed));
+        assert!(baseline_unarmed(&[]));
+        let w = unarmed_warning("BENCH_baseline.json");
+        assert!(w.contains("BASELINE UNARMED"));
+        assert!(w.contains("BENCH_baseline.json"));
+        assert!(w.contains("--refresh"));
+        assert!(w.contains("bench_gate"));
     }
 
     #[test]

@@ -1,0 +1,892 @@
+//! The policy-driven admission pipeline: routing → deadline queues →
+//! close policy → shed, unified in one place (the seed-era `Router` +
+//! `Batcher` pair, grown a brain).
+//!
+//! Like the old batcher this is a pure data structure — no threads, no
+//! clocks of its own. The service's dispatcher drives it with explicit
+//! timestamps and an explicit idle-shard count, which keeps every policy
+//! decision unit-testable with a mock clock. The pipeline owns:
+//!
+//! * **Routing** — each submit carries its size class (the smallest
+//!   compiled m that fits, from the [`Router`] table this pipeline owns).
+//!   An unknown class is a *typed* rejection ([`RejectReason::NoClass`]),
+//!   never a panic: a malformed submit cannot kill the dispatcher.
+//! * **Deadline classes** — every request is `Interactive` or `Bulk`
+//!   ([`DeadlineClass`]), each with its own SLO wait bound. Queues are per
+//!   (size class × deadline class); ready batches drain in
+//!   earliest-deadline-first order.
+//! * **Close policy** ([`ClosePolicy`]) — `Fixed` reproduces the seed
+//!   behaviour (close at capacity or SLO deadline). `Adaptive` adds two
+//!   work-conserving rules on top:
+//!   1. *idle-shard close*: when the dispatcher reports idle executor
+//!      shards and a class queue is non-empty, close it now — padding an
+//!      under-full batch beats letting hardware idle;
+//!   2. *cost-aware close*: close when the projected additional wait to
+//!      fill the batch (per-class EWMA of inter-arrival gaps) exceeds the
+//!      padding + execution cost of going now (the
+//!      [`Backend::cost_ns`](crate::runtime::backend::Backend::cost_ns)
+//!      model evaluated over the class's capacity bucket).
+//!   Both adaptive rules fire only while the dispatcher reports idle
+//!   shards — when every shard is busy the pipeline *holds*, so batches
+//!   fill instead of fragmenting (and overload queueing stays behind the
+//!   shed boundary). Batches still close at capacity and at the SLO
+//!   deadline under either policy, so `Adaptive` only ever closes
+//!   *earlier* than `Fixed`.
+//! * **Bounded queueing + shedding** — total queued items are bounded by
+//!   `max_queue`. When full, bulk is shed before interactive: an incoming
+//!   bulk item is refused outright, an incoming interactive item evicts
+//!   the newest queued bulk item (least sunk wait) and only sheds itself
+//!   when no bulk is queued. Shed items are handed back to the caller for
+//!   error replies and per-class accounting.
+//!
+//! # The no-spin clock contract
+//!
+//! [`AdmissionPipeline::poll`] closes *every* expired queue in one pass,
+//! and [`AdmissionPipeline::next_deadline_in`] is guaranteed, immediately
+//! after a `poll(now, ..)`, to return either `None` or a strictly positive
+//! duration. The seed-era batcher could report `Some(0)` repeatedly for an
+//! expired-but-unpolled queue, making the dispatcher spin on a zero
+//! timeout; the pair of guarantees above makes that impossible (property:
+//! `no_spin_after_poll`).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::Router;
+
+/// Latency class of one request: which SLO bounds its queue wait, and who
+/// is shed first under overload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeadlineClass {
+    /// Latency-sensitive traffic; tight SLO, shed last.
+    Interactive,
+    /// Throughput traffic; loose SLO, shed first.
+    Bulk,
+}
+
+impl DeadlineClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeadlineClass::Interactive => "interactive",
+            DeadlineClass::Bulk => "bulk",
+        }
+    }
+}
+
+/// Why a batch closed — the observable trace of the close policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseReason {
+    /// The class queue reached its batch capacity.
+    Full,
+    /// The oldest entry hit its SLO deadline.
+    Deadline,
+    /// Adaptive: executor shards were idle and the queue was non-empty.
+    IdleShard,
+    /// Adaptive: projected wait to fill exceeded the cost of going now.
+    Cost,
+    /// Shutdown/drain flush.
+    Flush,
+}
+
+/// Why the pipeline refused an item.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The submit named a size class that is not in the routing table —
+    /// a malformed submit (the seed-era batcher panicked here).
+    NoClass { class_m: usize },
+    /// The bounded queue was full and this item lost the shed decision.
+    QueueFull { queued: usize, max_queue: usize },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::NoClass { class_m } => {
+                write!(f, "unknown size class {class_m}")
+            }
+            RejectReason::QueueFull { queued, max_queue } => {
+                write!(f, "shed: admission queue full ({queued}/{max_queue})")
+            }
+        }
+    }
+}
+
+/// An item the pipeline refused or evicted, handed back for an error reply.
+#[derive(Debug)]
+pub struct Rejected<T> {
+    pub item: T,
+    pub class: DeadlineClass,
+    pub reason: RejectReason,
+}
+
+/// Outcome of one [`AdmissionPipeline::push`]: at most one batch can close
+/// (the pushed class filling), and any number of items can be shed (the
+/// pushed item itself, or queued bulk evicted to make room for it).
+#[derive(Debug)]
+pub struct Admitted<T> {
+    pub ready: Option<ReadyBatch<T>>,
+    pub shed: Vec<Rejected<T>>,
+}
+
+// Manual impl: a derive would demand `T: Default`, which the service's
+// request type has no reason to provide.
+impl<T> Default for Admitted<T> {
+    fn default() -> Self {
+        Admitted { ready: None, shed: Vec::new() }
+    }
+}
+
+impl<T> Admitted<T> {
+    fn rejected(item: T, class: DeadlineClass, reason: RejectReason) -> Admitted<T> {
+        Admitted { ready: None, shed: vec![Rejected { item, class, reason }] }
+    }
+}
+
+/// A closed batch ready for packing/execution.
+#[derive(Debug)]
+pub struct ReadyBatch<T> {
+    pub class_m: usize,
+    pub deadline_class: DeadlineClass,
+    pub reason: CloseReason,
+    pub items: Vec<T>,
+    /// Per-item queue wait at close time, aligned with `items`.
+    pub waits: Vec<Duration>,
+    /// Sum of the items' true constraint counts — the live rows; the
+    /// padding gauge is `1 - rows_used / (items.len() * class_m)`.
+    pub rows_used: u64,
+    /// Queueing delay of the oldest item at close time.
+    pub oldest_wait: Duration,
+}
+
+/// Batch close policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClosePolicy {
+    /// Close at capacity or SLO deadline only (the seed behaviour).
+    Fixed,
+    /// `Fixed` plus work-conserving idle-shard close and cost-aware close.
+    Adaptive,
+}
+
+impl ClosePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<ClosePolicy> {
+        match s.trim() {
+            "fixed" => Ok(ClosePolicy::Fixed),
+            "adaptive" => Ok(ClosePolicy::Adaptive),
+            other => anyhow::bail!("unknown close policy '{other}' (fixed|adaptive)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClosePolicy::Fixed => "fixed",
+            ClosePolicy::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Admission configuration: the policy knobs the service threads through
+/// from its `Config` (and the CLI's `--policy`/`--max-queue`/`--slo-ms`).
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    pub policy: ClosePolicy,
+    /// SLO wait bound per deadline class.
+    pub interactive_wait: Duration,
+    pub bulk_wait: Duration,
+    /// Bound on total queued items across every queue; 0 disables
+    /// queueing entirely (every push sheds or closes).
+    pub max_queue: usize,
+    /// Estimated busy-ns to execute one full capacity batch per size class
+    /// (aligned with the router's `classes()`), from the cheapest
+    /// backend's cost model. Empty disables the cost-aware close rule.
+    pub class_cost_ns: Vec<u64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            policy: ClosePolicy::Adaptive,
+            interactive_wait: Duration::from_millis(2),
+            bulk_wait: Duration::from_millis(16),
+            max_queue: 32_768,
+            class_cost_ns: Vec::new(),
+        }
+    }
+}
+
+/// Smoothing factor of the per-queue inter-arrival EWMA (higher = reacts
+/// faster to rate changes).
+const GAP_EWMA_ALPHA: f64 = 0.25;
+
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    rows: usize,
+    enqueued: Instant,
+}
+
+/// One (size class × deadline class) queue with its arrival-rate estimate.
+#[derive(Debug)]
+struct ClassQueue<T> {
+    entries: Vec<Entry<T>>,
+    /// EWMA of inter-arrival gaps (ns); `None` until two arrivals seen.
+    gap_ewma_ns: Option<f64>,
+    last_arrival: Option<Instant>,
+}
+
+impl<T> Default for ClassQueue<T> {
+    fn default() -> Self {
+        ClassQueue { entries: Vec::new(), gap_ewma_ns: None, last_arrival: None }
+    }
+}
+
+/// The unified admission pipeline. `T` is the service's pending-request
+/// type; tests drive it with plain integers.
+#[derive(Debug)]
+pub struct AdmissionPipeline<T> {
+    router: Router,
+    /// Ascending distinct size classes (mirrors `router.classes()`).
+    classes: Vec<usize>,
+    /// Batch capacity per size class.
+    capacity: Vec<usize>,
+    config: AdmissionConfig,
+    /// Queues indexed `[class][deadline_class]` (0 = interactive, 1 = bulk).
+    queues: Vec<[ClassQueue<T>; 2]>,
+    queued_total: usize,
+}
+
+fn dclass_index(c: DeadlineClass) -> usize {
+    match c {
+        DeadlineClass::Interactive => 0,
+        DeadlineClass::Bulk => 1,
+    }
+}
+
+impl<T> AdmissionPipeline<T> {
+    /// Build over a routing table; `capacity[i]` closes class `i` when
+    /// full (the service clamps the router's bucket capacity by its
+    /// `max_batch` before constructing).
+    pub fn new(router: Router, capacity: Vec<usize>, config: AdmissionConfig) -> Self {
+        let classes = router.classes().to_vec();
+        assert_eq!(classes.len(), capacity.len());
+        assert!(capacity.iter().all(|&c| c > 0));
+        assert!(
+            config.class_cost_ns.is_empty() || config.class_cost_ns.len() == classes.len(),
+            "class_cost_ns must align with the size classes"
+        );
+        let queues = classes
+            .iter()
+            .map(|_| [ClassQueue::default(), ClassQueue::default()])
+            .collect();
+        AdmissionPipeline { router, classes, capacity, config, queues, queued_total: 0 }
+    }
+
+    /// The routing table this pipeline owns.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Size class for a problem of `m` constraints (delegates to the
+    /// router): the smallest compiled m that fits.
+    pub fn route(&self, m: usize) -> Option<usize> {
+        self.router.route(m)
+    }
+
+    pub fn policy(&self) -> ClosePolicy {
+        self.config.policy
+    }
+
+    /// SLO wait bound of a deadline class.
+    pub fn slo(&self, class: DeadlineClass) -> Duration {
+        match class {
+            DeadlineClass::Interactive => self.config.interactive_wait,
+            DeadlineClass::Bulk => self.config.bulk_wait,
+        }
+    }
+
+    /// Total queued items across every queue.
+    pub fn len(&self) -> usize {
+        self.queued_total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued_total == 0
+    }
+
+    /// Queue an item of size class `class_m` with `rows` true constraint
+    /// rows. Returns the closed batch if this push filled the class, plus
+    /// anything the bounded-queue policy shed to admit it.
+    pub fn push(
+        &mut self,
+        class_m: usize,
+        deadline_class: DeadlineClass,
+        item: T,
+        rows: usize,
+        now: Instant,
+    ) -> Admitted<T> {
+        let Ok(ci) = self.classes.binary_search(&class_m) else {
+            // The seed-era batcher panicked here ("unknown size class");
+            // a malformed submit must bounce, not kill the dispatcher.
+            return Admitted::rejected(
+                item,
+                deadline_class,
+                RejectReason::NoClass { class_m },
+            );
+        };
+
+        let di = dclass_index(deadline_class);
+        let mut out = Admitted::default();
+        // A push that fills its queue to capacity closes a batch in the
+        // same call and *frees* slots — never shed for it: at the bound,
+        // evicting (or refusing) to admit an item that instantly drains
+        // `capacity` entries would be pure waste.
+        let fills = self.queues[ci][di].entries.len() + 1 >= self.capacity[ci];
+        if !fills && self.queued_total >= self.config.max_queue {
+            match deadline_class {
+                // Shed bulk before interactive: incoming bulk is refused
+                // outright...
+                DeadlineClass::Bulk => {
+                    return Admitted::rejected(
+                        item,
+                        deadline_class,
+                        RejectReason::QueueFull {
+                            queued: self.queued_total,
+                            max_queue: self.config.max_queue,
+                        },
+                    );
+                }
+                // ...while incoming interactive evicts the newest queued
+                // bulk item (least sunk wait). Only when no bulk is queued
+                // does interactive shed itself.
+                DeadlineClass::Interactive => match self.evict_newest_bulk() {
+                    Some(evicted) => out.shed.push(evicted),
+                    None => {
+                        return Admitted::rejected(
+                            item,
+                            deadline_class,
+                            RejectReason::QueueFull {
+                                queued: self.queued_total,
+                                max_queue: self.config.max_queue,
+                            },
+                        );
+                    }
+                },
+            }
+        }
+
+        let q = &mut self.queues[ci][di];
+        if let Some(last) = q.last_arrival {
+            let gap = now.saturating_duration_since(last).as_nanos() as f64;
+            q.gap_ewma_ns = Some(match q.gap_ewma_ns {
+                Some(e) => e + GAP_EWMA_ALPHA * (gap - e),
+                None => gap,
+            });
+        }
+        q.last_arrival = Some(now);
+        q.entries.push(Entry { item, rows, enqueued: now });
+        self.queued_total += 1;
+
+        if self.queues[ci][di].entries.len() >= self.capacity[ci] {
+            out.ready = Some(self.close(ci, di, CloseReason::Full, now));
+        }
+        out
+    }
+
+    /// One policy pass: close every queue whose oldest entry hit its SLO
+    /// deadline (coalesced — a single call drains all expired queues, the
+    /// no-spin guarantee), then, under the adaptive policy **and only
+    /// while executor shards are idle**, apply the work-conserving rules:
+    /// cost-aware closes for every queue whose projected fill wait
+    /// exceeds the cost of going now, plus up to `idle_shards` additional
+    /// EDF closes. Ready batches come back in earliest-deadline-first
+    /// order.
+    ///
+    /// Gating both adaptive rules on `idle_shards > 0` is what keeps the
+    /// policy work-conserving rather than merely eager: when every shard
+    /// is busy, early closes would only migrate queueing past the shed
+    /// boundary (admission's `max_queue` bounds *these* queues, nothing
+    /// bounds the executor channels) while collapsing batch occupancy —
+    /// the under-full-batch throughput cliff the batched-LP literature
+    /// warns about. Held batches still close at capacity or their SLO.
+    pub fn poll(&mut self, now: Instant, idle_shards: usize) -> Vec<ReadyBatch<T>> {
+        let adaptive = self.config.policy == ClosePolicy::Adaptive && idle_shards > 0;
+        // (deadline, class idx, dclass idx, reason) of every queue due to
+        // close this pass.
+        let mut due: Vec<(Instant, usize, usize, CloseReason)> = Vec::new();
+        for ci in 0..self.classes.len() {
+            for di in 0..2 {
+                let q = &self.queues[ci][di];
+                let Some(oldest) = q.entries.first() else { continue };
+                let slo = self.slo(if di == 0 {
+                    DeadlineClass::Interactive
+                } else {
+                    DeadlineClass::Bulk
+                });
+                let deadline = oldest.enqueued + slo;
+                if now >= deadline {
+                    due.push((deadline, ci, di, CloseReason::Deadline));
+                } else if adaptive && self.cost_says_close(ci, di) {
+                    due.push((deadline, ci, di, CloseReason::Cost));
+                }
+            }
+        }
+        // EDF: the queue whose oldest entry is closest to (or furthest
+        // past) its deadline drains first.
+        due.sort_by_key(|&(deadline, ci, di, _)| (deadline, ci, di));
+
+        // Work-conserving idle-shard closes: top up with the
+        // earliest-deadline non-empty queues not already due, one per
+        // idle shard beyond those already closing.
+        if adaptive && idle_shards > due.len() {
+            let mut extra: Vec<(Instant, usize, usize, CloseReason)> = Vec::new();
+            for ci in 0..self.classes.len() {
+                for di in 0..2 {
+                    if due.iter().any(|&(_, c, d, _)| c == ci && d == di) {
+                        continue;
+                    }
+                    let Some(oldest) = self.queues[ci][di].entries.first() else {
+                        continue;
+                    };
+                    let slo = self.slo(if di == 0 {
+                        DeadlineClass::Interactive
+                    } else {
+                        DeadlineClass::Bulk
+                    });
+                    extra.push((oldest.enqueued + slo, ci, di, CloseReason::IdleShard));
+                }
+            }
+            extra.sort_by_key(|&(deadline, ci, di, _)| (deadline, ci, di));
+            extra.truncate(idle_shards - due.len());
+            due.extend(extra);
+            due.sort_by_key(|&(deadline, ci, di, _)| (deadline, ci, di));
+        }
+
+        due.into_iter()
+            .map(|(_, ci, di, reason)| self.close(ci, di, reason, now))
+            .collect()
+    }
+
+    /// Time until the next SLO deadline would fire. `None` when every
+    /// queue is empty. Immediately after `poll(now, ..)` this is either
+    /// `None` or strictly positive — the dispatcher can never spin on a
+    /// zero timeout.
+    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
+        let mut best: Option<Duration> = None;
+        for ci in 0..self.classes.len() {
+            for di in 0..2 {
+                let Some(oldest) = self.queues[ci][di].entries.first() else { continue };
+                let slo = self.slo(if di == 0 {
+                    DeadlineClass::Interactive
+                } else {
+                    DeadlineClass::Bulk
+                });
+                let left = (oldest.enqueued + slo).saturating_duration_since(now);
+                best = Some(best.map_or(left, |b: Duration| b.min(left)));
+            }
+        }
+        best
+    }
+
+    /// Drain everything (shutdown), earliest-deadline first.
+    pub fn flush(&mut self, now: Instant) -> Vec<ReadyBatch<T>> {
+        let mut due: Vec<(Instant, usize, usize)> = Vec::new();
+        for ci in 0..self.classes.len() {
+            for di in 0..2 {
+                if let Some(oldest) = self.queues[ci][di].entries.first() {
+                    due.push((oldest.enqueued, ci, di));
+                }
+            }
+        }
+        due.sort();
+        due.into_iter()
+            .map(|(_, ci, di)| self.close(ci, di, CloseReason::Flush, now))
+            .collect()
+    }
+
+    /// Cost-aware close rule: with `k` of `cap` slots filled and an
+    /// arrival-gap estimate `g`, the projected additional wait to fill is
+    /// `g * (cap - k)`; going now wastes the padding slots' share of the
+    /// full-batch execution cost, `C * (cap - k) / cap`. Close when
+    /// waiting is projected to cost more than the padding does.
+    fn cost_says_close(&self, ci: usize, di: usize) -> bool {
+        if self.config.class_cost_ns.is_empty() {
+            return false;
+        }
+        let q = &self.queues[ci][di];
+        let k = q.entries.len();
+        let cap = self.capacity[ci];
+        if k == 0 || k >= cap {
+            return false;
+        }
+        let Some(gap) = q.gap_ewma_ns else { return false };
+        let full_cost = self.config.class_cost_ns[ci] as f64;
+        let projected_wait = gap * (cap - k) as f64;
+        let padding_cost = full_cost * (cap - k) as f64 / cap as f64;
+        projected_wait > padding_cost
+    }
+
+    /// Evict the newest queued bulk entry (the one with the least sunk
+    /// wait), searching from the largest class down.
+    fn evict_newest_bulk(&mut self) -> Option<Rejected<T>> {
+        let mut newest: Option<(usize, Instant)> = None;
+        for ci in 0..self.classes.len() {
+            if let Some(e) = self.queues[ci][1].entries.last() {
+                let newer = match newest {
+                    None => true,
+                    Some((_, t)) => e.enqueued >= t,
+                };
+                if newer {
+                    newest = Some((ci, e.enqueued));
+                }
+            }
+        }
+        let (ci, _) = newest?;
+        let e = self.queues[ci][1].entries.pop()?;
+        self.queued_total -= 1;
+        Some(Rejected {
+            item: e.item,
+            class: DeadlineClass::Bulk,
+            reason: RejectReason::QueueFull {
+                queued: self.config.max_queue,
+                max_queue: self.config.max_queue,
+            },
+        })
+    }
+
+    fn close(&mut self, ci: usize, di: usize, reason: CloseReason, now: Instant) -> ReadyBatch<T> {
+        let entries = std::mem::take(&mut self.queues[ci][di].entries);
+        self.queued_total -= entries.len();
+        let oldest_wait = entries
+            .first()
+            .map(|e| now.saturating_duration_since(e.enqueued))
+            .unwrap_or_default();
+        let rows_used = entries.iter().map(|e| e.rows as u64).sum();
+        let mut items = Vec::with_capacity(entries.len());
+        let mut waits = Vec::with_capacity(entries.len());
+        for e in entries {
+            waits.push(now.saturating_duration_since(e.enqueued));
+            items.push(e.item);
+        }
+        ReadyBatch {
+            class_m: self.classes[ci],
+            deadline_class: if di == 0 {
+                DeadlineClass::Interactive
+            } else {
+                DeadlineClass::Bulk
+            },
+            reason,
+            items,
+            waits,
+            rows_used,
+            oldest_wait,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Manifest, Variant};
+
+    fn router() -> Router {
+        let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                    rgb\t4\t16\t4\t16\ta\n\
+                    rgb\t4\t64\t4\t64\tb\n";
+        let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+        Router::new(&manifest, Variant::Rgb).unwrap()
+    }
+
+    fn pipeline(config: AdmissionConfig) -> AdmissionPipeline<u32> {
+        AdmissionPipeline::new(router(), vec![4, 4], config)
+    }
+
+    fn fixed() -> AdmissionConfig {
+        AdmissionConfig {
+            policy: ClosePolicy::Fixed,
+            interactive_wait: Duration::from_millis(10),
+            bulk_wait: Duration::from_millis(80),
+            ..AdmissionConfig::default()
+        }
+    }
+
+    #[test]
+    fn unknown_class_is_typed_rejection_not_panic() {
+        // Regression for the seed-era `Batcher::class_index` panic: the
+        // same malformed submit now comes back as a typed rejection.
+        let mut p = pipeline(fixed());
+        let out = p.push(32, DeadlineClass::Interactive, 7, 10, Instant::now());
+        assert!(out.ready.is_none());
+        assert_eq!(out.shed.len(), 1);
+        assert_eq!(out.shed[0].item, 7);
+        assert_eq!(out.shed[0].reason, RejectReason::NoClass { class_m: 32 });
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn fills_close_at_capacity_fifo() {
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        for i in 0..3 {
+            let out = p.push(16, DeadlineClass::Interactive, i, 10, t);
+            assert!(out.ready.is_none() && out.shed.is_empty());
+        }
+        let out = p.push(16, DeadlineClass::Interactive, 3, 12, t);
+        let ready = out.ready.expect("fourth push closes");
+        assert_eq!(ready.class_m, 16);
+        assert_eq!(ready.reason, CloseReason::Full);
+        assert_eq!(ready.items, vec![0, 1, 2, 3]);
+        assert_eq!(ready.rows_used, 42);
+        assert_eq!(ready.waits.len(), 4);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn deadline_classes_queue_separately() {
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        p.push(16, DeadlineClass::Bulk, 2, 8, t);
+        assert_eq!(p.len(), 2);
+        // Interactive expires first (10ms vs 80ms) and drains alone.
+        let ready = p.poll(t + Duration::from_millis(11), 0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].deadline_class, DeadlineClass::Interactive);
+        assert_eq!(ready[0].items, vec![1]);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn poll_coalesces_all_expired_queues_edf() {
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        p.push(64, DeadlineClass::Interactive, 1, 8, t);
+        p.push(16, DeadlineClass::Interactive, 2, 8, t + Duration::from_millis(1));
+        p.push(16, DeadlineClass::Bulk, 3, 8, t);
+        // Far past every deadline: ONE poll closes all three, EDF order.
+        let ready = p.poll(t + Duration::from_secs(1), 0);
+        assert_eq!(ready.len(), 3);
+        assert_eq!(ready[0].items, vec![1]); // deadline t+10ms, class 64
+        assert_eq!(ready[1].items, vec![2]); // deadline t+11ms
+        assert_eq!(ready[2].items, vec![3]); // bulk, deadline t+80ms
+        assert!(ready.iter().all(|r| r.reason == CloseReason::Deadline));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn no_spin_after_poll() {
+        // The dispatcher-spin regression: next_deadline_in must never
+        // report zero after a poll pass, however stale the queues were.
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        for (i, &class) in [16usize, 64, 16].iter().enumerate() {
+            let dc = if i == 2 { DeadlineClass::Bulk } else { DeadlineClass::Interactive };
+            p.push(class, dc, i as u32, 8, t);
+        }
+        let mut now = t;
+        // Simulated dispatcher loop over 1 second of mock time: every
+        // iteration either sleeps a positive timeout or the queues are
+        // empty — bounded iterations, no zero-timeout spin.
+        let mut iters = 0usize;
+        while now < t + Duration::from_secs(1) {
+            iters += 1;
+            assert!(iters < 64, "dispatcher loop is spinning");
+            let _ = p.poll(now, 0);
+            match p.next_deadline_in(now) {
+                Some(d) => {
+                    assert!(d > Duration::ZERO, "zero timeout would spin");
+                    now += d;
+                }
+                None => break,
+            }
+        }
+        assert!(p.is_empty());
+        assert!(iters <= 4, "expected a handful of wakeups, got {iters}");
+    }
+
+    #[test]
+    fn expired_exactly_at_deadline_closes() {
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        let at = t + Duration::from_millis(10);
+        assert_eq!(p.next_deadline_in(at), Some(Duration::ZERO));
+        let ready = p.poll(at, 0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(p.next_deadline_in(at), None);
+    }
+
+    #[test]
+    fn adaptive_closes_on_idle_shards_only() {
+        let mut p = pipeline(AdmissionConfig {
+            policy: ClosePolicy::Adaptive,
+            interactive_wait: Duration::from_millis(10),
+            bulk_wait: Duration::from_millis(80),
+            class_cost_ns: Vec::new(), // cost rule off: isolate idle rule
+            ..AdmissionConfig::default()
+        });
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        // All shards busy: hold (work conservation does not fire).
+        assert!(p.poll(t + Duration::from_millis(1), 0).is_empty());
+        // An idle shard: close now, long before the 10ms SLO.
+        let ready = p.poll(t + Duration::from_millis(2), 1);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].reason, CloseReason::IdleShard);
+        assert!(ready[0].oldest_wait < Duration::from_millis(10));
+    }
+
+    #[test]
+    fn idle_closes_are_bounded_by_idle_shard_count() {
+        let mut p = pipeline(AdmissionConfig {
+            policy: ClosePolicy::Adaptive,
+            interactive_wait: Duration::from_millis(10),
+            bulk_wait: Duration::from_millis(80),
+            class_cost_ns: Vec::new(),
+            ..AdmissionConfig::default()
+        });
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        p.push(64, DeadlineClass::Interactive, 2, 8, t + Duration::from_millis(1));
+        p.push(16, DeadlineClass::Bulk, 3, 8, t);
+        // One idle shard: only the earliest-deadline queue closes.
+        let ready = p.poll(t + Duration::from_millis(2), 1);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].items, vec![1]);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn cost_rule_closes_sparse_traffic_beyond_the_idle_picks() {
+        // Two sparse queues, ONE idle shard: the EDF idle rule alone
+        // would close one queue; the cost rule (projected 30ms fill wait
+        // vs 0.5ms padding cost) closes the other too.
+        let cfg = AdmissionConfig {
+            policy: ClosePolicy::Adaptive,
+            interactive_wait: Duration::from_secs(10), // SLO out of the way
+            bulk_wait: Duration::from_secs(10),
+            // Full capacity-4 batch costs 1ms to execute.
+            class_cost_ns: vec![1_000_000, 1_000_000],
+            ..AdmissionConfig::default()
+        };
+        let mut p = pipeline(cfg.clone());
+        let t = Instant::now();
+        for (class, gap_ms) in [(16usize, 10u64), (64, 12)] {
+            p.push(class, DeadlineClass::Interactive, 1, 8, t);
+            p.push(class, DeadlineClass::Interactive, 2, 8, t + Duration::from_millis(gap_ms));
+        }
+        let ready = p.poll(t + Duration::from_millis(12), 1);
+        assert_eq!(ready.len(), 2, "cost closes are not capped by the idle count");
+        assert!(ready.iter().all(|r| r.reason == CloseReason::Cost));
+        assert!(p.is_empty());
+
+        // Dense traffic (10µs gaps, projected 20µs fill wait vs 500µs
+        // padding cost): the cost rule holds both; the single idle shard
+        // closes exactly the earliest-deadline queue.
+        let mut p = pipeline(cfg.clone());
+        let t = Instant::now();
+        for class in [16usize, 64] {
+            p.push(class, DeadlineClass::Interactive, 1, 8, t);
+            p.push(class, DeadlineClass::Interactive, 2, 8, t + Duration::from_micros(10));
+        }
+        let ready = p.poll(t + Duration::from_micros(10), 1);
+        assert_eq!(ready.len(), 1, "dense queues hold; only the idle pick closes");
+        assert_eq!(ready[0].reason, CloseReason::IdleShard);
+        assert_eq!(ready[0].class_m, 16, "EDF pick (pushed first)");
+
+        // All shards busy: NOTHING closes early, however sparse the
+        // traffic — the work-conserving gate.
+        let mut p = pipeline(cfg);
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        p.push(16, DeadlineClass::Interactive, 2, 8, t + Duration::from_millis(10));
+        assert!(p.poll(t + Duration::from_millis(10), 0).is_empty());
+    }
+
+    #[test]
+    fn shed_bulk_before_interactive() {
+        let mut p = pipeline(AdmissionConfig { max_queue: 2, ..fixed() });
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Bulk, 1, 8, t);
+        p.push(16, DeadlineClass::Bulk, 2, 8, t + Duration::from_millis(1));
+        // Queue full: incoming bulk is refused outright.
+        let out = p.push(16, DeadlineClass::Bulk, 3, 8, t + Duration::from_millis(2));
+        assert_eq!(out.shed.len(), 1);
+        assert_eq!(out.shed[0].item, 3);
+        assert!(matches!(out.shed[0].reason, RejectReason::QueueFull { .. }));
+        // Incoming interactive evicts the NEWEST queued bulk (item 2).
+        let out = p.push(16, DeadlineClass::Interactive, 4, 8, t + Duration::from_millis(3));
+        assert_eq!(out.shed.len(), 1);
+        assert_eq!(out.shed[0].item, 2);
+        assert_eq!(out.shed[0].class, DeadlineClass::Bulk);
+        assert_eq!(p.len(), 2);
+        // Full of interactive + old bulk: next interactive evicts bulk 1.
+        let out = p.push(16, DeadlineClass::Interactive, 5, 8, t + Duration::from_millis(4));
+        assert_eq!(out.shed[0].item, 1);
+        // No bulk left: interactive sheds itself.
+        let out = p.push(16, DeadlineClass::Interactive, 6, 8, t + Duration::from_millis(5));
+        assert_eq!(out.shed[0].item, 6);
+        assert_eq!(out.shed[0].class, DeadlineClass::Interactive);
+        // The queued interactive items survived it all.
+        let drained = p.flush(t + Duration::from_millis(6));
+        let items: Vec<u32> = drained.into_iter().flat_map(|b| b.items).collect();
+        assert_eq!(items, vec![4, 5]);
+    }
+
+    #[test]
+    fn batch_filling_push_is_never_shed_at_the_bound() {
+        // queued_total == max_queue, and the incoming item is the one
+        // that fills its class to capacity: it must be admitted (the
+        // close frees every slot), not shed or traded for an eviction.
+        let mut p = pipeline(AdmissionConfig { max_queue: 3, ..fixed() });
+        let t = Instant::now();
+        for i in 0..3 {
+            let out = p.push(16, DeadlineClass::Interactive, i, 8, t);
+            assert!(out.ready.is_none() && out.shed.is_empty());
+        }
+        assert_eq!(p.len(), 3); // at the bound
+        let out = p.push(16, DeadlineClass::Interactive, 3, 8, t);
+        assert!(out.shed.is_empty(), "filling push must not shed");
+        let ready = out.ready.expect("capacity close fires");
+        assert_eq!(ready.items, vec![0, 1, 2, 3]);
+        assert!(p.is_empty());
+
+        // Same for bulk: a filling bulk push is admitted at the bound.
+        let mut p = pipeline(AdmissionConfig { max_queue: 3, ..fixed() });
+        for i in 0..3 {
+            p.push(16, DeadlineClass::Bulk, i, 8, t);
+        }
+        let out = p.push(16, DeadlineClass::Bulk, 3, 8, t);
+        assert!(out.shed.is_empty());
+        assert_eq!(out.ready.expect("bulk capacity close").items, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn flush_drains_everything_in_arrival_order() {
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        p.push(64, DeadlineClass::Bulk, 1, 8, t);
+        p.push(16, DeadlineClass::Interactive, 2, 8, t + Duration::from_millis(1));
+        let batches = p.flush(t + Duration::from_millis(2));
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].items, vec![1]);
+        assert_eq!(batches[0].reason, CloseReason::Flush);
+        assert_eq!(batches[1].items, vec![2]);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn routing_delegates_to_router() {
+        let p = pipeline(fixed());
+        assert_eq!(p.route(10), Some(16));
+        assert_eq!(p.route(16), Some(16));
+        assert_eq!(p.route(17), Some(64));
+        assert_eq!(p.route(65), None);
+        assert_eq!(p.router().classes(), &[16, 64]);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(ClosePolicy::parse("fixed").unwrap(), ClosePolicy::Fixed);
+        assert_eq!(ClosePolicy::parse("adaptive").unwrap(), ClosePolicy::Adaptive);
+        assert!(ClosePolicy::parse("bogus").is_err());
+        assert_eq!(ClosePolicy::Adaptive.as_str(), "adaptive");
+    }
+}

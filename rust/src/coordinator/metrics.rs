@@ -2,11 +2,16 @@
 //!
 //! Shared via `Arc<Metrics>`; updates take one short mutex section per
 //! event (the batch level, not the per-problem level, keeps this off the
-//! per-request hot path).
+//! per-request hot path). The admission side reports per-request queue
+//! waits, close reasons, shed counts, and per-class padding waste at batch
+//! close; the executor side reports the execute-time split per batch — the
+//! two histograms together give the queue-wait vs execute-time latency
+//! decomposition.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::coordinator::admission::{CloseReason, DeadlineClass};
 use crate::runtime::ExecTiming;
 use crate::util::LatencyHistogram;
 
@@ -16,16 +21,77 @@ struct Inner {
     solved: u64,
     infeasible: u64,
     rejected: u64,
+    shed_interactive: u64,
+    shed_bulk: u64,
     batches: u64,
     /// Sum of batch occupancy (used/capacity) to average later.
     occupancy_sum: f64,
     /// The service's configured staged-queue depth (0 until configured).
     pipeline_depth: usize,
+    closes: CloseCounts,
     queue_wait: LatencyHistogram,
     exec_latency: LatencyHistogram,
     exec_timing: ExecTimingTotals,
     /// Per-shard (executor) load; grows to the highest shard id seen.
     per_shard: Vec<ShardLoad>,
+    /// Per-size-class padding accounting, sorted by `class_m`.
+    padding: Vec<ClassPadding>,
+}
+
+/// How often each close-policy rule fired — the observable trace of the
+/// admission pipeline's decisions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CloseCounts {
+    pub full: u64,
+    pub deadline: u64,
+    pub idle: u64,
+    pub cost: u64,
+    pub flush: u64,
+}
+
+impl CloseCounts {
+    pub fn total(&self) -> u64 {
+        self.full + self.deadline + self.idle + self.cost + self.flush
+    }
+
+    /// Closes by the adaptive (work-conserving) rules.
+    pub fn adaptive(&self) -> u64 {
+        self.idle + self.cost
+    }
+
+    fn bump(&mut self, reason: CloseReason) {
+        match reason {
+            CloseReason::Full => self.full += 1,
+            CloseReason::Deadline => self.deadline += 1,
+            CloseReason::IdleShard => self.idle += 1,
+            CloseReason::Cost => self.cost += 1,
+            CloseReason::Flush => self.flush += 1,
+        }
+    }
+}
+
+/// Padding-waste gauge of one size class: live rows vs the class-shaped
+/// row count of everything batched there.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassPadding {
+    pub class_m: usize,
+    pub batches: u64,
+    /// True constraint rows across the class's batched problems.
+    pub rows_used: u64,
+    /// `items * class_m` across the class's batches (the rows the padded
+    /// shape pays for at class granularity).
+    pub rows_total: u64,
+}
+
+impl ClassPadding {
+    /// Fraction of the class-shaped rows that is dead padding work.
+    pub fn waste(&self) -> f64 {
+        if self.rows_total == 0 {
+            0.0
+        } else {
+            1.0 - self.rows_used as f64 / self.rows_total as f64
+        }
+    }
 }
 
 /// One executor shard's share of the served load — how evenly the weighted
@@ -83,19 +149,30 @@ pub struct Snapshot {
     pub solved: u64,
     pub infeasible: u64,
     pub rejected: u64,
+    /// Load-shed counts per deadline class (bulk sheds before interactive).
+    pub shed_interactive: u64,
+    pub shed_bulk: u64,
     pub batches: u64,
     pub mean_occupancy: f64,
     /// The service's configured staged-queue depth (0 = not configured).
     pub pipeline_depth: usize,
+    /// Close-policy rule counts.
+    pub closes: CloseCounts,
+    /// Admission queue wait (submit → batch close), per request.
     pub queue_wait_p50_ns: u64,
+    pub queue_wait_p95_ns: u64,
     pub queue_wait_p99_ns: u64,
+    /// Batch execute-side latency (pack+transfer+execute+unpack).
     pub exec_p50_ns: u64,
+    pub exec_p95_ns: u64,
     pub exec_p99_ns: u64,
     pub exec_mean_ns: f64,
     pub timing: ExecTimingTotals,
     /// Per-shard load split (index = shard/executor id), including steal
     /// counts and capacity weights.
     pub per_shard: Vec<ShardLoad>,
+    /// Per-size-class padding-waste gauges, sorted by class m.
+    pub padding: Vec<ClassPadding>,
 }
 
 impl Metrics {
@@ -129,6 +206,18 @@ impl Metrics {
         }
     }
 
+    /// Pre-size the per-class padding table (zero rows for classes that
+    /// never see traffic), mirroring `configure_shards`.
+    pub fn configure_classes(&self, classes: &[usize]) {
+        let mut g = self.inner.lock().unwrap();
+        for &class_m in classes {
+            if !g.padding.iter().any(|p| p.class_m == class_m) {
+                g.padding.push(ClassPadding { class_m, ..ClassPadding::default() });
+            }
+        }
+        g.padding.sort_by_key(|p| p.class_m);
+    }
+
     /// Record the service's staged-queue (pipeline ring) depth.
     pub fn set_pipeline_depth(&self, depth: usize) {
         self.inner.lock().unwrap().pipeline_depth = depth;
@@ -136,6 +225,42 @@ impl Metrics {
 
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Record a load-shed (bounded admission queue evicted/refused an
+    /// item of this deadline class).
+    pub fn on_shed(&self, class: DeadlineClass) {
+        let mut g = self.inner.lock().unwrap();
+        match class {
+            DeadlineClass::Interactive => g.shed_interactive += 1,
+            DeadlineClass::Bulk => g.shed_bulk += 1,
+        }
+    }
+
+    /// Record a batch close: which policy rule fired, each item's
+    /// admission-queue wait, and the class padding gauge (`rows_used` live
+    /// rows out of `items * class_m`).
+    pub fn on_close(
+        &self,
+        class_m: usize,
+        reason: CloseReason,
+        waits: &[Duration],
+        rows_used: u64,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.closes.bump(reason);
+        for w in waits {
+            g.queue_wait.record(w.as_nanos() as u64);
+        }
+        let rows_total = (waits.len() * class_m) as u64;
+        if let Some(p) = g.padding.iter_mut().find(|p| p.class_m == class_m) {
+            p.batches += 1;
+            p.rows_used += rows_used;
+            p.rows_total += rows_total;
+        } else {
+            g.padding.push(ClassPadding { class_m, batches: 1, rows_used, rows_total });
+            g.padding.sort_by_key(|p| p.class_m);
+        }
     }
 
     /// Record a completed batch: per-problem outcomes plus the exec split.
@@ -151,7 +276,6 @@ impl Metrics {
         used: usize,
         capacity: usize,
         infeasible: usize,
-        queue_wait: Duration,
         timing: &ExecTiming,
     ) {
         let mut g = self.inner.lock().unwrap();
@@ -159,7 +283,6 @@ impl Metrics {
         g.solved += used as u64;
         g.infeasible += infeasible as u64;
         g.occupancy_sum += used as f64 / capacity.max(1) as f64;
-        g.queue_wait.record(queue_wait.as_nanos() as u64);
         g.exec_latency.record(timing.total_ns());
         g.exec_timing.pack_ns += timing.pack_ns;
         g.exec_timing.transfer_ns += timing.transfer_ns;
@@ -187,6 +310,8 @@ impl Metrics {
             solved: g.solved,
             infeasible: g.infeasible,
             rejected: g.rejected,
+            shed_interactive: g.shed_interactive,
+            shed_bulk: g.shed_bulk,
             batches: g.batches,
             mean_occupancy: if g.batches > 0 {
                 g.occupancy_sum / g.batches as f64
@@ -194,13 +319,17 @@ impl Metrics {
                 0.0
             },
             pipeline_depth: g.pipeline_depth,
+            closes: g.closes,
             queue_wait_p50_ns: g.queue_wait.percentile_ns(50.0),
+            queue_wait_p95_ns: g.queue_wait.percentile_ns(95.0),
             queue_wait_p99_ns: g.queue_wait.percentile_ns(99.0),
             exec_p50_ns: g.exec_latency.percentile_ns(50.0),
+            exec_p95_ns: g.exec_latency.percentile_ns(95.0),
             exec_p99_ns: g.exec_latency.percentile_ns(99.0),
             exec_mean_ns: g.exec_latency.mean_ns(),
             timing: g.exec_timing,
             per_shard: g.per_shard.clone(),
+            padding: g.padding.clone(),
         }
     }
 }
@@ -224,6 +353,21 @@ impl Snapshot {
     pub fn steals(&self) -> u64 {
         self.per_shard.iter().map(|s| s.steals).sum()
     }
+
+    /// Items shed across both deadline classes.
+    pub fn shed(&self) -> u64 {
+        self.shed_interactive + self.shed_bulk
+    }
+
+    /// Mean padding waste across classes, weighted by class-shaped rows.
+    pub fn padding_waste(&self) -> f64 {
+        let total: u64 = self.padding.iter().map(|p| p.rows_total).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let used: u64 = self.padding.iter().map(|p| p.rows_used).sum();
+        1.0 - used as f64 / total as f64
+    }
 }
 
 #[cfg(test)]
@@ -242,7 +386,6 @@ mod tests {
             2,
             4,
             1,
-            Duration::from_micros(5),
             &ExecTiming {
                 pack_ns: 1,
                 transfer_ns: 2,
@@ -260,6 +403,54 @@ mod tests {
         assert!((s.memory_fraction() - 0.4).abs() < 1e-12);
         // Pack (1ns) overlapped execution: 10ns of stages in 9ns of wall.
         assert!((s.overlap_ratio() - 10.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn close_accounting_feeds_waits_padding_and_reasons() {
+        let m = Metrics::new();
+        let ms = Duration::from_millis(1);
+        // Two problems of 10 rows each in the 16-class: 20/32 live rows.
+        m.on_close(16, CloseReason::IdleShard, &[ms, 2 * ms], 20);
+        m.on_close(16, CloseReason::Full, &[ms, ms, ms, ms], 64);
+        m.on_close(64, CloseReason::Deadline, &[5 * ms], 10);
+        let s = m.snapshot();
+        assert_eq!(s.closes, CloseCounts { full: 1, deadline: 1, idle: 1, cost: 0, flush: 0 });
+        assert_eq!(s.closes.total(), 3);
+        assert_eq!(s.closes.adaptive(), 1);
+        assert_eq!(s.padding.len(), 2);
+        assert_eq!(s.padding[0].class_m, 16);
+        assert_eq!(s.padding[0].batches, 2);
+        assert_eq!(s.padding[0].rows_used, 84);
+        assert_eq!(s.padding[0].rows_total, 6 * 16);
+        assert!((s.padding[1].waste() - (1.0 - 10.0 / 64.0)).abs() < 1e-12);
+        // 7 per-request queue waits recorded, p50 around 1ms.
+        assert!(s.queue_wait_p50_ns >= 1_000_000 / 2);
+        assert!(s.queue_wait_p99_ns >= s.queue_wait_p50_ns);
+        assert!(s.queue_wait_p95_ns >= s.queue_wait_p50_ns);
+    }
+
+    #[test]
+    fn configure_classes_presizes_zero_rows() {
+        let m = Metrics::new();
+        m.configure_classes(&[64, 16]);
+        let s = m.snapshot();
+        assert_eq!(s.padding.len(), 2);
+        assert_eq!(s.padding[0].class_m, 16); // sorted
+        assert_eq!(s.padding[0].batches, 0);
+        assert_eq!(s.padding[0].waste(), 0.0);
+        assert_eq!(s.padding_waste(), 0.0);
+    }
+
+    #[test]
+    fn shed_counters_split_by_class() {
+        let m = Metrics::new();
+        m.on_shed(DeadlineClass::Bulk);
+        m.on_shed(DeadlineClass::Bulk);
+        m.on_shed(DeadlineClass::Interactive);
+        let s = m.snapshot();
+        assert_eq!(s.shed_bulk, 2);
+        assert_eq!(s.shed_interactive, 1);
+        assert_eq!(s.shed(), 3);
     }
 
     #[test]
@@ -299,11 +490,11 @@ mod tests {
             unpack_ns: 1,
             critical_path_ns: 10,
         };
-        m.on_batch(0, 0, false, 4, 4, 0, Duration::ZERO, &t);
+        m.on_batch(0, 0, false, 4, 4, 0, &t);
         // Shard 2 steals a batch shard 1 packed: the 1ns pack goes to
         // shard 1's busy share, the 9ns exec side to shard 2's.
-        m.on_batch(2, 1, true, 2, 4, 0, Duration::ZERO, &t);
-        m.on_batch(2, 2, false, 3, 4, 0, Duration::ZERO, &t);
+        m.on_batch(2, 1, true, 2, 4, 0, &t);
+        m.on_batch(2, 2, false, 3, 4, 0, &t);
         let s = m.snapshot();
         assert_eq!(s.per_shard.len(), 3);
         assert_eq!(
@@ -329,6 +520,9 @@ mod tests {
         assert_eq!(s.mean_occupancy, 0.0);
         assert_eq!(s.pipeline_depth, 0);
         assert_eq!(s.steals(), 0);
+        assert_eq!(s.shed(), 0);
+        assert_eq!(s.closes.total(), 0);
+        assert_eq!(s.padding_waste(), 0.0);
     }
 
     #[test]

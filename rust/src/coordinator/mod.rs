@@ -1,15 +1,46 @@
 //! L3 coordinator: the serving layer over the AOT kernels.
 //!
-//! * [`router`]  -- size-class assignment (problem m -> compiled bucket m).
-//! * [`batcher`] -- capacity/deadline batch accumulation per class.
-//! * [`service`] -- submit/await facade over dispatcher + executor threads.
-//! * [`metrics`] -- counters and latency histograms.
+//! Requests flow through one **admission pipeline** before they reach an
+//! executor shard:
+//!
+//! ```text
+//!   routing ──▶ deadline queues ──▶ close policy ──▶ shed
+//!   (size      (per size class ×    (capacity /      (bounded total
+//!    class      interactive|bulk,    SLO deadline /    queue; bulk shed
+//!    lookup)    EDF draining)        idle-shard /      before interactive,
+//!                                    cost-aware)       typed error reply)
+//! ```
+//!
+//! * [`admission`] -- the pipeline itself ([`AdmissionPipeline`]): owns
+//!   the routing table, per-(size class × deadline class) queues with SLO
+//!   bounds, the batch-close policy ([`ClosePolicy`]: `Fixed` =
+//!   capacity/deadline, `Adaptive` = plus work-conserving idle-shard and
+//!   cost-aware early closes), and bounded queueing with load shedding.
+//!   A malformed submit is a typed [`admission::RejectReason::NoClass`]
+//!   rejection, never a panic. Replaced the seed-era `Router` + `Batcher`
+//!   pair as the one place admission decisions live.
+//! * [`router`]  -- the size-class table the pipeline owns (problem m ->
+//!   compiled bucket m, capacities, padding accounting, chunk planning).
+//! * [`service`] -- submit/await facade over dispatcher + executor
+//!   threads; the dispatcher drives the admission pipeline with real
+//!   timestamps and the executors' idle-shard feedback channel.
+//! * [`metrics`] -- counters and latency histograms: queue-wait vs
+//!   execute-time split (p50/p95/p99), close-reason counts, per-class
+//!   padding-waste gauges, per-deadline-class shed counts, per-shard load.
+//!
+//! The serving knobs surface on the CLI and the serve example as
+//! `--policy fixed|adaptive`, `--max-queue N`, and `--slo-ms MS` (the
+//! interactive SLO; `--bulk-slo-ms` bounds the bulk class).
 
-pub mod batcher;
+pub mod admission;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use metrics::{Metrics, ShardLoad, Snapshot};
+pub use admission::{
+    AdmissionConfig, AdmissionPipeline, ClosePolicy, CloseReason, DeadlineClass, ReadyBatch,
+    RejectReason,
+};
+pub use metrics::{ClassPadding, CloseCounts, Metrics, ShardLoad, Snapshot};
 pub use router::Router;
 pub use service::{BackendSpec, Config, Service, SubmitError, Ticket};

@@ -1,22 +1,31 @@
-//! The serving facade: submit problems, get solutions back, batching and
+//! The serving facade: submit problems, get solutions back, admission and
 //! execution handled by background threads.
 //!
 //! Topology (std threads; the offline vendor set has no tokio):
 //!
 //! ```text
 //!   submit() ──sync_channel──▶ dispatcher ──per-shard channel──▶ shard e of N
-//!      ▲                        (router +                ┌──────────────┐
-//!      │                         batcher +               │ pack stage   │
+//!      ▲                        (admission               ┌──────────────┐
+//!      │                         pipeline +              │ pack stage   │
 //!      │                         weighted                │   │ StealQueues
 //!      │                         dispatch)               │ execute stage│
-//!      │                                                 └──────────────┘
+//!      │                              ▲                  └──────┬───────┘
+//!      │                              └── idle-shard feedback ──┤
 //!      └────────── per-request reply channel ◀──────────────────┘
 //! ```
 //!
-//! * The bounded submit channel is the backpressure surface.
-//! * The dispatcher owns the `Batcher` and closes batches on capacity or
-//!   deadline; it never touches a device. A closed batch is routed to the
-//!   executor shard with the **minimum weighted backlog**
+//! * The bounded submit channel is the backpressure surface; the
+//!   admission pipeline's `max_queue` + shed policy bounds what waits
+//!   behind it.
+//! * The dispatcher owns the [`AdmissionPipeline`] (routing → per-class
+//!   deadline queues → close policy → shed) and closes batches on
+//!   capacity, SLO deadline, or — under [`ClosePolicy::Adaptive`] — as
+//!   soon as executor shards report idle (work-conserving) or the
+//!   cost model says padding out now beats waiting. Execute stages send
+//!   an idle-shard feedback message when their backlog drains, so an
+//!   adaptive close happens promptly rather than at the next poll tick.
+//!   The dispatcher never touches a device. A closed batch is routed to
+//!   the executor shard with the **minimum weighted backlog**
 //!   (`outstanding / capacity_weight`, ties to the lowest shard id) — so
 //!   heavier backends draw proportionally more traffic and the load split
 //!   is observable per shard
@@ -45,7 +54,9 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, ReadyBatch};
+use crate::coordinator::admission::{
+    AdmissionConfig, AdmissionPipeline, ClosePolicy, DeadlineClass, ReadyBatch,
+};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
@@ -113,8 +124,17 @@ impl BackendSpec {
 pub struct Config {
     /// Which compiled kernel family serves requests.
     pub variant: Variant,
-    /// Batch close deadline: max time the oldest request waits.
+    /// Interactive-class SLO: max time an interactive request waits in the
+    /// admission queue before its batch force-closes (the `--slo-ms` knob).
     pub max_wait: Duration,
+    /// Bulk-class SLO: the loose wait bound for throughput traffic.
+    pub bulk_wait: Duration,
+    /// Batch close policy: `Fixed` (capacity/deadline only) or `Adaptive`
+    /// (plus work-conserving idle-shard and cost-aware early closes).
+    pub policy: ClosePolicy,
+    /// Bound on total items queued in the admission pipeline; beyond it,
+    /// load is shed (bulk before interactive) with typed error replies.
+    pub max_queue: usize,
     /// Cap on per-class batch size (None = the bucket capacity).
     pub max_batch: Option<usize>,
     /// Executor shard count when `backends` is empty: that many [`Engine`]
@@ -144,6 +164,9 @@ impl Default for Config {
         Config {
             variant: Variant::Rgb,
             max_wait: Duration::from_millis(2),
+            bulk_wait: Duration::from_millis(16),
+            policy: ClosePolicy::Adaptive,
+            max_queue: 32_768,
             max_batch: None,
             executors: 1,
             backends: Vec::new(),
@@ -216,7 +239,12 @@ impl std::borrow::Borrow<Problem> for Pending {
 }
 
 enum Msg {
-    Request(usize, Pending), // class_m, request
+    /// class_m, deadline class, request.
+    Request(usize, DeadlineClass, Pending),
+    /// Idle-shard feedback from an execute stage whose backlog drained —
+    /// a wakeup so the adaptive close policy runs now, not at the next
+    /// poll tick. Sent with `try_send` (never blocks an executor).
+    Idle(usize),
     Shutdown,
 }
 
@@ -230,7 +258,6 @@ struct StagedBatch {
     bucket: Bucket,
     pb: PackedBatch,
     items: Vec<Pending>,
-    oldest_wait: Duration,
     /// When packing ran, so the execute stage can measure how much of it
     /// was actually hidden behind the previous batch's execution.
     pack_started: Instant,
@@ -308,10 +335,38 @@ impl Service {
             Arc::new(build_cost_table(&backends, &manifest, config.variant));
         let depth = config.depth.get();
 
+        // Per-class batch capacity (bucket capacity clamped by max_batch)
+        // and the admission pipeline's cost model: the CHEAPEST shard's
+        // estimated busy-ns for one full capacity batch of each class —
+        // the "cost of going now" side of the adaptive close decision.
+        let capacities: Vec<usize> = router
+            .classes()
+            .iter()
+            .map(|&c| {
+                let cap = router.capacity(c).unwrap();
+                config.max_batch.map_or(cap, |mb| mb.min(cap).max(1))
+            })
+            .collect();
+        let class_cost_ns: Vec<u64> = router
+            .classes()
+            .iter()
+            .zip(&capacities)
+            .map(|(&c, &cap)| {
+                manifest
+                    .fit(config.variant, cap, c)
+                    .and_then(|b| {
+                        cost_tables.iter().filter_map(|t| t.get(&(b.batch, b.m))).min().copied()
+                    })
+                    .unwrap_or(u64::MAX / 2)
+            })
+            .collect();
+
         let metrics = Arc::new(Metrics::new());
         // Idle shards must still appear (as zero rows) in the load split,
-        // with their capacity weights attached.
+        // with their capacity weights attached; same for size classes in
+        // the padding gauge.
         metrics.configure_shards(&weights);
+        metrics.configure_classes(router.classes());
         metrics.set_pipeline_depth(depth);
 
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_depth);
@@ -399,6 +454,7 @@ impl Service {
                 let outstanding = outstanding.clone();
                 let queues = queues.clone();
                 let recycle_txs = recycle_txs.clone();
+                let idle_tx = tx.clone();
                 executors.push(std::thread::spawn(move || {
                     // Pack-side death detection: if every execute stage
                     // dies (backend panic), blocked pushes fail and the
@@ -431,6 +487,15 @@ impl Service {
                         );
                         queues.complete(e, popped.est_ns);
                         outstanding[origin].fetch_sub(1, Ordering::Relaxed);
+                        // Idle-shard feedback: this shard's backlog just
+                        // drained — wake the dispatcher so the adaptive
+                        // policy can close a partial batch for us now.
+                        // try_send: an executor never blocks on (or dies
+                        // with) the submit channel; a dropped wakeup only
+                        // delays the close to the next dispatcher tick.
+                        if outstanding[e].load(Ordering::Relaxed) == 0 {
+                            let _ = idle_tx.try_send(Msg::Idle(e));
+                        }
                     }
                 }));
             }
@@ -445,29 +510,33 @@ impl Service {
             }
         }
 
-        // Dispatcher.
+        // Dispatcher: owns the admission pipeline (routing → deadline
+        // queues → close policy → shed).
         let dispatcher = {
             let router = router.clone();
             let config = config.clone();
             let outstanding = outstanding.clone();
             let weights = weights.clone();
+            let metrics = metrics.clone();
             std::thread::spawn(move || {
-                let capacities: Vec<usize> = router
-                    .classes()
-                    .iter()
-                    .map(|&c| {
-                        let cap = router.capacity(c).unwrap();
-                        config.max_batch.map_or(cap, |mb| mb.min(cap))
-                    })
-                    .collect();
-                let mut batcher: Batcher<Pending> =
-                    Batcher::new(router.classes().to_vec(), capacities, config.max_wait);
+                let mut admission: AdmissionPipeline<Pending> = AdmissionPipeline::new(
+                    router,
+                    capacities,
+                    AdmissionConfig {
+                        policy: config.policy,
+                        interactive_wait: config.max_wait,
+                        bulk_wait: config.bulk_wait,
+                        max_queue: config.max_queue,
+                        class_cost_ns,
+                    },
+                );
                 // Weighted shortest-backlog dispatch: a closed batch goes
                 // to the shard minimizing (outstanding + 1) / weight (ties
                 // to the lowest shard id), so heavy backends draw
                 // proportionally more work. Stealing corrects whatever
                 // this estimate gets wrong.
                 let dispatch = |ready: ReadyBatch<Pending>| {
+                    metrics.on_close(ready.class_m, ready.reason, &ready.waits, ready.rows_used);
                     let target = (0..batch_txs.len())
                         .min_by(|&a, &b| {
                             let la = (outstanding[a].load(Ordering::Relaxed) + 1) as f64
@@ -484,29 +553,60 @@ impl Service {
                         outstanding[target].fetch_sub(1, Ordering::Relaxed);
                     }
                 };
+                // Shed/rejected items get typed error replies; a
+                // malformed or over-limit submit can never kill the
+                // dispatcher or wedge a queue.
+                let shed = |rejected: Vec<crate::coordinator::admission::Rejected<Pending>>| {
+                    for r in rejected {
+                        metrics.on_shed(r.class);
+                        let _ = r.item.reply.send(Err(anyhow::anyhow!("{}", r.reason)));
+                    }
+                };
+                // Idle shards = shards with no dispatched-but-unexecuted
+                // batches; only the adaptive policy reads it.
+                let idle_shards = || {
+                    if config.policy == ClosePolicy::Adaptive {
+                        outstanding
+                            .iter()
+                            .filter(|o| o.load(Ordering::Relaxed) == 0)
+                            .count()
+                    } else {
+                        0
+                    }
+                };
                 loop {
                     let now = Instant::now();
-                    let timeout = batcher
+                    // next_deadline_in is None or strictly positive right
+                    // after a poll pass (the no-spin contract), so this
+                    // timeout never busy-loops the dispatcher.
+                    let timeout = admission
                         .next_deadline_in(now)
                         .unwrap_or(Duration::from_millis(50));
                     match rx.recv_timeout(timeout) {
-                        Ok(Msg::Request(class_m, pending)) => {
+                        Ok(Msg::Request(class_m, deadline_class, pending)) => {
                             let now = Instant::now();
-                            if let Some(ready) = batcher.push(class_m, pending, now) {
+                            let rows = pending.problem.m();
+                            let out =
+                                admission.push(class_m, deadline_class, pending, rows, now);
+                            shed(out.shed);
+                            if let Some(ready) = out.ready {
                                 dispatch(ready);
                             }
                         }
+                        // Wakeup only: the poll below sees the idle shard.
+                        Ok(Msg::Idle(_)) => {}
                         Ok(Msg::Shutdown) => break,
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
-                    let now = Instant::now();
-                    for ready in batcher.poll_expired(now) {
+                    // One coalesced policy pass: every expired queue, plus
+                    // the adaptive rules (idle-shard + cost closes).
+                    for ready in admission.poll(Instant::now(), idle_shards()) {
                         dispatch(ready);
                     }
                 }
                 // Drain on shutdown.
-                for ready in batcher.flush(Instant::now()) {
+                for ready in admission.flush(Instant::now()) {
                     dispatch(ready);
                 }
                 drop(batch_txs); // closes the executor pack stages
@@ -523,12 +623,26 @@ impl Service {
         })
     }
 
-    /// Submit one problem; blocks if the queue is full (backpressure).
+    /// Submit one interactive problem; blocks if the queue is full
+    /// (backpressure). Equivalent to
+    /// `submit_with_class(problem, DeadlineClass::Interactive)`.
+    pub fn submit(&self, problem: Problem) -> Result<Ticket, SubmitError> {
+        self.submit_with_class(problem, DeadlineClass::Interactive)
+    }
+
+    /// Submit one problem under a deadline class. Interactive requests get
+    /// the tight SLO and are shed last; bulk requests get the loose SLO
+    /// and are shed first under overload (the shed reply is a ticket
+    /// error, counted per class in the metrics).
     ///
     /// Unroutable sizes are rejected *here*, before anything is enqueued:
     /// they count toward `rejected` (never `submitted`) and can neither
     /// occupy a shard's staged queue nor skew batch metrics.
-    pub fn submit(&self, problem: Problem) -> Result<Ticket, SubmitError> {
+    pub fn submit_with_class(
+        &self,
+        problem: Problem,
+        class: DeadlineClass,
+    ) -> Result<Ticket, SubmitError> {
         let Some(class_m) = self.router.route(problem.m()) else {
             self.metrics.on_reject();
             return Err(SubmitError::TooLarge {
@@ -538,7 +652,7 @@ impl Service {
         };
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Request(class_m, Pending { problem, reply }))
+            .send(Msg::Request(class_m, class, Pending { problem, reply }))
             .map_err(|_| SubmitError::Closed)?;
         // Count only after the send succeeded: a Closed service must not
         // inflate the submit counter.
@@ -556,6 +670,13 @@ impl Service {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// A shared handle to the metrics sink that outlives the service —
+    /// for reading final counters (shed, closes, padding) after
+    /// [`Service::shutdown`] has flushed and joined everything.
+    pub fn metrics_shared(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 
     pub fn router(&self) -> &Router {
@@ -669,7 +790,6 @@ fn stage_batch(
         bucket,
         pb,
         items: batch.items,
-        oldest_wait: batch.oldest_wait,
         pack_started,
         pack_finished,
     };
@@ -712,7 +832,6 @@ fn run_staged(
         bucket,
         pb,
         items,
-        oldest_wait,
         pack_started,
         pack_finished,
     } = staged;
@@ -758,7 +877,6 @@ fn run_staged(
                 items.len(),
                 bucket.batch,
                 infeasible,
-                oldest_wait,
                 &timing,
             );
             for (pending, sol) in items.into_iter().zip(solutions.iter()) {

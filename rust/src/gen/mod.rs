@@ -1,8 +1,10 @@
-//! Workload generation: random feasible/infeasible 2-D LPs and batch
-//! traces, mirroring the paper's methodology (§4: "random feasible
-//! constraints ... constraint lines are generated randomly and tested to
-//! ensure a solution is possible") and `python/compile/problems.py`.
+//! Workload generation: random feasible/infeasible 2-D LPs, batch traces,
+//! and scenario-diverse open-loop load models, mirroring the paper's
+//! methodology (§4: "random feasible constraints ... constraint lines are
+//! generated randomly and tested to ensure a solution is possible") and
+//! `python/compile/problems.py`.
 
+pub mod scenarios;
 pub mod trace;
 
 use crate::lp::types::{HalfPlane, Problem};

@@ -1,0 +1,364 @@
+//! Scenario-diverse open-loop load generation for the serving layer.
+//!
+//! The paper's workloads are static batches; `trace.rs` generalized them
+//! to one Poisson stream. A serving system that must hold latency SLOs
+//! needs adversarial *shapes* of load, not just one rate — so this module
+//! models six open-loop traffic scenarios, each an arrival-timed stream of
+//! ([`ScenarioRequest`]) problems tagged with a deadline class:
+//!
+//! * [`Scenario::Poisson`]   — memoryless arrivals, log-uniform sizes
+//!   (the baseline `trace.rs` shape).
+//! * [`Scenario::Bursty`]    — on/off square wave: bursts several times
+//!   the base rate alternating with near-silence; stresses the adaptive
+//!   close policy's idle detection on the off phase and queue bounds on
+//!   the on phase.
+//! * [`Scenario::Diurnal`]   — a smooth ramp up and back down over the
+//!   trace (one "day"); the arrival-rate EWMA must track it.
+//! * [`Scenario::HeavyTail`] — Pareto-ish size mix: mostly tiny LPs with
+//!   rare near-bucket-limit giants (tagged bulk); stresses per-class
+//!   padding accounting and EDF across size classes.
+//! * [`Scenario::Flood`]     — a single size class at several times the
+//!   base rate, all interactive; the batch-fullness best case and the
+//!   shed policy's worst case.
+//! * [`Scenario::Sim`]       — clearance queries sampled from the crowd
+//!   simulation ([`crate::sim::World`]): each step's per-agent avoidance
+//!   LPs arrive as one burst, so sizes and correlations follow the
+//!   simulation's dynamics instead of a closed-form distribution.
+//!
+//! Generation is deterministic in the [`Rng`] seed, like everything else
+//! in the workload layer.
+
+use crate::coordinator::DeadlineClass;
+use crate::lp::types::Problem;
+use crate::sim::{World, WorldParams};
+use crate::util::Rng;
+
+/// One request in a scenario trace.
+#[derive(Clone, Debug)]
+pub struct ScenarioRequest {
+    /// Arrival offset from trace start, nanoseconds.
+    pub at_ns: u64,
+    pub problem: Problem,
+    pub class: DeadlineClass,
+}
+
+/// An open-loop traffic model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    Poisson,
+    Bursty,
+    Diurnal,
+    HeavyTail,
+    Flood,
+    Sim,
+}
+
+impl Scenario {
+    /// Every scenario, in reporting order.
+    pub const ALL: [Scenario; 6] = [
+        Scenario::Poisson,
+        Scenario::Bursty,
+        Scenario::Diurnal,
+        Scenario::HeavyTail,
+        Scenario::Flood,
+        Scenario::Sim,
+    ];
+
+    pub fn parse(s: &str) -> anyhow::Result<Scenario> {
+        match s.trim() {
+            "poisson" => Ok(Scenario::Poisson),
+            "bursty" => Ok(Scenario::Bursty),
+            "diurnal" => Ok(Scenario::Diurnal),
+            "heavy-tail" | "heavytail" => Ok(Scenario::HeavyTail),
+            "flood" => Ok(Scenario::Flood),
+            "sim" => Ok(Scenario::Sim),
+            other => anyhow::bail!(
+                "unknown scenario '{other}' \
+                 (poisson|bursty|diurnal|heavy-tail|flood|sim)"
+            ),
+        }
+    }
+
+    /// Parse a comma-separated list; `all` expands to every scenario.
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<Scenario>> {
+        if s.trim() == "all" {
+            return Ok(Scenario::ALL.to_vec());
+        }
+        s.split(',').filter(|p| !p.trim().is_empty()).map(Scenario::parse).collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Poisson => "poisson",
+            Scenario::Bursty => "bursty",
+            Scenario::Diurnal => "diurnal",
+            Scenario::HeavyTail => "heavy-tail",
+            Scenario::Flood => "flood",
+            Scenario::Sim => "sim",
+        }
+    }
+
+    /// Generate `n` requests around a base arrival rate (requests/second).
+    pub fn generate(&self, rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+        assert!(rate > 0.0, "rate must be positive");
+        match self {
+            Scenario::Poisson => poisson(rng, n, rate),
+            Scenario::Bursty => bursty(rng, n, rate),
+            Scenario::Diurnal => diurnal(rng, n, rate),
+            Scenario::HeavyTail => heavy_tail(rng, n, rate),
+            Scenario::Flood => flood(rng, n, rate),
+            Scenario::Sim => sim_clearance(rng, n, rate),
+        }
+    }
+}
+
+/// Exponential inter-arrival gap at `rate` requests/second, in ns.
+fn exp_gap_ns(rng: &mut Rng, rate: f64) -> u64 {
+    let gap_s = -rng.f64().max(1e-12).ln() / rate;
+    (gap_s * 1e9) as u64
+}
+
+/// Log-uniform integer in [lo, hi] (small sizes common, large rare).
+fn log_uniform(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    if lo >= hi {
+        return lo;
+    }
+    let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+    let v = rng.range_f64(llo, lhi).exp().round() as usize;
+    v.clamp(lo, hi)
+}
+
+/// A feasible/infeasible problem of `m` constraints (2% infeasible).
+fn problem(rng: &mut Rng, m: usize) -> Problem {
+    if rng.f64() < 0.02 && m >= 2 {
+        super::infeasible(rng, m)
+    } else {
+        super::feasible(rng, m)
+    }
+}
+
+fn poisson(rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    let mut t_ns = 0u64;
+    (0..n)
+        .map(|_| {
+            t_ns += exp_gap_ns(rng, rate);
+            let m = log_uniform(rng, 6, 64);
+            let class = if rng.f64() < 0.1 {
+                DeadlineClass::Bulk
+            } else {
+                DeadlineClass::Interactive
+            };
+            ScenarioRequest { at_ns: t_ns, problem: problem(rng, m), class }
+        })
+        .collect()
+}
+
+/// On/off square wave: 40ms bursts at 4x the base rate, 60ms valleys at
+/// 1/8th of it. Mean rate ~ the base rate; the peaks are what hurt.
+fn bursty(rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    const ON_NS: u64 = 40_000_000;
+    const OFF_NS: u64 = 60_000_000;
+    const PERIOD_NS: u64 = ON_NS + OFF_NS;
+    let mut t_ns = 0u64;
+    (0..n)
+        .map(|_| {
+            let phase = t_ns % PERIOD_NS;
+            let r = if phase < ON_NS { rate * 4.0 } else { rate / 8.0 };
+            let mut gap = exp_gap_ns(rng, r);
+            // An off-phase gap that would overshoot the valley snaps to
+            // the next burst start, keeping the square wave square.
+            if phase >= ON_NS && phase + gap >= PERIOD_NS {
+                gap = PERIOD_NS - phase;
+            }
+            t_ns += gap;
+            let m = log_uniform(rng, 6, 64);
+            let class = if rng.f64() < 0.15 {
+                DeadlineClass::Bulk
+            } else {
+                DeadlineClass::Interactive
+            };
+            ScenarioRequest { at_ns: t_ns, problem: problem(rng, m), class }
+        })
+        .collect()
+}
+
+/// One smooth "day": instantaneous rate ramps `0.2x → 1.8x → 0.2x` of the
+/// base over the expected trace span (a raised-cosine profile).
+fn diurnal(rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    let span_ns = (n as f64 / rate * 1e9).max(1.0);
+    let mut t_ns = 0u64;
+    (0..n)
+        .map(|_| {
+            let phase = (t_ns as f64 / span_ns).min(1.0);
+            let shape = 0.2 + 1.6 * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+            t_ns += exp_gap_ns(rng, rate * shape.max(0.05));
+            let m = log_uniform(rng, 6, 64);
+            let class = if rng.f64() < 0.1 {
+                DeadlineClass::Bulk
+            } else {
+                DeadlineClass::Interactive
+            };
+            ScenarioRequest { at_ns: t_ns, problem: problem(rng, m), class }
+        })
+        .collect()
+}
+
+/// Pareto-ish size mix (alpha ~ 1.1): mostly tiny LPs, occasional giants
+/// near the largest class. Giants ride the bulk queue.
+fn heavy_tail(rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    let mut t_ns = 0u64;
+    (0..n)
+        .map(|_| {
+            t_ns += exp_gap_ns(rng, rate);
+            let u = rng.f64().max(1e-9);
+            let m = ((4.0 * u.powf(-1.0 / 1.1)) as usize).clamp(4, 64);
+            let class = if m > 32 {
+                DeadlineClass::Bulk
+            } else {
+                DeadlineClass::Interactive
+            };
+            ScenarioRequest { at_ns: t_ns, problem: problem(rng, m), class }
+        })
+        .collect()
+}
+
+/// A single size class at 4x the base rate, all interactive: the batch
+/// packer's best case and the shed policy's overload case.
+fn flood(rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    let mut t_ns = 0u64;
+    (0..n)
+        .map(|_| {
+            t_ns += exp_gap_ns(rng, rate * 4.0);
+            ScenarioRequest {
+                at_ns: t_ns,
+                problem: problem(rng, 16),
+                class: DeadlineClass::Interactive,
+            }
+        })
+        .collect()
+}
+
+/// Clearance queries from the crowd simulation: every step, each agent's
+/// avoidance LP arrives in one burst at the step timestamp; the world then
+/// advances on the CPU baseline. Sizes follow the crowd's actual neighbor
+/// densities (≥ 4, capped by the bucket bound).
+fn sim_clearance(rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    let agents = 48usize;
+    let mut world = World::crossing_groups(rng, agents, WorldParams::default());
+    // One step's worth of LPs arrives per step period; pick the period so
+    // the mean rate matches the requested rate.
+    let step_ns = (agents as f64 / rate * 1e9) as u64;
+    let mut out = Vec::with_capacity(n);
+    let mut t_ns = 0u64;
+    while out.len() < n {
+        for p in world.build_problems() {
+            if out.len() >= n {
+                break;
+            }
+            out.push(ScenarioRequest {
+                at_ns: t_ns,
+                problem: p,
+                class: DeadlineClass::Interactive,
+            });
+        }
+        // Evolving the world cannot fail on the CPU path; a degenerate
+        // step would still leave a valid (if stationary) crowd.
+        let _ = world.step_cpu(1, rng);
+        t_ns += step_ns;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monotonic(reqs: &[ScenarioRequest]) -> bool {
+        reqs.windows(2).all(|w| w[0].at_ns <= w[1].at_ns)
+    }
+
+    #[test]
+    fn all_scenarios_generate_n_monotonic_requests() {
+        for sc in Scenario::ALL {
+            let mut rng = Rng::new(0xC0FFEE);
+            let reqs = sc.generate(&mut rng, 300, 5_000.0);
+            assert_eq!(reqs.len(), 300, "{}", sc.name());
+            assert!(monotonic(&reqs), "{} arrivals not monotonic", sc.name());
+            assert!(
+                reqs.iter().all(|r| r.problem.m() >= 2 && r.problem.m() <= 64),
+                "{} sizes out of range",
+                sc.name()
+            );
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        for sc in Scenario::ALL {
+            let mut a = Rng::new(7);
+            let mut b = Rng::new(7);
+            let ra = sc.generate(&mut a, 100, 2_000.0);
+            let rb = sc.generate(&mut b, 100, 2_000.0);
+            assert!(
+                ra.iter().zip(&rb).all(|(x, y)| {
+                    x.at_ns == y.at_ns && x.class == y.class && x.problem == y.problem
+                }),
+                "{} not deterministic",
+                sc.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_rate_swings_by_phase() {
+        let mut rng = Rng::new(11);
+        let reqs = bursty(&mut rng, 4_000, 10_000.0);
+        let (mut on, mut off) = (0usize, 0usize);
+        for r in &reqs {
+            if r.at_ns % 100_000_000 < 40_000_000 {
+                on += 1;
+            } else {
+                off += 1;
+            }
+        }
+        // 4x rate for 40% of the time vs rate/8 for 60%: the on-phase
+        // share must dominate heavily.
+        assert!(on > off * 5, "on {on} off {off}");
+    }
+
+    #[test]
+    fn heavy_tail_is_mostly_small_with_giants() {
+        let mut rng = Rng::new(12);
+        let reqs = heavy_tail(&mut rng, 2_000, 5_000.0);
+        let small = reqs.iter().filter(|r| r.problem.m() <= 8).count();
+        let giant = reqs.iter().filter(|r| r.problem.m() > 32).count();
+        assert!(small > 1_000, "small {small}");
+        assert!(giant > 10, "giants {giant}");
+        // Giants are bulk-class.
+        assert!(reqs
+            .iter()
+            .filter(|r| r.problem.m() > 32)
+            .all(|r| r.class == DeadlineClass::Bulk));
+    }
+
+    #[test]
+    fn flood_is_single_class_interactive() {
+        let mut rng = Rng::new(13);
+        let reqs = flood(&mut rng, 500, 5_000.0);
+        assert!(reqs.iter().all(|r| r.problem.m() == 16));
+        assert!(reqs.iter().all(|r| r.class == DeadlineClass::Interactive));
+    }
+
+    #[test]
+    fn sim_scenario_arrives_in_step_bursts() {
+        let mut rng = Rng::new(14);
+        let reqs = sim_clearance(&mut rng, 200, 10_000.0);
+        assert_eq!(reqs.len(), 200);
+        let distinct: std::collections::HashSet<u64> =
+            reqs.iter().map(|r| r.at_ns).collect();
+        // Burst structure: far fewer distinct timestamps than requests.
+        assert!(distinct.len() <= reqs.len() / 10, "{} stamps", distinct.len());
+        // Crowd LPs carry at least the 4 speed-cap constraints.
+        assert!(reqs.iter().all(|r| r.problem.m() >= 4));
+    }
+}

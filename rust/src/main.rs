@@ -70,13 +70,19 @@ fn print_help() {
                                         generate and solve one batch, print timing\n\
            serve    --requests 6000 [--rate 2000] [--max-wait-ms 2] [--shards 1]\n\
                     [--depth 2] [--backends engine,cpu,batch-cpu:N]\n\
-                                        run the coordinator under a Poisson trace\n\
+                    [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]\n\
+                    [--bulk-slo-ms MS] [--scenario poisson|bursty|...]\n\
+                                        run the coordinator under open-loop load\n\
                                         (--backends mixes shard types; CPU-only\n\
-                                        mixes serve without artifacts)\n\
+                                        mixes serve without artifacts; --policy\n\
+                                        picks the admission batch-close policy,\n\
+                                        --max-queue bounds queueing with load\n\
+                                        shedding, --slo-ms sets the interactive\n\
+                                        SLO, --scenario picks a traffic model)\n\
            crowd    --agents 512 --steps 100 [--backend engine|cpu]\n\
                                         crowd simulation (paper Sec. 5 application)\n\
-           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards|depth [--fast]\n\
-                                        regenerate the paper's figures as tables\n\
+           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards|depth|loadgen\n\
+                    [--fast]            regenerate the paper's figures as tables\n\
          \n\
          flags:\n\
            --artifacts DIR              artifact directory (default: artifacts)"
@@ -184,16 +190,26 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let requests = flag(flags, "requests", 6_000usize);
     let rate = flag(flags, "rate", 2_000.0f64);
     let max_wait_ms = flag(flags, "max-wait-ms", 2u64);
+    let slo_ms = flag(flags, "slo-ms", max_wait_ms);
+    let bulk_slo_ms = flag(flags, "bulk-slo-ms", slo_ms * 8);
     let seed = flag(flags, "seed", 7u64);
     let shards = flag(flags, "shards", 1usize);
     let depth = flag(flags, "depth", 2usize);
+    let max_queue = flag(flags, "max-queue", 32_768usize);
+    let policy = match flags.get("policy") {
+        Some(p) => batch_lp2d::coordinator::ClosePolicy::parse(p)?,
+        None => batch_lp2d::coordinator::ClosePolicy::Adaptive,
+    };
     let backends = match flags.get("backends") {
         Some(list) => BackendSpec::parse_list(list)?,
         None => Vec::new(),
     };
 
     let config = Config {
-        max_wait: std::time::Duration::from_millis(max_wait_ms),
+        max_wait: std::time::Duration::from_millis(slo_ms),
+        bulk_wait: std::time::Duration::from_millis(bulk_slo_ms),
+        policy,
+        max_queue,
         executors: shards.max(1),
         backends,
         depth: PipelineDepth::new(depth),
@@ -201,11 +217,28 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     };
     let service = Service::start(artifact_dir(flags), config)?;
 
+    // Traffic: a named scenario (mixed deadline classes), or the classic
+    // interactive-only Poisson trace.
     let mut rng = Rng::new(seed);
-    let tp = trace::TraceParams { rate, m_lo: 8, m_hi: 64, infeasible_frac: 0.02 };
-    let reqs = trace::poisson_trace(&mut rng, requests, tp);
+    let reqs: Vec<gen::scenarios::ScenarioRequest> = match flags.get("scenario") {
+        Some(name) => gen::scenarios::Scenario::parse(name)?.generate(&mut rng, requests, rate),
+        None => {
+            let tp = trace::TraceParams { rate, m_lo: 8, m_hi: 64, infeasible_frac: 0.02 };
+            trace::poisson_trace(&mut rng, requests, tp)
+                .into_iter()
+                .map(|r| gen::scenarios::ScenarioRequest {
+                    at_ns: r.at_ns,
+                    problem: r.problem,
+                    class: batch_lp2d::coordinator::DeadlineClass::Interactive,
+                })
+                .collect()
+        }
+    };
 
-    println!("serving {requests} requests at ~{rate:.0}/s (open loop)...");
+    println!(
+        "serving {requests} requests at ~{rate:.0}/s (open loop, policy {})...",
+        policy.as_str()
+    );
     let t0 = Timer::start();
     let mut tickets = Vec::with_capacity(reqs.len());
     for r in reqs {
@@ -213,29 +246,67 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         while t0.elapsed_ns() < r.at_ns {
             std::hint::spin_loop();
         }
-        tickets.push(service.submit(r.problem).map_err(|e| anyhow::anyhow!("{e}"))?);
+        tickets.push(
+            service
+                .submit_with_class(r.problem, r.class)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
     }
     let mut infeasible = 0usize;
+    let mut shed = 0usize;
     for t in tickets {
-        if t.wait()?.status == Status::Infeasible {
-            infeasible += 1;
+        match t.wait() {
+            Ok(sol) => {
+                if sol.status == Status::Infeasible {
+                    infeasible += 1;
+                }
+            }
+            // Shed replies are expected under overload with a bounded
+            // queue; anything else would double-count in the metrics.
+            Err(_) => shed += 1,
         }
     }
     let wall_s = t0.elapsed_ns() as f64 / 1e9;
     let snap = service.metrics().snapshot();
-    println!("done in {wall_s:.2}s -> {:.0} solved LPs/s", requests as f64 / wall_s);
+    println!(
+        "done in {wall_s:.2}s -> {:.0} solved LPs/s",
+        (requests - shed) as f64 / wall_s
+    );
     println!(
         "batches: {}  mean occupancy: {:.1}%  infeasible: {infeasible}",
         snap.batches,
         100.0 * snap.mean_occupancy
     );
     println!(
-        "queue wait p50/p99: {:.2}/{:.2} ms   batch exec p50/p99: {:.2}/{:.2} ms",
+        "queue wait p50/p95/p99: {:.2}/{:.2}/{:.2} ms   batch exec p50/p95/p99: \
+         {:.2}/{:.2}/{:.2} ms",
         snap.queue_wait_p50_ns as f64 / 1e6,
+        snap.queue_wait_p95_ns as f64 / 1e6,
         snap.queue_wait_p99_ns as f64 / 1e6,
         snap.exec_p50_ns as f64 / 1e6,
+        snap.exec_p95_ns as f64 / 1e6,
         snap.exec_p99_ns as f64 / 1e6
     );
+    println!(
+        "closes: {} full / {} deadline / {} idle / {} cost / {} flush   \
+         shed: {} ({} interactive, {} bulk)",
+        snap.closes.full,
+        snap.closes.deadline,
+        snap.closes.idle,
+        snap.closes.cost,
+        snap.closes.flush,
+        snap.shed(),
+        snap.shed_interactive,
+        snap.shed_bulk
+    );
+    for p in &snap.padding {
+        println!(
+            "class m={}: {} batches  padding waste {:.1}%",
+            p.class_m,
+            p.batches,
+            100.0 * p.waste()
+        );
+    }
     println!("exec memory fraction: {:.1}%", 100.0 * snap.memory_fraction());
     println!("pipeline depth: {}  steals: {}", snap.pipeline_depth, snap.steals());
     let names = service.shard_backends().to_vec();
@@ -306,13 +377,25 @@ fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
         std::env::set_var("BATCH_LP2D_BENCH_FAST", "1");
     }
     let which = flags.get("fig").cloned().unwrap_or_else(|| "all".to_string());
-    let engine = Engine::new(artifact_dir(flags))?;
-    let ctx = FigureCtx::new(&engine);
 
     let emit = |name: &str, table: batch_lp2d::util::Table| {
         println!("\n## Figure {name}\n");
         print!("{}", table.to_markdown());
     };
+
+    // Engine-free table: the loadgen companion serves on the CPU-only
+    // shard mix, so it must not require artifacts (and `--fig loadgen`
+    // works on hosts where Engine::new would fail).
+    if which == "loadgen" {
+        emit(
+            "L (latency under load, loadgen companion)",
+            figures::fig_loadgen(std::path::Path::new(&artifact_dir(flags)), 3_000)?,
+        );
+        return Ok(());
+    }
+
+    let engine = Engine::new(artifact_dir(flags))?;
+    let ctx = FigureCtx::new(&engine);
 
     let all = which == "all";
     if all || which == "imbalance" {
@@ -367,6 +450,14 @@ fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
                 64,
                 &[2, 3, 4],
             )?,
+        );
+    }
+    if all {
+        // Also reachable engine-free via `--fig loadgen` (early return
+        // above); under `all` it rides along with the engine figures.
+        emit(
+            "L (latency under load, loadgen companion)",
+            figures::fig_loadgen(std::path::Path::new(&artifact_dir(flags)), 3_000)?,
         );
     }
     Ok(())

@@ -155,6 +155,14 @@ impl World {
         problems
     }
 
+    /// Advance one step on the multicore CPU baseline — the engine-free
+    /// convenience the load generator's sim-derived scenario uses to
+    /// evolve the world between sampling clearance queries.
+    pub fn step_cpu(&mut self, threads: usize, rng: &mut Rng) -> anyhow::Result<StepStats> {
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: threads.max(1) };
+        self.step(&backend, rng)
+    }
+
     /// Advance one step using `backend` for the batch solve.
     pub fn step(&mut self, backend: &Backend<'_>, rng: &mut Rng) -> anyhow::Result<StepStats> {
         let mut stats = StepStats::default();

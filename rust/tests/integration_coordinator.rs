@@ -3,7 +3,9 @@
 
 use std::time::Duration;
 
-use batch_lp2d::coordinator::{BackendSpec, Config, Service, SubmitError};
+use batch_lp2d::coordinator::{
+    BackendSpec, ClosePolicy, Config, DeadlineClass, Service, SubmitError,
+};
 use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::brute;
 use batch_lp2d::lp::types::Status;
@@ -209,6 +211,105 @@ fn heterogeneous_cpu_service_serves_without_artifacts() {
     // Per-problem conservation across the mixed shard set.
     assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), 300);
     svc.shutdown();
+}
+
+#[test]
+fn bounded_queue_sheds_bulk_before_interactive() {
+    // CPU-only (never skips): a tiny admission bound with SLOs far beyond
+    // the test horizon, so nothing closes until shutdown — every item
+    // beyond the bound must shed, bulk first, with typed ticket errors.
+    let config = Config {
+        policy: ClosePolicy::Fixed,
+        max_wait: Duration::from_secs(30),
+        bulk_wait: Duration::from_secs(60),
+        max_queue: 8,
+        backends: vec![BackendSpec::Cpu],
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config)
+        .expect("CPU-only service starts without artifacts");
+    let metrics = svc.metrics_shared();
+    let mut rng = Rng::new(21);
+    let mut bulk_tickets = Vec::new();
+    for _ in 0..30 {
+        let p = gen::feasible(&mut rng, 10);
+        bulk_tickets.push(svc.submit_with_class(p, DeadlineClass::Bulk).expect("bulk submit"));
+    }
+    let mut interactive_tickets = Vec::new();
+    for _ in 0..4 {
+        let p = gen::feasible(&mut rng, 10);
+        interactive_tickets
+            .push(svc.submit_with_class(p, DeadlineClass::Interactive).expect("submit"));
+    }
+    // Shutdown drains the submit channel through the dispatcher (every
+    // shed decision lands) and flushes the survivors to the executor.
+    svc.shutdown();
+
+    // 30 bulk: 8 queue, 22 refused outright; the 4 interactive then evict
+    // the 4 newest queued bulk. Survivors: 4 bulk + 4 interactive.
+    let results: Vec<_> = bulk_tickets.into_iter().map(|t| t.wait()).collect();
+    let bulk_ok = results.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(bulk_ok, 4, "exactly the 4 oldest queued bulk items survive");
+    // Shed replies carry the typed reason, not a generic drop.
+    let shed_msg = results.iter().find_map(|r| r.as_ref().err()).unwrap().to_string();
+    assert!(shed_msg.contains("shed"), "unexpected shed reply: {shed_msg}");
+    // The 4 oldest queued bulk survive — they were pushed first, so the
+    // Ok results must be exactly the first 4 bulk tickets.
+    assert!(results[..4].iter().all(|r| r.is_ok()), "FIFO survivors");
+    for (i, t) in interactive_tickets.into_iter().enumerate() {
+        let sol = t.wait().unwrap_or_else(|e| panic!("interactive {i} shed: {e}"));
+        assert_eq!(sol.status, Status::Optimal);
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.shed_bulk, 26);
+    assert_eq!(snap.shed_interactive, 0);
+    assert_eq!(snap.solved, 8);
+    assert!(snap.closes.flush >= 1, "survivors close on the shutdown flush");
+}
+
+#[test]
+fn adaptive_policy_closes_early_on_idle_shards() {
+    // CPU-only (never skips): with an SLO far beyond the test horizon,
+    // the FIXED policy could only release a lone request at the deadline
+    // or shutdown — so a promptly-resolved ticket proves the adaptive
+    // idle-shard close fired (the service-level work-conserving check;
+    // the bit-identity side lives in prop_coordinator.rs).
+    let config = Config {
+        policy: ClosePolicy::Adaptive,
+        max_wait: Duration::from_secs(60),
+        bulk_wait: Duration::from_secs(120),
+        backends: vec![BackendSpec::Cpu, BackendSpec::Cpu],
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config)
+        .expect("CPU-only service starts without artifacts");
+    let metrics = svc.metrics_shared();
+    let mut rng = Rng::new(31);
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 {
+        let p = gen::feasible(&mut rng, 12);
+        let ticket = svc.submit(p).expect("submit");
+        let sol = ticket
+            .wait_timeout(Duration::from_secs(10))
+            .expect("idle shards must close the batch long before the 60s SLO");
+        assert_eq!(sol.status, Status::Optimal);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "closes happened nowhere near the SLO deadline"
+    );
+    svc.shutdown();
+    let snap = metrics.snapshot();
+    assert_eq!(snap.solved, 5);
+    assert!(
+        snap.closes.idle >= 1,
+        "work-conserving close reason must be recorded: {:?}",
+        snap.closes
+    );
+    // The padding gauge saw the class these problems rode in.
+    let class16 = snap.padding.iter().find(|p| p.class_m == 16).expect("class row");
+    assert!(class16.batches >= 1);
+    assert!(class16.waste() > 0.0, "m=12 in a 16-class must show padding");
 }
 
 #[test]

@@ -1,15 +1,20 @@
 //! Ordering guarantees of the pipelined execution path, pure Rust (no
 //! PJRT, no artifacts): the stream driver must return chunk results in
-//! submission order, and a batcher feeding a pack-stage/execute-stage pair
-//! (the coordinator's executor wiring) must route every reply back to the
-//! request that asked for it, under concurrent submitters.
+//! submission order, and an admission pipeline feeding a
+//! pack-stage/execute-stage pair (the coordinator's executor wiring) must
+//! route every reply back to the request that asked for it, under
+//! concurrent submitters.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use batch_lp2d::coordinator::batcher::Batcher;
+use batch_lp2d::coordinator::admission::{
+    AdmissionConfig, AdmissionPipeline, ClosePolicy, DeadlineClass,
+};
+use batch_lp2d::coordinator::Router;
+use batch_lp2d::runtime::manifest::{Manifest, Variant};
 use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
 use batch_lp2d::util::Rng;
 
@@ -57,20 +62,32 @@ struct Req {
     reply: mpsc::Sender<u64>,
 }
 
-/// Wire a `Batcher` into a pack-stage/execute-stage thread pair exactly
-/// like `coordinator::service` does (staged sync_channel of depth 2), with
-/// a stub "solve" that echoes request ids. Concurrent submitters then
-/// verify that every reply carries their own id — the pipelined hand-off
-/// must not reorder or cross-wire requests within a batch.
+/// Wire an `AdmissionPipeline` into a pack-stage/execute-stage thread pair
+/// exactly like `coordinator::service` does (staged sync_channel of depth
+/// 2), with a stub "solve" that echoes request ids. Concurrent submitters
+/// then verify that every reply carries their own id — the pipelined
+/// hand-off must not reorder or cross-wire requests within a batch.
 #[test]
 fn pipelined_executor_pair_preserves_request_reply_pairing() {
     const SUBMITTERS: usize = 4;
     const PER_SUBMITTER: usize = 200;
 
-    let batcher = Arc::new(Mutex::new(Batcher::<Req>::new(
-        vec![16, 64],
+    let manifest = Manifest::parse(
+        "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+         rgb\t8\t16\t8\t16\ta\n\
+         rgb\t8\t64\t8\t64\tb\n",
+        std::path::PathBuf::from("/tmp"),
+    )
+    .unwrap();
+    let router = Router::new(&manifest, Variant::Rgb).unwrap();
+    let batcher = Arc::new(Mutex::new(AdmissionPipeline::<Req>::new(
+        router,
         vec![8, 8],
-        Duration::from_millis(1),
+        AdmissionConfig {
+            policy: ClosePolicy::Fixed,
+            interactive_wait: Duration::from_millis(1),
+            ..AdmissionConfig::default()
+        },
     )));
     let (batch_tx, batch_rx) = mpsc::channel::<Vec<Req>>();
     let done = Arc::new(AtomicBool::new(false));
@@ -87,7 +104,7 @@ fn pipelined_executor_pair_preserves_request_reply_pairing() {
                 break;
             }
             std::thread::sleep(Duration::from_micros(300));
-            let expired = batcher.lock().unwrap().poll_expired(Instant::now());
+            let expired = batcher.lock().unwrap().poll(Instant::now(), 0);
             for b in expired {
                 let _ = batch_tx.send(b.items);
             }
@@ -127,11 +144,15 @@ fn pipelined_executor_pair_preserves_request_reply_pairing() {
                     let id = (s << 32) | i;
                     let class = if rng.below(2) == 0 { 16 } else { 64 };
                     let (reply, rx) = mpsc::channel();
-                    let ready = batcher
-                        .lock()
-                        .unwrap()
-                        .push(class, Req { id, reply }, Instant::now());
-                    if let Some(b) = ready {
+                    let out = batcher.lock().unwrap().push(
+                        class,
+                        DeadlineClass::Interactive,
+                        Req { id, reply },
+                        class,
+                        Instant::now(),
+                    );
+                    assert!(out.shed.is_empty(), "no shedding under the default bound");
+                    if let Some(b) = out.ready {
                         let _ = batch_tx.send(b.items);
                     }
                     tickets.push((id, rx));

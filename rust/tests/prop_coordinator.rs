@@ -1,15 +1,20 @@
-//! Property tests on coordinator invariants: routing totality, batching
-//! order/loss/deadline discipline, packing round-trips, and sharded
-//! execution equivalence. Pure-Rust (no PJRT): the batcher and router are
+//! Property tests on coordinator invariants: routing totality, admission
+//! order/loss/deadline/shed discipline, the work-conserving adaptive
+//! close, padding equivalence, packing round-trips, and sharded execution
+//! equivalence. Pure-Rust (no PJRT): the admission pipeline and router are
 //! plain data structures, and the sharded driver runs over the
 //! deterministic CPU shard executor.
 
 use std::time::{Duration, Instant};
 
-use batch_lp2d::coordinator::batcher::Batcher;
+use batch_lp2d::coordinator::admission::{
+    AdmissionConfig, AdmissionPipeline, ClosePolicy, CloseReason, DeadlineClass, ReadyBatch,
+};
 use batch_lp2d::coordinator::router::Router;
 use batch_lp2d::gen::{self, trace};
-use batch_lp2d::lp::types::{Problem, Solution};
+use batch_lp2d::lp::brute;
+use batch_lp2d::lp::types::{Problem, Solution, Status};
+use batch_lp2d::lp::validate::{agree, Tolerance};
 use batch_lp2d::runtime::manifest::{Manifest, Variant};
 use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::shard::{
@@ -58,23 +63,55 @@ fn prop_router_totality_and_minimality() {
     });
 }
 
+/// Routing table + capacities for the admission property tests.
+fn admission_router(caps: &[usize]) -> (Router, Vec<usize>) {
+    assert_eq!(caps.len(), 3);
+    let max = *caps.iter().max().unwrap();
+    let mut text = String::from("variant\tbatch\tm\tblock_b\tchunk\tfile\n");
+    for m in [16usize, 64, 256] {
+        text.push_str(&format!("rgb\t{max}\t{m}\t8\t{m}\tf\n"));
+    }
+    let manifest = Manifest::parse(&text, std::path::PathBuf::from("/tmp")).unwrap();
+    (Router::new(&manifest, Variant::Rgb).unwrap(), caps.to_vec())
+}
+
+fn fixed_config(wait: Duration) -> AdmissionConfig {
+    AdmissionConfig {
+        policy: ClosePolicy::Fixed,
+        interactive_wait: wait,
+        bulk_wait: wait * 8,
+        ..AdmissionConfig::default()
+    }
+}
+
 #[test]
-fn prop_batcher_no_loss_no_duplication() {
-    check("batcher conservation", 200, |rng| {
-        let classes = vec![16usize, 64, 256];
-        let caps = vec![
+fn prop_admission_no_loss_no_duplication() {
+    check("admission conservation", 200, |rng| {
+        let classes = [16usize, 64, 256];
+        let caps = [
             rng.range_usize(1, 8),
             rng.range_usize(1, 8),
             rng.range_usize(1, 8),
         ];
-        let mut b: Batcher<u64> = Batcher::new(classes.clone(), caps, Duration::from_millis(5));
+        let (router, caps) = admission_router(&caps);
+        let mut b: AdmissionPipeline<u64> =
+            AdmissionPipeline::new(router, caps, fixed_config(Duration::from_millis(5)));
         let t0 = Instant::now();
         let n = rng.range_usize(1, 200);
         let mut emitted = Vec::new();
         for i in 0..n as u64 {
             let class = classes[rng.below(3)];
-            if let Some(ready) = b.push(class, i, t0) {
+            let dclass = if rng.below(2) == 0 {
+                DeadlineClass::Interactive
+            } else {
+                DeadlineClass::Bulk
+            };
+            let out = b.push(class, dclass, i, class, t0);
+            assert!(out.shed.is_empty(), "unexpected shed below the bound");
+            if let Some(ready) = out.ready {
                 assert_eq!(ready.class_m, class);
+                assert_eq!(ready.deadline_class, dclass);
+                assert_eq!(ready.items.len(), ready.waits.len());
                 emitted.extend(ready.items);
             }
         }
@@ -89,14 +126,17 @@ fn prop_batcher_no_loss_no_duplication() {
 }
 
 #[test]
-fn prop_batcher_fifo_within_class() {
-    check("batcher FIFO", 150, |rng| {
+fn prop_admission_fifo_within_queue() {
+    check("admission FIFO", 150, |rng| {
         let cap = rng.range_usize(2, 10);
-        let mut b: Batcher<u64> = Batcher::new(vec![32], vec![cap], Duration::from_secs(1));
+        let (router, caps) = admission_router(&[cap, cap, cap]);
+        let mut b: AdmissionPipeline<u64> =
+            AdmissionPipeline::new(router, caps, fixed_config(Duration::from_secs(1)));
         let t0 = Instant::now();
         let mut last_emitted: i64 = -1;
         for i in 0..rng.range_usize(1, 100) as u64 {
-            if let Some(ready) = b.push(32, i, t0) {
+            let out = b.push(64, DeadlineClass::Interactive, i, 40, t0);
+            if let Some(ready) = out.ready {
                 for &x in &ready.items {
                     assert_eq!(x as i64, last_emitted + 1, "out of order");
                     last_emitted = x as i64;
@@ -107,24 +147,204 @@ fn prop_batcher_fifo_within_class() {
 }
 
 #[test]
-fn prop_batcher_deadline_bound() {
-    check("batcher deadline", 150, |rng| {
+fn prop_admission_deadline_bound_per_class() {
+    check("admission deadline", 150, |rng| {
         let wait = Duration::from_millis(rng.range_usize(1, 50) as u64);
-        let mut b: Batcher<u32> = Batcher::new(vec![8], vec![1000], wait);
+        let (router, caps) = admission_router(&[1000, 1000, 1000]);
+        let mut b: AdmissionPipeline<u32> =
+            AdmissionPipeline::new(router, caps, fixed_config(wait));
         let t0 = Instant::now();
-        b.push(8, 1, t0);
-        // Just before the deadline: nothing fires.
+        b.push(16, DeadlineClass::Interactive, 1, 8, t0);
+        b.push(16, DeadlineClass::Bulk, 2, 8, t0);
+        // Just before the interactive deadline: nothing fires.
         let early = t0 + wait - Duration::from_nanos(1);
-        assert!(b.poll_expired(early).is_empty());
-        // At/after the deadline: exactly one batch with the item.
+        assert!(b.poll(early, 0).is_empty());
+        // At the interactive deadline: only the interactive queue closes
+        // (bulk has 8x the SLO).
         let late = t0 + wait;
-        let ready = b.poll_expired(late);
+        let ready = b.poll(late, 0);
         assert_eq!(ready.len(), 1);
         assert_eq!(ready[0].items, vec![1]);
-        // Deadline reporting is consistent.
-        b.push(8, 2, late);
+        assert_eq!(ready[0].reason, CloseReason::Deadline);
+        assert!(ready[0].oldest_wait >= wait);
+        // The bulk deadline still tracks.
         let d = b.next_deadline_in(late).unwrap();
-        assert!(d <= wait);
+        assert!(d > Duration::ZERO && d <= wait * 8);
+        // And fires at 8x.
+        let bulk_ready = b.poll(t0 + wait * 8, 0);
+        assert_eq!(bulk_ready.len(), 1);
+        assert_eq!(bulk_ready[0].items, vec![2]);
+    });
+}
+
+/// Pack a closed batch (indices into `problems`) without shuffling and
+/// solve it on the deterministic CPU executor, scattering per-problem
+/// solutions back to submission order. Unshuffled packing keeps each
+/// problem's wire bytes independent of batch composition, which is what
+/// makes cross-policy bit-identity a meaningful assertion.
+fn execute_batches(
+    manifest: &Manifest,
+    problems: &[Problem],
+    batches: &[ReadyBatch<usize>],
+) -> Vec<Option<Solution>> {
+    let mut out: Vec<Option<Solution>> = vec![None; problems.len()];
+    for b in batches {
+        let members: Vec<Problem> = b.items.iter().map(|&i| problems[i].clone()).collect();
+        let m_max = members.iter().map(|p| p.m()).max().unwrap();
+        let bucket = manifest
+            .fit(Variant::Rgb, members.len(), m_max)
+            .expect("bucket fits")
+            .clone();
+        let pb = pack::pack(&members, bucket.batch, bucket.m, None).unwrap();
+        let (sol, status, _) = CpuShardExecutor.execute_raw(&bucket, &pb).unwrap();
+        let decoded = pack::unpack(&sol, &status, members.len()).unwrap();
+        for (&idx, s) in b.items.iter().zip(&decoded) {
+            assert!(out[idx].is_none(), "problem {idx} answered twice");
+            out[idx] = Some(*s);
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_adaptive_close_is_work_conserving_and_bit_identical() {
+    // The tentpole acceptance property: with idle shards and a non-empty
+    // class queue, the adaptive policy closes a batch WITHOUT waiting for
+    // max_wait — and the answers (assembled in input order) are
+    // bit-identical to the fixed policy's, which batches the same
+    // problems completely differently.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t8\t16\t8\t16\ta\n\
+                rgb\t32\t16\t8\t16\tb\n\
+                rgb\t8\t64\t8\t64\tc\n\
+                rgb\t32\t64\t8\t64\td\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    let slo = Duration::from_millis(50);
+    check("work-conserving adaptive close", 30, |rng| {
+        let n = rng.range_usize(1, 80);
+        let problems: Vec<Problem> = trace::mixed_size_batch(rng, n, 2, 60);
+        let idle_shards = rng.range_usize(1, 4);
+        let t0 = Instant::now();
+
+        let router = Router::new(&manifest, Variant::Rgb).unwrap();
+        let caps = vec![32usize, 32];
+        let mut runs: Vec<(Vec<ReadyBatch<usize>>, bool)> = Vec::new();
+        for policy in [ClosePolicy::Fixed, ClosePolicy::Adaptive] {
+            let mut p: AdmissionPipeline<usize> = AdmissionPipeline::new(
+                router.clone(),
+                caps.clone(),
+                AdmissionConfig {
+                    policy,
+                    interactive_wait: slo,
+                    bulk_wait: slo * 8,
+                    class_cost_ns: Vec::new(), // isolate the idle rule
+                    ..AdmissionConfig::default()
+                },
+            );
+            let mut batches: Vec<ReadyBatch<usize>> = Vec::new();
+            let mut saw_early_close = false;
+            for (i, problem) in problems.iter().enumerate() {
+                let class = p.route(problem.m()).expect("routable");
+                // Mock clock: all pushes at t0, so the fixed policy can
+                // only close on capacity (or the final flush) — never the
+                // deadline.
+                let out = p.push(class, DeadlineClass::Interactive, i, problem.m(), t0);
+                assert!(out.shed.is_empty());
+                batches.extend(out.ready);
+                // The dispatcher's idle-shard feedback, simulated: a poll
+                // with idle shards after every push.
+                let idle = if policy == ClosePolicy::Adaptive { idle_shards } else { 0 };
+                for ready in p.poll(t0, idle) {
+                    assert_eq!(ready.reason, CloseReason::IdleShard);
+                    assert!(
+                        ready.oldest_wait < slo,
+                        "work-conserving close must not wait for max_wait"
+                    );
+                    saw_early_close = true;
+                    batches.push(ready);
+                }
+            }
+            batches.extend(p.flush(t0));
+            assert!(p.is_empty());
+            runs.push((batches, saw_early_close));
+        }
+
+        let (fixed_batches, fixed_early) = &runs[0];
+        let (adaptive_batches, adaptive_early) = &runs[1];
+        assert!(!fixed_early, "fixed policy must never close early");
+        assert!(
+            *adaptive_early,
+            "idle shards + non-empty queues must produce an early close"
+        );
+        // Same problems, input-order replies, bit-identical answers.
+        let want = execute_batches(&manifest, &problems, fixed_batches);
+        let got = execute_batches(&manifest, &problems, adaptive_batches);
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            let (a, b) = (a.expect("fixed answered"), b.expect("adaptive answered"));
+            assert!(
+                bit_identical(&a, &b),
+                "problem {i} (m={}): {a:?} vs {b:?}",
+                problems[i].m()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_padding_to_class_agrees_with_unpadded_brute() {
+    // Satellite acceptance: a problem padded up to its size class solves
+    // identically (status, and point/objective within tolerance) to the
+    // unpadded reference (`lp::brute` on the raw problem), across every
+    // class in the test manifest and both generators.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t16\t8\t8\t8\ta\n\
+                rgb\t16\t16\t8\t16\tb\n\
+                rgb\t16\t64\t8\t64\tc\n\
+                rgb\t16\t256\t8\t256\td\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    let router = Router::new(&manifest, Variant::Rgb).unwrap();
+    check("padding equivalence", 40, |rng| {
+        for &class_m in router.classes() {
+            for infeasible in [false, true] {
+                // A problem strictly smaller than its class (when the
+                // class allows), so padding rows are actually exercised.
+                let m = rng.range_usize(2.min(class_m), class_m);
+                let p = if infeasible {
+                    gen::infeasible(rng, m.max(2))
+                } else {
+                    gen::feasible(rng, m)
+                };
+                let bucket = manifest
+                    .fit(Variant::Rgb, 1, class_m)
+                    .expect("bucket for class")
+                    .clone();
+                // Shuffled pack: padding + randomization together must
+                // still reproduce the reference answer. (`&mut *rng`:
+                // explicit reborrow so the loop keeps the RNG.)
+                let pb = pack::pack(
+                    std::slice::from_ref(&p),
+                    bucket.batch,
+                    bucket.m,
+                    Some(&mut *rng),
+                )
+                .unwrap();
+                let (sol, status, _) = CpuShardExecutor.execute_raw(&bucket, &pb).unwrap();
+                let got = pack::unpack(&sol, &status, 1).unwrap()[0];
+                let want = brute::solve(&p);
+                assert_eq!(
+                    got.status, want.status,
+                    "class {class_m} m {} infeasible={infeasible}",
+                    p.m()
+                );
+                if got.status == Status::Optimal {
+                    assert!(
+                        agree(&p, &got, &want, Tolerance::default()),
+                        "class {class_m} m {}: {got:?} vs {want:?}",
+                        p.m()
+                    );
+                }
+            }
+        }
     });
 }
 
