@@ -30,6 +30,13 @@
 //!   bound, default 8x).
 //! * `--scenario poisson|bursty|diurnal|heavy-tail|flood|sim` swaps the
 //!   default Poisson trace for one of the scenario-diverse load models.
+//! * `--tune-profile TUNE_profile.json` calibrates dispatch, the adaptive
+//!   close's cost model, and the steal estimates from measured backend
+//!   costs (write the profile with `batch-lp2d tune`); the per-shard
+//!   report then shows nominal vs calibrated weights.
+//! * `--class-overrides '16:slo-ms=1;64:max-batch=128'` sets per-size-class
+//!   batch caps and SLO bounds (conflicting overrides are a typed startup
+//!   error).
 //!
 //! The report prints e2e latency percentiles, the queue-wait vs
 //! execute-time split, close-reason counts, shed counts per deadline
@@ -38,7 +45,9 @@
 
 use std::time::{Duration, Instant};
 
-use batch_lp2d::coordinator::{BackendSpec, ClosePolicy, Config, DeadlineClass, Service};
+use batch_lp2d::coordinator::{
+    BackendSpec, ClassOverride, ClosePolicy, Config, DeadlineClass, Service,
+};
 use batch_lp2d::gen::scenarios::{Scenario, ScenarioRequest};
 use batch_lp2d::gen::trace::{poisson_trace, TraceParams};
 use batch_lp2d::lp::types::Status;
@@ -58,6 +67,8 @@ fn main() -> anyhow::Result<()> {
     let mut slo_ms: u64 = 10;
     let mut bulk_slo_ms: u64 = 0; // 0 = 8x the interactive SLO
     let mut scenario: Option<Scenario> = None;
+    let mut tune_profile: Option<std::path::PathBuf> = None;
+    let mut class_overrides: Vec<ClassOverride> = Vec::new();
     let mut positional = 0usize;
     let mut i = 0usize;
     while i < args.len() {
@@ -94,6 +105,15 @@ fn main() -> anyhow::Result<()> {
                 Some(name) => Some(Scenario::parse(name)?),
                 None => None,
             };
+        } else if args[i] == "--tune-profile" {
+            i += 1;
+            tune_profile = args.get(i).map(std::path::PathBuf::from);
+        } else if args[i] == "--class-overrides" {
+            i += 1;
+            class_overrides = match args.get(i) {
+                Some(s) => ClassOverride::parse_list(s)?,
+                None => Vec::new(),
+            };
         } else {
             match positional {
                 0 => requests = args[i].parse().unwrap_or(requests),
@@ -109,6 +129,7 @@ fn main() -> anyhow::Result<()> {
     let depth = PipelineDepth::new(depth);
     let bulk_slo_ms = if bulk_slo_ms == 0 { slo_ms * 8 } else { bulk_slo_ms };
 
+    let calibrated = tune_profile.is_some();
     let config = Config {
         max_wait: Duration::from_millis(slo_ms),
         bulk_wait: Duration::from_millis(bulk_slo_ms),
@@ -117,6 +138,8 @@ fn main() -> anyhow::Result<()> {
         executors: shards.max(1),
         backends,
         depth,
+        tune_profile,
+        class_overrides,
         ..Config::default()
     };
     let service = Service::start(batch_lp2d::runtime::default_artifact_dir(), config)?;
@@ -252,13 +275,22 @@ fn main() -> anyhow::Result<()> {
     let names = service.shard_backends().to_vec();
     for (s, load) in snap.per_shard.iter().enumerate() {
         println!(
-            "  shard {s} [{}] w={:.1}: {} batches  {} LPs  busy {:.3} ms  steals {}",
+            "  shard {s} [{}] w={:.1} cal={:.1}: {} batches ({} dispatched)  {} LPs  \
+             busy {:.3} ms  steals {}",
             names.get(s).copied().unwrap_or("?"),
             load.weight,
+            load.calibrated_weight,
             load.batches,
+            load.dispatched,
             load.solved,
             load.busy_ns as f64 / 1e6,
             load.steals
+        );
+    }
+    if calibrated {
+        println!(
+            "  calibration: tune profile loaded; dispatch follows the cal= weights above \
+             (vs nominal w=)"
         );
     }
     service.shutdown();

@@ -1,0 +1,92 @@
+//! Calibration-accuracy bench: profile the backend mix, validate the
+//! fitted cost models against fresh measurements, and emit the
+//! predicted-vs-measured table.
+//!
+//! ```sh
+//! cargo bench --bench calibration -- \
+//!     [--backends LIST] [--runs N] [--max-batch B] [--seed S]
+//! ```
+//!
+//! Defaults run the portable CPU-only heterogeneous mix (no artifacts
+//! needed). Results go three places: stdout (markdown table),
+//! `TUNE_table.md` (the CI artifact), and `BENCH_pipeline.json` (the
+//! `tune_*` records merged next to the solver_micro and loadgen rows for
+//! the perf gate). `BATCH_LP2D_BENCH_FAST=1` shrinks the grid for CI.
+
+use batch_lp2d::bench::calibration::{json_records, run, table};
+use batch_lp2d::bench::loadgen::merge_prefixed_records;
+use batch_lp2d::coordinator::BackendSpec;
+use batch_lp2d::runtime::{default_artifact_dir, Variant};
+use batch_lp2d::tune::ProfilerOpts;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some();
+    let mut specs = vec![BackendSpec::BatchCpu { threads: 2 }, BackendSpec::Cpu];
+    let mut opts = ProfilerOpts {
+        runs: if fast { 1 } else { 3 },
+        max_batch: if fast { 256 } else { 512 },
+        ..ProfilerOpts::default()
+    };
+
+    let mut i = 0usize;
+    while i < args.len() {
+        let flag = args[i].clone();
+        let mut value = || -> Option<String> {
+            i += 1;
+            args.get(i).cloned()
+        };
+        match flag.as_str() {
+            "--backends" => {
+                specs = BackendSpec::parse_list(&value().unwrap_or_default())?;
+            }
+            "--runs" => {
+                opts.runs = value().and_then(|v| v.parse().ok()).unwrap_or(opts.runs);
+            }
+            "--max-batch" => {
+                opts.max_batch =
+                    value().and_then(|v| v.parse().ok()).unwrap_or(opts.max_batch);
+            }
+            "--seed" => {
+                opts.seed = value().and_then(|v| v.parse().ok()).unwrap_or(opts.seed);
+            }
+            // cargo bench passes through its own flags; ignore the rest.
+            _ => {}
+        }
+        i += 1;
+    }
+
+    println!(
+        "## calibration accuracy: {} backend spec(s), {} runs/point, batches <= {}",
+        specs.len(),
+        opts.runs,
+        opts.max_batch
+    );
+    let report = run(&specs, &default_artifact_dir(), Variant::Rgb, &opts)?;
+    for b in &report.profile.backends {
+        for c in &b.classes {
+            println!(
+                "fit {}/m{}: setup {:.0} ns + {:.1} ns/problem (calibrated weight {:.2})",
+                b.backend, c.class_m, c.setup_ns, c.per_problem_ns, c.calibrated_weight()
+            );
+        }
+    }
+    let t = table(&report.rows);
+    println!("\n{}", t.to_markdown());
+    println!(
+        "validation: {} cells  {:.0} LPs/s  mean |rel err| {:.1}%",
+        report.rows.len(),
+        report.throughput_lps,
+        100.0 * report.mean_abs_err
+    );
+
+    std::fs::write("TUNE_table.md", t.to_markdown())
+        .map_err(|e| anyhow::anyhow!("cannot write TUNE_table.md: {e}"))?;
+    let records = json_records(&report);
+    merge_prefixed_records(std::path::Path::new("BENCH_pipeline.json"), &records, "tune_")?;
+    println!(
+        "wrote TUNE_table.md and merged {} record(s) into BENCH_pipeline.json",
+        records.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Calibration-accuracy harness: profile a backend mix, then measure how
+//! well the fitted `setup_ns + per_problem_ns` models predict fresh batch
+//! costs — including at half occupancy, deliberately off the fitted grid.
+//!
+//! The product is the **calibration-accuracy table** (predicted vs
+//! measured busy time per (backend, class, occupancy) cell) rendered as
+//! markdown (`TUNE_table.md`, a CI artifact) and as flat `tune_*` records
+//! merged into `BENCH_pipeline.json` next to the solver_micro and loadgen
+//! rows, so the perf gate tracks the calibration path's throughput like
+//! any other bench.
+
+use std::path::Path;
+
+use crate::coordinator::BackendSpec;
+use crate::runtime::{Manifest, Variant};
+use crate::tune::{profile_backend, validate_fit, AccuracyRow, Profile, ProfilerOpts};
+use crate::util::Table;
+
+/// One full profile-then-validate pass over a backend mix.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    pub profile: Profile,
+    pub rows: Vec<AccuracyRow>,
+    /// Aggregate validation throughput (problems / measured second) —
+    /// the gated number.
+    pub throughput_lps: f64,
+    /// Mean absolute relative prediction error across cells.
+    pub mean_abs_err: f64,
+}
+
+/// Profile each **distinct** backend kind in `specs` over the variant's
+/// bucket grid, then re-measure at full and half occupancy and compare
+/// against the fits. Engine-free mixes run against the synthetic CPU
+/// inventory (no artifacts), mirroring the service's fallback.
+pub fn run(
+    specs: &[BackendSpec],
+    artifact_dir: &Path,
+    variant: Variant,
+    opts: &ProfilerOpts,
+) -> anyhow::Result<CalibrationReport> {
+    anyhow::ensure!(!specs.is_empty(), "no backends to calibrate");
+    let needs_engine = specs.iter().any(|s| matches!(s, BackendSpec::Engine));
+    let manifest = Manifest::load_or_cpu_fallback(artifact_dir, needs_engine)?;
+    let keys = BackendSpec::distinct_keys(specs);
+
+    let mut profile = Profile::default();
+    let mut rows: Vec<AccuracyRow> = Vec::new();
+    for key in &keys {
+        let spec = BackendSpec::parse(key)?;
+        let mut backend = spec.build(artifact_dir)?;
+        let fit = profile_backend(backend.as_mut(), key, &manifest, variant, opts)?;
+        rows.extend(validate_fit(backend.as_mut(), &fit, &manifest, variant, opts)?);
+        profile.upsert(fit);
+    }
+
+    let problems: u64 = rows.iter().map(|r| r.problems as u64).sum();
+    let measured_ns: u64 = rows.iter().map(|r| r.measured_ns).sum();
+    let mean_abs_err = if rows.is_empty() {
+        0.0
+    } else {
+        rows.iter().map(|r| r.rel_err().abs()).sum::<f64>() / rows.len() as f64
+    };
+    Ok(CalibrationReport {
+        profile,
+        rows,
+        throughput_lps: problems as f64 / (measured_ns.max(1) as f64 / 1e9),
+        mean_abs_err,
+    })
+}
+
+/// The predicted-vs-measured table, one row per validation cell.
+pub fn table(rows: &[AccuracyRow]) -> Table {
+    let mut t = Table::new(&[
+        "backend",
+        "class_m",
+        "problems",
+        "predicted_us",
+        "measured_us",
+        "rel_err",
+    ]);
+    for r in rows {
+        t.push_row(vec![
+            r.backend.clone(),
+            r.class_m.to_string(),
+            r.problems.to_string(),
+            format!("{:.1}", r.predicted_ns as f64 / 1e3),
+            format!("{:.1}", r.measured_ns as f64 / 1e3),
+            format!("{:+.1}%", 100.0 * r.rel_err()),
+        ]);
+    }
+    t
+}
+
+/// Flat `tune_*` records for `BENCH_pipeline.json`: one gated summary
+/// (`tune_calibration`, carrying the validation throughput) plus one
+/// `tune_accuracy` record per cell (data-only — no `throughput_lps`, so
+/// the gate's scanner skips them).
+pub fn json_records(report: &CalibrationReport) -> Vec<String> {
+    let mut out = vec![format!(
+        "{{\n  \"bench\": \"tune_calibration\",\n  \"cells\": {},\n  \
+         \"throughput_lps\": {:.1},\n  \"mean_abs_rel_err\": {:.4}\n}}",
+        report.rows.len(),
+        report.throughput_lps,
+        report.mean_abs_err,
+    )];
+    for r in &report.rows {
+        out.push(format!(
+            "{{\n  \"bench\": \"tune_accuracy\",\n  \"backend\": \"{}\",\n  \
+             \"class_m\": {},\n  \"problems\": {},\n  \"predicted_ns\": {},\n  \
+             \"measured_ns\": {},\n  \"rel_err\": {:.4}\n}}",
+            r.backend,
+            r.class_m,
+            r.problems,
+            r.predicted_ns,
+            r.measured_ns,
+            r.rel_err(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_only_calibration_runs_without_artifacts() {
+        let specs = vec![BackendSpec::BatchCpu { threads: 2 }, BackendSpec::Cpu];
+        let opts = ProfilerOpts { runs: 1, warmup: 0, max_batch: 64, seed: 9 };
+        let report = run(
+            &specs,
+            Path::new("definitely-missing-artifact-dir"),
+            Variant::Rgb,
+            &opts,
+        )
+        .expect("CPU-only calibration needs no artifacts");
+        assert_eq!(report.profile.backends.len(), 2);
+        assert!(!report.rows.is_empty());
+        assert!(report.throughput_lps > 0.0);
+        // Full + half occupancy per (backend, class) cell.
+        let t = table(&report.rows);
+        assert!(t.header.iter().any(|h| h == "predicted_us"));
+        let records = json_records(&report);
+        assert!(records[0].contains("\"bench\": \"tune_calibration\""));
+        assert!(records[0].contains("throughput_lps"));
+        assert!(records.len() == report.rows.len() + 1);
+        assert!(records[1].contains("\"bench\": \"tune_accuracy\""));
+        // Accuracy records carry no gated throughput field.
+        assert!(!records[1].contains("throughput_lps"));
+    }
+
+    #[test]
+    fn duplicate_specs_profile_once() {
+        let specs = vec![BackendSpec::Cpu, BackendSpec::Cpu, BackendSpec::Cpu];
+        let opts = ProfilerOpts { runs: 1, warmup: 0, max_batch: 32, seed: 5 };
+        let report = run(
+            &specs,
+            Path::new("definitely-missing-artifact-dir"),
+            Variant::Rgb,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(report.profile.backends.len(), 1, "keyed by backend kind");
+    }
+}

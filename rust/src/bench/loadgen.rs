@@ -260,40 +260,40 @@ pub fn json_record(r: &ScenarioReport) -> String {
     )
 }
 
-/// Split a flat JSON array (`[{...}, {...}]`, no nested objects — the
-/// only shape our bench files emit) into raw object bodies. The one
-/// splitter for `BENCH_pipeline.json`-shaped files: `bench_gate`'s field
-/// scanner walks the same bodies, so the two parsers cannot drift.
-pub fn split_flat_objects(text: &str) -> Vec<String> {
-    text.split('{')
-        .skip(1)
-        .filter_map(|chunk| chunk.split('}').next())
-        .map(|s| s.trim().trim_end_matches(',').trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect()
-}
+/// The one splitter for `BENCH_pipeline.json`-shaped files, re-exported
+/// from [`crate::util::flatjson`]: `bench_gate`'s field scanner and the
+/// tune profile loader walk the same bodies, so the parsers cannot drift.
+pub use crate::util::flatjson::split_flat_objects;
 
-/// Merge loadgen records into `BENCH_pipeline.json`: keep every existing
-/// non-loadgen record (the solver_micro pipeline/shard/depth sweeps),
-/// replace any stale loadgen rows, append the new ones. Idempotent —
-/// re-running loadgen never duplicates rows. (`solver_micro` rewrites the
-/// file wholesale, so run it first, as CI's bench job does.)
-pub fn merge_into_bench_json(path: &Path, records: &[String]) -> anyhow::Result<()> {
+/// Merge a bench family's records into `BENCH_pipeline.json`: keep every
+/// existing record whose `bench` name does not start with `prefix` (the
+/// other harnesses' rows), replace any stale same-family rows, append the
+/// new ones. Idempotent — re-running a harness never duplicates rows.
+/// (`solver_micro` rewrites the file wholesale, so run it first, as CI's
+/// bench job does.)
+pub fn merge_prefixed_records(
+    path: &Path,
+    records: &[String],
+    prefix: &str,
+) -> anyhow::Result<()> {
     let mut bodies: Vec<String> = Vec::new();
     if let Ok(text) = std::fs::read_to_string(path) {
         for obj in split_flat_objects(&text) {
-            let is_loadgen = obj.contains("\"bench\"") && obj.contains("\"loadgen_");
-            if !is_loadgen {
+            let is_family =
+                obj.contains("\"bench\"") && obj.contains(&format!("\"{prefix}"));
+            if !is_family {
                 bodies.push(format!("{{\n  {obj}\n}}"));
             }
         }
     }
     bodies.extend(records.iter().cloned());
-    let mut out = String::from("[\n");
-    out.push_str(&bodies.join(",\n"));
-    out.push_str("\n]\n");
-    std::fs::write(path, out)
+    std::fs::write(path, crate::util::flatjson::render_array(&bodies))
         .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+}
+
+/// [`merge_prefixed_records`] for the loadgen family (`loadgen_*`).
+pub fn merge_into_bench_json(path: &Path, records: &[String]) -> anyhow::Result<()> {
+    merge_prefixed_records(path, records, "loadgen_")
 }
 
 #[cfg(test)]

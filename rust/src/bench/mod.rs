@@ -9,8 +9,11 @@
 //!   ablations of the design choices.
 //! * [`loadgen`]    -- open-loop latency-under-load scenario driver over
 //!   the serving layer (p50/p95/p99, queue-wait vs execute split, shed).
+//! * [`calibration`] -- tune-profile accuracy harness (predicted vs
+//!   measured batch cost per backend × class × occupancy).
 
 pub mod ablations;
+pub mod calibration;
 pub mod contention;
 pub mod figures;
 pub mod harness;

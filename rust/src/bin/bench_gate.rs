@@ -36,11 +36,12 @@ const BASELINE_HEADER: &str = "Committed perf baseline for the CI bench-regressi
 (bench_gate). Rows with throughput_lps <= 0 are bootstrap rows: they pin the record set the \
 fresh run must produce, without pinning a number yet. Refresh on the reference runner with: \
 BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro && BATCH_LP2D_BENCH_FAST=1 cargo \
-bench --bench loadgen && cargo run --release --bin bench_gate -- --refresh \
-BENCH_baseline.json BENCH_pipeline.json (solver_micro rewrites BENCH_pipeline.json, loadgen \
-merges its loadgen_* records into it — run them in that order or the loadgen rows never \
-reach the baseline). Engine-path records (pipeline_engine_*, pipeline_shard_engine) are \
-excluded automatically until the real PJRT bindings replace the offline xla stub in CI.";
+bench --bench loadgen && BATCH_LP2D_BENCH_FAST=1 cargo bench --bench calibration && cargo \
+run --release --bin bench_gate -- --refresh BENCH_baseline.json BENCH_pipeline.json \
+(solver_micro rewrites BENCH_pipeline.json; loadgen and calibration merge their loadgen_* \
+and tune_* records into it — run them in that order or those rows never reach the \
+baseline). Engine-path records (pipeline_engine_*, pipeline_shard_engine) are excluded \
+automatically until the real PJRT bindings replace the offline xla stub in CI.";
 
 /// One comparable bench record: match key + throughput, plus the fields
 /// the key derives from (so `--refresh` can re-emit the record).
@@ -53,34 +54,15 @@ struct Record {
     throughput_lps: f64,
 }
 
-/// Extract a string field (`"field": "value"`) from one flat JSON object.
-fn extract_str(obj: &str, field: &str) -> Option<String> {
-    let pat = format!("\"{field}\"");
-    let rest = &obj[obj.find(&pat)? + pat.len()..];
-    let rest = rest.split_once(':')?.1.trim_start();
-    let rest = rest.strip_prefix('"')?;
-    Some(rest.split('"').next()?.to_string())
-}
-
-/// Extract a numeric field (`"field": 123.4`) from one flat JSON object.
-fn extract_num(obj: &str, field: &str) -> Option<f64> {
-    let pat = format!("\"{field}\"");
-    let rest = &obj[obj.find(&pat)? + pat.len()..];
-    let rest = rest.split_once(':')?.1.trim_start();
-    let num: String = rest
-        .chars()
-        .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
-        .collect();
-    num.parse().ok()
-}
+use batch_lp2d::util::flatjson::{extract_num, extract_str, split_flat_objects};
 
 /// Parse every `{...}` object carrying a `bench` + `throughput_lps` pair.
-/// Object splitting is shared with the loadgen merge path
-/// (`batch_lp2d::bench::loadgen::split_flat_objects`) so the two
-/// readers of `BENCH_pipeline.json` cannot drift.
+/// Object splitting and field extraction are shared with the loadgen
+/// merge path and the tune profile loader (`batch_lp2d::util::flatjson`)
+/// so the readers of `BENCH_pipeline.json` cannot drift.
 fn parse_records(text: &str) -> Vec<Record> {
     let mut out = Vec::new();
-    for obj in batch_lp2d::bench::loadgen::split_flat_objects(text) {
+    for obj in split_flat_objects(text) {
         let obj = obj.as_str();
         let (Some(bench), Some(lps)) =
             (extract_str(obj, "bench"), extract_num(obj, "throughput_lps"))
@@ -118,11 +100,15 @@ fn unarmed_warning(baseline_path: &str) -> String {
          # only that the record set matches — NO throughput regression\n\
          # was (or could be) detected. Arm it on the reference runner\n\
          # (in this order — solver_micro rewrites the snapshot, loadgen\n\
-         # merges into it):\n\
+         # and calibration merge into it):\n\
          #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro\n\
          #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench loadgen\n\
+         #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench calibration\n\
          #   cargo run --release --bin bench_gate -- --refresh \\\n\
          #     BENCH_baseline.json BENCH_pipeline.json\n\
+         # While you are at it, refresh the dispatch calibration too:\n\
+         #   cargo run --release -- tune --backends batch-cpu:2,cpu \\\n\
+         #     --out TUNE_profile.json\n\
          ##############################################################"
     )
 }

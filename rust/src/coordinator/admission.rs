@@ -183,14 +183,31 @@ impl ClosePolicy {
     }
 }
 
+/// A per-size-class SLO override: tighten (or loosen) one class's wait
+/// bounds away from the config-wide defaults. `None` fields inherit the
+/// default for that deadline class. The service validates its
+/// [`ClassOverride`](crate::coordinator::service::ClassOverride) list
+/// (duplicates, unknown classes, inverted bounds are typed errors) before
+/// translating it into these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClassSloOverride {
+    pub class_m: usize,
+    pub interactive_wait: Option<Duration>,
+    pub bulk_wait: Option<Duration>,
+}
+
 /// Admission configuration: the policy knobs the service threads through
 /// from its `Config` (and the CLI's `--policy`/`--max-queue`/`--slo-ms`).
 #[derive(Clone, Debug)]
 pub struct AdmissionConfig {
     pub policy: ClosePolicy,
-    /// SLO wait bound per deadline class.
+    /// Default SLO wait bound per deadline class.
     pub interactive_wait: Duration,
     pub bulk_wait: Duration,
+    /// Per-size-class SLO overrides (entries for classes not in the
+    /// routing table are ignored; the service's typed validation rejects
+    /// them before they get here).
+    pub class_slos: Vec<ClassSloOverride>,
     /// Bound on total queued items across every queue; 0 disables
     /// queueing entirely (every push sheds or closes).
     pub max_queue: usize,
@@ -206,6 +223,7 @@ impl Default for AdmissionConfig {
             policy: ClosePolicy::Adaptive,
             interactive_wait: Duration::from_millis(2),
             bulk_wait: Duration::from_millis(16),
+            class_slos: Vec::new(),
             max_queue: 32_768,
             class_cost_ns: Vec::new(),
         }
@@ -248,6 +266,9 @@ pub struct AdmissionPipeline<T> {
     /// Batch capacity per size class.
     capacity: Vec<usize>,
     config: AdmissionConfig,
+    /// Resolved SLO wait bound per `[class][deadline_class]` (defaults
+    /// overlaid with the per-class overrides at construction).
+    slos: Vec<[Duration; 2]>,
     /// Queues indexed `[class][deadline_class]` (0 = interactive, 1 = bulk).
     queues: Vec<[ClassQueue<T>; 2]>,
     queued_total: usize,
@@ -276,7 +297,17 @@ impl<T> AdmissionPipeline<T> {
             .iter()
             .map(|_| [ClassQueue::default(), ClassQueue::default()])
             .collect();
-        AdmissionPipeline { router, classes, capacity, config, queues, queued_total: 0 }
+        let slos = classes
+            .iter()
+            .map(|&class_m| {
+                let o = config.class_slos.iter().find(|o| o.class_m == class_m);
+                [
+                    o.and_then(|o| o.interactive_wait).unwrap_or(config.interactive_wait),
+                    o.and_then(|o| o.bulk_wait).unwrap_or(config.bulk_wait),
+                ]
+            })
+            .collect();
+        AdmissionPipeline { router, classes, capacity, config, slos, queues, queued_total: 0 }
     }
 
     /// The routing table this pipeline owns.
@@ -294,12 +325,21 @@ impl<T> AdmissionPipeline<T> {
         self.config.policy
     }
 
-    /// SLO wait bound of a deadline class.
+    /// Default SLO wait bound of a deadline class (per-class overrides
+    /// may tighten or loosen individual size classes — see
+    /// [`AdmissionPipeline::class_slo`]).
     pub fn slo(&self, class: DeadlineClass) -> Duration {
         match class {
             DeadlineClass::Interactive => self.config.interactive_wait,
             DeadlineClass::Bulk => self.config.bulk_wait,
         }
+    }
+
+    /// The resolved SLO bound of one (size class × deadline class) queue;
+    /// `None` for an unknown size class.
+    pub fn class_slo(&self, class_m: usize, class: DeadlineClass) -> Option<Duration> {
+        let ci = self.classes.binary_search(&class_m).ok()?;
+        Some(self.slos[ci][dclass_index(class)])
     }
 
     /// Total queued items across every queue.
@@ -415,12 +455,7 @@ impl<T> AdmissionPipeline<T> {
             for di in 0..2 {
                 let q = &self.queues[ci][di];
                 let Some(oldest) = q.entries.first() else { continue };
-                let slo = self.slo(if di == 0 {
-                    DeadlineClass::Interactive
-                } else {
-                    DeadlineClass::Bulk
-                });
-                let deadline = oldest.enqueued + slo;
+                let deadline = oldest.enqueued + self.slos[ci][di];
                 if now >= deadline {
                     due.push((deadline, ci, di, CloseReason::Deadline));
                 } else if adaptive && self.cost_says_close(ci, di) {
@@ -445,12 +480,12 @@ impl<T> AdmissionPipeline<T> {
                     let Some(oldest) = self.queues[ci][di].entries.first() else {
                         continue;
                     };
-                    let slo = self.slo(if di == 0 {
-                        DeadlineClass::Interactive
-                    } else {
-                        DeadlineClass::Bulk
-                    });
-                    extra.push((oldest.enqueued + slo, ci, di, CloseReason::IdleShard));
+                    extra.push((
+                        oldest.enqueued + self.slos[ci][di],
+                        ci,
+                        di,
+                        CloseReason::IdleShard,
+                    ));
                 }
             }
             extra.sort_by_key(|&(deadline, ci, di, _)| (deadline, ci, di));
@@ -473,12 +508,8 @@ impl<T> AdmissionPipeline<T> {
         for ci in 0..self.classes.len() {
             for di in 0..2 {
                 let Some(oldest) = self.queues[ci][di].entries.first() else { continue };
-                let slo = self.slo(if di == 0 {
-                    DeadlineClass::Interactive
-                } else {
-                    DeadlineClass::Bulk
-                });
-                let left = (oldest.enqueued + slo).saturating_duration_since(now);
+                let left =
+                    (oldest.enqueued + self.slos[ci][di]).saturating_duration_since(now);
                 best = Some(best.map_or(left, |b: Duration| b.min(left)));
             }
         }
@@ -798,6 +829,49 @@ mod tests {
         p.push(16, DeadlineClass::Interactive, 1, 8, t);
         p.push(16, DeadlineClass::Interactive, 2, 8, t + Duration::from_millis(10));
         assert!(p.poll(t + Duration::from_millis(10), 0).is_empty());
+    }
+
+    #[test]
+    fn per_class_slo_override_tightens_one_class_only() {
+        // Class 16 gets a 1ms interactive SLO; class 64 keeps the 10ms
+        // default and bulk inherits its default everywhere.
+        let mut p = pipeline(AdmissionConfig {
+            class_slos: vec![ClassSloOverride {
+                class_m: 16,
+                interactive_wait: Some(Duration::from_millis(1)),
+                bulk_wait: None,
+            }],
+            ..fixed()
+        });
+        assert_eq!(
+            p.class_slo(16, DeadlineClass::Interactive),
+            Some(Duration::from_millis(1))
+        );
+        assert_eq!(
+            p.class_slo(16, DeadlineClass::Bulk),
+            Some(Duration::from_millis(80))
+        );
+        assert_eq!(
+            p.class_slo(64, DeadlineClass::Interactive),
+            Some(Duration::from_millis(10))
+        );
+        assert_eq!(p.class_slo(32, DeadlineClass::Interactive), None);
+        let t = Instant::now();
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        p.push(64, DeadlineClass::Interactive, 2, 8, t);
+        // At 2ms only the overridden class has expired — and the next
+        // deadline tracks the default class, not the closed override.
+        let ready = p.poll(t + Duration::from_millis(2), 0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].class_m, 16);
+        assert_eq!(ready[0].reason, CloseReason::Deadline);
+        let left = p.next_deadline_in(t + Duration::from_millis(2)).unwrap();
+        assert_eq!(left, Duration::from_millis(8));
+        // The default class still closes at ITS deadline.
+        let ready = p.poll(t + Duration::from_millis(10), 0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].class_m, 64);
+        assert!(p.is_empty());
     }
 
     #[test]

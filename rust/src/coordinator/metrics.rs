@@ -105,14 +105,31 @@ pub struct ShardLoad {
     pub busy_ns: u64,
     /// Batches this shard stole from a peer's staged queue.
     pub steals: u64,
-    /// The shard backend's relative capacity weight (the dispatch bias;
-    /// 1.0 until configured).
+    /// Batches the weighted dispatcher TARGETED at this shard (stealing
+    /// may execute them elsewhere) — the observable the calibrated
+    /// dispatch ratio shows up in.
+    pub dispatched: u64,
+    /// The shard backend's nominal relative capacity weight (the
+    /// pre-calibration dispatch bias; 1.0 until configured).
     pub weight: f64,
+    /// The calibrated weight actually driving dispatch: the tune
+    /// profile's measured relative throughput, updated live by the online
+    /// refiner. Equals `weight` while uncalibrated — a divergence IS the
+    /// calibration signal.
+    pub calibrated_weight: f64,
 }
 
 impl Default for ShardLoad {
     fn default() -> Self {
-        ShardLoad { batches: 0, solved: 0, busy_ns: 0, steals: 0, weight: 1.0 }
+        ShardLoad {
+            batches: 0,
+            solved: 0,
+            busy_ns: 0,
+            steals: 0,
+            dispatched: 0,
+            weight: 1.0,
+            calibrated_weight: 1.0,
+        }
     }
 }
 
@@ -203,7 +220,32 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         for (s, &w) in weights.iter().enumerate() {
             g.per_shard[s].weight = w;
+            g.per_shard[s].calibrated_weight = w;
         }
+    }
+
+    /// Record the calibrated dispatch weights next to the nominal ones
+    /// (the tune profile's view at startup; refreshed live as the online
+    /// refiner updates the model).
+    pub fn set_calibrated_weights(&self, weights: &[f64]) {
+        self.ensure_shards(weights.len());
+        let mut g = self.inner.lock().unwrap();
+        for (s, &w) in weights.iter().enumerate() {
+            g.per_shard[s].calibrated_weight = w;
+        }
+    }
+
+    /// Refresh one shard's calibrated weight (online-refiner updates).
+    pub fn set_calibrated_weight(&self, shard: usize, weight: f64) {
+        self.ensure_shards(shard + 1);
+        self.inner.lock().unwrap().per_shard[shard].calibrated_weight = weight;
+    }
+
+    /// Record a dispatch decision: the weighted dispatcher targeted
+    /// `shard` with one closed batch (before any stealing).
+    pub fn on_dispatch(&self, shard: usize) {
+        self.ensure_shards(shard + 1);
+        self.inner.lock().unwrap().per_shard[shard].dispatched += 1;
     }
 
     /// Pre-size the per-class padding table (zero rows for classes that
@@ -476,8 +518,28 @@ mod tests {
         assert_eq!(s.per_shard[0].weight, 8.0);
         assert_eq!(s.per_shard[1].weight, 1.0);
         assert_eq!(s.per_shard[2].weight, 4.0);
+        // Uncalibrated: calibrated weights mirror the nominal ones.
+        assert!(s.per_shard.iter().all(|l| l.calibrated_weight == l.weight));
         // Shards configured but never hit still report zero load rows.
         assert!(s.per_shard.iter().all(|l| l.batches == 0 && l.steals == 0));
+    }
+
+    #[test]
+    fn calibrated_weights_and_dispatch_counters() {
+        let m = Metrics::new();
+        m.configure_shards(&[1.0, 1.0]);
+        m.set_calibrated_weights(&[4.0, 1.0]);
+        m.on_dispatch(0);
+        m.on_dispatch(0);
+        m.on_dispatch(1);
+        m.set_calibrated_weight(1, 0.5);
+        let s = m.snapshot();
+        // Nominal weights untouched; calibrated pairs diverge.
+        assert_eq!(s.per_shard[0].weight, 1.0);
+        assert_eq!(s.per_shard[0].calibrated_weight, 4.0);
+        assert_eq!(s.per_shard[1].calibrated_weight, 0.5);
+        assert_eq!(s.per_shard[0].dispatched, 2);
+        assert_eq!(s.per_shard[1].dispatched, 1);
     }
 
     #[test]
@@ -499,15 +561,15 @@ mod tests {
         assert_eq!(s.per_shard.len(), 3);
         assert_eq!(
             s.per_shard[0],
-            ShardLoad { batches: 1, solved: 4, busy_ns: 10, steals: 0, weight: 1.0 }
+            ShardLoad { batches: 1, solved: 4, busy_ns: 10, ..ShardLoad::default() }
         );
         assert_eq!(
             s.per_shard[1],
-            ShardLoad { batches: 0, solved: 0, busy_ns: 1, steals: 0, weight: 1.0 }
+            ShardLoad { busy_ns: 1, ..ShardLoad::default() }
         );
         assert_eq!(
             s.per_shard[2],
-            ShardLoad { batches: 2, solved: 5, busy_ns: 19, steals: 1, weight: 1.0 }
+            ShardLoad { batches: 2, solved: 5, busy_ns: 19, steals: 1, ..ShardLoad::default() }
         );
         assert_eq!(s.solved, 9);
         assert_eq!(s.steals(), 1);

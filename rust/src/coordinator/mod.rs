@@ -38,9 +38,12 @@ pub mod router;
 pub mod service;
 
 pub use admission::{
-    AdmissionConfig, AdmissionPipeline, ClosePolicy, CloseReason, DeadlineClass, ReadyBatch,
-    RejectReason,
+    AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, CloseReason,
+    DeadlineClass, ReadyBatch, RejectReason,
 };
 pub use metrics::{ClassPadding, CloseCounts, Metrics, ShardLoad, Snapshot};
 pub use router::Router;
-pub use service::{BackendSpec, Config, Service, SubmitError, Ticket};
+pub use service::{
+    class_cost_table, validate_class_overrides, BackendSpec, ClassOverride, Config, ConfigError,
+    Service, SubmitError, Ticket,
+};

@@ -25,13 +25,7 @@ pub struct Router {
 
 impl Router {
     pub fn new(manifest: &Manifest, variant: Variant) -> anyhow::Result<Router> {
-        let mut classes: Vec<usize> = manifest
-            .of_variant(variant)
-            .iter()
-            .map(|b| b.m)
-            .collect();
-        classes.sort_unstable();
-        classes.dedup();
+        let classes = manifest.classes(variant);
         anyhow::ensure!(
             !classes.is_empty(),
             "manifest has no buckets for variant {}",

@@ -47,7 +47,6 @@
 //!   backlogged peer, so a drained shard never idles behind the
 //!   dispatcher's estimates. Steals are counted per shard in the metrics.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -55,18 +54,17 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::admission::{
-    AdmissionConfig, AdmissionPipeline, ClosePolicy, DeadlineClass, ReadyBatch,
+    AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, DeadlineClass, ReadyBatch,
 };
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
-use crate::runtime::backend::{
-    batch_ests_ns, build_cost_table, Backend, BatchCpuBackend, CpuShardExecutor,
-};
+use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor};
 use crate::runtime::pack::{pack_into, unpack_into, PackedBatch};
 use crate::runtime::steal::StealQueues;
 use crate::runtime::stream::PipelineDepth;
 use crate::runtime::{Bucket, Engine, Manifest, Variant};
+use crate::tune::{model_weights, CalibratedModel, CostModel, NominalModel, Profile};
 use crate::util::Rng;
 
 /// Which backend a shard runs — the heterogeneous-sharding knob. A
@@ -110,13 +108,210 @@ impl BackendSpec {
         s.split(',').filter(|p| !p.trim().is_empty()).map(BackendSpec::parse).collect()
     }
 
-    fn build(&self, artifact_dir: &Path) -> anyhow::Result<Box<dyn Backend>> {
+    /// Stable identity of this backend kind — the key tune profiles are
+    /// recorded and looked up under (round-trips through
+    /// [`BackendSpec::parse`]).
+    pub fn key(&self) -> String {
+        match self {
+            BackendSpec::Engine => "engine".to_string(),
+            BackendSpec::Cpu => "cpu".to_string(),
+            BackendSpec::BatchCpu { threads } => format!("batch-cpu:{threads}"),
+        }
+    }
+
+    /// The distinct backend keys of a shard mix, in first-seen order —
+    /// what the tune profiler iterates (profiles are keyed by kind, so
+    /// five identical shards share one calibration).
+    pub fn distinct_keys(specs: &[BackendSpec]) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::new();
+        for s in specs {
+            let k = s.key();
+            if !keys.contains(&k) {
+                keys.push(k);
+            }
+        }
+        keys
+    }
+
+    /// The nominal capacity weight of the backend this spec builds — the
+    /// "nominal" column of the tune report. Derived from the actual
+    /// `Backend` impls (CPU backends are free to construct) so the
+    /// report can never drift from what dispatch really uses; only the
+    /// engine, which needs artifacts to build, reads the shared constant
+    /// its impl returns.
+    pub fn nominal_weight(&self) -> f64 {
+        match self {
+            BackendSpec::Engine => crate::runtime::ENGINE_CAPACITY_WEIGHT,
+            BackendSpec::Cpu => CpuShardExecutor.capacity_weight(),
+            BackendSpec::BatchCpu { threads } => {
+                BatchCpuBackend::new(*threads).capacity_weight()
+            }
+        }
+    }
+
+    /// Construct the backend this spec names (used by the service's
+    /// executor shards and the CLI `tune` profiler).
+    pub fn build(&self, artifact_dir: &Path) -> anyhow::Result<Box<dyn Backend>> {
         Ok(match self {
             BackendSpec::Engine => Box::new(Engine::new(artifact_dir)?),
             BackendSpec::Cpu => Box::new(CpuShardExecutor),
             BackendSpec::BatchCpu { threads } => Box::new(BatchCpuBackend::new(*threads)),
         })
     }
+}
+
+/// One size class's overrides of the config-wide batching/SLO knobs:
+/// cap its batch size and/or replace its per-deadline-class wait bounds.
+/// Classes without an override inherit the global `max_batch`/`max_wait`/
+/// `bulk_wait`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassOverride {
+    /// The size class (a compiled bucket m) this override targets.
+    pub class_m: usize,
+    /// Per-class batch-size cap (clamped to the class's bucket capacity).
+    pub max_batch: Option<usize>,
+    /// Per-class interactive SLO.
+    pub interactive_wait: Option<Duration>,
+    /// Per-class bulk SLO.
+    pub bulk_wait: Option<Duration>,
+}
+
+impl ClassOverride {
+    /// Parse one override: `CLASS:key=value[,key=value...]` with keys
+    /// `max-batch`, `slo-ms`, `bulk-slo-ms` — e.g. `16:slo-ms=1,max-batch=64`.
+    pub fn parse(s: &str) -> anyhow::Result<ClassOverride> {
+        let (class, rest) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("override '{s}' lacks 'CLASS:key=value'"))?;
+        let class_m: usize = class
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad class in override '{s}'"))?;
+        let mut o = ClassOverride { class_m, ..ClassOverride::default() };
+        for kv in rest.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad key=value '{kv}' in override '{s}'"))?;
+            let v = v.trim();
+            match k.trim() {
+                "max-batch" => {
+                    o.max_batch = Some(
+                        v.parse()
+                            .map_err(|_| anyhow::anyhow!("bad max-batch '{v}' in '{s}'"))?,
+                    )
+                }
+                "slo-ms" => {
+                    let ms: u64 =
+                        v.parse().map_err(|_| anyhow::anyhow!("bad slo-ms '{v}' in '{s}'"))?;
+                    o.interactive_wait = Some(Duration::from_millis(ms));
+                }
+                "bulk-slo-ms" => {
+                    let ms: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad bulk-slo-ms '{v}' in '{s}'"))?;
+                    o.bulk_wait = Some(Duration::from_millis(ms));
+                }
+                other => anyhow::bail!(
+                    "unknown override key '{other}' (max-batch|slo-ms|bulk-slo-ms)"
+                ),
+            }
+        }
+        Ok(o)
+    }
+
+    /// Parse a `;`-separated override list, e.g.
+    /// `16:slo-ms=1;64:max-batch=128,bulk-slo-ms=50`.
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<ClassOverride>> {
+        s.split(';').filter(|p| !p.trim().is_empty()).map(ClassOverride::parse).collect()
+    }
+}
+
+/// Typed validation failure of a [`Config`]'s per-class override list —
+/// a conflicting or malformed override is a configuration bug the service
+/// refuses to start on, with the conflict named, instead of silently
+/// picking a winner.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// Two overrides name the same size class (which one wins is
+    /// undecidable — the conflict every merge rule would hide).
+    DuplicateClassOverride { class_m: usize },
+    /// The override names a class that is not in the routing table.
+    UnknownClassOverride { class_m: usize, classes: Vec<usize> },
+    /// The override overrides nothing (every field `None`).
+    EmptyClassOverride { class_m: usize },
+    /// A zero batch cap can never close a batch.
+    ZeroMaxBatch { class_m: usize },
+    /// The class's interactive SLO is looser than its bulk SLO —
+    /// conflicting bounds: bulk would drain before latency-sensitive
+    /// traffic, inverting the deadline-class contract.
+    InvertedSlo { class_m: usize, interactive: Duration, bulk: Duration },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::DuplicateClassOverride { class_m } => {
+                write!(f, "duplicate override for size class {class_m}")
+            }
+            ConfigError::UnknownClassOverride { class_m, classes } => {
+                write!(f, "override names unknown size class {class_m} (classes: {classes:?})")
+            }
+            ConfigError::EmptyClassOverride { class_m } => {
+                write!(f, "override for size class {class_m} overrides nothing")
+            }
+            ConfigError::ZeroMaxBatch { class_m } => {
+                write!(f, "override for size class {class_m} sets max_batch=0")
+            }
+            ConfigError::InvertedSlo { class_m, interactive, bulk } => {
+                write!(
+                    f,
+                    "size class {class_m}: interactive SLO {interactive:?} is looser than \
+                     bulk SLO {bulk:?}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Validate a per-class override list against the routing table's size
+/// classes and the config-wide default SLOs. Every failure is a typed
+/// [`ConfigError`]. The inversion check runs on the **resolved** pair
+/// (override overlaid on the defaults), so a partial override — e.g. a
+/// loosened interactive SLO against the default bulk bound — cannot
+/// smuggle an inverted class past validation.
+pub fn validate_class_overrides(
+    classes: &[usize],
+    overrides: &[ClassOverride],
+    default_interactive: Duration,
+    default_bulk: Duration,
+) -> Result<(), ConfigError> {
+    for (i, o) in overrides.iter().enumerate() {
+        if overrides[..i].iter().any(|p| p.class_m == o.class_m) {
+            return Err(ConfigError::DuplicateClassOverride { class_m: o.class_m });
+        }
+        if !classes.contains(&o.class_m) {
+            return Err(ConfigError::UnknownClassOverride {
+                class_m: o.class_m,
+                classes: classes.to_vec(),
+            });
+        }
+        if o.max_batch.is_none() && o.interactive_wait.is_none() && o.bulk_wait.is_none() {
+            return Err(ConfigError::EmptyClassOverride { class_m: o.class_m });
+        }
+        if o.max_batch == Some(0) {
+            return Err(ConfigError::ZeroMaxBatch { class_m: o.class_m });
+        }
+        if o.interactive_wait.is_some() || o.bulk_wait.is_some() {
+            let interactive = o.interactive_wait.unwrap_or(default_interactive);
+            let bulk = o.bulk_wait.unwrap_or(default_bulk);
+            if interactive > bulk {
+                return Err(ConfigError::InvertedSlo { class_m: o.class_m, interactive, bulk });
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Service configuration.
@@ -137,6 +332,22 @@ pub struct Config {
     pub max_queue: usize,
     /// Cap on per-class batch size (None = the bucket capacity).
     pub max_batch: Option<usize>,
+    /// Per-size-class `max_batch`/SLO overrides, validated against the
+    /// routing table at startup (conflicts are typed [`ConfigError`]s).
+    pub class_overrides: Vec<ClassOverride>,
+    /// Calibration profile (`TUNE_profile.json`, written by the CLI
+    /// `tune` subcommand). When set, weighted dispatch, the adaptive
+    /// close's cost model, and the stage/steal estimates read the
+    /// profile's **measured** per-backend costs instead of the nominal
+    /// `Backend` constants. The online refiner keeps sharpening the
+    /// dispatch weights and steal estimates from live batch timings; the
+    /// admission close's per-class cost vector is computed from the
+    /// profile once at startup (live refresh is a ROADMAP next step).
+    pub tune_profile: Option<PathBuf>,
+    /// Online refinement of a loaded profile (per-(shard, class) EWMA
+    /// over live `ExecTiming`). Off means dispatch follows the offline
+    /// profile verbatim; ignored without `tune_profile`.
+    pub tune_refine: bool,
     /// Executor shard count when `backends` is empty: that many [`Engine`]
     /// shards (each owning its own PJRT client + executable cache). 1 is
     /// usually right on CPU (XLA already parallelizes inside one
@@ -168,6 +379,9 @@ impl Default for Config {
             policy: ClosePolicy::Adaptive,
             max_queue: 32_768,
             max_batch: None,
+            class_overrides: Vec::new(),
+            tune_profile: None,
+            tune_refine: true,
             executors: 1,
             backends: Vec::new(),
             depth: PipelineDepth::default(),
@@ -286,6 +500,7 @@ pub struct Service {
     tx: mpsc::SyncSender<Msg>,
     router: Router,
     metrics: Arc<Metrics>,
+    model: Arc<CalibratedModel>,
     backend_names: Vec<&'static str>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     executors: Vec<std::thread::JoinHandle<()>>,
@@ -308,17 +523,19 @@ impl Service {
             config.backends.clone()
         };
         let needs_engine = specs.iter().any(|s| matches!(s, BackendSpec::Engine));
-        let manifest = match Manifest::load(&dir) {
-            Ok(m) => m,
-            // Engine-free deployments run without artifacts — but only a
-            // MISSING manifest falls back to the synthetic inventory; a
-            // present-but-unparsable one is an error worth surfacing.
-            Err(_) if !needs_engine && !dir.join("manifest.tsv").exists() => {
-                Manifest::cpu_fallback()
-            }
-            Err(e) => return Err(e),
-        };
+        // Engine-free deployments run without artifacts (the synthetic
+        // CPU inventory stands in for a wholly missing manifest).
+        let manifest = Manifest::load_or_cpu_fallback(&dir, needs_engine)?;
         let router = Router::new(&manifest, config.variant)?;
+        // Per-class override conflicts are typed ConfigErrors — refuse to
+        // start rather than silently pick a winner.
+        validate_class_overrides(
+            router.classes(),
+            &config.class_overrides,
+            config.max_wait,
+            config.bulk_wait,
+        )
+        .map_err(|e| anyhow::anyhow!("invalid class overrides: {e}"))?;
 
         let mut backends: Vec<Box<dyn Backend>> = Vec::with_capacity(specs.len());
         for spec in &specs {
@@ -327,37 +544,72 @@ impl Service {
         let n_executors = backends.len();
         let weights: Vec<f64> = backends.iter().map(|b| b.capacity_weight()).collect();
         let backend_names: Vec<&'static str> = backends.iter().map(|b| b.name()).collect();
-        // Each backend's cost model evaluated over the bucket inventory
-        // (the backends move to their threads below): cost_tables[s]
-        // answers "what would shard s pay for a bucket-shaped batch",
-        // which is what steal/backlog estimates need.
-        let cost_tables: Arc<Vec<HashMap<(usize, usize), u64>>> =
-            Arc::new(build_cost_table(&backends, &manifest, config.variant));
+        // The cost-model seam, evaluated before the backends move to
+        // their threads: nominal constants by default; with a tune
+        // profile, the measured per-(backend, class) fits — sharpened
+        // live by the online refiner — drive weighted dispatch, the
+        // steal/backlog estimates, and the adaptive close's cost side.
+        let nominal = NominalModel::from_backends(&backends, &manifest, config.variant);
+        let lockstep: Vec<bool> = backends.iter().map(|b| b.executes_padding()).collect();
+        let model: Arc<CalibratedModel> = match &config.tune_profile {
+            Some(path) => {
+                let profile = Profile::load(path)?;
+                let keys: Vec<String> = specs.iter().map(|s| s.key()).collect();
+                Arc::new(
+                    CalibratedModel::from_profile(
+                        &profile,
+                        &keys,
+                        nominal,
+                        &manifest,
+                        config.variant,
+                    )
+                    .with_refine(config.tune_refine)
+                    .with_lockstep(lockstep),
+                )
+            }
+            None => Arc::new(
+                CalibratedModel::nominal(nominal, &manifest, config.variant)
+                    .with_lockstep(lockstep),
+            ),
+        };
         let depth = config.depth.get();
 
-        // Per-class batch capacity (bucket capacity clamped by max_batch)
-        // and the admission pipeline's cost model: the CHEAPEST shard's
-        // estimated busy-ns for one full capacity batch of each class —
-        // the "cost of going now" side of the adaptive close decision.
+        // Per-class batch capacity: the bucket capacity clamped by the
+        // global max_batch — unless the class has its own override, which
+        // REPLACES the global cap for that class (still clamped to the
+        // bucket capacity; an override may raise a class above the global
+        // cap as well as lower it). Alongside it, the admission
+        // pipeline's cost model: the CHEAPEST shard's estimated busy-ns
+        // for one full capacity batch of each class — the "cost of going
+        // now" side of the adaptive close decision.
         let capacities: Vec<usize> = router
             .classes()
             .iter()
             .map(|&c| {
                 let cap = router.capacity(c).unwrap();
-                config.max_batch.map_or(cap, |mb| mb.min(cap).max(1))
+                let global = config.max_batch.map_or(cap, |mb| mb.min(cap).max(1));
+                config
+                    .class_overrides
+                    .iter()
+                    .find(|o| o.class_m == c)
+                    .and_then(|o| o.max_batch)
+                    .map_or(global, |mb| mb.min(cap).max(1))
             })
             .collect();
-        let class_cost_ns: Vec<u64> = router
-            .classes()
+        let class_cost_ns: Vec<u64> = class_cost_table(
+            model.as_ref(),
+            &manifest,
+            config.variant,
+            router.classes(),
+            &capacities,
+        );
+        let class_slos: Vec<ClassSloOverride> = config
+            .class_overrides
             .iter()
-            .zip(&capacities)
-            .map(|(&c, &cap)| {
-                manifest
-                    .fit(config.variant, cap, c)
-                    .and_then(|b| {
-                        cost_tables.iter().filter_map(|t| t.get(&(b.batch, b.m))).min().copied()
-                    })
-                    .unwrap_or(u64::MAX / 2)
+            .map(|o| ClassSloOverride {
+                class_m: o.class_m,
+                interactive_wait: o.interactive_wait,
+                bulk_wait: o.bulk_wait,
             })
             .collect();
 
@@ -366,6 +618,9 @@ impl Service {
         // with their capacity weights attached; same for size classes in
         // the padding gauge.
         metrics.configure_shards(&weights);
+        if model.is_calibrated() {
+            metrics.set_calibrated_weights(&model_weights(model.as_ref()));
+        }
         metrics.configure_classes(router.classes());
         metrics.set_pipeline_depth(depth);
 
@@ -413,7 +668,7 @@ impl Service {
                 let outstanding = outstanding.clone();
                 let queues = queues.clone();
                 let pack_alive = pack_alive.clone();
-                let cost_tables = cost_tables.clone();
+                let model = model.clone();
                 executors.push(std::thread::spawn(move || {
                     // Held for the thread's lifetime: the last pack stage
                     // to exit (or unwind) closes the staged queues.
@@ -425,7 +680,7 @@ impl Service {
                             &pack_manifest,
                             variant,
                             e,
-                            &cost_tables,
+                            model.as_ref(),
                             batch,
                             &mut rng,
                             &queues,
@@ -455,6 +710,7 @@ impl Service {
                 let queues = queues.clone();
                 let recycle_txs = recycle_txs.clone();
                 let idle_tx = tx.clone();
+                let model = model.clone();
                 executors.push(std::thread::spawn(move || {
                     // Pack-side death detection: if every execute stage
                     // dies (backend panic), blocked pushes fail and the
@@ -481,6 +737,7 @@ impl Service {
                             popped.stolen,
                             popped.item,
                             &metrics,
+                            model.as_ref(),
                             &mut solutions,
                             &recycle_txs,
                             &mut last_done,
@@ -516,7 +773,7 @@ impl Service {
             let router = router.clone();
             let config = config.clone();
             let outstanding = outstanding.clone();
-            let weights = weights.clone();
+            let model = model.clone();
             let metrics = metrics.clone();
             std::thread::spawn(move || {
                 let mut admission: AdmissionPipeline<Pending> = AdmissionPipeline::new(
@@ -526,6 +783,7 @@ impl Service {
                         policy: config.policy,
                         interactive_wait: config.max_wait,
                         bulk_wait: config.bulk_wait,
+                        class_slos,
                         max_queue: config.max_queue,
                         class_cost_ns,
                     },
@@ -533,10 +791,32 @@ impl Service {
                 // Weighted shortest-backlog dispatch: a closed batch goes
                 // to the shard minimizing (outstanding + 1) / weight (ties
                 // to the lowest shard id), so heavy backends draw
-                // proportionally more work. Stealing corrects whatever
-                // this estimate gets wrong.
+                // proportionally more work. Weights come off the cost
+                // model seam — nominal constants, or the tune profile's
+                // measured throughputs kept fresh by the online refiner.
+                // Stealing corrects whatever this estimate gets wrong.
+                // Without online refinement the model's weights never
+                // change after startup — snapshot once. With refinement
+                // they move with live traffic, so re-read per close (one
+                // snapshot per close, never inside the comparator, which
+                // would take the refiner's locks ~2(n-1) times per batch
+                // and contend with every execute stage's observe()).
+                let frozen_weights: Option<Vec<f64>> = if model.is_refining() {
+                    None
+                } else {
+                    Some(model_weights(model.as_ref()))
+                };
                 let dispatch = |ready: ReadyBatch<Pending>| {
                     metrics.on_close(ready.class_m, ready.reason, &ready.waits, ready.rows_used);
+                    let live_weights: Vec<f64>;
+                    let weights: &[f64] = match &frozen_weights {
+                        Some(w) => w,
+                        None => {
+                            live_weights =
+                                (0..batch_txs.len()).map(|s| model.weight(s)).collect();
+                            &live_weights
+                        }
+                    };
                     let target = (0..batch_txs.len())
                         .min_by(|&a, &b| {
                             let la = (outstanding[a].load(Ordering::Relaxed) + 1) as f64
@@ -546,6 +826,7 @@ impl Service {
                             la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
                         })
                         .unwrap_or(0);
+                    metrics.on_dispatch(target);
                     outstanding[target].fetch_add(1, Ordering::Relaxed);
                     if batch_txs[target].send(ready).is_err() {
                         // Shard already gone (shutdown); the requests were
@@ -617,6 +898,7 @@ impl Service {
             tx,
             router,
             metrics,
+            model,
             backend_names,
             dispatcher: Some(dispatcher),
             executors,
@@ -683,6 +965,13 @@ impl Service {
         &self.router
     }
 
+    /// The cost-model seam this service dispatches through (a nominal
+    /// wrapper when no tune profile is configured) — outlives the
+    /// service for post-shutdown reads, like `metrics_shared`.
+    pub fn tune_model(&self) -> Arc<CalibratedModel> {
+        self.model.clone()
+    }
+
     /// The backend label of each executor shard (index = shard id).
     pub fn shard_backends(&self) -> &[&'static str] {
         &self.backend_names
@@ -733,6 +1022,31 @@ fn warm_classes(
     Ok(())
 }
 
+/// The admission pipeline's per-class cost vector off the model seam: the
+/// cheapest shard's estimated busy-ns for one full capacity batch of each
+/// size class — what `ClosePolicy::Adaptive` weighs padding against.
+/// With a tune profile loaded these are the **measured** per-class costs;
+/// a profile swap therefore changes close decisions at the same queue
+/// state (regression-tested in `tests/tune_calibration.rs`).
+pub fn class_cost_table(
+    model: &dyn CostModel,
+    manifest: &Manifest,
+    variant: Variant,
+    classes: &[usize],
+    capacities: &[usize],
+) -> Vec<u64> {
+    classes
+        .iter()
+        .zip(capacities)
+        .map(|(&c, &cap)| {
+            manifest
+                .fit(variant, cap, c)
+                .and_then(|b| (0..model.shards()).map(|s| model.bucket_cost_ns(s, b)).min())
+                .unwrap_or(u64::MAX / 2)
+        })
+        .collect()
+}
+
 /// Pack-stage half of an executor pair: pack a ready batch straight from
 /// the borrowed pending requests (no `Problem` clones) into a recycled
 /// buffer and stage it on this shard's steal queue. The bounded push is
@@ -745,7 +1059,7 @@ fn stage_batch(
     manifest: &Manifest,
     variant: Variant,
     shard: usize,
-    cost_tables: &[HashMap<(usize, usize), u64>],
+    model: &CalibratedModel,
     batch: ReadyBatch<Pending>,
     rng: &mut Rng,
     queues: &StealQueues<StagedBatch>,
@@ -781,10 +1095,13 @@ fn stage_batch(
         return false;
     }
 
-    // Per-shard cost estimates from each backend's own cost model
-    // (bucket-shaped cost scaled by occupancy), so a steal re-costs the
-    // batch at the thief's rate.
-    let ests = batch_ests_ns(cost_tables, &bucket, batch.items.len());
+    // Per-shard cost estimates off the model seam, so a steal re-costs
+    // the batch at the thief's measured — not nominal — rate. Calibrated
+    // cells apply the fitted setup/marginal split at the batch's actual
+    // occupancy (setup is NOT scaled away on sparse batches).
+    let ests: Vec<u64> = (0..model.shards())
+        .map(|s| model.batch_est_ns(s, &bucket, batch.items.len()))
+        .collect();
     let staged = StagedBatch {
         origin: shard,
         bucket,
@@ -823,6 +1140,7 @@ fn run_staged(
     stolen: bool,
     staged: StagedBatch,
     metrics: &Metrics,
+    model: &CalibratedModel,
     solutions: &mut Vec<Solution>,
     recycle_txs: &[mpsc::Sender<PackedBatch>],
     last_done: &mut Option<Instant>,
@@ -879,6 +1197,21 @@ fn run_staged(
                 infeasible,
                 &timing,
             );
+            // Online refinement: fold this batch's measured execute time
+            // into the model's (shard, class) EWMA and refresh the
+            // reported calibrated weight (no-ops on a nominal model).
+            // Lockstep devices pay for every bucket slot, padded or not,
+            // so their rate normalizes by the bucket capacity; CPU
+            // backends skip padding and normalize by occupancy.
+            let norm_slots = if backend.executes_padding() {
+                bucket.batch
+            } else {
+                items.len()
+            };
+            model.observe(shard, bucket.m, norm_slots, timing.execute_ns, Instant::now());
+            if model.is_calibrated() {
+                metrics.set_calibrated_weight(shard, model.weight(shard));
+            }
             for (pending, sol) in items.into_iter().zip(solutions.iter()) {
                 let _ = pending.reply.send(Ok(*sol));
             }
@@ -923,5 +1256,106 @@ mod tests {
             ]
         );
         assert!(BackendSpec::parse_list("cpu,bogus").is_err());
+    }
+
+    #[test]
+    fn backend_keys_roundtrip_through_parse() {
+        for spec in [
+            BackendSpec::Engine,
+            BackendSpec::Cpu,
+            BackendSpec::BatchCpu { threads: 4 },
+        ] {
+            assert_eq!(BackendSpec::parse(&spec.key()).unwrap(), spec);
+        }
+        assert_eq!(BackendSpec::BatchCpu { threads: 4 }.key(), "batch-cpu:4");
+    }
+
+    #[test]
+    fn class_override_parsing() {
+        let o = ClassOverride::parse("16:slo-ms=1,max-batch=64").unwrap();
+        assert_eq!(o.class_m, 16);
+        assert_eq!(o.max_batch, Some(64));
+        assert_eq!(o.interactive_wait, Some(Duration::from_millis(1)));
+        assert_eq!(o.bulk_wait, None);
+        let list =
+            ClassOverride::parse_list("16:slo-ms=1;64:max-batch=128,bulk-slo-ms=50").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[1].class_m, 64);
+        assert_eq!(list[1].bulk_wait, Some(Duration::from_millis(50)));
+        assert!(ClassOverride::parse("16").is_err());
+        assert!(ClassOverride::parse("x:slo-ms=1").is_err());
+        assert!(ClassOverride::parse("16:bogus=1").is_err());
+        assert!(ClassOverride::parse("16:slo-ms=abc").is_err());
+    }
+
+    #[test]
+    fn class_override_validation_is_typed() {
+        let classes = [16usize, 64];
+        let slo = |ms: u64| Some(Duration::from_millis(ms));
+        let defaults = (Duration::from_millis(2), Duration::from_millis(16));
+        let validate = |overrides: &[ClassOverride]| {
+            validate_class_overrides(&classes, overrides, defaults.0, defaults.1)
+        };
+        let ok = vec![
+            ClassOverride { class_m: 16, max_batch: Some(8), ..Default::default() },
+            ClassOverride {
+                class_m: 64,
+                interactive_wait: slo(1),
+                bulk_wait: slo(8),
+                ..Default::default()
+            },
+        ];
+        assert_eq!(validate(&ok), Ok(()));
+        // Conflicting (duplicate) overrides for one class.
+        let dup = vec![
+            ClassOverride { class_m: 16, max_batch: Some(8), ..Default::default() },
+            ClassOverride { class_m: 16, interactive_wait: slo(1), ..Default::default() },
+        ];
+        assert_eq!(
+            validate(&dup),
+            Err(ConfigError::DuplicateClassOverride { class_m: 16 })
+        );
+        // Unknown class.
+        let unknown =
+            vec![ClassOverride { class_m: 32, max_batch: Some(8), ..Default::default() }];
+        assert!(matches!(
+            validate(&unknown),
+            Err(ConfigError::UnknownClassOverride { class_m: 32, .. })
+        ));
+        // Empty override.
+        let empty = vec![ClassOverride { class_m: 16, ..Default::default() }];
+        assert_eq!(
+            validate(&empty),
+            Err(ConfigError::EmptyClassOverride { class_m: 16 })
+        );
+        // Zero batch cap.
+        let zero = vec![ClassOverride { class_m: 16, max_batch: Some(0), ..Default::default() }];
+        assert_eq!(validate(&zero), Err(ConfigError::ZeroMaxBatch { class_m: 16 }));
+        // Inverted per-class SLO pair (interactive looser than bulk).
+        let inverted = vec![ClassOverride {
+            class_m: 16,
+            interactive_wait: slo(50),
+            bulk_wait: slo(10),
+            ..Default::default()
+        }];
+        let err = validate(&inverted).unwrap_err();
+        assert!(matches!(err, ConfigError::InvertedSlo { class_m: 16, .. }));
+        assert!(err.to_string().contains("looser"), "{err}");
+        // PARTIAL override inverting against the defaults: interactive
+        // loosened past the 16ms default bulk bound must also refuse.
+        let partial =
+            vec![ClassOverride { class_m: 16, interactive_wait: slo(100), ..Default::default() }];
+        assert!(matches!(
+            validate(&partial),
+            Err(ConfigError::InvertedSlo { class_m: 16, .. })
+        ));
+        // ...and a partial bulk override tightened below the 2ms default
+        // interactive bound.
+        let partial_bulk =
+            vec![ClassOverride { class_m: 16, bulk_wait: slo(1), ..Default::default() }];
+        assert!(matches!(
+            validate(&partial_bulk),
+            Err(ConfigError::InvertedSlo { class_m: 16, .. })
+        ));
     }
 }

@@ -95,4 +95,5 @@ pub mod lp;
 pub mod runtime;
 pub mod sim;
 pub mod solvers;
+pub mod tune;
 pub mod util;

@@ -5,6 +5,7 @@
 //!   info                              -- platform + artifact inventory
 //!   solve    [--batch N] [--m M] ...  -- generate + solve one batch
 //!   serve    [--requests N] ...       -- run the coordinator under load
+//!   tune     [--backends LIST] ...    -- profile backends, write TUNE_profile.json
 //!   crowd    [--agents N] ...         -- crowd simulation end to end
 //!   figures  [--fig 3a|3b|3c|4a|4b|5|7a|7b|imbalance|all]
 //!                                     -- regenerate the paper's figures
@@ -40,6 +41,7 @@ fn main() {
         "info" => cmd_info(&flags),
         "solve" => cmd_solve(&flags),
         "serve" => cmd_serve(&flags),
+        "tune" => cmd_tune(&flags),
         "crowd" => cmd_crowd(&flags),
         "figures" => cmd_figures(&flags),
         "help" | "" => {
@@ -72,13 +74,25 @@ fn print_help() {
                     [--depth 2] [--backends engine,cpu,batch-cpu:N]\n\
                     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]\n\
                     [--bulk-slo-ms MS] [--scenario poisson|bursty|...]\n\
+                    [--tune-profile TUNE_profile.json]\n\
+                    [--class-overrides '16:slo-ms=1;64:max-batch=128']\n\
                                         run the coordinator under open-loop load\n\
                                         (--backends mixes shard types; CPU-only\n\
                                         mixes serve without artifacts; --policy\n\
                                         picks the admission batch-close policy,\n\
                                         --max-queue bounds queueing with load\n\
                                         shedding, --slo-ms sets the interactive\n\
-                                        SLO, --scenario picks a traffic model)\n\
+                                        SLO, --scenario picks a traffic model,\n\
+                                        --tune-profile calibrates dispatch from\n\
+                                        measured costs, --class-overrides sets\n\
+                                        per-size-class max-batch/SLO bounds)\n\
+           tune     [--backends cpu,batch-cpu:4] [--out TUNE_profile.json]\n\
+                    [--runs 3] [--max-batch 512] [--variant rgb]\n\
+                                        profile each backend kind over the\n\
+                                        (batch x class) grid, fit setup/marginal\n\
+                                        cost models, print nominal vs calibrated\n\
+                                        weights, and merge the fits into the\n\
+                                        profile (idempotent)\n\
            crowd    --agents 512 --steps 100 [--backend engine|cpu]\n\
                                         crowd simulation (paper Sec. 5 application)\n\
            figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards|depth|loadgen\n\
@@ -204,6 +218,11 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         Some(list) => BackendSpec::parse_list(list)?,
         None => Vec::new(),
     };
+    let tune_profile = flags.get("tune-profile").map(std::path::PathBuf::from);
+    let class_overrides = match flags.get("class-overrides") {
+        Some(s) => batch_lp2d::coordinator::ClassOverride::parse_list(s)?,
+        None => Vec::new(),
+    };
 
     let config = Config {
         max_wait: std::time::Duration::from_millis(slo_ms),
@@ -213,6 +232,8 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         executors: shards.max(1),
         backends,
         depth: PipelineDepth::new(depth),
+        tune_profile,
+        class_overrides,
         ..Config::default()
     };
     let service = Service::start(artifact_dir(flags), config)?;
@@ -312,16 +333,110 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let names = service.shard_backends().to_vec();
     for (s, load) in snap.per_shard.iter().enumerate() {
         println!(
-            "shard {s} [{}] w={:.1}: {} batches  {} LPs  busy {:.3} ms  steals {}",
+            "shard {s} [{}] w={:.1} cal={:.1}: {} batches ({} dispatched)  {} LPs  \
+             busy {:.3} ms  steals {}",
             names.get(s).copied().unwrap_or("?"),
             load.weight,
+            load.calibrated_weight,
             load.batches,
+            load.dispatched,
             load.solved,
             load.busy_ns as f64 / 1e6,
             load.steals
         );
     }
     service.shutdown();
+    Ok(())
+}
+
+fn cmd_tune(flags: &Flags) -> anyhow::Result<()> {
+    use batch_lp2d::runtime::Manifest;
+    use batch_lp2d::tune;
+
+    let out = flags
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| "TUNE_profile.json".to_string());
+    let variant = match flags.get("variant") {
+        Some(v) => Variant::parse(v)?,
+        None => Variant::Rgb,
+    };
+    let opts = tune::ProfilerOpts {
+        runs: flag(flags, "runs", 3usize),
+        warmup: flag(flags, "warmup", 1usize),
+        max_batch: flag(flags, "max-batch", 512usize),
+        seed: flag(flags, "seed", 0x7E57u64),
+    };
+    let specs = match flags.get("backends") {
+        Some(list) => BackendSpec::parse_list(list)?,
+        None => vec![
+            BackendSpec::Cpu,
+            BackendSpec::BatchCpu { threads: batch_cpu::default_threads() },
+        ],
+    };
+    anyhow::ensure!(!specs.is_empty(), "no backends to profile");
+
+    // The service's manifest fallback: engine-free mixes profile against
+    // the synthetic CPU inventory, no artifacts needed.
+    let dir = std::path::PathBuf::from(artifact_dir(flags));
+    let needs_engine = specs.iter().any(|s| matches!(s, BackendSpec::Engine));
+    let manifest = Manifest::load_or_cpu_fallback(&dir, needs_engine)?;
+
+    // Profile each DISTINCT backend kind once (profiles are keyed by
+    // kind, so five identical shards share one calibration).
+    let keys = BackendSpec::distinct_keys(&specs);
+    println!(
+        "tune: profiling {} backend kind(s) over the {} grid ({} runs/point, \
+         batches <= {})...",
+        keys.len(),
+        variant.as_str(),
+        opts.runs,
+        opts.max_batch
+    );
+    let mut profile = tune::Profile::default();
+    let mut table = batch_lp2d::util::Table::new(&[
+        "backend",
+        "class_m",
+        "setup_ns",
+        "per_problem_ns",
+        "nominal_weight",
+        "calibrated_weight",
+    ]);
+    for key in &keys {
+        let spec = BackendSpec::parse(key)?;
+        let mut backend = spec.build(&dir)?;
+        let t = Timer::start();
+        let fit = tune::profile_backend(backend.as_mut(), key, &manifest, variant, &opts)?;
+        println!("  {key}: {} class(es) fitted in {:.1} ms", fit.classes.len(), t.elapsed_ms());
+        for c in &fit.classes {
+            table.push_row(vec![
+                key.clone(),
+                c.class_m.to_string(),
+                format!("{:.0}", c.setup_ns),
+                format!("{:.1}", c.per_problem_ns),
+                format!("{:.2}", spec.nominal_weight()),
+                format!("{:.2}", c.calibrated_weight()),
+            ]);
+        }
+        profile.upsert(fit);
+    }
+    println!("\n{}", table.to_markdown());
+    for b in &profile.backends {
+        let nominal = BackendSpec::parse(&b.backend)?.nominal_weight();
+        let calibrated = b.calibrated_weight().unwrap_or(nominal);
+        println!(
+            "backend {}: nominal weight {:.2} -> calibrated {:.2} ({:+.0}%)",
+            b.backend,
+            nominal,
+            calibrated,
+            100.0 * (calibrated / nominal.max(1e-9) - 1.0)
+        );
+    }
+    profile.save_merged(std::path::Path::new(&out))?;
+    println!(
+        "wrote {out} (schema v{}, idempotent merge; serve with --tune-profile {out})",
+        tune::TUNE_SCHEMA
+    );
     Ok(())
 }
 

@@ -126,6 +126,17 @@ pub trait Backend: Send {
         cost_model_ns(bucket.batch * bucket.m, self.capacity_weight())
     }
 
+    /// Whether this backend's execution cost is paid per BUCKET SLOT
+    /// rather than per occupied slot: a device executing the whole padded
+    /// shape in lockstep (PJRT) returns `true`; the CPU backends skip
+    /// padding slots and return the default `false`. The online refiner
+    /// uses this to normalize measured batch times by the right
+    /// denominator — a lockstep device's sparse batch costs the same as a
+    /// full one, so dividing by occupancy would inflate its marginal rate.
+    fn executes_padding(&self) -> bool {
+        false
+    }
+
     /// Warm whatever caches a bucket needs (e.g. XLA compilation) before
     /// traffic hits it. Default: nothing to warm.
     fn prepare(&mut self, bucket: &Bucket) -> anyhow::Result<()> {
@@ -151,6 +162,10 @@ impl<B: Backend + ?Sized> Backend for Box<B> {
         (**self).cost_ns(bucket)
     }
 
+    fn executes_padding(&self) -> bool {
+        (**self).executes_padding()
+    }
+
     fn prepare(&mut self, bucket: &Bucket) -> anyhow::Result<()> {
         (**self).prepare(bucket)
     }
@@ -167,6 +182,12 @@ impl Backend for Engine {
 
     fn capacity_weight(&self) -> f64 {
         ENGINE_CAPACITY_WEIGHT
+    }
+
+    fn executes_padding(&self) -> bool {
+        // The device runs the whole padded shape in lockstep: batch cost
+        // depends on the bucket, not the occupancy.
+        true
     }
 
     fn prepare(&mut self, bucket: &Bucket) -> anyhow::Result<()> {
@@ -435,8 +456,10 @@ mod tests {
         let boxed: Box<dyn Backend> = Box::new(BatchCpuBackend::new(3));
         assert_eq!(boxed.name(), "batch-cpu");
         assert!((boxed.capacity_weight() - 3.0).abs() < 1e-12);
+        assert!(!boxed.executes_padding(), "CPU backends skip padding slots");
         let boxed: Box<dyn Backend> = Box::new(CpuShardExecutor);
         assert_eq!(boxed.name(), "cpu-seidel");
         assert!((boxed.capacity_weight() - 1.0).abs() < 1e-12);
+        assert!(!boxed.executes_padding());
     }
 }

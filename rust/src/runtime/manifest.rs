@@ -75,6 +75,26 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// [`Manifest::load`] with the engine-free escape hatch the service,
+    /// the CLI `tune` subcommand, and the calibration bench share: a
+    /// directory with NO manifest at all falls back to the synthetic
+    /// [`Manifest::cpu_fallback`] inventory when the caller needs no
+    /// engine; a present-but-unparsable manifest stays an error worth
+    /// surfacing.
+    pub fn load_or_cpu_fallback(
+        dir: impl AsRef<Path>,
+        needs_engine: bool,
+    ) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref();
+        match Manifest::load(dir) {
+            Ok(m) => Ok(m),
+            Err(_) if !needs_engine && !dir.join("manifest.tsv").exists() => {
+                Ok(Manifest::cpu_fallback())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     /// Parse manifest text (tests use this directly).
     pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
         let (header, rows) = parse_tsv(text)?;
@@ -97,6 +117,17 @@ impl Manifest {
             });
         }
         Ok(Manifest { dir, buckets })
+    }
+
+    /// The variant's size classes: ascending distinct m values with at
+    /// least one bucket — the one derivation the router, the cost-model
+    /// seam, the tune profiler, and the chunk planner all share.
+    pub fn classes(&self, v: Variant) -> Vec<usize> {
+        let mut classes: Vec<usize> =
+            self.buckets.iter().filter(|b| b.variant == v).map(|b| b.m).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        classes
     }
 
     /// All buckets of a variant, sorted by (m, batch).

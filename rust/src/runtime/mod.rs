@@ -37,7 +37,8 @@ pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
 pub use pack::{pack, pack_into, pack_into_indexed, unpack, unpack_into, PackedBatch};
 pub use shard::{
-    pick_chunk_size, plan_chunk_size, ShardExecutor, ShardReport, ShardStats, ShardedEngine,
+    pick_chunk_size, pick_chunk_size_fitted, plan_chunk_size, plan_chunk_size_with_model,
+    ShardExecutor, ShardReport, ShardStats, ShardedEngine,
 };
 pub use steal::{CloseGuard, Popped, PopperGuard, StealQueues};
 pub use stream::{run_pipelined, PipelineDepth, PipelineStats, StageWorker};

@@ -71,10 +71,11 @@
 //! thread.
 
 use std::path::Path;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 use crate::lp::types::{Problem, Solution};
 use crate::runtime::backend::{batch_ests_ns, build_cost_table, Backend, RawExec};
+use crate::tune::{model_cost_table, model_weights, CostModel};
 use crate::runtime::engine::{Engine, ExecTiming};
 use crate::runtime::manifest::{Bucket, Manifest, Variant};
 use crate::runtime::pack::{pack_into, pack_into_indexed, unpack, PackedBatch};
@@ -161,6 +162,63 @@ pub fn pick_chunk_size(batch_sizes: &[usize], n: usize, shards: usize) -> Option
     Some(smallest)
 }
 
+/// Calibrated chunk policy: with a fitted per-chunk cost of
+/// `setup_ns + per_problem_ns * b`, pick the compiled batch size
+/// minimizing the predicted makespan `ceil(chunks / shards) * chunk_cost`
+/// — amortizing the measured setup over larger chunks exactly as far as
+/// the shard count's wave quantization allows. Ties go to the larger
+/// batch (unmodeled per-chunk pack overhead only ever favors it), so a
+/// zero-setup fit degenerates to the largest batch with a perfect split,
+/// not to confetti chunks.
+pub fn pick_chunk_size_fitted(
+    batch_sizes: &[usize],
+    n: usize,
+    shards: usize,
+    setup_ns: f64,
+    per_problem_ns: f64,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    // Largest first + strictly-better keeps ties on the larger batch.
+    for &b in batch_sizes.iter().rev() {
+        let chunks = n.div_ceil(b.max(1));
+        let waves = chunks.div_ceil(shards.max(1));
+        let est = waves as f64 * (setup_ns + per_problem_ns * b as f64);
+        if best.map_or(true, |(e, _)| est < e * (1.0 - 1e-9)) {
+            best = Some((est, b));
+        }
+    }
+    best.map(|(_, b)| b)
+}
+
+/// Route `m_max` to its size class (smallest compiled m that fits) and
+/// return `(class_m, ascending distinct batch inventory)`.
+fn class_inventory(
+    manifest: &Manifest,
+    variant: Variant,
+    m_max: usize,
+) -> anyhow::Result<(usize, Vec<usize>)> {
+    let class = manifest
+        .classes(variant)
+        .into_iter()
+        .find(|&m| m >= m_max)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no {} bucket fits m={m_max} (max m {:?})",
+                variant.as_str(),
+                manifest.max_m(variant)
+            )
+        })?;
+    let mut sizes: Vec<usize> = manifest
+        .of_variant(variant)
+        .iter()
+        .filter(|b| b.m == class)
+        .map(|b| b.batch)
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    Ok((class, sizes))
+}
+
 /// [`pick_chunk_size`] against a manifest: route `m_max` to its size class
 /// (smallest compiled m that fits), then pick from that class's batch
 /// inventory.
@@ -171,23 +229,40 @@ pub fn plan_chunk_size(
     m_max: usize,
     shards: usize,
 ) -> anyhow::Result<usize> {
-    let buckets = manifest.of_variant(variant);
-    let class = buckets
-        .iter()
-        .map(|b| b.m)
-        .filter(|&m| m >= m_max)
-        .min()
-        .ok_or_else(|| {
-            anyhow::anyhow!(
-                "no {} bucket fits m={m_max} (max m {:?})",
-                variant.as_str(),
-                manifest.max_m(variant)
-            )
-        })?;
-    let mut sizes: Vec<usize> =
-        buckets.iter().filter(|b| b.m == class).map(|b| b.batch).collect();
-    sizes.sort_unstable();
-    sizes.dedup();
+    plan_chunk_size_with_model(manifest, variant, n, m_max, shards, None)
+}
+
+/// [`plan_chunk_size`] behind the cost-model seam: when the model carries
+/// fitted `(setup_ns, per_problem_ns)` terms for the routed class
+/// (averaged across the calibrated shards), size chunks with
+/// [`pick_chunk_size_fitted`]; otherwise fall back to the nominal
+/// inventory heuristic.
+pub fn plan_chunk_size_with_model(
+    manifest: &Manifest,
+    variant: Variant,
+    n: usize,
+    m_max: usize,
+    shards: usize,
+    model: Option<&dyn CostModel>,
+) -> anyhow::Result<usize> {
+    let (class, sizes) = class_inventory(manifest, variant, m_max)?;
+    if let Some(model) = model {
+        let mut setup = 0.0;
+        let mut per = 0.0;
+        let mut calibrated = 0usize;
+        for s in 0..model.shards() {
+            if let Some((su, pp)) = model.chunk_terms(s, class) {
+                setup += su;
+                per += pp;
+                calibrated += 1;
+            }
+        }
+        if calibrated > 0 {
+            let k = calibrated as f64;
+            return Ok(pick_chunk_size_fitted(&sizes, n, shards, setup / k, per / k)
+                .expect("size class has at least one bucket"));
+        }
+    }
     Ok(pick_chunk_size(&sizes, n, shards).expect("size class has at least one bucket"))
 }
 
@@ -217,6 +292,10 @@ pub struct ShardedEngine<X: Backend = Engine> {
     manifest: Manifest,
     executors: Vec<X>,
     depth: PipelineDepth,
+    /// Calibrated cost model behind the dispatch/chunking seam; `None`
+    /// uses the backends' nominal constants (the pre-calibration path,
+    /// verbatim).
+    cost_model: Option<Arc<dyn CostModel>>,
     /// Rotation pool for packed chunks (recycled through completions).
     pool: Vec<PackedBatch>,
 }
@@ -257,6 +336,7 @@ impl<X: Backend> ShardedEngine<X> {
             manifest,
             executors,
             depth: PipelineDepth::default(),
+            cost_model: None,
             pool: Vec::new(),
         })
     }
@@ -264,6 +344,22 @@ impl<X: Backend> ShardedEngine<X> {
     /// Set the per-shard staged-queue depth (the pipeline ring depth).
     pub fn with_depth(mut self, depth: PipelineDepth) -> Self {
         self.depth = depth;
+        self
+    }
+
+    /// Route dispatch weights, chunk-cost estimates, and chunk sizing
+    /// through a calibrated cost model instead of the backends' nominal
+    /// constants. The model must cover exactly this engine's shard set.
+    /// Results are unaffected (dispatch never changes answers — the
+    /// bit-identity property is calibration-invariant); only where chunks
+    /// land and how they are sized changes.
+    pub fn with_cost_model(mut self, model: Arc<dyn CostModel>) -> Self {
+        assert_eq!(
+            model.shards(),
+            self.executors.len(),
+            "cost model shard count must match the executor set"
+        );
+        self.cost_model = Some(model);
         self
     }
 
@@ -286,7 +382,14 @@ impl<X: Backend> ShardedEngine<X> {
     /// The chunk size [`ShardedEngine::solve_all`] would pick for this
     /// workload (exposed so benches/tests can report it).
     pub fn plan_chunk(&self, variant: Variant, n: usize, m_max: usize) -> anyhow::Result<usize> {
-        plan_chunk_size(&self.manifest, variant, n, m_max, self.executors.len())
+        plan_chunk_size_with_model(
+            &self.manifest,
+            variant,
+            n,
+            m_max,
+            self.executors.len(),
+            self.cost_model.as_deref(),
+        )
     }
 
     /// Sharded counterpart of [`Engine::solve_stream`]: caller-supplied
@@ -369,13 +472,21 @@ impl<X: Backend> ShardedEngine<X> {
         ) -> anyhow::Result<()>,
     ) -> anyhow::Result<(Vec<Vec<Solution>>, ShardReport)> {
         let depth = self.depth.get();
-        let ShardedEngine { manifest, executors, pool, .. } = self;
+        let ShardedEngine { manifest, executors, pool, cost_model, .. } = self;
         let shards = executors.len();
-        let weights: Vec<f64> = executors.iter().map(|x| x.capacity_weight()).collect();
-        // Evaluate each backend's cost model over the variant's bucket
+        // Weights and per-shape cost estimates come from the seam: the
+        // calibrated model when one is bound, the backends' nominal
+        // constants otherwise. Evaluated over the variant's bucket
         // inventory up front (once the scope starts the backends live on
         // their shard threads).
-        let cost_table = build_cost_table(executors.as_slice(), manifest, variant);
+        let weights: Vec<f64> = match cost_model {
+            Some(m) => model_weights(m.as_ref()),
+            None => executors.iter().map(|x| x.capacity_weight()).collect(),
+        };
+        let cost_table = match cost_model {
+            Some(m) => model_cost_table(m.as_ref(), manifest, variant),
+            None => build_cost_table(executors.as_slice(), manifest, variant),
+        };
         let wall = Timer::start();
         while pool.len() < shards * depth + 1 {
             pool.push(PackedBatch::empty());
@@ -507,12 +618,19 @@ impl<X: Backend> ShardedEngine<X> {
                 }
 
                 // Weighted estimated-finish dispatch: each shard's cost
-                // for this chunk comes from its backend's cost model; the
-                // queue picks the shard whose backlog + this chunk
-                // finishes first. The bounded push blocks only when the
-                // pick's queue is full (backpressure); an idle peer can
-                // still steal it later.
-                let ests = batch_ests_ns(&cost_table, &bucket, pb.used);
+                // for this chunk comes off the seam — the calibrated
+                // model's fitted split at this chunk's occupancy (setup
+                // never scaled away on a sparse final chunk), or the
+                // nominal table scaled by occupancy. The queue picks the
+                // shard whose backlog + this chunk finishes first; the
+                // bounded push blocks only when the pick's queue is full
+                // (backpressure), and an idle peer can still steal later.
+                let ests: Vec<u64> = match cost_model {
+                    Some(m) => {
+                        (0..shards).map(|s| m.batch_est_ns(s, &bucket, pb.used)).collect()
+                    }
+                    None => batch_ests_ns(&cost_table, &bucket, pb.used),
+                };
                 match queues.push_balanced(StagedChunk { idx: dispatched, bucket, pb }, ests) {
                     Ok(_) => {
                         outputs.push(None);
@@ -707,6 +825,83 @@ mod tests {
         assert_eq!(plan_chunk_size(&m, Variant::Rgb, 4096, 40, 1).unwrap(), 512);
         assert!(plan_chunk_size(&m, Variant::Rgb, 10, 65, 1).is_err());
         assert!(plan_chunk_size(&m, Variant::Simplex, 10, 10, 1).is_err());
+    }
+
+    #[test]
+    fn fitted_chunk_policy_amortizes_setup_and_splits_evenly() {
+        let sizes = [8usize, 32, 128, 512];
+        // Zero setup: every batch size predicts the same work; the tie
+        // rule keeps the largest with a perfect wave split.
+        assert_eq!(pick_chunk_size_fitted(&sizes, 4096, 1, 0.0, 100.0), Some(512));
+        // 1024 problems on 4 shards, negligible setup: 512 would run 2
+        // chunks on 2 shards while 2 idle (one 51.2µs wave); 128 runs 8
+        // chunks as 2 full waves of 12.8µs — half the predicted makespan.
+        assert_eq!(pick_chunk_size_fitted(&sizes, 1024, 4, 0.0, 100.0), Some(128));
+        // A huge measured setup forces the largest chunks even when the
+        // split is uneven — amortization dominates.
+        assert_eq!(
+            pick_chunk_size_fitted(&sizes, 1024, 4, 1e9, 100.0),
+            Some(512)
+        );
+        assert_eq!(pick_chunk_size_fitted(&[], 100, 2, 0.0, 1.0), None);
+    }
+
+    /// Fixed-terms stub model for the chunk-planning seam.
+    struct TermsModel {
+        shards: usize,
+        setup_ns: f64,
+        per_problem_ns: f64,
+    }
+
+    impl crate::tune::CostModel for TermsModel {
+        fn shards(&self) -> usize {
+            self.shards
+        }
+        fn weight(&self, _shard: usize) -> f64 {
+            1.0
+        }
+        fn bucket_cost_ns(&self, _shard: usize, bucket: &Bucket) -> u64 {
+            (self.setup_ns + self.per_problem_ns * bucket.batch as f64) as u64
+        }
+        fn chunk_terms(&self, _shard: usize, _class_m: usize) -> Option<(f64, f64)> {
+            Some((self.setup_ns, self.per_problem_ns))
+        }
+    }
+
+    #[test]
+    fn plan_chunk_consults_the_cost_model_seam() {
+        let m = manifest();
+        // Nominal policy on the 64-class: 1024 problems / 4 shards wants
+        // >= 8 chunks -> 128.
+        assert_eq!(plan_chunk_size(&m, Variant::Rgb, 1024, 40, 4).unwrap(), 128);
+        // Calibrated, setup-free: one perfect wave of 256... which is not
+        // compiled in the 64-class {8,32,128,512}; 128 wins (2 waves, no
+        // idle shards) over 512 (1 wave, 2 idle shards).
+        let flat = TermsModel { shards: 4, setup_ns: 0.0, per_problem_ns: 100.0 };
+        assert_eq!(
+            plan_chunk_size_with_model(&m, Variant::Rgb, 1024, 40, 4, Some(&flat)).unwrap(),
+            128
+        );
+        // A dominant measured setup flips the pick to the largest batch.
+        let heavy = TermsModel { shards: 4, setup_ns: 1e9, per_problem_ns: 100.0 };
+        assert_eq!(
+            plan_chunk_size_with_model(&m, Variant::Rgb, 1024, 40, 4, Some(&heavy)).unwrap(),
+            512
+        );
+        // The ShardedEngine seam: same pick through with_cost_model.
+        let mut se = ShardedEngine::from_executors(manifest(), mocks(4, 0))
+            .unwrap()
+            .with_cost_model(Arc::new(TermsModel {
+                shards: 4,
+                setup_ns: 1e9,
+                per_problem_ns: 100.0,
+            }));
+        assert_eq!(se.plan_chunk(Variant::Rgb, 1024, 40).unwrap(), 512);
+        // And the calibrated plan still solves correctly end to end.
+        let mut rng = Rng::new(41);
+        let problems: Vec<Problem> = (0..40).map(|_| gen::feasible(&mut rng, 6)).collect();
+        let (out, _) = se.solve_all(Variant::Rgb, &problems, None).unwrap();
+        assert_eq!(out.len(), 40);
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! Calibration subsystem: measured backend cost models replacing the
+//! nominal `capacity_weight`/`cost_ns` constants everywhere dispatch,
+//! admission, and chunking decisions are made.
+//!
+//! Three parts:
+//!
+//! * [`profile`] — the **offline profiler**: runs a backend over the
+//!   (batch size × constraint class) grid of its variant's bucket
+//!   inventory and fits a per-class linear cost model
+//!   (`setup_ns + per_problem_ns * n`), persisted to the schema-versioned
+//!   `TUNE_profile.json` (idempotent merge, like `BENCH_pipeline.json`).
+//!   Driven by the CLI's `tune` subcommand and the `calibration` bench
+//!   (which also emits the predicted-vs-measured accuracy table).
+//! * [`model`] — the **seam**: the [`CostModel`] trait behind which
+//!   [`NominalModel`] (the old constants, verbatim) and
+//!   [`CalibratedModel`] (loaded profile + online refinement) are
+//!   interchangeable. `ShardedEngine` and the coordinator's weighted
+//!   estimated-finish dispatch read capacity weights from it, the
+//!   admission layer's cost-aware close reads per-class batch costs from
+//!   it, and the chunk policy reads the fitted setup/marginal split from
+//!   it.
+//! * [`refine`] — the **online refiner**: per-(shard, class) EWMA over
+//!   live per-batch `ExecTiming`, with caller-injected clocks (no wall
+//!   time reads — the admission layer's mock-clock testing contract) and
+//!   a staleness window that falls back to the offline fit.
+//!
+//! Deployment flow: `batch-lp2d tune --backends <mix>` writes
+//! `TUNE_profile.json`; `serve --tune-profile TUNE_profile.json` (CLI,
+//! example, and `coordinator::Config::tune_profile`) loads it, after which
+//! `Snapshot::per_shard` reports nominal-vs-calibrated weight pairs and
+//! dispatch follows the measured ratios. This is the dispatch foundation
+//! real multi-GPU PJRT shards plug into: profile each device ordinal once,
+//! and heterogeneous splits track hardware instead of guesses.
+
+pub mod model;
+pub mod profile;
+pub mod refine;
+
+pub use model::{model_cost_table, model_weights, CalibratedModel, CostModel, NominalModel};
+pub use profile::{
+    fit_linear, nominal_per_problem_ns, profile_backend, validate_fit, AccuracyRow, BackendFit,
+    ClassFit, Profile, ProfilerOpts, TUNE_SCHEMA,
+};
+pub use refine::{Refined, Refiner, REFINE_EWMA_ALPHA, REFINE_MAX_AGE};

@@ -1,0 +1,502 @@
+//! The cost-model seam: one trait ([`CostModel`]) answering every
+//! "what does work cost where" question the system asks — weighted
+//! estimated-finish dispatch (shard + coordinator), the admission layer's
+//! cost-aware close, and the chunk-sizing policy — with two
+//! implementations behind it:
+//!
+//! * [`NominalModel`] — the pre-calibration behaviour, verbatim: weights
+//!   from [`Backend::capacity_weight`], costs from [`Backend::cost_ns`]
+//!   evaluated over the bucket inventory. Constructing a service or a
+//!   sharded run without a profile goes through this path and is
+//!   bit-for-bit the old code.
+//! * [`CalibratedModel`] — a loaded [`Profile`]'s fitted
+//!   `setup_ns + per_problem_ns` models, consulted per (shard, class),
+//!   continuously sharpened by the online [`Refiner`] from live
+//!   `ExecTiming` observations. Estimate priority per cell: refined EWMA,
+//!   then the offline fit, then the nominal constants — so a partial
+//!   profile degrades gracefully instead of starving unprofiled shards.
+//!
+//! Like the refiner (and the admission pipeline), the calibrated model
+//! **reads no clock**: staleness checks use the newest timestamp the
+//! caller passed to [`CalibratedModel::observe`].
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::runtime::backend::{build_cost_table, Backend};
+use crate::runtime::manifest::{Bucket, Manifest, Variant};
+use crate::tune::profile::{nominal_per_problem_ns, BackendFit, Profile};
+use crate::tune::refine::Refiner;
+
+/// Sentinel cost for bucket shapes a model knows nothing about: large
+/// enough that dispatch shuns them, small enough not to overflow sums
+/// (mirrors `batch_ests_ns`).
+pub const UNKNOWN_COST_NS: u64 = u64::MAX / 2;
+
+/// Everything the dispatch, admission, and chunking layers ask about
+/// execution cost, behind one seam.
+pub trait CostModel: Send + Sync {
+    /// Number of shards the model covers.
+    fn shards(&self) -> usize;
+
+    /// Relative capacity weight of one shard (the dispatch bias; 1.0 =
+    /// one nominal CPU worker).
+    fn weight(&self, shard: usize) -> f64;
+
+    /// Estimated busy-ns for `shard` to execute one `bucket`-shaped batch.
+    fn bucket_cost_ns(&self, shard: usize, bucket: &Bucket) -> u64;
+
+    /// Fitted `(setup_ns, per_problem_ns)` terms of a (shard, class) cell
+    /// for amortization-aware chunk sizing; `None` when uncalibrated.
+    fn chunk_terms(&self, shard: usize, class_m: usize) -> Option<(f64, f64)>;
+
+    /// Estimated busy-ns for `shard` to run a batch of `used` occupied
+    /// slots in `bucket`. Default: the bucket cost scaled by occupancy
+    /// (the pre-seam behaviour); calibrated implementations apply their
+    /// fitted setup/marginal split instead, so the per-batch setup is
+    /// never scaled away on sparse batches.
+    fn batch_est_ns(&self, shard: usize, bucket: &Bucket, used: usize) -> u64 {
+        crate::runtime::backend::scale_cost_ns(
+            self.bucket_cost_ns(shard, bucket),
+            used,
+            bucket.batch,
+        )
+    }
+}
+
+/// Evaluate a model over a variant's bucket inventory, in the same
+/// `table[shard][(batch, m)]` shape as
+/// [`build_cost_table`](crate::runtime::backend::build_cost_table) —
+/// what the steal queues' pending-estimate accounting consumes.
+pub fn model_cost_table(
+    model: &dyn CostModel,
+    manifest: &Manifest,
+    variant: Variant,
+) -> Vec<HashMap<(usize, usize), u64>> {
+    (0..model.shards())
+        .map(|s| {
+            manifest
+                .of_variant(variant)
+                .into_iter()
+                .map(|bk| ((bk.batch, bk.m), model.bucket_cost_ns(s, bk)))
+                .collect()
+        })
+        .collect()
+}
+
+/// All shard weights of a model, in shard order.
+pub fn model_weights(model: &dyn CostModel) -> Vec<f64> {
+    (0..model.shards()).map(|s| model.weight(s)).collect()
+}
+
+/// The uncalibrated seam implementation: nominal constants, precomputed
+/// over the bucket inventory exactly like the pre-seam dispatch did.
+#[derive(Clone, Debug)]
+pub struct NominalModel {
+    weights: Vec<f64>,
+    table: Vec<HashMap<(usize, usize), u64>>,
+}
+
+impl NominalModel {
+    /// Evaluate every backend's nominal `capacity_weight`/`cost_ns` over
+    /// the manifest (the backends move to their shard threads afterwards).
+    pub fn from_backends<B: Backend>(
+        backends: &[B],
+        manifest: &Manifest,
+        variant: Variant,
+    ) -> NominalModel {
+        NominalModel {
+            weights: backends.iter().map(|b| b.capacity_weight()).collect(),
+            table: build_cost_table(backends, manifest, variant),
+        }
+    }
+}
+
+impl CostModel for NominalModel {
+    fn shards(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn weight(&self, shard: usize) -> f64 {
+        self.weights[shard]
+    }
+
+    fn bucket_cost_ns(&self, shard: usize, bucket: &Bucket) -> u64 {
+        self.table[shard]
+            .get(&(bucket.batch, bucket.m))
+            .copied()
+            .unwrap_or(UNKNOWN_COST_NS)
+    }
+
+    fn chunk_terms(&self, _shard: usize, _class_m: usize) -> Option<(f64, f64)> {
+        None
+    }
+}
+
+/// The calibrated seam implementation: offline fits + online refinement
+/// over a nominal fallback. Shared via `Arc` between the execute stages
+/// (observers) and the dispatcher/metrics (readers).
+#[derive(Debug)]
+pub struct CalibratedModel {
+    nominal: NominalModel,
+    /// Distinct size classes of the served variant (ascending).
+    classes: Vec<usize>,
+    /// Per-shard offline fits (`None` = shard's backend not in the
+    /// profile).
+    fits: Vec<Option<BackendFit>>,
+    refiner: Refiner,
+    /// Online refinement only runs when a profile was loaded; the nominal
+    /// constructor leaves it off so uncalibrated deployments behave
+    /// exactly as before.
+    refine: bool,
+    /// Per-shard [`Backend::executes_padding`] flags: a lockstep shard
+    /// pays its calibrated per-slot rate on every bucket slot, padded or
+    /// not, so occupancy-sensitive estimates must not scale its cost
+    /// down on sparse batches. Empty = all occupancy-proportional (the
+    /// CPU default).
+    lockstep: Vec<bool>,
+    /// Newest timestamp seen by `observe` — the injected clock the
+    /// staleness checks read (the model itself never reads wall time).
+    last_now: Mutex<Option<Instant>>,
+}
+
+impl CalibratedModel {
+    /// Wrap a nominal model with calibration disabled: behaves exactly
+    /// like [`NominalModel`], observation calls are no-ops.
+    pub fn nominal(nominal: NominalModel, manifest: &Manifest, variant: Variant) -> Self {
+        let shards = nominal.shards();
+        CalibratedModel {
+            nominal,
+            classes: manifest.classes(variant),
+            fits: vec![None; shards],
+            refiner: Refiner::default(),
+            refine: false,
+            lockstep: Vec::new(),
+            last_now: Mutex::new(None),
+        }
+    }
+
+    /// Bind a loaded profile to a shard set: `keys[s]` is shard `s`'s
+    /// backend key (its [`BackendSpec::key`](crate::coordinator::BackendSpec)),
+    /// matched against the profile's fitted backends. Shards without a
+    /// matching fit stay nominal.
+    pub fn from_profile(
+        profile: &Profile,
+        keys: &[String],
+        nominal: NominalModel,
+        manifest: &Manifest,
+        variant: Variant,
+    ) -> Self {
+        assert_eq!(keys.len(), nominal.shards(), "one key per shard");
+        // Variant-scoped lookup: a fit measured on another kernel family
+        // never leaks into this deployment's cost model.
+        let fits = keys.iter().map(|k| profile.backend(k, variant).cloned()).collect();
+        CalibratedModel {
+            nominal,
+            classes: manifest.classes(variant),
+            fits,
+            refiner: Refiner::default(),
+            refine: true,
+            lockstep: Vec::new(),
+            last_now: Mutex::new(None),
+        }
+    }
+
+    /// Record which shards run lockstep devices ([`Backend::executes_padding`]):
+    /// their occupancy-sensitive batch estimates charge the whole bucket,
+    /// matching how their refiner observations are normalized.
+    pub fn with_lockstep(mut self, lockstep: Vec<bool>) -> Self {
+        assert!(
+            lockstep.is_empty() || lockstep.len() == self.nominal.shards(),
+            "one lockstep flag per shard"
+        );
+        self.lockstep = lockstep;
+        self
+    }
+
+    /// Toggle online refinement: off, a profile-backed model follows the
+    /// offline fits verbatim (observations become no-ops); on for a
+    /// nominal wrapper, the model calibrates from live traffic alone.
+    pub fn with_refine(mut self, refine: bool) -> Self {
+        self.refine = refine;
+        self
+    }
+
+    /// Whether any shard carries calibration (an offline fit, or live
+    /// refinement being enabled).
+    pub fn is_calibrated(&self) -> bool {
+        self.fits.iter().any(|f| f.is_some()) || self.refine
+    }
+
+    /// Whether live observations can still move this model's estimates.
+    /// `false` means every weight/cost is frozen at its startup value —
+    /// callers on hot paths may snapshot once instead of re-reading.
+    pub fn is_refining(&self) -> bool {
+        self.refine
+    }
+
+    /// Nominal weights, for the nominal-vs-calibrated report.
+    pub fn nominal_weights(&self) -> Vec<f64> {
+        (0..self.nominal.shards()).map(|s| self.nominal.weight(s)).collect()
+    }
+
+    /// Fold one completed batch into the online refiner (no-op for a
+    /// nominal model). `now` is the caller's clock.
+    pub fn observe(
+        &self,
+        shard: usize,
+        class_m: usize,
+        used: usize,
+        execute_ns: u64,
+        now: Instant,
+    ) {
+        if !self.refine {
+            return;
+        }
+        {
+            let mut last = self.last_now.lock().unwrap();
+            *last = Some(last.map_or(now, |l| l.max(now)));
+        }
+        self.refiner.observe(shard, class_m, used, execute_ns, now);
+    }
+
+    /// Live refinement observations folded in so far.
+    pub fn refined_samples(&self) -> u64 {
+        self.refiner.samples()
+    }
+
+    fn now(&self) -> Option<Instant> {
+        *self.last_now.lock().unwrap()
+    }
+
+    /// Best `(setup_ns, per_problem_ns)` estimate for a (shard, class)
+    /// cell: refined EWMA first, then the offline fit, then `None`. A
+    /// refined estimate reports ZERO setup: the EWMA rate is
+    /// `execute_ns / used`, which already amortizes the batch setup at
+    /// the observed occupancy — re-adding the fitted `setup_ns` on top
+    /// would count it twice and bias estimates against refined shards.
+    fn terms(&self, shard: usize, class_m: usize) -> Option<(f64, f64)> {
+        let fit = self.fits.get(shard)?.as_ref();
+        let fitted = fit.and_then(|f| f.class(class_m));
+        if self.refine {
+            if let Some(now) = self.now() {
+                if let Some(r) = self.refiner.estimate(shard, class_m, now) {
+                    return Some((0.0, r.per_problem_ns));
+                }
+            }
+        }
+        fitted.map(|c| (c.setup_ns, c.per_problem_ns))
+    }
+}
+
+impl CostModel for CalibratedModel {
+    fn shards(&self) -> usize {
+        self.nominal.shards()
+    }
+
+    /// Measured relative throughput: mean over the shard's calibrated
+    /// classes of `nominal_per_problem / measured_per_problem`, falling
+    /// back to the nominal capacity weight for unprofiled shards.
+    fn weight(&self, shard: usize) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for &class_m in &self.classes {
+            if let Some((_, per)) = self.terms(shard, class_m) {
+                sum += nominal_per_problem_ns(class_m) / per.max(1e-9);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            self.nominal.weight(shard)
+        } else {
+            sum / n as f64
+        }
+    }
+
+    fn bucket_cost_ns(&self, shard: usize, bucket: &Bucket) -> u64 {
+        match self.terms(shard, bucket.m) {
+            Some((setup, per)) => (setup + per * bucket.batch as f64).max(0.0) as u64,
+            None => self.nominal.bucket_cost_ns(shard, bucket),
+        }
+    }
+
+    fn chunk_terms(&self, shard: usize, class_m: usize) -> Option<(f64, f64)> {
+        self.terms(shard, class_m)
+    }
+
+    /// The fitted split applied directly — `setup + per_problem * slots`
+    /// — NOT the whole-bucket cost scaled by occupancy, which would
+    /// wrongly shrink the per-batch setup on sparse batches. `slots` is
+    /// the batch's occupancy for backends that skip padding, and the
+    /// FULL bucket for lockstep devices
+    /// ([`CalibratedModel::with_lockstep`]) — a sparse batch costs such
+    /// a device the same as a full one, and its refined rates are
+    /// normalized per bucket slot to match. Uncalibrated cells fall back
+    /// to the occupancy-scaled nominal default.
+    fn batch_est_ns(&self, shard: usize, bucket: &Bucket, used: usize) -> u64 {
+        let slots = if self.lockstep.get(shard).copied().unwrap_or(false) {
+            bucket.batch
+        } else {
+            used
+        };
+        match self.terms(shard, bucket.m) {
+            Some((setup, per)) => (setup + per * slots as f64).max(0.0) as u64,
+            None => crate::runtime::backend::scale_cost_ns(
+                self.nominal.bucket_cost_ns(shard, bucket),
+                slots,
+                bucket.batch,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{BatchCpuBackend, CpuShardExecutor, NOMINAL_ROW_NS};
+    use crate::tune::profile::ClassFit;
+    use std::time::Duration;
+
+    fn manifest() -> Manifest {
+        Manifest::cpu_fallback()
+    }
+
+    fn boxed_backends() -> Vec<Box<dyn Backend>> {
+        vec![Box::new(CpuShardExecutor), Box::new(BatchCpuBackend::new(2))]
+    }
+
+    fn fit(backend: &str, per_16: f64, per_64: f64) -> BackendFit {
+        BackendFit {
+            backend: backend.into(),
+            variant: Variant::Rgb,
+            classes: vec![
+                ClassFit { class_m: 16, setup_ns: 100.0, per_problem_ns: per_16, points: 2 },
+                ClassFit { class_m: 64, setup_ns: 200.0, per_problem_ns: per_64, points: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn nominal_model_reproduces_backend_constants() {
+        let m = manifest();
+        let backends = boxed_backends();
+        let model = NominalModel::from_backends(&backends, &m, Variant::Rgb);
+        assert_eq!(model.shards(), 2);
+        assert_eq!(model.weight(0), 1.0);
+        assert_eq!(model.weight(1), 2.0);
+        let b = m.fit(Variant::Rgb, 32, 16).unwrap();
+        assert_eq!(model.bucket_cost_ns(0, b), backends[0].cost_ns(b));
+        assert_eq!(model.bucket_cost_ns(1, b), backends[1].cost_ns(b));
+        assert_eq!(model.chunk_terms(0, 16), None);
+        // Unknown shapes are shunned, not panicked on.
+        let alien = Bucket { batch: 7, m: 7, ..b.clone() };
+        assert_eq!(model.bucket_cost_ns(0, &alien), UNKNOWN_COST_NS);
+        // model_cost_table matches build_cost_table cell for cell.
+        assert_eq!(
+            model_cost_table(&model, &m, Variant::Rgb),
+            build_cost_table(&backends, &m, Variant::Rgb)
+        );
+        assert_eq!(model_weights(&model), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn nominal_wrapper_is_transparent_and_ignores_observations() {
+        let m = manifest();
+        let nominal = NominalModel::from_backends(&boxed_backends(), &m, Variant::Rgb);
+        let model = CalibratedModel::nominal(nominal.clone(), &m, Variant::Rgb);
+        assert!(!model.is_calibrated());
+        model.observe(0, 16, 32, 1, Instant::now());
+        assert_eq!(model.refined_samples(), 0);
+        assert_eq!(model.weight(0), nominal.weight(0));
+        let b = m.fit(Variant::Rgb, 32, 16).unwrap();
+        assert_eq!(model.bucket_cost_ns(0, b), nominal.bucket_cost_ns(0, b));
+        assert_eq!(model.chunk_terms(1, 64), None);
+    }
+
+    #[test]
+    fn profile_overrides_nominal_and_skews_weights() {
+        let m = manifest();
+        // Two nominal weight-1.0 shards; the profile says shard 0's
+        // backend measures 4x the throughput of shard 1's.
+        let per_slow_16 = 4.0 * (16 * NOMINAL_ROW_NS) as f64;
+        let mut profile = Profile::default();
+        profile.upsert(fit("batch-cpu:1", per_slow_16 / 4.0, (64 * NOMINAL_ROW_NS) as f64));
+        profile.upsert(fit("cpu", per_slow_16, 4.0 * (64 * NOMINAL_ROW_NS) as f64));
+        let backends: Vec<Box<dyn Backend>> =
+            vec![Box::new(BatchCpuBackend::new(1)), Box::new(CpuShardExecutor)];
+        let nominal = NominalModel::from_backends(&backends, &m, Variant::Rgb);
+        let model = CalibratedModel::from_profile(
+            &profile,
+            &["batch-cpu:1".into(), "cpu".into()],
+            nominal,
+            &m,
+            Variant::Rgb,
+        );
+        assert!(model.is_calibrated());
+        assert_eq!(model.nominal_weights(), vec![1.0, 1.0]);
+        // Calibrated: shard 0 measures weight 1.0, shard 1 weight 0.25 —
+        // a 4x ratio the nominal constants cannot see.
+        let w0 = model.weight(0);
+        let w1 = model.weight(1);
+        assert!((w0 / w1 - 4.0).abs() < 1e-9, "w0={w0} w1={w1}");
+        // Costs come from the fits (setup + per * batch), not the table.
+        let b = m.fit(Variant::Rgb, 32, 16).unwrap();
+        let want0 = (100.0 + (per_slow_16 / 4.0) * 32.0) as u64;
+        assert_eq!(model.bucket_cost_ns(0, b), want0);
+        assert_eq!(model.chunk_terms(0, 16), Some((100.0, per_slow_16 / 4.0)));
+        // Unprofiled class/backend shapes fall back to nominal.
+        let alien = Bucket { batch: 7, m: 7, ..b.clone() };
+        assert_eq!(model.bucket_cost_ns(0, &alien), UNKNOWN_COST_NS);
+    }
+
+    #[test]
+    fn partial_profiles_leave_other_shards_nominal() {
+        let m = manifest();
+        let mut profile = Profile::default();
+        profile.upsert(fit("cpu", 100.0, 400.0));
+        let backends = boxed_backends(); // [cpu, batch-cpu:2]
+        let nominal = NominalModel::from_backends(&backends, &m, Variant::Rgb);
+        let model = CalibratedModel::from_profile(
+            &profile,
+            &["cpu".into(), "batch-cpu:2".into()],
+            nominal,
+            &m,
+            Variant::Rgb,
+        );
+        // Shard 1's key is not in the profile: nominal weight and costs.
+        assert_eq!(model.weight(1), 2.0);
+        let b = m.fit(Variant::Rgb, 32, 16).unwrap();
+        assert_eq!(model.bucket_cost_ns(1, b), backends[1].cost_ns(b));
+        assert!(model.weight(0) > 2.0, "calibrated cpu shard measured fast");
+    }
+
+    #[test]
+    fn refinement_overrides_fit_and_expires_back_to_it() {
+        let m = manifest();
+        let mut profile = Profile::default();
+        profile.upsert(fit("cpu", 1000.0, 4000.0));
+        let nominal = NominalModel::from_backends(
+            &[Box::new(CpuShardExecutor) as Box<dyn Backend>],
+            &m,
+            Variant::Rgb,
+        );
+        let model =
+            CalibratedModel::from_profile(&profile, &["cpu".into()], nominal, &m, Variant::Rgb);
+        let b = m.fit(Variant::Rgb, 32, 16).unwrap();
+        // Before any observation: the offline fit.
+        assert_eq!(model.bucket_cost_ns(0, b), (100.0 + 1000.0 * 32.0) as u64);
+        // Live batches measure 2000ns/problem: the refined EWMA (seeded
+        // at the first sample) takes over. Setup drops to zero — the
+        // observed per-problem rate already amortizes it.
+        let t0 = Instant::now();
+        model.observe(0, 16, 10, 20_000, t0);
+        assert_eq!(model.refined_samples(), 1);
+        assert_eq!(model.bucket_cost_ns(0, b), (2000.0 * 32.0) as u64);
+        assert_eq!(model.chunk_terms(0, 16), Some((0.0, 2000.0)));
+        // The refined estimate goes stale (max_age exceeded at the newest
+        // observed timestamp): back to the offline fit.
+        model.observe(0, 64, 1, 4000, t0 + Duration::from_secs(301));
+        assert_eq!(model.bucket_cost_ns(0, b), (100.0 + 1000.0 * 32.0) as u64);
+    }
+}

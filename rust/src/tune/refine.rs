@@ -1,0 +1,209 @@
+//! The online refiner: per-(shard, class) EWMA of measured per-problem
+//! cost, updated from live [`ExecTiming`](crate::runtime::ExecTiming)
+//! observations as batches complete.
+//!
+//! # The injected-clock contract
+//!
+//! Like the admission pipeline, the refiner **never reads a wall clock**:
+//! every observation carries its own timestamp from the caller. That keeps
+//! every decision — including the staleness window below — unit-testable
+//! with a mock clock (the same contract as admission's no-spin tests).
+//!
+//! # Staleness
+//!
+//! A cell that has not seen traffic for [`Refiner::max_age`] reports
+//! `None` again: a calibration learned under one load mix must not silently
+//! steer dispatch hours later. The profile's offline fit remains the
+//! fallback underneath ([`crate::tune::CalibratedModel`] consults the
+//! refiner first, then the fitted profile, then the nominal constants).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default smoothing factor: one observation moves the estimate a quarter
+/// of the way (matches the admission layer's arrival-gap EWMA).
+pub const REFINE_EWMA_ALPHA: f64 = 0.25;
+
+/// Default staleness window after which a cell's estimate expires.
+pub const REFINE_MAX_AGE: Duration = Duration::from_secs(300);
+
+#[derive(Clone, Copy, Debug)]
+struct Cell {
+    per_problem_ns: f64,
+    samples: u64,
+    last: Instant,
+}
+
+/// One refined estimate, as reported to callers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Refined {
+    pub per_problem_ns: f64,
+    pub samples: u64,
+}
+
+/// Thread-safe per-(shard, class) EWMA store. Shared behind an `Arc` by
+/// the execute stages (writers) and the dispatch/metrics readers.
+#[derive(Debug)]
+pub struct Refiner {
+    alpha: f64,
+    max_age: Duration,
+    cells: Mutex<HashMap<(usize, usize), Cell>>,
+}
+
+impl Default for Refiner {
+    fn default() -> Self {
+        Refiner::new(REFINE_EWMA_ALPHA, REFINE_MAX_AGE)
+    }
+}
+
+impl Refiner {
+    pub fn new(alpha: f64, max_age: Duration) -> Refiner {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Refiner { alpha, max_age, cells: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn max_age(&self) -> Duration {
+        self.max_age
+    }
+
+    /// Fold one completed batch in: `execute_ns` busy time over `used`
+    /// occupied slots of `class_m` on `shard`, observed at `now` (caller's
+    /// clock — the refiner reads none). Degenerate measurements — empty
+    /// batches, or a zero-ns timing (coarse clocks) — are ignored, and
+    /// the rate is floored at 1 ns/problem: seeding a near-zero rate
+    /// would fabricate a near-infinite calibrated weight out of clock
+    /// noise, the same failure mode `fit_linear` guards the offline path
+    /// against.
+    pub fn observe(
+        &self,
+        shard: usize,
+        class_m: usize,
+        used: usize,
+        execute_ns: u64,
+        now: Instant,
+    ) {
+        if used == 0 || execute_ns == 0 {
+            return;
+        }
+        let per = (execute_ns as f64 / used as f64).max(1.0);
+        let mut cells = self.cells.lock().unwrap();
+        match cells.get_mut(&(shard, class_m)) {
+            // A stale cell restarts from the fresh sample instead of
+            // averaging against a dead regime.
+            Some(c) if now.saturating_duration_since(c.last) <= self.max_age => {
+                c.per_problem_ns += self.alpha * (per - c.per_problem_ns);
+                c.samples += 1;
+                c.last = now;
+            }
+            _ => {
+                cells.insert(
+                    (shard, class_m),
+                    Cell { per_problem_ns: per, samples: 1, last: now },
+                );
+            }
+        }
+    }
+
+    /// The current estimate for a (shard, class) cell, or `None` when the
+    /// cell has never been observed or its last observation is older than
+    /// the staleness window at `now`.
+    pub fn estimate(&self, shard: usize, class_m: usize, now: Instant) -> Option<Refined> {
+        let cells = self.cells.lock().unwrap();
+        let c = cells.get(&(shard, class_m))?;
+        if now.saturating_duration_since(c.last) > self.max_age {
+            return None;
+        }
+        Some(Refined { per_problem_ns: c.per_problem_ns, samples: c.samples })
+    }
+
+    /// Live observations folded in across all cells (diagnostics).
+    pub fn samples(&self) -> u64 {
+        self.cells.lock().unwrap().values().map(|c| c.samples).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock clock: a fixed origin plus explicit offsets — the tests never
+    /// read the wall clock between observations, mirroring the admission
+    /// layer's clock contract.
+    fn clock() -> impl Fn(u64) -> Instant {
+        let t0 = Instant::now();
+        move |ms: u64| t0 + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn first_observation_seeds_then_ewma_converges() {
+        let at = clock();
+        let r = Refiner::new(0.25, Duration::from_secs(60));
+        assert_eq!(r.estimate(0, 16, at(0)), None);
+        // Seed: 10 problems in 10_000ns -> 1000ns/problem.
+        r.observe(0, 16, 10, 10_000, at(0));
+        let e = r.estimate(0, 16, at(1)).unwrap();
+        assert_eq!(e.per_problem_ns, 1000.0);
+        assert_eq!(e.samples, 1);
+        // A 2000ns/problem batch moves the estimate a quarter of the way.
+        r.observe(0, 16, 5, 10_000, at(2));
+        let e = r.estimate(0, 16, at(3)).unwrap();
+        assert!((e.per_problem_ns - 1250.0).abs() < 1e-9, "{}", e.per_problem_ns);
+        assert_eq!(e.samples, 2);
+        // Repeated 2000ns observations converge toward 2000.
+        for k in 0..50 {
+            r.observe(0, 16, 5, 10_000, at(4 + k));
+        }
+        let e = r.estimate(0, 16, at(60)).unwrap();
+        assert!((e.per_problem_ns - 2000.0).abs() < 1.0, "{}", e.per_problem_ns);
+    }
+
+    #[test]
+    fn cells_are_independent_per_shard_and_class() {
+        let at = clock();
+        let r = Refiner::default();
+        r.observe(0, 16, 1, 1_000, at(0));
+        r.observe(1, 16, 1, 9_000, at(0));
+        r.observe(0, 64, 1, 4_000, at(0));
+        assert_eq!(r.estimate(0, 16, at(1)).unwrap().per_problem_ns, 1_000.0);
+        assert_eq!(r.estimate(1, 16, at(1)).unwrap().per_problem_ns, 9_000.0);
+        assert_eq!(r.estimate(0, 64, at(1)).unwrap().per_problem_ns, 4_000.0);
+        assert_eq!(r.estimate(1, 64, at(1)), None);
+        assert_eq!(r.samples(), 3);
+    }
+
+    #[test]
+    fn stale_cells_expire_and_reseed() {
+        let at = clock();
+        let r = Refiner::new(0.5, Duration::from_millis(100));
+        r.observe(0, 16, 1, 1_000, at(0));
+        // Inside the window: alive.
+        assert!(r.estimate(0, 16, at(100)).is_some());
+        // Beyond it: expired — the dead regime must not steer dispatch.
+        assert_eq!(r.estimate(0, 16, at(101)), None);
+        // The next observation RESEEDS rather than averaging with the
+        // stale value: 0.5 * (1000 + 5000) would be 3000; a reseed is
+        // exactly 5000.
+        r.observe(0, 16, 1, 5_000, at(300));
+        let e = r.estimate(0, 16, at(301)).unwrap();
+        assert_eq!(e.per_problem_ns, 5_000.0);
+        assert_eq!(e.samples, 1);
+    }
+
+    #[test]
+    fn degenerate_observations_are_ignored_or_floored() {
+        let at = clock();
+        let r = Refiner::default();
+        // Empty batch: ignored.
+        r.observe(0, 16, 0, 1_000, at(0));
+        assert_eq!(r.estimate(0, 16, at(0)), None);
+        // Zero-ns timing (coarse clock): ignored, never seeds a
+        // near-infinite throughput.
+        r.observe(0, 16, 8, 0, at(0));
+        assert_eq!(r.estimate(0, 16, at(0)), None);
+        assert_eq!(r.samples(), 0);
+        // Sub-1ns-per-problem rates floor at 1 ns/problem.
+        r.observe(0, 16, 1_000_000, 5, at(1));
+        assert_eq!(r.estimate(0, 16, at(1)).unwrap().per_problem_ns, 1.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal flat-JSON helpers shared by every reader/writer of the
+//! repo's bench and tune artifacts (`BENCH_pipeline.json`,
+//! `BENCH_baseline.json`, `TUNE_profile.json`).
+//!
+//! The offline vendor set has no serde, and none of these files need it:
+//! they are flat arrays of flat objects (`[{...}, {...}]`, no nesting).
+//! Centralizing the splitter and the field extractors here keeps the
+//! three consumers (`bench::loadgen`'s merge, `bench_gate`'s record
+//! scanner, `tune::profile`'s loader) on one parser that cannot drift.
+
+/// Split a flat JSON array (`[{...}, {...}]`, no nested objects — the only
+/// shape our artifact files emit) into raw object bodies.
+pub fn split_flat_objects(text: &str) -> Vec<String> {
+    text.split('{')
+        .skip(1)
+        .filter_map(|chunk| chunk.split('}').next())
+        .map(|s| s.trim().trim_end_matches(',').trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Extract a string field (`"field": "value"`) from one flat JSON object.
+pub fn extract_str(obj: &str, field: &str) -> Option<String> {
+    let pat = format!("\"{field}\"");
+    let rest = &obj[obj.find(&pat)? + pat.len()..];
+    let rest = rest.split_once(':')?.1.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    Some(rest.split('"').next()?.to_string())
+}
+
+/// Extract a numeric field (`"field": 123.4`) from one flat JSON object.
+pub fn extract_num(obj: &str, field: &str) -> Option<f64> {
+    let pat = format!("\"{field}\"");
+    let rest = &obj[obj.find(&pat)? + pat.len()..];
+    let rest = rest.split_once(':')?.1.trim_start();
+    let num: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+        .collect();
+    num.parse().ok()
+}
+
+/// Render flat object bodies back into the `[{...}, {...}]` array shape the
+/// splitter reads (each body already carries its own braces).
+pub fn render_array(bodies: &[String]) -> String {
+    let mut out = String::from("[\n");
+    out.push_str(&bodies.join(",\n"));
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_handles_trailing_commas() {
+        let objs = split_flat_objects("[\n{ \"a\": 1 },\n{ \"b\": 2 }\n]\n");
+        assert_eq!(objs.len(), 2);
+        assert!(objs[0].contains("\"a\""));
+    }
+
+    #[test]
+    fn extractors_read_fields() {
+        let obj = "\"bench\": \"loadgen_flood\",\n\"p99_ms\": 3.25,\n\"shed\": 10";
+        assert_eq!(extract_str(obj, "bench").as_deref(), Some("loadgen_flood"));
+        assert_eq!(extract_num(obj, "p99_ms"), Some(3.25));
+        assert_eq!(extract_num(obj, "shed"), Some(10.0));
+        assert_eq!(extract_str(obj, "missing"), None);
+        assert_eq!(extract_num(obj, "bench"), None, "string field is not a number");
+    }
+
+    #[test]
+    fn render_roundtrips_through_split() {
+        let bodies = vec![
+            "{\n  \"a\": 1\n}".to_string(),
+            "{\n  \"b\": 2.5,\n  \"c\": \"x\"\n}".to_string(),
+        ];
+        let text = render_array(&bodies);
+        let objs = split_flat_objects(&text);
+        assert_eq!(objs.len(), 2);
+        assert_eq!(extract_num(&objs[0], "a"), Some(1.0));
+        assert_eq!(extract_str(&objs[1], "c").as_deref(), Some("x"));
+    }
+}

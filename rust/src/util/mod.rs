@@ -1,6 +1,8 @@
 //! Shared infrastructure: deterministic RNG, statistics, property-test
-//! harness, and TSV/markdown tables. No external deps (offline build).
+//! harness, flat-JSON artifact helpers, and TSV/markdown tables. No
+//! external deps (offline build).
 
+pub mod flatjson;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -21,8 +21,10 @@ use batch_lp2d::runtime::shard::{
     BatchCpuBackend, CpuShardExecutor, ShardExecutor, ShardedEngine,
 };
 use batch_lp2d::runtime::PipelineDepth;
+use batch_lp2d::tune::{BackendFit, CalibratedModel, ClassFit, NominalModel, Profile};
 use batch_lp2d::util::prop::check;
 use batch_lp2d::util::Rng;
+use std::sync::Arc;
 
 mod common;
 use common::bit_identical;
@@ -541,6 +543,108 @@ fn prop_heterogeneous_stealing_solve_all_bit_identical() {
                 let stolen: usize = report.per_shard.iter().map(|s| s.steals).sum();
                 let chunks: usize = report.per_shard.iter().map(|s| s.chunks).sum();
                 assert!(stolen <= chunks, "more steals than chunks");
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        bit_identical(a, b),
+                        "shards={shards} depth={depth} problem {i} (m={}): {a:?} vs {b:?}",
+                        problems[i].m()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_calibrated_skewed_dispatch_bit_identical() {
+    // Calibration satellite: an arbitrarily skewed tune profile (random
+    // per-backend setup/marginal fits) bound to a mixed
+    // CpuShardExecutor+BatchCpuBackend set changes where chunks land, how
+    // steals re-cost them, and how chunks are sized — and must change
+    // NOTHING about the answers: bit-identical to the single-executor
+    // serial reference with input-order replies, swept over shards 1-4 x
+    // depth 2-4.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t8\t16\t8\t16\ta\n\
+                rgb\t32\t16\t8\t16\tb\n\
+                rgb\t8\t64\t8\t64\tc\n\
+                rgb\t32\t64\t8\t64\td\n\
+                rgb\t256\t64\t8\t64\te\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    check("calibrated skewed dispatch equivalence", 8, |rng| {
+        let n = rng.range_usize(1, 120);
+        let problems: Vec<Problem> = trace::mixed_size_batch(rng, n, 2, 60);
+        let seed = rng.next_u64();
+
+        // Single-executor serial reference, uncalibrated.
+        let mut reference =
+            ShardedEngine::from_executors(manifest.clone(), vec![CpuShardExecutor]).unwrap();
+        let mut r = Rng::new(seed);
+        let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+
+        for shards in 1..=4usize {
+            for depth in 2..=4usize {
+                let executors: Vec<Box<dyn ShardExecutor>> = (0..shards)
+                    .map(|s| -> Box<dyn ShardExecutor> {
+                        if s % 2 == 0 {
+                            Box::new(CpuShardExecutor)
+                        } else {
+                            Box::new(BatchCpuBackend::new(1 + s))
+                        }
+                    })
+                    .collect();
+                let keys: Vec<String> = (0..shards)
+                    .map(|s| {
+                        if s % 2 == 0 {
+                            "cpu".to_string()
+                        } else {
+                            format!("batch-cpu:{}", 1 + s)
+                        }
+                    })
+                    .collect();
+                // Random skewed profile per distinct backend kind: wild
+                // setup and marginal terms, nothing to do with reality.
+                let mut profile = Profile::default();
+                for key in &keys {
+                    if profile.backend(key, Variant::Rgb).is_some() {
+                        continue;
+                    }
+                    profile.upsert(BackendFit {
+                        backend: key.clone(),
+                        variant: Variant::Rgb,
+                        classes: [16usize, 64]
+                            .iter()
+                            .map(|&class_m| ClassFit {
+                                class_m,
+                                setup_ns: rng.range_f64(0.0, 100_000.0),
+                                per_problem_ns: rng.range_f64(50.0, 50_000.0),
+                                points: 2,
+                            })
+                            .collect(),
+                    });
+                }
+                let nominal =
+                    NominalModel::from_backends(&executors, &manifest, Variant::Rgb);
+                let model = CalibratedModel::from_profile(
+                    &profile,
+                    &keys,
+                    nominal,
+                    &manifest,
+                    Variant::Rgb,
+                );
+                let mut se = ShardedEngine::from_executors(manifest.clone(), executors)
+                    .unwrap()
+                    .with_depth(PipelineDepth::new(depth))
+                    .with_cost_model(Arc::new(model));
+                let mut r = Rng::new(seed);
+                let (got, report) =
+                    se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+                assert_eq!(got.len(), n, "shards={shards} depth={depth} lost solutions");
+                assert_eq!(report.problems(), n);
+                // Reported weights are the CALIBRATED ones, not nominal.
+                for (s, stats) in report.per_shard.iter().enumerate() {
+                    assert!(stats.weight > 0.0, "shard {s} weight");
+                }
                 for (i, (a, b)) in want.iter().zip(&got).enumerate() {
                     assert!(
                         bit_identical(a, b),

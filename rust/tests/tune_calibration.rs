@@ -1,0 +1,362 @@
+//! Calibration acceptance tests — all engine-free (CPU backends under the
+//! offline xla stub), so none of these ever skip:
+//!
+//! * a synthetic profile skewing one shard's measured throughput 4x makes
+//!   `Snapshot` report calibrated weights diverging from nominal, and the
+//!   dispatch load split follows the calibrated ratio;
+//! * `ClosePolicy::Adaptive` consumes the calibrated per-class `cost_ns`
+//!   (a profile swap changes the close decision at the same queue state);
+//! * the online refiner runs on live service traffic;
+//! * per-class `max_batch`/SLO overrides change batching behaviour, and
+//!   conflicting overrides are a typed startup error.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use batch_lp2d::coordinator::{
+    class_cost_table, AdmissionConfig, AdmissionPipeline, BackendSpec, ClassOverride,
+    ClosePolicy, CloseReason, Config, DeadlineClass, Router, Service,
+};
+use batch_lp2d::gen;
+use batch_lp2d::runtime::backend::{Backend, CpuShardExecutor};
+use batch_lp2d::runtime::{Manifest, Variant};
+use batch_lp2d::tune::{
+    nominal_per_problem_ns, BackendFit, CalibratedModel, ClassFit, NominalModel, Profile,
+};
+use batch_lp2d::util::Rng;
+
+/// A profile giving `backend` a flat `factor`x-the-nominal marginal
+/// throughput in every cpu_fallback class (16 and 64).
+fn flat_fit(backend: &str, factor: f64) -> BackendFit {
+    BackendFit {
+        backend: backend.to_string(),
+        variant: Variant::Rgb,
+        classes: [16usize, 64]
+            .iter()
+            .map(|&class_m| ClassFit {
+                class_m,
+                setup_ns: 500.0,
+                per_problem_ns: nominal_per_problem_ns(class_m) / factor,
+                points: 2,
+            })
+            .collect(),
+    }
+}
+
+fn write_profile(name: &str, fits: Vec<BackendFit>) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tune_accept_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("TUNE_profile.json");
+    let mut profile = Profile::default();
+    for f in fits {
+        profile.upsert(f);
+    }
+    profile.save_merged(&path).unwrap();
+    path
+}
+
+#[test]
+fn skewed_profile_diverges_weights_and_dispatch_follows() {
+    // Two shards with IDENTICAL nominal weights (1.0 each); the synthetic
+    // profile says shard 0's backend measures 4x shard 1's throughput
+    // (2x nominal vs 0.5x nominal). Refinement off: dispatch must follow
+    // the profile verbatim.
+    let path = write_profile(
+        "skew",
+        vec![flat_fit("batch-cpu:1", 2.0), flat_fit("cpu", 0.5)],
+    );
+    let config = Config {
+        policy: ClosePolicy::Fixed,
+        max_wait: Duration::from_secs(30),
+        bulk_wait: Duration::from_secs(60),
+        backends: vec![BackendSpec::BatchCpu { threads: 1 }, BackendSpec::Cpu],
+        max_batch: Some(8),
+        tune_profile: Some(path),
+        tune_refine: false,
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config)
+        .expect("CPU-only calibrated service starts without artifacts");
+    let metrics = svc.metrics_shared();
+
+    // Snapshot shows the divergence before any traffic: nominal pairs
+    // are 1.0/1.0, calibrated pairs 2.0/0.5 — the 4x skew.
+    let snap = metrics.snapshot();
+    assert_eq!(snap.per_shard[0].weight, 1.0);
+    assert_eq!(snap.per_shard[1].weight, 1.0);
+    let ratio = snap.per_shard[0].calibrated_weight / snap.per_shard[1].calibrated_weight;
+    assert!(
+        (ratio - 4.0).abs() < 1e-6,
+        "calibrated ratio {ratio} (weights {} / {})",
+        snap.per_shard[0].calibrated_weight,
+        snap.per_shard[1].calibrated_weight
+    );
+
+    // 400 requests closing in capacity-8 batches: the weighted dispatcher
+    // must target the profiled-fast shard for the bulk of them (under
+    // saturation the (outstanding+1)/weight rule settles at ~4:1; on an
+    // idle service every batch goes to the fast shard).
+    let mut rng = Rng::new(17);
+    let tickets: Vec<_> = (0..400)
+        .map(|_| svc.submit(gen::feasible(&mut rng, 10)).expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30)).expect("solved");
+    }
+    svc.shutdown();
+
+    let snap = metrics.snapshot();
+    let d0 = snap.per_shard[0].dispatched;
+    let d1 = snap.per_shard[1].dispatched;
+    assert_eq!(d0 + d1, snap.batches, "every batch was dispatched exactly once");
+    assert!(snap.batches >= 50, "400 requests at max_batch 8");
+    assert!(
+        d0 > d1,
+        "dispatch must follow the calibrated 4x skew: {d0} vs {d1} of {} batches",
+        snap.batches
+    );
+    // Work stealing may still EXECUTE batches on the slow-profiled shard;
+    // per-problem accounting stays conserved regardless.
+    assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), 400);
+}
+
+#[test]
+fn online_refiner_learns_from_live_traffic() {
+    // With refinement ON, live batch timings fold into the model: the
+    // refiner accumulates samples and the reported calibrated weights
+    // move off the (absurd) synthetic fits toward measured reality.
+    let path = write_profile(
+        "refine",
+        vec![flat_fit("batch-cpu:1", 2.0), flat_fit("cpu", 0.5)],
+    );
+    let config = Config {
+        policy: ClosePolicy::Fixed,
+        max_wait: Duration::from_secs(30),
+        bulk_wait: Duration::from_secs(60),
+        backends: vec![BackendSpec::BatchCpu { threads: 1 }, BackendSpec::Cpu],
+        max_batch: Some(8),
+        tune_profile: Some(path),
+        tune_refine: true,
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config).expect("service");
+    let model = svc.tune_model();
+    let metrics = svc.metrics_shared();
+    assert!(model.is_calibrated());
+    assert_eq!(model.refined_samples(), 0);
+
+    let mut rng = Rng::new(23);
+    let tickets: Vec<_> = (0..200)
+        .map(|_| svc.submit(gen::feasible(&mut rng, 10)).expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30)).expect("solved");
+    }
+    svc.shutdown();
+    assert!(
+        model.refined_samples() > 0,
+        "execute stages must feed the refiner"
+    );
+    // Both backends are in truth the same single-thread slot solver, so
+    // the measured ratio must have moved off the synthetic 4x.
+    let snap = metrics.snapshot();
+    let ratio = snap.per_shard[0].calibrated_weight / snap.per_shard[1].calibrated_weight;
+    assert!(
+        ratio < 3.9,
+        "refined ratio {ratio} should move off the synthetic 4x toward ~1x"
+    );
+}
+
+/// The admission-side regression: identical queue state, two profiles,
+/// different close decisions — proof `ClosePolicy::Adaptive` consumes the
+/// calibrated per-class `cost_ns`.
+#[test]
+fn profile_swap_changes_the_adaptive_close_decision() {
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t4\t16\t4\t16\ta\n\
+                rgb\t4\t64\t4\t64\tb\n";
+    let manifest = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+    let router = Router::new(&manifest, Variant::Rgb).unwrap();
+    let capacities = vec![4usize, 4];
+
+    // Two calibrations of the same single-cpu shard set: one measures a
+    // full batch as dirt cheap (padding out early costs nothing), the
+    // other as enormously expensive (padding waste dominates — hold).
+    let class_costs = |per_problem_ns: f64| -> Vec<u64> {
+        let mut profile = Profile::default();
+        profile.upsert(BackendFit {
+            backend: "cpu".to_string(),
+            variant: Variant::Rgb,
+            classes: vec![
+                ClassFit { class_m: 16, setup_ns: 0.0, per_problem_ns, points: 2 },
+                ClassFit { class_m: 64, setup_ns: 0.0, per_problem_ns, points: 2 },
+            ],
+        });
+        let nominal = NominalModel::from_backends(
+            &[Box::new(CpuShardExecutor) as Box<dyn Backend>],
+            &manifest,
+            Variant::Rgb,
+        );
+        let model = CalibratedModel::from_profile(
+            &profile,
+            &["cpu".to_string()],
+            nominal,
+            &manifest,
+            Variant::Rgb,
+        );
+        class_cost_table(&model, &manifest, Variant::Rgb, router.classes(), &capacities)
+    };
+    let cheap = class_costs(1_000.0); // 4-slot batch ~ 4µs
+    let expensive = class_costs(25_000_000.0); // 4-slot batch ~ 100ms
+    assert!(cheap[0] < expensive[0]);
+
+    // Identical queue state under both calibrations: two half-full
+    // queues (classes 16 and 64), ~10ms arrival gaps, ONE idle shard.
+    let run = |class_cost_ns: Vec<u64>| {
+        let mut p: AdmissionPipeline<u32> = AdmissionPipeline::new(
+            router.clone(),
+            capacities.clone(),
+            AdmissionConfig {
+                policy: ClosePolicy::Adaptive,
+                interactive_wait: Duration::from_secs(10),
+                bulk_wait: Duration::from_secs(10),
+                class_cost_ns,
+                ..AdmissionConfig::default()
+            },
+        );
+        let t = Instant::now();
+        for (class, gap_ms) in [(16usize, 10u64), (64, 12)] {
+            p.push(class, DeadlineClass::Interactive, 1, 8, t);
+            p.push(
+                class,
+                DeadlineClass::Interactive,
+                2,
+                8,
+                t + Duration::from_millis(gap_ms),
+            );
+        }
+        p.poll(t + Duration::from_millis(12), 1)
+    };
+
+    // Cheap calibration: the projected ~20ms wait to fill beats the tiny
+    // padding cost — BOTH queues cost-close now.
+    let ready = run(cheap);
+    assert_eq!(ready.len(), 2, "cheap profile closes both queues");
+    assert!(ready.iter().all(|r| r.reason == CloseReason::Cost));
+
+    // Expensive calibration, same state: padding a 100ms batch out for
+    // 2 missing slots costs more than waiting — only the single
+    // idle-shard EDF pick closes.
+    let ready = run(expensive);
+    assert_eq!(ready.len(), 1, "expensive profile holds the cost rule");
+    assert_eq!(ready[0].reason, CloseReason::IdleShard);
+}
+
+#[test]
+fn per_class_max_batch_override_closes_small_batches() {
+    // Global capacity for the 16-class is 256 under the CPU fallback and
+    // the SLO is far beyond the test horizon: only the per-class
+    // max_batch=4 override can close these batches promptly.
+    let config = Config {
+        policy: ClosePolicy::Fixed,
+        max_wait: Duration::from_secs(30),
+        bulk_wait: Duration::from_secs(60),
+        backends: vec![BackendSpec::Cpu],
+        class_overrides: vec![ClassOverride {
+            class_m: 16,
+            max_batch: Some(4),
+            ..ClassOverride::default()
+        }],
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config).expect("service");
+    let metrics = svc.metrics_shared();
+    let mut rng = Rng::new(41);
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..8)
+        .map(|_| svc.submit(gen::feasible(&mut rng, 10)).expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(10))
+            .expect("capacity-4 override must close long before the 30s SLO");
+    }
+    assert!(t0.elapsed() < Duration::from_secs(20));
+    svc.shutdown();
+    let snap = metrics.snapshot();
+    assert!(snap.closes.full >= 2, "8 requests at override cap 4: {:?}", snap.closes);
+    assert_eq!(snap.solved, 8);
+}
+
+#[test]
+fn per_class_slo_override_flushes_one_class_early() {
+    // Global interactive SLO 30s; class 16 overridden to 5ms. A lone
+    // request (can never fill a 256-capacity batch) only resolves
+    // promptly if the per-class deadline drives the close.
+    let config = Config {
+        policy: ClosePolicy::Fixed,
+        max_wait: Duration::from_secs(30),
+        bulk_wait: Duration::from_secs(60),
+        backends: vec![BackendSpec::Cpu],
+        class_overrides: vec![ClassOverride {
+            class_m: 16,
+            interactive_wait: Some(Duration::from_millis(5)),
+            ..ClassOverride::default()
+        }],
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config).expect("service");
+    let metrics = svc.metrics_shared();
+    let mut rng = Rng::new(43);
+    let ticket = svc.submit(gen::feasible(&mut rng, 10)).expect("submit");
+    let sol = ticket
+        .wait_timeout(Duration::from_secs(10))
+        .expect("5ms class SLO must close long before the 30s default");
+    assert_eq!(sol.status, batch_lp2d::lp::types::Status::Optimal);
+    svc.shutdown();
+    assert!(metrics.snapshot().closes.deadline >= 1);
+}
+
+#[test]
+fn conflicting_overrides_refuse_startup_with_typed_message() {
+    let config = Config {
+        backends: vec![BackendSpec::Cpu],
+        class_overrides: vec![
+            ClassOverride { class_m: 16, max_batch: Some(4), ..ClassOverride::default() },
+            ClassOverride {
+                class_m: 16,
+                interactive_wait: Some(Duration::from_millis(1)),
+                ..ClassOverride::default()
+            },
+        ],
+        ..Config::default()
+    };
+    let err = Service::start("definitely-missing-artifact-dir", config)
+        .expect_err("duplicate overrides must refuse startup");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("duplicate"), "untyped error: {msg}");
+    assert!(msg.contains("16"), "conflict must name the class: {msg}");
+}
+
+#[test]
+fn missing_or_stale_tune_profile_is_a_startup_error() {
+    let config = Config {
+        backends: vec![BackendSpec::Cpu],
+        tune_profile: Some(PathBuf::from("definitely-missing-TUNE_profile.json")),
+        ..Config::default()
+    };
+    assert!(Service::start("definitely-missing-artifact-dir", config).is_err());
+
+    // A schema-mismatched profile fails loudly instead of misreading.
+    let dir = std::env::temp_dir().join(format!("tune_stale_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("TUNE_profile.json");
+    std::fs::write(&path, "[\n{\n  \"tune_schema\": 999\n}\n]\n").unwrap();
+    let config = Config {
+        backends: vec![BackendSpec::Cpu],
+        tune_profile: Some(path),
+        ..Config::default()
+    };
+    let err = Service::start("definitely-missing-artifact-dir", config).unwrap_err();
+    assert!(format!("{err:#}").contains("schema"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
