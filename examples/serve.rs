@@ -17,8 +17,10 @@
 //! ```
 //!
 //! * `--shards N` runs N engine shards behind the weighted dispatcher;
-//!   `--backends engine,cpu,batch-cpu:4` mixes shard backend types instead
-//!   (heterogeneous sharding — CPU-only mixes serve without artifacts);
+//!   `--backends engine,cpu,batch-cpu:4,simd-cpu:4` mixes shard backend
+//!   types instead (heterogeneous sharding — CPU-only mixes serve without
+//!   artifacts; `simd-cpu:N` is the N-thread structure-of-arrays
+//!   vectorized batch solver, the fastest portable shard kind);
 //!   `--depth D` sets the per-shard staged-queue (pipeline ring) depth.
 //! * `--policy` picks the admission batch-close policy: `fixed` closes on
 //!   capacity or SLO deadline only; `adaptive` (default) also closes

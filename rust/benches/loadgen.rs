@@ -21,7 +21,7 @@
 use std::time::Duration;
 
 use batch_lp2d::bench::loadgen::{
-    json_record, merge_into_bench_json, run_scenario, table, LoadgenOpts,
+    absorb_into_profile, json_record, merge_into_bench_json, run_scenario, table, LoadgenOpts,
 };
 use batch_lp2d::coordinator::{BackendSpec, ClosePolicy};
 use batch_lp2d::gen::scenarios::Scenario;
@@ -129,5 +129,17 @@ fn main() -> anyhow::Result<()> {
         "wrote LOADGEN_table.md and merged {} record(s) into BENCH_pipeline.json",
         records.len()
     );
+    // Second calibration source: a homogeneous shard mix attributes its
+    // measured per-class serving costs unambiguously to one backend kind,
+    // so feed them into the tune profile next to the offline grid fits.
+    let mix = if opts.backends.is_empty() {
+        LoadgenOpts::default_backends()
+    } else {
+        opts.backends.clone()
+    };
+    match absorb_into_profile(std::path::Path::new("TUNE_profile.json"), &mix, &reports)? {
+        Some(n) => println!("absorbed {n} serving observation(s) into TUNE_profile.json"),
+        None => println!("heterogeneous mix: serving observations not attributed to a backend"),
+    }
     Ok(())
 }

@@ -12,8 +12,8 @@ use batch_lp2d::lp::types::Problem;
 use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
 use batch_lp2d::runtime::{
-    default_artifact_dir, CpuShardExecutor, Engine, Manifest, PipelineDepth, ShardedEngine,
-    Variant,
+    default_artifact_dir, Backend, BatchCpuBackend, CpuShardExecutor, Engine, Manifest,
+    PipelineDepth, ShardedEngine, SimdCpuBackend, Variant,
 };
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
 use batch_lp2d::util::{Rng, Timer};
@@ -210,6 +210,42 @@ fn depth_sweep_reports(problems: &[Problem]) -> Vec<String> {
     out
 }
 
+/// Single-shard SoA-vs-scalar backend comparison at equal thread counts —
+/// the `simd-cpu` acceptance rows (`simd_micro_*` records). Packs one
+/// bucket-shaped batch and times `execute_raw` on both backends directly,
+/// so the ratio is the kernels', not the dispatch layer's.
+fn simd_micro_reports(opts: BenchOpts) -> Vec<String> {
+    let manifest = cpu_manifest();
+    let threads = batch_cpu::default_threads();
+    let mut out = Vec::new();
+    for batch in [256usize, 1024] {
+        let bucket = manifest.find(Variant::Rgb, batch, 64).expect("bucket").clone();
+        let mut rng = Rng::new(11 ^ batch as u64);
+        let problems = gen::independent_batch(&mut rng, batch, 64);
+        let pb = pack::pack(&problems, bucket.batch, bucket.m, None).expect("pack");
+
+        let mut lps = |backend: &mut dyn Backend, label: String| -> f64 {
+            let r = bench(&label, opts, || {
+                std::hint::black_box(backend.execute_raw(&bucket, &pb).expect("execute"));
+            });
+            println!("{}", report_line(&r));
+            batch as f64 / (r.mean_ms() / 1e3).max(1e-12)
+        };
+        let mut scalar = BatchCpuBackend::new(threads);
+        let scalar_lps = lps(&mut scalar, format!("batch_cpu/t{threads}/b{batch}"));
+        let mut simd = SimdCpuBackend::new(threads);
+        let simd_lps = lps(&mut simd, format!("simd_cpu/t{threads}/b{batch}"));
+        let speedup = simd_lps / scalar_lps.max(1e-9);
+        println!("simd-cpu vs batch-cpu @ batch {batch} x m 64: {speedup:.3}x");
+        out.push(format!(
+            "{{\n  \"bench\": \"simd_micro_b{batch}\",\n  \"batch\": {batch},\n  \"m\": 64,\n  \
+             \"threads\": {threads},\n  \"throughput_lps\": {simd_lps:.1},\n  \
+             \"batch_cpu_lps\": {scalar_lps:.1},\n  \"speedup_vs_batch_cpu\": {speedup:.4}\n}}"
+        ));
+    }
+    out
+}
+
 /// Engine-path shard sweep; empty when artifacts (or the real PJRT
 /// backend) are unavailable.
 fn engine_shard_sweep(problems: &[Problem]) -> Vec<String> {
@@ -336,11 +372,15 @@ fn main() {
     println!("\n## pipeline-depth sweep (2 CPU shards, depth 2/3/4)");
     let json_depths = depth_sweep_reports(&problems);
 
+    println!("\n## simd-cpu vs batch-cpu single-shard (equal threads, m 64)");
+    let json_simd = simd_micro_reports(opts);
+
     let mut entries: Vec<String> = vec![json_cpu];
     entries.extend(json_engine);
     entries.extend(json_shards);
     entries.extend(json_engine_shards);
     entries.extend(json_depths);
+    entries.extend(json_simd);
     let mut body = String::from("[\n");
     body.push_str(&entries.join(",\n"));
     body.push_str("\n]\n");

@@ -407,6 +407,61 @@ pub fn fig_loadgen(artifact_dir: &std::path::Path, requests: usize) -> anyhow::R
     Ok(table(&reports))
 }
 
+/// Companion table of the vectorized SoA backend: raw single-backend
+/// throughput of `simd-cpu` vs the scalar `cpu`/`batch-cpu` executors over
+/// the portable CPU bucket inventory, at equal thread counts on full
+/// buckets. Engine-free, like the loadgen companion, so it runs on any
+/// host; the `simd_micro` records in `BENCH_pipeline.json` gate the same
+/// ratio in CI.
+pub fn fig_simd(threads: usize, iters: usize) -> anyhow::Result<Table> {
+    use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor};
+    use crate::runtime::{pack, Manifest, SimdCpuBackend};
+    use crate::util::Timer;
+
+    let iters = if std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some() {
+        1
+    } else {
+        iters.max(1)
+    };
+    let manifest = Manifest::cpu_fallback();
+    let mut table = Table::new(&[
+        "batch",
+        "m",
+        "cpu_klps",
+        "batch_cpu_klps",
+        "simd_klps",
+        "simd_vs_batch",
+    ]);
+    for bucket in manifest.of_variant(Variant::Rgb) {
+        let mut prng = Rng::new(2019 ^ ((bucket.batch as u64) << 32) ^ bucket.m as u64);
+        let problems = gen::independent_batch(&mut prng, bucket.batch, bucket.m);
+        let mut srng = Rng::new(2019);
+        let pb = pack::pack(&problems, bucket.batch, bucket.m, Some(&mut srng))?;
+        let mut klps = |backend: &mut dyn Backend| -> anyhow::Result<f64> {
+            backend.execute_raw(bucket, &pb)?; // warm
+            let t = Timer::start();
+            for _ in 0..iters {
+                backend.execute_raw(bucket, &pb)?;
+            }
+            let ms = t.elapsed_ns().max(1) as f64 / 1e6;
+            Ok((bucket.batch * iters) as f64 / ms)
+        };
+        let cpu = klps(&mut CpuShardExecutor)?;
+        let batch_cpu = klps(&mut BatchCpuBackend::new(threads))?;
+        let simd = klps(&mut SimdCpuBackend::new(threads))?;
+        table.push_row(vec![
+            bucket.batch.to_string(),
+            bucket.m.to_string(),
+            format!("{cpu:.1}"),
+            format!("{batch_cpu:.1}"),
+            format!("{simd:.1}"),
+            format!("{:.3}", simd / batch_cpu.max(1e-9)),
+        ]);
+        eprintln!("  {}", table.rows.last().unwrap().join("\t"));
+    }
+    Ok(table)
+}
+
 /// Default sweep axes (must stay within the compiled artifact set).
 pub const SIZES: &[usize] = &[16, 32, 64, 128, 256];
 pub const BATCHES: &[usize] = &[128, 256, 512, 1024, 2048, 4096];

@@ -15,9 +15,11 @@
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{BackendSpec, ClosePolicy, Config, Service, Ticket};
+use crate::coordinator::{BackendSpec, ClosePolicy, Config, Service, Snapshot, Ticket};
 use crate::gen::scenarios::Scenario;
+use crate::runtime::manifest::Variant;
 use crate::runtime::PipelineDepth;
+use crate::tune::{Observation, Profile};
 use crate::util::stats::percentile_sorted;
 use crate::util::{Rng, Table};
 
@@ -95,6 +97,9 @@ pub struct ScenarioReport {
     pub padding_waste: f64,
     /// Batches closed by the work-conserving rules (idle + cost).
     pub adaptive_closes: u64,
+    /// Per-class cost observations distilled from the run's metrics
+    /// ([`class_observations`]) — the loadgen → tune-profile feed.
+    pub observations: Vec<Observation>,
 }
 
 impl ScenarioReport {
@@ -189,7 +194,59 @@ pub fn run_scenario(
         mean_occupancy: snap.mean_occupancy,
         padding_waste: snap.padding_waste(),
         adaptive_closes: snap.closes.adaptive(),
+        observations: class_observations(&snap),
     })
+}
+
+/// Distill a service metrics snapshot into per-class cost
+/// [`Observation`]s: each class's occupied slots and batch count come
+/// from the padding gauges, and the run's total execute-side time is
+/// apportioned to classes by their share of true constraint rows (the
+/// quantity the Seidel work actually scales with). Classes that saw no
+/// traffic yield nothing.
+pub fn class_observations(snap: &Snapshot) -> Vec<Observation> {
+    let rows_sum: u64 = snap.padding.iter().map(|p| p.rows_used).sum();
+    if rows_sum == 0 || snap.timing.execute_ns == 0 {
+        return Vec::new();
+    }
+    let execute_ns = snap.timing.execute_ns as f64;
+    snap.padding
+        .iter()
+        .filter(|p| p.batches > 0 && p.rows_used > 0)
+        .map(|p| Observation {
+            class_m: p.class_m,
+            problems: (p.rows_total / p.class_m.max(1) as u64) as usize,
+            busy_ns: execute_ns * p.rows_used as f64 / rows_sum as f64,
+            samples: p.batches as usize,
+        })
+        .collect()
+}
+
+/// Fold the reports' observations into `TUNE_profile.json`-shaped state
+/// on disk as a second fitting source next to the offline grid. The
+/// attribution is only unambiguous when every shard runs the same
+/// backend kind, so heterogeneous mixes are skipped (returning `None`);
+/// a homogeneous mix absorbs into that kind's fit (created from the
+/// observations alone if the backend was never grid-profiled) and
+/// returns the number of observations fed.
+pub fn absorb_into_profile(
+    path: &Path,
+    backends: &[BackendSpec],
+    reports: &[ScenarioReport],
+) -> anyhow::Result<Option<usize>> {
+    let keys = BackendSpec::distinct_keys(backends);
+    let [key] = keys.as_slice() else {
+        return Ok(None);
+    };
+    let observations: Vec<Observation> =
+        reports.iter().flat_map(|r| r.observations.iter().copied()).collect();
+    if observations.is_empty() {
+        return Ok(None);
+    }
+    let mut profile = if path.exists() { Profile::load(path)? } else { Profile::default() };
+    profile.absorb(key, Variant::Rgb, &observations);
+    profile.save_merged(path)?;
+    Ok(Some(observations.len()))
 }
 
 /// The latency table: one row per scenario, the percentile columns the
@@ -320,6 +377,12 @@ mod tests {
             mean_occupancy: 0.7,
             padding_waste: 0.2,
             adaptive_closes: 4,
+            observations: vec![Observation {
+                class_m: 16,
+                problems: 90,
+                busy_ns: 90_000.0,
+                samples: 9,
+            }],
         }
     }
 
@@ -367,6 +430,80 @@ mod tests {
         // Idempotent: merging again changes nothing.
         merge_into_bench_json(&path, &fresh).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), text);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn class_observations_apportion_execute_time_by_live_rows() {
+        use crate::coordinator::metrics::ExecTimingTotals;
+        use crate::coordinator::ClassPadding;
+        let snap = Snapshot {
+            submitted: 12,
+            solved: 12,
+            infeasible: 0,
+            rejected: 0,
+            shed_interactive: 0,
+            shed_bulk: 0,
+            batches: 3,
+            mean_occupancy: 0.8,
+            pipeline_depth: 2,
+            closes: Default::default(),
+            queue_wait_p50_ns: 0,
+            queue_wait_p95_ns: 0,
+            queue_wait_p99_ns: 0,
+            exec_p50_ns: 0,
+            exec_p95_ns: 0,
+            exec_p99_ns: 0,
+            exec_mean_ns: 0.0,
+            timing: ExecTimingTotals { execute_ns: 1_000_000, ..Default::default() },
+            per_shard: Vec::new(),
+            padding: vec![
+                // 8 slots x 16 rows, 96 live rows over 2 batches.
+                ClassPadding { class_m: 16, batches: 2, rows_used: 96, rows_total: 128 },
+                // 4 slots x 64 rows, 224 live rows over 1 batch.
+                ClassPadding { class_m: 64, batches: 1, rows_used: 224, rows_total: 256 },
+                // Pre-sized zero row: no traffic, no observation.
+                ClassPadding { class_m: 256, ..Default::default() },
+            ],
+        };
+        let obs = class_observations(&snap);
+        assert_eq!(obs.len(), 2, "silent classes yield nothing: {obs:?}");
+        assert_eq!(obs[0].class_m, 16);
+        assert_eq!(obs[0].problems, 8);
+        assert_eq!(obs[0].samples, 2);
+        assert!((obs[0].busy_ns - 1_000_000.0 * 96.0 / 320.0).abs() < 1e-6);
+        assert_eq!(obs[1].class_m, 64);
+        assert_eq!(obs[1].problems, 4);
+        assert!((obs[1].busy_ns - 1_000_000.0 * 224.0 / 320.0).abs() < 1e-6);
+        // An idle run (no execute time) produces no observations at all.
+        let idle = Snapshot { timing: ExecTimingTotals::default(), ..snap };
+        assert!(class_observations(&idle).is_empty());
+    }
+
+    #[test]
+    fn absorb_into_profile_feeds_homogeneous_mixes_only() {
+        let dir = std::env::temp_dir()
+            .join(format!("loadgen_absorb_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("TUNE_profile.json");
+        let reports = vec![report("poisson"), report("bursty")];
+        // Heterogeneous mix: attribution is ambiguous, nothing written.
+        let hetero = vec![BackendSpec::SimdCpu { threads: 2 }, BackendSpec::Cpu];
+        assert_eq!(absorb_into_profile(&path, &hetero, &reports).unwrap(), None);
+        assert!(!path.exists());
+        // Homogeneous mix (same kind on every shard): observations land
+        // on that kind's fit, created from scratch here.
+        let homo = vec![
+            BackendSpec::SimdCpu { threads: 2 },
+            BackendSpec::SimdCpu { threads: 2 },
+        ];
+        assert_eq!(absorb_into_profile(&path, &homo, &reports).unwrap(), Some(2));
+        let profile = Profile::load(&path).unwrap();
+        let fit = profile.backend("simd-cpu:2", Variant::Rgb).expect("fit created");
+        let c = fit.class(16).expect("observed class fitted");
+        // Both reports observe 1000 ns/problem; the blended rate is it.
+        assert!((c.per_problem_ns - 1_000.0).abs() < 0.1, "rate {}", c.per_problem_ns);
+        assert_eq!(c.points, 18, "9 batch samples per report");
         std::fs::remove_dir_all(&dir).ok();
     }
 

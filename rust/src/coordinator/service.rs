@@ -61,6 +61,7 @@ use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
 use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor};
 use crate::runtime::pack::{pack_into, unpack_into, PackedBatch};
+use crate::runtime::simd::SimdCpuBackend;
 use crate::runtime::steal::StealQueues;
 use crate::runtime::stream::PipelineDepth;
 use crate::runtime::{Bucket, Engine, Manifest, Variant};
@@ -79,15 +80,21 @@ pub enum BackendSpec {
     Cpu,
     /// The multicore CPU batch solver ([`BatchCpuBackend`]).
     BatchCpu { threads: usize },
+    /// The vectorized structure-of-arrays CPU solver
+    /// ([`SimdCpuBackend`](crate::runtime::SimdCpuBackend)).
+    SimdCpu { threads: usize },
 }
 
 impl BackendSpec {
-    /// Parse one spec: `engine` | `cpu` | `batch-cpu` | `batch-cpu:<N>`.
+    /// Parse one spec: `engine` | `cpu` | `batch-cpu[:<N>]` | `simd-cpu[:<N>]`.
     pub fn parse(s: &str) -> anyhow::Result<BackendSpec> {
         match s.trim() {
             "engine" | "pjrt" => Ok(BackendSpec::Engine),
             "cpu" => Ok(BackendSpec::Cpu),
             "batch-cpu" => Ok(BackendSpec::BatchCpu {
+                threads: crate::solvers::batch_cpu::default_threads(),
+            }),
+            "simd-cpu" => Ok(BackendSpec::SimdCpu {
                 threads: crate::solvers::batch_cpu::default_threads(),
             }),
             other => {
@@ -96,8 +103,15 @@ impl BackendSpec {
                         .parse()
                         .map_err(|_| anyhow::anyhow!("bad thread count in '{other}'"))?;
                     Ok(BackendSpec::BatchCpu { threads: threads.max(1) })
+                } else if let Some(n) = other.strip_prefix("simd-cpu:") {
+                    let threads: usize = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad thread count in '{other}'"))?;
+                    Ok(BackendSpec::SimdCpu { threads: threads.max(1) })
                 } else {
-                    anyhow::bail!("unknown backend '{other}' (engine|cpu|batch-cpu[:N])")
+                    anyhow::bail!(
+                        "unknown backend '{other}' (engine|cpu|batch-cpu[:N]|simd-cpu[:N])"
+                    )
                 }
             }
         }
@@ -116,6 +130,7 @@ impl BackendSpec {
             BackendSpec::Engine => "engine".to_string(),
             BackendSpec::Cpu => "cpu".to_string(),
             BackendSpec::BatchCpu { threads } => format!("batch-cpu:{threads}"),
+            BackendSpec::SimdCpu { threads } => format!("simd-cpu:{threads}"),
         }
     }
 
@@ -146,6 +161,7 @@ impl BackendSpec {
             BackendSpec::BatchCpu { threads } => {
                 BatchCpuBackend::new(*threads).capacity_weight()
             }
+            BackendSpec::SimdCpu { threads } => SimdCpuBackend::new(*threads).capacity_weight(),
         }
     }
 
@@ -156,6 +172,7 @@ impl BackendSpec {
             BackendSpec::Engine => Box::new(Engine::new(artifact_dir)?),
             BackendSpec::Cpu => Box::new(CpuShardExecutor),
             BackendSpec::BatchCpu { threads } => Box::new(BatchCpuBackend::new(*threads)),
+            BackendSpec::SimdCpu { threads } => Box::new(SimdCpuBackend::new(*threads)),
         })
     }
 }
@@ -1244,14 +1261,24 @@ mod tests {
             BackendSpec::parse("batch-cpu").unwrap(),
             BackendSpec::BatchCpu { threads } if threads >= 1
         ));
+        assert_eq!(
+            BackendSpec::parse("simd-cpu:3").unwrap(),
+            BackendSpec::SimdCpu { threads: 3 }
+        );
+        assert!(matches!(
+            BackendSpec::parse("simd-cpu").unwrap(),
+            BackendSpec::SimdCpu { threads } if threads >= 1
+        ));
         assert!(BackendSpec::parse("gpu").is_err());
         assert!(BackendSpec::parse("batch-cpu:x").is_err());
-        let list = BackendSpec::parse_list("cpu, batch-cpu:2,engine").unwrap();
+        assert!(BackendSpec::parse("simd-cpu:x").is_err());
+        let list = BackendSpec::parse_list("cpu, batch-cpu:2,simd-cpu:2,engine").unwrap();
         assert_eq!(
             list,
             vec![
                 BackendSpec::Cpu,
                 BackendSpec::BatchCpu { threads: 2 },
+                BackendSpec::SimdCpu { threads: 2 },
                 BackendSpec::Engine
             ]
         );
@@ -1264,10 +1291,19 @@ mod tests {
             BackendSpec::Engine,
             BackendSpec::Cpu,
             BackendSpec::BatchCpu { threads: 4 },
+            BackendSpec::SimdCpu { threads: 2 },
         ] {
             assert_eq!(BackendSpec::parse(&spec.key()).unwrap(), spec);
         }
         assert_eq!(BackendSpec::BatchCpu { threads: 4 }.key(), "batch-cpu:4");
+        assert_eq!(BackendSpec::SimdCpu { threads: 2 }.key(), "simd-cpu:2");
+        // The simd backend must outweigh batch-cpu at equal threads, so
+        // weighted dispatch biases toward the vectorized lanes out of the
+        // box (calibration then learns the measured skew).
+        assert!(
+            BackendSpec::SimdCpu { threads: 4 }.nominal_weight()
+                > BackendSpec::BatchCpu { threads: 4 }.nominal_weight()
+        );
     }
 
     #[test]

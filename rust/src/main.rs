@@ -71,7 +71,7 @@ fn print_help() {
            solve    --batch 1024 --m 64 [--variant rgb|naive|simplex] [--seed S]\n\
                                         generate and solve one batch, print timing\n\
            serve    --requests 6000 [--rate 2000] [--max-wait-ms 2] [--shards 1]\n\
-                    [--depth 2] [--backends engine,cpu,batch-cpu:N]\n\
+                    [--depth 2] [--backends engine,cpu,batch-cpu:N,simd-cpu:N]\n\
                     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]\n\
                     [--bulk-slo-ms MS] [--scenario poisson|bursty|...]\n\
                     [--tune-profile TUNE_profile.json]\n\
@@ -86,7 +86,7 @@ fn print_help() {
                                         --tune-profile calibrates dispatch from\n\
                                         measured costs, --class-overrides sets\n\
                                         per-size-class max-batch/SLO bounds)\n\
-           tune     [--backends cpu,batch-cpu:4] [--out TUNE_profile.json]\n\
+           tune     [--backends cpu,batch-cpu:4,simd-cpu:4] [--out TUNE_profile.json]\n\
                     [--runs 3] [--max-batch 512] [--variant rgb]\n\
                                         profile each backend kind over the\n\
                                         (batch x class) grid, fit setup/marginal\n\
@@ -95,7 +95,7 @@ fn print_help() {
                                         profile (idempotent)\n\
            crowd    --agents 512 --steps 100 [--backend engine|cpu]\n\
                                         crowd simulation (paper Sec. 5 application)\n\
-           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards|depth|loadgen\n\
+           figures  --fig all|3a|3b|3c|4a|4b|5|7a|7b|imbalance|shards|depth|loadgen|simd\n\
                     [--fast]            regenerate the paper's figures as tables\n\
          \n\
          flags:\n\
@@ -372,6 +372,7 @@ fn cmd_tune(flags: &Flags) -> anyhow::Result<()> {
         None => vec![
             BackendSpec::Cpu,
             BackendSpec::BatchCpu { threads: batch_cpu::default_threads() },
+            BackendSpec::SimdCpu { threads: batch_cpu::default_threads() },
         ],
     };
     anyhow::ensure!(!specs.is_empty(), "no backends to profile");
@@ -509,6 +510,16 @@ fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
         return Ok(());
     }
 
+    // Engine-free table: pure CPU backends, so the SoA-vs-scalar kernel
+    // comparison runs on any host (like the simd CI leg).
+    if which == "simd" {
+        emit(
+            "V (simd-cpu vs scalar CPU backends)",
+            figures::fig_simd(batch_cpu::default_threads(), 3)?,
+        );
+        return Ok(());
+    }
+
     let engine = Engine::new(artifact_dir(flags))?;
     let ctx = FigureCtx::new(&engine);
 
@@ -568,11 +579,16 @@ fn cmd_figures(flags: &Flags) -> anyhow::Result<()> {
         );
     }
     if all {
-        // Also reachable engine-free via `--fig loadgen` (early return
-        // above); under `all` it rides along with the engine figures.
+        // Also reachable engine-free via `--fig loadgen` / `--fig simd`
+        // (early returns above); under `all` they ride along with the
+        // engine figures.
         emit(
             "L (latency under load, loadgen companion)",
             figures::fig_loadgen(std::path::Path::new(&artifact_dir(flags)), 3_000)?,
+        );
+        emit(
+            "V (simd-cpu vs scalar CPU backends)",
+            figures::fig_simd(batch_cpu::default_threads(), 3)?,
         );
     }
     Ok(())

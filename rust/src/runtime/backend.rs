@@ -199,7 +199,7 @@ impl Backend for Engine {
     }
 }
 
-fn ensure_shape(bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<()> {
+pub(crate) fn ensure_shape(bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<()> {
     anyhow::ensure!(
         pb.batch == bucket.batch && pb.m == bucket.m,
         "packed shape ({}, {}) does not match bucket ({}, {})",
@@ -222,24 +222,18 @@ fn solve_packed_range(pb: &PackedBatch, start: usize, sol: &mut [f32], status: &
     let mut cons: Vec<HalfPlane> = Vec::with_capacity(pb.m);
     for i in 0..status.len() {
         let slot = start + i;
-        let row = slot * pb.m * 4;
+        let lines = pb.slot_lines(slot);
         cons.clear();
-        for k in 0..pb.m {
-            let off = row + k * 4;
-            // Valid rows are contiguous from slot 0 (pack layout).
-            if pb.lines[off + 3] < 0.5 {
-                break;
-            }
+        for k in 0..pb.slot_valid_rows(slot) {
+            let off = k * PackedBatch::ROW_STRIDE;
             cons.push(HalfPlane::new(
-                pb.lines[off] as f64,
-                pb.lines[off + 1] as f64,
-                pb.lines[off + 2] as f64,
+                lines[off] as f64,
+                lines[off + 1] as f64,
+                lines[off + 2] as f64,
             ));
         }
-        let p = Problem::new(
-            std::mem::take(&mut cons),
-            [pb.obj[slot * 2] as f64, pb.obj[slot * 2 + 1] as f64],
-        );
+        let [cx, cy] = pb.slot_obj(slot);
+        let p = Problem::new(std::mem::take(&mut cons), [cx as f64, cy as f64]);
         let s = seidel::solve_ordered(&p);
         cons = p.constraints;
         match s.status {

@@ -10,6 +10,9 @@
 //! * [`backend`]  -- the [`Backend`] trait: one execution unit (PJRT
 //!   engine, single-thread CPU stand-in, multicore [`BatchCpuBackend`])
 //!   with a capacity weight and a cost model for weighted dispatch.
+//! * [`simd`]     -- the vectorized [`SimdCpuBackend`]: structure-of-arrays
+//!   lane kernel (the paper's RGB layout on the host), bit-identical to the
+//!   scalar CPU backends.
 //! * [`steal`]    -- work-stealing staged queues: bounded per-shard deques
 //!   where an idle shard steals the newest chunk from the most backlogged
 //!   peer.
@@ -27,6 +30,7 @@ pub mod engine;
 pub mod manifest;
 pub mod pack;
 pub mod shard;
+pub mod simd;
 pub mod steal;
 pub mod stream;
 
@@ -35,11 +39,12 @@ pub use backend::{
 };
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
-pub use pack::{pack, pack_into, pack_into_indexed, unpack, unpack_into, PackedBatch};
+pub use pack::{pack, pack_into, pack_into_indexed, unpack, unpack_into, PackedBatch, SoaLanes};
 pub use shard::{
     pick_chunk_size, pick_chunk_size_fitted, plan_chunk_size, plan_chunk_size_with_model,
     ShardExecutor, ShardReport, ShardStats, ShardedEngine,
 };
+pub use simd::{solve_soa, SimdCpuBackend, LANES, SIMD_LANE_BOOST};
 pub use steal::{CloseGuard, Popped, PopperGuard, StealQueues};
 pub use stream::{run_pipelined, PipelineDepth, PipelineStats, StageWorker};
 

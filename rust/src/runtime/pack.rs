@@ -44,9 +44,157 @@ pub struct PackedBatch {
 }
 
 impl PackedBatch {
+    /// f32 words per packed constraint row (`[nx, ny, b, valid]`).
+    pub const ROW_STRIDE: usize = 4;
+
     /// An empty buffer ready to be filled by [`pack_into`].
     pub fn empty() -> PackedBatch {
         PackedBatch::default()
+    }
+
+    /// f32 words per packed slot in [`PackedBatch::lines`].
+    #[inline]
+    pub fn slot_stride(&self) -> usize {
+        self.m * Self::ROW_STRIDE
+    }
+
+    /// Offset of `slot`'s first constraint row in [`PackedBatch::lines`].
+    #[inline]
+    pub fn slot_offset(&self, slot: usize) -> usize {
+        slot * self.slot_stride()
+    }
+
+    /// `slot`'s constraint rows: `m` packed `[nx, ny, b, valid]` quads.
+    ///
+    /// This (with [`PackedBatch::slot_obj`] and
+    /// [`PackedBatch::slot_valid_rows`]) is the one decode seam both the
+    /// scalar slot solver (`runtime::backend`) and the SoA transpose below
+    /// read, so the wire layout is interpreted in exactly one place.
+    #[inline]
+    pub fn slot_lines(&self, slot: usize) -> &[f32] {
+        let off = self.slot_offset(slot);
+        &self.lines[off..off + self.slot_stride()]
+    }
+
+    /// `slot`'s objective `[cx, cy]`.
+    #[inline]
+    pub fn slot_obj(&self, slot: usize) -> [f32; 2] {
+        [self.obj[slot * 2], self.obj[slot * 2 + 1]]
+    }
+
+    /// Number of valid constraint rows in `slot`. Valid rows are contiguous
+    /// from row 0 (pack layout invariant), so this is the row count both
+    /// the scalar and SoA decode paths stop at.
+    #[inline]
+    pub fn slot_valid_rows(&self, slot: usize) -> usize {
+        let rows = self.slot_lines(slot);
+        let mut k = 0;
+        while k < self.m && rows[k * Self::ROW_STRIDE + 3] >= 0.5 {
+            k += 1;
+        }
+        k
+    }
+}
+
+/// Structure-of-arrays transpose of a [`PackedBatch`] slot range: each
+/// coefficient of constraint row `k` sits contiguously across all lanes
+/// (`nx[k * lane_stride + i]` is lane `i`'s row-`k` normal-x), so one
+/// cache-line load fetches the same coefficient for eight adjacent
+/// problems — the paper's batch-parallel kernel layout, host-side. This is
+/// what the vectorized [`SimdCpuBackend`](crate::runtime::SimdCpuBackend)
+/// kernel streams.
+///
+/// Values are widened to f64 at transpose time so the lane kernel's
+/// arithmetic is bit-identical to the scalar f64 Seidel path reading the
+/// same packed bytes.
+#[derive(Clone, Debug, Default)]
+pub struct SoaLanes {
+    /// Real (unpadded) lane count = transposed slot count.
+    lanes: usize,
+    /// Padded lane count (`lanes` rounded up to the requested multiple):
+    /// the per-row stride of the coefficient arrays.
+    stride: usize,
+    m: usize,
+    /// (m, stride) row-major normal-x lanes.
+    pub nx: Vec<f64>,
+    /// (m, stride) row-major normal-y lanes.
+    pub ny: Vec<f64>,
+    /// (m, stride) row-major offset lanes.
+    pub b: Vec<f64>,
+    /// (stride) objective-x lanes.
+    pub cx: Vec<f64>,
+    /// (stride) objective-y lanes.
+    pub cy: Vec<f64>,
+    /// (stride) valid-row counts per lane; padding lanes carry 0.
+    pub rows: Vec<u32>,
+}
+
+impl SoaLanes {
+    /// Real lane count (transposed slots, excluding padding lanes).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Padded lane count — the row stride of the coefficient arrays.
+    #[inline]
+    pub fn lane_stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Constraint-row capacity per lane (the bucket's `m`).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Transpose packed slots `start..start + lanes` into per-coefficient
+    /// lanes, padding the lane count up to a multiple of `pad_to` with
+    /// vacuous problems (0 valid rows, unit objective) so a vectorized
+    /// kernel can always load full windows. Reuses this buffer's capacity
+    /// (hot path: no allocation in steady state at a fixed bucket shape).
+    pub fn transpose_range(&mut self, pb: &PackedBatch, start: usize, lanes: usize, pad_to: usize) {
+        assert!(
+            start + lanes <= pb.batch,
+            "slot range {start}..{} exceeds batch {}",
+            start + lanes,
+            pb.batch
+        );
+        let pad = pad_to.max(1);
+        let stride = lanes.div_ceil(pad) * pad;
+        self.lanes = lanes;
+        self.stride = stride;
+        self.m = pb.m;
+        self.nx.clear();
+        self.nx.resize(pb.m * stride, 0.0);
+        self.ny.clear();
+        self.ny.resize(pb.m * stride, 0.0);
+        self.b.clear();
+        self.b.resize(pb.m * stride, 0.0);
+        // Padding lanes get the same vacuous problem pack_into_indexed
+        // writes into padding slots: no rows, unit objective.
+        self.cx.clear();
+        self.cx.resize(stride, 1.0);
+        self.cy.clear();
+        self.cy.resize(stride, 0.0);
+        self.rows.clear();
+        self.rows.resize(stride, 0);
+        for i in 0..lanes {
+            let slot = start + i;
+            let valid = pb.slot_valid_rows(slot);
+            self.rows[i] = valid as u32;
+            let [ocx, ocy] = pb.slot_obj(slot);
+            self.cx[i] = ocx as f64;
+            self.cy[i] = ocy as f64;
+            let lines = pb.slot_lines(slot);
+            for k in 0..valid {
+                let src = k * PackedBatch::ROW_STRIDE;
+                let dst = k * stride + i;
+                self.nx[dst] = lines[src] as f64;
+                self.ny[dst] = lines[src + 1] as f64;
+                self.b[dst] = lines[src + 2] as f64;
+            }
+        }
     }
 }
 
@@ -352,6 +500,68 @@ mod tests {
         pack_into(&problems, 8, 8, Some(&mut rng), &mut pb).unwrap();
         assert_eq!(pb.lines.capacity(), cap_lines);
         assert_eq!(pb.obj.capacity(), cap_obj);
+    }
+
+    #[test]
+    fn slot_accessors_match_raw_layout() {
+        let p1 = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0)], [0.0, 1.0]);
+        let p2 = Problem::new(
+            vec![HalfPlane::new(0.0, 1.0, 3.0), HalfPlane::new(-1.0, 0.0, 4.0)],
+            [0.5, -0.5],
+        );
+        let pb = pack(&[p1, p2], 4, 3, None).unwrap();
+        assert_eq!(pb.slot_stride(), 3 * PackedBatch::ROW_STRIDE);
+        assert_eq!(pb.slot_offset(2), 2 * 12);
+        assert_eq!(&pb.slot_lines(0)[0..4], &[1.0, 0.0, 2.0, 1.0]);
+        assert_eq!(&pb.slot_lines(1)[4..8], &[-1.0, 0.0, 4.0, 1.0]);
+        assert_eq!(pb.slot_obj(0), [0.0, 1.0]);
+        assert_eq!(pb.slot_obj(1), [0.5, -0.5]);
+        assert_eq!(pb.slot_valid_rows(0), 1);
+        assert_eq!(pb.slot_valid_rows(1), 2);
+        // Padding slots: no valid rows, unit objective.
+        assert_eq!(pb.slot_valid_rows(3), 0);
+        assert_eq!(pb.slot_obj(3), [1.0, 0.0]);
+    }
+
+    #[test]
+    fn soa_transpose_matches_slot_accessors() {
+        let mut rng = Rng::new(21);
+        let problems: Vec<Problem> = (0..11)
+            .map(|_| gen::feasible(&mut rng, 1 + (rng.next_u64() as usize) % 9))
+            .collect();
+        let mut srng = Rng::new(5);
+        let pb = pack(&problems, 16, 10, Some(&mut srng)).unwrap();
+        let mut soa = SoaLanes::default();
+        // Transpose an interior range with an awkward pad width.
+        soa.transpose_range(&pb, 3, 7, 8);
+        assert_eq!(soa.lanes(), 7);
+        assert_eq!(soa.lane_stride(), 8);
+        assert_eq!(soa.m(), 10);
+        for i in 0..7 {
+            let slot = 3 + i;
+            assert_eq!(soa.rows[i] as usize, pb.slot_valid_rows(slot));
+            let [cx, cy] = pb.slot_obj(slot);
+            assert_eq!(soa.cx[i], cx as f64);
+            assert_eq!(soa.cy[i], cy as f64);
+            let lines = pb.slot_lines(slot);
+            for k in 0..soa.rows[i] as usize {
+                let src = k * PackedBatch::ROW_STRIDE;
+                let dst = k * soa.lane_stride() + i;
+                assert_eq!(soa.nx[dst], lines[src] as f64);
+                assert_eq!(soa.ny[dst], lines[src + 1] as f64);
+                assert_eq!(soa.b[dst], lines[src + 2] as f64);
+            }
+        }
+        // Padding lane: vacuous problem.
+        assert_eq!(soa.rows[7], 0);
+        assert_eq!((soa.cx[7], soa.cy[7]), (1.0, 0.0));
+        // Re-transposing the same shape reuses capacity.
+        let caps = (soa.nx.capacity(), soa.cx.capacity(), soa.rows.capacity());
+        soa.transpose_range(&pb, 0, 8, 8);
+        assert_eq!(
+            (soa.nx.capacity(), soa.cx.capacity(), soa.rows.capacity()),
+            caps
+        );
     }
 
     #[test]

@@ -75,16 +75,17 @@ use std::sync::{mpsc, Arc};
 
 use crate::lp::types::{Problem, Solution};
 use crate::runtime::backend::{batch_ests_ns, build_cost_table, Backend, RawExec};
-use crate::tune::{model_cost_table, model_weights, CostModel};
 use crate::runtime::engine::{Engine, ExecTiming};
 use crate::runtime::manifest::{Bucket, Manifest, Variant};
 use crate::runtime::pack::{pack_into, pack_into_indexed, unpack, PackedBatch};
 use crate::runtime::steal::StealQueues;
 use crate::runtime::stream::PipelineDepth;
+use crate::tune::{model_cost_table, model_weights, CostModel};
 use crate::util::{Rng, Timer};
 
 pub use crate::runtime::backend::Backend as ShardExecutor;
 pub use crate::runtime::backend::{BatchCpuBackend, CpuShardExecutor};
+pub use crate::runtime::simd::SimdCpuBackend;
 
 /// Per-shard accounting for one sharded run.
 #[derive(Clone, Copy, Debug, Default)]

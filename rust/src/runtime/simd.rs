@@ -1,0 +1,469 @@
+//! Vectorized CPU batch solver: the paper's structure-of-arrays kernel
+//! idiom (`python/compile/kernels/rgb.py`) expressed in the Rust hot path.
+//!
+//! # SoA layout
+//!
+//! [`SoaLanes`] (built by `PackedBatch` transpose in [`crate::runtime::pack`])
+//! stores each constraint coefficient contiguously across problems:
+//! `nx[k * stride + i]` is problem `i`'s row-`k` normal-x, so the kernel's
+//! row scan loads one cache line per coefficient for [`LANES`] adjacent
+//! problems. Values are widened to f64 at transpose time; every lane then
+//! performs **exactly** the scalar [`seidel::solve_ordered`] operation
+//! sequence (same expressions, same order, same constants), which is what
+//! makes this backend bit-identical to [`CpuShardExecutor`] /
+//! [`BatchCpuBackend`] and lets heterogeneous shard mixes keep the sharded
+//! driver's bit-identical guarantee.
+//!
+//! # Active-mask contract
+//!
+//! Lanes in a window run in lockstep over the window's maximum row count;
+//! divergence is handled by masks instead of branches (the paper's
+//! divergence-avoidance idiom, §3):
+//!
+//! * a lane is **active** at row `k` only while `k < rows[lane]` — padding
+//!   rows and slots never enter the violation test;
+//! * a lane that goes **infeasible** clears its alive-mask and ignores all
+//!   later rows; its solution slot keeps the scalar path's zeros;
+//! * during a 1-D re-solve, non-violating lanes ride along with their
+//!   state write-protected (masked selects), and divisions are fed a safe
+//!   denominator so masked lanes never produce traps or slow NaN paths;
+//! * the scalar solver breaks out of its clip loop on the first
+//!   infeasibility proof; the vector path lets the doomed lane's interval
+//!   keep clipping, which cannot change the outcome — `bad` is sticky and
+//!   the lane's state is never written again.
+//!
+//! Implementation note: lanes are explicit `[f64; LANES]` chunks (stable
+//! Rust, auto-vectorized) rather than `std::simd`, which is still
+//! nightly-only — this crate builds on the stable toolchain CI pins and
+//! must not grow dependencies. The fixed-width arrays compile to the same
+//! AVX2/NEON code paths.
+
+use crate::lp::types::{EPS, M_BIG};
+use crate::runtime::backend::{ensure_shape, Backend, RawExec};
+use crate::runtime::engine::ExecTiming;
+use crate::runtime::manifest::Bucket;
+use crate::runtime::pack::{PackedBatch, SoaLanes};
+use crate::solvers::seidel::EPS_PAR;
+use crate::util::Timer;
+
+/// Lane width of one vector window: 8 × f64 = one 64-byte cache line per
+/// coefficient row, two AVX2 registers (or four NEON) per operation.
+pub const LANES: usize = 8;
+
+/// Nominal capacity multiplier of the vectorized solver over one scalar
+/// CPU worker. Deliberately below the lane width (masked 1-D re-solves
+/// waste lanes); calibration (`tune`) learns the true skew per class.
+pub const SIMD_LANE_BOOST: f64 = 4.0;
+
+/// Solve every real lane of a transposed batch, writing the kernels' wire
+/// output for lanes `0..status.len()` (`sol` holds `[x, y]` pairs). The
+/// lane count may exceed `status.len()` only by transpose padding.
+pub fn solve_soa(soa: &SoaLanes, sol: &mut [f32], status: &mut [i32]) {
+    let len = status.len();
+    assert_eq!(sol.len(), len * 2, "sol holds one [x, y] pair per status");
+    assert!(len <= soa.lane_stride(), "more outputs than transposed lanes");
+    let mut lane0 = 0;
+    while lane0 < len {
+        solve_window(soa, lane0, sol, status);
+        lane0 += LANES;
+    }
+}
+
+/// Fixed-size window view into a coefficient row (bounds-checked once).
+#[inline(always)]
+fn window(v: &[f64], at: usize) -> &[f64; LANES] {
+    v[at..at + LANES].try_into().unwrap()
+}
+
+/// One lockstep window of [`LANES`] problems: the scalar Seidel pass with
+/// every per-problem scalar replaced by a lane array and every branch by a
+/// masked select.
+fn solve_window(soa: &SoaLanes, lane0: usize, sol: &mut [f32], status: &mut [i32]) {
+    let stride = soa.lane_stride();
+    let rows: &[u32; LANES] = soa.rows[lane0..lane0 + LANES].try_into().unwrap();
+    let cx = window(&soa.cx, lane0);
+    let cy = window(&soa.cy, lane0);
+
+    let mut sx = [0.0f64; LANES];
+    let mut sy = [0.0f64; LANES];
+    for i in 0..LANES {
+        sx[i] = if cx[i] >= 0.0 { M_BIG } else { -M_BIG };
+        sy[i] = if cy[i] >= 0.0 { M_BIG } else { -M_BIG };
+    }
+    let mut alive = [true; LANES];
+    let max_rows = rows.iter().copied().max().unwrap_or(0) as usize;
+
+    for k in 0..max_rows {
+        let base = k * stride + lane0;
+        let nx = window(&soa.nx, base);
+        let ny = window(&soa.ny, base);
+        let b = window(&soa.b, base);
+
+        // Violation scan — the hot, fully-uniform path.
+        let mut viol = [false; LANES];
+        for i in 0..LANES {
+            let act = alive[i] & ((k as u32) < rows[i]);
+            viol[i] = act & !(nx[i] * sx[i] + ny[i] * sy[i] <= b[i] + EPS);
+        }
+        if !viol.iter().any(|&v| v) {
+            continue;
+        }
+
+        // 1-D re-solve on each violating lane's boundary line, in lockstep.
+        let mut den = [0.0f64; LANES];
+        for i in 0..LANES {
+            den[i] = nx[i] * nx[i] + ny[i] * ny[i];
+            // Degenerate all-zero normal: the scalar path ignores the row.
+            viol[i] &= den[i] >= 1e-18;
+        }
+        if !viol.iter().any(|&v| v) {
+            continue;
+        }
+        let mut p0x = [0.0f64; LANES];
+        let mut p0y = [0.0f64; LANES];
+        let mut dx = [0.0f64; LANES];
+        let mut dy = [0.0f64; LANES];
+        for i in 0..LANES {
+            let d = if viol[i] { den[i] } else { 1.0 };
+            p0x[i] = nx[i] * b[i] / d;
+            p0y[i] = ny[i] * b[i] / d;
+            dx[i] = -ny[i];
+            dy[i] = nx[i];
+        }
+        let mut t_lo = [-4.0 * M_BIG; LANES];
+        let mut t_hi = [4.0 * M_BIG; LANES];
+        let mut bad = [false; LANES];
+        // Analytic box clip (same four folds as the scalar pass).
+        let mut ad = [0.0f64; LANES];
+        let mut num = [0.0f64; LANES];
+        for i in 0..LANES {
+            ad[i] = dx[i];
+            num[i] = M_BIG - p0x[i];
+        }
+        clip_lanes(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+        for i in 0..LANES {
+            ad[i] = -dx[i];
+            num[i] = M_BIG + p0x[i];
+        }
+        clip_lanes(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+        for i in 0..LANES {
+            ad[i] = dy[i];
+            num[i] = M_BIG - p0y[i];
+        }
+        clip_lanes(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+        for i in 0..LANES {
+            ad[i] = -dy[i];
+            num[i] = M_BIG + p0y[i];
+        }
+        clip_lanes(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+
+        // All previously considered constraints. A violating lane at row k
+        // has rows[i] > k, so rows 0..k are valid for every masked-in lane.
+        for j in 0..k {
+            let jb = j * stride + lane0;
+            let hnx = window(&soa.nx, jb);
+            let hny = window(&soa.ny, jb);
+            let hb = window(&soa.b, jb);
+            for i in 0..LANES {
+                ad[i] = hnx[i] * dx[i] + hny[i] * dy[i];
+                num[i] = hb[i] - (hnx[i] * p0x[i] + hny[i] * p0y[i]);
+            }
+            clip_lanes(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+            if (0..LANES).all(|i| !viol[i] || bad[i]) {
+                break; // every violating lane already proven infeasible
+            }
+        }
+
+        // Masked state writeback: only violating lanes move.
+        for i in 0..LANES {
+            if !viol[i] {
+                continue;
+            }
+            if bad[i] || t_lo[i] > t_hi[i] + EPS {
+                alive[i] = false;
+                continue;
+            }
+            let cd = cx[i] * dx[i] + cy[i] * dy[i];
+            let t = if cd > 0.0 { t_hi[i] } else { t_lo[i] };
+            sx[i] = p0x[i] + t * dx[i];
+            sy[i] = p0y[i] + t * dy[i];
+        }
+        if !alive.iter().any(|&a| a) {
+            break; // whole window infeasible: nothing left to scan
+        }
+    }
+
+    for i in 0..LANES {
+        let g = lane0 + i;
+        if g >= status.len() {
+            break;
+        }
+        if alive[i] {
+            sol[g * 2] = sx[i] as f32;
+            sol[g * 2 + 1] = sy[i] as f32;
+            status[g] = 0;
+        } else {
+            status[g] = 1; // infeasible: status only, zeros in sol
+        }
+    }
+}
+
+/// Lane-parallel form of the scalar `clip`: fold `t * ad <= num` into each
+/// masked-in lane's `[t_lo, t_hi]`. Branchless selects so the whole body
+/// vectorizes; masked-out lanes are fed a safe denominator and never
+/// written.
+#[inline(always)]
+fn clip_lanes(
+    t_lo: &mut [f64; LANES],
+    t_hi: &mut [f64; LANES],
+    bad: &mut [bool; LANES],
+    ad: &[f64; LANES],
+    num: &[f64; LANES],
+    mask: &[bool; LANES],
+) {
+    for i in 0..LANES {
+        let pos = ad[i] > EPS_PAR;
+        let neg = ad[i] < -EPS_PAR;
+        let q = num[i] / if pos | neg { ad[i] } else { 1.0 };
+        let hi = if pos { t_hi[i].min(q) } else { t_hi[i] };
+        let lo = if neg { t_lo[i].max(q) } else { t_lo[i] };
+        if mask[i] {
+            t_hi[i] = hi;
+            t_lo[i] = lo;
+            bad[i] |= !pos & !neg & (num[i] < -EPS);
+        }
+    }
+}
+
+/// The vectorized multicore backend: splits a batch's occupied slots into
+/// contiguous per-thread ranges (like [`BatchCpuBackend`]), and each worker
+/// transposes its range to [`SoaLanes`] and runs [`solve_soa`] over it.
+/// Lanes are fully independent, so output bytes are identical to
+/// [`CpuShardExecutor`] for any thread count or chunking — the backend
+/// drops into heterogeneous shard mixes without weakening the determinism
+/// contract.
+///
+/// [`BatchCpuBackend`]: crate::runtime::backend::BatchCpuBackend
+/// [`CpuShardExecutor`]: crate::runtime::backend::CpuShardExecutor
+pub struct SimdCpuBackend {
+    threads: usize,
+    /// Per-worker transpose buffers, reused across calls (steady state at a
+    /// fixed bucket shape allocates nothing).
+    scratch: Vec<SoaLanes>,
+}
+
+impl SimdCpuBackend {
+    pub fn new(threads: usize) -> SimdCpuBackend {
+        SimdCpuBackend { threads: threads.max(1), scratch: Vec::new() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for SimdCpuBackend {
+    fn default() -> Self {
+        SimdCpuBackend::new(crate::solvers::batch_cpu::default_threads())
+    }
+}
+
+impl Backend for SimdCpuBackend {
+    fn name(&self) -> &'static str {
+        "simd-cpu"
+    }
+
+    fn capacity_weight(&self) -> f64 {
+        self.threads as f64 * SIMD_LANE_BOOST
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        ensure_shape(bucket, pb)?;
+        let t = Timer::start();
+        let used = pb.used;
+        let mut sol = vec![0.0f32; used * 2];
+        let mut status = vec![0i32; used];
+        let threads = self.threads.min(used.max(1));
+        if self.scratch.len() < threads {
+            self.scratch.resize_with(threads, SoaLanes::default);
+        }
+        if threads <= 1 {
+            let soa = &mut self.scratch[0];
+            soa.transpose_range(pb, 0, used, LANES);
+            solve_soa(soa, &mut sol, &mut status);
+        } else {
+            let chunk = used.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for ((w, (sol_c, status_c)), soa) in sol
+                    .chunks_mut(chunk * 2)
+                    .zip(status.chunks_mut(chunk))
+                    .enumerate()
+                    .zip(self.scratch.iter_mut())
+                {
+                    scope.spawn(move || {
+                        soa.transpose_range(pb, w * chunk, status_c.len(), LANES);
+                        solve_soa(soa, sol_c, status_c);
+                    });
+                }
+            });
+        }
+        let execute_ns = t.elapsed_ns();
+        let timing = ExecTiming {
+            execute_ns,
+            critical_path_ns: execute_ns,
+            ..ExecTiming::default()
+        };
+        Ok((sol, status, timing))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::lp::brute;
+    use crate::lp::types::{HalfPlane, Problem, Status};
+    use crate::lp::validate::{agree, Tolerance};
+    use crate::runtime::backend::{BatchCpuBackend, CpuShardExecutor};
+    use crate::runtime::manifest::Variant;
+    use crate::runtime::pack;
+    use crate::util::Rng;
+    use std::path::PathBuf;
+
+    fn bucket(batch: usize, m: usize) -> Bucket {
+        Bucket {
+            variant: Variant::Rgb,
+            batch,
+            m,
+            block_b: batch,
+            chunk: m,
+            path: PathBuf::from("test"),
+        }
+    }
+
+    /// Mixed-size feasible problems with infeasible slabs sprinkled in, so
+    /// windows carry dead lanes mid-chunk.
+    fn mixed_packed(n: usize, m_max: usize, batch: usize, m: usize, seed: u64) -> PackedBatch {
+        let mut rng = Rng::new(seed);
+        let problems: Vec<Problem> = (0..n)
+            .map(|i| {
+                if i % 5 == 3 {
+                    // Infeasible slab plus noise rows.
+                    let mut p = gen::feasible(&mut rng, (m_max / 2).max(1));
+                    p.constraints.push(HalfPlane::new(1.0, 0.0, -1.0));
+                    p.constraints.push(HalfPlane::new(-1.0, 0.0, -1.0));
+                    p
+                } else {
+                    let pm = 1 + (rng.next_u64() as usize) % m_max;
+                    gen::feasible(&mut rng, pm)
+                }
+            })
+            .collect();
+        let mut srng = Rng::new(seed ^ 0xABCD);
+        pack::pack(&problems, batch, m, Some(&mut srng)).unwrap()
+    }
+
+    #[test]
+    fn simd_matches_cpu_shard_executor_bitwise() {
+        let b = bucket(64, 16);
+        let pb = mixed_packed(50, 13, 64, 16, 7);
+        let (want_sol, want_status, _) = CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+        assert!(want_status.contains(&1), "seed must cover infeasible lanes");
+        for threads in [1usize, 2, 3, 7, 64] {
+            let (sol, status, _) = SimdCpuBackend::new(threads).execute_raw(&b, &pb).unwrap();
+            let same = sol.iter().zip(&want_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+            assert!(same, "threads={threads} diverged from the scalar slot solve");
+            assert_eq!(status, want_status, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn simd_matches_batch_cpu_across_shapes() {
+        for (n, m_max, batch, m, seed) in
+            [(1, 4, 8, 8, 1u64), (9, 10, 16, 12, 2), (120, 30, 128, 32, 3), (64, 16, 64, 16, 4)]
+        {
+            let b = bucket(batch, m);
+            let pb = mixed_packed(n, m_max, batch, m, seed);
+            let (want_sol, want_status, _) =
+                BatchCpuBackend::new(3).execute_raw(&b, &pb).unwrap();
+            let (sol, status, _) = SimdCpuBackend::new(2).execute_raw(&b, &pb).unwrap();
+            let same = sol.iter().zip(&want_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+            assert!(same, "shape ({batch},{m}) diverged");
+            assert_eq!(status, want_status, "shape ({batch},{m})");
+        }
+    }
+
+    #[test]
+    fn simd_solves_correctly_vs_brute() {
+        let mut rng = Rng::new(11);
+        let problems: Vec<Problem> = (0..40).map(|_| gen::feasible(&mut rng, 12)).collect();
+        let mut srng = Rng::new(3);
+        let pb = pack::pack(&problems, 64, 16, Some(&mut srng)).unwrap();
+        let b = bucket(64, 16);
+        let (sol, status, timing) = SimdCpuBackend::new(4).execute_raw(&b, &pb).unwrap();
+        assert!(timing.execute_ns > 0);
+        let decoded = pack::unpack(&sol, &status, pb.used).unwrap();
+        for (p, s) in problems.iter().zip(&decoded) {
+            let want = brute::solve(p);
+            assert_eq!(s.status, want.status);
+            assert!(agree(p, s, &want, Tolerance::default()), "{s:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn infeasible_mid_window_leaves_neighbors_exact() {
+        // One window: lanes 0..8, with lanes 2 and 5 infeasible. The dead
+        // lanes must report status 1 with zeroed solutions and must not
+        // perturb any neighbor bit.
+        let mut rng = Rng::new(42);
+        let problems: Vec<Problem> = (0..8)
+            .map(|i| {
+                if i == 2 || i == 5 {
+                    Problem::new(
+                        vec![HalfPlane::new(1.0, 0.0, -1.0), HalfPlane::new(-1.0, 0.0, -1.0)],
+                        [0.0, 1.0],
+                    )
+                } else {
+                    gen::feasible(&mut rng, 6)
+                }
+            })
+            .collect();
+        let mut srng = Rng::new(9);
+        let pb = pack::pack(&problems, 8, 8, Some(&mut srng)).unwrap();
+        let b = bucket(8, 8);
+        let (want_sol, want_status, _) = CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+        let (sol, status, _) = SimdCpuBackend::new(1).execute_raw(&b, &pb).unwrap();
+        assert_eq!(status, want_status);
+        assert_eq!(status[2], 1);
+        assert_eq!(status[5], 1);
+        assert_eq!((sol[4], sol[5], sol[10], sol[11]), (0.0, 0.0, 0.0, 0.0));
+        let same = sol.iter().zip(&want_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+        assert!(same, "scalar/simd divergence around dead lanes");
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let pb = mixed_packed(4, 6, 8, 8, 5);
+        assert!(SimdCpuBackend::new(2).execute_raw(&bucket(8, 16), &pb).is_err());
+        assert!(SimdCpuBackend::new(2).execute_raw(&bucket(16, 8), &pb).is_err());
+    }
+
+    #[test]
+    fn weight_sits_above_batch_cpu() {
+        let simd = SimdCpuBackend::new(4);
+        let batch = BatchCpuBackend::new(4);
+        assert_eq!(simd.name(), "simd-cpu");
+        assert!(simd.capacity_weight() > batch.capacity_weight());
+        assert!(!simd.executes_padding(), "padding lanes are masked, not paid for");
+        let b = bucket(128, 64);
+        assert!(simd.cost_ns(&b) < batch.cost_ns(&b));
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let pb = pack::pack::<Problem>(&[], 8, 8, None).unwrap();
+        let (sol, status, _) = SimdCpuBackend::new(4).execute_raw(&bucket(8, 8), &pb).unwrap();
+        assert!(sol.is_empty());
+        assert!(status.is_empty());
+    }
+}

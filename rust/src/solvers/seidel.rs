@@ -12,8 +12,10 @@
 use crate::lp::types::{Problem, Solution, EPS, M_BIG};
 use crate::util::Rng;
 
-/// Parallel-line threshold for unit-ish normals.
-const EPS_PAR: f64 = 1e-9;
+/// Parallel-line threshold for unit-ish normals. Public because the
+/// vectorized lane kernel (`runtime::simd`) replicates this solver's exact
+/// arithmetic and must share its constants to stay bit-identical.
+pub const EPS_PAR: f64 = 1e-9;
 
 /// Per-solve statistics (used by the imbalance experiment, Fig 1/2).
 #[derive(Clone, Copy, Debug, Default)]

@@ -39,6 +39,6 @@ pub mod refine;
 pub use model::{model_cost_table, model_weights, CalibratedModel, CostModel, NominalModel};
 pub use profile::{
     fit_linear, nominal_per_problem_ns, profile_backend, validate_fit, AccuracyRow, BackendFit,
-    ClassFit, Profile, ProfilerOpts, TUNE_SCHEMA,
+    ClassFit, Observation, Profile, ProfilerOpts, TUNE_SCHEMA,
 };
 pub use refine::{Refined, Refiner, REFINE_EWMA_ALPHA, REFINE_MAX_AGE};

@@ -82,9 +82,74 @@ pub struct BackendFit {
     pub classes: Vec<ClassFit>,
 }
 
+/// One aggregate cost observation from a live serving source — the
+/// loadgen harness's per-class execute accounting
+/// ([`crate::bench::loadgen::class_observations`]), fed back into the
+/// offline grid fit as a second observation stream: `problems` occupied
+/// slots of `class_m` cost `busy_ns` of execute-side time across
+/// `samples` batch executions. An aggregate cannot separate the intercept,
+/// so its per-problem rate folds per-batch setup in — which is exactly
+/// the steady-state serving cost the dispatch weights should track.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Observation {
+    pub class_m: usize,
+    /// Occupied slots behind the observation (not padded capacity).
+    pub problems: usize,
+    /// Total execute-side busy time attributed to them, nanoseconds.
+    pub busy_ns: f64,
+    /// Batch executions behind the aggregate — the blend weight, in the
+    /// same unit as [`ClassFit::points`] (one batch ≈ one grid point).
+    pub samples: usize,
+}
+
+impl Observation {
+    /// Mean cost per occupied slot (setup amortized in).
+    pub fn per_problem_ns(&self) -> f64 {
+        self.busy_ns / self.problems.max(1) as f64
+    }
+}
+
 impl BackendFit {
     pub fn class(&self, class_m: usize) -> Option<&ClassFit> {
         self.classes.iter().find(|c| c.class_m == class_m)
+    }
+
+    /// Blend live observations into the fitted classes, sample-count
+    /// weighted: a fit backed by `points` grid measurements meeting an
+    /// observation backed by `samples` batches moves
+    /// `samples / (points + samples)` of the way toward the observed
+    /// rate. `setup_ns` stays from the offline fit (aggregates cannot
+    /// separate the intercept); classes the grid never profiled are
+    /// created from the observation alone via [`fit_linear`]. Empty or
+    /// zero-cost observations are dropped, never fitted.
+    pub fn absorb(&mut self, observations: &[Observation]) {
+        for obs in observations {
+            if obs.problems == 0 || !(obs.busy_ns > 0.0) {
+                continue;
+            }
+            let samples = obs.samples.max(1);
+            match self.classes.iter_mut().find(|c| c.class_m == obs.class_m) {
+                Some(c) => {
+                    let n0 = c.points.max(1) as f64;
+                    let n1 = samples as f64;
+                    c.per_problem_ns = ((c.per_problem_ns * n0 + obs.per_problem_ns() * n1)
+                        / (n0 + n1))
+                        .max(1e-9);
+                    c.points += samples;
+                }
+                None => {
+                    let (setup_ns, per_problem_ns) =
+                        fit_linear(&[(obs.problems, obs.busy_ns)]);
+                    self.classes.push(ClassFit {
+                        class_m: obs.class_m,
+                        setup_ns,
+                        per_problem_ns,
+                        points: samples,
+                    });
+                    self.classes.sort_by_key(|c| c.class_m);
+                }
+            }
+        }
     }
 
     /// Mean calibrated weight across the backend's fitted classes (the
@@ -123,6 +188,27 @@ impl Profile {
         }
         self.backends
             .sort_by(|a, b| (&a.backend, a.variant).cmp(&(&b.backend, b.variant)));
+    }
+
+    /// Feed live observations into one backend's fit (creating an
+    /// observation-only fit when the backend was never grid-profiled) —
+    /// the loadgen → profiler bridge.
+    pub fn absorb(&mut self, key: &str, variant: Variant, observations: &[Observation]) {
+        match self
+            .backends
+            .iter_mut()
+            .find(|b| b.backend == key && b.variant == variant)
+        {
+            Some(b) => b.absorb(observations),
+            None => {
+                let mut fit =
+                    BackendFit { backend: key.to_string(), variant, classes: Vec::new() };
+                fit.absorb(observations);
+                if !fit.classes.is_empty() {
+                    self.upsert(fit);
+                }
+            }
+        }
     }
 
     /// Merge another profile in: its backends replace same-keyed ours.
@@ -518,6 +604,65 @@ mod tests {
         merged.merge(update);
         assert_eq!(merged.backend("cpu", Variant::Rgb).unwrap().classes.len(), 1);
         assert!(merged.backend("batch-cpu:2", Variant::Rgb).is_some());
+    }
+
+    #[test]
+    fn absorb_observations_shift_the_fit() {
+        let mut fit = BackendFit {
+            backend: "simd-cpu:4".into(),
+            variant: Variant::Rgb,
+            classes: vec![ClassFit {
+                class_m: 16,
+                setup_ns: 100.0,
+                per_problem_ns: 600.0,
+                points: 3,
+            }],
+        };
+        // One serving batch measured at 1000 ns/problem against a 3-point
+        // grid fit at 600: the blend moves 1/4 of the way.
+        fit.absorb(&[Observation { class_m: 16, problems: 10, busy_ns: 10_000.0, samples: 1 }]);
+        let c = *fit.class(16).unwrap();
+        assert!((c.per_problem_ns - 700.0).abs() < 1e-9, "rate {}", c.per_problem_ns);
+        assert_eq!(c.points, 4);
+        assert_eq!(c.setup_ns, 100.0, "intercept kept from the offline fit");
+        // A heavily sampled serving aggregate dominates the grid fit.
+        fit.absorb(&[Observation {
+            class_m: 16,
+            problems: 1_000,
+            busy_ns: 200_000.0,
+            samples: 396,
+        }]);
+        let c = *fit.class(16).unwrap();
+        assert!((c.per_problem_ns - 205.0).abs() < 1e-9, "rate {}", c.per_problem_ns);
+        // Classes the grid never profiled are created from the
+        // observation alone (single-point fit: zero setup, mean rate).
+        fit.absorb(&[Observation { class_m: 64, problems: 8, busy_ns: 16_000.0, samples: 2 }]);
+        let c64 = *fit.class(64).unwrap();
+        assert_eq!(c64.setup_ns, 0.0);
+        assert!((c64.per_problem_ns - 2_000.0).abs() < 1e-9);
+        assert_eq!(c64.points, 2);
+        assert_eq!(fit.classes[0].class_m, 16, "classes stay sorted");
+        // Zero-work observations never touch the fit.
+        let before = fit.clone();
+        fit.absorb(&[Observation { class_m: 16, problems: 0, busy_ns: 0.0, samples: 5 }]);
+        assert_eq!(fit, before);
+
+        // Profile-level absorb creates a missing backend fit.
+        let mut p = Profile::default();
+        p.absorb(
+            "cpu",
+            Variant::Rgb,
+            &[Observation { class_m: 16, problems: 4, busy_ns: 4_000.0, samples: 1 }],
+        );
+        let created = p.backend("cpu", Variant::Rgb).unwrap().class(16).unwrap();
+        assert!((created.per_problem_ns - 1_000.0).abs() < 1e-9);
+        // But an all-empty observation set creates nothing.
+        p.absorb(
+            "engine",
+            Variant::Rgb,
+            &[Observation { class_m: 16, problems: 0, busy_ns: 0.0, samples: 1 }],
+        );
+        assert!(p.backend("engine", Variant::Rgb).is_none());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::brute;
 use batch_lp2d::lp::types::Status;
 use batch_lp2d::lp::validate::{agree, Tolerance};
-use batch_lp2d::runtime::{PipelineDepth, Variant};
+use batch_lp2d::runtime::{PipelineDepth, Variant, SIMD_LANE_BOOST};
 use batch_lp2d::util::Rng;
 
 mod common;
@@ -178,7 +178,7 @@ fn heterogeneous_cpu_service_serves_without_artifacts() {
         max_wait: Duration::from_millis(1),
         backends: vec![
             BackendSpec::BatchCpu { threads: 2 },
-            BackendSpec::Cpu,
+            BackendSpec::SimdCpu { threads: 2 },
             BackendSpec::Cpu,
         ],
         depth: PipelineDepth::new(3),
@@ -186,7 +186,7 @@ fn heterogeneous_cpu_service_serves_without_artifacts() {
     };
     let svc = Service::start("definitely-missing-artifact-dir", config)
         .expect("CPU-only service must start without artifacts");
-    assert_eq!(svc.shard_backends(), &["batch-cpu", "cpu-seidel", "cpu-seidel"]);
+    assert_eq!(svc.shard_backends(), &["batch-cpu", "simd-cpu", "cpu-seidel"]);
 
     let mut rng = Rng::new(9);
     let problems = trace::mixed_size_batch(&mut rng, 300, 2, 60);
@@ -207,7 +207,9 @@ fn heterogeneous_cpu_service_serves_without_artifacts() {
     // Heterogeneous pre-sizing: every configured shard reports a row with
     // its capacity weight, hit or not.
     assert!((snap.per_shard[0].weight - 2.0).abs() < 1e-9);
-    assert!((snap.per_shard[1].weight - 1.0).abs() < 1e-9);
+    // The vectorized shard advertises the lane boost over its thread count.
+    assert!((snap.per_shard[1].weight - 2.0 * SIMD_LANE_BOOST).abs() < 1e-9);
+    assert!((snap.per_shard[2].weight - 1.0).abs() < 1e-9);
     // Per-problem conservation across the mixed shard set.
     assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), 300);
     svc.shutdown();

@@ -13,12 +13,12 @@ use batch_lp2d::coordinator::admission::{
 use batch_lp2d::coordinator::router::Router;
 use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::brute;
-use batch_lp2d::lp::types::{Problem, Solution, Status};
+use batch_lp2d::lp::types::{HalfPlane, Problem, Solution, Status};
 use batch_lp2d::lp::validate::{agree, Tolerance};
 use batch_lp2d::runtime::manifest::{Manifest, Variant};
 use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::shard::{
-    BatchCpuBackend, CpuShardExecutor, ShardExecutor, ShardedEngine,
+    BatchCpuBackend, CpuShardExecutor, ShardExecutor, ShardedEngine, SimdCpuBackend,
 };
 use batch_lp2d::runtime::PipelineDepth;
 use batch_lp2d::tune::{BackendFit, CalibratedModel, ClassFit, NominalModel, Profile};
@@ -543,6 +543,82 @@ fn prop_heterogeneous_stealing_solve_all_bit_identical() {
                 let stolen: usize = report.per_shard.iter().map(|s| s.steals).sum();
                 let chunks: usize = report.per_shard.iter().map(|s| s.chunks).sum();
                 assert!(stolen <= chunks, "more steals than chunks");
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        bit_identical(a, b),
+                        "shards={shards} depth={depth} problem {i} (m={}): {a:?} vs {b:?}",
+                        problems[i].m()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simd_bit_identical() {
+    // SimdCpuBackend satellite: random MIXED simd-cpu + batch-cpu + cpu
+    // shard sets must reproduce the serial Seidel slot solve bit for bit
+    // (one f64 numeric path end to end — results AND statuses), swept over
+    // shards 1-4 x depth 2-4. Workloads deliberately include infeasible
+    // problems and near-unconstrained ("unbounded", box-corner) problems
+    // so lanes die or finish early mid-window and the active masks, not
+    // luck, carry the equivalence.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t8\t16\t8\t16\ta\n\
+                rgb\t32\t16\t8\t16\tb\n\
+                rgb\t8\t64\t8\t64\tc\n\
+                rgb\t32\t64\t8\t64\td\n\
+                rgb\t256\t64\t8\t64\te\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    check("simd lane equivalence", 10, |rng| {
+        let n = rng.range_usize(1, 120);
+        let mut problems: Vec<Problem> = trace::mixed_size_batch(rng, n, 2, 60);
+        let mut injected = Vec::new();
+        for (i, p) in problems.iter_mut().enumerate() {
+            if i % 7 == 3 {
+                // Contradictory slab on top of the existing rows (m stays
+                // <= 62, inside the m=64 bucket class): the lane must go
+                // infeasible partway through its window.
+                p.constraints.push(HalfPlane::new(1.0, 0.0, -1.0));
+                p.constraints.push(HalfPlane::new(-1.0, 0.0, -1.0));
+                injected.push(i);
+            }
+        }
+        let seed = rng.next_u64();
+
+        // Single-executor serial reference: the scalar Seidel slot solve.
+        let mut reference =
+            ShardedEngine::from_executors(manifest.clone(), vec![CpuShardExecutor]).unwrap();
+        let mut r = Rng::new(seed);
+        let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+        // The injected problems really are dead lanes, so the sweep below
+        // exercises mid-window infeasibility and not just happy paths.
+        for &i in &injected {
+            assert_eq!(want[i].status, Status::Infeasible, "injected slab {i}");
+        }
+
+        for shards in 1..=4usize {
+            for depth in 2..=4usize {
+                // Rotate all three CPU backend kinds across the shard set,
+                // simd first so every mix contains vectorized lanes.
+                let executors: Vec<Box<dyn ShardExecutor>> = (0..shards)
+                    .map(|s| -> Box<dyn ShardExecutor> {
+                        match s % 3 {
+                            0 => Box::new(SimdCpuBackend::new(1 + s)),
+                            1 => Box::new(BatchCpuBackend::new(1 + s)),
+                            _ => Box::new(CpuShardExecutor),
+                        }
+                    })
+                    .collect();
+                let mut se = ShardedEngine::from_executors(manifest.clone(), executors)
+                    .unwrap()
+                    .with_depth(PipelineDepth::new(depth));
+                let mut r = Rng::new(seed);
+                let (got, report) =
+                    se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+                assert_eq!(got.len(), n, "shards={shards} depth={depth} lost solutions");
+                assert_eq!(report.problems(), n);
                 for (i, (a, b)) in want.iter().zip(&got).enumerate() {
                     assert!(
                         bit_identical(a, b),
