@@ -30,8 +30,9 @@
 //!   is shed bulk-before-interactive with typed error replies.
 //! * `--slo-ms MS` sets the interactive SLO (`--bulk-slo-ms` the bulk
 //!   bound, default 8x).
-//! * `--scenario poisson|bursty|diurnal|heavy-tail|flood|sim` swaps the
-//!   default Poisson trace for one of the scenario-diverse load models.
+//! * `--scenario poisson|bursty|diurnal|heavy-tail|flood|sim|trace:PATH`
+//!   swaps the default Poisson trace for one of the scenario-diverse load
+//!   models, or deterministically replays a captured trace fixture.
 //! * `--tune-profile TUNE_profile.json` calibrates dispatch, the adaptive
 //!   close's cost model, and the steal estimates from measured backend
 //!   costs (write the profile with `batch-lp2d tune`); the per-shard
@@ -39,6 +40,9 @@
 //! * `--class-overrides '16:slo-ms=1;64:max-batch=128'` sets per-size-class
 //!   batch caps and SLO bounds (conflicting overrides are a typed startup
 //!   error).
+//! * `--capture PATH` records the admitted request stream (arrival time,
+//!   deadline class, size class, payload seed) to a schema-versioned trace
+//!   fixture; replay it deterministically with `--scenario trace:PATH`.
 //!
 //! The report prints e2e latency percentiles, the queue-wait vs
 //! execute-time split, close-reason counts, shed counts per deadline
@@ -71,6 +75,7 @@ fn main() -> anyhow::Result<()> {
     let mut scenario: Option<Scenario> = None;
     let mut tune_profile: Option<std::path::PathBuf> = None;
     let mut class_overrides: Vec<ClassOverride> = Vec::new();
+    let mut capture_path: Option<std::path::PathBuf> = None;
     let mut positional = 0usize;
     let mut i = 0usize;
     while i < args.len() {
@@ -116,6 +121,9 @@ fn main() -> anyhow::Result<()> {
                 Some(s) => ClassOverride::parse_list(s)?,
                 None => Vec::new(),
             };
+        } else if args[i] == "--capture" {
+            i += 1;
+            capture_path = args.get(i).map(std::path::PathBuf::from);
         } else {
             match positional {
                 0 => requests = args[i].parse().unwrap_or(requests),
@@ -132,6 +140,7 @@ fn main() -> anyhow::Result<()> {
     let bulk_slo_ms = if bulk_slo_ms == 0 { slo_ms * 8 } else { bulk_slo_ms };
 
     let calibrated = tune_profile.is_some();
+    let capture = capture_path.as_ref().map(|_| batch_lp2d::trace::TraceCapture::new());
     let config = Config {
         max_wait: Duration::from_millis(slo_ms),
         bulk_wait: Duration::from_millis(bulk_slo_ms),
@@ -142,6 +151,7 @@ fn main() -> anyhow::Result<()> {
         depth,
         tune_profile,
         class_overrides,
+        capture: capture.clone(),
         ..Config::default()
     };
     let service = Service::start(batch_lp2d::runtime::default_artifact_dir(), config)?;
@@ -160,7 +170,7 @@ fn main() -> anyhow::Result<()> {
     let reqs: Vec<ScenarioRequest> = match scenario {
         Some(sc) => {
             println!("scenario: {}", sc.name());
-            sc.generate(&mut rng, requests, rate)
+            sc.generate(&mut rng, requests, rate)?
         }
         None => {
             let tp = TraceParams { rate, m_lo: 6, m_hi: 64, infeasible_frac: 0.03 };
@@ -296,6 +306,16 @@ fn main() -> anyhow::Result<()> {
         );
     }
     service.shutdown();
+    if let (Some(cap), Some(path)) = (&capture, &capture_path) {
+        cap.save(path)?;
+        println!(
+            "  captured {} request(s) -> {} (schema v{}; replay with --scenario trace:{})",
+            cap.len(),
+            path.display(),
+            batch_lp2d::trace::TRACE_SCHEMA,
+            path.display()
+        );
+    }
     println!("serve OK");
     Ok(())
 }

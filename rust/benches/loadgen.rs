@@ -6,17 +6,22 @@
 //!
 //! ```sh
 //! cargo bench --bench loadgen -- \
-//!     [--scenario poisson,bursty,... | all] [--requests N] [--rate R] \
-//!     [--shards N] [--backends LIST] [--depth D] \
+//!     [--scenario poisson,bursty,...,trace:PATH | all] [--requests N] \
+//!     [--rate R] [--shards N] [--backends LIST] [--depth D] \
 //!     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS] \
-//!     [--bulk-slo-ms MS]
+//!     [--bulk-slo-ms MS] [--gate-p99-ms MS] [--gate-shed N]
 //! ```
 //!
 //! Defaults run every scenario on a portable CPU-only heterogeneous shard
-//! mix (no artifacts needed). Results go three places: stdout (markdown
-//! table), `LOADGEN_table.md` (the CI artifact), and `BENCH_pipeline.json`
-//! (merged alongside the solver_micro records for the perf gate).
-//! `BATCH_LP2D_BENCH_FAST=1` shrinks the request counts for CI.
+//! mix (no artifacts needed). `--scenario trace:PATH` replays a captured
+//! trace fixture (see `serve --capture`) deterministically. Results go
+//! three places: stdout (markdown table), `LOADGEN_table.md` (the CI
+//! artifact), and `BENCH_pipeline.json` (merged alongside the solver_micro
+//! records for the perf gate). `--gate-p99-ms` / `--gate-shed` turn the
+//! run into a pass/fail gate: any scenario whose e2e p99 or shed count
+//! exceeds the bound fails the bench with a nonzero exit (the CI trace leg
+//! gates replayed fixtures this way). `BATCH_LP2D_BENCH_FAST=1` shrinks
+//! the request counts for CI.
 
 use std::time::Duration;
 
@@ -36,6 +41,8 @@ fn main() -> anyhow::Result<()> {
         ..LoadgenOpts::default()
     };
     let mut shards = 0usize;
+    let mut gate_p99_ms: Option<f64> = None;
+    let mut gate_shed: Option<usize> = None;
 
     let mut i = 0usize;
     while i < args.len() {
@@ -79,6 +86,12 @@ fn main() -> anyhow::Result<()> {
                 if let Some(ms) = value().and_then(|v| v.parse().ok()) {
                     opts.bulk_slo = Duration::from_millis(ms);
                 }
+            }
+            "--gate-p99-ms" => {
+                gate_p99_ms = value().and_then(|v| v.parse().ok());
+            }
+            "--gate-shed" => {
+                gate_shed = value().and_then(|v| v.parse().ok());
             }
             // cargo bench passes through its own flags (e.g. --bench);
             // ignore anything unrecognized rather than failing the run.
@@ -140,6 +153,39 @@ fn main() -> anyhow::Result<()> {
     match absorb_into_profile(std::path::Path::new("TUNE_profile.json"), &mix, &reports)? {
         Some(n) => println!("absorbed {n} serving observation(s) into TUNE_profile.json"),
         None => println!("heterogeneous mix: serving observations not attributed to a backend"),
+    }
+
+    // Replay gate: bound the tail and the shed count per scenario. The
+    // artifacts above are written first so a failing run still uploads
+    // them for inspection.
+    if gate_p99_ms.is_some() || gate_shed.is_some() {
+        let mut violations = Vec::new();
+        for r in &reports {
+            if let Some(bound) = gate_p99_ms {
+                if r.p99_ms > bound {
+                    violations.push(format!(
+                        "{}: p99 {:.3} ms > {bound:.3} ms",
+                        r.scenario, r.p99_ms
+                    ));
+                }
+            }
+            if let Some(bound) = gate_shed {
+                if r.shed() > bound {
+                    violations.push(format!("{}: shed {} > {bound}", r.scenario, r.shed()));
+                }
+            }
+        }
+        anyhow::ensure!(
+            violations.is_empty(),
+            "loadgen gate FAILED:\n  {}",
+            violations.join("\n  ")
+        );
+        println!(
+            "gate OK: {} scenario(s) within p99 {} / shed {}",
+            reports.len(),
+            gate_p99_ms.map_or("-".to_string(), |b| format!("{b:.0} ms")),
+            gate_shed.map_or("-".to_string(), |b| b.to_string())
+        );
     }
     Ok(())
 }

@@ -401,8 +401,9 @@ pub fn fig_loadgen(artifact_dir: &std::path::Path, requests: usize) -> anyhow::R
     let opts = LoadgenOpts { requests, ..LoadgenOpts::default() };
     let mut reports = Vec::new();
     for sc in Scenario::ALL {
+        let name = sc.name();
         reports.push(run_scenario(artifact_dir, sc, &opts)?);
-        eprintln!("  {} done", sc.name());
+        eprintln!("  {name} done");
     }
     Ok(table(&reports))
 }

@@ -131,7 +131,7 @@ pub fn run_scenario(
     let service = Service::start(artifact_dir, config)?;
 
     let mut rng = Rng::new(opts.seed);
-    let reqs = scenario.generate(&mut rng, opts.requests, opts.rate);
+    let reqs = scenario.generate(&mut rng, opts.requests, opts.rate)?;
 
     // Collector thread waits tickets concurrently with the driver so the
     // measured latency is (completion - submission), not (drive end - t).
@@ -465,6 +465,7 @@ mod tests {
                 // Pre-sized zero row: no traffic, no observation.
                 ClassPadding { class_m: 256, ..Default::default() },
             ],
+            queue_depths: Vec::new(),
         };
         let obs = class_observations(&snap);
         assert_eq!(obs.len(), 2, "silent classes yield nothing: {obs:?}");

@@ -351,6 +351,19 @@ impl<T> AdmissionPipeline<T> {
         self.queued_total == 0
     }
 
+    /// Live depth of every (size class × deadline class) queue, one
+    /// `(class_m, interactive, bulk)` row per size class in ascending
+    /// class order — the dispatcher publishes this gauge to the metrics
+    /// after each poll pass so the dashboard can show the backlog the
+    /// close policy actually saw.
+    pub fn queue_depths(&self) -> Vec<(usize, usize, usize)> {
+        self.classes
+            .iter()
+            .zip(&self.queues)
+            .map(|(&class_m, q)| (class_m, q[0].entries.len(), q[1].entries.len()))
+            .collect()
+    }
+
     /// Queue an item of size class `class_m` with `rows` true constraint
     /// rows. Returns the closed batch if this push filled the class, plus
     /// anything the bounded-queue policy shed to admit it.
@@ -667,6 +680,22 @@ mod tests {
         assert_eq!(ready.rows_used, 42);
         assert_eq!(ready.waits.len(), 4);
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn queue_depths_report_per_class_per_deadline() {
+        let mut p = pipeline(fixed());
+        let t = Instant::now();
+        assert_eq!(p.queue_depths(), vec![(16, 0, 0), (64, 0, 0)]);
+        p.push(16, DeadlineClass::Interactive, 1, 8, t);
+        p.push(16, DeadlineClass::Interactive, 2, 8, t);
+        p.push(16, DeadlineClass::Bulk, 3, 8, t);
+        p.push(64, DeadlineClass::Bulk, 4, 40, t);
+        assert_eq!(p.queue_depths(), vec![(16, 2, 1), (64, 0, 1)]);
+        // Draining a queue is reflected in the gauge.
+        let ready = p.poll(t + Duration::from_secs(1), 0);
+        assert!(!ready.is_empty());
+        assert_eq!(p.queue_depths(), vec![(16, 0, 0), (64, 0, 0)]);
     }
 
     #[test]

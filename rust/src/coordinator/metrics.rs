@@ -36,6 +36,26 @@ struct Inner {
     per_shard: Vec<ShardLoad>,
     /// Per-size-class padding accounting, sorted by `class_m`.
     padding: Vec<ClassPadding>,
+    /// Live admission-queue depths, one row per size class (a gauge: the
+    /// dispatcher overwrites it each pass).
+    queue_depths: Vec<QueueDepth>,
+}
+
+/// Live depth of one size class's admission queues, split by deadline
+/// class — the dashboard's backlog view. A gauge, not a counter: each
+/// dispatcher pass replaces the whole table via
+/// [`Metrics::set_queue_depths`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueDepth {
+    pub class_m: usize,
+    pub interactive: usize,
+    pub bulk: usize,
+}
+
+impl QueueDepth {
+    pub fn total(&self) -> usize {
+        self.interactive + self.bulk
+    }
 }
 
 /// How often each close-policy rule fired — the observable trace of the
@@ -190,6 +210,9 @@ pub struct Snapshot {
     pub per_shard: Vec<ShardLoad>,
     /// Per-size-class padding-waste gauges, sorted by class m.
     pub padding: Vec<ClassPadding>,
+    /// Live per-(size class × deadline class) admission-queue depths, as
+    /// of the dispatcher's latest pass (empty until the service publishes).
+    pub queue_depths: Vec<QueueDepth>,
 }
 
 impl Metrics {
@@ -263,6 +286,18 @@ impl Metrics {
     /// Record the service's staged-queue (pipeline ring) depth.
     pub fn set_pipeline_depth(&self, depth: usize) {
         self.inner.lock().unwrap().pipeline_depth = depth;
+    }
+
+    /// Publish the live admission-queue depth gauge: one
+    /// `(class_m, interactive, bulk)` row per size class, replacing the
+    /// previous table. The dispatcher calls this after every poll pass so
+    /// the dashboard sees the backlog as the close policy saw it.
+    pub fn set_queue_depths(&self, depths: &[(usize, usize, usize)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_depths.clear();
+        for &(class_m, interactive, bulk) in depths {
+            g.queue_depths.push(QueueDepth { class_m, interactive, bulk });
+        }
     }
 
     pub fn on_reject(&self) {
@@ -372,6 +407,7 @@ impl Metrics {
             timing: g.exec_timing,
             per_shard: g.per_shard.clone(),
             padding: g.padding.clone(),
+            queue_depths: g.queue_depths.clone(),
         }
     }
 }
@@ -592,5 +628,17 @@ mod tests {
         let m = Metrics::new();
         m.on_reject();
         assert_eq!(m.snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn queue_depth_gauge_replaces_not_accumulates() {
+        let m = Metrics::new();
+        assert!(m.snapshot().queue_depths.is_empty());
+        m.set_queue_depths(&[(16, 3, 1), (64, 0, 2)]);
+        m.set_queue_depths(&[(16, 5, 0), (64, 1, 1)]);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depths.len(), 2);
+        assert_eq!(s.queue_depths[0], QueueDepth { class_m: 16, interactive: 5, bulk: 0 });
+        assert_eq!(s.queue_depths[1].total(), 2);
     }
 }

@@ -41,7 +41,7 @@ pub use admission::{
     AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, CloseReason,
     DeadlineClass, ReadyBatch, RejectReason,
 };
-pub use metrics::{ClassPadding, CloseCounts, Metrics, ShardLoad, Snapshot};
+pub use metrics::{ClassPadding, CloseCounts, Metrics, QueueDepth, ShardLoad, Snapshot};
 pub use router::Router;
 pub use service::{
     class_cost_table, validate_class_overrides, BackendSpec, ClassOverride, Config, ConfigError,

@@ -65,6 +65,7 @@ use crate::runtime::simd::SimdCpuBackend;
 use crate::runtime::steal::StealQueues;
 use crate::runtime::stream::PipelineDepth;
 use crate::runtime::{Bucket, Engine, Manifest, Variant};
+use crate::trace::TraceCapture;
 use crate::tune::{model_weights, CalibratedModel, CostModel, NominalModel, Profile};
 use crate::util::Rng;
 
@@ -385,6 +386,12 @@ pub struct Config {
     pub warm: bool,
     /// Seed for the per-problem constraint shuffles.
     pub seed: u64,
+    /// Recording tap on the admission path: every successfully routed
+    /// submit appends one event (arrival offset, deadline class, size
+    /// class, payload seed) to this shared capture, which the caller
+    /// saves as a replayable `TRACE_*.json` fixture after the run
+    /// (`serve --capture PATH`). None = no recording overhead.
+    pub capture: Option<TraceCapture>,
 }
 
 impl Default for Config {
@@ -405,6 +412,7 @@ impl Default for Config {
             queue_depth: 8192,
             warm: true,
             seed: 0x5EED,
+            capture: None,
         }
     }
 }
@@ -519,6 +527,7 @@ pub struct Service {
     metrics: Arc<Metrics>,
     model: Arc<CalibratedModel>,
     backend_names: Vec<&'static str>,
+    capture: Option<TraceCapture>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     executors: Vec<std::thread::JoinHandle<()>>,
 }
@@ -902,6 +911,9 @@ impl Service {
                     for ready in admission.poll(Instant::now(), idle_shards()) {
                         dispatch(ready);
                     }
+                    // Publish the backlog gauge as this pass left it — the
+                    // dashboard's per-(size × deadline) class queue view.
+                    metrics.set_queue_depths(&admission.queue_depths());
                 }
                 // Drain on shutdown.
                 for ready in admission.flush(Instant::now()) {
@@ -917,6 +929,7 @@ impl Service {
             metrics,
             model,
             backend_names,
+            capture: config.capture,
             dispatcher: Some(dispatcher),
             executors,
         })
@@ -950,12 +963,20 @@ impl Service {
             });
         };
         let (reply, rx) = mpsc::channel();
+        // Stamp the trace event before the problem moves into the pending
+        // reply; record it only once the submit has actually landed (a
+        // Closed service must not appear in a fixture, mirroring the
+        // submit counter below).
+        let captured = self.capture.as_ref().map(|c| c.event_for(&problem, class));
         self.tx
             .send(Msg::Request(class_m, class, Pending { problem, reply }))
             .map_err(|_| SubmitError::Closed)?;
         // Count only after the send succeeded: a Closed service must not
         // inflate the submit counter.
         self.metrics.on_submit();
+        if let (Some(cap), Some(ev)) = (&self.capture, captured) {
+            cap.push(ev);
+        }
         Ok(Ticket { rx })
     }
 

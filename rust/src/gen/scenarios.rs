@@ -3,8 +3,8 @@
 //! The paper's workloads are static batches; `trace.rs` generalized them
 //! to one Poisson stream. A serving system that must hold latency SLOs
 //! needs adversarial *shapes* of load, not just one rate — so this module
-//! models six open-loop traffic scenarios, each an arrival-timed stream of
-//! ([`ScenarioRequest`]) problems tagged with a deadline class:
+//! models seven open-loop traffic scenarios, each an arrival-timed stream
+//! of ([`ScenarioRequest`]) problems tagged with a deadline class:
 //!
 //! * [`Scenario::Poisson`]   — memoryless arrivals, log-uniform sizes
 //!   (the baseline `trace.rs` shape).
@@ -24,9 +24,14 @@
 //!   simulation ([`crate::sim::World`]): each step's per-agent avoidance
 //!   LPs arrive as one burst, so sizes and correlations follow the
 //!   simulation's dynamics instead of a closed-form distribution.
+//! * [`Scenario::Trace`]     — `trace:PATH`: deterministic replay of a
+//!   captured `TRACE_*.json` fixture ([`mod@crate::trace::replay`]); arrival
+//!   stamps and classes come from the records, payloads regenerate from
+//!   per-record seeds, so a live run re-runs bit-identically.
 //!
 //! Generation is deterministic in the [`Rng`] seed, like everything else
-//! in the workload layer.
+//! in the workload layer (trace replay does not consume the shared seed
+//! at all — its determinism is anchored in the fixture).
 
 use crate::coordinator::DeadlineClass;
 use crate::lp::types::Problem;
@@ -43,7 +48,7 @@ pub struct ScenarioRequest {
 }
 
 /// An open-loop traffic model.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Scenario {
     Poisson,
     Bursty,
@@ -51,10 +56,14 @@ pub enum Scenario {
     HeavyTail,
     Flood,
     Sim,
+    /// Deterministic replay of a captured `TRACE_*.json` fixture
+    /// (`trace:PATH` on the CLI); see [`crate::trace`].
+    Trace(std::path::PathBuf),
 }
 
 impl Scenario {
-    /// Every scenario, in reporting order.
+    /// Every synthetic scenario, in reporting order (trace replay needs a
+    /// fixture path, so it only enters via `parse`).
     pub const ALL: [Scenario; 6] = [
         Scenario::Poisson,
         Scenario::Bursty,
@@ -72,10 +81,15 @@ impl Scenario {
             "heavy-tail" | "heavytail" => Ok(Scenario::HeavyTail),
             "flood" => Ok(Scenario::Flood),
             "sim" => Ok(Scenario::Sim),
-            other => anyhow::bail!(
-                "unknown scenario '{other}' \
-                 (poisson|bursty|diurnal|heavy-tail|flood|sim)"
-            ),
+            other => match other.strip_prefix("trace:") {
+                Some(path) if !path.trim().is_empty() => {
+                    Ok(Scenario::Trace(std::path::PathBuf::from(path.trim())))
+                }
+                _ => anyhow::bail!(
+                    "unknown scenario '{other}' \
+                     (poisson|bursty|diurnal|heavy-tail|flood|sim|trace:PATH)"
+                ),
+            },
         }
     }
 
@@ -95,20 +109,34 @@ impl Scenario {
             Scenario::HeavyTail => "heavy-tail",
             Scenario::Flood => "flood",
             Scenario::Sim => "sim",
+            Scenario::Trace(_) => "trace",
         }
     }
 
     /// Generate `n` requests around a base arrival rate (requests/second).
-    pub fn generate(&self, rng: &mut Rng, n: usize, rate: f64) -> Vec<ScenarioRequest> {
+    /// Synthetic scenarios cannot fail; trace replay surfaces fixture load
+    /// errors (missing file, schema mismatch) — loudly, never a fallback
+    /// to synthetic load. Replay ignores `rate` (arrival stamps come from
+    /// the fixture) and caps at the fixture length.
+    pub fn generate(
+        &self,
+        rng: &mut Rng,
+        n: usize,
+        rate: f64,
+    ) -> anyhow::Result<Vec<ScenarioRequest>> {
+        if let Scenario::Trace(path) = self {
+            return crate::trace::replay_file(path, n);
+        }
         assert!(rate > 0.0, "rate must be positive");
-        match self {
+        Ok(match self {
             Scenario::Poisson => poisson(rng, n, rate),
             Scenario::Bursty => bursty(rng, n, rate),
             Scenario::Diurnal => diurnal(rng, n, rate),
             Scenario::HeavyTail => heavy_tail(rng, n, rate),
             Scenario::Flood => flood(rng, n, rate),
             Scenario::Sim => sim_clearance(rng, n, rate),
-        }
+            Scenario::Trace(_) => unreachable!("handled above"),
+        })
     }
 }
 
@@ -281,7 +309,7 @@ mod tests {
     fn all_scenarios_generate_n_monotonic_requests() {
         for sc in Scenario::ALL {
             let mut rng = Rng::new(0xC0FFEE);
-            let reqs = sc.generate(&mut rng, 300, 5_000.0);
+            let reqs = sc.generate(&mut rng, 300, 5_000.0).unwrap();
             assert_eq!(reqs.len(), 300, "{}", sc.name());
             assert!(monotonic(&reqs), "{} arrivals not monotonic", sc.name());
             assert!(
@@ -297,8 +325,8 @@ mod tests {
         for sc in Scenario::ALL {
             let mut a = Rng::new(7);
             let mut b = Rng::new(7);
-            let ra = sc.generate(&mut a, 100, 2_000.0);
-            let rb = sc.generate(&mut b, 100, 2_000.0);
+            let ra = sc.generate(&mut a, 100, 2_000.0).unwrap();
+            let rb = sc.generate(&mut b, 100, 2_000.0).unwrap();
             assert!(
                 ra.iter().zip(&rb).all(|(x, y)| {
                     x.at_ns == y.at_ns && x.class == y.class && x.problem == y.problem
@@ -307,6 +335,24 @@ mod tests {
                 sc.name()
             );
         }
+    }
+
+    #[test]
+    fn trace_scenario_parses_with_a_fixture_path() {
+        match Scenario::parse("trace:fixtures/TRACE_reference.json").unwrap() {
+            Scenario::Trace(p) => {
+                assert_eq!(p, std::path::PathBuf::from("fixtures/TRACE_reference.json"));
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        assert_eq!(Scenario::parse("trace:x.json").unwrap().name(), "trace");
+        assert!(Scenario::parse("trace:").is_err(), "empty path must fail");
+        // A missing fixture fails loudly at generate, never falls back.
+        let mut rng = Rng::new(1);
+        assert!(Scenario::parse("trace:/no/such/file.json")
+            .unwrap()
+            .generate(&mut rng, 10, 1_000.0)
+            .is_err());
     }
 
     #[test]

@@ -95,5 +95,6 @@ pub mod lp;
 pub mod runtime;
 pub mod sim;
 pub mod solvers;
+pub mod trace;
 pub mod tune;
 pub mod util;

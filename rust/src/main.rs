@@ -32,6 +32,7 @@ use batch_lp2d::lp::types::Status;
 use batch_lp2d::runtime::{Engine, PipelineDepth, Variant};
 use batch_lp2d::sim::{Backend, World, WorldParams};
 use batch_lp2d::solvers::batch_cpu::{self, Algo};
+use batch_lp2d::trace::{render_frame, TraceCapture, CLEAR, TRACE_SCHEMA};
 use batch_lp2d::util::{Rng, Timer};
 
 fn main() {
@@ -73,19 +74,25 @@ fn print_help() {
            serve    --requests 6000 [--rate 2000] [--max-wait-ms 2] [--shards 1]\n\
                     [--depth 2] [--backends engine,cpu,batch-cpu:N,simd-cpu:N]\n\
                     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]\n\
-                    [--bulk-slo-ms MS] [--scenario poisson|bursty|...]\n\
+                    [--bulk-slo-ms MS] [--scenario poisson|bursty|...|trace:PATH]\n\
                     [--tune-profile TUNE_profile.json]\n\
                     [--class-overrides '16:slo-ms=1;64:max-batch=128']\n\
+                    [--capture TRACE_run.json] [--tui] [--tui-frame]\n\
                                         run the coordinator under open-loop load\n\
                                         (--backends mixes shard types; CPU-only\n\
                                         mixes serve without artifacts; --policy\n\
                                         picks the admission batch-close policy,\n\
                                         --max-queue bounds queueing with load\n\
                                         shedding, --slo-ms sets the interactive\n\
-                                        SLO, --scenario picks a traffic model,\n\
-                                        --tune-profile calibrates dispatch from\n\
-                                        measured costs, --class-overrides sets\n\
-                                        per-size-class max-batch/SLO bounds)\n\
+                                        SLO, --scenario picks a traffic model or\n\
+                                        replays a captured trace, --tune-profile\n\
+                                        calibrates dispatch from measured costs,\n\
+                                        --class-overrides sets per-size-class\n\
+                                        max-batch/SLO bounds, --capture records\n\
+                                        admitted traffic to a replayable trace\n\
+                                        fixture, --tui renders a live terminal\n\
+                                        dashboard, --tui-frame dumps one final\n\
+                                        dashboard frame after the run)\n\
            tune     [--backends cpu,batch-cpu:4,simd-cpu:4] [--out TUNE_profile.json]\n\
                     [--runs 3] [--max-batch 512] [--variant rgb]\n\
                                         profile each backend kind over the\n\
@@ -223,6 +230,10 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         Some(s) => batch_lp2d::coordinator::ClassOverride::parse_list(s)?,
         None => Vec::new(),
     };
+    let capture_path = flags.get("capture").map(std::path::PathBuf::from);
+    let capture = capture_path.as_ref().map(|_| TraceCapture::new());
+    let tui = flags.contains_key("tui");
+    let tui_frame = flags.contains_key("tui-frame");
 
     let config = Config {
         max_wait: std::time::Duration::from_millis(slo_ms),
@@ -234,15 +245,38 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         depth: PipelineDepth::new(depth),
         tune_profile,
         class_overrides,
+        capture: capture.clone(),
         ..Config::default()
     };
     let service = Service::start(artifact_dir(flags), config)?;
 
-    // Traffic: a named scenario (mixed deadline classes), or the classic
-    // interactive-only Poisson trace.
+    // Live dashboard: a refresher thread over the shared metrics handle,
+    // stopped (and joined) before the plain-text report prints.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let tui_thread = if tui {
+        let metrics = service.metrics_shared();
+        let names = service.shard_backends().to_vec();
+        let stop = stop.clone();
+        Some(std::thread::spawn(move || {
+            use std::io::Write as _;
+            let t0 = std::time::Instant::now();
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let frame =
+                    render_frame(&metrics.snapshot(), &names, t0.elapsed().as_secs_f64());
+                print!("{CLEAR}{frame}");
+                let _ = std::io::stdout().flush();
+                std::thread::sleep(std::time::Duration::from_millis(250));
+            }
+        }))
+    } else {
+        None
+    };
+
+    // Traffic: a named scenario (mixed deadline classes, or a trace:PATH
+    // replay), or the classic interactive-only Poisson trace.
     let mut rng = Rng::new(seed);
     let reqs: Vec<gen::scenarios::ScenarioRequest> = match flags.get("scenario") {
-        Some(name) => gen::scenarios::Scenario::parse(name)?.generate(&mut rng, requests, rate),
+        Some(name) => gen::scenarios::Scenario::parse(name)?.generate(&mut rng, requests, rate)?,
         None => {
             let tp = trace::TraceParams { rate, m_lo: 8, m_hi: 64, infeasible_frac: 0.02 };
             trace::poisson_trace(&mut rng, requests, tp)
@@ -288,7 +322,15 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         }
     }
     let wall_s = t0.elapsed_ns() as f64 / 1e9;
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(handle) = tui_thread {
+        let _ = handle.join();
+    }
     let snap = service.metrics().snapshot();
+    if tui_frame {
+        let names = service.shard_backends().to_vec();
+        println!("{}", render_frame(&snap, &names, wall_s));
+    }
     println!(
         "done in {wall_s:.2}s -> {:.0} solved LPs/s",
         (requests - shed) as f64 / wall_s
@@ -346,6 +388,16 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         );
     }
     service.shutdown();
+    if let (Some(cap), Some(path)) = (&capture, &capture_path) {
+        cap.save(path)?;
+        println!(
+            "captured {} request(s) -> {} (schema v{TRACE_SCHEMA}; replay with \
+             --scenario trace:{})",
+            cap.len(),
+            path.display(),
+            path.display()
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,347 @@
+//! Trace capture: record a live request stream into a schema-versioned
+//! `TRACE_*.json` fixture.
+//!
+//! A [`TraceCapture`] is a cloneable tap installed on the admission path
+//! (`Config::capture`): every successfully routed submit appends one
+//! [`TraceEvent`] — arrival offset from capture start, deadline class,
+//! size class, and a payload seed hashed from the problem content. The
+//! captured [`Trace`] persists through the same flat-JSON machinery as
+//! `TUNE_profile.json` ([`crate::util::flatjson`]), with a [`TRACE_SCHEMA`]
+//! header record whose parse-refuses-mismatch semantics mirror
+//! [`crate::tune::TUNE_SCHEMA`]: a stale or truncated fixture fails loudly
+//! at load, never silently replays the wrong workload.
+//!
+//! Payloads are *not* stored verbatim: each record carries a 32-bit seed
+//! (FNV-1a over the constraint and objective bits, masked so the value
+//! survives the flat-JSON f64 number path exactly), and replay regenerates
+//! a problem of the recorded size and feasibility from that seed — so a
+//! fixture is a few KB regardless of traffic volume, and two replays of
+//! the same fixture are bit-identical (see [`mod@crate::trace::replay`]).
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::DeadlineClass;
+use crate::lp::types::Problem;
+use crate::util::flatjson::{extract_num, extract_str, render_array, split_flat_objects};
+
+/// Fixture schema version. Bump on any incompatible record change; the
+/// parser refuses mismatches (mirroring [`crate::tune::TUNE_SCHEMA`]).
+pub const TRACE_SCHEMA: u32 = 1;
+
+/// One captured request: everything replay needs to regenerate it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Arrival offset from capture start, nanoseconds.
+    pub at_ns: u64,
+    /// Deadline class the request was submitted under.
+    pub class: DeadlineClass,
+    /// Size class: the problem's constraint count.
+    pub m: usize,
+    /// Payload seed (32-bit, f64-exact through the JSON number path);
+    /// replay regenerates the problem from `Rng::new(seed)`.
+    pub seed: u64,
+    /// Whether the payload carried the contradicting-slab infeasible
+    /// construction, so replay regenerates an infeasible problem.
+    pub infeasible: bool,
+}
+
+/// A captured request stream, in arrival order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a `TRACE_*.json` text. Refuses missing or mismatched schema
+    /// headers and incomplete records — a stale fixture must fail loudly,
+    /// not replay a misread workload.
+    pub fn parse(text: &str) -> anyhow::Result<Trace> {
+        let objs = split_flat_objects(text);
+        let header_schema = objs
+            .iter()
+            .find_map(|o| extract_num(o, "trace_schema"))
+            .ok_or_else(|| anyhow::anyhow!("trace has no trace_schema header"))?;
+        anyhow::ensure!(
+            header_schema as u32 == TRACE_SCHEMA,
+            "trace schema {} != supported {TRACE_SCHEMA} (re-capture the fixture)",
+            header_schema
+        );
+        let mut events = Vec::new();
+        for obj in &objs {
+            // Only the header/comment object lacks an arrival stamp; any
+            // record that carries one must be complete.
+            let Some(at_ns) = extract_num(obj, "at_ns") else {
+                continue;
+            };
+            let Some(class) = extract_str(obj, "class") else {
+                anyhow::bail!("trace record at {at_ns}ns lacks a deadline class");
+            };
+            let class = match class.as_str() {
+                "interactive" => DeadlineClass::Interactive,
+                "bulk" => DeadlineClass::Bulk,
+                other => anyhow::bail!("trace record at {at_ns}ns: unknown class '{other}'"),
+            };
+            let (Some(m), Some(seed), Some(infeasible)) = (
+                extract_num(obj, "m"),
+                extract_num(obj, "seed"),
+                extract_num(obj, "infeasible"),
+            ) else {
+                anyhow::bail!("trace record at {at_ns}ns lacks m/seed/infeasible");
+            };
+            events.push(TraceEvent {
+                at_ns: at_ns as u64,
+                class,
+                m: m as usize,
+                seed: seed as u64,
+                infeasible: infeasible != 0.0,
+            });
+        }
+        Ok(Trace { events })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("trace {}: {e}", path.display()))
+    }
+
+    /// Render the schema header + one flat record per captured request.
+    /// Deterministic: the same trace always renders the same bytes, so
+    /// save → load → save is byte-identical.
+    pub fn render(&self) -> String {
+        let mut bodies = vec![format!(
+            "{{\n  \"trace_schema\": {TRACE_SCHEMA},\n  \"_comment\": \"Captured request \
+             stream (arrival offset, deadline class, size class, payload seed) recorded by \
+             serve --capture PATH. Replay deterministically with --scenario trace:PATH on \
+             serve or the loadgen bench; payloads regenerate from the per-record seed.\"\n}}"
+        )];
+        for ev in &self.events {
+            bodies.push(format!(
+                "{{\n  \"at_ns\": {},\n  \"class\": \"{}\",\n  \"m\": {},\n  \
+                 \"seed\": {},\n  \"infeasible\": {}\n}}",
+                ev.at_ns,
+                ev.class.as_str(),
+                ev.m,
+                ev.seed,
+                u8::from(ev.infeasible)
+            ));
+        }
+        render_array(&bodies)
+    }
+
+    /// Write the trace to `path`. A trace is one run's stream (unlike the
+    /// keyed tune profile there is nothing to merge), but the write is
+    /// still idempotent: saving the same trace twice changes nothing.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.render())
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+    }
+}
+
+/// Cloneable recording tap for the admission path. All clones share one
+/// event buffer and one capture-start instant, so the handle stored in
+/// `Config::capture` and the one the CLI saves from see the same stream.
+#[derive(Clone, Debug)]
+pub struct TraceCapture {
+    started: Instant,
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+impl TraceCapture {
+    /// Start a capture; arrival offsets are measured from this call.
+    pub fn new() -> TraceCapture {
+        TraceCapture { started: Instant::now(), events: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// Build the event for a request without recording it yet. The service
+    /// stamps the event before the problem moves into the reply channel,
+    /// then [`TraceCapture::push`]es it only once the submit succeeded.
+    pub fn event_for(&self, problem: &Problem, class: DeadlineClass) -> TraceEvent {
+        TraceEvent {
+            at_ns: self.started.elapsed().as_nanos() as u64,
+            class,
+            m: problem.m(),
+            seed: payload_seed(problem),
+            infeasible: slab_infeasible(problem),
+        }
+    }
+
+    pub fn push(&self, event: TraceEvent) {
+        self.events.lock().unwrap().push(event);
+    }
+
+    /// Stamp and record one request ([`event_for`](Self::event_for) +
+    /// [`push`](Self::push)).
+    pub fn record(&self, problem: &Problem, class: DeadlineClass) {
+        self.push(self.event_for(problem, class));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot the captured stream so far.
+    pub fn trace(&self) -> Trace {
+        Trace { events: self.events.lock().unwrap().clone() }
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.trace().save(path)
+    }
+}
+
+impl Default for TraceCapture {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Content hash of a problem's constraints and objective (FNV-1a over the
+/// f64 bit patterns), masked to 32 bits so the seed survives the
+/// flat-JSON f64 number path exactly.
+pub fn payload_seed(problem: &Problem) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: f64| {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for c in &problem.constraints {
+        mix(c.nx);
+        mix(c.ny);
+        mix(c.b);
+    }
+    mix(problem.obj[0]);
+    mix(problem.obj[1]);
+    h & 0xFFFF_FFFF
+}
+
+/// Detect the workload generator's infeasible construction: its last two
+/// constraints are a contradicting slab — exactly negated normals, both
+/// with offset -1 ([`crate::gen::infeasible`]). A randomly drawn feasible
+/// problem hits that exact bit pattern with probability ~0.
+pub fn slab_infeasible(problem: &Problem) -> bool {
+    let cs = &problem.constraints;
+    let n = cs.len();
+    if n < 2 {
+        return false;
+    }
+    let (a, b) = (&cs[n - 2], &cs[n - 1]);
+    a.b == -1.0 && b.b == -1.0 && a.nx == -b.nx && a.ny == -b.ny
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::Rng;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            events: vec![
+                TraceEvent {
+                    at_ns: 1_000,
+                    class: DeadlineClass::Interactive,
+                    m: 16,
+                    seed: 0xDEAD_BEEF,
+                    infeasible: false,
+                },
+                TraceEvent {
+                    at_ns: 52_000,
+                    class: DeadlineClass::Bulk,
+                    m: 64,
+                    seed: 7,
+                    infeasible: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let trace = sample_trace();
+        let parsed = Trace::parse(&trace.render()).unwrap();
+        assert_eq!(parsed, trace);
+        // Deterministic render: save -> load -> save is byte-identical.
+        assert_eq!(parsed.render(), trace.render());
+    }
+
+    #[test]
+    fn parse_rejects_missing_or_wrong_schema() {
+        assert!(Trace::parse("[\n{\n  \"at_ns\": 5\n}\n]").is_err(), "no header");
+        let wrong = "[\n{\n  \"trace_schema\": 999\n}\n]";
+        let err = Trace::parse(wrong).unwrap_err().to_string();
+        assert!(err.contains("999"), "{err}");
+        let incomplete = "[\n{\n  \"trace_schema\": 1\n},\n{\n  \"at_ns\": 5\n}\n]";
+        assert!(Trace::parse(incomplete).is_err(), "incomplete record must fail");
+        let bad_class = "[\n{\n  \"trace_schema\": 1\n},\n{\n  \"at_ns\": 5,\n  \
+                         \"class\": \"urgent\",\n  \"m\": 8,\n  \"seed\": 1,\n  \
+                         \"infeasible\": 0\n}\n]";
+        assert!(Trace::parse(bad_class).is_err(), "unknown class must fail");
+    }
+
+    #[test]
+    fn save_load_is_idempotent() {
+        let dir = std::env::temp_dir().join(format!("trace_save_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("TRACE_test.json");
+        let trace = sample_trace();
+        trace.save(&path).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded, trace);
+        loaded.save(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), first);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn capture_records_shape_class_and_feasibility() {
+        let mut rng = Rng::new(42);
+        let cap = TraceCapture::new();
+        let p1 = gen::feasible(&mut rng, 16);
+        let p2 = gen::infeasible(&mut rng, 32);
+        cap.record(&p1, DeadlineClass::Interactive);
+        cap.record(&p2, DeadlineClass::Bulk);
+        let trace = cap.trace();
+        assert_eq!(cap.len(), 2);
+        assert_eq!(trace.events[0].m, 16);
+        assert!(!trace.events[0].infeasible);
+        assert_eq!(trace.events[0].class, DeadlineClass::Interactive);
+        assert_eq!(trace.events[1].m, 32);
+        assert!(trace.events[1].infeasible);
+        assert!(trace.events[0].at_ns <= trace.events[1].at_ns);
+        // Clones share the buffer: the tap the service holds and the
+        // handle the CLI saves from see the same stream.
+        let clone = cap.clone();
+        clone.record(&p1, DeadlineClass::Interactive);
+        assert_eq!(cap.len(), 3);
+    }
+
+    #[test]
+    fn payload_seed_is_stable_content_addressed_and_32bit() {
+        let mut rng = Rng::new(9);
+        let a = gen::feasible(&mut rng, 12);
+        let b = gen::feasible(&mut rng, 12);
+        assert_eq!(payload_seed(&a), payload_seed(&a));
+        assert_ne!(payload_seed(&a), payload_seed(&b));
+        assert!(payload_seed(&a) <= u64::from(u32::MAX));
+        assert!(!slab_infeasible(&a));
+        assert!(slab_infeasible(&gen::infeasible(&mut rng, 8)));
+    }
+}

@@ -1,0 +1,24 @@
+//! Trace capture/replay + the live ops dashboard: the observability
+//! layer that makes a serving run reproducible and watchable.
+//!
+//! * [`capture`]   -- [`TraceCapture`], the cloneable recording tap the
+//!   service installs on the admission path (`Config::capture`), and
+//!   [`Trace`], the schema-versioned `TRACE_*.json` fixture format
+//!   ([`TRACE_SCHEMA`], parse-refuses-mismatch like the tune profile).
+//! * [`replay`](mod@replay) -- deterministic fixture replay, registered as the
+//!   seventh traffic scenario (`--scenario trace:PATH`): two replays of
+//!   one fixture are bit-identical, so a captured flood becomes a CI
+//!   regression gate instead of an anecdote.
+//! * [`dashboard`] -- `serve --tui`: a dependency-light ANSI dashboard
+//!   rendering the live [`crate::coordinator::Snapshot`] (per-shard
+//!   load/weights/steals, per-(size × deadline) class queue depths,
+//!   close reasons, shed counts, latency split) via the pure
+//!   [`render_frame`]; `--tui-frame` dumps one escape-free frame for CI.
+
+pub mod capture;
+pub mod dashboard;
+pub mod replay;
+
+pub use capture::{payload_seed, slab_infeasible, Trace, TraceCapture, TraceEvent, TRACE_SCHEMA};
+pub use dashboard::{render_frame, CLEAR};
+pub use replay::{replay, replay_file};

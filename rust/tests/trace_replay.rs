@@ -1,0 +1,130 @@
+//! Trace round-trip acceptance tests — all engine-free (CPU backends), so
+//! none of these ever skip:
+//!
+//! * the committed reference fixture loads, and two replays of it produce
+//!   bit-identical request streams (the determinism the CI trace leg and
+//!   the loadgen gate rely on);
+//! * driving the replayed stream through a CPU service twice yields the
+//!   same replies in the same submit order — replay determinism survives
+//!   the full admission/dispatch/reassembly path;
+//! * a schema-mismatched or truncated fixture fails loudly at load, both
+//!   directly and through the `trace:PATH` scenario.
+
+mod common;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use batch_lp2d::coordinator::{BackendSpec, ClosePolicy, Config, DeadlineClass, Service};
+use batch_lp2d::gen::scenarios::{Scenario, ScenarioRequest};
+use batch_lp2d::lp::types::Solution;
+use batch_lp2d::trace::{replay, replay_file, slab_infeasible, Trace, TRACE_SCHEMA};
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures/TRACE_reference.json")
+}
+
+fn streams_identical(a: &[ScenarioRequest], b: &[ScenarioRequest]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.at_ns == y.at_ns && x.class == y.class && x.problem == y.problem
+        })
+}
+
+#[test]
+fn committed_fixture_replays_bit_identically() {
+    let trace = Trace::load(&fixture_path()).expect("committed fixture must load");
+    assert_eq!(trace.len(), 48, "reference fixture is 48 records");
+    assert!(
+        trace.events.iter().any(|e| e.class == DeadlineClass::Bulk)
+            && trace.events.iter().any(|e| e.class == DeadlineClass::Interactive),
+        "fixture mixes deadline classes"
+    );
+    assert!(trace.events.iter().any(|e| e.infeasible), "fixture carries infeasible payloads");
+
+    let a = replay(&trace, 0);
+    let b = replay_file(&fixture_path(), 0).unwrap();
+    assert_eq!(a.len(), 48);
+    assert!(streams_identical(&a, &b), "two replays must be bit-identical");
+    // Regenerated payloads honour the recorded size and feasibility bit.
+    for (req, ev) in a.iter().zip(&trace.events) {
+        assert_eq!(req.problem.m(), ev.m.max(2));
+        assert_eq!(slab_infeasible(&req.problem), ev.infeasible);
+    }
+
+    // The same stream is reachable through the scenario seam the serve
+    // CLI and the loadgen bench use (the replay ignores the caller rng).
+    let sc = Scenario::parse(&format!("trace:{}", fixture_path().display())).unwrap();
+    let mut rng = batch_lp2d::util::Rng::new(0xFEED);
+    let c = sc.generate(&mut rng, 0, 9_999.0).unwrap();
+    assert!(streams_identical(&a, &c), "scenario replay must match direct replay");
+}
+
+#[test]
+fn replayed_stream_yields_identical_replies_in_submit_order() {
+    // Drive the replayed fixture through a real CPU service twice; the
+    // replies collected in submit order must match exactly. Batching
+    // composition may differ between runs (timing), but per-problem
+    // results and input-order reassembly must not.
+    let run = || -> Vec<Solution> {
+        let config = Config {
+            policy: ClosePolicy::Fixed,
+            max_wait: Duration::from_millis(50),
+            bulk_wait: Duration::from_millis(200),
+            backends: vec![BackendSpec::Cpu],
+            max_batch: Some(8),
+            ..Config::default()
+        };
+        let svc = Service::start("definitely-missing-artifact-dir", config).expect("service");
+        let reqs = replay_file(&fixture_path(), 0).unwrap();
+        let tickets: Vec<_> = reqs
+            .into_iter()
+            .map(|r| svc.submit_with_class(r.problem, r.class).expect("submit"))
+            .collect();
+        let solutions: Vec<Solution> = tickets
+            .into_iter()
+            .map(|t| t.wait_timeout(Duration::from_secs(30)).expect("solved"))
+            .collect();
+        svc.shutdown();
+        solutions
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first.len(), 48);
+    for (i, (a, b)) in first.iter().zip(&second).enumerate() {
+        assert!(
+            common::bit_identical(a, b),
+            "reply {i} diverged between replays: {:?} vs {:?}",
+            a.status,
+            b.status
+        );
+    }
+}
+
+#[test]
+fn stale_or_truncated_fixture_fails_loudly() {
+    let dir = std::env::temp_dir().join(format!("trace_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Wrong schema version: refused with a message naming both versions.
+    let stale = dir.join("TRACE_stale.json");
+    std::fs::write(&stale, "[\n{\n  \"trace_schema\": 999\n}\n]\n").unwrap();
+    let err = format!("{:#}", Trace::load(&stale).unwrap_err());
+    assert!(err.contains("999") && err.contains(&TRACE_SCHEMA.to_string()), "{err}");
+
+    // The same failure surfaces through the scenario seam the CLIs use.
+    let sc = Scenario::parse(&format!("trace:{}", stale.display())).unwrap();
+    let mut rng = batch_lp2d::util::Rng::new(1);
+    assert!(sc.generate(&mut rng, 0, 1_000.0).is_err());
+
+    // A truncated record (schema header fine) must also refuse.
+    let truncated = dir.join("TRACE_truncated.json");
+    std::fs::write(
+        &truncated,
+        "[\n{\n  \"trace_schema\": 1\n},\n{\n  \"at_ns\": 5,\n  \"m\": 8\n}\n]\n",
+    )
+    .unwrap();
+    assert!(Trace::load(&truncated).is_err(), "truncated record must fail");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
