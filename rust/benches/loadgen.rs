@@ -9,12 +9,14 @@
 //!     [--scenario poisson,bursty,...,trace:PATH | all] [--requests N] \
 //!     [--rate R] [--shards N] [--backends LIST] [--depth D] \
 //!     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS] \
-//!     [--bulk-slo-ms MS] [--gate-p99-ms MS] [--gate-shed N]
+//!     [--bulk-slo-ms MS] [--replay-speed X] [--gate-p99-ms MS] [--gate-shed N]
 //! ```
 //!
 //! Defaults run every scenario on a portable CPU-only heterogeneous shard
 //! mix (no artifacts needed). `--scenario trace:PATH` replays a captured
-//! trace fixture (see `serve --capture`) deterministically. Results go
+//! trace fixture (see `serve --capture`) deterministically;
+//! `--replay-speed X` time-compresses the replay by X (same request
+//! stream, 1/X the wall clock — a day-long capture in minutes). Results go
 //! three places: stdout (markdown table), `LOADGEN_table.md` (the CI
 //! artifact), and `BENCH_pipeline.json` (merged alongside the solver_micro
 //! records for the perf gate). `--gate-p99-ms` / `--gate-shed` turn the
@@ -85,6 +87,15 @@ fn main() -> anyhow::Result<()> {
             "--bulk-slo-ms" => {
                 if let Some(ms) = value().and_then(|v| v.parse().ok()) {
                     opts.bulk_slo = Duration::from_millis(ms);
+                }
+            }
+            "--replay-speed" => {
+                if let Some(x) = value().and_then(|v| v.parse::<f64>().ok()) {
+                    anyhow::ensure!(
+                        x > 0.0 && x.is_finite(),
+                        "--replay-speed must be positive"
+                    );
+                    opts.replay_speed = x;
                 }
             }
             "--gate-p99-ms" => {

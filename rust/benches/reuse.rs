@@ -1,0 +1,134 @@
+//! Cross-request reuse bench: sim steps/second cold vs warm-started, and
+//! cache hit-rate sweeps over coherence levels — the headline numbers for
+//! the content-addressed result cache + warm-started Seidel layer.
+//!
+//! ```sh
+//! cargo bench --bench reuse -- \
+//!     [--agents N] [--steps N] [--threads N] [--requests N] \
+//!     [--capacity N] [--coherence 0.0,0.5,0.9]
+//! ```
+//!
+//! Steps the clearance crowd with warm-start off then on (the measured
+//! improvement line the acceptance gate reads), then serves duplicate-rich
+//! request streams at each coherence level through a cached service and a
+//! cache-disabled reference, asserting the replies are **bit-identical**
+//! (the run fails otherwise — reuse must never change result bits) and
+//! that coherent levels (>= 0.5) actually hit. Results go to stdout,
+//! `CACHE_table.md`, and `BENCH_pipeline.json` (merged as `sim_steps_*`
+//! and `cache_*` records for the perf gate). `BATCH_LP2D_BENCH_FAST=1`
+//! shrinks the step/request counts for CI; the coherence levels stay
+//! fixed so the gate's baseline rows are always produced.
+
+use batch_lp2d::bench::loadgen::merge_prefixed_records;
+use batch_lp2d::bench::reuse::{
+    cache_json_record, render_markdown, run_cache_level, run_sim, sim_json_record, ReuseOpts,
+};
+use batch_lp2d::runtime::default_artifact_dir;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let fast = std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some();
+    let mut opts = if fast {
+        ReuseOpts { agents: 64, steps: 40, requests: 1_200, ..ReuseOpts::default() }
+    } else {
+        ReuseOpts::default()
+    };
+
+    let mut i = 0usize;
+    while i < args.len() {
+        let flag = args[i].clone();
+        let mut value = || -> Option<String> {
+            i += 1;
+            args.get(i).cloned()
+        };
+        match flag.as_str() {
+            "--agents" => {
+                opts.agents = value().and_then(|v| v.parse().ok()).unwrap_or(opts.agents);
+            }
+            "--steps" => {
+                opts.steps = value().and_then(|v| v.parse().ok()).unwrap_or(opts.steps);
+            }
+            "--threads" => {
+                opts.threads = value().and_then(|v| v.parse().ok()).unwrap_or(opts.threads);
+            }
+            "--requests" => {
+                opts.requests = value().and_then(|v| v.parse().ok()).unwrap_or(opts.requests);
+            }
+            "--capacity" => {
+                opts.cache_capacity =
+                    value().and_then(|v| v.parse().ok()).unwrap_or(opts.cache_capacity);
+            }
+            "--coherence" => {
+                if let Some(list) = value() {
+                    let levels: Result<Vec<f64>, _> =
+                        list.split(',').map(|s| s.trim().parse::<f64>()).collect();
+                    let levels = levels.map_err(|e| anyhow::anyhow!("--coherence: {e}"))?;
+                    anyhow::ensure!(
+                        levels.iter().all(|c| (0.0..=1.0).contains(c)),
+                        "--coherence levels must be in [0, 1]"
+                    );
+                    opts.coherence = levels;
+                }
+            }
+            // cargo bench passes through its own flags (e.g. --bench);
+            // ignore anything unrecognized rather than failing the run.
+            _ => {}
+        }
+        i += 1;
+    }
+
+    println!(
+        "## reuse: {} agents x {} steps (cold vs warm), {} requests per coherence level {:?}",
+        opts.agents, opts.steps, opts.requests, opts.coherence
+    );
+
+    let mut sims = Vec::new();
+    for warm in [false, true] {
+        let r = run_sim(&opts, warm)?;
+        println!(
+            "sim {:<5} {:>7.1} steps/s  {:>8.0} LPs/s  warm_hits {}",
+            r.mode, r.steps_per_s, r.throughput_lps, r.warm_hits
+        );
+        sims.push(r);
+    }
+
+    let dir = default_artifact_dir();
+    let mut sweeps = Vec::new();
+    for &c in &opts.coherence {
+        let r = run_cache_level(&dir, c, &opts)?;
+        println!(
+            "cache c={:.2} {:>6} ok  hits {:>6}  misses {:>6}  hit-rate {:.3}  \
+             {:>7.0} LPs/s  bit-identical {}",
+            r.coherence, r.completed, r.hits, r.misses, r.hit_rate, r.throughput_lps,
+            r.bit_identical
+        );
+        anyhow::ensure!(
+            r.bit_identical,
+            "coherence {:.2}: cached replies differ from the cache-disabled run",
+            r.coherence
+        );
+        anyhow::ensure!(
+            r.coherence < 0.5 || r.hits > 0,
+            "coherence {:.2}: expected a nonzero cache hit rate, got {} hits",
+            r.coherence,
+            r.hits
+        );
+        sweeps.push(r);
+    }
+
+    let md = render_markdown(&sims, &sweeps);
+    println!("\n{md}");
+    std::fs::write("CACHE_table.md", &md)
+        .map_err(|e| anyhow::anyhow!("cannot write CACHE_table.md: {e}"))?;
+
+    let sim_records: Vec<String> = sims.iter().map(sim_json_record).collect();
+    let cache_records: Vec<String> = sweeps.iter().map(cache_json_record).collect();
+    let path = std::path::Path::new("BENCH_pipeline.json");
+    merge_prefixed_records(path, &sim_records, "sim_steps_")?;
+    merge_prefixed_records(path, &cache_records, "cache_")?;
+    println!(
+        "wrote CACHE_table.md and merged {} record(s) into BENCH_pipeline.json",
+        sim_records.len() + cache_records.len()
+    );
+    Ok(())
+}

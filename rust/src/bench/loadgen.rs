@@ -38,6 +38,10 @@ pub struct LoadgenOpts {
     pub slo: Duration,
     pub bulk_slo: Duration,
     pub seed: u64,
+    /// Time compression for `trace:PATH` replay (the `--replay-speed`
+    /// knob): recorded arrival stamps are divided by this factor.
+    /// Synthetic scenarios ignore it. 1.0 = real-time replay.
+    pub replay_speed: f64,
 }
 
 impl Default for LoadgenOpts {
@@ -52,6 +56,7 @@ impl Default for LoadgenOpts {
             slo: Duration::from_millis(5),
             bulk_slo: Duration::from_millis(40),
             seed: 0x10AD,
+            replay_speed: 1.0,
         }
     }
 }
@@ -131,7 +136,7 @@ pub fn run_scenario(
     let service = Service::start(artifact_dir, config)?;
 
     let mut rng = Rng::new(opts.seed);
-    let reqs = scenario.generate(&mut rng, opts.requests, opts.rate)?;
+    let reqs = scenario.generate_at_speed(&mut rng, opts.requests, opts.rate, opts.replay_speed)?;
 
     // Collector thread waits tickets concurrently with the driver so the
     // measured latency is (completion - submission), not (drive end - t).

@@ -11,6 +11,8 @@
 //!   the serving layer (p50/p95/p99, queue-wait vs execute split, shed).
 //! * [`calibration`] -- tune-profile accuracy harness (predicted vs
 //!   measured batch cost per backend × class × occupancy).
+//! * [`reuse`]      -- cross-request reuse: sim steps/second cold vs
+//!   warm-started, plus cache hit-rate sweeps over coherence levels.
 
 pub mod ablations;
 pub mod calibration;
@@ -19,5 +21,6 @@ pub mod figures;
 pub mod harness;
 pub mod imbalance;
 pub mod loadgen;
+pub mod reuse;
 
 pub use harness::{bench, report_line, BenchOpts, BenchResult};

@@ -1,0 +1,394 @@
+//! Cross-request reuse bench: the headline numbers for the result cache
+//! and warm-started Seidel layer.
+//!
+//! Two measurements, one artifact:
+//!
+//! * **sim steps/second** — the clearance crowd ([`World::crossing_groups`])
+//!   stepped on the multicore CPU baseline, cold vs warm-started
+//!   ([`World::with_warm_start`]). Warm steps skip the Seidel solve for
+//!   every agent whose LP is bit-identical to its previous tick
+//!   (certified hints), so the ratio is the end-to-end payoff of temporal
+//!   coherence — `sim_steps_cold` / `sim_steps_warm` rows.
+//! * **cache hit-rate sweep** — duplicate-rich request streams at several
+//!   coherence levels (the fraction of requests that exactly repeat an
+//!   earlier one) driven through a [`Service`] with the content-addressed
+//!   result cache enabled, vs a cache-disabled reference run over the
+//!   same stream. Reports measured hit rate, throughput, and whether the
+//!   cached replies are **bit-identical** to the uncached ones (they must
+//!   be: hits replay stored solution bits, and the content-keyed wire
+//!   format makes every cold solve independent of batch composition) —
+//!   `cache_c{level}` rows.
+//!
+//! Results go to `CACHE_table.md` ([`render_markdown`]) and
+//! `BENCH_pipeline.json` (flat records via
+//! [`merge_prefixed_records`](crate::bench::loadgen::merge_prefixed_records),
+//! prefixes `sim_steps_` and `cache_`) for the perf gate.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::coordinator::{BackendSpec, Config, Service};
+use crate::gen;
+use crate::lp::{Problem, Solution};
+use crate::runtime::PipelineDepth;
+use crate::sim::{World, WorldParams};
+use crate::util::{Rng, Table};
+
+/// Reuse-bench knobs (crowd size + request stream shape).
+#[derive(Clone, Debug)]
+pub struct ReuseOpts {
+    /// Crowd size for the sim-steps measurement.
+    pub agents: usize,
+    /// Steps per sim run.
+    pub steps: usize,
+    /// CPU threads for the sim batch solve.
+    pub threads: usize,
+    /// Requests per cache-sweep level.
+    pub requests: usize,
+    /// Result-cache capacity for the cached runs.
+    pub cache_capacity: usize,
+    /// Coherence levels to sweep: fraction of requests that exactly
+    /// repeat an earlier request in the stream.
+    pub coherence: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for ReuseOpts {
+    fn default() -> Self {
+        ReuseOpts {
+            agents: 192,
+            steps: 120,
+            threads: 4,
+            requests: 4_000,
+            cache_capacity: 8_192,
+            coherence: vec![0.0, 0.5, 0.9],
+            seed: 0x2E05E,
+        }
+    }
+}
+
+/// One sim run's measured stepping rate.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// `"cold"` or `"warm"`.
+    pub mode: &'static str,
+    pub agents: usize,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+    /// LP solves represented per second (agents x steps / wall; warm
+    /// runs count certified skips as served solves — that is the point).
+    pub throughput_lps: f64,
+    /// Total certified warm hits across the run (0 on the cold path).
+    pub warm_hits: usize,
+}
+
+/// One coherence level's measured cache behaviour.
+#[derive(Clone, Debug)]
+pub struct CacheReport {
+    /// Requested duplicate fraction (the stream generator's knob).
+    pub coherence: f64,
+    pub requests: usize,
+    pub completed: usize,
+    /// Submit-path cache counters from the service snapshot.
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Measured hit rate, hits / (hits + misses).
+    pub hit_rate: f64,
+    pub wall_s: f64,
+    pub throughput_lps: f64,
+    /// Cached replies bitwise equal to the cache-disabled reference run.
+    pub bit_identical: bool,
+}
+
+/// Step the clearance crowd `opts.steps` times on the CPU baseline and
+/// measure steps/second; `warm` switches on the warm-start path.
+pub fn run_sim(opts: &ReuseOpts, warm: bool) -> anyhow::Result<SimReport> {
+    let mut rng = Rng::new(opts.seed);
+    let mut world = World::crossing_groups(&mut rng, opts.agents, WorldParams::default());
+    if warm {
+        world = world.with_warm_start();
+    }
+    let t0 = Instant::now();
+    let mut warm_hits = 0usize;
+    let mut lps = 0usize;
+    for _ in 0..opts.steps {
+        let stats = world.step_cpu(opts.threads, &mut rng)?;
+        warm_hits += stats.warm_hits;
+        lps += stats.lps;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(SimReport {
+        mode: if warm { "warm" } else { "cold" },
+        agents: opts.agents,
+        steps: opts.steps,
+        wall_s,
+        steps_per_s: opts.steps as f64 / wall_s,
+        throughput_lps: lps as f64 / wall_s,
+        warm_hits,
+    })
+}
+
+/// Build a duplicate-rich stream: each request exactly repeats a random
+/// earlier one with probability `coherence`, else draws a fresh feasible
+/// LP (sizes 6..=32). Deterministic in the seed.
+pub fn coherent_stream(rng: &mut Rng, n: usize, coherence: f64) -> Vec<Problem> {
+    let mut out: Vec<Problem> = Vec::with_capacity(n);
+    for i in 0..n {
+        if i > 0 && rng.f64() < coherence {
+            let j = rng.below(out.len());
+            let dup = out[j].clone();
+            out.push(dup);
+        } else {
+            let m = 6 + rng.below(27);
+            out.push(gen::feasible(rng, m));
+        }
+    }
+    out
+}
+
+fn solutions_bit_equal(a: &[Solution], b: &[Solution]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.status == y.status
+                && x.point[0].to_bits() == y.point[0].to_bits()
+                && x.point[1].to_bits() == y.point[1].to_bits()
+        })
+}
+
+fn serve_config(opts: &ReuseOpts, cached: bool) -> Config {
+    Config {
+        backends: vec![
+            BackendSpec::BatchCpu { threads: 2 },
+            BackendSpec::BatchCpu { threads: 2 },
+            BackendSpec::Cpu,
+        ],
+        depth: PipelineDepth::new(2),
+        // Closed-loop drive: admit the whole stream, nothing sheds.
+        max_queue: opts.requests + 64,
+        cache_capacity: if cached { opts.cache_capacity } else { 0 },
+        cache_eps: 0.0,
+        warm_start: cached,
+        ..Config::default()
+    }
+}
+
+/// Drive one coherence level: serve the same stream through a cached
+/// (capacity + warm hints on) and an uncached service, compare the reply
+/// bits, and read the cache counters off the cached run's snapshot.
+pub fn run_cache_level(
+    artifact_dir: &Path,
+    coherence: f64,
+    opts: &ReuseOpts,
+) -> anyhow::Result<CacheReport> {
+    let mut rng = Rng::new(opts.seed ^ 0xC0_4E7E);
+    let stream = coherent_stream(&mut rng, opts.requests, coherence);
+
+    // Reference first: cache disabled is the historical byte-for-byte path.
+    let reference = Service::start(artifact_dir, serve_config(opts, false))?;
+    let expected = reference.solve_all(&stream)?;
+    reference.shutdown();
+
+    let service = Service::start(artifact_dir, serve_config(opts, true))?;
+    let t0 = Instant::now();
+    let got = service.solve_all(&stream)?;
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    let snap = service.metrics().snapshot();
+    service.shutdown();
+
+    Ok(CacheReport {
+        coherence,
+        requests: opts.requests,
+        completed: got.len(),
+        hits: snap.cache_hits,
+        misses: snap.cache_misses,
+        evictions: snap.cache_evictions,
+        hit_rate: snap.cache_hit_rate(),
+        wall_s,
+        throughput_lps: got.len() as f64 / wall_s,
+        bit_identical: solutions_bit_equal(&got, &expected),
+    })
+}
+
+/// The `CACHE_table.md` body: the sim steps/second table (with the
+/// warm/cold improvement line the acceptance gate reads), then the
+/// hit-rate sweep table.
+pub fn render_markdown(sims: &[SimReport], sweeps: &[CacheReport]) -> String {
+    let mut t = Table::new(&["mode", "agents", "steps", "steps_per_s", "LPs/s", "warm_hits"]);
+    for r in sims {
+        t.push_row(vec![
+            r.mode.to_string(),
+            r.agents.to_string(),
+            r.steps.to_string(),
+            format!("{:.1}", r.steps_per_s),
+            format!("{:.0}", r.throughput_lps),
+            r.warm_hits.to_string(),
+        ]);
+    }
+    let mut out = String::from("## sim steps/second: cold vs warm-started clearance crowd\n\n");
+    out.push_str(&t.to_markdown());
+    let cold = sims.iter().find(|r| r.mode == "cold");
+    let warm = sims.iter().find(|r| r.mode == "warm");
+    if let (Some(c), Some(w)) = (cold, warm) {
+        out.push_str(&format!(
+            "\nwarm-start improvement: {:.2}x steps/s ({:.1} -> {:.1})\n",
+            w.steps_per_s / c.steps_per_s.max(1e-9),
+            c.steps_per_s,
+            w.steps_per_s,
+        ));
+    }
+
+    let mut t = Table::new(&[
+        "coherence",
+        "requests",
+        "completed",
+        "hits",
+        "misses",
+        "evictions",
+        "hit_rate",
+        "LPs/s",
+        "bit_identical",
+    ]);
+    for r in sweeps {
+        t.push_row(vec![
+            format!("{:.2}", r.coherence),
+            r.requests.to_string(),
+            r.completed.to_string(),
+            r.hits.to_string(),
+            r.misses.to_string(),
+            r.evictions.to_string(),
+            format!("{:.3}", r.hit_rate),
+            format!("{:.0}", r.throughput_lps),
+            r.bit_identical.to_string(),
+        ]);
+    }
+    out.push_str("\n## cache hit-rate sweep over coherence levels\n\n");
+    out.push_str(&t.to_markdown());
+    out
+}
+
+/// Render one sim run as a flat `BENCH_pipeline.json` record
+/// (`sim_steps_cold` / `sim_steps_warm`).
+pub fn sim_json_record(r: &SimReport) -> String {
+    format!(
+        "{{\n  \"bench\": \"sim_steps_{}\",\n  \"agents\": {},\n  \
+         \"steps\": {},\n  \"steps_per_s\": {:.1},\n  \"warm_hits\": {},\n  \
+         \"throughput_lps\": {:.1}\n}}",
+        r.mode, r.agents, r.steps, r.steps_per_s, r.warm_hits, r.throughput_lps,
+    )
+}
+
+/// Render one sweep level as a flat record (`cache_c00` / `cache_c50` /
+/// `cache_c90` for coherence 0.0 / 0.5 / 0.9).
+pub fn cache_json_record(r: &CacheReport) -> String {
+    format!(
+        "{{\n  \"bench\": \"cache_c{:02}\",\n  \"coherence\": {:.2},\n  \
+         \"requests\": {},\n  \"completed\": {},\n  \"hits\": {},\n  \
+         \"misses\": {},\n  \"evictions\": {},\n  \"hit_rate\": {:.4},\n  \
+         \"bit_identical\": {},\n  \"throughput_lps\": {:.1}\n}}",
+        (r.coherence * 100.0).round() as u32,
+        r.coherence,
+        r.requests,
+        r.completed,
+        r.hits,
+        r.misses,
+        r.evictions,
+        r.hit_rate,
+        r.bit_identical,
+        r.throughput_lps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::content_key;
+
+    #[test]
+    fn coherent_stream_repeats_the_requested_fraction() {
+        let mut rng = Rng::new(7);
+        let stream = coherent_stream(&mut rng, 400, 0.6);
+        assert_eq!(stream.len(), 400);
+        let mut seen = std::collections::HashSet::new();
+        let dups = stream
+            .iter()
+            .filter(|p| !seen.insert(content_key(p, 0.0)))
+            .count();
+        let frac = dups as f64 / 400.0;
+        assert!((0.4..0.8).contains(&frac), "duplicate fraction {frac}");
+        // Deterministic in the seed.
+        let again = coherent_stream(&mut Rng::new(7), 400, 0.6);
+        assert!(stream
+            .iter()
+            .zip(&again)
+            .all(|(a, b)| content_key(a, 0.0) == content_key(b, 0.0)));
+        // Coherence 0 means every request is fresh.
+        let fresh = coherent_stream(&mut Rng::new(9), 200, 0.0);
+        let mut keys = std::collections::HashSet::new();
+        assert!(fresh.iter().all(|p| keys.insert(content_key(p, 0.0))));
+    }
+
+    #[test]
+    fn json_records_are_scannable() {
+        let sim = SimReport {
+            mode: "warm",
+            agents: 64,
+            steps: 10,
+            wall_s: 1.0,
+            steps_per_s: 10.0,
+            throughput_lps: 640.0,
+            warm_hits: 123,
+        };
+        let rec = sim_json_record(&sim);
+        assert!(rec.contains("\"bench\": \"sim_steps_warm\""));
+        assert!(rec.contains("\"throughput_lps\": 640.0"));
+        let sweep = CacheReport {
+            coherence: 0.9,
+            requests: 100,
+            completed: 100,
+            hits: 80,
+            misses: 20,
+            evictions: 0,
+            hit_rate: 0.8,
+            wall_s: 1.0,
+            throughput_lps: 100.0,
+            bit_identical: true,
+        };
+        let rec = cache_json_record(&sweep);
+        assert!(rec.contains("\"bench\": \"cache_c90\""));
+        assert!(rec.contains("\"hit_rate\": 0.8000"));
+        assert!(rec.contains("\"bit_identical\": true"));
+    }
+
+    #[test]
+    fn markdown_carries_the_improvement_line() {
+        let cold = SimReport {
+            mode: "cold",
+            agents: 64,
+            steps: 10,
+            wall_s: 2.0,
+            steps_per_s: 5.0,
+            throughput_lps: 320.0,
+            warm_hits: 0,
+        };
+        let warm = SimReport { mode: "warm", steps_per_s: 10.0, warm_hits: 400, ..cold.clone() };
+        let sweep = CacheReport {
+            coherence: 0.5,
+            requests: 100,
+            completed: 100,
+            hits: 40,
+            misses: 60,
+            evictions: 2,
+            hit_rate: 0.4,
+            wall_s: 1.0,
+            throughput_lps: 100.0,
+            bit_identical: true,
+        };
+        let md = render_markdown(&[cold, warm], &[sweep]);
+        assert!(md.contains("warm-start improvement: 2.00x"));
+        assert!(md.contains("hit_rate"));
+        assert!(md.contains("bit_identical"));
+        assert!(md.contains("0.400"));
+    }
+}

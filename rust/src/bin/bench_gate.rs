@@ -36,11 +36,12 @@ const BASELINE_HEADER: &str = "Committed perf baseline for the CI bench-regressi
 (bench_gate). Rows with throughput_lps <= 0 are bootstrap rows: they pin the record set the \
 fresh run must produce, without pinning a number yet. Refresh on the reference runner with: \
 BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro && BATCH_LP2D_BENCH_FAST=1 cargo \
-bench --bench loadgen && BATCH_LP2D_BENCH_FAST=1 cargo bench --bench calibration && cargo \
+bench --bench loadgen && BATCH_LP2D_BENCH_FAST=1 cargo bench --bench calibration && \
+BATCH_LP2D_BENCH_FAST=1 cargo bench --bench reuse && cargo \
 run --release --bin bench_gate -- --refresh BENCH_baseline.json BENCH_pipeline.json \
-(solver_micro rewrites BENCH_pipeline.json; loadgen and calibration merge their loadgen_* \
-and tune_* records into it — run them in that order or those rows never reach the \
-baseline). Engine-path records (pipeline_engine_*, pipeline_shard_engine) are excluded \
+(solver_micro rewrites BENCH_pipeline.json; loadgen, calibration, and reuse merge their \
+loadgen_*, tune_*, and sim_steps_*/cache_* records into it — run them in that order or \
+those rows never reach the baseline). Engine-path records (pipeline_engine_*, pipeline_shard_engine) are excluded \
 automatically until the real PJRT bindings replace the offline xla stub in CI.";
 
 /// One comparable bench record: match key + throughput, plus the fields
@@ -99,11 +100,12 @@ fn unarmed_warning(baseline_path: &str) -> String {
          # bootstrap row (throughput_lps <= 0). The bench gate checked\n\
          # only that the record set matches — NO throughput regression\n\
          # was (or could be) detected. Arm it on the reference runner\n\
-         # (in this order — solver_micro rewrites the snapshot, loadgen\n\
-         # and calibration merge into it):\n\
+         # (in this order — solver_micro rewrites the snapshot; loadgen,\n\
+         # calibration, and reuse merge into it):\n\
          #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro\n\
          #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench loadgen\n\
          #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench calibration\n\
+         #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench reuse\n\
          #   cargo run --release --bin bench_gate -- --refresh \\\n\
          #     BENCH_baseline.json BENCH_pipeline.json\n\
          # While you are at it, refresh the dispatch calibration too:\n\

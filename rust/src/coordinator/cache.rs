@@ -1,0 +1,253 @@
+//! Content-addressed result cache: the cross-request reuse layer's store.
+//!
+//! The paper's motivating workloads are temporally coherent — ORCA-style
+//! collision-avoidance agents re-solve near-identical LPs tick after tick —
+//! so a serving deployment sees the same problem content many times. The
+//! cache sits on the admission path of [`crate::coordinator::Service`]:
+//! a submit whose content key matches a completed result is answered
+//! immediately, skipping admission, packing, and execution entirely.
+//!
+//! # Key semantics
+//!
+//! The primary key is [`crate::lp::types::content_key`] over the problem's
+//! quantized coefficients. With `eps == 0.0` (the default) the raw f64 bit
+//! patterns are hashed, so a hit certifies byte-identical content — and
+//! because packed wire bytes are a pure function of content (see
+//! [`crate::runtime::pack`]), the cached solution is bit-identical to what
+//! a cold solve of the duplicate would return. With `eps > 0.0` the
+//! coefficients are snapped to a grid first: eps-close problems share an
+//! entry (approximate mode, for coherence experiments — not for the
+//! bit-identity gates).
+//!
+//! Every entry also stores a **verify** hash (the same walk under an
+//! independent FNV basis) checked on lookup, and an **exact** hash (the
+//! unquantized key) that [`Service`] uses to certify warm-start hints even
+//! in approximate mode. Collision odds after both 64-bit checks are ~2^-128.
+//!
+//! # Concurrency
+//!
+//! The store is lock-striped: keys spread over [`CACHE_STRIPES`]
+//! independently-locked stripes, so concurrent submits and executor fills
+//! contend only when they land on the same stripe — the cache never
+//! serializes dispatch. Lookups never block on in-flight work: a duplicate
+//! submitted before the first copy completes simply misses and executes
+//! too (duplicate suppression would require parking replies behind a
+//! pending entry — a deadlock class this design refuses to buy into).
+//! Eviction is per-stripe FIFO, bounding the whole store at its configured
+//! capacity.
+//!
+//! [`Service`]: crate::coordinator::Service
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::lp::types::{
+    content_key, content_key_from, Problem, Solution, CONTENT_KEY_VERIFY_BASIS,
+};
+
+/// Lock stripes (power of two). Sixteen keeps worst-case contention at
+/// ~submitters/16 while the per-stripe maps stay cache-friendly.
+pub const CACHE_STRIPES: usize = 16;
+
+/// Precomputed key triple of one problem. Computing it costs three FNV
+/// walks over the coefficients (O(m), no allocation); callers reuse one
+/// `CacheKey` across lookup, insert, and hint certification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    /// Primary (possibly quantized) key: stripe + map index.
+    pub quant: u64,
+    /// Verify hash: same quantized walk, independent basis.
+    pub verify: u64,
+    /// Exact key over raw f64 bits (equals `quant` when `eps == 0`);
+    /// certifies bit-level content identity for warm-start hints.
+    pub exact: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    verify: u64,
+    exact: u64,
+    sol: Solution,
+}
+
+#[derive(Debug, Default)]
+struct Stripe {
+    map: HashMap<u64, Entry>,
+    /// FIFO eviction order of the stripe's keys.
+    order: VecDeque<u64>,
+}
+
+/// Sharded/lock-striped content-addressed result cache (see module docs).
+#[derive(Debug)]
+pub struct ResultCache {
+    stripes: Vec<Mutex<Stripe>>,
+    per_stripe_cap: usize,
+    eps: f64,
+}
+
+impl ResultCache {
+    /// A cache bounded at ~`capacity` entries with quantization `eps`
+    /// (`0.0` = exact-bits matching). `capacity` is rounded up to a
+    /// multiple of [`CACHE_STRIPES`] so every stripe holds at least one
+    /// entry.
+    pub fn new(capacity: usize, eps: f64) -> ResultCache {
+        ResultCache {
+            stripes: (0..CACHE_STRIPES).map(|_| Mutex::new(Stripe::default())).collect(),
+            per_stripe_cap: capacity.div_ceil(CACHE_STRIPES).max(1),
+            eps,
+        }
+    }
+
+    /// The configured quantization epsilon.
+    pub fn eps(&self) -> f64 {
+        self.eps
+    }
+
+    /// Total entry capacity (per-stripe bound × stripe count).
+    pub fn capacity(&self) -> usize {
+        self.per_stripe_cap * CACHE_STRIPES
+    }
+
+    /// Entries currently stored, summed across stripes.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Compute the key triple for a problem under this cache's epsilon.
+    pub fn key(&self, p: &Problem) -> CacheKey {
+        CacheKey {
+            quant: content_key(p, self.eps),
+            verify: content_key_from(p, self.eps, CONTENT_KEY_VERIFY_BASIS),
+            exact: if self.eps > 0.0 { content_key(p, 0.0) } else { content_key(p, self.eps) },
+        }
+    }
+
+    #[inline]
+    fn stripe(&self, key: &CacheKey) -> &Mutex<Stripe> {
+        // High bits: the low bits index the per-stripe hash map.
+        &self.stripes[(key.quant >> 60) as usize & (CACHE_STRIPES - 1)]
+    }
+
+    /// Look up a completed result under the cache's (possibly quantized)
+    /// matching semantics. A hit requires both the primary and verify
+    /// hashes to match.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Solution> {
+        let g = self.stripe(key).lock().unwrap();
+        g.map.get(&key.quant).filter(|e| e.verify == key.verify).map(|e| e.sol)
+    }
+
+    /// Like [`lookup`](Self::lookup), but additionally requires the stored
+    /// entry's *exact* key to match — certifying bit-level content
+    /// identity even when `eps > 0`. This is the warm-start hint source:
+    /// a hint must never come from a merely eps-close producer.
+    pub fn lookup_exact(&self, key: &CacheKey) -> Option<Solution> {
+        let g = self.stripe(key).lock().unwrap();
+        g.map
+            .get(&key.quant)
+            .filter(|e| e.verify == key.verify && e.exact == key.exact)
+            .map(|e| e.sol)
+    }
+
+    /// Store a completed result, returning how many entries the capacity
+    /// bound evicted (0 or 1). Idempotent for duplicate keys: a re-insert
+    /// overwrites the entry in place without growing the FIFO, so
+    /// duplicate in-flight requests that both complete fill the cache
+    /// exactly once.
+    pub fn insert(&self, key: &CacheKey, sol: Solution) -> u64 {
+        let mut g = self.stripe(key).lock().unwrap();
+        let prior = g
+            .map
+            .insert(key.quant, Entry { verify: key.verify, exact: key.exact, sol });
+        if prior.is_some() {
+            return 0;
+        }
+        g.order.push_back(key.quant);
+        if g.order.len() > self.per_stripe_cap {
+            if let Some(old) = g.order.pop_front() {
+                g.map.remove(&old);
+                return 1;
+            }
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::lp::types::{HalfPlane, Status};
+    use crate::util::Rng;
+
+    fn problem(b: f64) -> Problem {
+        Problem::new(vec![HalfPlane::new(1.0, 0.0, b)], [1.0, 0.0])
+    }
+
+    #[test]
+    fn exact_mode_hits_only_identical_content() {
+        let cache = ResultCache::new(64, 0.0);
+        let p = problem(2.0);
+        let k = cache.key(&p);
+        assert!(cache.lookup(&k).is_none());
+        assert_eq!(cache.insert(&k, Solution::optimal(2.0, 1.0)), 0);
+        assert_eq!(cache.lookup(&k), Some(Solution::optimal(2.0, 1.0)));
+        assert_eq!(cache.lookup_exact(&k), Some(Solution::optimal(2.0, 1.0)));
+        // A nearby-but-unequal problem misses in exact mode.
+        let near = cache.key(&problem(2.0 + 1e-12));
+        assert!(cache.lookup(&near).is_none());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn quantized_mode_merges_close_content_but_exact_lookup_refuses() {
+        let cache = ResultCache::new(64, 1e-3);
+        let p = problem(2.0);
+        let near = problem(2.0 + 1e-9);
+        cache.insert(&cache.key(&p), Solution::optimal(2.0, 1.0));
+        // eps-close content shares the entry under quantized matching...
+        assert_eq!(cache.lookup(&cache.key(&near)), Some(Solution::optimal(2.0, 1.0)));
+        // ...but exact certification sees through the quantization.
+        assert!(cache.lookup_exact(&cache.key(&near)).is_none());
+        assert!(cache.lookup_exact(&cache.key(&p)).is_some());
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_capacity_evicts_fifo() {
+        let cache = ResultCache::new(CACHE_STRIPES, 0.0); // 1 entry per stripe
+        let mut rng = Rng::new(5);
+        let probs: Vec<Problem> = (0..64).map(|_| gen::feasible(&mut rng, 4)).collect();
+        let k0 = cache.key(&probs[0]);
+        assert_eq!(cache.insert(&k0, Solution::infeasible()), 0);
+        // Duplicate fill (duplicate in-flight both completing): no growth.
+        assert_eq!(cache.insert(&k0, Solution::infeasible()), 0);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.lookup(&k0).map(|s| s.status), Some(Status::Infeasible));
+        // Flooding far past capacity evicts but never exceeds the bound.
+        let mut evicted = 0;
+        for p in &probs {
+            evicted += cache.insert(&cache.key(p), Solution::optimal(0.0, 0.0));
+        }
+        assert!(cache.len() <= cache.capacity());
+        assert!(evicted > 0, "flood past capacity must evict");
+    }
+
+    #[test]
+    fn stripes_spread_random_keys() {
+        let cache = ResultCache::new(256, 0.0);
+        let mut rng = Rng::new(11);
+        for _ in 0..128 {
+            let p = gen::feasible(&mut rng, 5);
+            cache.insert(&cache.key(&p), Solution::optimal(1.0, 1.0));
+        }
+        let occupied = cache
+            .stripes
+            .iter()
+            .filter(|s| !s.lock().unwrap().map.is_empty())
+            .count();
+        assert!(occupied > CACHE_STRIPES / 2, "keys clumped into {occupied} stripes");
+    }
+}

@@ -23,6 +23,9 @@ struct Inner {
     rejected: u64,
     shed_interactive: u64,
     shed_bulk: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_evictions: u64,
     batches: u64,
     /// Sum of batch occupancy (used/capacity) to average later.
     occupancy_sum: f64,
@@ -189,6 +192,12 @@ pub struct Snapshot {
     /// Load-shed counts per deadline class (bulk sheds before interactive).
     pub shed_interactive: u64,
     pub shed_bulk: u64,
+    /// Result-cache counters (all zero when the cache is disabled): admits
+    /// served straight from a prior result / admits that missed / entries
+    /// evicted by the capacity bound.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
     pub batches: u64,
     pub mean_occupancy: f64,
     /// The service's configured staged-queue depth (0 = not configured).
@@ -304,6 +313,22 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// Record a result-cache hit: the submit was answered from a prior
+    /// result without entering the admission pipeline.
+    pub fn on_cache_hit(&self) {
+        self.inner.lock().unwrap().cache_hits += 1;
+    }
+
+    /// Record a result-cache miss (cache enabled, no usable entry).
+    pub fn on_cache_miss(&self) {
+        self.inner.lock().unwrap().cache_misses += 1;
+    }
+
+    /// Record `n` entries evicted by the cache's capacity bound.
+    pub fn on_cache_evict(&self, n: u64) {
+        self.inner.lock().unwrap().cache_evictions += n;
+    }
+
     /// Record a load-shed (bounded admission queue evicted/refused an
     /// item of this deadline class).
     pub fn on_shed(&self, class: DeadlineClass) {
@@ -389,6 +414,9 @@ impl Metrics {
             rejected: g.rejected,
             shed_interactive: g.shed_interactive,
             shed_bulk: g.shed_bulk,
+            cache_hits: g.cache_hits,
+            cache_misses: g.cache_misses,
+            cache_evictions: g.cache_evictions,
             batches: g.batches,
             mean_occupancy: if g.batches > 0 {
                 g.occupancy_sum / g.batches as f64
@@ -435,6 +463,17 @@ impl Snapshot {
     /// Items shed across both deadline classes.
     pub fn shed(&self) -> u64 {
         self.shed_interactive + self.shed_bulk
+    }
+
+    /// Result-cache hit rate over cache-eligible submits (0.0 when the
+    /// cache is disabled or has seen no traffic).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     /// Mean padding waste across classes, weighted by class-shaped rows.
@@ -628,6 +667,22 @@ mod tests {
         let m = Metrics::new();
         m.on_reject();
         assert_eq!(m.snapshot().rejected, 1);
+    }
+
+    #[test]
+    fn cache_counters_and_hit_rate() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().cache_hit_rate(), 0.0);
+        m.on_cache_miss();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_cache_evict(3);
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 2);
+        assert_eq!(s.cache_evictions, 3);
+        assert!((s.cache_hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -19,6 +19,10 @@
 //!   A malformed submit is a typed [`admission::RejectReason::NoClass`]
 //!   rejection, never a panic. Replaced the seed-era `Router` + `Batcher`
 //!   pair as the one place admission decisions live.
+//! * [`cache`]   -- the content-addressed result cache (cross-request
+//!   reuse): lock-striped, quantized-FNV keyed, sitting before admission
+//!   so duplicate content is answered without ever queueing
+//!   (`--cache-capacity` / `--cache-eps`).
 //! * [`router`]  -- the size-class table the pipeline owns (problem m ->
 //!   compiled bucket m, capacities, padding accounting, chunk planning).
 //! * [`service`] -- submit/await facade over dispatcher + executor
@@ -33,6 +37,7 @@
 //! interactive SLO; `--bulk-slo-ms` bounds the bulk class).
 
 pub mod admission;
+pub mod cache;
 pub mod metrics;
 pub mod router;
 pub mod service;
@@ -41,6 +46,7 @@ pub use admission::{
     AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, CloseReason,
     DeadlineClass, ReadyBatch, RejectReason,
 };
+pub use cache::{CacheKey, ResultCache, CACHE_STRIPES};
 pub use metrics::{ClassPadding, CloseCounts, Metrics, QueueDepth, ShardLoad, Snapshot};
 pub use router::Router;
 pub use service::{

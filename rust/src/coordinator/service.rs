@@ -56,18 +56,18 @@ use std::time::{Duration, Instant};
 use crate::coordinator::admission::{
     AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, DeadlineClass, ReadyBatch,
 };
+use crate::coordinator::cache::ResultCache;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
 use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor};
-use crate::runtime::pack::{pack_into, unpack_into, PackedBatch};
+use crate::runtime::pack::{pack_into_indexed, unpack_into, PackedBatch, SlotHint};
 use crate::runtime::simd::SimdCpuBackend;
 use crate::runtime::steal::StealQueues;
 use crate::runtime::stream::PipelineDepth;
 use crate::runtime::{Bucket, Engine, Manifest, Variant};
 use crate::trace::TraceCapture;
 use crate::tune::{model_weights, CalibratedModel, CostModel, NominalModel, Profile};
-use crate::util::Rng;
 
 /// Which backend a shard runs — the heterogeneous-sharding knob. A
 /// deployment may mix engine shards with CPU shards (Gurung & Ray's
@@ -384,8 +384,27 @@ pub struct Config {
     /// blocks until done). Avoids multi-second head-of-line blocking on
     /// first-touch XLA compilation.
     pub warm: bool,
-    /// Seed for the per-problem constraint shuffles.
+    /// Seed for the per-problem constraint shuffles. Shuffle streams
+    /// derive from `seed ^ wire_key(problem)` — pure functions of content
+    /// — so identical content packs to identical wire bytes on every
+    /// shard of this service (the reuse layer's bit-identity foundation).
     pub seed: u64,
+    /// Result-cache capacity in entries; `0` disables the cache entirely
+    /// (no key hashing, no lookups — the admission path is byte-for-byte
+    /// the uncached one). The `--cache-capacity` knob.
+    pub cache_capacity: usize,
+    /// Cache quantization epsilon: `0.0` matches exact f64 bit patterns
+    /// (hits are bit-identical by construction); `> 0.0` snaps
+    /// coefficients to an eps grid so temporally coherent near-duplicates
+    /// share entries (approximate mode). The `--cache-eps` knob.
+    pub cache_eps: f64,
+    /// Warm-start packed batches from the cache: slots whose problem
+    /// content **exactly** matches a completed result carry a certified
+    /// hint lane, and the backends skip re-solving them. Advisory —
+    /// hints never change result bits (certification is re-checked
+    /// against the packed bytes at execute time). Requires
+    /// `cache_capacity > 0` to have any effect. The `--warm-start` knob.
+    pub warm_start: bool,
     /// Recording tap on the admission path: every successfully routed
     /// submit appends one event (arrival offset, deadline class, size
     /// class, payload seed) to this shared capture, which the caller
@@ -412,6 +431,9 @@ impl Default for Config {
             queue_depth: 8192,
             warm: true,
             seed: 0x5EED,
+            cache_capacity: 0,
+            cache_eps: 0.0,
+            warm_start: false,
             capture: None,
         }
     }
@@ -528,6 +550,10 @@ pub struct Service {
     model: Arc<CalibratedModel>,
     backend_names: Vec<&'static str>,
     capture: Option<TraceCapture>,
+    /// Content-addressed result cache (None when `cache_capacity == 0`):
+    /// consulted on submit (duplicate content answered without queueing)
+    /// and filled by the execute stages as replies fan out.
+    cache: Option<Arc<ResultCache>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     executors: Vec<std::thread::JoinHandle<()>>,
 }
@@ -652,6 +678,21 @@ impl Service {
 
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_depth);
 
+        // The cross-request reuse layer: a lock-striped content-addressed
+        // result cache shared by the submit path (duplicate answering),
+        // the pack stages (warm-hint attachment), and the execute stages
+        // (result fill). None when disabled — the uncached admission path
+        // pays nothing, not even key hashing.
+        let cache: Option<Arc<ResultCache>> = (config.cache_capacity > 0)
+            .then(|| Arc::new(ResultCache::new(config.cache_capacity, config.cache_eps)));
+        let warm_start = config.warm_start && cache.is_some();
+        // One pack base for EVERY shard: shuffle streams derive from
+        // `base ^ wire_key(problem)`, so the same content packs to the
+        // same bytes wherever (and whenever) it lands — the property the
+        // cache's bit-identity contract and warm-hint certification rest
+        // on. (A per-shard base would break cross-shard identity.)
+        let pack_base = config.seed;
+
         // Executor pool: one pack/execute pair per shard. Pack stages feed
         // the shared work-stealing staged queues (bounded at `depth` per
         // shard); `outstanding[e]` counts batches dispatched to shard e and
@@ -686,7 +727,6 @@ impl Service {
             let pack_manifest = manifest.clone();
             let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
             batch_txs.push(batch_tx);
-            let seed = config.seed ^ (e as u64).wrapping_mul(0xA5A5_5A5A_1234_5678);
 
             // Pack stage: this shard's ready batches -> staged queue.
             {
@@ -695,12 +735,12 @@ impl Service {
                 let queues = queues.clone();
                 let pack_alive = pack_alive.clone();
                 let model = model.clone();
+                let pack_cache = warm_start.then(|| cache.clone()).flatten();
                 executors.push(std::thread::spawn(move || {
                     // Held for the thread's lifetime: the last pack stage
                     // to exit (or unwind) closes the staged queues.
                     let _alive =
                         PackAliveGuard { alive: pack_alive, queues: queues.clone() };
-                    let mut rng = Rng::new(seed);
                     while let Ok(batch) = batch_rx.recv() {
                         let staged = stage_batch(
                             &pack_manifest,
@@ -708,7 +748,8 @@ impl Service {
                             e,
                             model.as_ref(),
                             batch,
-                            &mut rng,
+                            pack_base,
+                            pack_cache.as_deref(),
                             &queues,
                             &recycle_rx,
                         );
@@ -727,6 +768,7 @@ impl Service {
             // replies.
             {
                 let metrics = metrics.clone();
+                let fill_cache = cache.clone();
                 let router = router.clone();
                 let warm_manifest = manifest.clone();
                 let variant = config.variant;
@@ -763,6 +805,7 @@ impl Service {
                             popped.stolen,
                             popped.item,
                             &metrics,
+                            fill_cache.as_deref(),
                             model.as_ref(),
                             &mut solutions,
                             &recycle_txs,
@@ -930,6 +973,7 @@ impl Service {
             model,
             backend_names,
             capture: config.capture,
+            cache,
             dispatcher: Some(dispatcher),
             executors,
         })
@@ -968,6 +1012,26 @@ impl Service {
         // Closed service must not appear in a fixture, mirroring the
         // submit counter below).
         let captured = self.capture.as_ref().map(|c| c.event_for(&problem, class));
+        // Cross-request reuse: a submit whose content key matches a
+        // completed result is answered HERE — it never queues, packs, or
+        // executes. The reply channel is pre-filled so a cache hit is
+        // indistinguishable to the caller from a (very fast) solve; the
+        // submit still counts as submitted and still lands in a capture
+        // (replaying the trace reproduces the hit). A problem whose twin
+        // is merely *in flight* misses and executes too — lookups never
+        // park behind pending work (see [`ResultCache`] docs).
+        if let Some(cache) = &self.cache {
+            if let Some(sol) = cache.lookup(&cache.key(&problem)) {
+                let _ = reply.send(Ok(sol));
+                self.metrics.on_submit();
+                self.metrics.on_cache_hit();
+                if let (Some(cap), Some(ev)) = (&self.capture, captured) {
+                    cap.push(ev);
+                }
+                return Ok(Ticket { rx });
+            }
+            self.metrics.on_cache_miss();
+        }
         self.tx
             .send(Msg::Request(class_m, class, Pending { problem, reply }))
             .map_err(|_| SubmitError::Closed)?;
@@ -1013,6 +1077,13 @@ impl Service {
     /// The backend label of each executor shard (index = shard id).
     pub fn shard_backends(&self) -> &[&'static str] {
         &self.backend_names
+    }
+
+    /// The content-addressed result cache, when enabled
+    /// (`cache_capacity > 0`) — for occupancy inspection in tests and
+    /// the ops dashboard.
+    pub fn result_cache(&self) -> Option<&Arc<ResultCache>> {
+        self.cache.as_ref()
     }
 
     /// Graceful shutdown: flush queues, join threads.
@@ -1091,6 +1162,14 @@ pub fn class_cost_table(
 /// the pipeline's depth control: at most `depth` packed batches wait while
 /// the execute stages (this shard's, or a stealing peer's) catch up.
 ///
+/// `pack_base` is the service-wide shuffle base (identical on every
+/// shard): per-problem streams derive from `pack_base ^ wire_key(p)`, so
+/// identical content packs to identical bytes wherever it lands. With
+/// `cache` set (warm-start enabled), slots whose content **exactly**
+/// matches a completed cached result get a certified [`SlotHint`] lane —
+/// the backends then skip re-solving those slots, emitting the hinted
+/// result bits instead.
+///
 /// Returns whether the batch reached a staged queue — `false` means the
 /// caller must settle the shard's backlog accounting itself.
 fn stage_batch(
@@ -1099,7 +1178,8 @@ fn stage_batch(
     shard: usize,
     model: &CalibratedModel,
     batch: ReadyBatch<Pending>,
-    rng: &mut Rng,
+    pack_base: u64,
+    cache: Option<&ResultCache>,
     queues: &StealQueues<StagedBatch>,
     recycle_rx: &mpsc::Receiver<PackedBatch>,
 ) -> bool {
@@ -1123,15 +1203,45 @@ fn stage_batch(
 
     let mut pb = recycle_rx.try_recv().unwrap_or_else(|_| PackedBatch::empty());
     let pack_started = Instant::now();
-    let packed = pack_into(&batch.items, bucket.batch, bucket.m, Some(rng), &mut pb);
-    let pack_finished = Instant::now();
+    let packed = pack_into_indexed(
+        &batch.items,
+        bucket.batch,
+        bucket.m,
+        Some(pack_base),
+        0,
+        &mut pb,
+    );
     if let Err(e) = packed {
-        let msg = format!("batch packing failed: {e}");
+        let pack_err = format!("batch packing failed: {e}");
         for pending in batch.items {
-            let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
+            let _ = pending.reply.send(Err(anyhow::anyhow!("{pack_err}")));
         }
         return false;
     }
+    // Warm-start: attach a certified hint lane for every slot whose
+    // content EXACTLY matches a completed cached result (lookup_exact sees
+    // through quantization — an eps-close neighbor's solution is never a
+    // hint). The hint key is the slot's packed-bytes hash, re-checked by
+    // the backend at execute time, so a hint can only ever reproduce the
+    // bits a cold solve of those bytes would produce.
+    if let Some(cache) = cache {
+        for (i, pending) in batch.items.iter().enumerate() {
+            let key = cache.key(&pending.problem);
+            if let Some(sol) = cache.lookup_exact(&key) {
+                let status = match sol.status {
+                    Status::Optimal => 0,
+                    Status::Infeasible => 1,
+                };
+                let point = if sol.status == Status::Optimal {
+                    [sol.point[0] as f32, sol.point[1] as f32]
+                } else {
+                    [0.0, 0.0]
+                };
+                pb.set_hint(i, SlotHint { key: pb.slot_key(i), status, point });
+            }
+        }
+    }
+    let pack_finished = Instant::now();
 
     // Per-shard cost estimates off the model seam, so a steal re-costs
     // the batch at the thief's measured — not nominal — rate. Calibrated
@@ -1178,6 +1288,7 @@ fn run_staged(
     stolen: bool,
     staged: StagedBatch,
     metrics: &Metrics,
+    cache: Option<&ResultCache>,
     model: &CalibratedModel,
     solutions: &mut Vec<Solution>,
     recycle_txs: &[mpsc::Sender<PackedBatch>],
@@ -1251,6 +1362,16 @@ fn run_staged(
                 metrics.set_calibrated_weight(shard, model.weight(shard));
             }
             for (pending, sol) in items.into_iter().zip(solutions.iter()) {
+                // Fill the reuse cache as replies fan out: the next
+                // submit with this content answers from here. Insert is
+                // idempotent, so duplicate in-flight twins that both
+                // complete fill exactly one entry.
+                if let Some(cache) = cache {
+                    let evicted = cache.insert(&cache.key(&pending.problem), *sol);
+                    if evicted > 0 {
+                        metrics.on_cache_evict(evicted);
+                    }
+                }
                 let _ = pending.reply.send(Ok(*sol));
             }
         }

@@ -124,8 +124,23 @@ impl Scenario {
         n: usize,
         rate: f64,
     ) -> anyhow::Result<Vec<ScenarioRequest>> {
+        self.generate_at_speed(rng, n, rate, 1.0)
+    }
+
+    /// [`generate`](Self::generate) with trace time compression: for
+    /// `trace:PATH` replay the recorded arrival stamps are divided by
+    /// `replay_speed` (the `--replay-speed` knob — see
+    /// [`crate::trace::replay_at`]). Synthetic scenarios ignore it: their
+    /// pacing is already the caller's `rate`.
+    pub fn generate_at_speed(
+        &self,
+        rng: &mut Rng,
+        n: usize,
+        rate: f64,
+        replay_speed: f64,
+    ) -> anyhow::Result<Vec<ScenarioRequest>> {
         if let Scenario::Trace(path) = self {
-            return crate::trace::replay_file(path, n);
+            return crate::trace::replay_file_at(path, n, replay_speed);
         }
         assert!(rate > 0.0, "rate must be positive");
         Ok(match self {

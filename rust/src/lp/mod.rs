@@ -5,5 +5,8 @@ pub mod brute;
 pub mod types;
 pub mod validate;
 
-pub use types::{HalfPlane, Problem, Solution, Status, EPS, M_BIG};
+pub use types::{
+    content_key, content_key_from, HalfPlane, Problem, Solution, Status,
+    CONTENT_KEY_BASIS, CONTENT_KEY_VERIFY_BASIS, EPS, M_BIG,
+};
 pub use validate::{Tolerance, Verdict};

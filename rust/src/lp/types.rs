@@ -81,6 +81,47 @@ impl Problem {
     }
 }
 
+/// FNV-1a offset basis shared by every content key in the stack.
+pub const CONTENT_KEY_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Second, independent FNV basis used for cache verify hashes.
+pub const CONTENT_KEY_VERIFY_BASIS: u64 = 0x8445_22d7_2e3a_8f13;
+
+/// Content key of a problem: FNV-1a over the coefficient bits of every
+/// constraint `(nx, ny, b)` in order, then the objective pair.
+///
+/// With `eps == 0.0` the raw f64 bit patterns are hashed, so equal keys
+/// (modulo the 2^-64 collision caveat) certify byte-identical problem
+/// content -- the contract the result cache and warm-start certification
+/// rely on. With `eps > 0.0` each coefficient is first snapped to the
+/// grid `round(v / eps)`, so eps-close problems share a key (approximate
+/// reuse mode). Trace capture's `payload_seed` is this key masked to 32
+/// bits.
+pub fn content_key(p: &Problem, eps: f64) -> u64 {
+    content_key_from(p, eps, CONTENT_KEY_BASIS)
+}
+
+/// [`content_key`] with an explicit FNV offset basis, so independent hash
+/// families (primary vs verify) can be derived from the same walk.
+pub fn content_key_from(p: &Problem, eps: f64, basis: u64) -> u64 {
+    let mut h = basis;
+    let mut mix = |v: f64| {
+        let bits = if eps > 0.0 { ((v / eps).round() as i64) as u64 } else { v.to_bits() };
+        for byte in bits.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for c in &p.constraints {
+        mix(c.nx);
+        mix(c.ny);
+        mix(c.b);
+    }
+    mix(p.obj[0]);
+    mix(p.obj[1]);
+    h
+}
+
 /// Solve outcome. Numeric values match the kernel/AOT status codes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(i32)]
@@ -153,6 +194,32 @@ mod tests {
         assert_eq!(Status::from_code(0).unwrap(), Status::Optimal);
         assert_eq!(Status::from_code(1).unwrap(), Status::Infeasible);
         assert!(Status::from_code(7).is_err());
+    }
+
+    #[test]
+    fn content_key_exact_mode_separates_bitwise_unequal_problems() {
+        let a = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0)], [0.0, 1.0]);
+        let b = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0)], [0.0, 1.0]);
+        assert_eq!(content_key(&a, 0.0), content_key(&b, 0.0));
+        let c = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0 + 1e-12)], [0.0, 1.0]);
+        assert_ne!(content_key(&a, 0.0), content_key(&c, 0.0));
+    }
+
+    #[test]
+    fn content_key_quantized_mode_merges_eps_close_problems() {
+        let a = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0)], [0.0, 1.0]);
+        let c = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0 + 1e-9)], [0.0, 1.0]);
+        assert_eq!(content_key(&a, 1e-3), content_key(&c, 1e-3));
+        assert_ne!(content_key(&a, 0.0), content_key(&c, 0.0));
+    }
+
+    #[test]
+    fn content_key_bases_are_independent() {
+        let a = Problem::new(vec![HalfPlane::new(1.0, 0.0, 2.0)], [0.0, 1.0]);
+        assert_ne!(
+            content_key_from(&a, 0.0, CONTENT_KEY_BASIS),
+            content_key_from(&a, 0.0, CONTENT_KEY_VERIFY_BASIS)
+        );
     }
 
     #[test]

@@ -77,7 +77,9 @@ fn print_help() {
                     [--bulk-slo-ms MS] [--scenario poisson|bursty|...|trace:PATH]\n\
                     [--tune-profile TUNE_profile.json]\n\
                     [--class-overrides '16:slo-ms=1;64:max-batch=128']\n\
-                    [--capture TRACE_run.json] [--tui] [--tui-frame]\n\
+                    [--capture TRACE_run.json] [--replay-speed X] [--passes N]\n\
+                    [--tui] [--tui-frame]\n\
+                    [--cache-capacity N] [--cache-eps E] [--warm-start]\n\
                                         run the coordinator under open-loop load\n\
                                         (--backends mixes shard types; CPU-only\n\
                                         mixes serve without artifacts; --policy\n\
@@ -85,12 +87,20 @@ fn print_help() {
                                         --max-queue bounds queueing with load\n\
                                         shedding, --slo-ms sets the interactive\n\
                                         SLO, --scenario picks a traffic model or\n\
-                                        replays a captured trace, --tune-profile\n\
+                                        replays a captured trace, --replay-speed\n\
+                                        time-compresses a trace replay by X,\n\
+                                        --passes serves the same stream N times\n\
+                                        through one service (repeat passes hit\n\
+                                        the result cache), --tune-profile\n\
                                         calibrates dispatch from measured costs,\n\
                                         --class-overrides sets per-size-class\n\
                                         max-batch/SLO bounds, --capture records\n\
                                         admitted traffic to a replayable trace\n\
-                                        fixture, --tui renders a live terminal\n\
+                                        fixture, --cache-capacity enables the\n\
+                                        content-addressed result cache (N entries),\n\
+                                        --cache-eps quantizes its keys, --warm-start\n\
+                                        seeds packed batches from cached results,\n\
+                                        --tui renders a live terminal\n\
                                         dashboard, --tui-frame dumps one final\n\
                                         dashboard frame after the run)\n\
            tune     [--backends cpu,batch-cpu:4,simd-cpu:4] [--out TUNE_profile.json]\n\
@@ -234,6 +244,16 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     let capture = capture_path.as_ref().map(|_| TraceCapture::new());
     let tui = flags.contains_key("tui");
     let tui_frame = flags.contains_key("tui-frame");
+    let cache_capacity = flag(flags, "cache-capacity", 0usize);
+    let cache_eps = flag(flags, "cache-eps", 0.0f64);
+    let warm_start = flags.contains_key("warm-start");
+    let replay_speed = flag(flags, "replay-speed", 1.0f64);
+    anyhow::ensure!(
+        replay_speed > 0.0 && replay_speed.is_finite(),
+        "--replay-speed must be positive"
+    );
+    let passes = flag(flags, "passes", 1usize);
+    anyhow::ensure!(passes >= 1, "--passes must be >= 1");
 
     let config = Config {
         max_wait: std::time::Duration::from_millis(slo_ms),
@@ -246,6 +266,9 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         tune_profile,
         class_overrides,
         capture: capture.clone(),
+        cache_capacity,
+        cache_eps,
+        warm_start,
         ..Config::default()
     };
     let service = Service::start(artifact_dir(flags), config)?;
@@ -276,7 +299,8 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     // replay), or the classic interactive-only Poisson trace.
     let mut rng = Rng::new(seed);
     let reqs: Vec<gen::scenarios::ScenarioRequest> = match flags.get("scenario") {
-        Some(name) => gen::scenarios::Scenario::parse(name)?.generate(&mut rng, requests, rate)?,
+        Some(name) => gen::scenarios::Scenario::parse(name)?
+            .generate_at_speed(&mut rng, requests, rate, replay_speed)?,
         None => {
             let tp = trace::TraceParams { rate, m_lo: 8, m_hi: 64, infeasible_frac: 0.02 };
             trace::poisson_trace(&mut rng, requests, tp)
@@ -291,37 +315,45 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     };
 
     println!(
-        "serving {requests} requests at ~{rate:.0}/s (open loop, policy {})...",
-        policy.as_str()
+        "serving {requests} requests at ~{rate:.0}/s (open loop, policy {}{})...",
+        policy.as_str(),
+        if passes > 1 { format!(", {passes} passes") } else { String::new() }
     );
-    let t0 = Timer::start();
-    let mut tickets = Vec::with_capacity(reqs.len());
-    for r in reqs {
-        // Open-loop pacing.
-        while t0.elapsed_ns() < r.at_ns {
-            std::hint::spin_loop();
-        }
-        tickets.push(
-            service
-                .submit_with_class(r.problem, r.class)
-                .map_err(|e| anyhow::anyhow!("{e}"))?,
-        );
-    }
+    let t_run = Timer::start();
     let mut infeasible = 0usize;
     let mut shed = 0usize;
-    for t in tickets {
-        match t.wait() {
-            Ok(sol) => {
-                if sol.status == Status::Infeasible {
-                    infeasible += 1;
-                }
+    // `--passes N`: replay the same request stream N times through the one
+    // service, draining each pass before the next — with the result cache
+    // enabled, every repeat pass re-asks exactly the questions the first
+    // pass answered (the cache-reuse demonstration, and the CI reuse leg).
+    for _ in 0..passes {
+        let t0 = Timer::start();
+        let mut tickets = Vec::with_capacity(reqs.len());
+        for r in &reqs {
+            // Open-loop pacing.
+            while t0.elapsed_ns() < r.at_ns {
+                std::hint::spin_loop();
             }
-            // Shed replies are expected under overload with a bounded
-            // queue; anything else would double-count in the metrics.
-            Err(_) => shed += 1,
+            tickets.push(
+                service
+                    .submit_with_class(r.problem.clone(), r.class)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            );
+        }
+        for t in tickets {
+            match t.wait() {
+                Ok(sol) => {
+                    if sol.status == Status::Infeasible {
+                        infeasible += 1;
+                    }
+                }
+                // Shed replies are expected under overload with a bounded
+                // queue; anything else would double-count in the metrics.
+                Err(_) => shed += 1,
+            }
         }
     }
-    let wall_s = t0.elapsed_ns() as f64 / 1e9;
+    let wall_s = t_run.elapsed_ns() as f64 / 1e9;
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     if let Some(handle) = tui_thread {
         let _ = handle.join();
@@ -333,7 +365,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     }
     println!(
         "done in {wall_s:.2}s -> {:.0} solved LPs/s",
-        (requests - shed) as f64 / wall_s
+        (requests * passes - shed) as f64 / wall_s
     );
     println!(
         "batches: {}  mean occupancy: {:.1}%  infeasible: {infeasible}",
@@ -368,6 +400,16 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
             p.class_m,
             p.batches,
             100.0 * p.waste()
+        );
+    }
+    if cache_capacity > 0 {
+        println!(
+            "cache: {} hits / {} misses / {} evictions  hit-rate {:.1}%  warm-start {}",
+            snap.cache_hits,
+            snap.cache_misses,
+            snap.cache_evictions,
+            100.0 * snap.cache_hit_rate(),
+            if warm_start { "on" } else { "off" }
         );
     }
     println!("exec memory fraction: {:.1}%", 100.0 * snap.memory_fraction());

@@ -218,10 +218,29 @@ pub(crate) fn ensure_shape(bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<
 /// is split — produces bytes identical to one serial pass: this one
 /// routine is what keeps [`CpuShardExecutor`] and [`BatchCpuBackend`]
 /// bitwise interchangeable.
+///
+/// Warm-start hints ([`crate::runtime::pack::SlotHint`]) short-circuit a
+/// slot only when the hint's key matches the slot's wire key — a certified
+/// hint's outcome *is* what solving the slot's bytes produces (packed
+/// bytes are a pure function of content, and this routine is deterministic
+/// in them), so hinted and cold execution stay bit-identical.
 fn solve_packed_range(pb: &PackedBatch, start: usize, sol: &mut [f32], status: &mut [i32]) {
     let mut cons: Vec<HalfPlane> = Vec::with_capacity(pb.m);
     for i in 0..status.len() {
         let slot = start + i;
+        if let Some(h) = pb.slot_hint(slot) {
+            if h.key == pb.slot_key(slot) {
+                // Mirror the cold path's writes exactly: the solution pair
+                // is only written for optimal slots, so raw wire bytes stay
+                // identical to a hintless execution.
+                if h.status == 0 {
+                    sol[i * 2] = h.point[0];
+                    sol[i * 2 + 1] = h.point[1];
+                }
+                status[i] = h.status;
+                continue;
+            }
+        }
         let lines = pb.slot_lines(slot);
         cons.clear();
         for k in 0..pb.slot_valid_rows(slot) {
@@ -388,6 +407,32 @@ mod tests {
             let same = sol.iter().zip(&want_sol).all(|(a, w)| a.to_bits() == w.to_bits());
             assert!(same, "threads={threads} diverged from the serial slot solve");
             assert_eq!(status, want_status, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn certified_hints_do_not_change_raw_bytes() {
+        // Execute cold, then re-execute with every slot hinted from the
+        // cold outputs (plus one stale hint): raw wire bytes must be
+        // identical — the warm-start contract at the executor layer.
+        let b = bucket(32, 16);
+        let mut pb = packed(20, 14, 32, 16, 19);
+        let (cold_sol, cold_status, _) = CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+        for i in 0..pb.used {
+            pb.set_hint(
+                i,
+                crate::runtime::pack::SlotHint {
+                    key: if i == 3 { 0xBAD } else { pb.slot_key(i) },
+                    status: cold_status[i],
+                    point: [cold_sol[i * 2], cold_sol[i * 2 + 1]],
+                },
+            );
+        }
+        for threads in [1usize, 4] {
+            let (sol, status, _) = BatchCpuBackend::new(threads).execute_raw(&b, &pb).unwrap();
+            let same = sol.iter().zip(&cold_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+            assert!(same, "threads={threads}: hinted bytes diverged");
+            assert_eq!(status, cold_status);
         }
     }
 

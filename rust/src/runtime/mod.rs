@@ -39,7 +39,10 @@ pub use backend::{
 };
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
-pub use pack::{pack, pack_into, pack_into_indexed, unpack, unpack_into, PackedBatch, SoaLanes};
+pub use pack::{
+    pack, pack_into, pack_into_indexed, unpack, unpack_into, wire_key, PackedBatch, SlotHint,
+    SoaLanes,
+};
 pub use shard::{
     pick_chunk_size, pick_chunk_size_fitted, plan_chunk_size, plan_chunk_size_with_model,
     ShardExecutor, ShardReport, ShardStats, ShardedEngine,

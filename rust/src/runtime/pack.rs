@@ -11,21 +11,68 @@
 //! allocation-free in steady state ([`PackedBatch`] carries its own scratch
 //! and is rotated through the engine's buffer pool) and to fan out over
 //! scoped threads for large chunks. Shuffle streams are derived per problem
-//! from one base draw, so packed bytes are identical whatever the thread
-//! count — and identical between `Engine::solve` and `Engine::solve_stream`.
+//! from one base draw XORed with the problem's *wire key* ([`wire_key`], a
+//! hash of its packed content), so packed bytes are identical whatever the
+//! thread count, the chunk boundaries, or the problem's position in the
+//! workload — identical problem content packs to identical slot bytes. That
+//! content → bytes determinism is the foundation of the cross-request reuse
+//! layer (result cache + warm-start certification): a result produced for a
+//! slot is provably the result any later solve of the same content yields.
 
 use std::borrow::Borrow;
 
-use crate::lp::types::{Problem, Solution, Status};
+use crate::lp::types::{Problem, Solution, Status, CONTENT_KEY_BASIS};
 use crate::util::Rng;
 
 /// Problems-per-chunk at which [`pack_into`] fans out over scoped threads.
 /// Below this, thread spawn overhead (~tens of µs) beats the win.
 pub const PAR_PACK_THRESHOLD: usize = 512;
 
-/// Per-problem shuffle streams derive as `base ^ idx * GOLDEN` (the same
-/// SplitMix-style stream splitting `solvers::batch_cpu` uses).
-const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+/// FNV-1a prime shared by the wire-key hashes below.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Wire key of a problem: FNV-1a over the f32 bit patterns the pack stage
+/// writes (normalized constraints in input order, then the objective).
+///
+/// Per-problem shuffle streams derive as `base ^ wire_key(p)`, so a
+/// problem's packed bytes depend only on its content and the base seed —
+/// never on its batch index. Problems whose normalized f32 images coincide
+/// pack (and therefore solve) identically, which is exactly the
+/// equivalence the result cache serves under.
+pub fn wire_key(p: &Problem) -> u64 {
+    let mut h = CONTENT_KEY_BASIS;
+    let mut mix = |v: f32| {
+        for byte in v.to_bits().to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    for c in &p.constraints {
+        let n = c.normalized();
+        mix(n.nx as f32);
+        mix(n.ny as f32);
+        mix(n.b as f32);
+    }
+    mix(p.obj[0] as f32);
+    mix(p.obj[1] as f32);
+    h
+}
+
+/// A warm-start hint attached to one packed slot: a prior solve's outcome
+/// tagged with the [`PackedBatch::slot_key`] of the slot that produced it.
+/// Executors use the hint only when its key matches the receiving slot's
+/// key — equal keys certify identical wire bytes (2^-64 FNV collision
+/// caveat), so the hinted outcome *is* what solving the slot would return.
+/// `key == 0` is the no-hint sentinel.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SlotHint {
+    /// Certifying wire key of the producing slot; 0 = no hint.
+    pub key: u64,
+    /// Producing slot's status code (0 = optimal, 1 = infeasible).
+    pub status: i32,
+    /// Producing slot's solution point in wire (f32) precision.
+    pub point: [f32; 2],
+}
 
 /// A packed batch ready for the PJRT executable.
 #[derive(Clone, Debug, Default)]
@@ -38,6 +85,11 @@ pub struct PackedBatch {
     pub obj: Vec<f32>,
     /// How many of the B slots hold real problems (rest are padding).
     pub used: usize,
+    /// Optional per-slot warm-start hint lanes riding alongside the wire
+    /// buffers: empty on the cold path, `batch` entries once any slot is
+    /// hinted (unhinted slots carry the `key == 0` sentinel). Cleared by
+    /// every repack so recycled buffers never leak stale hints.
+    pub hints: Vec<SlotHint>,
     /// Reused permutation scratch for the serial pack path (hot path: no
     /// allocation once grown to the bucket's m).
     perm_scratch: Vec<u32>,
@@ -94,6 +146,53 @@ impl PackedBatch {
         }
         k
     }
+
+    /// Certifying key of a slot's wire content: FNV-1a over the valid-row
+    /// count, each valid row's `[nx, ny, b]` f32 bits in wire order, and
+    /// the objective. Padding rows are excluded, so the key is invariant
+    /// to the bucket's `m` — the same problem packed into different bucket
+    /// shapes keys identically. Two slots with equal keys hold identical
+    /// solve inputs, so a [`SlotHint`] whose key matches certifies its
+    /// outcome as this slot's solve result.
+    pub fn slot_key(&self, slot: usize) -> u64 {
+        let valid = self.slot_valid_rows(slot);
+        let lines = self.slot_lines(slot);
+        let mut h = CONTENT_KEY_BASIS;
+        let mut mix_bits = |bits: u32| {
+            for byte in bits.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        mix_bits(valid as u32);
+        for k in 0..valid {
+            let src = k * Self::ROW_STRIDE;
+            mix_bits(lines[src].to_bits());
+            mix_bits(lines[src + 1].to_bits());
+            mix_bits(lines[src + 2].to_bits());
+        }
+        let [cx, cy] = self.slot_obj(slot);
+        mix_bits(cx.to_bits());
+        mix_bits(cy.to_bits());
+        h
+    }
+
+    /// Attach a warm-start hint to `slot` (grows the hint lanes to `batch`
+    /// on first use). Hints with `key == 0` are the no-hint sentinel.
+    pub fn set_hint(&mut self, slot: usize, hint: SlotHint) {
+        assert!(slot < self.batch, "hint slot {slot} exceeds batch {}", self.batch);
+        if self.hints.len() < self.batch {
+            self.hints.clear();
+            self.hints.resize(self.batch, SlotHint::default());
+        }
+        self.hints[slot] = hint;
+    }
+
+    /// `slot`'s warm-start hint, if one was attached.
+    #[inline]
+    pub fn slot_hint(&self, slot: usize) -> Option<&SlotHint> {
+        self.hints.get(slot).filter(|h| h.key != 0)
+    }
 }
 
 /// Structure-of-arrays transpose of a [`PackedBatch`] slot range: each
@@ -127,6 +226,16 @@ pub struct SoaLanes {
     pub cy: Vec<f64>,
     /// (stride) valid-row counts per lane; padding lanes carry 0.
     pub rows: Vec<u32>,
+    /// (stride) per-lane hint state: 0 = cold, 1 = certified optimal,
+    /// 2 = certified infeasible. Certified lanes are seeded out of the
+    /// kernel's active masks — their outputs come from `hx`/`hy` instead
+    /// of lane arithmetic. Certification (hint key vs slot key) happens
+    /// here at transpose time, so the kernel never re-derives keys.
+    pub hinted: Vec<u32>,
+    /// (stride) hinted solution x; meaningful where `hinted[i] == 1`.
+    pub hx: Vec<f64>,
+    /// (stride) hinted solution y; meaningful where `hinted[i] == 1`.
+    pub hy: Vec<f64>,
 }
 
 impl SoaLanes {
@@ -179,8 +288,21 @@ impl SoaLanes {
         self.cy.resize(stride, 0.0);
         self.rows.clear();
         self.rows.resize(stride, 0);
+        self.hinted.clear();
+        self.hinted.resize(stride, 0);
+        self.hx.clear();
+        self.hx.resize(stride, 0.0);
+        self.hy.clear();
+        self.hy.resize(stride, 0.0);
         for i in 0..lanes {
             let slot = start + i;
+            if let Some(h) = pb.slot_hint(slot) {
+                if h.key == pb.slot_key(slot) {
+                    self.hinted[i] = if h.status == 0 { 1 } else { 2 };
+                    self.hx[i] = h.point[0] as f64;
+                    self.hy[i] = h.point[1] as f64;
+                }
+            }
             let valid = pb.slot_valid_rows(slot);
             self.rows[i] = valid as u32;
             let [ocx, ocy] = pb.slot_obj(slot);
@@ -229,27 +351,30 @@ pub fn pack_into<P: Borrow<Problem> + Sync>(
     out: &mut PackedBatch,
 ) -> anyhow::Result<()> {
     // One base draw per call; every problem's shuffle stream derives from
-    // it by index. This keeps packed bytes identical across thread counts
-    // and between the serial and parallel paths below.
+    // it by content key. This keeps packed bytes identical across thread
+    // counts and between the serial and parallel paths below.
     let base: Option<u64> = rng.map(|r| r.next_u64());
     pack_into_indexed(problems, batch, m, base, 0, out)
 }
 
 /// `pack_into` with the shuffle derivation made explicit: `base` is the one
-/// RNG draw the per-problem streams derive from, and `start_idx` is the
-/// global workload index of `problems[0]`.
+/// RNG draw the per-problem streams derive from.
 ///
-/// Two calls covering disjoint ranges of a workload with the same `base`
-/// produce exactly the per-problem rows one call over the whole workload
-/// would — whatever the chunk boundaries or bucket shapes. This is what
-/// makes chunked/sharded execution ([`crate::runtime::shard`]) bit-identical
-/// to a single serial pack of the same seed.
+/// Streams derive from `base ^ wire_key(problem)`, so two calls covering
+/// disjoint ranges of a workload with the same `base` produce exactly the
+/// per-problem rows one call over the whole workload would — whatever the
+/// chunk boundaries or bucket shapes. This is what makes chunked/sharded
+/// execution ([`crate::runtime::shard`]) bit-identical to a single serial
+/// pack of the same seed, and what makes identical problem content pack
+/// identically wherever it appears (the reuse layer's foundation).
+/// `_start_idx`, the global workload index of `problems[0]`, is retained
+/// for call-site symmetry but no longer affects the bytes.
 pub fn pack_into_indexed<P: Borrow<Problem> + Sync>(
     problems: &[P],
     batch: usize,
     m: usize,
     base: Option<u64>,
-    start_idx: usize,
+    _start_idx: usize,
     out: &mut PackedBatch,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(
@@ -265,6 +390,7 @@ pub fn pack_into_indexed<P: Borrow<Problem> + Sync>(
     out.batch = batch;
     out.m = m;
     out.used = problems.len();
+    out.hints.clear();
     out.lines.clear();
     out.lines.resize(batch * m * 4, 0.0);
     out.obj.clear();
@@ -278,21 +404,20 @@ pub fn pack_into_indexed<P: Borrow<Problem> + Sync>(
     let used_lines = &mut out.lines[..problems.len() * m * 4];
     let used_obj = &mut out.obj[..problems.len() * 2];
     if threads <= 1 {
-        pack_range(problems, m, base, start_idx, used_lines, used_obj, &mut out.perm_scratch);
+        pack_range(problems, m, base, used_lines, used_obj, &mut out.perm_scratch);
     } else {
         let chunk = problems.len().div_ceil(threads);
         std::thread::scope(|scope| {
-            for (t, ((probs, lines), obj)) in problems
+            for ((probs, lines), obj) in problems
                 .chunks(chunk)
                 .zip(used_lines.chunks_mut(chunk * m * 4))
                 .zip(used_obj.chunks_mut(chunk * 2))
-                .enumerate()
             {
                 scope.spawn(move || {
                     // Worker-local scratch: one allocation per worker per
                     // call, amortized over >= PAR_PACK_THRESHOLD problems.
                     let mut perm = Vec::new();
-                    pack_range(probs, m, base, start_idx + t * chunk, lines, obj, &mut perm);
+                    pack_range(probs, m, base, lines, obj, &mut perm);
                 });
             }
         });
@@ -307,13 +432,13 @@ pub fn pack_into_indexed<P: Borrow<Problem> + Sync>(
 }
 
 /// Pack a contiguous range of problems into its slice of the wire buffers.
-/// `start_idx` is the range's global offset (for shuffle-stream derivation);
-/// `lines`/`obj` are the range's sub-slices. Caller has validated sizes.
+/// Shuffle streams derive from `base ^ wire_key(problem)` — a pure function
+/// of problem content, never of position. `lines`/`obj` are the range's
+/// sub-slices. Caller has validated sizes.
 fn pack_range<P: Borrow<Problem>>(
     problems: &[P],
     m: usize,
     base: Option<u64>,
-    start_idx: usize,
     lines: &mut [f32],
     obj: &mut [f32],
     perm_scratch: &mut Vec<u32>,
@@ -322,7 +447,7 @@ fn pack_range<P: Borrow<Problem>>(
         let p = p.borrow();
         let perm: Option<&[u32]> = match base {
             Some(b) => {
-                let mut r = Rng::new(b ^ ((start_idx + i) as u64).wrapping_mul(GOLDEN));
+                let mut r = Rng::new(b ^ wire_key(p));
                 r.permute_into(perm_scratch, p.m());
                 Some(perm_scratch)
             }
@@ -458,7 +583,7 @@ mod tests {
         let mut lines = vec![0.0f32; problems.len() * m * 4];
         let mut obj = vec![0.0f32; problems.len() * 2];
         let mut scratch = Vec::new();
-        pack_range(&problems, m, Some(base), 0, &mut lines, &mut obj, &mut scratch);
+        pack_range(&problems, m, Some(base), &mut lines, &mut obj, &mut scratch);
         assert_eq!(big.lines, lines);
         assert_eq!(big.obj, obj);
     }
@@ -486,6 +611,71 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn packed_bytes_depend_on_content_not_position() {
+        // The reuse layer's foundation: the same problem packs to the same
+        // slot bytes wherever it sits in the workload.
+        let mut rng = Rng::new(29);
+        let problems: Vec<Problem> = (0..5).map(|_| gen::feasible(&mut rng, 7)).collect();
+        let mut rotated = problems.clone();
+        rotated.rotate_left(3);
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let a = pack(&problems, 8, 8, Some(&mut r1)).unwrap();
+        let b = pack(&rotated, 8, 8, Some(&mut r2)).unwrap();
+        for i in 0..problems.len() {
+            let j = (i + problems.len() - 3) % problems.len();
+            assert_eq!(a.slot_lines(i), b.slot_lines(j), "slot {i} vs rotated {j}");
+            assert_eq!(a.slot_obj(i), b.slot_obj(j));
+            assert_eq!(a.slot_key(i), b.slot_key(j));
+        }
+    }
+
+    #[test]
+    fn slot_key_is_invariant_to_bucket_shape() {
+        let mut rng = Rng::new(33);
+        let p = gen::feasible(&mut rng, 6);
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        let small = pack(&[p.clone()], 1, 6, Some(&mut r1)).unwrap();
+        let big = pack(&[p], 4, 16, Some(&mut r2)).unwrap();
+        assert_eq!(small.slot_key(0), big.slot_key(0));
+        // Padding slots share the vacuous-problem key, distinct from real.
+        assert_ne!(big.slot_key(0), big.slot_key(1));
+        assert_eq!(big.slot_key(1), big.slot_key(2));
+    }
+
+    #[test]
+    fn hint_lanes_attach_certify_and_clear_on_repack() {
+        let mut rng = Rng::new(41);
+        let problems: Vec<Problem> = (0..3).map(|_| gen::feasible(&mut rng, 5)).collect();
+        let mut r = Rng::new(8);
+        let mut pb = pack(&problems, 4, 6, Some(&mut r)).unwrap();
+        assert!(pb.slot_hint(0).is_none(), "cold pack carries no hints");
+        let hint = SlotHint { key: pb.slot_key(1), status: 0, point: [1.5, -2.5] };
+        pb.set_hint(1, hint);
+        assert_eq!(pb.slot_hint(1), Some(&hint));
+        assert!(pb.slot_hint(0).is_none(), "sentinel keys read as no hint");
+
+        // A certified hint survives the SoA transpose as a seeded lane.
+        let mut soa = SoaLanes::default();
+        soa.transpose_range(&pb, 0, 4, 4);
+        assert_eq!(soa.hinted[1], 1);
+        assert_eq!((soa.hx[1], soa.hy[1]), (1.5, -2.5));
+        assert_eq!(soa.hinted[0], 0);
+
+        // A stale hint (key mismatch) must not certify.
+        pb.set_hint(2, SlotHint { key: 0xBAD, status: 0, point: [9.0, 9.0] });
+        soa.transpose_range(&pb, 0, 4, 4);
+        assert_eq!(soa.hinted[2], 0);
+
+        // Repacking the buffer clears all hint lanes.
+        let mut r2 = Rng::new(8);
+        pack_into(&problems, 4, 6, Some(&mut r2), &mut pb).unwrap();
+        assert!(pb.hints.is_empty());
+        assert!(pb.slot_hint(1).is_none());
     }
 
     #[test]

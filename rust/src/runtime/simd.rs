@@ -81,6 +81,7 @@ fn window(v: &[f64], at: usize) -> &[f64; LANES] {
 fn solve_window(soa: &SoaLanes, lane0: usize, sol: &mut [f32], status: &mut [i32]) {
     let stride = soa.lane_stride();
     let rows: &[u32; LANES] = soa.rows[lane0..lane0 + LANES].try_into().unwrap();
+    let hinted: &[u32; LANES] = soa.hinted[lane0..lane0 + LANES].try_into().unwrap();
     let cx = window(&soa.cx, lane0);
     let cy = window(&soa.cy, lane0);
 
@@ -90,8 +91,18 @@ fn solve_window(soa: &SoaLanes, lane0: usize, sol: &mut [f32], status: &mut [i32
         sx[i] = if cx[i] >= 0.0 { M_BIG } else { -M_BIG };
         sy[i] = if cy[i] >= 0.0 { M_BIG } else { -M_BIG };
     }
+    // Warm-start: certified hint lanes seed the active masks — they enter
+    // the lockstep scan already masked out (their outcome is known to be
+    // what the scan would compute), and only cold lanes bound the row walk.
     let mut alive = [true; LANES];
-    let max_rows = rows.iter().copied().max().unwrap_or(0) as usize;
+    let mut max_rows = 0usize;
+    for i in 0..LANES {
+        if hinted[i] != 0 {
+            alive[i] = false;
+        } else {
+            max_rows = max_rows.max(rows[i] as usize);
+        }
+    }
 
     for k in 0..max_rows {
         let base = k * stride + lane0;
@@ -198,12 +209,22 @@ fn solve_window(soa: &SoaLanes, lane0: usize, sol: &mut [f32], status: &mut [i32
         if g >= status.len() {
             break;
         }
-        if alive[i] {
-            sol[g * 2] = sx[i] as f32;
-            sol[g * 2 + 1] = sy[i] as f32;
-            status[g] = 0;
-        } else {
-            status[g] = 1; // infeasible: status only, zeros in sol
+        match hinted[i] {
+            1 => {
+                // Certified optimal hint: the stored point is the prior
+                // wire output (f32), so the f64 -> f32 round-trip below is
+                // exact and bytes match the cold scan's writes.
+                sol[g * 2] = soa.hx[lane0 + i] as f32;
+                sol[g * 2 + 1] = soa.hy[lane0 + i] as f32;
+                status[g] = 0;
+            }
+            2 => status[g] = 1, // certified infeasible: status only
+            _ if alive[i] => {
+                sol[g * 2] = sx[i] as f32;
+                sol[g * 2 + 1] = sy[i] as f32;
+                status[g] = 0;
+            }
+            _ => status[g] = 1, // infeasible: status only, zeros in sol
         }
     }
 }
@@ -391,6 +412,39 @@ mod tests {
             assert!(same, "shape ({batch},{m}) diverged");
             assert_eq!(status, want_status, "shape ({batch},{m})");
         }
+    }
+
+    #[test]
+    fn hint_lanes_seed_masks_without_changing_bytes() {
+        // Hint a mix of optimal and infeasible slots from a cold run (plus
+        // one stale key): the hinted SIMD execution must reproduce the cold
+        // bytes exactly, and must agree with the hinted scalar backend.
+        let b = bucket(32, 16);
+        let mut pb = mixed_packed(24, 13, 32, 16, 51);
+        let (cold_sol, cold_status, _) = SimdCpuBackend::new(1).execute_raw(&b, &pb).unwrap();
+        assert!(cold_status.contains(&1), "seed must cover infeasible lanes");
+        for i in 0..pb.used {
+            if i % 2 == 0 {
+                pb.set_hint(
+                    i,
+                    pack::SlotHint {
+                        key: if i == 6 { 0xBAD } else { pb.slot_key(i) },
+                        status: cold_status[i],
+                        point: [cold_sol[i * 2], cold_sol[i * 2 + 1]],
+                    },
+                );
+            }
+        }
+        for threads in [1usize, 3] {
+            let (sol, status, _) = SimdCpuBackend::new(threads).execute_raw(&b, &pb).unwrap();
+            let same = sol.iter().zip(&cold_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+            assert!(same, "threads={threads}: hinted SIMD bytes diverged");
+            assert_eq!(status, cold_status);
+        }
+        let (ssol, sstatus, _) = CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+        let same = ssol.iter().zip(&cold_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+        assert!(same, "hinted scalar and SIMD paths diverged");
+        assert_eq!(sstatus, cold_status);
     }
 
     #[test]

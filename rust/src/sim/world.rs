@@ -9,13 +9,30 @@
 //!
 //! Infeasible/degenerate LPs fall back to v = 0 ("additional computation is
 //! required due to not guaranteeing LPs to be feasible", §5).
+//!
+//! **Temporal coherence / warm-starting** ([`World::with_warm_start`]):
+//! an agent whose neighborhood didn't change between ticks builds the
+//! *same* LP again — the workload the cross-request reuse layer targets.
+//! The warm path keeps each agent's previous-tick `(content key,
+//! solution)` as a [`WarmHint`] and solves through
+//! [`batch_cpu::solve_batch_warm`] under a **fixed** seed, so hints are
+//! advisory and bit-identity holds tick-to-tick: a certified hint returns
+//! exactly what the cold content-keyed solve would. The cold path
+//! (`warm_start` off) is byte-for-byte the historical one.
 
-use crate::lp::types::{Problem, Solution, Status};
+use crate::lp::types::{content_key, Problem, Solution, Status};
 use crate::runtime::{Engine, Variant};
 use crate::sim::avoid::{build_lp, AvoidParams};
 use crate::sim::grid::Grid;
 use crate::solvers::batch_cpu::{self, Algo};
+use crate::solvers::seidel::WarmHint;
 use crate::util::{Rng, Timer};
+
+/// Fixed Seidel shuffle seed for the warm path. Cross-tick bit-identity
+/// requires the seed NOT to vary by tick (the cold path's
+/// `seed = step_count` would re-shuffle an unchanged problem every tick,
+/// making every hint stale by construction).
+const WARM_SEED: u64 = 0x5EED_2D17;
 
 /// Which solver runs the per-step batch.
 pub enum Backend<'a> {
@@ -62,6 +79,9 @@ pub struct StepStats {
     pub solve_ns: u64,
     pub integrate_ns: u64,
     pub arrived: usize,
+    /// Agents whose previous-tick hint certified this step (exact content
+    /// match — the solve was skipped). 0 on the cold path.
+    pub warm_hits: usize,
 }
 
 /// The simulation state.
@@ -72,6 +92,12 @@ pub struct World {
     pub goals: Vec<[f64; 2]>,
     scratch_neighbors: Vec<(u32, f64)>,
     step_count: u64,
+    /// Warm-start CPU batch solves from each agent's previous-tick
+    /// solution (see module docs). Off = the historical cold path.
+    warm_start: bool,
+    /// Per-agent previous-tick hint (content key + solution); refreshed
+    /// every warm step.
+    prev_hints: Vec<Option<WarmHint>>,
 }
 
 impl World {
@@ -85,7 +111,26 @@ impl World {
             goals,
             scratch_neighbors: Vec::new(),
             step_count: 0,
+            warm_start: false,
+            prev_hints: Vec::new(),
         }
+    }
+
+    /// Enable warm-starting: CPU batch steps carry each agent's
+    /// previous-tick solution as an advisory [`WarmHint`]. Results are
+    /// bit-identical to the same warm-path world with hints cleared every
+    /// step ([`Self::clear_warm_hints`]) — hints only skip work. Engine
+    /// steps ignore the flag (hint lanes reach engines through the
+    /// serving path's packed wire format instead).
+    pub fn with_warm_start(mut self) -> World {
+        self.warm_start = true;
+        self
+    }
+
+    /// Drop all previous-tick hints (e.g. after externally teleporting
+    /// agents, or to force a fully cold warm-path step in tests).
+    pub fn clear_warm_hints(&mut self) {
+        self.prev_hints.clear();
     }
 
     /// Two opposing groups crossing a corridor — the classic stress test
@@ -179,6 +224,35 @@ impl World {
 
         let t = Timer::start();
         let solutions: Vec<Solution> = match backend {
+            Backend::Cpu { algo, threads } if self.warm_start => {
+                // Certified hits = hints whose content key still matches
+                // this tick's rebuilt problem (the agent's LP didn't
+                // change); counted here for StepStats, skipped inside
+                // solve_batch_warm by the same key comparison.
+                stats.warm_hits = problems
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, p)| {
+                        self.prev_hints
+                            .get(*i)
+                            .and_then(Option::as_ref)
+                            .is_some_and(|h| h.key == content_key(p, 0.0))
+                    })
+                    .count();
+                let sols = batch_cpu::solve_batch_warm(
+                    &problems,
+                    &self.prev_hints,
+                    *algo,
+                    *threads,
+                    WARM_SEED,
+                );
+                self.prev_hints = problems
+                    .iter()
+                    .zip(&sols)
+                    .map(|(p, s)| Some(WarmHint::for_problem(p, *s)))
+                    .collect();
+                sols
+            }
             Backend::Cpu { algo, threads } => {
                 batch_cpu::solve_batch(&problems, *algo, *threads, self.step_count)
             }
@@ -300,5 +374,73 @@ mod tests {
         assert_eq!(st.lps, 12);
         assert!(st.solve_ns > 0);
         assert!(st.max_m >= 4);
+        assert_eq!(st.warm_hits, 0, "cold path must report no warm hits");
+    }
+
+    #[test]
+    fn warm_start_is_bit_identical_to_hintless_warm_path() {
+        // Two replicas on the warm path: `a` accumulates hints, `b` has
+        // them cleared before every step (every solve cold). Hints are
+        // advisory, so the trajectories must match BITWISE — while `a`
+        // actually skips work (nonzero certified hits once the crowd
+        // spreads out and neighborhoods stabilize).
+        let mut rng_a = Rng::new(6);
+        let mut a = World::crossing_groups(&mut rng_a, 24, WorldParams::default())
+            .with_warm_start();
+        let mut rng_b = Rng::new(6);
+        let mut b = World::crossing_groups(&mut rng_b, 24, WorldParams::default())
+            .with_warm_start();
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 3 };
+        for _ in 0..12 {
+            a.step(&backend, &mut rng_a).unwrap();
+            b.clear_warm_hints();
+            let sb = b.step(&backend, &mut rng_b).unwrap();
+            assert_eq!(sb.warm_hits, 0);
+            for (pa, pb) in a.positions.iter().zip(&b.positions) {
+                assert_eq!(pa[0].to_bits(), pb[0].to_bits());
+                assert_eq!(pa[1].to_bits(), pb[1].to_bits());
+            }
+            for (va, vb) in a.velocities.iter().zip(&b.velocities) {
+                assert_eq!(va[0].to_bits(), vb[0].to_bits());
+                assert_eq!(va[1].to_bits(), vb[1].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn stable_agents_certify_hints_every_tick() {
+        // Arrived, isolated agents (no neighbors in radius, goal_dir
+        // [0,0]) rebuild a position-independent LP every tick — maximal
+        // temporal coherence. From the second step on, every agent's
+        // previous-tick hint certifies. goal_eps is widened so the
+        // degenerate [0,0] objective's arbitrary-but-deterministic
+        // feasible velocity can't drift an agent out of its capture
+        // basin (which would flip goal_dir and change the LP content).
+        let n = 9;
+        let positions: Vec<[f64; 2]> =
+            (0..n).map(|i| [(i % 3) as f64 * 10.0, (i / 3) as f64 * 10.0]).collect();
+        let params = WorldParams { goal_eps: 5.0, ..WorldParams::default() };
+        let mut w = World::new(params, positions.clone(), positions).with_warm_start();
+        let mut rng = Rng::new(8);
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 2 };
+        let first = w.step(&backend, &mut rng).unwrap();
+        assert_eq!(first.warm_hits, 0, "no hints exist before the first step");
+        for _ in 0..3 {
+            let st = w.step(&backend, &mut rng).unwrap();
+            assert_eq!(st.warm_hits, n, "every stable agent should certify");
+        }
+    }
+
+    #[test]
+    fn warm_world_still_reaches_goals() {
+        let mut rng = Rng::new(7);
+        let mut w = World::crossing_groups(&mut rng, 16, WorldParams::default())
+            .with_warm_start();
+        let before = w.mean_goal_distance();
+        let backend = Backend::Cpu { algo: Algo::Seidel, threads: 2 };
+        for _ in 0..5 {
+            w.step(&backend, &mut rng).unwrap();
+        }
+        assert!(w.mean_goal_distance() < before);
     }
 }

@@ -6,7 +6,8 @@
 //! each worker solves its chunk sequentially. Deterministic per-problem RNG
 //! streams keep results independent of the thread count.
 
-use crate::lp::types::{Problem, Solution};
+use crate::lp::types::{content_key, Problem, Solution};
+use crate::solvers::seidel::WarmHint;
 use crate::solvers::{seidel, simplex};
 use crate::util::Rng;
 
@@ -67,6 +68,66 @@ fn solve_one(p: &Problem, algo: Algo, seed: u64, idx: u64) -> Solution {
     }
 }
 
+/// Content-coherent batch solve with optional warm-start hints.
+///
+/// Unlike [`solve_batch`], each problem's Seidel shuffle stream derives
+/// from its *content key* rather than its batch index, so an identical
+/// problem solves to identical bits regardless of where (or when) it
+/// appears — across ticks, batch compositions, and thread counts. That is
+/// what lets a previous-tick [`WarmHint`] short-circuit bit-identically:
+/// a certified hint (exact content-key match) returns exactly what the
+/// cold solve of the same bytes would produce.
+///
+/// `hints` is indexed like `problems`; missing / stale entries are
+/// harmless (advisory contract: hints never change results, only skip
+/// work). Pass `&[]` for a fully cold run.
+pub fn solve_batch_warm(
+    problems: &[Problem],
+    hints: &[Option<WarmHint>],
+    algo: Algo,
+    threads: usize,
+    seed: u64,
+) -> Vec<Solution> {
+    let threads = threads.max(1).min(problems.len().max(1));
+    let mut out = vec![Solution::infeasible(); problems.len()];
+    if problems.is_empty() {
+        return out;
+    }
+    let chunk = problems.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, (probs, outs)) in problems
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .enumerate()
+        {
+            scope.spawn(move || {
+                for (i, (p, o)) in probs.iter().zip(outs.iter_mut()).enumerate() {
+                    let hint = hints.get(t * chunk + i).and_then(Option::as_ref);
+                    *o = solve_one_warm(p, hint, algo, seed);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[inline]
+fn solve_one_warm(p: &Problem, hint: Option<&WarmHint>, algo: Algo, seed: u64) -> Solution {
+    let key = content_key(p, 0.0);
+    if let Some(h) = hint {
+        if h.key == key {
+            return h.sol;
+        }
+    }
+    match algo {
+        Algo::Seidel => {
+            let mut rng = Rng::new(seed ^ key);
+            seidel::solve(p, &mut rng)
+        }
+        Algo::Simplex => simplex::solve(p),
+    }
+}
+
 /// Reasonable default worker count (the paper used a 6-core i7).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -121,6 +182,47 @@ mod tests {
     #[test]
     fn empty_batch() {
         assert!(solve_batch(&[], Algo::Seidel, 4, 0).is_empty());
+        assert!(solve_batch_warm(&[], &[], Algo::Seidel, 4, 0).is_empty());
+    }
+
+    #[test]
+    fn warm_hints_never_change_results() {
+        // Hints on vs off must be bit-identical; stale hints must be
+        // ignored. Mirrors the warm-start contract the sim relies on.
+        let probs = problems(40, 10, 23);
+        let cold = solve_batch_warm(&probs, &[], Algo::Seidel, 3, 77);
+        let hints: Vec<Option<WarmHint>> = probs
+            .iter()
+            .zip(&cold)
+            .enumerate()
+            .map(|(i, (p, s))| match i % 3 {
+                0 => Some(WarmHint::for_problem(p, *s)), // certified
+                1 => Some(WarmHint { key: 0xBAD, sol: *s }), // stale: ignored
+                _ => None,
+            })
+            .collect();
+        let warm = solve_batch_warm(&probs, &hints, Algo::Seidel, 5, 77);
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.status, b.status);
+            assert_eq!(a.point[0].to_bits(), b.point[0].to_bits());
+            assert_eq!(a.point[1].to_bits(), b.point[1].to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_batch_is_content_stable_across_batch_position() {
+        // The same problem must solve to the same bits no matter where it
+        // sits in the batch — the property index-keyed streams lack.
+        let probs = problems(6, 11, 31);
+        let mut shifted = probs.clone();
+        shifted.rotate_left(2);
+        let a = solve_batch_warm(&probs, &[], Algo::Seidel, 2, 9);
+        let b = solve_batch_warm(&shifted, &[], Algo::Seidel, 3, 9);
+        for (i, s) in a.iter().enumerate() {
+            let j = (i + probs.len() - 2) % probs.len();
+            assert_eq!(s.point[0].to_bits(), b[j].point[0].to_bits());
+            assert_eq!(s.point[1].to_bits(), b[j].point[1].to_bits());
+        }
     }
 
     #[test]

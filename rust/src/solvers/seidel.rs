@@ -9,7 +9,7 @@
 //! per-problem CPU baseline, and (via `solvers::batch_cpu`) as the
 //! multicore "mGLPK-analog" baseline.
 
-use crate::lp::types::{Problem, Solution, EPS, M_BIG};
+use crate::lp::types::{content_key, Problem, Solution, EPS, M_BIG};
 use crate::util::Rng;
 
 /// Parallel-line threshold for unit-ish normals. Public because the
@@ -24,6 +24,49 @@ pub struct SolveStats {
     pub violations: usize,
     /// Total 1-D work units executed (sum of i over violating steps).
     pub work_units: usize,
+}
+
+/// A prior solution offered as a warm-start hint, tagged with the exact
+/// content key ([`content_key`] at `eps = 0`) of the problem that produced
+/// it. The key is the certificate: a hint only short-circuits when it
+/// provably came from a byte-identical problem.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WarmHint {
+    /// `content_key(producer, 0.0)` of the problem the hint was solved on.
+    pub key: u64,
+    /// That problem's solve result (optimal vertex, or infeasible).
+    pub sol: Solution,
+}
+
+impl WarmHint {
+    /// Tag `sol` as having been produced by solving `p`.
+    pub fn for_problem(p: &Problem, sol: Solution) -> WarmHint {
+        WarmHint { key: content_key(p, 0.0), sol }
+    }
+}
+
+/// Warm-started solve: certified reuse, otherwise fall through to
+/// [`solve`].
+///
+/// Seidel's result bits depend on constraint insertion order, so a hint
+/// from a *changed* problem can never soundly short-circuit while keeping
+/// results bit-identical to the cold path. The contract is therefore
+/// exact-match certification: the hint is used only when its content key
+/// equals the current problem's ([`content_key`] over raw f64 bits — equal
+/// keys certify identical bytes up to the 2^-64 FNV collision caveat), in
+/// which case returning `hint.sol` *is* the cold result, because the cold
+/// solve of identical bytes with the same `rng` stream reproduces it.
+/// Callers must therefore derive the `rng` stream from problem content
+/// (not batch position) for certification to ever fire across batches —
+/// see `solvers::batch_cpu::solve_batch_warm`. Hints are advisory: passing
+/// `None`, a stale hint, or ignoring hints entirely never changes results.
+pub fn solve_warm(p: &Problem, hint: Option<&WarmHint>, rng: &mut Rng) -> Solution {
+    if let Some(h) = hint {
+        if h.key == content_key(p, 0.0) {
+            return h.sol;
+        }
+    }
+    solve(p, rng)
 }
 
 /// Solve with the constraint order as given (caller already shuffled).
@@ -191,6 +234,37 @@ mod tests {
         let s = solve_ordered(&p);
         assert_eq!(s.status, Status::Optimal);
         assert!((s.point[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_hint_certifies_only_on_exact_content_match() {
+        let p = Problem::new(
+            vec![
+                HalfPlane::new(1.0, 0.3, 2.0).normalized(),
+                HalfPlane::new(-0.2, 1.0, 1.5).normalized(),
+                HalfPlane::new(-1.0, -0.1, 3.0).normalized(),
+            ],
+            [0.6, 0.8],
+        );
+        // Content-derived stream: the cold solve of identical bytes is
+        // reproducible, so a certified hint is exactly the cold result.
+        let seed = crate::lp::types::content_key(&p, 0.0);
+        let cold = solve(&p, &mut Rng::new(seed));
+        let hint = WarmHint::for_problem(&p, cold);
+        let warm = solve_warm(&p, Some(&hint), &mut Rng::new(seed));
+        assert_eq!(warm.status, cold.status);
+        assert_eq!(warm.point[0].to_bits(), cold.point[0].to_bits());
+        assert_eq!(warm.point[1].to_bits(), cold.point[1].to_bits());
+
+        // A changed problem must not be short-circuited by a stale hint:
+        // the key mismatch makes solve_warm fall through to the cold path.
+        let mut changed = p.clone();
+        changed.constraints[0].b += 0.25;
+        let seed2 = crate::lp::types::content_key(&changed, 0.0);
+        let cold2 = solve(&changed, &mut Rng::new(seed2));
+        let warm2 = solve_warm(&changed, Some(&hint), &mut Rng::new(seed2));
+        assert_eq!(warm2.point[0].to_bits(), cold2.point[0].to_bits());
+        assert_eq!(warm2.point[1].to_bits(), cold2.point[1].to_bits());
     }
 
     #[test]

@@ -211,24 +211,12 @@ impl Default for TraceCapture {
 }
 
 /// Content hash of a problem's constraints and objective (FNV-1a over the
-/// f64 bit patterns), masked to 32 bits so the seed survives the
-/// flat-JSON f64 number path exactly.
+/// f64 bit patterns, [`crate::lp::types::content_key`] with `eps = 0`),
+/// masked to 32 bits so the seed survives the flat-JSON f64 number path
+/// exactly. The unmasked key is what the result cache and warm-start
+/// certification share.
 pub fn payload_seed(problem: &Problem) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut mix = |v: f64| {
-        for byte in v.to_bits().to_le_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    };
-    for c in &problem.constraints {
-        mix(c.nx);
-        mix(c.ny);
-        mix(c.b);
-    }
-    mix(problem.obj[0]);
-    mix(problem.obj[1]);
-    h & 0xFFFF_FFFF
+    crate::lp::types::content_key(problem, 0.0) & 0xFFFF_FFFF
 }
 
 /// Detect the workload generator's infeasible construction: its last two

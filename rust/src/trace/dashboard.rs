@@ -8,9 +8,11 @@
 //! non-interactive dump mode the CI smoke leg greps.
 //!
 //! Panels: traffic counters, latency split (queue-wait vs execute
-//! p50/p95/p99), close-reason counts, shed counters, live per-(size ×
-//! deadline) class queue depths, and the per-shard load table with
-//! nominal-vs-calibrated weights, dispatch targets, and steal counts.
+//! p50/p95/p99), close-reason counts, shed counters, the result-cache
+//! row (hits/misses/evictions and the live hit-rate — how much the
+//! reuse layer is absorbing), live per-(size × deadline) class queue
+//! depths, and the per-shard load table with nominal-vs-calibrated
+//! weights, dispatch targets, and steal counts.
 
 use crate::coordinator::Snapshot;
 
@@ -74,6 +76,14 @@ pub fn render_frame(snap: &Snapshot, backends: &[&str], elapsed_s: f64) -> Strin
         snap.shed_bulk,
         snap.padding_waste() * 100.0
     );
+    let _ = writeln!(
+        out,
+        "cache   hits {}  misses {}  evictions {}  hit-rate {:.1}%",
+        snap.cache_hits,
+        snap.cache_misses,
+        snap.cache_evictions,
+        snap.cache_hit_rate() * 100.0
+    );
     let _ = writeln!(out, "queue depths (size class x deadline class)");
     if snap.queue_depths.is_empty() {
         let _ = writeln!(out, "  (no queue-depth samples yet)");
@@ -122,6 +132,10 @@ mod tests {
         m.on_close(16, CloseReason::Full, &[Duration::from_millis(1)], 10);
         m.on_close(16, CloseReason::IdleShard, &[Duration::from_millis(2)], 12);
         m.on_shed(DeadlineClass::Bulk);
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_cache_miss();
+        m.on_cache_evict(1);
         m.on_batch(
             0,
             0,
@@ -150,6 +164,7 @@ mod tests {
             "latency",
             "close reasons",
             "shed   1 total",
+            "cache   hits 1  misses 2  evictions 1  hit-rate 33.3%",
             "queue depths",
             "m=16",
             "shards",

@@ -21,4 +21,4 @@ pub mod replay;
 
 pub use capture::{payload_seed, slab_infeasible, Trace, TraceCapture, TraceEvent, TRACE_SCHEMA};
 pub use dashboard::{render_frame, CLEAR};
-pub use replay::{replay, replay_file};
+pub use replay::{replay, replay_at, replay_file, replay_file_at};

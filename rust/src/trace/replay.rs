@@ -24,6 +24,17 @@ use crate::util::Rng;
 /// payloads regenerate from the per-record seed at the recorded size and
 /// feasibility.
 pub fn replay(trace: &Trace, n: usize) -> Vec<ScenarioRequest> {
+    replay_at(trace, n, 1.0)
+}
+
+/// [`replay`] with time compression: arrival stamps are divided by
+/// `speed`, so `speed = 10.0` squeezes an hour-long capture into six
+/// minutes of wall clock (and `speed < 1.0` stretches it). Payloads,
+/// classes, and event *order* are untouched — only the pacing changes,
+/// so a compressed replay exercises the exact same request stream at a
+/// proportionally higher offered load (the `--replay-speed` knob).
+pub fn replay_at(trace: &Trace, n: usize, speed: f64) -> Vec<ScenarioRequest> {
+    assert!(speed > 0.0 && speed.is_finite(), "replay speed must be positive");
     let cap = if n == 0 { trace.len() } else { n.min(trace.len()) };
     trace.events[..cap]
         .iter()
@@ -35,14 +46,20 @@ pub fn replay(trace: &Trace, n: usize) -> Vec<ScenarioRequest> {
             } else {
                 crate::gen::feasible(&mut rng, m)
             };
-            ScenarioRequest { at_ns: ev.at_ns, problem, class: ev.class }
+            let at_ns = if speed == 1.0 { ev.at_ns } else { (ev.at_ns as f64 / speed) as u64 };
+            ScenarioRequest { at_ns, problem, class: ev.class }
         })
         .collect()
 }
 
 /// Load a fixture and replay it; errors carry the path context.
 pub fn replay_file(path: &Path, n: usize) -> anyhow::Result<Vec<ScenarioRequest>> {
-    Ok(replay(&Trace::load(path)?, n))
+    replay_file_at(path, n, 1.0)
+}
+
+/// [`replay_file`] with [`replay_at`]'s time compression.
+pub fn replay_file_at(path: &Path, n: usize, speed: f64) -> anyhow::Result<Vec<ScenarioRequest>> {
+    Ok(replay_at(&Trace::load(path)?, n, speed))
 }
 
 #[cfg(test)]
@@ -102,6 +119,31 @@ mod tests {
         let trace = captured_trace();
         assert_eq!(replay(&trace, 5).len(), 5);
         assert_eq!(replay(&trace, 10_000).len(), trace.len());
+    }
+
+    #[test]
+    fn replay_speed_compresses_stamps_only() {
+        let trace = captured_trace();
+        let real = replay(&trace, 0);
+        let fast = replay_at(&trace, 0, 4.0);
+        let slow = replay_at(&trace, 0, 0.5);
+        for ((r, f), s) in real.iter().zip(&fast).zip(&slow) {
+            assert_eq!(f.at_ns, (r.at_ns as f64 / 4.0) as u64);
+            assert_eq!(s.at_ns, r.at_ns * 2);
+            // Payloads and classes are pacing-independent.
+            assert_eq!(f.problem, r.problem);
+            assert_eq!(s.problem, r.problem);
+            assert_eq!(f.class, r.class);
+        }
+        // speed=1.0 takes the exact integer path (no f64 round-trip).
+        let unit = replay_at(&trace, 0, 1.0);
+        assert!(real.iter().zip(&unit).all(|(a, b)| a.at_ns == b.at_ns));
+    }
+
+    #[test]
+    #[should_panic(expected = "replay speed must be positive")]
+    fn replay_speed_must_be_positive() {
+        let _ = replay_at(&captured_trace(), 0, 0.0);
     }
 
     #[test]

@@ -315,6 +315,55 @@ fn adaptive_policy_closes_early_on_idle_shards() {
 }
 
 #[test]
+fn duplicate_inflight_requests_both_resolve() {
+    // Reuse-layer regression: two identical LPs submitted before either
+    // completes must BOTH resolve. The cache's admission-path lookup never
+    // blocks on pending work — an in-flight duplicate is simply a miss —
+    // and the insert is idempotent, so there is no request-coalescing
+    // state to deadlock on. A single execution is allowed (the second
+    // copy may hit once the first lands) but not required; both replies
+    // must carry the same solution bits (copy-correct).
+    let config = Config {
+        max_wait: Duration::from_millis(20),
+        backends: vec![BackendSpec::BatchCpu { threads: 2 }, BackendSpec::Cpu],
+        cache_capacity: 1_024,
+        warm_start: true,
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config)
+        .expect("CPU-only service starts without artifacts");
+    let mut rng = Rng::new(41);
+    let mut pairs = Vec::new();
+    for _ in 0..25 {
+        let p = gen::feasible(&mut rng, 12);
+        let a = svc.submit(p.clone()).expect("submit first copy");
+        // Second copy goes in before the first is waited on (and, with a
+        // 20ms close deadline, almost always before it executes).
+        let b = svc.submit(p).expect("submit duplicate");
+        pairs.push((a, b));
+    }
+    for (i, (a, b)) in pairs.into_iter().enumerate() {
+        let sa = a
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("first copy {i} wedged: {e}"));
+        let sb = b
+            .wait_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("duplicate {i} wedged: {e}"));
+        assert_eq!(sa.status, Status::Optimal, "pair {i}");
+        assert!(
+            common::bit_identical(&sa, &sb),
+            "pair {i}: duplicate reply differs: {sa:?} vs {sb:?}"
+        );
+    }
+    let snap = svc.metrics().snapshot();
+    // Every accepted submit resolved (nothing lost to coalescing).
+    assert_eq!(snap.submitted, 50);
+    // Each submit consulted the cache exactly once, hit or miss.
+    assert_eq!(snap.cache_hits + snap.cache_misses, 50);
+    svc.shutdown();
+}
+
+#[test]
 fn two_executors_work() {
     let Some(dir) = artifacts() else { return };
     let config = Config {

@@ -7,10 +7,12 @@
 
 use std::time::{Duration, Instant};
 
+use batch_lp2d::bench::reuse::coherent_stream;
 use batch_lp2d::coordinator::admission::{
     AdmissionConfig, AdmissionPipeline, ClosePolicy, CloseReason, DeadlineClass, ReadyBatch,
 };
 use batch_lp2d::coordinator::router::Router;
+use batch_lp2d::coordinator::{BackendSpec, Config, Service};
 use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::brute;
 use batch_lp2d::lp::types::{HalfPlane, Problem, Solution, Status};
@@ -726,6 +728,71 @@ fn prop_calibrated_skewed_dispatch_bit_identical() {
                         bit_identical(a, b),
                         "shards={shards} depth={depth} problem {i} (m={}): {a:?} vs {b:?}",
                         problems[i].m()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_warm_start_bit_identical() {
+    // Reuse tentpole acceptance: random temporally coherent request
+    // streams (duplicate-rich, the cache + warm-hint sweet spot) served
+    // through mixed simd-cpu/batch-cpu/cpu shard sets must produce
+    // bit-identical replies, in submission order, with the result cache +
+    // warm hints ON vs the cache-disabled historical path — swept over
+    // shards 1-4 x depth 2-4. Hints only fire on exact content-key
+    // certification and cache hits replay stored solution bits, so reuse
+    // must be invisible in the answers.
+    check("warm-start serving equivalence", 4, |rng| {
+        let n = rng.range_usize(40, 160);
+        let coherence = rng.range_f64(0.3, 0.9);
+        let stream = coherent_stream(rng, n, coherence);
+        for shards in 1..=4usize {
+            for depth in 2..=4usize {
+                let backends: Vec<BackendSpec> = (0..shards)
+                    .map(|s| match s % 3 {
+                        0 => BackendSpec::SimdCpu { threads: 1 + s },
+                        1 => BackendSpec::BatchCpu { threads: 1 + s },
+                        _ => BackendSpec::Cpu,
+                    })
+                    .collect();
+                let config = |warm: bool| Config {
+                    max_wait: Duration::from_millis(1),
+                    backends: backends.clone(),
+                    depth: PipelineDepth::new(depth),
+                    max_queue: n + 64,
+                    cache_capacity: if warm { 4_096 } else { 0 },
+                    cache_eps: 0.0,
+                    warm_start: warm,
+                    ..Config::default()
+                };
+                let cold = Service::start("definitely-missing-artifact-dir", config(false))
+                    .expect("CPU-only service starts without artifacts");
+                let want = cold.solve_all(&stream).expect("cold solve_all");
+                cold.shutdown();
+
+                let warm = Service::start("definitely-missing-artifact-dir", config(true))
+                    .expect("CPU-only service starts without artifacts");
+                let got = warm.solve_all(&stream).expect("warm solve_all");
+                let snap = warm.metrics().snapshot();
+                warm.shutdown();
+
+                // Reply order preserved: one solution per request, in
+                // submission order (the zip below is order-sensitive).
+                assert_eq!(got.len(), stream.len(), "shards={shards} depth={depth}");
+                // Every submit consulted the cache exactly once.
+                assert_eq!(
+                    snap.cache_hits + snap.cache_misses,
+                    n as u64,
+                    "shards={shards} depth={depth} cache counter conservation"
+                );
+                for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert!(
+                        bit_identical(a, b),
+                        "shards={shards} depth={depth} problem {i} (m={}): {a:?} vs {b:?}",
+                        stream[i].m()
                     );
                 }
             }
