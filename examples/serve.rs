@@ -20,7 +20,10 @@
 //!   `--backends engine,cpu,batch-cpu:4,simd-cpu:4` mixes shard backend
 //!   types instead (heterogeneous sharding — CPU-only mixes serve without
 //!   artifacts; `simd-cpu:N` is the N-thread structure-of-arrays
-//!   vectorized batch solver, the fastest portable shard kind);
+//!   vectorized batch solver, the fastest portable bit-exact shard kind;
+//!   `simd-cpu-f32:N` is its wire-precision twin — 16 f32 lanes, validated
+//!   for status agreement plus eps-bounded divergence instead of
+//!   bit-identity, see the printed `validation:` line);
 //!   `--depth D` sets the per-shard staged-queue (pipeline ring) depth.
 //! * `--policy` picks the admission batch-close policy: `fixed` closes on
 //!   capacity or SLO deadline only; `adaptive` (default) also closes
@@ -165,6 +168,18 @@ fn main() -> anyhow::Result<()> {
         service.shard_backends(),
         policy.as_str()
     );
+    // The mix's result contract (weakest across shards): BitExact means
+    // every result is bit-identical to the f64 reference path; a tolerance
+    // means f32 shards are in the mix and results carry status agreement
+    // plus eps-bounded divergence instead. CI asserts on this line.
+    match service.validation() {
+        batch_lp2d::runtime::Validation::BitExact => {
+            println!("validation: bit-exact (all shards on the f64 reference path)")
+        }
+        batch_lp2d::runtime::Validation::Tolerance(eps) => {
+            println!("validation: tolerance eps={eps:.0e} (f32 shard(s) in the mix)")
+        }
+    }
 
     let mut rng = Rng::new(99);
     let reqs: Vec<ScenarioRequest> = match scenario {

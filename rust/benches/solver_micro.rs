@@ -13,7 +13,7 @@ use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::stream::{run_pipelined, StageWorker};
 use batch_lp2d::runtime::{
     default_artifact_dir, Backend, BatchCpuBackend, CpuShardExecutor, Engine, Manifest,
-    PipelineDepth, ShardedEngine, SimdCpuBackend, Variant,
+    PipelineDepth, ShardedEngine, SimdCpuBackend, SimdCpuF32Backend, Variant,
 };
 use batch_lp2d::solvers::{batch_cpu, batch_cpu::Algo, seidel, simplex};
 use batch_lp2d::util::{Rng, Timer};
@@ -246,6 +246,42 @@ fn simd_micro_reports(opts: BenchOpts) -> Vec<String> {
     out
 }
 
+/// Wire-precision twin of `simd_micro_reports`: the 16-lane f32 kernel
+/// (`simd-cpu-f32`) against the 8-lane f64 kernel at equal thread counts —
+/// the `simd_f32_micro_*` acceptance rows. Same bucket shapes and packed
+/// bytes, so the ratio isolates lane width + element width.
+fn simd_f32_micro_reports(opts: BenchOpts) -> Vec<String> {
+    let manifest = cpu_manifest();
+    let threads = batch_cpu::default_threads();
+    let mut out = Vec::new();
+    for batch in [256usize, 1024] {
+        let bucket = manifest.find(Variant::Rgb, batch, 64).expect("bucket").clone();
+        let mut rng = Rng::new(11 ^ batch as u64);
+        let problems = gen::independent_batch(&mut rng, batch, 64);
+        let pb = pack::pack(&problems, bucket.batch, bucket.m, None).expect("pack");
+
+        let mut lps = |backend: &mut dyn Backend, label: String| -> f64 {
+            let r = bench(&label, opts, || {
+                std::hint::black_box(backend.execute_raw(&bucket, &pb).expect("execute"));
+            });
+            println!("{}", report_line(&r));
+            batch as f64 / (r.mean_ms() / 1e3).max(1e-12)
+        };
+        let mut f64_kernel = SimdCpuBackend::new(threads);
+        let f64_lps = lps(&mut f64_kernel, format!("simd_cpu/t{threads}/b{batch}"));
+        let mut f32_kernel = SimdCpuF32Backend::new(threads);
+        let f32_lps = lps(&mut f32_kernel, format!("simd_cpu_f32/t{threads}/b{batch}"));
+        let speedup = f32_lps / f64_lps.max(1e-9);
+        println!("simd-cpu-f32 vs simd-cpu @ batch {batch} x m 64: {speedup:.3}x");
+        out.push(format!(
+            "{{\n  \"bench\": \"simd_f32_micro_b{batch}\",\n  \"batch\": {batch},\n  \"m\": 64,\n  \
+             \"threads\": {threads},\n  \"throughput_lps\": {f32_lps:.1},\n  \
+             \"simd_f64_lps\": {f64_lps:.1},\n  \"speedup_vs_f64\": {speedup:.4}\n}}"
+        ));
+    }
+    out
+}
+
 /// Engine-path shard sweep; empty when artifacts (or the real PJRT
 /// backend) are unavailable.
 fn engine_shard_sweep(problems: &[Problem]) -> Vec<String> {
@@ -375,12 +411,16 @@ fn main() {
     println!("\n## simd-cpu vs batch-cpu single-shard (equal threads, m 64)");
     let json_simd = simd_micro_reports(opts);
 
+    println!("\n## simd-cpu-f32 vs simd-cpu single-shard (equal threads, m 64)");
+    let json_simd_f32 = simd_f32_micro_reports(opts);
+
     let mut entries: Vec<String> = vec![json_cpu];
     entries.extend(json_engine);
     entries.extend(json_shards);
     entries.extend(json_engine_shards);
     entries.extend(json_depths);
     entries.extend(json_simd);
+    entries.extend(json_simd_f32);
     let mut body = String::from("[\n");
     body.push_str(&entries.join(",\n"));
     body.push_str("\n]\n");

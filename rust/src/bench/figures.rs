@@ -408,15 +408,16 @@ pub fn fig_loadgen(artifact_dir: &std::path::Path, requests: usize) -> anyhow::R
     Ok(table(&reports))
 }
 
-/// Companion table of the vectorized SoA backend: raw single-backend
-/// throughput of `simd-cpu` vs the scalar `cpu`/`batch-cpu` executors over
+/// Companion table of the vectorized SoA backends: raw single-backend
+/// throughput of `simd-cpu` (8 f64 lanes) and `simd-cpu-f32` (16
+/// wire-precision lanes) vs the scalar `cpu`/`batch-cpu` executors over
 /// the portable CPU bucket inventory, at equal thread counts on full
 /// buckets. Engine-free, like the loadgen companion, so it runs on any
-/// host; the `simd_micro` records in `BENCH_pipeline.json` gate the same
-/// ratio in CI.
+/// host; the `simd_micro`/`simd_f32_micro` records in
+/// `BENCH_pipeline.json` gate the same ratios in CI.
 pub fn fig_simd(threads: usize, iters: usize) -> anyhow::Result<Table> {
     use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor};
-    use crate::runtime::{pack, Manifest, SimdCpuBackend};
+    use crate::runtime::{pack, Manifest, SimdCpuBackend, SimdCpuF32Backend};
     use crate::util::Timer;
 
     let iters = if std::env::var_os("BATCH_LP2D_BENCH_FAST").is_some() {
@@ -431,7 +432,9 @@ pub fn fig_simd(threads: usize, iters: usize) -> anyhow::Result<Table> {
         "cpu_klps",
         "batch_cpu_klps",
         "simd_klps",
+        "simd_f32_klps",
         "simd_vs_batch",
+        "f32_vs_f64",
     ]);
     for bucket in manifest.of_variant(Variant::Rgb) {
         let mut prng = Rng::new(2019 ^ ((bucket.batch as u64) << 32) ^ bucket.m as u64);
@@ -450,13 +453,16 @@ pub fn fig_simd(threads: usize, iters: usize) -> anyhow::Result<Table> {
         let cpu = klps(&mut CpuShardExecutor)?;
         let batch_cpu = klps(&mut BatchCpuBackend::new(threads))?;
         let simd = klps(&mut SimdCpuBackend::new(threads))?;
+        let simd_f32 = klps(&mut SimdCpuF32Backend::new(threads))?;
         table.push_row(vec![
             bucket.batch.to_string(),
             bucket.m.to_string(),
             format!("{cpu:.1}"),
             format!("{batch_cpu:.1}"),
             format!("{simd:.1}"),
+            format!("{simd_f32:.1}"),
             format!("{:.3}", simd / batch_cpu.max(1e-9)),
+            format!("{:.3}", simd_f32 / simd.max(1e-9)),
         ]);
         eprintln!("  {}", table.rows.last().unwrap().join("\t"));
     }

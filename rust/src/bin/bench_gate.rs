@@ -34,7 +34,10 @@ const DEFAULT_TOLERANCE: f64 = 0.15;
 /// The `_comment` object `--refresh` writes at the head of the baseline.
 const BASELINE_HEADER: &str = "Committed perf baseline for the CI bench-regression gate \
 (bench_gate). Rows with throughput_lps <= 0 are bootstrap rows: they pin the record set the \
-fresh run must produce, without pinning a number yet. Refresh on the reference runner with: \
+fresh run must produce, without pinning a number yet. The simd_micro_* rows track the 8-lane \
+f64 kernel and the simd_f32_micro_* rows its 16-lane wire-precision (f32) twin; once armed, \
+the f32 rows should sit at or above the f64 rows at equal threads. Refresh on the reference \
+runner with: \
 BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro && BATCH_LP2D_BENCH_FAST=1 cargo \
 bench --bench loadgen && BATCH_LP2D_BENCH_FAST=1 cargo bench --bench calibration && \
 BATCH_LP2D_BENCH_FAST=1 cargo bench --bench reuse && cargo \
@@ -99,7 +102,9 @@ fn unarmed_warning(baseline_path: &str) -> String {
          # BASELINE UNARMED: every record in {baseline_path} is a\n\
          # bootstrap row (throughput_lps <= 0). The bench gate checked\n\
          # only that the record set matches — NO throughput regression\n\
-         # was (or could be) detected. Arm it on the reference runner\n\
+         # was (or could be) detected, and the simd_f32_micro_* >= \n\
+         # simd_micro_* lane-family ordering was not checked either.\n\
+         # Arm it on the reference runner\n\
          # (in this order — solver_micro rewrites the snapshot; loadgen,\n\
          # calibration, and reuse merge into it):\n\
          #   BATCH_LP2D_BENCH_FAST=1 cargo bench --bench solver_micro\n\

@@ -60,9 +60,9 @@ use crate::coordinator::cache::ResultCache;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
-use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor};
+use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor, Validation};
 use crate::runtime::pack::{pack_into_indexed, unpack_into, PackedBatch, SlotHint};
-use crate::runtime::simd::SimdCpuBackend;
+use crate::runtime::simd::{SimdCpuBackend, SimdCpuF32Backend};
 use crate::runtime::steal::StealQueues;
 use crate::runtime::stream::PipelineDepth;
 use crate::runtime::{Bucket, Engine, Manifest, Variant};
@@ -84,10 +84,15 @@ pub enum BackendSpec {
     /// The vectorized structure-of-arrays CPU solver
     /// ([`SimdCpuBackend`](crate::runtime::SimdCpuBackend)).
     SimdCpu { threads: usize },
+    /// The wire-precision (f32) vectorized solver
+    /// ([`SimdCpuF32Backend`](crate::runtime::SimdCpuF32Backend)) —
+    /// validated under [`Validation::Tolerance`], not bit-identity.
+    SimdCpuF32 { threads: usize },
 }
 
 impl BackendSpec {
-    /// Parse one spec: `engine` | `cpu` | `batch-cpu[:<N>]` | `simd-cpu[:<N>]`.
+    /// Parse one spec: `engine` | `cpu` | `batch-cpu[:<N>]` | `simd-cpu[:<N>]`
+    /// | `simd-cpu-f32[:<N>]`.
     pub fn parse(s: &str) -> anyhow::Result<BackendSpec> {
         match s.trim() {
             "engine" | "pjrt" => Ok(BackendSpec::Engine),
@@ -98,12 +103,20 @@ impl BackendSpec {
             "simd-cpu" => Ok(BackendSpec::SimdCpu {
                 threads: crate::solvers::batch_cpu::default_threads(),
             }),
+            "simd-cpu-f32" => Ok(BackendSpec::SimdCpuF32 {
+                threads: crate::solvers::batch_cpu::default_threads(),
+            }),
             other => {
                 if let Some(n) = other.strip_prefix("batch-cpu:") {
                     let threads: usize = n
                         .parse()
                         .map_err(|_| anyhow::anyhow!("bad thread count in '{other}'"))?;
                     Ok(BackendSpec::BatchCpu { threads: threads.max(1) })
+                } else if let Some(n) = other.strip_prefix("simd-cpu-f32:") {
+                    let threads: usize = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad thread count in '{other}'"))?;
+                    Ok(BackendSpec::SimdCpuF32 { threads: threads.max(1) })
                 } else if let Some(n) = other.strip_prefix("simd-cpu:") {
                     let threads: usize = n
                         .parse()
@@ -111,7 +124,8 @@ impl BackendSpec {
                     Ok(BackendSpec::SimdCpu { threads: threads.max(1) })
                 } else {
                     anyhow::bail!(
-                        "unknown backend '{other}' (engine|cpu|batch-cpu[:N]|simd-cpu[:N])"
+                        "unknown backend '{other}' \
+                         (engine|cpu|batch-cpu[:N]|simd-cpu[:N]|simd-cpu-f32[:N])"
                     )
                 }
             }
@@ -132,6 +146,24 @@ impl BackendSpec {
             BackendSpec::Cpu => "cpu".to_string(),
             BackendSpec::BatchCpu { threads } => format!("batch-cpu:{threads}"),
             BackendSpec::SimdCpu { threads } => format!("simd-cpu:{threads}"),
+            BackendSpec::SimdCpuF32 { threads } => format!("simd-cpu-f32:{threads}"),
+        }
+    }
+
+    /// The validation contract the backend this spec builds declares —
+    /// derivable without constructing it (the engine needs artifacts), so
+    /// config-level policy (e.g. whether tolerance warm hints are sound
+    /// for a mix) can be decided before anything is built.
+    pub fn validation(&self) -> Validation {
+        match self {
+            // PJRT device kernels compute in f32 (see `Engine`'s impl).
+            BackendSpec::Engine => Validation::Tolerance(crate::runtime::backend::F32_TOLERANCE),
+            BackendSpec::Cpu | BackendSpec::BatchCpu { .. } | BackendSpec::SimdCpu { .. } => {
+                Validation::BitExact
+            }
+            BackendSpec::SimdCpuF32 { .. } => {
+                Validation::Tolerance(crate::runtime::backend::F32_TOLERANCE)
+            }
         }
     }
 
@@ -163,6 +195,9 @@ impl BackendSpec {
                 BatchCpuBackend::new(*threads).capacity_weight()
             }
             BackendSpec::SimdCpu { threads } => SimdCpuBackend::new(*threads).capacity_weight(),
+            BackendSpec::SimdCpuF32 { threads } => {
+                SimdCpuF32Backend::new(*threads).capacity_weight()
+            }
         }
     }
 
@@ -174,8 +209,29 @@ impl BackendSpec {
             BackendSpec::Cpu => Box::new(CpuShardExecutor),
             BackendSpec::BatchCpu { threads } => Box::new(BatchCpuBackend::new(*threads)),
             BackendSpec::SimdCpu { threads } => Box::new(SimdCpuBackend::new(*threads)),
+            BackendSpec::SimdCpuF32 { threads } => Box::new(SimdCpuF32Backend::new(*threads)),
         })
     }
+}
+
+/// Whether eps-quantized cache **near-misses** may serve as warm
+/// [`SlotHint`]s, given the validation contracts of every shard backend in
+/// the mix. A hinted slot emits the hinted bits instead of a cold solve's,
+/// and staged batches are *work-stolen across shards* — so a near-miss hint
+/// attached by any pack stage may be executed by any backend. It is
+/// therefore sound only when EVERY backend in the mix is tolerance-
+/// validated (the eps-close substitution is within contract for all
+/// possible executors). Any bit-exact backend in the mix forces hints back
+/// to exact-key-only, preserving the f64 bit-identity guarantee unchanged.
+pub(crate) fn near_miss_hints_allowed(
+    validations: &[Validation],
+    warm_start: bool,
+    cache_eps: f64,
+) -> bool {
+    warm_start
+        && cache_eps > 0.0
+        && !validations.is_empty()
+        && validations.iter().all(|v| !v.is_bit_exact())
 }
 
 /// One size class's overrides of the config-wide batching/SLO knobs:
@@ -549,6 +605,9 @@ pub struct Service {
     metrics: Arc<Metrics>,
     model: Arc<CalibratedModel>,
     backend_names: Vec<&'static str>,
+    /// The weakest validation contract across the shard mix — what this
+    /// service's results guarantee relative to the f64 reference.
+    validation: Validation,
     capture: Option<TraceCapture>,
     /// Content-addressed result cache (None when `cache_capacity == 0`):
     /// consulted on submit (duplicate content answered without queueing)
@@ -596,6 +655,12 @@ impl Service {
         let n_executors = backends.len();
         let weights: Vec<f64> = backends.iter().map(|b| b.capacity_weight()).collect();
         let backend_names: Vec<&'static str> = backends.iter().map(|b| b.name()).collect();
+        // Per-backend validation contracts, read off the built backends so
+        // they can never drift from what actually executes. The mix folds
+        // to the weakest contract (what this service's results guarantee);
+        // the all-tolerance predicate below gates near-miss warm hints.
+        let validations: Vec<Validation> = backends.iter().map(|b| b.validation()).collect();
+        let validation = Validation::of_mix(validations.iter().copied());
         // The cost-model seam, evaluated before the backends move to
         // their threads: nominal constants by default; with a tune
         // profile, the measured per-(backend, class) fits — sharpened
@@ -686,6 +751,12 @@ impl Service {
         let cache: Option<Arc<ResultCache>> = (config.cache_capacity > 0)
             .then(|| Arc::new(ResultCache::new(config.cache_capacity, config.cache_eps)));
         let warm_start = config.warm_start && cache.is_some();
+        // Tolerance-mode reuse: on an all-tolerance mix (e.g. every shard
+        // simd-cpu-f32) with a quantizing cache, eps-near cached results
+        // also serve as hints. Any bit-exact backend in the mix disables
+        // this — hints stay exact-key-only and f64 bit-identity holds.
+        let near_miss_hints =
+            near_miss_hints_allowed(&validations, warm_start, config.cache_eps);
         // One pack base for EVERY shard: shuffle streams derive from
         // `base ^ wire_key(problem)`, so the same content packs to the
         // same bytes wherever (and whenever) it lands — the property the
@@ -750,6 +821,7 @@ impl Service {
                             batch,
                             pack_base,
                             pack_cache.as_deref(),
+                            near_miss_hints,
                             &queues,
                             &recycle_rx,
                         );
@@ -972,6 +1044,7 @@ impl Service {
             metrics,
             model,
             backend_names,
+            validation,
             capture: config.capture,
             cache,
             dispatcher: Some(dispatcher),
@@ -1079,6 +1152,14 @@ impl Service {
         &self.backend_names
     }
 
+    /// The weakest [`Validation`] contract across the shard mix: BitExact
+    /// iff every shard backend is bit-exact against the f64 reference;
+    /// otherwise the largest tolerance any backend declares. What result
+    /// consumers (tests, CI asserts) may assume of this service.
+    pub fn validation(&self) -> Validation {
+        self.validation
+    }
+
     /// The content-addressed result cache, when enabled
     /// (`cache_capacity > 0`) — for occupancy inspection in tests and
     /// the ops dashboard.
@@ -1168,10 +1249,13 @@ pub fn class_cost_table(
 /// `cache` set (warm-start enabled), slots whose content **exactly**
 /// matches a completed cached result get a certified [`SlotHint`] lane —
 /// the backends then skip re-solving those slots, emitting the hinted
-/// result bits instead.
+/// result bits instead. With `near_miss` additionally set (all-tolerance
+/// mixes only, see [`near_miss_hints_allowed`]), an eps-quantized cache
+/// neighbor's result also qualifies as a hint when the exact key misses.
 ///
 /// Returns whether the batch reached a staged queue — `false` means the
 /// caller must settle the shard's backlog accounting itself.
+#[allow(clippy::too_many_arguments)]
 fn stage_batch(
     manifest: &Manifest,
     variant: Variant,
@@ -1180,6 +1264,7 @@ fn stage_batch(
     batch: ReadyBatch<Pending>,
     pack_base: u64,
     cache: Option<&ResultCache>,
+    near_miss: bool,
     queues: &StealQueues<StagedBatch>,
     recycle_rx: &mpsc::Receiver<PackedBatch>,
 ) -> bool {
@@ -1221,13 +1306,20 @@ fn stage_batch(
     // Warm-start: attach a certified hint lane for every slot whose
     // content EXACTLY matches a completed cached result (lookup_exact sees
     // through quantization — an eps-close neighbor's solution is never a
-    // hint). The hint key is the slot's packed-bytes hash, re-checked by
-    // the backend at execute time, so a hint can only ever reproduce the
-    // bits a cold solve of those bytes would produce.
+    // hint on a bit-exact mix). The hint key is the slot's packed-bytes
+    // hash, re-checked by the backend at execute time, so on bit-exact
+    // paths a hint can only ever reproduce the bits a cold solve of those
+    // bytes would produce. On all-tolerance mixes with `near_miss` set,
+    // the quantized lookup is consulted as a fallback: an eps-close
+    // neighbor's result is within the mix's Tolerance contract for every
+    // backend a stolen batch could land on.
     if let Some(cache) = cache {
         for (i, pending) in batch.items.iter().enumerate() {
             let key = cache.key(&pending.problem);
-            if let Some(sol) = cache.lookup_exact(&key) {
+            let hit = cache
+                .lookup_exact(&key)
+                .or_else(|| if near_miss { cache.lookup(&key) } else { None });
+            if let Some(sol) = hit {
                 let status = match sol.status {
                     Status::Optimal => 0,
                     Status::Infeasible => 1,
@@ -1411,16 +1503,27 @@ mod tests {
             BackendSpec::parse("simd-cpu").unwrap(),
             BackendSpec::SimdCpu { threads } if threads >= 1
         ));
+        assert_eq!(
+            BackendSpec::parse("simd-cpu-f32:3").unwrap(),
+            BackendSpec::SimdCpuF32 { threads: 3 }
+        );
+        assert!(matches!(
+            BackendSpec::parse("simd-cpu-f32").unwrap(),
+            BackendSpec::SimdCpuF32 { threads } if threads >= 1
+        ));
         assert!(BackendSpec::parse("gpu").is_err());
         assert!(BackendSpec::parse("batch-cpu:x").is_err());
         assert!(BackendSpec::parse("simd-cpu:x").is_err());
-        let list = BackendSpec::parse_list("cpu, batch-cpu:2,simd-cpu:2,engine").unwrap();
+        assert!(BackendSpec::parse("simd-cpu-f32:x").is_err());
+        let list =
+            BackendSpec::parse_list("cpu, batch-cpu:2,simd-cpu:2,simd-cpu-f32:2,engine").unwrap();
         assert_eq!(
             list,
             vec![
                 BackendSpec::Cpu,
                 BackendSpec::BatchCpu { threads: 2 },
                 BackendSpec::SimdCpu { threads: 2 },
+                BackendSpec::SimdCpuF32 { threads: 2 },
                 BackendSpec::Engine
             ]
         );
@@ -1434,18 +1537,64 @@ mod tests {
             BackendSpec::Cpu,
             BackendSpec::BatchCpu { threads: 4 },
             BackendSpec::SimdCpu { threads: 2 },
+            BackendSpec::SimdCpuF32 { threads: 2 },
         ] {
             assert_eq!(BackendSpec::parse(&spec.key()).unwrap(), spec);
         }
         assert_eq!(BackendSpec::BatchCpu { threads: 4 }.key(), "batch-cpu:4");
         assert_eq!(BackendSpec::SimdCpu { threads: 2 }.key(), "simd-cpu:2");
+        assert_eq!(BackendSpec::SimdCpuF32 { threads: 2 }.key(), "simd-cpu-f32:2");
         // The simd backend must outweigh batch-cpu at equal threads, so
         // weighted dispatch biases toward the vectorized lanes out of the
-        // box (calibration then learns the measured skew).
+        // box (calibration then learns the measured skew); the f32 lanes
+        // (half the bytes, double the width) sit above the f64 lanes.
         assert!(
             BackendSpec::SimdCpu { threads: 4 }.nominal_weight()
                 > BackendSpec::BatchCpu { threads: 4 }.nominal_weight()
         );
+        assert!(
+            BackendSpec::SimdCpuF32 { threads: 4 }.nominal_weight()
+                > BackendSpec::SimdCpu { threads: 4 }.nominal_weight()
+        );
+    }
+
+    #[test]
+    fn spec_validation_matches_built_backends() {
+        // The spec-level contract (decidable without artifacts) must agree
+        // with what the built backends declare, for every artifact-free
+        // spec.
+        let dir = Path::new("definitely-missing-artifact-dir");
+        for spec in [
+            BackendSpec::Cpu,
+            BackendSpec::BatchCpu { threads: 2 },
+            BackendSpec::SimdCpu { threads: 2 },
+            BackendSpec::SimdCpuF32 { threads: 2 },
+        ] {
+            let built = spec.build(dir).unwrap();
+            assert_eq!(spec.validation(), built.validation(), "{}", spec.key());
+        }
+        assert!(BackendSpec::SimdCpu { threads: 2 }.validation().is_bit_exact());
+        assert!(!BackendSpec::SimdCpuF32 { threads: 2 }.validation().is_bit_exact());
+        assert!(!BackendSpec::Engine.validation().is_bit_exact());
+    }
+
+    #[test]
+    fn near_miss_hints_require_an_all_tolerance_mix() {
+        let t = Validation::Tolerance(crate::runtime::backend::F32_TOLERANCE);
+        let x = Validation::BitExact;
+        // All-tolerance mix + quantizing cache + warm start: allowed.
+        assert!(near_miss_hints_allowed(&[t, t, t], true, 1e-3));
+        // Any bit-exact backend in the mix forces exact-key-only hints —
+        // staged batches are stolen cross-shard, so one f64 shard is
+        // enough to make an eps-near substitution unsound.
+        assert!(!near_miss_hints_allowed(&[t, x, t], true, 1e-3));
+        assert!(!near_miss_hints_allowed(&[x], true, 1e-3));
+        assert!(!near_miss_hints_allowed(&[x, x], true, 1e-3));
+        // No quantization (eps == 0) or no warm start: nothing to relax.
+        assert!(!near_miss_hints_allowed(&[t, t], true, 0.0));
+        assert!(!near_miss_hints_allowed(&[t, t], false, 1e-3));
+        // Degenerate empty mix never relaxes.
+        assert!(!near_miss_hints_allowed(&[], true, 1e-3));
     }
 
     #[test]

@@ -72,7 +72,7 @@ fn print_help() {
            solve    --batch 1024 --m 64 [--variant rgb|naive|simplex] [--seed S]\n\
                                         generate and solve one batch, print timing\n\
            serve    --requests 6000 [--rate 2000] [--max-wait-ms 2] [--shards 1]\n\
-                    [--depth 2] [--backends engine,cpu,batch-cpu:N,simd-cpu:N]\n\
+                    [--depth 2] [--backends engine,cpu,batch-cpu:N,simd-cpu:N,simd-cpu-f32:N]\n\
                     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]\n\
                     [--bulk-slo-ms MS] [--scenario poisson|bursty|...|trace:PATH]\n\
                     [--tune-profile TUNE_profile.json]\n\
@@ -103,7 +103,8 @@ fn print_help() {
                                         --tui renders a live terminal\n\
                                         dashboard, --tui-frame dumps one final\n\
                                         dashboard frame after the run)\n\
-           tune     [--backends cpu,batch-cpu:4,simd-cpu:4] [--out TUNE_profile.json]\n\
+           tune     [--backends cpu,batch-cpu:4,simd-cpu:4,simd-cpu-f32:4]\n\
+                    [--out TUNE_profile.json]\n\
                     [--runs 3] [--max-batch 512] [--variant rgb]\n\
                                         profile each backend kind over the\n\
                                         (batch x class) grid, fit setup/marginal\n\
@@ -467,6 +468,7 @@ fn cmd_tune(flags: &Flags) -> anyhow::Result<()> {
             BackendSpec::Cpu,
             BackendSpec::BatchCpu { threads: batch_cpu::default_threads() },
             BackendSpec::SimdCpu { threads: batch_cpu::default_threads() },
+            BackendSpec::SimdCpuF32 { threads: batch_cpu::default_threads() },
         ],
     };
     anyhow::ensure!(!specs.is_empty(), "no backends to profile");

@@ -17,8 +17,10 @@
 //! not depend on which shard ran it or when. [`CpuShardExecutor`] and
 //! [`BatchCpuBackend`] share one slot-solving routine, so any mix of the
 //! two is bitwise equivalent to either alone. Mixing *numeric paths*
-//! (f32 PJRT kernels with the f64 CPU solvers) weakens the guarantee to
-//! status + tolerance agreement — see the shard module docs.
+//! (f32 PJRT kernels or the f32 SIMD lanes with the f64 CPU solvers)
+//! weakens the guarantee to status + tolerance agreement — each backend
+//! declares which contract it satisfies via [`Backend::validation`]
+//! ([`Validation::BitExact`] vs [`Validation::Tolerance`]).
 
 use std::collections::HashMap;
 
@@ -42,6 +44,65 @@ pub const NOMINAL_ROW_NS: u64 = 40;
 /// whole batch in lockstep, so it is worth several CPU workers; calibrate
 /// from measured throughput (`BENCH_pipeline.json`) when it matters.
 pub const ENGINE_CAPACITY_WEIGHT: f64 = 8.0;
+
+/// Absolute objective/vertex divergence the wire-precision (f32) numeric
+/// paths are validated to, matching `lp::validate::Tolerance::default()`:
+/// statuses must agree with the f64 reference exactly; solution
+/// coordinates and objectives may differ by at most this.
+pub const F32_TOLERANCE: f64 = 2e-3;
+
+/// The numeric-validation contract a backend's `execute_raw` outputs
+/// satisfy against the scalar f64 Seidel reference (and `lp::brute`).
+///
+/// The sharded driver's equivalence guarantee is only as strong as the
+/// weakest contract in the shard mix: all-`BitExact` mixes reproduce
+/// serial execution bit for bit; once a `Tolerance` backend joins, the
+/// mix-wide guarantee drops to status agreement plus eps-bounded
+/// divergence (see [`Validation::combine`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Validation {
+    /// Output bytes are a pure bitwise function of the packed bytes,
+    /// identical to the scalar f64 slot solve — results compare with `==`
+    /// across any shard/steal/chunk interleaving.
+    BitExact,
+    /// Wire-precision numeric path (f32 lanes, device kernels): statuses
+    /// (feasible/infeasible) must match the reference exactly, and
+    /// objective/vertex values must agree within this absolute epsilon.
+    Tolerance(f64),
+}
+
+impl Validation {
+    /// True for the bit-exact contract.
+    pub fn is_bit_exact(self) -> bool {
+        matches!(self, Validation::BitExact)
+    }
+
+    /// The epsilon of a tolerance contract, `None` for bit-exact.
+    pub fn eps(self) -> Option<f64> {
+        match self {
+            Validation::BitExact => None,
+            Validation::Tolerance(e) => Some(e),
+        }
+    }
+
+    /// The weaker of two contracts: a shard mix is bit-exact only when
+    /// every member is; otherwise it is tolerance-validated at the
+    /// largest member epsilon.
+    pub fn combine(self, other: Validation) -> Validation {
+        match (self, other) {
+            (Validation::BitExact, v) | (v, Validation::BitExact) => v,
+            (Validation::Tolerance(a), Validation::Tolerance(b)) => {
+                Validation::Tolerance(a.max(b))
+            }
+        }
+    }
+
+    /// Fold [`Validation::combine`] over a whole shard mix (an empty mix
+    /// is vacuously bit-exact).
+    pub fn of_mix<I: IntoIterator<Item = Validation>>(mix: I) -> Validation {
+        mix.into_iter().fold(Validation::BitExact, Validation::combine)
+    }
+}
 
 /// The default cost model: estimated busy-ns to chew through `rows` packed
 /// constraint rows on a backend of the given capacity weight.
@@ -126,6 +187,15 @@ pub trait Backend: Send {
         cost_model_ns(bucket.batch * bucket.m, self.capacity_weight())
     }
 
+    /// The numeric-validation contract `execute_raw`'s outputs satisfy —
+    /// see [`Validation`]. f64 backends keep the default bit-exact
+    /// guarantee; wire-precision (f32) backends override to
+    /// `Tolerance(eps)`. Harnesses and the warm-hint policy consult this
+    /// instead of hard-coding backend names.
+    fn validation(&self) -> Validation {
+        Validation::BitExact
+    }
+
     /// Whether this backend's execution cost is paid per BUCKET SLOT
     /// rather than per occupied slot: a device executing the whole padded
     /// shape in lockstep (PJRT) returns `true`; the CPU backends skip
@@ -162,6 +232,10 @@ impl<B: Backend + ?Sized> Backend for Box<B> {
         (**self).cost_ns(bucket)
     }
 
+    fn validation(&self) -> Validation {
+        (**self).validation()
+    }
+
     fn executes_padding(&self) -> bool {
         (**self).executes_padding()
     }
@@ -182,6 +256,13 @@ impl Backend for Engine {
 
     fn capacity_weight(&self) -> f64 {
         ENGINE_CAPACITY_WEIGHT
+    }
+
+    fn validation(&self) -> Validation {
+        // The device kernels compute in wire precision (f32), so an engine
+        // shard only promises the tolerance contract — see the module docs
+        // on mixing numeric paths.
+        Validation::Tolerance(F32_TOLERANCE)
     }
 
     fn executes_padding(&self) -> bool {
@@ -496,9 +577,35 @@ mod tests {
         assert_eq!(boxed.name(), "batch-cpu");
         assert!((boxed.capacity_weight() - 3.0).abs() < 1e-12);
         assert!(!boxed.executes_padding(), "CPU backends skip padding slots");
+        assert_eq!(boxed.validation(), Validation::BitExact);
         let boxed: Box<dyn Backend> = Box::new(CpuShardExecutor);
         assert_eq!(boxed.name(), "cpu-seidel");
         assert!((boxed.capacity_weight() - 1.0).abs() < 1e-12);
         assert!(!boxed.executes_padding());
+        assert_eq!(boxed.validation(), Validation::BitExact);
+    }
+
+    #[test]
+    fn validation_combines_to_the_weakest_contract() {
+        use Validation::{BitExact, Tolerance};
+        assert_eq!(BitExact.combine(BitExact), BitExact);
+        assert_eq!(BitExact.combine(Tolerance(1e-3)), Tolerance(1e-3));
+        assert_eq!(Tolerance(1e-3).combine(BitExact), Tolerance(1e-3));
+        assert_eq!(Tolerance(1e-3).combine(Tolerance(5e-3)), Tolerance(5e-3));
+        assert!(BitExact.is_bit_exact() && !Tolerance(1e-3).is_bit_exact());
+        assert_eq!(Tolerance(2e-3).eps(), Some(2e-3));
+        assert_eq!(BitExact.eps(), None);
+        // A mix is only as strong as its weakest member; the empty mix is
+        // vacuously bit-exact.
+        assert_eq!(Validation::of_mix([]), BitExact);
+        assert_eq!(Validation::of_mix([BitExact, BitExact]), BitExact);
+        assert_eq!(
+            Validation::of_mix([BitExact, Tolerance(2e-3), Tolerance(1e-3)]),
+            Tolerance(2e-3)
+        );
+        // The f64 CPU backends are bit-exact by default; the engine's f32
+        // device kernels are not.
+        assert_eq!(BatchCpuBackend::new(2).validation(), BitExact);
+        assert_eq!(CpuShardExecutor.validation(), BitExact);
     }
 }

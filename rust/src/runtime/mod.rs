@@ -12,7 +12,9 @@
 //!   with a capacity weight and a cost model for weighted dispatch.
 //! * [`simd`]     -- the vectorized [`SimdCpuBackend`]: structure-of-arrays
 //!   lane kernel (the paper's RGB layout on the host), bit-identical to the
-//!   scalar CPU backends.
+//!   scalar CPU backends; and its wire-precision twin
+//!   [`SimdCpuF32Backend`], 16 f32 lanes validated under the
+//!   [`Validation::Tolerance`] contract instead of bit-identity.
 //! * [`steal`]    -- work-stealing staged queues: bounded per-shard deques
 //!   where an idle shard steals the newest chunk from the most backlogged
 //!   peer.
@@ -35,19 +37,23 @@ pub mod steal;
 pub mod stream;
 
 pub use backend::{
-    cost_model_ns, Backend, BatchCpuBackend, CpuShardExecutor, RawExec, ENGINE_CAPACITY_WEIGHT,
+    cost_model_ns, Backend, BatchCpuBackend, CpuShardExecutor, RawExec, Validation,
+    ENGINE_CAPACITY_WEIGHT, F32_TOLERANCE,
 };
 pub use engine::{Engine, ExecTiming};
 pub use manifest::{Bucket, Manifest, Variant};
 pub use pack::{
     pack, pack_into, pack_into_indexed, unpack, unpack_into, wire_key, PackedBatch, SlotHint,
-    SoaLanes,
+    SoaLanes, SoaLanes32,
 };
 pub use shard::{
     pick_chunk_size, pick_chunk_size_fitted, plan_chunk_size, plan_chunk_size_with_model,
     ShardExecutor, ShardReport, ShardStats, ShardedEngine,
 };
-pub use simd::{solve_soa, SimdCpuBackend, LANES, SIMD_LANE_BOOST};
+pub use simd::{
+    solve_soa, solve_soa32, SimdCpuBackend, SimdCpuF32Backend, LANES, LANES32, SIMD_LANE_BOOST,
+    SIMD_LANE_BOOST_F32,
+};
 pub use steal::{CloseGuard, Popped, PopperGuard, StealQueues};
 pub use stream::{run_pipelined, PipelineDepth, PipelineStats, StageWorker};
 

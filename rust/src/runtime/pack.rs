@@ -320,6 +320,131 @@ impl SoaLanes {
     }
 }
 
+/// Wire-precision structure-of-arrays transpose: the same lane layout as
+/// [`SoaLanes`], kept in f32 — the packed wire format's native precision —
+/// so the transpose is a near-memcpy (a strided copy of the slot bytes
+/// with **no** f32→f64 upcast) and every lane costs half the bytes. This
+/// is what the 16-wide f32 kernel
+/// ([`solve_soa32`](crate::runtime::simd::solve_soa32)) streams.
+///
+/// Staying in wire precision means the kernel's arithmetic is *not*
+/// bit-identical to the scalar f64 Seidel path: backends built on this
+/// transpose declare
+/// [`Validation::Tolerance`](crate::runtime::backend::Validation) (status
+/// agreement plus eps-bounded divergence) instead of the f64 lanes'
+/// bit-exact contract.
+#[derive(Clone, Debug, Default)]
+pub struct SoaLanes32 {
+    /// Real (unpadded) lane count = transposed slot count.
+    lanes: usize,
+    /// Padded lane count (`lanes` rounded up to the requested multiple):
+    /// the per-row stride of the coefficient arrays.
+    stride: usize,
+    m: usize,
+    /// (m, stride) row-major normal-x lanes, wire precision.
+    pub nx: Vec<f32>,
+    /// (m, stride) row-major normal-y lanes, wire precision.
+    pub ny: Vec<f32>,
+    /// (m, stride) row-major offset lanes, wire precision.
+    pub b: Vec<f32>,
+    /// (stride) objective-x lanes, wire precision.
+    pub cx: Vec<f32>,
+    /// (stride) objective-y lanes, wire precision.
+    pub cy: Vec<f32>,
+    /// (stride) valid-row counts per lane; padding lanes carry 0.
+    pub rows: Vec<u32>,
+    /// (stride) per-lane hint state: 0 = cold, 1 = certified optimal,
+    /// 2 = certified infeasible — the same certification rule (hint key vs
+    /// slot key, checked here at transpose time) as [`SoaLanes`].
+    pub hinted: Vec<u32>,
+    /// (stride) hinted solution x; meaningful where `hinted[i] == 1`.
+    pub hx: Vec<f32>,
+    /// (stride) hinted solution y; meaningful where `hinted[i] == 1`.
+    pub hy: Vec<f32>,
+}
+
+impl SoaLanes32 {
+    /// Real lane count (transposed slots, excluding padding lanes).
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Padded lane count — the row stride of the coefficient arrays.
+    #[inline]
+    pub fn lane_stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Constraint-row capacity per lane (the bucket's `m`).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Transpose packed slots `start..start + lanes` into per-coefficient
+    /// f32 lanes — the [`SoaLanes::transpose_range`] contract (padding
+    /// lanes are vacuous problems, hints certify against slot keys) minus
+    /// the upcast: wire words move verbatim, so this stage is pure memory
+    /// traffic.
+    pub fn transpose_range(&mut self, pb: &PackedBatch, start: usize, lanes: usize, pad_to: usize) {
+        assert!(
+            start + lanes <= pb.batch,
+            "slot range {start}..{} exceeds batch {}",
+            start + lanes,
+            pb.batch
+        );
+        let pad = pad_to.max(1);
+        let stride = lanes.div_ceil(pad) * pad;
+        self.lanes = lanes;
+        self.stride = stride;
+        self.m = pb.m;
+        self.nx.clear();
+        self.nx.resize(pb.m * stride, 0.0);
+        self.ny.clear();
+        self.ny.resize(pb.m * stride, 0.0);
+        self.b.clear();
+        self.b.resize(pb.m * stride, 0.0);
+        // Padding lanes get the same vacuous problem pack_into_indexed
+        // writes into padding slots: no rows, unit objective.
+        self.cx.clear();
+        self.cx.resize(stride, 1.0);
+        self.cy.clear();
+        self.cy.resize(stride, 0.0);
+        self.rows.clear();
+        self.rows.resize(stride, 0);
+        self.hinted.clear();
+        self.hinted.resize(stride, 0);
+        self.hx.clear();
+        self.hx.resize(stride, 0.0);
+        self.hy.clear();
+        self.hy.resize(stride, 0.0);
+        for i in 0..lanes {
+            let slot = start + i;
+            if let Some(h) = pb.slot_hint(slot) {
+                if h.key == pb.slot_key(slot) {
+                    self.hinted[i] = if h.status == 0 { 1 } else { 2 };
+                    self.hx[i] = h.point[0];
+                    self.hy[i] = h.point[1];
+                }
+            }
+            let valid = pb.slot_valid_rows(slot);
+            self.rows[i] = valid as u32;
+            let [ocx, ocy] = pb.slot_obj(slot);
+            self.cx[i] = ocx;
+            self.cy[i] = ocy;
+            let lines = pb.slot_lines(slot);
+            for k in 0..valid {
+                let src = k * PackedBatch::ROW_STRIDE;
+                let dst = k * stride + i;
+                self.nx[dst] = lines[src];
+                self.ny[dst] = lines[src + 1];
+                self.b[dst] = lines[src + 2];
+            }
+        }
+    }
+}
+
 /// Pack up to `batch` problems into a (batch, m) bucket.
 ///
 /// * Problems are truncated nowhere: callers guarantee `p.m() <= m`
@@ -752,6 +877,70 @@ mod tests {
             (soa.nx.capacity(), soa.cx.capacity(), soa.rows.capacity()),
             caps
         );
+    }
+
+    #[test]
+    fn soa32_transpose_is_a_verbatim_wire_copy() {
+        // The f32 transpose must move the wire words bit-for-bit (no
+        // upcast, no rounding): every lane value equals the slot accessor's
+        // f32 exactly, and agrees with the f64 transpose's widened value.
+        let mut rng = Rng::new(23);
+        let problems: Vec<Problem> = (0..11)
+            .map(|_| gen::feasible(&mut rng, 1 + (rng.next_u64() as usize) % 9))
+            .collect();
+        let mut srng = Rng::new(5);
+        let pb = pack(&problems, 16, 10, Some(&mut srng)).unwrap();
+        let mut soa32 = SoaLanes32::default();
+        let mut soa64 = SoaLanes::default();
+        // Interior range with an awkward pad width, same as the f64 test.
+        soa32.transpose_range(&pb, 3, 7, 16);
+        soa64.transpose_range(&pb, 3, 7, 16);
+        assert_eq!(soa32.lanes(), 7);
+        assert_eq!(soa32.lane_stride(), 16);
+        assert_eq!(soa32.m(), 10);
+        for i in 0..7 {
+            let slot = 3 + i;
+            assert_eq!(soa32.rows[i] as usize, pb.slot_valid_rows(slot));
+            assert_eq!(soa32.rows[i], soa64.rows[i]);
+            let [cx, cy] = pb.slot_obj(slot);
+            assert_eq!(soa32.cx[i].to_bits(), cx.to_bits());
+            assert_eq!(soa32.cy[i].to_bits(), cy.to_bits());
+            let lines = pb.slot_lines(slot);
+            for k in 0..soa32.rows[i] as usize {
+                let src = k * PackedBatch::ROW_STRIDE;
+                let dst = k * soa32.lane_stride() + i;
+                assert_eq!(soa32.nx[dst].to_bits(), lines[src].to_bits());
+                assert_eq!(soa32.ny[dst].to_bits(), lines[src + 1].to_bits());
+                assert_eq!(soa32.b[dst].to_bits(), lines[src + 2].to_bits());
+                assert_eq!(soa32.nx[dst] as f64, soa64.nx[dst]);
+            }
+        }
+        // Padding lane: vacuous problem, like the f64 transpose.
+        assert_eq!(soa32.rows[7], 0);
+        assert_eq!((soa32.cx[7], soa32.cy[7]), (1.0, 0.0));
+        // Re-transposing the same shape reuses capacity.
+        let caps = (soa32.nx.capacity(), soa32.cx.capacity(), soa32.rows.capacity());
+        soa32.transpose_range(&pb, 0, 16, 16);
+        assert_eq!(
+            (soa32.nx.capacity(), soa32.cx.capacity(), soa32.rows.capacity()),
+            caps
+        );
+    }
+
+    #[test]
+    fn soa32_hint_lanes_certify_like_f64() {
+        let mut rng = Rng::new(47);
+        let problems: Vec<Problem> = (0..3).map(|_| gen::feasible(&mut rng, 5)).collect();
+        let mut r = Rng::new(8);
+        let mut pb = pack(&problems, 4, 6, Some(&mut r)).unwrap();
+        pb.set_hint(1, SlotHint { key: pb.slot_key(1), status: 0, point: [1.5, -2.5] });
+        pb.set_hint(2, SlotHint { key: 0xBAD, status: 0, point: [9.0, 9.0] });
+        let mut soa = SoaLanes32::default();
+        soa.transpose_range(&pb, 0, 4, 4);
+        assert_eq!(soa.hinted[1], 1, "matching key certifies");
+        assert_eq!((soa.hx[1], soa.hy[1]), (1.5, -2.5));
+        assert_eq!(soa.hinted[0], 0, "no hint stays cold");
+        assert_eq!(soa.hinted[2], 0, "stale key must not certify");
     }
 
     #[test]

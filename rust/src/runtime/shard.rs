@@ -85,7 +85,7 @@ use crate::util::{Rng, Timer};
 
 pub use crate::runtime::backend::Backend as ShardExecutor;
 pub use crate::runtime::backend::{BatchCpuBackend, CpuShardExecutor};
-pub use crate::runtime::simd::SimdCpuBackend;
+pub use crate::runtime::simd::{SimdCpuBackend, SimdCpuF32Backend};
 
 /// Per-shard accounting for one sharded run.
 #[derive(Clone, Copy, Debug, Default)]

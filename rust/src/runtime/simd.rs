@@ -14,6 +14,19 @@
 //! [`BatchCpuBackend`] and lets heterogeneous shard mixes keep the sharded
 //! driver's bit-identical guarantee.
 //!
+//! # Wire-precision (f32) lanes
+//!
+//! [`SimdCpuF32Backend`] is the same kernel run directly on the wire
+//! format's native f32: the transpose
+//! ([`SoaLanes32`](crate::runtime::pack::SoaLanes32)) skips the upcast
+//! entirely (a near-memcpy), and each window carries [`LANES32`] = 16
+//! problems per cache line instead of 8 — the paper's single-precision
+//! bandwidth lever. f32 arithmetic is **not** bit-identical to the f64
+//! reference, so this backend declares
+//! [`Validation::Tolerance`] rather than the default bit-exact contract:
+//! statuses must agree with the scalar path exactly, and solutions are
+//! validated to eps-bounded divergence against `lp::brute`.
+//!
 //! # Active-mask contract
 //!
 //! Lanes in a window run in lockstep over the window's maximum row count;
@@ -39,10 +52,10 @@
 //! AVX2/NEON code paths.
 
 use crate::lp::types::{EPS, M_BIG};
-use crate::runtime::backend::{ensure_shape, Backend, RawExec};
+use crate::runtime::backend::{ensure_shape, Backend, RawExec, Validation, F32_TOLERANCE};
 use crate::runtime::engine::ExecTiming;
 use crate::runtime::manifest::Bucket;
-use crate::runtime::pack::{PackedBatch, SoaLanes};
+use crate::runtime::pack::{PackedBatch, SoaLanes, SoaLanes32};
 use crate::solvers::seidel::EPS_PAR;
 use crate::util::Timer;
 
@@ -50,10 +63,32 @@ use crate::util::Timer;
 /// coefficient row, two AVX2 registers (or four NEON) per operation.
 pub const LANES: usize = 8;
 
+/// Lane width of one wire-precision (f32) vector window: 16 × f32 = the
+/// same 64-byte cache line per coefficient row as the f64 kernel, at
+/// twice the problems per load — the paper's single-precision bandwidth
+/// win, host-side.
+pub const LANES32: usize = 16;
+
 /// Nominal capacity multiplier of the vectorized solver over one scalar
 /// CPU worker. Deliberately below the lane width (masked 1-D re-solves
 /// waste lanes); calibration (`tune`) learns the true skew per class.
 pub const SIMD_LANE_BOOST: f64 = 4.0;
+
+/// Nominal capacity multiplier of the f32 kernel: twice the f64 boost —
+/// double the lanes per cache line and no transpose upcast — discounted
+/// the same way for masked re-solves. Calibration learns the real ratio.
+pub const SIMD_LANE_BOOST_F32: f64 = 8.0;
+
+/// Wire-precision constants of the f32 kernel. `EPS`/`M_BIG` are exact in
+/// f32 (1e-4 rounds to the nearest f32; 1e4 is an integer), so the
+/// feasibility slack and box are the same quantities the scalar path uses.
+/// The parallel threshold is widened from the scalar `EPS_PAR` (1e-9) to
+/// sit above f32 rounding noise on unit-normal dot products, and the
+/// degenerate-normal floor comes up from 1e-18 for the same reason.
+const EPS32: f32 = EPS as f32;
+const M_BIG32: f32 = M_BIG as f32;
+const EPS_PAR32: f32 = 1e-7;
+const DEN_MIN32: f32 = 1e-12;
 
 /// Solve every real lane of a transposed batch, writing the kernels' wire
 /// output for lanes `0..status.len()` (`sol` holds `[x, y]` pairs). The
@@ -338,6 +373,287 @@ impl Backend for SimdCpuBackend {
     }
 }
 
+/// Solve every real lane of a wire-precision transposed batch, writing the
+/// kernels' wire output for lanes `0..status.len()` — the f32 twin of
+/// [`solve_soa`], windowed at [`LANES32`].
+pub fn solve_soa32(soa: &SoaLanes32, sol: &mut [f32], status: &mut [i32]) {
+    let len = status.len();
+    assert_eq!(sol.len(), len * 2, "sol holds one [x, y] pair per status");
+    assert!(len <= soa.lane_stride(), "more outputs than transposed lanes");
+    let mut lane0 = 0;
+    while lane0 < len {
+        solve_window32(soa, lane0, sol, status);
+        lane0 += LANES32;
+    }
+}
+
+/// Fixed-size window view into an f32 coefficient row (bounds-checked once).
+#[inline(always)]
+fn window32(v: &[f32], at: usize) -> &[f32; LANES32] {
+    v[at..at + LANES32].try_into().unwrap()
+}
+
+/// One lockstep window of [`LANES32`] problems: [`solve_window`] with every
+/// lane in wire precision. Same mask discipline, same operation order —
+/// only the scalar type (and the two rounding-noise thresholds, see the
+/// constants above) differ.
+fn solve_window32(soa: &SoaLanes32, lane0: usize, sol: &mut [f32], status: &mut [i32]) {
+    let stride = soa.lane_stride();
+    let rows: &[u32; LANES32] = soa.rows[lane0..lane0 + LANES32].try_into().unwrap();
+    let hinted: &[u32; LANES32] = soa.hinted[lane0..lane0 + LANES32].try_into().unwrap();
+    let cx = window32(&soa.cx, lane0);
+    let cy = window32(&soa.cy, lane0);
+
+    let mut sx = [0.0f32; LANES32];
+    let mut sy = [0.0f32; LANES32];
+    for i in 0..LANES32 {
+        sx[i] = if cx[i] >= 0.0 { M_BIG32 } else { -M_BIG32 };
+        sy[i] = if cy[i] >= 0.0 { M_BIG32 } else { -M_BIG32 };
+    }
+    // Warm-start: certified hint lanes seed the active masks, exactly like
+    // the f64 kernel — only cold lanes bound the row walk.
+    let mut alive = [true; LANES32];
+    let mut max_rows = 0usize;
+    for i in 0..LANES32 {
+        if hinted[i] != 0 {
+            alive[i] = false;
+        } else {
+            max_rows = max_rows.max(rows[i] as usize);
+        }
+    }
+
+    for k in 0..max_rows {
+        let base = k * stride + lane0;
+        let nx = window32(&soa.nx, base);
+        let ny = window32(&soa.ny, base);
+        let b = window32(&soa.b, base);
+
+        // Violation scan — the hot, fully-uniform path.
+        let mut viol = [false; LANES32];
+        for i in 0..LANES32 {
+            let act = alive[i] & ((k as u32) < rows[i]);
+            viol[i] = act & !(nx[i] * sx[i] + ny[i] * sy[i] <= b[i] + EPS32);
+        }
+        if !viol.iter().any(|&v| v) {
+            continue;
+        }
+
+        // 1-D re-solve on each violating lane's boundary line, in lockstep.
+        let mut den = [0.0f32; LANES32];
+        for i in 0..LANES32 {
+            den[i] = nx[i] * nx[i] + ny[i] * ny[i];
+            // Degenerate all-zero normal: the scalar path ignores the row.
+            viol[i] &= den[i] >= DEN_MIN32;
+        }
+        if !viol.iter().any(|&v| v) {
+            continue;
+        }
+        let mut p0x = [0.0f32; LANES32];
+        let mut p0y = [0.0f32; LANES32];
+        let mut dx = [0.0f32; LANES32];
+        let mut dy = [0.0f32; LANES32];
+        for i in 0..LANES32 {
+            let d = if viol[i] { den[i] } else { 1.0 };
+            p0x[i] = nx[i] * b[i] / d;
+            p0y[i] = ny[i] * b[i] / d;
+            dx[i] = -ny[i];
+            dy[i] = nx[i];
+        }
+        let mut t_lo = [-4.0 * M_BIG32; LANES32];
+        let mut t_hi = [4.0 * M_BIG32; LANES32];
+        let mut bad = [false; LANES32];
+        // Analytic box clip (same four folds as the scalar pass).
+        let mut ad = [0.0f32; LANES32];
+        let mut num = [0.0f32; LANES32];
+        for i in 0..LANES32 {
+            ad[i] = dx[i];
+            num[i] = M_BIG32 - p0x[i];
+        }
+        clip_lanes32(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+        for i in 0..LANES32 {
+            ad[i] = -dx[i];
+            num[i] = M_BIG32 + p0x[i];
+        }
+        clip_lanes32(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+        for i in 0..LANES32 {
+            ad[i] = dy[i];
+            num[i] = M_BIG32 - p0y[i];
+        }
+        clip_lanes32(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+        for i in 0..LANES32 {
+            ad[i] = -dy[i];
+            num[i] = M_BIG32 + p0y[i];
+        }
+        clip_lanes32(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+
+        // All previously considered constraints. A violating lane at row k
+        // has rows[i] > k, so rows 0..k are valid for every masked-in lane.
+        for j in 0..k {
+            let jb = j * stride + lane0;
+            let hnx = window32(&soa.nx, jb);
+            let hny = window32(&soa.ny, jb);
+            let hb = window32(&soa.b, jb);
+            for i in 0..LANES32 {
+                ad[i] = hnx[i] * dx[i] + hny[i] * dy[i];
+                num[i] = hb[i] - (hnx[i] * p0x[i] + hny[i] * p0y[i]);
+            }
+            clip_lanes32(&mut t_lo, &mut t_hi, &mut bad, &ad, &num, &viol);
+            if (0..LANES32).all(|i| !viol[i] || bad[i]) {
+                break; // every violating lane already proven infeasible
+            }
+        }
+
+        // Masked state writeback: only violating lanes move.
+        for i in 0..LANES32 {
+            if !viol[i] {
+                continue;
+            }
+            if bad[i] || t_lo[i] > t_hi[i] + EPS32 {
+                alive[i] = false;
+                continue;
+            }
+            let cd = cx[i] * dx[i] + cy[i] * dy[i];
+            let t = if cd > 0.0 { t_hi[i] } else { t_lo[i] };
+            sx[i] = p0x[i] + t * dx[i];
+            sy[i] = p0y[i] + t * dy[i];
+        }
+        if !alive.iter().any(|&a| a) {
+            break; // whole window infeasible: nothing left to scan
+        }
+    }
+
+    for i in 0..LANES32 {
+        let g = lane0 + i;
+        if g >= status.len() {
+            break;
+        }
+        match hinted[i] {
+            1 => {
+                // Certified optimal hint: already wire precision, so the
+                // stored point moves verbatim.
+                sol[g * 2] = soa.hx[lane0 + i];
+                sol[g * 2 + 1] = soa.hy[lane0 + i];
+                status[g] = 0;
+            }
+            2 => status[g] = 1, // certified infeasible: status only
+            _ if alive[i] => {
+                sol[g * 2] = sx[i];
+                sol[g * 2 + 1] = sy[i];
+                status[g] = 0;
+            }
+            _ => status[g] = 1, // infeasible: status only, zeros in sol
+        }
+    }
+}
+
+/// Wire-precision form of [`clip_lanes`]: fold `t * ad <= num` into each
+/// masked-in lane's `[t_lo, t_hi]`, with the parallel threshold widened to
+/// [`EPS_PAR32`].
+#[inline(always)]
+fn clip_lanes32(
+    t_lo: &mut [f32; LANES32],
+    t_hi: &mut [f32; LANES32],
+    bad: &mut [bool; LANES32],
+    ad: &[f32; LANES32],
+    num: &[f32; LANES32],
+    mask: &[bool; LANES32],
+) {
+    for i in 0..LANES32 {
+        let pos = ad[i] > EPS_PAR32;
+        let neg = ad[i] < -EPS_PAR32;
+        let q = num[i] / if pos | neg { ad[i] } else { 1.0 };
+        let hi = if pos { t_hi[i].min(q) } else { t_hi[i] };
+        let lo = if neg { t_lo[i].max(q) } else { t_lo[i] };
+        if mask[i] {
+            t_hi[i] = hi;
+            t_lo[i] = lo;
+            bad[i] |= !pos & !neg & (num[i] < -EPS32);
+        }
+    }
+}
+
+/// The wire-precision vectorized backend: [`SimdCpuBackend`]'s threading
+/// shape over the f32 transpose and the 16-wide kernel. Because the lanes
+/// compute in f32, this backend declares [`Validation::Tolerance`]: its
+/// statuses must agree with the f64 reference exactly, and its solutions
+/// are eps-bounded against it — shard mixes containing this backend are
+/// validated under that contract, never bit-identity.
+pub struct SimdCpuF32Backend {
+    threads: usize,
+    /// Per-worker transpose buffers, reused across calls (steady state at a
+    /// fixed bucket shape allocates nothing).
+    scratch: Vec<SoaLanes32>,
+}
+
+impl SimdCpuF32Backend {
+    pub fn new(threads: usize) -> SimdCpuF32Backend {
+        SimdCpuF32Backend { threads: threads.max(1), scratch: Vec::new() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for SimdCpuF32Backend {
+    fn default() -> Self {
+        SimdCpuF32Backend::new(crate::solvers::batch_cpu::default_threads())
+    }
+}
+
+impl Backend for SimdCpuF32Backend {
+    fn name(&self) -> &'static str {
+        "simd-cpu-f32"
+    }
+
+    fn capacity_weight(&self) -> f64 {
+        self.threads as f64 * SIMD_LANE_BOOST_F32
+    }
+
+    fn validation(&self) -> Validation {
+        Validation::Tolerance(F32_TOLERANCE)
+    }
+
+    fn execute_raw(&mut self, bucket: &Bucket, pb: &PackedBatch) -> anyhow::Result<RawExec> {
+        ensure_shape(bucket, pb)?;
+        let t = Timer::start();
+        let used = pb.used;
+        let mut sol = vec![0.0f32; used * 2];
+        let mut status = vec![0i32; used];
+        let threads = self.threads.min(used.max(1));
+        if self.scratch.len() < threads {
+            self.scratch.resize_with(threads, SoaLanes32::default);
+        }
+        if threads <= 1 {
+            let soa = &mut self.scratch[0];
+            soa.transpose_range(pb, 0, used, LANES32);
+            solve_soa32(soa, &mut sol, &mut status);
+        } else {
+            let chunk = used.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for ((w, (sol_c, status_c)), soa) in sol
+                    .chunks_mut(chunk * 2)
+                    .zip(status.chunks_mut(chunk))
+                    .enumerate()
+                    .zip(self.scratch.iter_mut())
+                {
+                    scope.spawn(move || {
+                        soa.transpose_range(pb, w * chunk, status_c.len(), LANES32);
+                        solve_soa32(soa, sol_c, status_c);
+                    });
+                }
+            });
+        }
+        let execute_ns = t.elapsed_ns();
+        let timing = ExecTiming {
+            execute_ns,
+            critical_path_ns: execute_ns,
+            ..ExecTiming::default()
+        };
+        Ok((sol, status, timing))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -517,6 +833,157 @@ mod tests {
     fn empty_batch_is_a_no_op() {
         let pb = pack::pack::<Problem>(&[], 8, 8, None).unwrap();
         let (sol, status, _) = SimdCpuBackend::new(4).execute_raw(&bucket(8, 8), &pb).unwrap();
+        assert!(sol.is_empty());
+        assert!(status.is_empty());
+    }
+
+    // ---- wire-precision (f32) kernel --------------------------------------
+
+    /// Mixed feasible problems with infeasible slabs, returned alongside the
+    /// packed batch so tolerance asserts can consult the originals.
+    fn mixed_problems(n: usize, m_max: usize, seed: u64) -> Vec<Problem> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 5 == 3 {
+                    let mut p = gen::feasible(&mut rng, (m_max / 2).max(1));
+                    p.constraints.push(HalfPlane::new(1.0, 0.0, -1.0));
+                    p.constraints.push(HalfPlane::new(-1.0, 0.0, -1.0));
+                    p
+                } else {
+                    let pm = 1 + (rng.next_u64() as usize) % m_max;
+                    gen::feasible(&mut rng, pm)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn f32_statuses_match_f64_and_solutions_agree_with_brute() {
+        // The tolerance contract in one test: every f32 status equals the
+        // scalar f64 status bit-for-bit, and every feasible solution passes
+        // `agree` against the brute-force reference.
+        for (n, m_max, batch, m, seed) in
+            [(1, 4, 8, 8, 21u64), (9, 10, 16, 12, 22), (120, 30, 128, 32, 23), (50, 13, 64, 16, 24)]
+        {
+            let problems = mixed_problems(n, m_max, seed);
+            let mut srng = Rng::new(seed ^ 0xABCD);
+            let pb = pack::pack(&problems, batch, m, Some(&mut srng)).unwrap();
+            let b = bucket(batch, m);
+            let (_, want_status, _) = CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+            for threads in [1usize, 2, 3, 7] {
+                let (sol, status, _) =
+                    SimdCpuF32Backend::new(threads).execute_raw(&b, &pb).unwrap();
+                assert_eq!(status, want_status, "threads={threads} status diverged");
+                let decoded = pack::unpack(&sol, &status, pb.used).unwrap();
+                for (p, s) in problems.iter().zip(&decoded) {
+                    let want = brute::solve(p);
+                    assert_eq!(s.status, want.status);
+                    assert!(
+                        agree(p, s, &want, Tolerance::default()),
+                        "threads={threads}: {s:?} vs {want:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_hint_lanes_reproduce_the_cold_f32_bytes() {
+        // Hinting from a cold f32 run must be byte-stable against that same
+        // run — the hinted point is already wire precision, so it moves
+        // verbatim. A stale key (slot 6) must be ignored and re-solved.
+        let b = bucket(32, 16);
+        let problems = mixed_problems(24, 13, 51);
+        let mut srng = Rng::new(51 ^ 0xABCD);
+        let mut pb = pack::pack(&problems, 32, 16, Some(&mut srng)).unwrap();
+        let (cold_sol, cold_status, _) =
+            SimdCpuF32Backend::new(1).execute_raw(&b, &pb).unwrap();
+        assert!(cold_status.contains(&1), "seed must cover infeasible lanes");
+        for i in 0..pb.used {
+            if i % 2 == 0 {
+                pb.set_hint(
+                    i,
+                    pack::SlotHint {
+                        key: if i == 6 { 0xBAD } else { pb.slot_key(i) },
+                        status: cold_status[i],
+                        point: [cold_sol[i * 2], cold_sol[i * 2 + 1]],
+                    },
+                );
+            }
+        }
+        for threads in [1usize, 3] {
+            let (sol, status, _) =
+                SimdCpuF32Backend::new(threads).execute_raw(&b, &pb).unwrap();
+            let same = sol.iter().zip(&cold_sol).all(|(a, w)| a.to_bits() == w.to_bits());
+            assert!(same, "threads={threads}: hinted f32 bytes diverged from cold run");
+            assert_eq!(status, cold_status);
+        }
+    }
+
+    #[test]
+    fn f32_infeasible_mid_window_statuses_are_exact() {
+        // Dead lanes mid-window: status agreement with the scalar reference
+        // must be exact even though the arithmetic is f32, and dead lanes
+        // report zeroed solutions.
+        let mut rng = Rng::new(42);
+        let problems: Vec<Problem> = (0..LANES32)
+            .map(|i| {
+                if i == 2 || i == 5 || i == 11 {
+                    Problem::new(
+                        vec![HalfPlane::new(1.0, 0.0, -1.0), HalfPlane::new(-1.0, 0.0, -1.0)],
+                        [0.0, 1.0],
+                    )
+                } else {
+                    gen::feasible(&mut rng, 6)
+                }
+            })
+            .collect();
+        let mut srng = Rng::new(9);
+        let pb = pack::pack(&problems, LANES32, 8, Some(&mut srng)).unwrap();
+        let b = bucket(LANES32, 8);
+        let (_, want_status, _) = CpuShardExecutor.execute_raw(&b, &pb).unwrap();
+        let (sol, status, _) = SimdCpuF32Backend::new(1).execute_raw(&b, &pb).unwrap();
+        assert_eq!(status, want_status);
+        for i in [2usize, 5, 11] {
+            assert_eq!(status[i], 1);
+            assert_eq!((sol[i * 2], sol[i * 2 + 1]), (0.0, 0.0));
+        }
+    }
+
+    #[test]
+    fn f32_weight_sits_above_the_f64_lanes() {
+        let f32b = SimdCpuF32Backend::new(4);
+        let f64b = SimdCpuBackend::new(4);
+        assert_eq!(f32b.name(), "simd-cpu-f32");
+        assert!(
+            f32b.capacity_weight() > f64b.capacity_weight(),
+            "half the lane bytes must outweigh the f64 kernel at equal threads"
+        );
+        assert!(!f32b.executes_padding(), "padding lanes are masked, not paid for");
+        let b = bucket(128, 64);
+        assert!(f32b.cost_ns(&b) < f64b.cost_ns(&b));
+    }
+
+    #[test]
+    fn f32_backend_declares_the_tolerance_contract() {
+        assert_eq!(
+            SimdCpuF32Backend::new(2).validation(),
+            Validation::Tolerance(F32_TOLERANCE)
+        );
+        assert!(SimdCpuBackend::new(2).validation().is_bit_exact());
+        let boxed: Box<dyn Backend> = Box::new(SimdCpuF32Backend::new(2));
+        assert_eq!(boxed.validation(), Validation::Tolerance(F32_TOLERANCE));
+    }
+
+    #[test]
+    fn f32_shape_mismatch_and_empty_batch() {
+        let pb = mixed_packed(4, 6, 8, 8, 5);
+        assert!(SimdCpuF32Backend::new(2).execute_raw(&bucket(8, 16), &pb).is_err());
+        assert!(SimdCpuF32Backend::new(2).execute_raw(&bucket(16, 8), &pb).is_err());
+        let empty = pack::pack::<Problem>(&[], 8, 8, None).unwrap();
+        let (sol, status, _) =
+            SimdCpuF32Backend::new(4).execute_raw(&bucket(8, 8), &empty).unwrap();
         assert!(sol.is_empty());
         assert!(status.is_empty());
     }

@@ -38,7 +38,7 @@ pub mod refine;
 
 pub use model::{model_cost_table, model_weights, CalibratedModel, CostModel, NominalModel};
 pub use profile::{
-    fit_linear, nominal_per_problem_ns, profile_backend, validate_fit, AccuracyRow, BackendFit,
-    ClassFit, Observation, Profile, ProfilerOpts, TUNE_SCHEMA,
+    fit_linear, lane_width_for_key, nominal_per_problem_ns, profile_backend, validate_fit,
+    AccuracyRow, BackendFit, ClassFit, Observation, Profile, ProfilerOpts, TUNE_SCHEMA,
 };
 pub use refine::{Refined, Refiner, REFINE_EWMA_ALPHA, REFINE_MAX_AGE};

@@ -33,7 +33,28 @@ use crate::util::{Rng, Timer};
 /// Version of the `TUNE_profile.json` record schema. Bump when the record
 /// fields change; [`Profile::parse`] refuses mismatched files rather than
 /// silently misreading them.
-pub const TUNE_SCHEMA: u32 = 1;
+///
+/// Schema 2 added the required `lane_width` field: every record names the
+/// SIMD lane width of the kernel it was measured on, so a profile row
+/// fitted on the 16-wide f32 kernel can never silently calibrate the
+/// 8-wide f64 kernel (or vice versa) after a backend-key edit.
+pub const TUNE_SCHEMA: u32 = 2;
+
+/// The SIMD lane width of the kernel a backend key names: 16 for the
+/// wire-precision `simd-cpu-f32*` lanes, 8 for the f64 `simd-cpu*` lanes,
+/// 1 for every scalar (or per-problem-threaded) backend. Recorded in each
+/// tune record and re-derived at parse time — a mismatch means the profile
+/// was measured on a different kernel variant than the key now builds, and
+/// the load fails loudly instead of driving dispatch with a foreign fit.
+pub fn lane_width_for_key(key: &str) -> usize {
+    if key.starts_with("simd-cpu-f32") {
+        crate::runtime::simd::LANES32
+    } else if key.starts_with("simd-cpu") {
+        crate::runtime::simd::LANES
+    } else {
+        1
+    }
+}
 
 /// Busy-ns the nominal cost model charges one problem of a class
 /// ([`NOMINAL_ROW_NS`] per packed constraint row on a weight-1.0 backend)
@@ -252,6 +273,24 @@ impl Profile {
             else {
                 anyhow::bail!("tune record for {backend} lacks setup_ns/per_problem_ns");
             };
+            // Kernel-variant guard: the recorded lane width must match the
+            // width of the kernel this backend key builds today. A profile
+            // measured on the 16-wide f32 lanes must never calibrate the
+            // 8-wide f64 kernel (or any other mismatch) — fail the load.
+            let expected_lanes = lane_width_for_key(&backend);
+            match extract_num(obj, "lane_width") {
+                Some(lw) if lw as usize == expected_lanes => {}
+                Some(lw) => anyhow::bail!(
+                    "tune record for {backend} was measured on a {}-lane kernel but \
+                     '{backend}' builds a {expected_lanes}-lane kernel — stale or \
+                     cross-variant profile, re-run the profiler",
+                    lw as usize
+                ),
+                None => anyhow::bail!(
+                    "tune record for {backend} lacks lane_width \
+                     (schema {TUNE_SCHEMA} requires it; re-run the profiler)"
+                ),
+            }
             let fit = ClassFit {
                 class_m: class_m as usize,
                 setup_ns: setup_ns.max(0.0),
@@ -293,18 +332,20 @@ impl Profile {
         let mut bodies = vec![format!(
             "{{\n  \"tune_schema\": {TUNE_SCHEMA},\n  \"_comment\": \"Calibrated backend cost \
              models (setup_ns + per_problem_ns per constraint class), measured by the tune \
-             profiler. Refresh with: cargo run --release -- tune --backends <mix> --out \
-             TUNE_profile.json (idempotent merge: re-profiling a backend replaces only its \
-             records).\"\n}}"
+             profiler. lane_width names the kernel variant each fit ran on (16 = f32 lanes, \
+             8 = f64 lanes, 1 = scalar) and is re-checked on load. Refresh with: cargo run \
+             --release -- tune --backends <mix> --out TUNE_profile.json (idempotent merge: \
+             re-profiling a backend replaces only its records).\"\n}}"
         )];
         for b in &self.backends {
             for c in &b.classes {
                 bodies.push(format!(
                     "{{\n  \"backend\": \"{}\",\n  \"variant\": \"{}\",\n  \
-                     \"class_m\": {},\n  \"setup_ns\": {:.1},\n  \
+                     \"lane_width\": {},\n  \"class_m\": {},\n  \"setup_ns\": {:.1},\n  \
                      \"per_problem_ns\": {:.1},\n  \"points\": {}\n}}",
                     b.backend,
                     b.variant.as_str(),
+                    lane_width_for_key(&b.backend),
                     c.class_m,
                     c.setup_ns,
                     c.per_problem_ns,
@@ -671,11 +712,56 @@ mod tests {
         let wrong = "[\n{\n  \"tune_schema\": 999\n}\n]";
         let err = Profile::parse(wrong).unwrap_err().to_string();
         assert!(err.contains("schema"), "{err}");
+        // Schema 1 profiles (no lane_width) are stale now — refused at the
+        // header, before any record parses.
+        let v1 = "[\n{\n  \"tune_schema\": 1\n}\n]";
+        let err = Profile::parse(v1).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
         // A record naming a backend but missing fields aborts the load —
         // a truncated profile must never half-apply.
-        let bad = "[\n{\n  \"tune_schema\": 1\n},\n{\n  \"backend\": \"cpu\"\n}\n]";
+        let bad = "[\n{\n  \"tune_schema\": 2\n},\n{\n  \"backend\": \"cpu\"\n}\n]";
         let err = Profile::parse(bad).unwrap_err().to_string();
         assert!(err.contains("class_m"), "{err}");
+    }
+
+    #[test]
+    fn lane_width_is_derived_from_the_backend_key() {
+        assert_eq!(lane_width_for_key("simd-cpu-f32:4"), crate::runtime::simd::LANES32);
+        assert_eq!(lane_width_for_key("simd-cpu-f32"), crate::runtime::simd::LANES32);
+        assert_eq!(lane_width_for_key("simd-cpu:4"), crate::runtime::simd::LANES);
+        assert_eq!(lane_width_for_key("simd-cpu"), crate::runtime::simd::LANES);
+        assert_eq!(lane_width_for_key("cpu"), 1);
+        assert_eq!(lane_width_for_key("batch-cpu:8"), 1);
+        assert_eq!(lane_width_for_key("engine"), 1);
+    }
+
+    #[test]
+    fn parse_rejects_cross_kernel_lane_widths() {
+        // An f32 fit relabeled under the f64 key (or any other lane-width
+        // mismatch) must fail the load loudly, naming the widths.
+        let record = |backend: &str, lanes: usize| {
+            format!(
+                "[\n{{\n  \"tune_schema\": 2\n}},\n{{\n  \"backend\": \"{backend}\",\n  \
+                 \"variant\": \"rgb\",\n  \"lane_width\": {lanes},\n  \"class_m\": 16,\n  \
+                 \"setup_ns\": 10.0,\n  \"per_problem_ns\": 500.0,\n  \"points\": 2\n}}\n]"
+            )
+        };
+        // Matching widths load fine.
+        assert!(Profile::parse(&record("simd-cpu:4", 8)).is_ok());
+        assert!(Profile::parse(&record("simd-cpu-f32:4", 16)).is_ok());
+        assert!(Profile::parse(&record("cpu", 1)).is_ok());
+        // A 16-lane fit can never answer for the 8-lane kernel.
+        let err = Profile::parse(&record("simd-cpu:4", 16)).unwrap_err().to_string();
+        assert!(err.contains("16-lane") && err.contains("8-lane"), "{err}");
+        // Nor the reverse, nor a scalar fit for a vector kernel.
+        assert!(Profile::parse(&record("simd-cpu-f32:4", 8)).is_err());
+        assert!(Profile::parse(&record("cpu", 8)).is_err());
+        // Missing lane_width on a schema-2 record is refused outright.
+        let missing = "[\n{\n  \"tune_schema\": 2\n},\n{\n  \"backend\": \"cpu\",\n  \
+                       \"variant\": \"rgb\",\n  \"class_m\": 16,\n  \"setup_ns\": 10.0,\n  \
+                       \"per_problem_ns\": 500.0,\n  \"points\": 2\n}\n]";
+        let err = Profile::parse(missing).unwrap_err().to_string();
+        assert!(err.contains("lane_width"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,9 @@ use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::brute;
 use batch_lp2d::lp::types::Status;
 use batch_lp2d::lp::validate::{agree, Tolerance};
-use batch_lp2d::runtime::{PipelineDepth, Variant, SIMD_LANE_BOOST};
+use batch_lp2d::runtime::{
+    PipelineDepth, Validation, Variant, SIMD_LANE_BOOST, SIMD_LANE_BOOST_F32,
+};
 use batch_lp2d::util::Rng;
 
 mod common;
@@ -211,6 +213,56 @@ fn heterogeneous_cpu_service_serves_without_artifacts() {
     assert!((snap.per_shard[1].weight - 2.0 * SIMD_LANE_BOOST).abs() < 1e-9);
     assert!((snap.per_shard[2].weight - 1.0).abs() < 1e-9);
     // Per-problem conservation across the mixed shard set.
+    assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), 300);
+    // An all-f64 mix keeps the bit-exact contract.
+    assert!(svc.validation().is_bit_exact());
+    svc.shutdown();
+}
+
+#[test]
+fn f32_shards_serve_under_the_tolerance_contract() {
+    // The wire-precision backend through the FULL serving path: a mix
+    // containing simd-cpu-f32 shards weakens the service's validation
+    // contract to Tolerance, per-shard naming distinguishes the lane
+    // families, and every result still satisfies status agreement plus
+    // eps-bounded divergence against the brute-force reference.
+    let config = Config {
+        max_wait: Duration::from_millis(1),
+        backends: vec![
+            BackendSpec::SimdCpuF32 { threads: 2 },
+            BackendSpec::SimdCpu { threads: 2 },
+            BackendSpec::BatchCpu { threads: 2 },
+        ],
+        depth: PipelineDepth::new(3),
+        ..Config::default()
+    };
+    let svc = Service::start("definitely-missing-artifact-dir", config)
+        .expect("CPU-only service must start without artifacts");
+    assert_eq!(svc.shard_backends(), &["simd-cpu-f32", "simd-cpu", "batch-cpu"]);
+    // One tolerance shard is enough to weaken the whole mix's contract.
+    assert!(!svc.validation().is_bit_exact());
+    assert!(matches!(svc.validation(), Validation::Tolerance(eps) if eps > 0.0));
+
+    let mut rng = Rng::new(19);
+    let problems = trace::mixed_size_batch(&mut rng, 300, 2, 60);
+    let solutions = svc.solve_all(&problems).expect("solve_all");
+    assert_eq!(solutions.len(), problems.len());
+    for (p, s) in problems.iter().zip(&solutions) {
+        let want = brute::solve(p);
+        assert_eq!(s.status, want.status, "m={}", p.m());
+        if s.status == Status::Optimal {
+            assert!(agree(p, s, &want, Tolerance::default()), "{s:?} vs {want:?}");
+        }
+    }
+
+    let snap = svc.metrics().snapshot();
+    assert_eq!(snap.solved, 300);
+    assert_eq!(snap.per_shard.len(), 3);
+    // The f32 lanes advertise the doubled lane boost over their threads,
+    // above the f64 lanes at equal thread count.
+    assert!((snap.per_shard[0].weight - 2.0 * SIMD_LANE_BOOST_F32).abs() < 1e-9);
+    assert!((snap.per_shard[1].weight - 2.0 * SIMD_LANE_BOOST).abs() < 1e-9);
+    assert!(snap.per_shard[0].weight > snap.per_shard[1].weight);
     assert_eq!(snap.per_shard.iter().map(|s| s.solved).sum::<u64>(), 300);
     svc.shutdown();
 }

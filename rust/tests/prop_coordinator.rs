@@ -21,6 +21,7 @@ use batch_lp2d::runtime::manifest::{Manifest, Variant};
 use batch_lp2d::runtime::pack::{self, PackedBatch};
 use batch_lp2d::runtime::shard::{
     BatchCpuBackend, CpuShardExecutor, ShardExecutor, ShardedEngine, SimdCpuBackend,
+    SimdCpuF32Backend,
 };
 use batch_lp2d::runtime::PipelineDepth;
 use batch_lp2d::tune::{BackendFit, CalibratedModel, ClassFit, NominalModel, Profile};
@@ -634,6 +635,88 @@ fn prop_simd_bit_identical() {
 }
 
 #[test]
+fn prop_simd_f32_tolerance() {
+    // Wire-precision satellite: random MIXED simd-cpu-f32 + simd-cpu +
+    // batch-cpu shard sets, swept over shards 1-4 x depth 2-4, validated
+    // under the Tolerance contract instead of bit-identity: every status
+    // must agree EXACTLY with the scalar f64 reference (feasible /
+    // infeasible is never precision-dependent on these workloads), and
+    // every feasible solution must pass `agree` against `lp::brute`. Which
+    // backend a chunk lands on is dispatch/steal-dependent, so this is
+    // precisely what a mixed-precision mix can promise — and the same
+    // mid-window infeasible-slab injections as `prop_simd_bit_identical`
+    // keep dead f32 lanes in the sweep.
+    let text = "variant\tbatch\tm\tblock_b\tchunk\tfile\n\
+                rgb\t8\t16\t8\t16\ta\n\
+                rgb\t32\t16\t8\t16\tb\n\
+                rgb\t8\t64\t8\t64\tc\n\
+                rgb\t32\t64\t8\t64\td\n\
+                rgb\t256\t64\t8\t64\te\n";
+    let manifest = Manifest::parse(text, std::path::PathBuf::from("/tmp")).unwrap();
+    check("simd f32 tolerance equivalence", 10, |rng| {
+        let n = rng.range_usize(1, 120);
+        let mut problems: Vec<Problem> = trace::mixed_size_batch(rng, n, 2, 60);
+        let mut injected = Vec::new();
+        for (i, p) in problems.iter_mut().enumerate() {
+            if i % 7 == 3 {
+                p.constraints.push(HalfPlane::new(1.0, 0.0, -1.0));
+                p.constraints.push(HalfPlane::new(-1.0, 0.0, -1.0));
+                injected.push(i);
+            }
+        }
+        let seed = rng.next_u64();
+
+        // f64 scalar reference for exact status agreement, brute force for
+        // the eps-bounded solution check.
+        let mut reference =
+            ShardedEngine::from_executors(manifest.clone(), vec![CpuShardExecutor]).unwrap();
+        let mut r = Rng::new(seed);
+        let (want, _) = reference.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+        for &i in &injected {
+            assert_eq!(want[i].status, Status::Infeasible, "injected slab {i}");
+        }
+        let brute_want: Vec<Solution> = problems.iter().map(brute::solve).collect();
+
+        for shards in 1..=4usize {
+            for depth in 2..=4usize {
+                // f32 lanes first, so every mix contains wire-precision
+                // shards; the rest rotates through the f64 kinds.
+                let executors: Vec<Box<dyn ShardExecutor>> = (0..shards)
+                    .map(|s| -> Box<dyn ShardExecutor> {
+                        match s % 3 {
+                            0 => Box::new(SimdCpuF32Backend::new(1 + s)),
+                            1 => Box::new(SimdCpuBackend::new(1 + s)),
+                            _ => Box::new(BatchCpuBackend::new(1 + s)),
+                        }
+                    })
+                    .collect();
+                let mut se = ShardedEngine::from_executors(manifest.clone(), executors)
+                    .unwrap()
+                    .with_depth(PipelineDepth::new(depth));
+                let mut r = Rng::new(seed);
+                let (got, report) =
+                    se.solve_all(Variant::Rgb, &problems, Some(&mut r)).unwrap();
+                assert_eq!(got.len(), n, "shards={shards} depth={depth} lost solutions");
+                assert_eq!(report.problems(), n);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.status, w.status,
+                        "shards={shards} depth={depth} problem {i} (m={}) status",
+                        problems[i].m()
+                    );
+                    assert!(
+                        agree(&problems[i], g, &brute_want[i], Tolerance::default()),
+                        "shards={shards} depth={depth} problem {i} (m={}): {g:?} vs {:?}",
+                        problems[i].m(),
+                        brute_want[i]
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_calibrated_skewed_dispatch_bit_identical() {
     // Calibration satellite: an arbitrarily skewed tune profile (random
     // per-backend setup/marginal fits) bound to a mixed
@@ -795,6 +878,65 @@ fn prop_warm_start_bit_identical() {
                         stream[i].m()
                     );
                 }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_f64_warm_hints_stay_exact_under_quantization() {
+    // Tolerance-warm-hint regression: turning ON cache quantization
+    // (cache_eps > 0) must change NOTHING on an all-f64 shard mix — a
+    // bit-exact backend anywhere in the mix pins warm hints to exact-key
+    // certification (near-miss hints are reserved for all-tolerance
+    // mixes), so a quantizing warm service stays bit-identical to the
+    // cache-disabled path. Distinct generated problems sit far apart
+    // relative to the tiny eps, so quantized submit-level hits coincide
+    // with exact duplicates.
+    check("f64 warm hints ignore quantized near-misses", 3, |rng| {
+        let n = rng.range_usize(40, 120);
+        let coherence = rng.range_f64(0.3, 0.9);
+        let stream = coherent_stream(rng, n, coherence);
+        for shards in [1usize, 3] {
+            let backends: Vec<BackendSpec> = (0..shards)
+                .map(|s| match s % 3 {
+                    0 => BackendSpec::SimdCpu { threads: 1 + s },
+                    1 => BackendSpec::BatchCpu { threads: 1 + s },
+                    _ => BackendSpec::Cpu,
+                })
+                .collect();
+            let config = |warm: bool| Config {
+                max_wait: Duration::from_millis(1),
+                backends: backends.clone(),
+                depth: PipelineDepth::new(2),
+                max_queue: n + 64,
+                cache_capacity: if warm { 4_096 } else { 0 },
+                // The quantizing knob under test: on an f64 mix it must
+                // not relax hint certification.
+                cache_eps: if warm { 1e-9 } else { 0.0 },
+                warm_start: warm,
+                ..Config::default()
+            };
+            let cold = Service::start("definitely-missing-artifact-dir", config(false))
+                .expect("CPU-only service starts without artifacts");
+            let want = cold.solve_all(&stream).expect("cold solve_all");
+            cold.shutdown();
+
+            let warm = Service::start("definitely-missing-artifact-dir", config(true))
+                .expect("CPU-only service starts without artifacts");
+            assert!(
+                warm.validation().is_bit_exact(),
+                "an all-f64 mix must declare the bit-exact contract"
+            );
+            let got = warm.solve_all(&stream).expect("warm solve_all");
+            warm.shutdown();
+            assert_eq!(got.len(), stream.len(), "shards={shards}");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    bit_identical(a, b),
+                    "shards={shards} problem {i} (m={}): {a:?} vs {b:?}",
+                    stream[i].m()
+                );
             }
         }
     });
