@@ -13,7 +13,9 @@
 //! cargo run --release --example serve \
 //!     [-- <requests> <rate_per_s> [--shards N] [--depth D] [--backends LIST]
 //!         [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS]
-//!         [--bulk-slo-ms MS] [--scenario NAME]]
+//!         [--bulk-slo-ms MS] [--scenario NAME]
+//!         [--capture PATH] [--capture-sample K]
+//!         [--spans-out PATH] [--span-sample K] [--metrics-out PATH]]
 //! ```
 //!
 //! * `--shards N` runs N engine shards behind the weighted dispatcher;
@@ -46,6 +48,13 @@
 //! * `--capture PATH` records the admitted request stream (arrival time,
 //!   deadline class, size class, payload seed) to a schema-versioned trace
 //!   fixture; replay it deterministically with `--scenario trace:PATH`.
+//!   `--capture-sample K` keeps every K-th request (long runs); replay
+//!   scales the offered rate back up by K.
+//! * `--spans-out PATH` exports the run's span timeline as Chrome
+//!   trace-event JSON (open in ui.perfetto.dev or chrome://tracing);
+//!   `--span-sample K` records every K-th request's lifecycle.
+//! * `--metrics-out PATH` writes the final metrics snapshot as a
+//!   Prometheus text exposition (every counter/gauge/histogram).
 //!
 //! The report prints e2e latency percentiles, the queue-wait vs
 //! execute-time split, close-reason counts, shed counts per deadline
@@ -79,6 +88,10 @@ fn main() -> anyhow::Result<()> {
     let mut tune_profile: Option<std::path::PathBuf> = None;
     let mut class_overrides: Vec<ClassOverride> = Vec::new();
     let mut capture_path: Option<std::path::PathBuf> = None;
+    let mut capture_sample: u64 = 1;
+    let mut spans_out: Option<std::path::PathBuf> = None;
+    let mut span_sample: u64 = 1;
+    let mut metrics_out: Option<std::path::PathBuf> = None;
     let mut positional = 0usize;
     let mut i = 0usize;
     while i < args.len() {
@@ -127,6 +140,18 @@ fn main() -> anyhow::Result<()> {
         } else if args[i] == "--capture" {
             i += 1;
             capture_path = args.get(i).map(std::path::PathBuf::from);
+        } else if args[i] == "--capture-sample" {
+            i += 1;
+            capture_sample = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(1).max(1);
+        } else if args[i] == "--spans-out" {
+            i += 1;
+            spans_out = args.get(i).map(std::path::PathBuf::from);
+        } else if args[i] == "--span-sample" {
+            i += 1;
+            span_sample = args.get(i).and_then(|a| a.parse().ok()).unwrap_or(1).max(1);
+        } else if args[i] == "--metrics-out" {
+            i += 1;
+            metrics_out = args.get(i).map(std::path::PathBuf::from);
         } else {
             match positional {
                 0 => requests = args[i].parse().unwrap_or(requests),
@@ -143,7 +168,12 @@ fn main() -> anyhow::Result<()> {
     let bulk_slo_ms = if bulk_slo_ms == 0 { slo_ms * 8 } else { bulk_slo_ms };
 
     let calibrated = tune_profile.is_some();
-    let capture = capture_path.as_ref().map(|_| batch_lp2d::trace::TraceCapture::new());
+    let capture = capture_path
+        .as_ref()
+        .map(|_| batch_lp2d::trace::TraceCapture::with_sample(capture_sample));
+    let spans = spans_out
+        .as_ref()
+        .map(|_| batch_lp2d::obs::spans::SpanRecorder::new(65_536, span_sample));
     let config = Config {
         max_wait: Duration::from_millis(slo_ms),
         bulk_wait: Duration::from_millis(bulk_slo_ms),
@@ -155,6 +185,7 @@ fn main() -> anyhow::Result<()> {
         tune_profile,
         class_overrides,
         capture: capture.clone(),
+        spans: spans.clone(),
         ..Config::default()
     };
     let service = Service::start(batch_lp2d::runtime::default_artifact_dir(), config)?;
@@ -286,6 +317,20 @@ fn main() -> anyhow::Result<()> {
         snap.shed_bulk,
         100.0 * snap.padding_waste()
     );
+    for b in &snap.burn {
+        let slo_ms =
+            if b.slo_ns == u64::MAX { f64::INFINITY } else { b.slo_ns as f64 / 1e6 };
+        println!(
+            "  slo m={} {}: bound {:.2} ms  burn short {:.3} / long {:.3}  violated {}/{}",
+            b.class_m,
+            b.deadline_class.as_str(),
+            slo_ms,
+            b.short_burn,
+            b.long_burn,
+            b.violated,
+            b.observed
+        );
+    }
     println!(
         "  exec split: memory fraction {:.1}% (Fig-5 quantity, serving mode)",
         100.0 * snap.memory_fraction()
@@ -324,12 +369,30 @@ fn main() -> anyhow::Result<()> {
     if let (Some(cap), Some(path)) = (&capture, &capture_path) {
         cap.save(path)?;
         println!(
-            "  captured {} request(s) -> {} (schema v{}; replay with --scenario trace:{})",
+            "  captured {} request(s) -> {} (schema v{}; 1-in-{} sampled; replay with \
+             --scenario trace:{})",
             cap.len(),
             path.display(),
             batch_lp2d::trace::TRACE_SCHEMA,
+            cap.sample_every(),
             path.display()
         );
+    }
+    if let (Some(rec), Some(path)) = (&spans, &spans_out) {
+        batch_lp2d::obs::export::write_chrome_trace(path, rec)?;
+        println!(
+            "  spans: {} event(s) (1-in-{} sampled, {} dropped) -> {} (Perfetto / \
+             chrome://tracing)",
+            rec.len(),
+            rec.sample_every(),
+            rec.dropped(),
+            path.display()
+        );
+    }
+    if let Some(path) = &metrics_out {
+        let shard_names: Vec<String> = names.iter().map(|n| n.to_string()).collect();
+        batch_lp2d::obs::export::write_metrics_exposition(path, &snap, &shard_names)?;
+        println!("  metrics: Prometheus text exposition -> {}", path.display());
     }
     println!("serve OK");
     Ok(())

@@ -9,7 +9,8 @@
 //!     [--scenario poisson,bursty,...,trace:PATH | all] [--requests N] \
 //!     [--rate R] [--shards N] [--backends LIST] [--depth D] \
 //!     [--policy fixed|adaptive] [--max-queue N] [--slo-ms MS] \
-//!     [--bulk-slo-ms MS] [--replay-speed X] [--gate-p99-ms MS] [--gate-shed N]
+//!     [--bulk-slo-ms MS] [--replay-speed X] [--gate-p99-ms MS] [--gate-shed N] \
+//!     [--metrics-out METRICS_loadgen.prom]
 //! ```
 //!
 //! Defaults run every scenario on a portable CPU-only heterogeneous shard
@@ -22,8 +23,10 @@
 //! records for the perf gate). `--gate-p99-ms` / `--gate-shed` turn the
 //! run into a pass/fail gate: any scenario whose e2e p99 or shed count
 //! exceeds the bound fails the bench with a nonzero exit (the CI trace leg
-//! gates replayed fixtures this way). `BATCH_LP2D_BENCH_FAST=1` shrinks
-//! the request counts for CI.
+//! gates replayed fixtures this way). `--metrics-out PATH` writes the
+//! last scenario's final metrics snapshot as a Prometheus text exposition
+//! (the same format `serve --metrics-out` emits).
+//! `BATCH_LP2D_BENCH_FAST=1` shrinks the request counts for CI.
 
 use std::time::Duration;
 
@@ -45,6 +48,7 @@ fn main() -> anyhow::Result<()> {
     let mut shards = 0usize;
     let mut gate_p99_ms: Option<f64> = None;
     let mut gate_shed: Option<usize> = None;
+    let mut metrics_out: Option<String> = None;
 
     let mut i = 0usize;
     while i < args.len() {
@@ -103,6 +107,9 @@ fn main() -> anyhow::Result<()> {
             }
             "--gate-shed" => {
                 gate_shed = value().and_then(|v| v.parse().ok());
+            }
+            "--metrics-out" => {
+                metrics_out = value();
             }
             // cargo bench passes through its own flags (e.g. --bench);
             // ignore anything unrecognized rather than failing the run.
@@ -164,6 +171,18 @@ fn main() -> anyhow::Result<()> {
     match absorb_into_profile(std::path::Path::new("TUNE_profile.json"), &mix, &reports)? {
         Some(n) => println!("absorbed {n} serving observation(s) into TUNE_profile.json"),
         None => println!("heterogeneous mix: serving observations not attributed to a backend"),
+    }
+    // `--metrics-out`: the last scenario's snapshot as Prometheus text —
+    // the loadgen-side counterpart of `serve --metrics-out`.
+    if let (Some(path), Some(last)) = (&metrics_out, reports.last()) {
+        let shard_names: Vec<String> = mix.iter().map(|s| s.key()).collect();
+        batch_lp2d::obs::export::write_metrics_exposition(
+            std::path::Path::new(path),
+            &last.snapshot,
+            &shard_names,
+        )
+        .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+        println!("wrote Prometheus exposition ({}) -> {path}", last.scenario);
     }
 
     // Replay gate: bound the tail and the shed count per scenario. The

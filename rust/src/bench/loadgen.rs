@@ -105,6 +105,10 @@ pub struct ScenarioReport {
     /// Per-class cost observations distilled from the run's metrics
     /// ([`class_observations`]) — the loadgen → tune-profile feed.
     pub observations: Vec<Observation>,
+    /// The run's full final metrics snapshot, kept so callers can export
+    /// it (the bench harness writes a Prometheus text exposition from it
+    /// via `--metrics-out`).
+    pub snapshot: Snapshot,
 }
 
 impl ScenarioReport {
@@ -200,6 +204,7 @@ pub fn run_scenario(
         padding_waste: snap.padding_waste(),
         adaptive_closes: snap.closes.adaptive(),
         observations: class_observations(&snap),
+        snapshot: snap,
     })
 }
 
@@ -388,6 +393,7 @@ mod tests {
                 busy_ns: 90_000.0,
                 samples: 9,
             }],
+            snapshot: Snapshot::default(),
         }
     }
 
@@ -471,6 +477,7 @@ mod tests {
                 ClassPadding { class_m: 256, ..Default::default() },
             ],
             queue_depths: Vec::new(),
+            ..Default::default()
         };
         let obs = class_observations(&snap);
         assert_eq!(obs.len(), 2, "silent classes yield nothing: {obs:?}");

@@ -196,6 +196,33 @@ pub struct ClassSloOverride {
     pub bulk_wait: Option<Duration>,
 }
 
+/// Resolve the effective SLO wait bound of every size class under both
+/// deadline classes: the config-wide defaults overlaid with the per-class
+/// overrides — the same resolution [`AdmissionPipeline::new`] performs,
+/// exported so the metrics layer can seed its SLO burn-rate tracker with
+/// thresholds identical to the ones the close policy enforces. One
+/// `(class_m, interactive_ns, bulk_ns)` row per class, in input order.
+pub fn resolve_slo_table(
+    classes: &[usize],
+    interactive_wait: Duration,
+    bulk_wait: Duration,
+    overrides: &[ClassSloOverride],
+) -> Vec<(usize, u64, u64)> {
+    classes
+        .iter()
+        .map(|&class_m| {
+            let o = overrides.iter().find(|o| o.class_m == class_m);
+            (
+                class_m,
+                o.and_then(|o| o.interactive_wait)
+                    .unwrap_or(interactive_wait)
+                    .as_nanos() as u64,
+                o.and_then(|o| o.bulk_wait).unwrap_or(bulk_wait).as_nanos() as u64,
+            )
+        })
+        .collect()
+}
+
 /// Admission configuration: the policy knobs the service threads through
 /// from its `Config` (and the CLI's `--policy`/`--max-queue`/`--slo-ms`).
 #[derive(Clone, Debug)]
@@ -983,6 +1010,38 @@ mod tests {
         assert_eq!(p.route(17), Some(64));
         assert_eq!(p.route(65), None);
         assert_eq!(p.router().classes(), &[16, 64]);
+    }
+
+    #[test]
+    fn slo_table_resolution_matches_pipeline() {
+        let classes = [16usize, 64];
+        let overrides = [ClassSloOverride {
+            class_m: 16,
+            interactive_wait: Some(Duration::from_millis(1)),
+            bulk_wait: None,
+        }];
+        let table = resolve_slo_table(
+            &classes,
+            Duration::from_millis(10),
+            Duration::from_millis(80),
+            &overrides,
+        );
+        assert_eq!(
+            table,
+            vec![(16, 1_000_000, 80_000_000), (64, 10_000_000, 80_000_000)]
+        );
+        // Cross-check against the pipeline's own resolution.
+        let p = pipeline(AdmissionConfig { class_slos: overrides.to_vec(), ..fixed() });
+        for &(class_m, i_ns, b_ns) in &table {
+            assert_eq!(
+                p.class_slo(class_m, DeadlineClass::Interactive).unwrap().as_nanos() as u64,
+                i_ns
+            );
+            assert_eq!(
+                p.class_slo(class_m, DeadlineClass::Bulk).unwrap().as_nanos() as u64,
+                b_ns
+            );
+        }
     }
 
     #[test]

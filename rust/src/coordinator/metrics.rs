@@ -12,8 +12,9 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::coordinator::admission::{CloseReason, DeadlineClass};
+use crate::obs::slo::{ClassBurn, SloTracker};
 use crate::runtime::ExecTiming;
-use crate::util::LatencyHistogram;
+use crate::util::{HistogramSnapshot, LatencyHistogram};
 
 #[derive(Clone, Debug, Default)]
 struct Inner {
@@ -42,6 +43,9 @@ struct Inner {
     /// Live admission-queue depths, one row per size class (a gauge: the
     /// dispatcher overwrites it each pass).
     queue_depths: Vec<QueueDepth>,
+    /// Per-(size class × deadline class) SLO burn-rate windows, fed from
+    /// the same per-request waits `on_close` records.
+    slo: SloTracker,
 }
 
 /// Live depth of one size class's admission queues, split by deadline
@@ -128,6 +132,9 @@ pub struct ShardLoad {
     pub busy_ns: u64,
     /// Batches this shard stole from a peer's staged queue.
     pub steals: u64,
+    /// Batches stolen FROM this shard's staged queue by a peer — with
+    /// `steals` this tells thief from victim in the load split.
+    pub stolen_away: u64,
     /// Batches the weighted dispatcher TARGETED at this shard (stealing
     /// may execute them elsewhere) — the observable the calibrated
     /// dispatch ratio shows up in.
@@ -149,6 +156,7 @@ impl Default for ShardLoad {
             solved: 0,
             busy_ns: 0,
             steals: 0,
+            stolen_away: 0,
             dispatched: 0,
             weight: 1.0,
             calibrated_weight: 1.0,
@@ -183,7 +191,7 @@ pub struct Metrics {
 }
 
 /// Immutable snapshot for reporting.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Snapshot {
     pub submitted: u64,
     pub solved: u64,
@@ -213,6 +221,10 @@ pub struct Snapshot {
     pub exec_p95_ns: u64,
     pub exec_p99_ns: u64,
     pub exec_mean_ns: f64,
+    /// Full explicit-bucket histograms behind the percentile fields — the
+    /// shape the Prometheus exposition renders as cumulative `le` series.
+    pub queue_wait_hist: HistogramSnapshot,
+    pub exec_hist: HistogramSnapshot,
     pub timing: ExecTimingTotals,
     /// Per-shard load split (index = shard/executor id), including steal
     /// counts and capacity weights.
@@ -222,6 +234,9 @@ pub struct Snapshot {
     /// Live per-(size class × deadline class) admission-queue depths, as
     /// of the dispatcher's latest pass (empty until the service publishes).
     pub queue_depths: Vec<QueueDepth>,
+    /// SLO burn-rate gauges, one row per (size class × deadline class)
+    /// observed or configured via [`Metrics::configure_slos`].
+    pub burn: Vec<ClassBurn>,
 }
 
 impl Metrics {
@@ -309,6 +324,31 @@ impl Metrics {
         }
     }
 
+    /// Install the SLO thresholds the burn-rate gauges judge against:
+    /// the per-deadline-class defaults plus one `(class_m,
+    /// interactive_ns, bulk_ns)` row per size class — the
+    /// [`resolve_slo_table`](crate::coordinator::admission::resolve_slo_table)
+    /// shape, so the gauges use exactly the bounds admission enforces.
+    pub fn configure_slos(
+        &self,
+        default_interactive_ns: u64,
+        default_bulk_ns: u64,
+        table: Vec<(usize, u64, u64)>,
+    ) {
+        self.inner.lock().unwrap().slo.configure(
+            default_interactive_ns,
+            default_bulk_ns,
+            table,
+        );
+    }
+
+    /// Record a steal from `victim`'s staged queue (the thief side is
+    /// credited via [`Metrics::on_batch`]'s `stolen` flag).
+    pub fn on_steal_from(&self, victim: usize) {
+        self.ensure_shards(victim + 1);
+        self.inner.lock().unwrap().per_shard[victim].stolen_away += 1;
+    }
+
     pub fn on_reject(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
@@ -340,11 +380,13 @@ impl Metrics {
     }
 
     /// Record a batch close: which policy rule fired, each item's
-    /// admission-queue wait, and the class padding gauge (`rows_used` live
+    /// admission-queue wait (also fed to the deadline class's SLO
+    /// burn-rate window), and the class padding gauge (`rows_used` live
     /// rows out of `items * class_m`).
     pub fn on_close(
         &self,
         class_m: usize,
+        deadline_class: DeadlineClass,
         reason: CloseReason,
         waits: &[Duration],
         rows_used: u64,
@@ -352,7 +394,9 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.closes.bump(reason);
         for w in waits {
-            g.queue_wait.record(w.as_nanos() as u64);
+            let ns = w.as_nanos() as u64;
+            g.queue_wait.record(ns);
+            g.slo.observe(class_m, deadline_class, ns);
         }
         let rows_total = (waits.len() * class_m) as u64;
         if let Some(p) = g.padding.iter_mut().find(|p| p.class_m == class_m) {
@@ -432,10 +476,13 @@ impl Metrics {
             exec_p95_ns: g.exec_latency.percentile_ns(95.0),
             exec_p99_ns: g.exec_latency.percentile_ns(99.0),
             exec_mean_ns: g.exec_latency.mean_ns(),
+            queue_wait_hist: g.queue_wait.snapshot(),
+            exec_hist: g.exec_latency.snapshot(),
             timing: g.exec_timing,
             per_shard: g.per_shard.clone(),
             padding: g.padding.clone(),
             queue_depths: g.queue_depths.clone(),
+            burn: g.slo.snapshot(),
         }
     }
 }
@@ -527,9 +574,9 @@ mod tests {
         let m = Metrics::new();
         let ms = Duration::from_millis(1);
         // Two problems of 10 rows each in the 16-class: 20/32 live rows.
-        m.on_close(16, CloseReason::IdleShard, &[ms, 2 * ms], 20);
-        m.on_close(16, CloseReason::Full, &[ms, ms, ms, ms], 64);
-        m.on_close(64, CloseReason::Deadline, &[5 * ms], 10);
+        m.on_close(16, DeadlineClass::Interactive, CloseReason::IdleShard, &[ms, 2 * ms], 20);
+        m.on_close(16, DeadlineClass::Interactive, CloseReason::Full, &[ms, ms, ms, ms], 64);
+        m.on_close(64, DeadlineClass::Bulk, CloseReason::Deadline, &[5 * ms], 10);
         let s = m.snapshot();
         assert_eq!(s.closes, CloseCounts { full: 1, deadline: 1, idle: 1, cost: 0, flush: 0 });
         assert_eq!(s.closes.total(), 3);
@@ -683,6 +730,53 @@ mod tests {
         assert_eq!(s.cache_misses, 2);
         assert_eq!(s.cache_evictions, 3);
         assert!((s.cache_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_snapshots_ride_along() {
+        let m = Metrics::new();
+        let ms = Duration::from_millis(1);
+        m.on_close(16, DeadlineClass::Interactive, CloseReason::Full, &[ms, ms], 20);
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait_hist.count, 2);
+        assert_eq!(s.queue_wait_hist.sum_ns, 2_000_000);
+        assert_eq!(s.queue_wait_hist.buckets.iter().sum::<u64>(), 2);
+        assert_eq!(s.exec_hist.count, 0);
+    }
+
+    #[test]
+    fn burn_gauges_judge_waits_against_configured_slos() {
+        let m = Metrics::new();
+        // 1ms interactive / 8ms bulk bounds for class 16.
+        m.configure_slos(1_000_000, 8_000_000, vec![(16, 1_000_000, 8_000_000)]);
+        let ms = Duration::from_millis(1);
+        // Interactive: one meet (1ms == bound), one violation (5ms).
+        m.on_close(16, DeadlineClass::Interactive, CloseReason::Full, &[ms, 5 * ms], 20);
+        // Bulk: both meet the 8ms bound.
+        m.on_close(16, DeadlineClass::Bulk, CloseReason::Deadline, &[ms, 2 * ms], 20);
+        let s = m.snapshot();
+        assert_eq!(s.burn.len(), 2);
+        let i = &s.burn[0];
+        assert_eq!((i.class_m, i.deadline_class), (16, DeadlineClass::Interactive));
+        assert_eq!((i.observed, i.violated), (2, 1));
+        assert!(i.short_burn > 0.0 && i.long_burn > 0.0);
+        let b = &s.burn[1];
+        assert_eq!(b.deadline_class, DeadlineClass::Bulk);
+        assert_eq!((b.observed, b.violated), (2, 0));
+        assert_eq!(b.short_burn, 0.0);
+    }
+
+    #[test]
+    fn steal_accounting_credits_thief_and_victim() {
+        let m = Metrics::new();
+        m.ensure_shards(2);
+        m.on_steal_from(0);
+        let t = ExecTiming::default();
+        m.on_batch(1, 0, true, 2, 4, 0, &t);
+        let s = m.snapshot();
+        assert_eq!(s.per_shard[0].stolen_away, 1);
+        assert_eq!(s.per_shard[1].steals, 1);
+        assert_eq!(s.steals(), 1);
     }
 
     #[test]

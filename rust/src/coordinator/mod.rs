@@ -29,8 +29,12 @@
 //!   threads; the dispatcher drives the admission pipeline with real
 //!   timestamps and the executors' idle-shard feedback channel.
 //! * [`metrics`] -- counters and latency histograms: queue-wait vs
-//!   execute-time split (p50/p95/p99), close-reason counts, per-class
-//!   padding-waste gauges, per-deadline-class shed counts, per-shard load.
+//!   execute-time split (p50/p95/p99 plus full explicit-bucket
+//!   snapshots), close-reason counts, per-class padding-waste gauges,
+//!   per-deadline-class shed counts, per-shard load (steals both
+//!   directions), and per-(size × deadline) class SLO burn-rate gauges
+//!   (fed by [`crate::obs::slo::SloTracker`]). The whole snapshot is
+//!   exportable as Prometheus text via [`crate::obs::export`].
 //!
 //! The serving knobs surface on the CLI and the serve example as
 //! `--policy fixed|adaptive`, `--max-queue N`, and `--slo-ms MS` (the
@@ -43,8 +47,8 @@ pub mod router;
 pub mod service;
 
 pub use admission::{
-    AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, CloseReason,
-    DeadlineClass, ReadyBatch, RejectReason,
+    resolve_slo_table, AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy,
+    CloseReason, DeadlineClass, ReadyBatch, RejectReason,
 };
 pub use cache::{CacheKey, ResultCache, CACHE_STRIPES};
 pub use metrics::{ClassPadding, CloseCounts, Metrics, QueueDepth, ShardLoad, Snapshot};

@@ -54,12 +54,14 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::admission::{
-    AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy, DeadlineClass, ReadyBatch,
+    resolve_slo_table, AdmissionConfig, AdmissionPipeline, ClassSloOverride, ClosePolicy,
+    DeadlineClass, ReadyBatch,
 };
 use crate::coordinator::cache::ResultCache;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::Router;
 use crate::lp::types::{Problem, Solution, Status};
+use crate::obs::spans::{Phase, SpanRecorder};
 use crate::runtime::backend::{Backend, BatchCpuBackend, CpuShardExecutor, Validation};
 use crate::runtime::pack::{pack_into_indexed, unpack_into, PackedBatch, SlotHint};
 use crate::runtime::simd::{SimdCpuBackend, SimdCpuF32Backend};
@@ -467,6 +469,16 @@ pub struct Config {
     /// saves as a replayable `TRACE_*.json` fixture after the run
     /// (`serve --capture PATH`). None = no recording overhead.
     pub capture: Option<TraceCapture>,
+    /// Span timeline tap: when set, per-request lifecycle events
+    /// (admitted → enqueued → batch-closed → staged → \[stolen →\]
+    /// executed → unpacked → replied) for every `sample_every`-th
+    /// request, plus every batch's shard-track spans, land in this
+    /// bounded ring ([`SpanRecorder`]) — exportable as a
+    /// Perfetto-loadable Chrome trace via
+    /// [`crate::obs::export::write_chrome_trace`] (`serve --spans-out`).
+    /// Recording never changes replies: span stamps are side tables off
+    /// the hot path, and `None` costs nothing at all.
+    pub spans: Option<SpanRecorder>,
 }
 
 impl Default for Config {
@@ -491,6 +503,7 @@ impl Default for Config {
             cache_eps: 0.0,
             warm_start: false,
             capture: None,
+            spans: None,
         }
     }
 }
@@ -544,6 +557,9 @@ impl Ticket {
 struct Pending {
     problem: Problem,
     reply: mpsc::Sender<anyhow::Result<Solution>>,
+    /// Sampled-request span id (None = untraced or not sampled): the
+    /// key downstream stages stamp lifecycle events under.
+    span: Option<u64>,
 }
 
 // Lets the pack stage feed `pack_into` straight from the borrowed request
@@ -579,6 +595,11 @@ struct StagedBatch {
     /// was actually hidden behind the previous batch's execution.
     pack_started: Instant,
     pack_finished: Instant,
+    /// Batch span id minted at close time (0 = untraced): ties this
+    /// batch's staged/stolen/executed/unpacked track spans together.
+    span: u64,
+    /// The batch's size class, carried for span/metric labels.
+    class_m: usize,
 }
 
 /// Drop guard for the pack stages: the LAST one to exit — normal return
@@ -609,6 +630,7 @@ pub struct Service {
     /// service's results guarantee relative to the f64 reference.
     validation: Validation,
     capture: Option<TraceCapture>,
+    spans: Option<SpanRecorder>,
     /// Content-addressed result cache (None when `cache_capacity == 0`):
     /// consulted on submit (duplicate content answered without queueing)
     /// and filled by the execute stages as replies fan out.
@@ -740,6 +762,21 @@ impl Service {
         }
         metrics.configure_classes(router.classes());
         metrics.set_pipeline_depth(depth);
+        // SLO burn-rate gauges judge every queue wait against the same
+        // resolved per-(size × deadline) class bounds the admission
+        // pipeline enforces — one resolution, two consumers.
+        metrics.configure_slos(
+            config.max_wait.as_nanos() as u64,
+            config.bulk_wait.as_nanos() as u64,
+            resolve_slo_table(router.classes(), config.max_wait, config.bulk_wait, &class_slos),
+        );
+        // Span timeline tap (None = zero overhead, not even an atomic).
+        let spans = config.spans.clone();
+        if let Some(rec) = &spans {
+            rec.configure_shards(
+                &backend_names.iter().map(|n| n.to_string()).collect::<Vec<String>>(),
+            );
+        }
 
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.queue_depth);
 
@@ -776,7 +813,8 @@ impl Service {
         // The last pack stage to exit closes the staged queues, draining
         // the execute stages.
         let pack_alive = Arc::new(AtomicUsize::new(n_executors));
-        let mut batch_txs: Vec<mpsc::Sender<ReadyBatch<Pending>>> =
+        // Each ready batch travels with its span id (0 = untraced).
+        let mut batch_txs: Vec<mpsc::Sender<(ReadyBatch<Pending>, u64)>> =
             Vec::with_capacity(n_executors);
         // Buffer recycling is routed by a batch's ORIGIN shard: a stolen
         // batch's buffer must flow back to the pack stage that allocated
@@ -796,7 +834,7 @@ impl Service {
             // The pack stage never touches the backend; it gets its own
             // manifest copy for bucket fitting.
             let pack_manifest = manifest.clone();
-            let (batch_tx, batch_rx) = mpsc::channel::<ReadyBatch<Pending>>();
+            let (batch_tx, batch_rx) = mpsc::channel::<(ReadyBatch<Pending>, u64)>();
             batch_txs.push(batch_tx);
 
             // Pack stage: this shard's ready batches -> staged queue.
@@ -807,18 +845,21 @@ impl Service {
                 let pack_alive = pack_alive.clone();
                 let model = model.clone();
                 let pack_cache = warm_start.then(|| cache.clone()).flatten();
+                let pack_spans = spans.clone();
                 executors.push(std::thread::spawn(move || {
                     // Held for the thread's lifetime: the last pack stage
                     // to exit (or unwind) closes the staged queues.
                     let _alive =
                         PackAliveGuard { alive: pack_alive, queues: queues.clone() };
-                    while let Ok(batch) = batch_rx.recv() {
+                    while let Ok((batch, span)) = batch_rx.recv() {
                         let staged = stage_batch(
                             &pack_manifest,
                             variant,
                             e,
                             model.as_ref(),
                             batch,
+                            span,
+                            pack_spans.as_ref(),
                             pack_base,
                             pack_cache.as_deref(),
                             near_miss_hints,
@@ -851,6 +892,7 @@ impl Service {
                 let recycle_txs = recycle_txs.clone();
                 let idle_tx = tx.clone();
                 let model = model.clone();
+                let exec_spans = spans.clone();
                 executors.push(std::thread::spawn(move || {
                     // Pack-side death detection: if every execute stage
                     // dies (backend panic), blocked pushes fail and the
@@ -871,12 +913,29 @@ impl Service {
                     let mut last_done: Option<Instant> = None;
                     while let Some(popped) = queues.pop(e) {
                         let origin = popped.item.origin;
+                        if popped.stolen {
+                            // Steal accounting credits the victim (the
+                            // queue the batch came off), and the trace
+                            // stamps the steal on the victim's track.
+                            metrics.on_steal_from(popped.from);
+                            if let Some(rec) = &exec_spans {
+                                rec.batch(
+                                    Phase::Stolen,
+                                    popped.item.span,
+                                    popped.from,
+                                    popped.item.items.len(),
+                                    popped.item.class_m,
+                                    true,
+                                );
+                            }
+                        }
                         run_staged(
                             backend.as_mut(),
                             e,
                             popped.stolen,
                             popped.item,
                             &metrics,
+                            exec_spans.as_ref(),
                             fill_cache.as_deref(),
                             model.as_ref(),
                             &mut solutions,
@@ -948,7 +1007,13 @@ impl Service {
                     Some(model_weights(model.as_ref()))
                 };
                 let dispatch = |ready: ReadyBatch<Pending>| {
-                    metrics.on_close(ready.class_m, ready.reason, &ready.waits, ready.rows_used);
+                    metrics.on_close(
+                        ready.class_m,
+                        ready.deadline_class,
+                        ready.reason,
+                        &ready.waits,
+                        ready.rows_used,
+                    );
                     let live_weights: Vec<f64>;
                     let weights: &[f64] = match &frozen_weights {
                         Some(w) => w,
@@ -967,9 +1032,38 @@ impl Service {
                             la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
                         })
                         .unwrap_or(0);
+                    // Mint the batch span at close time: a batch-closed
+                    // marker on the target shard's track, plus the
+                    // batch-closed link on every sampled member request.
+                    let span = match &config.spans {
+                        Some(rec) => {
+                            let id = rec.next_batch_id();
+                            rec.batch(
+                                Phase::BatchClosed,
+                                id,
+                                target,
+                                ready.items.len(),
+                                ready.class_m,
+                                false,
+                            );
+                            for item in &ready.items {
+                                if let Some(req) = item.span {
+                                    rec.request_in_batch(
+                                        Phase::BatchClosed,
+                                        req,
+                                        id,
+                                        Some(target),
+                                        ready.class_m,
+                                    );
+                                }
+                            }
+                            id
+                        }
+                        None => 0,
+                    };
                     metrics.on_dispatch(target);
                     outstanding[target].fetch_add(1, Ordering::Relaxed);
-                    if batch_txs[target].send(ready).is_err() {
+                    if batch_txs[target].send((ready, span)).is_err() {
                         // Shard already gone (shutdown); the requests were
                         // dropped with the channel and reply with errors.
                         outstanding[target].fetch_sub(1, Ordering::Relaxed);
@@ -1007,6 +1101,9 @@ impl Service {
                     match rx.recv_timeout(timeout) {
                         Ok(Msg::Request(class_m, deadline_class, pending)) => {
                             let now = Instant::now();
+                            if let (Some(rec), Some(req)) = (&config.spans, pending.span) {
+                                rec.request(Phase::Enqueued, req, class_m);
+                            }
                             let rows = pending.problem.m();
                             let out =
                                 admission.push(class_m, deadline_class, pending, rows, now);
@@ -1046,6 +1143,7 @@ impl Service {
             backend_names,
             validation,
             capture: config.capture,
+            spans,
             cache,
             dispatcher: Some(dispatcher),
             executors,
@@ -1083,8 +1181,12 @@ impl Service {
         // Stamp the trace event before the problem moves into the pending
         // reply; record it only once the submit has actually landed (a
         // Closed service must not appear in a fixture, mirroring the
-        // submit counter below).
-        let captured = self.capture.as_ref().map(|c| c.event_for(&problem, class));
+        // submit counter below). `event_for` is None for requests the
+        // capture's own sampling skips.
+        let captured = self.capture.as_ref().and_then(|c| c.event_for(&problem, class));
+        // Span admission gate: unsampled requests cost one atomic
+        // increment; sampled ones get an id and an `admitted` stamp.
+        let span = self.spans.as_ref().and_then(|rec| rec.admit(class_m));
         // Cross-request reuse: a submit whose content key matches a
         // completed result is answered HERE — it never queues, packs, or
         // executes. The reply channel is pre-filled so a cache hit is
@@ -1101,12 +1203,17 @@ impl Service {
                 if let (Some(cap), Some(ev)) = (&self.capture, captured) {
                     cap.push(ev);
                 }
+                // A cache hit replies without ever queueing — its span is
+                // just admitted → replied, visibly short in the timeline.
+                if let (Some(rec), Some(req)) = (&self.spans, span) {
+                    rec.request(Phase::Replied, req, class_m);
+                }
                 return Ok(Ticket { rx });
             }
             self.metrics.on_cache_miss();
         }
         self.tx
-            .send(Msg::Request(class_m, class, Pending { problem, reply }))
+            .send(Msg::Request(class_m, class, Pending { problem, reply, span }))
             .map_err(|_| SubmitError::Closed)?;
         // Count only after the send succeeded: a Closed service must not
         // inflate the submit counter.
@@ -1158,6 +1265,13 @@ impl Service {
     /// consumers (tests, CI asserts) may assume of this service.
     pub fn validation(&self) -> Validation {
         self.validation
+    }
+
+    /// The span recorder this service stamps request/batch lifecycle
+    /// events into, when configured ([`Config::spans`]) — export it with
+    /// [`crate::obs::export::write_chrome_trace`] after shutdown.
+    pub fn spans(&self) -> Option<&SpanRecorder> {
+        self.spans.as_ref()
     }
 
     /// The content-addressed result cache, when enabled
@@ -1262,6 +1376,8 @@ fn stage_batch(
     shard: usize,
     model: &CalibratedModel,
     batch: ReadyBatch<Pending>,
+    span: u64,
+    spans: Option<&SpanRecorder>,
     pack_base: u64,
     cache: Option<&ResultCache>,
     near_miss: bool,
@@ -1334,6 +1450,26 @@ fn stage_batch(
         }
     }
     let pack_finished = Instant::now();
+    if let Some(rec) = spans {
+        // Stamp the pack interval on this (origin) shard's track.
+        let dur = pack_finished.duration_since(pack_started).as_nanos() as u64;
+        let end = rec.now_ns();
+        rec.batch_timed(
+            Phase::Staged,
+            span,
+            shard,
+            batch.items.len(),
+            batch.class_m,
+            false,
+            end.saturating_sub(dur),
+            dur,
+        );
+        for pending in &batch.items {
+            if let Some(req) = pending.span {
+                rec.request_in_batch(Phase::Staged, req, span, Some(shard), batch.class_m);
+            }
+        }
+    }
 
     // Per-shard cost estimates off the model seam, so a steal re-costs
     // the batch at the thief's measured — not nominal — rate. Calibrated
@@ -1349,6 +1485,8 @@ fn stage_batch(
         items: batch.items,
         pack_started,
         pack_finished,
+        span,
+        class_m: batch.class_m,
     };
     // Blocks while this shard's staged queue is at depth (backpressure).
     // If every execute stage died, the push fails and the requests get
@@ -1380,6 +1518,7 @@ fn run_staged(
     stolen: bool,
     staged: StagedBatch,
     metrics: &Metrics,
+    spans: Option<&SpanRecorder>,
     cache: Option<&ResultCache>,
     model: &CalibratedModel,
     solutions: &mut Vec<Solution>,
@@ -1393,6 +1532,8 @@ fn run_staged(
         items,
         pack_started,
         pack_finished,
+        span,
+        class_m,
     } = staged;
     let executed = backend.execute_raw(&bucket, &pb).and_then(|(sol, status, mut timing)| {
         let t = Instant::now();
@@ -1453,6 +1594,34 @@ fn run_staged(
             if model.is_calibrated() {
                 metrics.set_calibrated_weight(shard, model.weight(shard));
             }
+            if let Some(rec) = spans {
+                // Back-date the executed/unpacked spans from their
+                // measured durations: both ended (approximately) now,
+                // with the unpack directly after the backend call.
+                let end = rec.now_ns();
+                let exec_ns = timing.execute_ns;
+                let unpack_ns = timing.unpack_ns;
+                rec.batch_timed(
+                    Phase::Executed,
+                    span,
+                    shard,
+                    items.len(),
+                    class_m,
+                    stolen,
+                    end.saturating_sub(unpack_ns + exec_ns),
+                    exec_ns,
+                );
+                rec.batch_timed(
+                    Phase::Unpacked,
+                    span,
+                    shard,
+                    items.len(),
+                    class_m,
+                    stolen,
+                    end.saturating_sub(unpack_ns),
+                    unpack_ns,
+                );
+            }
             for (pending, sol) in items.into_iter().zip(solutions.iter()) {
                 // Fill the reuse cache as replies fan out: the next
                 // submit with this content answers from here. Insert is
@@ -1464,12 +1633,21 @@ fn run_staged(
                         metrics.on_cache_evict(evicted);
                     }
                 }
+                if let (Some(rec), Some(req)) = (spans, pending.span) {
+                    rec.request_in_batch(Phase::Executed, req, span, Some(shard), class_m);
+                    rec.request_in_batch(Phase::Unpacked, req, span, Some(shard), class_m);
+                    rec.request(Phase::Replied, req, class_m);
+                }
                 let _ = pending.reply.send(Ok(*sol));
             }
         }
         Err(e) => {
             let msg = format!("batch execution failed: {e}");
             for pending in items {
+                // Error replies still close the request's flow line.
+                if let (Some(rec), Some(req)) = (spans, pending.span) {
+                    rec.request(Phase::Replied, req, class_m);
+                }
                 let _ = pending.reply.send(Err(anyhow::anyhow!("{msg}")));
             }
         }

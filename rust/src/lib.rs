@@ -92,6 +92,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod gen;
 pub mod lp;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod solvers;

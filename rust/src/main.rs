@@ -29,10 +29,14 @@ use batch_lp2d::bench::imbalance;
 use batch_lp2d::coordinator::{BackendSpec, Config, Service};
 use batch_lp2d::gen::{self, trace};
 use batch_lp2d::lp::types::Status;
+use batch_lp2d::obs::export::{write_chrome_trace, write_metrics_exposition};
+use batch_lp2d::obs::spans::SpanRecorder;
 use batch_lp2d::runtime::{Engine, PipelineDepth, Variant};
 use batch_lp2d::sim::{Backend, World, WorldParams};
 use batch_lp2d::solvers::batch_cpu::{self, Algo};
-use batch_lp2d::trace::{render_frame, TraceCapture, CLEAR, TRACE_SCHEMA};
+use batch_lp2d::trace::{
+    render_frame, render_frame_with_history, SnapshotRing, TraceCapture, CLEAR, TRACE_SCHEMA,
+};
 use batch_lp2d::util::{Rng, Timer};
 
 fn main() {
@@ -77,8 +81,11 @@ fn print_help() {
                     [--bulk-slo-ms MS] [--scenario poisson|bursty|...|trace:PATH]\n\
                     [--tune-profile TUNE_profile.json]\n\
                     [--class-overrides '16:slo-ms=1;64:max-batch=128']\n\
-                    [--capture TRACE_run.json] [--replay-speed X] [--passes N]\n\
+                    [--capture TRACE_run.json] [--capture-sample K]\n\
+                    [--replay-speed X] [--passes N]\n\
                     [--tui] [--tui-frame]\n\
+                    [--spans-out SPANS_run.json] [--span-sample K]\n\
+                    [--metrics-out METRICS_run.prom]\n\
                     [--cache-capacity N] [--cache-eps E] [--warm-start]\n\
                                         run the coordinator under open-loop load\n\
                                         (--backends mixes shard types; CPU-only\n\
@@ -96,7 +103,14 @@ fn print_help() {
                                         --class-overrides sets per-size-class\n\
                                         max-batch/SLO bounds, --capture records\n\
                                         admitted traffic to a replayable trace\n\
-                                        fixture, --cache-capacity enables the\n\
+                                        fixture (--capture-sample keeps every\n\
+                                        K-th request; replay scales the rate\n\
+                                        back up), --spans-out writes a Chrome\n\
+                                        trace-event JSON span timeline for\n\
+                                        Perfetto (--span-sample records every\n\
+                                        K-th request), --metrics-out writes a\n\
+                                        Prometheus text exposition of the\n\
+                                        final snapshot, --cache-capacity enables the\n\
                                         content-addressed result cache (N entries),\n\
                                         --cache-eps quantizes its keys, --warm-start\n\
                                         seeds packed batches from cached results,\n\
@@ -242,7 +256,14 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         None => Vec::new(),
     };
     let capture_path = flags.get("capture").map(std::path::PathBuf::from);
-    let capture = capture_path.as_ref().map(|_| TraceCapture::new());
+    let capture_sample = flag(flags, "capture-sample", 1u64);
+    anyhow::ensure!(capture_sample >= 1, "--capture-sample must be >= 1");
+    let capture = capture_path.as_ref().map(|_| TraceCapture::with_sample(capture_sample));
+    let spans_out = flags.get("spans-out").map(std::path::PathBuf::from);
+    let span_sample = flag(flags, "span-sample", 1u64);
+    anyhow::ensure!(span_sample >= 1, "--span-sample must be >= 1");
+    let spans = spans_out.as_ref().map(|_| SpanRecorder::new(65_536, span_sample));
+    let metrics_out = flags.get("metrics-out").map(std::path::PathBuf::from);
     let tui = flags.contains_key("tui");
     let tui_frame = flags.contains_key("tui-frame");
     let cache_capacity = flag(flags, "cache-capacity", 0usize);
@@ -267,6 +288,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         tune_profile,
         class_overrides,
         capture: capture.clone(),
+        spans: spans.clone(),
         cache_capacity,
         cache_eps,
         warm_start,
@@ -284,9 +306,18 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         Some(std::thread::spawn(move || {
             use std::io::Write as _;
             let t0 = std::time::Instant::now();
+            // Keep ~16 s of 250 ms samples so the trend sparklines have a
+            // window to draw deltas over.
+            let mut history = SnapshotRing::new(64);
             while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                let frame =
-                    render_frame(&metrics.snapshot(), &names, t0.elapsed().as_secs_f64());
+                let snap = metrics.snapshot();
+                history.push(snap.clone());
+                let frame = render_frame_with_history(
+                    &snap,
+                    &names,
+                    t0.elapsed().as_secs_f64(),
+                    &history,
+                );
                 print!("{CLEAR}{frame}");
                 let _ = std::io::stdout().flush();
                 std::thread::sleep(std::time::Duration::from_millis(250));
@@ -395,6 +426,22 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
         snap.shed_interactive,
         snap.shed_bulk
     );
+    for b in &snap.burn {
+        let slo_ms =
+            if b.slo_ns == u64::MAX { f64::INFINITY } else { b.slo_ns as f64 / 1e6 };
+        println!(
+            "slo m={} {}: bound {:.2} ms  burn short {:.3} / long {:.3}  \
+             violated {}/{} ({:.1}%)",
+            b.class_m,
+            b.deadline_class.as_str(),
+            slo_ms,
+            b.short_burn,
+            b.long_burn,
+            b.violated,
+            b.observed,
+            100.0 * b.lifetime_burn()
+        );
+    }
     for p in &snap.padding {
         println!(
             "class m={}: {} batches  padding waste {:.1}%",
@@ -434,12 +481,29 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     if let (Some(cap), Some(path)) = (&capture, &capture_path) {
         cap.save(path)?;
         println!(
-            "captured {} request(s) -> {} (schema v{TRACE_SCHEMA}; replay with \
-             --scenario trace:{})",
+            "captured {} request(s) -> {} (schema v{TRACE_SCHEMA}; 1-in-{} sampled; \
+             replay with --scenario trace:{})",
             cap.len(),
             path.display(),
+            cap.sample_every(),
             path.display()
         );
+    }
+    if let (Some(rec), Some(path)) = (&spans, &spans_out) {
+        write_chrome_trace(path, rec)?;
+        println!(
+            "spans: {} event(s) (1-in-{} sampled, {} dropped at capacity) -> {} \
+             (open in ui.perfetto.dev or chrome://tracing)",
+            rec.len(),
+            rec.sample_every(),
+            rec.dropped(),
+            path.display()
+        );
+    }
+    if let Some(path) = &metrics_out {
+        let shard_names: Vec<String> = names.iter().map(|n| n.to_string()).collect();
+        write_metrics_exposition(path, &snap, &shard_names)?;
+        println!("metrics: Prometheus text exposition -> {}", path.display());
     }
     Ok(())
 }

@@ -1,0 +1,610 @@
+//! Exporters: the span ring as Chrome trace-event JSON (Perfetto /
+//! chrome://tracing) and a metrics [`Snapshot`] as a Prometheus-style
+//! text exposition.
+//!
+//! Both renderers are pure string builders over frozen inputs — no
+//! locks are held while formatting, and (as everywhere in this crate)
+//! the JSON is hand-rolled against the stable subset of the formats we
+//! need, not a serde dependency.
+//!
+//! # Chrome trace layout
+//!
+//! One process (`pid` 1). Track (`tid`) 0 is the **requests** track:
+//! every sampled request's lifecycle instants land there, joined by a
+//! flow (`ph:"s"` at admit → `ph:"f"` at reply, `id` = request id) so
+//! Perfetto draws an arrow from admission to reply. Tracks 1..=S are
+//! the **shard** tracks, named `shard N [backend]`: batch-scope events
+//! land on the shard that performed the stage, with timed phases
+//! (staged/executed) as complete (`"X"`) slices whose width is the
+//! stage duration. Timestamps are microseconds from the recorder epoch
+//! (the trace-event format's native unit).
+
+use std::path::Path;
+
+use crate::coordinator::metrics::Snapshot;
+use crate::obs::spans::{SpanEvent, SpanRecorder};
+
+fn ts_us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e3)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn thread_name_row(tid: usize, name: &str) -> String {
+    format!(
+        "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        json_escape(name)
+    )
+}
+
+fn event_args(e: &SpanEvent) -> String {
+    let mut args = Vec::new();
+    if let Some(r) = e.req {
+        args.push(format!("\"req\":{r}"));
+    }
+    if let Some(b) = e.batch {
+        args.push(format!("\"batch\":{b}"));
+    }
+    if let Some(s) = e.shard {
+        args.push(format!("\"shard\":{s}"));
+    }
+    if e.n > 0 {
+        args.push(format!("\"n\":{}", e.n));
+    }
+    args.push(format!("\"class_m\":{}", e.class_m));
+    if e.stolen {
+        args.push("\"stolen\":true".to_string());
+    }
+    format!("{{{}}}", args.join(","))
+}
+
+/// Render the recorder's ring as a complete Chrome trace-event JSON
+/// document (the `{"traceEvents": [...]}` object form).
+pub fn chrome_trace_json(rec: &SpanRecorder) -> String {
+    let names = rec.shard_names();
+    let events = rec.events();
+    // Every named shard gets a track even when idle; events from shards
+    // beyond the named range still get an (unnamed) track.
+    let mut shards = names.len();
+    for e in &events {
+        if let Some(s) = e.shard {
+            shards = shards.max(s as usize + 1);
+        }
+    }
+
+    let mut rows: Vec<String> = Vec::with_capacity(events.len() + shards + 1);
+    rows.push(thread_name_row(0, "requests"));
+    for s in 0..shards {
+        let label = match names.get(s) {
+            Some(n) => format!("shard {s} [{n}]"),
+            None => format!("shard {s}"),
+        };
+        rows.push(thread_name_row(s + 1, &label));
+    }
+
+    for e in &events {
+        let name = e.phase.as_str();
+        let args = event_args(e);
+        match e.req {
+            // Request-scope: instants on the requests track, plus flow
+            // endpoints at admit/reply so Perfetto links the lifecycle.
+            Some(req) => {
+                rows.push(format!(
+                    "{{\"name\":\"{name}\",\"cat\":\"req\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"pid\":1,\"tid\":0,\"ts\":{},\"args\":{args}}}",
+                    ts_us(e.at_ns)
+                ));
+                let flow = match e.phase {
+                    crate::obs::spans::Phase::Admitted => Some("\"ph\":\"s\""),
+                    crate::obs::spans::Phase::Replied => Some("\"ph\":\"f\",\"bp\":\"e\""),
+                    _ => None,
+                };
+                if let Some(flow) = flow {
+                    rows.push(format!(
+                        "{{\"name\":\"request\",\"cat\":\"req\",{flow},\"id\":{req},\
+                         \"pid\":1,\"tid\":0,\"ts\":{}}}",
+                        ts_us(e.at_ns)
+                    ));
+                }
+            }
+            // Batch-scope: slices (timed) or instants on the shard track.
+            None => {
+                let tid = e.shard.map(|s| s as usize + 1).unwrap_or(0);
+                if e.dur_ns > 0 {
+                    rows.push(format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"batch\",\"ph\":\"X\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{},\"dur\":{},\"args\":{args}}}",
+                        ts_us(e.at_ns),
+                        ts_us(e.dur_ns)
+                    ));
+                } else {
+                    rows.push(format!(
+                        "{{\"name\":\"{name}\",\"cat\":\"batch\",\"ph\":\"i\",\"s\":\"t\",\
+                         \"pid\":1,\"tid\":{tid},\"ts\":{},\"args\":{args}}}",
+                        ts_us(e.at_ns)
+                    ));
+                }
+            }
+        }
+    }
+
+    format!(
+        "{{\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped_events\":{},\
+         \"sample_every\":{}}},\"traceEvents\":[\n{}\n]}}\n",
+        rec.dropped(),
+        rec.sample_every(),
+        rows.join(",\n")
+    )
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &Path, rec: &SpanRecorder) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(rec))
+}
+
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn label_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn sec(ns: u64) -> f64 {
+    ns as f64 / 1e9
+}
+
+struct Expo {
+    out: String,
+}
+
+impl Expo {
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    fn row(&mut self, name: &str, labels: &str, value: impl std::fmt::Display) {
+        if labels.is_empty() {
+            self.out.push_str(&format!("{name} {value}\n"));
+        } else {
+            self.out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+        }
+    }
+
+    /// One full histogram family: cumulative `le` buckets (upper edges
+    /// in seconds) plus `_sum` and `_count`.
+    fn histogram(&mut self, name: &str, help: &str, h: &crate::util::HistogramSnapshot) {
+        self.family(name, "histogram", help);
+        let mut cum = 0u64;
+        for (i, &c) in h.buckets.iter().enumerate() {
+            cum += c;
+            let le = sec(crate::util::HistogramSnapshot::bucket_upper_ns(i));
+            self.row(&format!("{name}_bucket"), &format!("le=\"{le}\""), cum);
+        }
+        self.row(&format!("{name}_bucket"), "le=\"+Inf\"", h.count);
+        self.row(&format!("{name}_sum"), "", sec(h.sum_ns));
+        self.row(&format!("{name}_count"), "", h.count);
+    }
+}
+
+/// Render a metrics [`Snapshot`] as Prometheus-style text exposition.
+/// Covers every counter, gauge, and histogram the snapshot carries;
+/// `shard_names` (backend key per shard) become the per-shard series'
+/// `backend` label.
+pub fn prometheus_exposition(snap: &Snapshot, shard_names: &[String]) -> String {
+    let mut e = Expo { out: String::new() };
+    let p = "batch_lp2d";
+
+    // Request/outcome counters.
+    for (name, help, v) in [
+        ("submitted_total", "Requests submitted to the service.", snap.submitted),
+        ("solved_total", "Problems solved (feasible or not).", snap.solved),
+        ("infeasible_total", "Problems reported infeasible/unbounded.", snap.infeasible),
+        ("rejected_total", "Submits rejected before queueing.", snap.rejected),
+        ("cache_hits_total", "Submits answered from the result cache.", snap.cache_hits),
+        ("cache_misses_total", "Cache-eligible submits that missed.", snap.cache_misses),
+        ("cache_evictions_total", "Result-cache capacity evictions.", snap.cache_evictions),
+        ("batches_total", "Batches executed.", snap.batches),
+    ] {
+        let name = format!("{p}_{name}");
+        e.family(&name, "counter", help);
+        e.row(&name, "", v);
+    }
+
+    let name = format!("{p}_shed_total");
+    e.family(&name, "counter", "Load-shed requests by deadline class.");
+    e.row(&name, "deadline=\"interactive\"", snap.shed_interactive);
+    e.row(&name, "deadline=\"bulk\"", snap.shed_bulk);
+
+    let name = format!("{p}_batch_closes_total");
+    e.family(&name, "counter", "Batch closes by policy rule.");
+    for (reason, v) in [
+        ("full", snap.closes.full),
+        ("deadline", snap.closes.deadline),
+        ("idle", snap.closes.idle),
+        ("cost", snap.closes.cost),
+        ("flush", snap.closes.flush),
+    ] {
+        e.row(&name, &format!("reason=\"{reason}\""), v);
+    }
+
+    // Scalar gauges.
+    let name = format!("{p}_mean_occupancy");
+    e.family(&name, "gauge", "Mean batch occupancy (used/capacity).");
+    e.row(&name, "", snap.mean_occupancy);
+    let name = format!("{p}_pipeline_depth");
+    e.family(&name, "gauge", "Configured staged-queue (pipeline ring) depth.");
+    e.row(&name, "", snap.pipeline_depth);
+
+    // Execute-side stage split.
+    let name = format!("{p}_exec_stage_seconds_total");
+    e.family(&name, "counter", "Summed executor time by stage.");
+    for (stage, ns) in [
+        ("pack", snap.timing.pack_ns),
+        ("transfer", snap.timing.transfer_ns),
+        ("execute", snap.timing.execute_ns),
+        ("unpack", snap.timing.unpack_ns),
+    ] {
+        e.row(&name, &format!("stage=\"{stage}\""), sec(ns));
+    }
+    let name = format!("{p}_exec_critical_path_seconds_total");
+    e.family(&name, "counter", "Summed executor critical-path time.");
+    e.row(&name, "", sec(snap.timing.critical_path_ns));
+
+    // The two latency histograms, explicit buckets.
+    e.histogram(
+        &format!("{p}_queue_wait_seconds"),
+        "Per-request admission-queue wait (submit to batch close).",
+        &snap.queue_wait_hist,
+    );
+    e.histogram(
+        &format!("{p}_exec_latency_seconds"),
+        "Per-batch execute-side latency (pack+transfer+execute+unpack).",
+        &snap.exec_hist,
+    );
+
+    // Per-shard load split.
+    let shard_label = |s: usize| -> String {
+        let backend = shard_names.get(s).map(|n| label_escape(n)).unwrap_or_default();
+        format!("shard=\"{s}\",backend=\"{backend}\"")
+    };
+    for (suffix, kind, help, get) in [
+        (
+            "shard_batches_total",
+            "counter",
+            "Batches executed per shard.",
+            (|l| l.batches as f64) as fn(&crate::coordinator::metrics::ShardLoad) -> f64,
+        ),
+        ("shard_solved_total", "counter", "Problems solved per shard.", |l| l.solved as f64),
+        ("shard_busy_seconds_total", "counter", "Busy time per shard.", |l| sec(l.busy_ns)),
+        ("shard_steals_total", "counter", "Batches this shard stole.", |l| l.steals as f64),
+        (
+            "shard_stolen_away_total",
+            "counter",
+            "Batches stolen from this shard.",
+            |l| l.stolen_away as f64,
+        ),
+        (
+            "shard_dispatched_total",
+            "counter",
+            "Batches the weighted dispatcher targeted here.",
+            |l| l.dispatched as f64,
+        ),
+        ("shard_weight", "gauge", "Nominal capacity weight.", |l| l.weight),
+        (
+            "shard_calibrated_weight",
+            "gauge",
+            "Calibrated dispatch weight.",
+            |l| l.calibrated_weight,
+        ),
+    ] {
+        let name = format!("{p}_{suffix}");
+        e.family(&name, kind, help);
+        for (s, load) in snap.per_shard.iter().enumerate() {
+            e.row(&name, &shard_label(s), get(load));
+        }
+    }
+
+    // Per-class padding gauges.
+    let name = format!("{p}_class_batches_total");
+    e.family(&name, "counter", "Batches closed per size class.");
+    for c in &snap.padding {
+        e.row(&name, &format!("class_m=\"{}\"", c.class_m), c.batches);
+    }
+    let name = format!("{p}_class_padding_waste");
+    e.family(&name, "gauge", "Dead-padding fraction of class-shaped rows.");
+    for c in &snap.padding {
+        e.row(&name, &format!("class_m=\"{}\"", c.class_m), c.waste());
+    }
+
+    // Live admission-queue depths.
+    let name = format!("{p}_queue_depth");
+    e.family(&name, "gauge", "Live admission-queue depth per (class, deadline).");
+    for q in &snap.queue_depths {
+        e.row(&name, &format!("class_m=\"{}\",deadline=\"interactive\"", q.class_m), q.interactive);
+        e.row(&name, &format!("class_m=\"{}\",deadline=\"bulk\"", q.class_m), q.bulk);
+    }
+
+    // SLO burn-rate gauges.
+    let burn_label = |b: &crate::obs::slo::ClassBurn, extra: &str| -> String {
+        format!(
+            "class_m=\"{}\",deadline=\"{}\"{extra}",
+            b.class_m,
+            b.deadline_class.as_str()
+        )
+    };
+    let name = format!("{p}_slo_burn");
+    e.family(&name, "gauge", "SLO violation fraction over EWMA windows.");
+    for b in &snap.burn {
+        e.row(&name, &burn_label(b, ",window=\"short\""), b.short_burn);
+        e.row(&name, &burn_label(b, ",window=\"long\""), b.long_burn);
+    }
+    let name = format!("{p}_slo_observed_total");
+    e.family(&name, "counter", "Requests judged against their class SLO.");
+    for b in &snap.burn {
+        e.row(&name, &burn_label(b, ""), b.observed);
+    }
+    let name = format!("{p}_slo_violations_total");
+    e.family(&name, "counter", "Requests that violated their class SLO.");
+    for b in &snap.burn {
+        e.row(&name, &burn_label(b, ""), b.violated);
+    }
+    let name = format!("{p}_slo_bound_seconds");
+    e.family(&name, "gauge", "The wait bound each burn row judges against.");
+    for b in &snap.burn {
+        e.row(&name, &burn_label(b, ""), sec(b.slo_ns));
+    }
+
+    e.out
+}
+
+/// Write [`prometheus_exposition`] to `path`.
+pub fn write_metrics_exposition(
+    path: &Path,
+    snap: &Snapshot,
+    shard_names: &[String],
+) -> std::io::Result<()> {
+    std::fs::write(path, prometheus_exposition(snap, shard_names))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::{CloseReason, DeadlineClass};
+    use crate::coordinator::metrics::Metrics;
+    use crate::obs::spans::Phase;
+    use std::time::Duration;
+
+    fn braces_balance(s: &str) -> bool {
+        // No string in our output embeds unescaped braces, so a plain
+        // depth count is a meaningful structural check.
+        let mut depth = 0i64;
+        for c in s.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+            if depth < 0 {
+                return false;
+            }
+        }
+        depth == 0
+    }
+
+    fn recorded() -> SpanRecorder {
+        let rec = SpanRecorder::new(256, 1);
+        rec.configure_shards(&["batch-cpu".to_string(), "cpu".to_string()]);
+        let req = rec.admit(16).unwrap();
+        rec.request(Phase::Enqueued, req, 16);
+        let b = rec.next_batch_id();
+        rec.request_in_batch(Phase::BatchClosed, req, b, None, 16);
+        let t0 = rec.now_ns();
+        rec.batch_timed(Phase::Staged, b, 0, 4, 16, false, t0, 1_500);
+        rec.batch(Phase::Stolen, b, 0, 4, 16, true);
+        rec.batch_timed(Phase::Executed, b, 1, 4, 16, true, rec.now_ns(), 2_500);
+        rec.batch(Phase::Unpacked, b, 1, 4, 16, true);
+        rec.request_in_batch(Phase::Executed, req, b, Some(1), 16);
+        rec.request_in_batch(Phase::Unpacked, req, b, Some(1), 16);
+        rec.request_in_batch(Phase::Replied, req, b, Some(1), 16);
+        rec
+    }
+
+    #[test]
+    fn chrome_trace_structure() {
+        let rec = recorded();
+        let json = chrome_trace_json(&rec);
+        assert!(braces_balance(&json), "unbalanced JSON:\n{json}");
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+        assert!(json.contains("\"displayTimeUnit\":\"ms\""));
+        assert!(json.contains("\"traceEvents\":["));
+        // Track metadata: the requests track plus one per shard.
+        assert!(json.contains("\"args\":{\"name\":\"requests\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"shard 0 [batch-cpu]\"}"));
+        assert!(json.contains("\"args\":{\"name\":\"shard 1 [cpu]\"}"));
+        // The sampled request shows >= 6 distinct lifecycle phases.
+        for phase in
+            ["admitted", "enqueued", "batch-closed", "executed", "unpacked", "replied"]
+        {
+            assert!(
+                json.contains(&format!("\"name\":\"{phase}\",\"cat\":\"req\"")),
+                "missing request phase {phase}"
+            );
+        }
+        // Flow endpoints tie admit to reply.
+        assert!(json.contains("\"ph\":\"s\",\"id\":1"));
+        assert!(json.contains("\"ph\":\"f\",\"bp\":\"e\",\"id\":1"));
+        // Timed batch phases render as complete slices with a duration.
+        assert!(json.contains("\"name\":\"staged\",\"cat\":\"batch\",\"ph\":\"X\""));
+        assert!(json.contains("\"dur\":1.500"));
+        assert!(json.contains("\"dur\":2.500"));
+        // The steal instant carries its flag; batch events name shards.
+        assert!(json.contains("\"name\":\"stolen\""));
+        assert!(json.contains("\"stolen\":true"));
+        assert!(json.contains("\"tid\":2"));
+    }
+
+    #[test]
+    fn chrome_trace_escapes_backend_names() {
+        let rec = SpanRecorder::new(8, 1);
+        rec.configure_shards(&["we\"ird\\name".to_string()]);
+        let json = chrome_trace_json(&rec);
+        assert!(json.contains("shard 0 [we\\\"ird\\\\name]"));
+        assert!(braces_balance(&json));
+    }
+
+    #[test]
+    fn empty_recorder_still_renders_valid_trace() {
+        let rec = SpanRecorder::new(8, 4);
+        let json = chrome_trace_json(&rec);
+        assert!(braces_balance(&json));
+        assert!(json.contains("\"sample_every\":4"));
+        assert!(json.contains("\"name\":\"requests\""));
+    }
+
+    fn busy_snapshot() -> Snapshot {
+        let m = Metrics::new();
+        m.configure_shards(&[2.0, 1.0]);
+        m.configure_classes(&[16]);
+        m.configure_slos(1_000_000, 8_000_000, vec![(16, 1_000_000, 8_000_000)]);
+        m.on_submit();
+        m.on_close(
+            16,
+            DeadlineClass::Interactive,
+            CloseReason::Full,
+            &[Duration::from_millis(1), Duration::from_millis(5)],
+            20,
+        );
+        m.on_steal_from(0);
+        m.on_batch(
+            1,
+            0,
+            true,
+            2,
+            4,
+            1,
+            &crate::runtime::ExecTiming {
+                pack_ns: 1_000,
+                transfer_ns: 2_000,
+                execute_ns: 10_000,
+                unpack_ns: 1_000,
+                critical_path_ns: 13_000,
+            },
+        );
+        m.set_queue_depths(&[(16, 1, 2)]);
+        m.snapshot()
+    }
+
+    #[test]
+    fn exposition_names_every_family() {
+        let snap = busy_snapshot();
+        let text =
+            prometheus_exposition(&snap, &["batch-cpu".to_string(), "cpu".to_string()]);
+        for family in [
+            "batch_lp2d_submitted_total",
+            "batch_lp2d_solved_total",
+            "batch_lp2d_infeasible_total",
+            "batch_lp2d_rejected_total",
+            "batch_lp2d_cache_hits_total",
+            "batch_lp2d_cache_misses_total",
+            "batch_lp2d_cache_evictions_total",
+            "batch_lp2d_batches_total",
+            "batch_lp2d_shed_total",
+            "batch_lp2d_batch_closes_total",
+            "batch_lp2d_mean_occupancy",
+            "batch_lp2d_pipeline_depth",
+            "batch_lp2d_exec_stage_seconds_total",
+            "batch_lp2d_exec_critical_path_seconds_total",
+            "batch_lp2d_queue_wait_seconds",
+            "batch_lp2d_exec_latency_seconds",
+            "batch_lp2d_shard_batches_total",
+            "batch_lp2d_shard_solved_total",
+            "batch_lp2d_shard_busy_seconds_total",
+            "batch_lp2d_shard_steals_total",
+            "batch_lp2d_shard_stolen_away_total",
+            "batch_lp2d_shard_dispatched_total",
+            "batch_lp2d_shard_weight",
+            "batch_lp2d_shard_calibrated_weight",
+            "batch_lp2d_class_batches_total",
+            "batch_lp2d_class_padding_waste",
+            "batch_lp2d_queue_depth",
+            "batch_lp2d_slo_burn",
+            "batch_lp2d_slo_observed_total",
+            "batch_lp2d_slo_violations_total",
+            "batch_lp2d_slo_bound_seconds",
+        ] {
+            assert!(
+                text.contains(&format!("# TYPE {family} ")),
+                "missing family {family}"
+            );
+            assert!(text.contains(&format!("# HELP {family} ")));
+        }
+        // Labels carry the shard/backend identity and burn windows.
+        assert!(text.contains("shard=\"1\",backend=\"cpu\""));
+        assert!(text.contains("window=\"short\""));
+        assert!(text.contains("deadline=\"interactive\""));
+        assert!(text.contains("batch_lp2d_slo_violations_total{class_m=\"16\",deadline=\"interactive\"} 1\n"));
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let snap = busy_snapshot();
+        let text = prometheus_exposition(&snap, &[]);
+        let mut last = 0u64;
+        let mut rows = 0usize;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("batch_lp2d_queue_wait_seconds_bucket{le=") {
+                let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "buckets must be cumulative: {line}");
+                last = v;
+                rows += 1;
+            }
+        }
+        assert!(rows > 10, "expected explicit buckets, saw {rows}");
+        assert!(text.contains("batch_lp2d_queue_wait_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("batch_lp2d_queue_wait_seconds_count 2"));
+        // sum = 6ms in seconds.
+        assert!(text.contains("batch_lp2d_queue_wait_seconds_sum 0.006"));
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(label_escape("plain"), "plain");
+        assert_eq!(label_escape("a\\b"), "a\\\\b");
+        assert_eq!(label_escape("a\"b"), "a\\\"b");
+        assert_eq!(label_escape("a\nb"), "a\\nb");
+        let snap = busy_snapshot();
+        let text = prometheus_exposition(&snap, &["we\"ird\\nm".to_string()]);
+        assert!(text.contains("backend=\"we\\\"ird\\\\nm\""));
+    }
+
+    #[test]
+    fn empty_snapshot_exposition_is_complete() {
+        let text = prometheus_exposition(&Snapshot::default(), &[]);
+        assert!(text.contains("batch_lp2d_submitted_total 0"));
+        assert!(text.contains("batch_lp2d_queue_wait_seconds_count 0"));
+        assert!(text.contains("# TYPE batch_lp2d_slo_burn gauge"));
+    }
+}

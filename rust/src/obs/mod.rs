@@ -1,0 +1,33 @@
+//! Observability: bounded per-request span recording, Chrome-trace /
+//! Prometheus export, and SLO burn-rate tracking.
+//!
+//! The paper's whole argument is about where time goes — occupancy is
+//! what buys the batched-LP speedups — so the serving stack needs to
+//! answer *why* a percentile moved, not just *that* it moved. This
+//! module is that layer, in three pieces:
+//!
+//! * [`spans`] — a bounded, sampled span recorder. Every pipeline stage
+//!   (admit → enqueue → batch-close → stage → steal → execute → unpack
+//!   → reply) stamps events for every Nth sampled request plus every
+//!   batch, into a fixed-capacity ring. With the recorder absent the
+//!   hot path does no work at all; with it present but a request
+//!   unsampled, admission costs one atomic increment.
+//! * [`export`] — renders the ring as Chrome trace-event JSON (loadable
+//!   in Perfetto / chrome://tracing: one track per shard plus a
+//!   per-request flow track) and renders a metrics [`Snapshot`] as a
+//!   Prometheus-style text exposition with explicit histogram buckets.
+//! * [`slo`] — per-(size class × deadline class) SLO burn-rate gauges:
+//!   the violation fraction over short and long EWMA windows, fed from
+//!   the same per-request wait records the close policy produces.
+//!
+//! [`Snapshot`]: crate::coordinator::metrics::Snapshot
+
+pub mod export;
+pub mod slo;
+pub mod spans;
+
+pub use export::{
+    chrome_trace_json, prometheus_exposition, write_chrome_trace, write_metrics_exposition,
+};
+pub use slo::{ClassBurn, SloTracker};
+pub use spans::{Phase, SpanEvent, SpanRecorder};

@@ -1,0 +1,261 @@
+//! Per-(size class × deadline class) SLO burn-rate gauges.
+//!
+//! A *burn rate* is the fraction of recent requests violating their
+//! class SLO, smoothed over a request-count EWMA window. Two windows per
+//! row: a **short** window (α = 1/64 — reacts within ~a hundred
+//! requests, pages fast) and a **long** window (α = 1/1024 — the budget
+//! view, rides out bursts). The classic multi-window burn-rate alerting
+//! recipe compares the two: short ≫ long means an incident is *starting*,
+//! short ≪ long means it is *recovering*.
+//!
+//! The tracker is fed from the same per-request queue-wait records the
+//! close policy already produces ([`Metrics::on_close`] forwards every
+//! batch's waits), so it costs nothing extra on the hot path; thresholds
+//! come from [`resolve_slo_table`] so the gauge judges requests by
+//! exactly the bounds the admission pipeline enforces.
+//!
+//! [`Metrics::on_close`]: crate::coordinator::metrics::Metrics::on_close
+//! [`resolve_slo_table`]: crate::coordinator::admission::resolve_slo_table
+
+use crate::coordinator::admission::DeadlineClass;
+
+/// Short-window EWMA factor (per request): ~64-request memory.
+pub const SHORT_ALPHA: f64 = 1.0 / 64.0;
+/// Long-window EWMA factor (per request): ~1024-request memory.
+pub const LONG_ALPHA: f64 = 1.0 / 1024.0;
+
+/// One row of the burn gauge: a (size class × deadline class) pair with
+/// its resolved SLO, lifetime violation counts, and both windows.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassBurn {
+    pub class_m: usize,
+    pub deadline_class: DeadlineClass,
+    /// The wait bound this row judges against.
+    pub slo_ns: u64,
+    /// Lifetime requests observed.
+    pub observed: u64,
+    /// Lifetime SLO violations (wait > slo).
+    pub violated: u64,
+    /// Violation fraction over the short EWMA window, in [0, 1].
+    pub short_burn: f64,
+    /// Violation fraction over the long EWMA window, in [0, 1].
+    pub long_burn: f64,
+}
+
+impl ClassBurn {
+    /// Lifetime violation fraction (0 when nothing observed).
+    pub fn lifetime_burn(&self) -> f64 {
+        if self.observed == 0 {
+            0.0
+        } else {
+            self.violated as f64 / self.observed as f64
+        }
+    }
+}
+
+/// The mutable gauge state. Lives inside the metrics registry's mutex,
+/// so it needs no locking of its own.
+#[derive(Clone, Debug)]
+pub struct SloTracker {
+    rows: Vec<ClassBurn>,
+    /// Fallback bounds for size classes [`observe`](Self::observe)d
+    /// before (or without) [`configure`](Self::configure); `u64::MAX`
+    /// means "no SLO — never violated".
+    default_interactive_ns: u64,
+    default_bulk_ns: u64,
+}
+
+impl Default for SloTracker {
+    fn default() -> Self {
+        SloTracker {
+            rows: Vec::new(),
+            default_interactive_ns: u64::MAX,
+            default_bulk_ns: u64::MAX,
+        }
+    }
+}
+
+fn zero_row(class_m: usize, deadline_class: DeadlineClass, slo_ns: u64) -> ClassBurn {
+    ClassBurn {
+        class_m,
+        deadline_class,
+        slo_ns,
+        observed: 0,
+        violated: 0,
+        short_burn: 0.0,
+        long_burn: 0.0,
+    }
+}
+
+impl SloTracker {
+    /// Install per-class thresholds: one `(class_m, interactive_ns,
+    /// bulk_ns)` row per size class (the [`resolve_slo_table`] shape),
+    /// plus defaults for classes outside the table. Pre-creates every
+    /// row so the gauge is visible (at zero) before traffic arrives.
+    ///
+    /// [`resolve_slo_table`]: crate::coordinator::admission::resolve_slo_table
+    pub fn configure(
+        &mut self,
+        default_interactive_ns: u64,
+        default_bulk_ns: u64,
+        table: Vec<(usize, u64, u64)>,
+    ) {
+        self.default_interactive_ns = default_interactive_ns;
+        self.default_bulk_ns = default_bulk_ns;
+        for (class_m, interactive_ns, bulk_ns) in table {
+            self.row_mut(class_m, DeadlineClass::Interactive).slo_ns = interactive_ns;
+            self.row_mut(class_m, DeadlineClass::Bulk).slo_ns = bulk_ns;
+        }
+    }
+
+    fn row_mut(&mut self, class_m: usize, deadline_class: DeadlineClass) -> &mut ClassBurn {
+        let at = self
+            .rows
+            .iter()
+            .position(|r| r.class_m == class_m && r.deadline_class == deadline_class);
+        let at = match at {
+            Some(i) => i,
+            None => {
+                let slo_ns = match deadline_class {
+                    DeadlineClass::Interactive => self.default_interactive_ns,
+                    DeadlineClass::Bulk => self.default_bulk_ns,
+                };
+                self.rows.push(zero_row(class_m, deadline_class, slo_ns));
+                // Keep rows in (class, interactive-before-bulk) order so
+                // every surface renders them deterministically.
+                self.rows.sort_by_key(|r| {
+                    (r.class_m, r.deadline_class != DeadlineClass::Interactive)
+                });
+                self.rows
+                    .iter()
+                    .position(|r| r.class_m == class_m && r.deadline_class == deadline_class)
+                    .unwrap()
+            }
+        };
+        &mut self.rows[at]
+    }
+
+    /// Feed one request's queue wait. The first observation of a row
+    /// seeds both windows at its own value (0 or 1) — a gauge born from
+    /// one violation reads 1, not `alpha`.
+    pub fn observe(&mut self, class_m: usize, deadline_class: DeadlineClass, wait_ns: u64) {
+        let row = self.row_mut(class_m, deadline_class);
+        let x = if wait_ns > row.slo_ns { 1.0 } else { 0.0 };
+        if row.observed == 0 {
+            row.short_burn = x;
+            row.long_burn = x;
+        } else {
+            row.short_burn += SHORT_ALPHA * (x - row.short_burn);
+            row.long_burn += LONG_ALPHA * (x - row.long_burn);
+        }
+        row.observed += 1;
+        if x > 0.0 {
+            row.violated += 1;
+        }
+    }
+
+    /// Current gauge rows, ordered by (size class, interactive, bulk).
+    pub fn snapshot(&self) -> Vec<ClassBurn> {
+        self.rows.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_seeds_both_windows() {
+        let mut t = SloTracker::default();
+        t.configure(1_000, 2_000, vec![(16, 1_000, 2_000)]);
+        t.observe(16, DeadlineClass::Interactive, 5_000); // violation
+        let rows = t.snapshot();
+        let row = rows
+            .iter()
+            .find(|r| r.class_m == 16 && r.deadline_class == DeadlineClass::Interactive)
+            .unwrap();
+        assert_eq!(row.observed, 1);
+        assert_eq!(row.violated, 1);
+        assert_eq!(row.short_burn, 1.0);
+        assert_eq!(row.long_burn, 1.0);
+        assert_eq!(row.lifetime_burn(), 1.0);
+    }
+
+    #[test]
+    fn windows_decay_at_their_own_rates() {
+        let mut t = SloTracker::default();
+        t.configure(1_000, 2_000, vec![(16, 1_000, 2_000)]);
+        // One violation, then a run of meets: short forgets much faster.
+        t.observe(16, DeadlineClass::Interactive, 5_000);
+        for _ in 0..64 {
+            t.observe(16, DeadlineClass::Interactive, 10);
+        }
+        let row = t.snapshot()[0];
+        assert!(row.short_burn < row.long_burn);
+        assert!(row.short_burn < 0.4, "short window forgot: {}", row.short_burn);
+        assert!(row.long_burn > 0.9, "long window remembers: {}", row.long_burn);
+        // Exact EWMA check: seeded at 1, then 64 zero updates.
+        let expect_short = (1.0 - SHORT_ALPHA).powi(64);
+        assert!((row.short_burn - expect_short).abs() < 1e-12);
+        assert_eq!(row.observed, 65);
+        assert_eq!(row.violated, 1);
+    }
+
+    #[test]
+    fn wait_exactly_at_slo_is_not_a_violation() {
+        let mut t = SloTracker::default();
+        t.configure(1_000, 2_000, vec![(16, 1_000, 2_000)]);
+        t.observe(16, DeadlineClass::Interactive, 1_000);
+        let row = t.snapshot()[0];
+        assert_eq!(row.violated, 0);
+        assert_eq!(row.short_burn, 0.0);
+    }
+
+    #[test]
+    fn deadline_classes_track_separately_with_own_bounds() {
+        let mut t = SloTracker::default();
+        t.configure(1_000, 2_000, vec![(16, 1_000, 2_000)]);
+        // 1.5µs violates interactive (1µs) but meets bulk (2µs).
+        t.observe(16, DeadlineClass::Interactive, 1_500);
+        t.observe(16, DeadlineClass::Bulk, 1_500);
+        let rows = t.snapshot();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].deadline_class, DeadlineClass::Interactive);
+        assert_eq!(rows[0].violated, 1);
+        assert_eq!(rows[1].deadline_class, DeadlineClass::Bulk);
+        assert_eq!(rows[1].violated, 0);
+    }
+
+    #[test]
+    fn configured_rows_are_visible_before_traffic() {
+        let mut t = SloTracker::default();
+        t.configure(1_000, 2_000, vec![(16, 500, 2_000), (64, 1_000, 2_000)]);
+        let rows = t.snapshot();
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.observed == 0 && r.short_burn == 0.0));
+        assert_eq!(rows[0].class_m, 16);
+        assert_eq!(rows[0].slo_ns, 500);
+        assert_eq!(rows[3].class_m, 64);
+        assert_eq!(rows[3].deadline_class, DeadlineClass::Bulk);
+    }
+
+    #[test]
+    fn unconfigured_class_uses_defaults() {
+        let mut t = SloTracker::default();
+        t.configure(1_000, 2_000, Vec::new());
+        t.observe(32, DeadlineClass::Bulk, 1_500); // under the 2µs default
+        t.observe(32, DeadlineClass::Bulk, 3_000); // over it
+        let rows = t.snapshot();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].slo_ns, 2_000);
+        assert_eq!(rows[0].observed, 2);
+        assert_eq!(rows[0].violated, 1);
+    }
+
+    #[test]
+    fn fully_unconfigured_tracker_never_violates() {
+        let mut t = SloTracker::default();
+        t.observe(16, DeadlineClass::Interactive, u64::MAX - 1);
+        assert_eq!(t.snapshot()[0].violated, 0);
+    }
+}

@@ -1,0 +1,438 @@
+//! Bounded, sampled span recorder: the raw event store behind the
+//! Perfetto export.
+//!
+//! Two kinds of events share one ring:
+//!
+//! * **Request-scope** events (`req = Some(id)`) trace one sampled
+//!   request's lifecycle: [`Phase::Admitted`] → [`Phase::Enqueued`] →
+//!   [`Phase::BatchClosed`] → [`Phase::Executed`] → [`Phase::Unpacked`]
+//!   → [`Phase::Replied`]. Requests are sampled every-Nth at admission
+//!   ([`SpanRecorder::admit`]); an unsampled request costs exactly one
+//!   atomic increment and stamps nothing downstream.
+//! * **Batch-scope** events (`batch = Some(id)`, `req = None`) trace
+//!   every closed batch through the executor: [`Phase::Staged`],
+//!   [`Phase::Stolen`] (when work stealing moved it), [`Phase::Executed`],
+//!   [`Phase::Unpacked`] — each carrying the shard, batch size, size
+//!   class, and steal flag. Batches are never sampled away: batch volume
+//!   is `occupancy×` lower than request volume, and the shard tracks are
+//!   the point of the export.
+//!
+//! The ring is fixed-capacity: when full, the oldest event is
+//! overwritten and [`SpanRecorder::dropped`] counts the loss — recording
+//! never allocates after construction and never blocks the pipeline on
+//! an export. All timestamps are nanoseconds from the recorder's epoch
+//! (construction time), so one serve run shares a single timeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A pipeline lifecycle stage. Request-scope phases and batch-scope
+/// phases share the enum — the export keys tracks off the event's
+/// `req`/`batch`/`shard` fields, not the phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Request accepted and routed to a size class.
+    Admitted,
+    /// Request entered its (size class × deadline class) queue.
+    Enqueued,
+    /// The request's batch closed (the event links `req` to `batch`).
+    BatchClosed,
+    /// Batch packed into a staged chunk on its origin shard.
+    Staged,
+    /// Batch popped by a thief shard instead of its origin.
+    Stolen,
+    /// Batch solved on a shard (spans the backend call).
+    Executed,
+    /// Solutions scattered back out of the batch layout.
+    Unpacked,
+    /// Reply delivered to the caller.
+    Replied,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Admitted => "admitted",
+            Phase::Enqueued => "enqueued",
+            Phase::BatchClosed => "batch-closed",
+            Phase::Staged => "staged",
+            Phase::Stolen => "stolen",
+            Phase::Executed => "executed",
+            Phase::Unpacked => "unpacked",
+            Phase::Replied => "replied",
+        }
+    }
+
+    /// Every phase, in lifecycle order.
+    pub const ALL: [Phase; 8] = [
+        Phase::Admitted,
+        Phase::Enqueued,
+        Phase::BatchClosed,
+        Phase::Staged,
+        Phase::Stolen,
+        Phase::Executed,
+        Phase::Unpacked,
+        Phase::Replied,
+    ];
+}
+
+/// One recorded event. `Copy` and fixed-size by design: ring pushes are
+/// a store, never an allocation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    /// Nanoseconds since the recorder's epoch.
+    pub at_ns: u64,
+    pub phase: Phase,
+    /// Sampled request id (1-based) for request-scope events.
+    pub req: Option<u64>,
+    /// Batch id (1-based) for batch-scope events and the
+    /// request-to-batch link stamped at [`Phase::BatchClosed`].
+    pub batch: Option<u64>,
+    /// Executor shard for batch-scope events (for [`Phase::Stolen`],
+    /// the *victim* the batch was stolen from).
+    pub shard: Option<u32>,
+    /// Span length for timed phases (`Staged`/`Executed`/`Unpacked`);
+    /// 0 renders as an instant.
+    pub dur_ns: u64,
+    /// Batch size (problems in the batch); 0 for request-scope events.
+    pub n: u32,
+    /// Size class m.
+    pub class_m: u32,
+    /// Whether the batch ran on a thief shard.
+    pub stolen: bool,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next overwrite position once the ring is full.
+    next: usize,
+    dropped: u64,
+}
+
+#[derive(Debug)]
+struct Shared {
+    epoch: Instant,
+    capacity: usize,
+    sample_every: u64,
+    /// Requests seen at admission (sampling counter).
+    seen: AtomicU64,
+    /// Sampled-request id mint.
+    next_req: AtomicU64,
+    /// Batch id mint.
+    next_batch: AtomicU64,
+    ring: Mutex<Ring>,
+    /// Backend key per shard, for the export's track names.
+    shard_names: Mutex<Vec<String>>,
+}
+
+/// Handle to the shared ring; clones are cheap (`Arc`) and every
+/// pipeline thread holds one.
+#[derive(Clone, Debug)]
+pub struct SpanRecorder {
+    shared: Arc<Shared>,
+}
+
+impl SpanRecorder {
+    /// A recorder holding at most `capacity` events, sampling every
+    /// `sample_every`-th request (1 = trace every request). Both are
+    /// clamped to at least 1.
+    pub fn new(capacity: usize, sample_every: u64) -> SpanRecorder {
+        let capacity = capacity.max(1);
+        SpanRecorder {
+            shared: Arc::new(Shared {
+                epoch: Instant::now(),
+                capacity,
+                sample_every: sample_every.max(1),
+                seen: AtomicU64::new(0),
+                next_req: AtomicU64::new(0),
+                next_batch: AtomicU64::new(0),
+                ring: Mutex::new(Ring {
+                    buf: Vec::with_capacity(capacity),
+                    next: 0,
+                    dropped: 0,
+                }),
+                shard_names: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Record the per-shard backend keys (export track names).
+    pub fn configure_shards(&self, names: &[String]) {
+        *self.shared.shard_names.lock().unwrap() = names.to_vec();
+    }
+
+    pub fn shard_names(&self) -> Vec<String> {
+        self.shared.shard_names.lock().unwrap().clone()
+    }
+
+    /// Nanoseconds since the recorder's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.shared.epoch.elapsed().as_nanos() as u64
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.shared.sample_every
+    }
+
+    /// Admission gate: counts the request and, when it lands on the
+    /// sampling grid, mints a request id and stamps [`Phase::Admitted`].
+    /// `None` means "not sampled — stamp nothing downstream"; the whole
+    /// cost for such a request is this one atomic increment.
+    pub fn admit(&self, class_m: usize) -> Option<u64> {
+        let seen = self.shared.seen.fetch_add(1, Ordering::Relaxed);
+        if seen % self.shared.sample_every != 0 {
+            return None;
+        }
+        let req = self.shared.next_req.fetch_add(1, Ordering::Relaxed) + 1;
+        self.request(Phase::Admitted, req, class_m);
+        Some(req)
+    }
+
+    /// Stamp a request-scope instant.
+    pub fn request(&self, phase: Phase, req: u64, class_m: usize) {
+        self.push(SpanEvent {
+            at_ns: self.now_ns(),
+            phase,
+            req: Some(req),
+            batch: None,
+            shard: None,
+            dur_ns: 0,
+            n: 0,
+            class_m: class_m as u32,
+            stolen: false,
+        });
+    }
+
+    /// Stamp a request-scope event linked to a batch (and optionally the
+    /// shard it ran on).
+    pub fn request_in_batch(
+        &self,
+        phase: Phase,
+        req: u64,
+        batch: u64,
+        shard: Option<usize>,
+        class_m: usize,
+    ) {
+        self.push(SpanEvent {
+            at_ns: self.now_ns(),
+            phase,
+            req: Some(req),
+            batch: Some(batch),
+            shard: shard.map(|s| s as u32),
+            dur_ns: 0,
+            n: 0,
+            class_m: class_m as u32,
+            stolen: false,
+        });
+    }
+
+    /// Mint a batch id (1-based).
+    pub fn next_batch_id(&self) -> u64 {
+        self.shared.next_batch.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Stamp a batch-scope instant.
+    pub fn batch(
+        &self,
+        phase: Phase,
+        batch: u64,
+        shard: usize,
+        n: usize,
+        class_m: usize,
+        stolen: bool,
+    ) {
+        self.batch_timed(phase, batch, shard, n, class_m, stolen, self.now_ns(), 0);
+    }
+
+    /// Stamp a batch-scope span starting at `start_ns` (recorder
+    /// timeline) lasting `dur_ns` (0 = instant).
+    #[allow(clippy::too_many_arguments)]
+    pub fn batch_timed(
+        &self,
+        phase: Phase,
+        batch: u64,
+        shard: usize,
+        n: usize,
+        class_m: usize,
+        stolen: bool,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        self.push(SpanEvent {
+            at_ns: start_ns,
+            phase,
+            req: None,
+            batch: Some(batch),
+            shard: Some(shard as u32),
+            dur_ns,
+            n: n as u32,
+            class_m: class_m as u32,
+            stolen,
+        });
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let mut ring = self.shared.ring.lock().unwrap();
+        if ring.buf.len() < self.shared.capacity {
+            ring.buf.push(ev);
+        } else {
+            let next = ring.next;
+            ring.buf[next] = ev;
+            ring.next = (next + 1) % self.shared.capacity;
+            ring.dropped += 1;
+        }
+    }
+
+    /// Events in chronological (recording) order. When the ring has
+    /// wrapped, the oldest surviving event comes first.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let ring = self.shared.ring.lock().unwrap();
+        if ring.buf.len() < self.shared.capacity {
+            ring.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(ring.buf.len());
+            out.extend_from_slice(&ring.buf[ring.next..]);
+            out.extend_from_slice(&ring.buf[..ring.next]);
+            out
+        }
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.shared.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.shared.ring.lock().unwrap().dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_admits_every_nth_request() {
+        let rec = SpanRecorder::new(64, 3);
+        let sampled: Vec<Option<u64>> = (0..9).map(|_| rec.admit(16)).collect();
+        // Requests 0, 3, 6 land on the grid and get ids 1, 2, 3.
+        assert_eq!(
+            sampled,
+            vec![
+                Some(1),
+                None,
+                None,
+                Some(2),
+                None,
+                None,
+                Some(3),
+                None,
+                None
+            ]
+        );
+        // Each sampled admit stamped exactly one Admitted event.
+        let events = rec.events();
+        assert_eq!(events.len(), 3);
+        assert!(events.iter().all(|e| e.phase == Phase::Admitted));
+        assert_eq!(events[0].req, Some(1));
+        assert_eq!(events[2].req, Some(3));
+    }
+
+    #[test]
+    fn sample_every_one_traces_everything() {
+        let rec = SpanRecorder::new(8, 1);
+        for i in 0..4u64 {
+            assert_eq!(rec.admit(16), Some(i + 1));
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn zero_knobs_are_clamped() {
+        let rec = SpanRecorder::new(0, 0);
+        assert_eq!(rec.capacity(), 1);
+        assert_eq!(rec.sample_every(), 1);
+        assert_eq!(rec.admit(16), Some(1));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let rec = SpanRecorder::new(4, 1);
+        for _ in 0..6 {
+            rec.admit(16);
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 2);
+        // Oldest-first unwind: ids 3, 4, 5, 6 survive (1 and 2 dropped).
+        let ids: Vec<Option<u64>> = rec.events().iter().map(|e| e.req).collect();
+        assert_eq!(ids, vec![Some(3), Some(4), Some(5), Some(6)]);
+        // Timestamps come out non-decreasing.
+        let ts: Vec<u64> = rec.events().iter().map(|e| e.at_ns).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn batch_events_carry_shard_size_and_steal_flag() {
+        let rec = SpanRecorder::new(16, 1);
+        let b = rec.next_batch_id();
+        assert_eq!(b, 1);
+        let t0 = rec.now_ns();
+        rec.batch_timed(Phase::Staged, b, 0, 4, 16, false, t0, 1_000);
+        rec.batch(Phase::Stolen, b, 0, 4, 16, true);
+        rec.batch_timed(Phase::Executed, b, 1, 4, 16, true, rec.now_ns(), 2_000);
+        let events = rec.events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].phase, Phase::Staged);
+        assert_eq!(events[0].dur_ns, 1_000);
+        assert_eq!(events[0].shard, Some(0));
+        assert_eq!(events[0].n, 4);
+        assert!(events[1].stolen);
+        assert_eq!(events[2].shard, Some(1));
+        assert!(events.iter().all(|e| e.req.is_none() && e.batch == Some(1)));
+    }
+
+    #[test]
+    fn request_in_batch_links_both_ids() {
+        let rec = SpanRecorder::new(16, 1);
+        let req = rec.admit(64).unwrap();
+        let b = rec.next_batch_id();
+        rec.request_in_batch(Phase::BatchClosed, req, b, None, 64);
+        rec.request_in_batch(Phase::Replied, req, b, Some(2), 64);
+        let events = rec.events();
+        assert_eq!(events[1].req, Some(req));
+        assert_eq!(events[1].batch, Some(b));
+        assert_eq!(events[2].shard, Some(2));
+    }
+
+    #[test]
+    fn recorder_clones_share_the_ring() {
+        let rec = SpanRecorder::new(16, 1);
+        let clone = rec.clone();
+        rec.admit(16);
+        clone.admit(16);
+        assert_eq!(rec.len(), 2);
+        assert_eq!(clone.len(), 2);
+        clone.configure_shards(&["cpu".to_string()]);
+        assert_eq!(rec.shard_names(), vec!["cpu".to_string()]);
+    }
+
+    #[test]
+    fn phase_names_are_distinct() {
+        let mut names: Vec<&str> = Phase::ALL.iter().map(|p| p.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Phase::ALL.len());
+    }
+}

@@ -94,6 +94,9 @@ pub struct ShardStats {
     pub chunks: usize,
     /// Chunks this shard stole from a peer's staged queue.
     pub steals: usize,
+    /// Chunks stolen FROM this shard's staged queue by a peer — with
+    /// `steals` this tells thief from victim in the balance report.
+    pub stolen_away: usize,
     /// Problems this shard solved.
     pub problems: usize,
     /// The backend's relative capacity weight (the dispatch bias).
@@ -281,6 +284,9 @@ struct Completion {
     /// thief when the chunk was stolen).
     shard: usize,
     stolen: bool,
+    /// The shard whose staged queue held the chunk (the steal victim
+    /// when `stolen`; otherwise `shard` itself).
+    from: usize,
     pb: PackedBatch,
     /// Shard-thread wall time spent on this chunk.
     busy_ns: u64,
@@ -524,6 +530,7 @@ impl<X: Backend> ShardedEngine<X> {
                             idx,
                             shard,
                             stolen: popped.stolen,
+                            from: popped.from,
                             pb,
                             busy_ns,
                             result,
@@ -701,6 +708,9 @@ fn absorb(
 ) {
     *completed += 1;
     let used = c.pb.used;
+    if c.stolen {
+        report.per_shard[c.from].stolen_away += 1;
+    }
     let stats = &mut report.per_shard[c.shard];
     stats.chunks += 1;
     if c.stolen {
@@ -1005,6 +1015,12 @@ mod tests {
             report.per_shard[1].chunks
         );
         assert_eq!(report.steals(), report.per_shard.iter().map(|s| s.steals).sum());
+        // Every steal names a victim: total stolen_away matches total
+        // steals, and a shard cannot be robbed of more than it staged.
+        assert_eq!(
+            report.per_shard.iter().map(|s| s.stolen_away).sum::<usize>(),
+            report.steals()
+        );
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct Popped<T> {
     pub est_ns: u64,
     /// Whether the popping shard stole this item from a peer's queue.
     pub stolen: bool,
+    /// The shard whose queue held the item — the popping shard itself,
+    /// or the steal victim when `stolen` (the observability layer's
+    /// thief/victim attribution).
+    pub from: usize,
 }
 
 struct Entry<T> {
@@ -189,7 +193,7 @@ impl<T> StealQueues<T> {
         loop {
             if let Some(e) = g.queues[me].pop_front() {
                 self.cv.notify_all();
-                return Some(Popped { est_ns: e.ests[me], item: e.item, stolen: false });
+                return Some(Popped { est_ns: e.ests[me], item: e.item, stolen: false, from: me });
             }
             let victim = (0..g.queues.len())
                 .filter(|&s| s != me && !g.queues[s].is_empty())
@@ -200,7 +204,7 @@ impl<T> StealQueues<T> {
                 g.pending_ns[me] += e.ests[me];
                 g.steals[me] += 1;
                 self.cv.notify_all();
-                return Some(Popped { est_ns: e.ests[me], item: e.item, stolen: true });
+                return Some(Popped { est_ns: e.ests[me], item: e.item, stolen: true, from: v });
             }
             if g.closed {
                 return None;
@@ -254,12 +258,14 @@ mod tests {
         assert!(p.stolen);
         assert_eq!(p.item, "new");
         assert_eq!(p.est_ns, 10);
+        assert_eq!(p.from, 1, "steal attributes the victim");
         assert_eq!(q.steal_counts(), vec![1, 0, 0]);
         // Shard 1 still drains its own queue in FIFO order, at its rate.
         let p = q.pop(1).unwrap();
         assert!(!p.stolen);
         assert_eq!(p.item, "old");
         assert_eq!(p.est_ns, 20);
+        assert_eq!(p.from, 1);
         // Shard 2 takes its own item before stealing.
         let p = q.pop(2).unwrap();
         assert!(!p.stolen);

@@ -32,6 +32,7 @@
 
 use std::sync::mpsc;
 
+use crate::obs::spans::{Phase, SpanRecorder};
 use crate::util::Timer;
 
 /// Staging depth shared by every executor layer: how many chunks may be
@@ -126,8 +127,9 @@ impl PipelineStats {
 }
 
 enum Job<C, R> {
-    Stage(usize, C),
-    Finish(usize, R),
+    /// (chunk index, batch span id — 0 when untraced, payload).
+    Stage(usize, u64, C),
+    Finish(usize, u64, R),
 }
 
 /// Drive `chunks` through the two-thread pipeline.
@@ -144,15 +146,38 @@ pub fn run_pipelined<W: StageWorker>(
     chunks: impl IntoIterator<Item = W::Chunk>,
     worker: W,
     depth: usize,
+    execute: impl FnMut(usize, W::Staged) -> anyhow::Result<W::Raw>,
+) -> (anyhow::Result<Vec<W::Out>>, W, PipelineStats) {
+    run_pipelined_traced(chunks, worker, depth, execute, None)
+}
+
+/// [`run_pipelined`] with an optional span tap: `spans = Some((recorder,
+/// shard))` stamps a batch-scope [`Phase::Staged`] / [`Phase::Executed`] /
+/// [`Phase::Unpacked`] span per chunk onto `shard`'s track, each chunk
+/// keyed by a freshly minted batch id so the three phases line up in the
+/// trace viewer. `None` is the exact untraced hot path — no ids are
+/// minted and nothing is stamped (the control flow, channel traffic, and
+/// worker calls are identical either way, which is what keeps traced
+/// serving bit-identical to untraced).
+pub fn run_pipelined_traced<W: StageWorker>(
+    chunks: impl IntoIterator<Item = W::Chunk>,
+    worker: W,
+    depth: usize,
     mut execute: impl FnMut(usize, W::Staged) -> anyhow::Result<W::Raw>,
+    spans: Option<(&SpanRecorder, usize)>,
 ) -> (anyhow::Result<Vec<W::Out>>, W, PipelineStats) {
     let depth = depth.max(2);
     let wall = Timer::start();
     let mut stats = PipelineStats::default();
     let mut chunks = chunks.into_iter();
 
+    // Owned clones (the recorder is an `Arc` handle onto one shared
+    // ring): one rides into the stage thread, one stays with the driver.
+    let stage_spans: Option<(SpanRecorder, usize)> = spans.map(|(r, s)| (r.clone(), s));
+    let exec_spans = stage_spans.clone();
+
     let (job_tx, job_rx) = mpsc::channel::<Job<W::Chunk, W::Raw>>();
-    let (staged_tx, staged_rx) = mpsc::channel::<anyhow::Result<(usize, W::Staged)>>();
+    let (staged_tx, staged_rx) = mpsc::channel::<anyhow::Result<(usize, u64, W::Staged)>>();
     let (out_tx, out_rx) = mpsc::channel::<anyhow::Result<(usize, W::Out)>>();
 
     let (result, worker) = std::thread::scope(|scope| {
@@ -161,18 +186,46 @@ pub fn run_pipelined<W: StageWorker>(
             let mut busy = 0u64;
             while let Ok(job) = job_rx.recv() {
                 match job {
-                    Job::Stage(idx, chunk) => {
+                    Job::Stage(idx, span, chunk) => {
                         let t = Timer::start();
-                        let staged = worker.stage(idx, chunk).map(|s| (idx, s));
-                        busy += t.elapsed_ns();
+                        let staged = worker.stage(idx, chunk).map(|s| (idx, span, s));
+                        let took = t.elapsed_ns();
+                        busy += took;
+                        if let Some((rec, shard)) = &stage_spans {
+                            let end = rec.now_ns();
+                            rec.batch_timed(
+                                Phase::Staged,
+                                span,
+                                *shard,
+                                0,
+                                0,
+                                false,
+                                end.saturating_sub(took),
+                                took,
+                            );
+                        }
                         if staged_tx.send(staged).is_err() {
                             break; // caller aborted
                         }
                     }
-                    Job::Finish(idx, raw) => {
+                    Job::Finish(idx, span, raw) => {
                         let t = Timer::start();
                         let out = worker.finish(idx, raw).map(|o| (idx, o));
-                        busy += t.elapsed_ns();
+                        let took = t.elapsed_ns();
+                        busy += took;
+                        if let Some((rec, shard)) = &stage_spans {
+                            let end = rec.now_ns();
+                            rec.batch_timed(
+                                Phase::Unpacked,
+                                span,
+                                *shard,
+                                0,
+                                0,
+                                false,
+                                end.saturating_sub(took),
+                                took,
+                            );
+                        }
                         if out_tx.send(out).is_err() {
                             break;
                         }
@@ -190,7 +243,8 @@ pub fn run_pipelined<W: StageWorker>(
         let mut executed = 0usize;
         let mut error: Option<anyhow::Error> = None;
         for chunk in chunks.by_ref().take(depth) {
-            let _ = job_tx.send(Job::Stage(dispatched, chunk));
+            let span = exec_spans.as_ref().map_or(0, |(r, _)| r.next_batch_id());
+            let _ = job_tx.send(Job::Stage(dispatched, span, chunk));
             dispatched += 1;
         }
         while executed < dispatched {
@@ -206,15 +260,30 @@ pub fn run_pipelined<W: StageWorker>(
                 }
             };
             if let Some(chunk) = chunks.next() {
-                let _ = job_tx.send(Job::Stage(dispatched, chunk));
+                let span = exec_spans.as_ref().map_or(0, |(r, _)| r.next_batch_id());
+                let _ = job_tx.send(Job::Stage(dispatched, span, chunk));
                 dispatched += 1;
             }
-            let (idx, staged) = staged;
+            let (idx, span, staged) = staged;
             let t = Timer::start();
             match execute(idx, staged) {
                 Ok(raw) => {
-                    stats.execute_busy_ns += t.elapsed_ns();
-                    let _ = job_tx.send(Job::Finish(idx, raw));
+                    let took = t.elapsed_ns();
+                    stats.execute_busy_ns += took;
+                    if let Some((rec, shard)) = &exec_spans {
+                        let end = rec.now_ns();
+                        rec.batch_timed(
+                            Phase::Executed,
+                            span,
+                            *shard,
+                            0,
+                            0,
+                            false,
+                            end.saturating_sub(took),
+                            took,
+                        );
+                    }
+                    let _ = job_tx.send(Job::Finish(idx, span, raw));
                     executed += 1;
                 }
                 Err(e) => {
@@ -409,6 +478,32 @@ mod tests {
             assert_eq!(result.unwrap(), want, "depth {depth}");
             assert_eq!(stats.chunks, 40);
             assert_eq!(worker.staged, 40);
+        }
+    }
+
+    #[test]
+    fn traced_run_stamps_stage_execute_unpack_spans() {
+        let rec = SpanRecorder::new(256, 1);
+        let (result, _, _) = run_pipelined_traced(
+            0..5u64,
+            TestWorker::instant(),
+            2,
+            |_, staged| Ok(staged + 5),
+            Some((&rec, 3)),
+        );
+        let want: Vec<u64> = (0..5).map(|c| c * 10 + 5 + 1).collect();
+        assert_eq!(result.unwrap(), want, "tracing must not perturb outputs");
+
+        let events = rec.events();
+        let count = |phase: Phase| events.iter().filter(|e| e.phase == phase).count();
+        assert_eq!(count(Phase::Staged), 5);
+        assert_eq!(count(Phase::Executed), 5);
+        assert_eq!(count(Phase::Unpacked), 5);
+        assert!(events.iter().all(|e| e.shard == Some(3)), "all on shard 3's track");
+        // Each chunk's three phases share one freshly minted batch id.
+        for id in 1..=5u64 {
+            let hits = events.iter().filter(|e| e.batch == Some(id)).count();
+            assert_eq!(hits, 3, "batch id {id} should tie 3 phases together");
         }
     }
 

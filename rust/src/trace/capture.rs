@@ -19,6 +19,7 @@
 //! the same fixture are bit-identical (see [`mod@crate::trace::replay`]).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -48,9 +49,20 @@ pub struct TraceEvent {
 }
 
 /// A captured request stream, in arrival order.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Trace {
     pub events: Vec<TraceEvent>,
+    /// Capture sampling stride: the fixture holds every `sample_every`-th
+    /// request of the live stream (1 = everything). Replay compensates by
+    /// scaling the arrival rate back up, so a sampled fixture reproduces
+    /// the original load shape at a fraction of the file size.
+    pub sample_every: u64,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace { events: Vec::new(), sample_every: 1 }
+    }
 }
 
 impl Trace {
@@ -76,6 +88,13 @@ impl Trace {
             "trace schema {} != supported {TRACE_SCHEMA} (re-capture the fixture)",
             header_schema
         );
+        // Optional header field (absent in pre-sampling fixtures = 1);
+        // still schema 1 because old readers never look for it.
+        let sample_every = objs
+            .iter()
+            .find_map(|o| extract_num(o, "sample_every"))
+            .map_or(1, |v| v as u64)
+            .max(1);
         let mut events = Vec::new();
         for obj in &objs {
             // Only the header/comment object lacks an arrival stamp; any
@@ -106,7 +125,7 @@ impl Trace {
                 infeasible: infeasible != 0.0,
             });
         }
-        Ok(Trace { events })
+        Ok(Trace { events, sample_every })
     }
 
     pub fn load(path: &Path) -> anyhow::Result<Trace> {
@@ -120,10 +139,12 @@ impl Trace {
     /// save → load → save is byte-identical.
     pub fn render(&self) -> String {
         let mut bodies = vec![format!(
-            "{{\n  \"trace_schema\": {TRACE_SCHEMA},\n  \"_comment\": \"Captured request \
+            "{{\n  \"trace_schema\": {TRACE_SCHEMA},\n  \"sample_every\": {},\n  \
+             \"_comment\": \"Captured request \
              stream (arrival offset, deadline class, size class, payload seed) recorded by \
              serve --capture PATH. Replay deterministically with --scenario trace:PATH on \
-             serve or the loadgen bench; payloads regenerate from the per-record seed.\"\n}}"
+             serve or the loadgen bench; payloads regenerate from the per-record seed.\"\n}}",
+            self.sample_every.max(1)
         )];
         for ev in &self.events {
             bodies.push(format!(
@@ -155,25 +176,51 @@ impl Trace {
 pub struct TraceCapture {
     started: Instant,
     events: Arc<Mutex<Vec<TraceEvent>>>,
+    /// Record every `sample_every`-th request (1 = all). Shared `seen`
+    /// counter so clones sample one interleaved stream, not N.
+    sample_every: u64,
+    seen: Arc<AtomicU64>,
 }
 
 impl TraceCapture {
     /// Start a capture; arrival offsets are measured from this call.
     pub fn new() -> TraceCapture {
-        TraceCapture { started: Instant::now(), events: Arc::new(Mutex::new(Vec::new())) }
+        Self::with_sample(1)
     }
 
-    /// Build the event for a request without recording it yet. The service
-    /// stamps the event before the problem moves into the reply channel,
-    /// then [`TraceCapture::push`]es it only once the submit succeeded.
-    pub fn event_for(&self, problem: &Problem, class: DeadlineClass) -> TraceEvent {
-        TraceEvent {
+    /// Start a sampled capture recording every `sample_every`-th request
+    /// (clamped to ≥ 1). The stride is persisted in the fixture header so
+    /// replay can scale the arrival rate back up (`--capture-sample N`).
+    pub fn with_sample(sample_every: u64) -> TraceCapture {
+        TraceCapture {
+            started: Instant::now(),
+            events: Arc::new(Mutex::new(Vec::new())),
+            sample_every: sample_every.max(1),
+            seen: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The configured sampling stride.
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Build the event for a request without recording it yet (`None` if
+    /// capture sampling skips this request). The service stamps the event
+    /// before the problem moves into the reply channel, then
+    /// [`TraceCapture::push`]es it only once the submit succeeded.
+    pub fn event_for(&self, problem: &Problem, class: DeadlineClass) -> Option<TraceEvent> {
+        let seen = self.seen.fetch_add(1, Ordering::Relaxed);
+        if seen % self.sample_every != 0 {
+            return None;
+        }
+        Some(TraceEvent {
             at_ns: self.started.elapsed().as_nanos() as u64,
             class,
             m: problem.m(),
             seed: payload_seed(problem),
             infeasible: slab_infeasible(problem),
-        }
+        })
     }
 
     pub fn push(&self, event: TraceEvent) {
@@ -181,9 +228,11 @@ impl TraceCapture {
     }
 
     /// Stamp and record one request ([`event_for`](Self::event_for) +
-    /// [`push`](Self::push)).
+    /// [`push`](Self::push)); a no-op for requests sampling skips.
     pub fn record(&self, problem: &Problem, class: DeadlineClass) {
-        self.push(self.event_for(problem, class));
+        if let Some(ev) = self.event_for(problem, class) {
+            self.push(ev);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -196,7 +245,10 @@ impl TraceCapture {
 
     /// Snapshot the captured stream so far.
     pub fn trace(&self) -> Trace {
-        Trace { events: self.events.lock().unwrap().clone() }
+        Trace {
+            events: self.events.lock().unwrap().clone(),
+            sample_every: self.sample_every,
+        }
     }
 
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
@@ -241,6 +293,7 @@ mod tests {
 
     fn sample_trace() -> Trace {
         Trace {
+            sample_every: 1,
             events: vec![
                 TraceEvent {
                     at_ns: 1_000,
@@ -319,6 +372,36 @@ mod tests {
         let clone = cap.clone();
         clone.record(&p1, DeadlineClass::Interactive);
         assert_eq!(cap.len(), 3);
+    }
+
+    #[test]
+    fn sampled_capture_keeps_every_nth_request() {
+        let mut rng = Rng::new(5);
+        let cap = TraceCapture::with_sample(3);
+        let problems: Vec<_> = (0..9).map(|_| gen::feasible(&mut rng, 16)).collect();
+        for p in &problems {
+            cap.record(p, DeadlineClass::Interactive);
+        }
+        assert_eq!(cap.len(), 3, "requests 0, 3, 6 land on the stride");
+        let trace = cap.trace();
+        assert_eq!(trace.sample_every, 3);
+        // The stride survives the fixture round trip.
+        let parsed = Trace::parse(&trace.render()).unwrap();
+        assert_eq!(parsed, trace);
+        // Clones share one interleaved sample counter, not one each.
+        let clone = cap.clone();
+        clone.record(&problems[0], DeadlineClass::Bulk); // seen 9 → sampled
+        assert_eq!(cap.len(), 4);
+    }
+
+    #[test]
+    fn legacy_fixture_without_stride_parses_as_unsampled() {
+        let legacy = "[\n{\n  \"trace_schema\": 1\n},\n{\n  \"at_ns\": 5,\n  \
+                      \"class\": \"bulk\",\n  \"m\": 8,\n  \"seed\": 1,\n  \
+                      \"infeasible\": 0\n}\n]";
+        let trace = Trace::parse(legacy).unwrap();
+        assert_eq!(trace.sample_every, 1);
+        assert_eq!(trace.len(), 1);
     }
 
     #[test]

@@ -10,9 +10,15 @@
 //! Panels: traffic counters, latency split (queue-wait vs execute
 //! p50/p95/p99), close-reason counts, shed counters, the result-cache
 //! row (hits/misses/evictions and the live hit-rate — how much the
-//! reuse layer is absorbing), live per-(size × deadline) class queue
-//! depths, and the per-shard load table with nominal-vs-calibrated
-//! weights, dispatch targets, and steal counts.
+//! reuse layer is absorbing), per-(size × deadline) class SLO burn-rate
+//! gauges, live per-(size × deadline) class queue depths, and the
+//! per-shard load table with nominal-vs-calibrated weights, dispatch
+//! targets, and steal counts (both directions).
+//!
+//! With a [`SnapshotRing`] of recent snapshots,
+//! [`render_frame_with_history`] appends unicode [`sparkline`] panels:
+//! per-shard load over the ring's window and per-class short-window burn
+//! rate — trend at a glance without a plotting dependency.
 
 use crate::coordinator::Snapshot;
 
@@ -21,6 +27,82 @@ pub const CLEAR: &str = "\x1b[2J\x1b[H";
 
 fn ms(ns: u64) -> f64 {
     ns as f64 / 1e6
+}
+
+/// Render `values` as a unicode sparkline, scaled to the series maximum
+/// (`▁` for zero/empty buckets up to `█` for the max). Pure and
+/// allocation-bounded: one char per sample.
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().filter(|v| v.is_finite()).fold(0.0_f64, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 || !v.is_finite() || v <= 0.0 {
+                BARS[0]
+            } else {
+                let idx = ((v / max) * 7.0).round() as usize;
+                BARS[idx.min(7)]
+            }
+        })
+        .collect()
+}
+
+/// A bounded ring of recent [`Snapshot`]s — the dashboard's history
+/// window. Pushing past capacity overwrites the oldest;
+/// [`SnapshotRing::chronological`] unwinds oldest-first for trend
+/// rendering.
+#[derive(Clone, Debug)]
+pub struct SnapshotRing {
+    buf: Vec<Snapshot>,
+    next: usize,
+    capacity: usize,
+}
+
+impl SnapshotRing {
+    /// A ring holding at most `capacity` snapshots (clamped to ≥ 2 — one
+    /// sample has no trend).
+    pub fn new(capacity: usize) -> SnapshotRing {
+        let capacity = capacity.max(2);
+        SnapshotRing { buf: Vec::with_capacity(capacity), next: 0, capacity }
+    }
+
+    pub fn push(&mut self, snap: Snapshot) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(snap);
+        } else {
+            self.buf[self.next] = snap;
+        }
+        self.next = (self.next + 1) % self.capacity;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Snapshots oldest-first.
+    pub fn chronological(&self) -> Vec<&Snapshot> {
+        if self.buf.len() < self.capacity {
+            self.buf.iter().collect()
+        } else {
+            self.buf[self.next..].iter().chain(self.buf[..self.next].iter()).collect()
+        }
+    }
+
+    /// Extract one numeric series over the window, oldest-first.
+    pub fn series(&self, f: impl Fn(&Snapshot) -> f64) -> Vec<f64> {
+        self.chronological().into_iter().map(f).collect()
+    }
+}
+
+/// Per-interval increments of a cumulative series (clamped at 0 so a
+/// service restart inside the window cannot render negative bars).
+fn deltas(series: &[f64]) -> Vec<f64> {
+    series.windows(2).map(|w| (w[1] - w[0]).max(0.0)).collect()
 }
 
 /// Render one dashboard frame. `backends` are the per-shard backend names
@@ -84,6 +166,25 @@ pub fn render_frame(snap: &Snapshot, backends: &[&str], elapsed_s: f64) -> Strin
         snap.cache_evictions,
         snap.cache_hit_rate() * 100.0
     );
+    let _ = writeln!(out, "slo burn (violated fraction, short/long window)");
+    if snap.burn.is_empty() {
+        let _ = writeln!(out, "  (no slo observations yet)");
+    }
+    for b in &snap.burn {
+        let slo_ms =
+            if b.slo_ns == u64::MAX { f64::INFINITY } else { b.slo_ns as f64 / 1e6 };
+        let _ = writeln!(
+            out,
+            "  m={:<4} {:<11} slo {slo_ms:.2} ms  short {:.3}  long {:.3}  \
+             violated {}/{}",
+            b.class_m,
+            b.deadline_class.as_str(),
+            b.short_burn,
+            b.long_burn,
+            b.violated,
+            b.observed
+        );
+    }
     let _ = writeln!(out, "queue depths (size class x deadline class)");
     if snap.queue_depths.is_empty() {
         let _ = writeln!(out, "  (no queue-depth samples yet)");
@@ -100,15 +201,52 @@ pub fn render_frame(snap: &Snapshot, backends: &[&str], elapsed_s: f64) -> Strin
         let name = backends.get(s).copied().unwrap_or("?");
         let _ = writeln!(
             out,
-            "  shard {s} [{name}] w={:.1} cal={:.1}  batches {} ({} dispatched, {} stolen)  \
-             {} LPs  busy {:.1} ms",
+            "  shard {s} [{name}] w={:.1} cal={:.1}  batches {} ({} dispatched, {} stolen, \
+             {} stolen-away)  {} LPs  busy {:.1} ms",
             load.weight,
             load.calibrated_weight,
             load.batches,
             load.dispatched,
             load.steals,
+            load.stolen_away,
             load.solved,
             load.busy_ns as f64 / 1e6
+        );
+    }
+    out
+}
+
+/// [`render_frame`] plus trend panels from a [`SnapshotRing`] of recent
+/// snapshots: per-shard load sparklines (busy-time increments over the
+/// window) and per-class short-window burn-rate sparklines. With fewer
+/// than two history samples the extra panels are omitted — the frame is
+/// then exactly [`render_frame`]'s.
+pub fn render_frame_with_history(
+    snap: &Snapshot,
+    backends: &[&str],
+    elapsed_s: f64,
+    history: &SnapshotRing,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = render_frame(snap, backends, elapsed_s);
+    if history.len() < 2 {
+        return out;
+    }
+    let _ = writeln!(out, "trends (last {} samples)", history.len());
+    for s in 0..snap.per_shard.len() {
+        let name = backends.get(s).copied().unwrap_or("?");
+        let busy =
+            history.series(|sn| sn.per_shard.get(s).map_or(0.0, |l| l.busy_ns as f64));
+        let _ = writeln!(out, "  shard {s} [{name}] load  {}", sparkline(&deltas(&busy)));
+    }
+    for (i, b) in snap.burn.iter().enumerate() {
+        let series = history.series(|sn| sn.burn.get(i).map_or(0.0, |r| r.short_burn));
+        let _ = writeln!(
+            out,
+            "  m={:<4} {:<11} burn  {}",
+            b.class_m,
+            b.deadline_class.as_str(),
+            sparkline(&series)
         );
     }
     out
@@ -126,11 +264,24 @@ mod tests {
         m.configure_shards(&[8.0, 1.0]);
         m.set_calibrated_weights(&[9.5, 1.0]);
         m.set_pipeline_depth(3);
+        m.configure_slos(2_000_000, 16_000_000, vec![(16, 2_000_000, 16_000_000)]);
         m.on_submit();
         m.on_submit();
         m.on_dispatch(0);
-        m.on_close(16, CloseReason::Full, &[Duration::from_millis(1)], 10);
-        m.on_close(16, CloseReason::IdleShard, &[Duration::from_millis(2)], 12);
+        m.on_close(
+            16,
+            DeadlineClass::Interactive,
+            CloseReason::Full,
+            &[Duration::from_millis(1)],
+            10,
+        );
+        m.on_close(
+            16,
+            DeadlineClass::Interactive,
+            CloseReason::IdleShard,
+            &[Duration::from_millis(5)],
+            12,
+        );
         m.on_shed(DeadlineClass::Bulk);
         m.on_cache_hit();
         m.on_cache_miss();
@@ -165,6 +316,8 @@ mod tests {
             "close reasons",
             "shed   1 total",
             "cache   hits 1  misses 2  evictions 1  hit-rate 33.3%",
+            "slo burn",
+            "interactive",
             "queue depths",
             "m=16",
             "shards",
@@ -183,9 +336,68 @@ mod tests {
         let empty = Metrics::new().snapshot();
         let frame = render_frame(&empty, &[], 0.0);
         assert!(frame.contains("no queue-depth samples yet"));
+        assert!(frame.contains("no slo observations yet"));
         // More shards than names: unknown shards render as '?'.
         let frame = render_frame(&busy_snapshot(), &["simd-cpu"], 1.0);
         assert!(frame.contains("shard 1 [?]"));
+    }
+
+    #[test]
+    fn burn_row_reports_violation_fractions() {
+        // The 1ms wait is inside the 2ms interactive SLO; the 5ms wait is
+        // not — one violation over two observations.
+        let frame = render_frame(&busy_snapshot(), &["simd-cpu", "cpu"], 1.0);
+        assert!(frame.contains("violated 1/2"), "{frame}");
+        assert!(frame.contains("slo 2.00 ms"), "{frame}");
+    }
+
+    #[test]
+    fn sparkline_scales_to_the_series_max() {
+        assert_eq!(sparkline(&[0.0, 1.0, 2.0, 4.0]), "▁▃▅█");
+        assert_eq!(sparkline(&[0.0, 0.0, 0.0]), "▁▁▁", "flat-zero series renders flat");
+        assert_eq!(sparkline(&[]), "");
+        // Non-finite samples degrade to the floor instead of panicking.
+        assert_eq!(sparkline(&[f64::NAN, 1.0]), "▁█");
+    }
+
+    #[test]
+    fn snapshot_ring_overwrites_oldest_in_order() {
+        let mut ring = SnapshotRing::new(3);
+        assert!(ring.is_empty());
+        for i in 1..=5u64 {
+            let m = Metrics::new();
+            for _ in 0..i {
+                m.on_submit();
+            }
+            ring.push(m.snapshot());
+        }
+        assert_eq!(ring.len(), 3);
+        let submitted: Vec<u64> =
+            ring.chronological().iter().map(|s| s.submitted).collect();
+        assert_eq!(submitted, vec![3, 4, 5], "oldest-first, oldest two evicted");
+        assert_eq!(ring.series(|s| s.submitted as f64), vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn history_frame_appends_trend_sparklines() {
+        let mut ring = SnapshotRing::new(8);
+        let frame_without =
+            render_frame_with_history(&busy_snapshot(), &["simd-cpu", "cpu"], 1.0, &ring);
+        assert!(
+            !frame_without.contains("trends"),
+            "one sample has no trend: {frame_without}"
+        );
+        ring.push(busy_snapshot());
+        ring.push(busy_snapshot());
+        ring.push(busy_snapshot());
+        let frame =
+            render_frame_with_history(&busy_snapshot(), &["simd-cpu", "cpu"], 1.0, &ring);
+        assert!(frame.contains("trends (last 3 samples)"), "{frame}");
+        assert!(frame.contains("shard 0 [simd-cpu] load"), "{frame}");
+        assert!(frame.contains("burn  "), "{frame}");
+        assert!(frame.contains('▁'), "sparkline glyphs present: {frame}");
+        // Still escape-free: the history frame is --tui-frame-safe too.
+        assert!(!frame.contains('\x1b'));
     }
 
     #[test]

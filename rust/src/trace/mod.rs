@@ -20,5 +20,7 @@ pub mod dashboard;
 pub mod replay;
 
 pub use capture::{payload_seed, slab_infeasible, Trace, TraceCapture, TraceEvent, TRACE_SCHEMA};
-pub use dashboard::{render_frame, CLEAR};
+pub use dashboard::{
+    render_frame, render_frame_with_history, sparkline, SnapshotRing, CLEAR,
+};
 pub use replay::{replay, replay_at, replay_file, replay_file_at};

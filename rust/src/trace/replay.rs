@@ -35,6 +35,12 @@ pub fn replay(trace: &Trace, n: usize) -> Vec<ScenarioRequest> {
 /// proportionally higher offered load (the `--replay-speed` knob).
 pub fn replay_at(trace: &Trace, n: usize, speed: f64) -> Vec<ScenarioRequest> {
     assert!(speed > 0.0 && speed.is_finite(), "replay speed must be positive");
+    // A sampled fixture (`--capture-sample k`) holds every k-th request
+    // at its original arrival stamp — 1/k of the live rate. Compress
+    // time by k so the replayed stream offers the load the recorded
+    // system actually saw; an unsampled fixture (k = 1) keeps the exact
+    // integer stamps when speed is 1.0 (no f64 round-trip).
+    let effective = speed * trace.sample_every.max(1) as f64;
     let cap = if n == 0 { trace.len() } else { n.min(trace.len()) };
     trace.events[..cap]
         .iter()
@@ -46,7 +52,11 @@ pub fn replay_at(trace: &Trace, n: usize, speed: f64) -> Vec<ScenarioRequest> {
             } else {
                 crate::gen::feasible(&mut rng, m)
             };
-            let at_ns = if speed == 1.0 { ev.at_ns } else { (ev.at_ns as f64 / speed) as u64 };
+            let at_ns = if effective == 1.0 {
+                ev.at_ns
+            } else {
+                (ev.at_ns as f64 / effective) as u64
+            };
             ScenarioRequest { at_ns, problem, class: ev.class }
         })
         .collect()
@@ -167,8 +177,28 @@ mod tests {
             seed: 3,
             infeasible: true,
         };
-        let reqs = replay(&Trace { events: vec![ev] }, 0);
+        let reqs = replay(&Trace { events: vec![ev], ..Default::default() }, 0);
         assert!(slab_infeasible(&reqs[0].problem));
         assert_eq!(reqs[0].problem.m(), 16);
+    }
+
+    #[test]
+    fn sampled_fixture_replays_at_scaled_up_rate() {
+        // A 1-in-4 sampled capture compresses its stamps by 4 on replay,
+        // restoring the recorded system's offered load shape.
+        let mut trace = captured_trace();
+        trace.sample_every = 4;
+        let unsampled = Trace { sample_every: 1, ..captured_trace() };
+        let scaled = replay(&trace, 0);
+        let real = replay(&unsampled, 0);
+        for (s, r) in scaled.iter().zip(&real) {
+            assert_eq!(s.at_ns, (r.at_ns as f64 / 4.0) as u64);
+            assert_eq!(s.problem, r.problem, "payloads are pacing-independent");
+        }
+        // Explicit speed composes with the stride: speed 2 × stride 4 = 8.
+        let both = replay_at(&trace, 0, 2.0);
+        for (b, r) in both.iter().zip(&real) {
+            assert_eq!(b.at_ns, (r.at_ns as f64 / 8.0) as u64);
+        }
     }
 }

@@ -9,7 +9,7 @@ pub mod stats;
 pub mod table;
 
 pub use rng::Rng;
-pub use stats::{LatencyHistogram, Summary};
+pub use stats::{HistogramSnapshot, LatencyHistogram, Summary};
 pub use table::Table;
 
 /// Monotonic wall-clock timer returning nanoseconds.

@@ -117,6 +117,21 @@ impl LatencyHistogram {
         self.max_ns
     }
 
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Freeze the histogram into an owned, field-public snapshot — the
+    /// shape the metrics `Snapshot` and the Prometheus exposition carry.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.clone(),
+            count: self.count,
+            sum_ns: self.sum_ns,
+            max_ns: self.max_ns,
+        }
+    }
+
     /// Upper edge (ns) of the bucket containing percentile p — a bounded
     /// over-estimate, fine for dashboards.
     pub fn percentile_ns(&self, p: f64) -> u64 {
@@ -132,6 +147,26 @@ impl LatencyHistogram {
             }
         }
         self.max_ns
+    }
+}
+
+/// An owned copy of a [`LatencyHistogram`]'s state with public fields:
+/// explicit power-of-two buckets plus count/sum/max. Bucket `i` covers
+/// `[2^i, 2^(i+1))` nanoseconds (the last bucket absorbs everything
+/// above); [`HistogramSnapshot::bucket_upper_ns`] gives the upper edges
+/// the exposition layer renders as cumulative `le` bounds.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    /// Upper edge (ns) of bucket `i`.
+    pub fn bucket_upper_ns(i: usize) -> u64 {
+        1u64 << (i + 1)
     }
 }
 
@@ -176,6 +211,28 @@ mod tests {
         assert!(h.percentile_ns(50.0) < 5_000);
         assert!(h.percentile_ns(99.9) >= 1_000_000 / 2);
         assert_eq!(h.max_ns(), 1_000_000);
+    }
+
+    #[test]
+    fn histogram_snapshot_mirrors_live_state() {
+        let mut h = LatencyHistogram::new();
+        h.record(1_000);
+        h.record(3_000);
+        h.record(1_000_000);
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum_ns, 1_004_000);
+        assert_eq!(s.max_ns, 1_000_000);
+        assert_eq!(s.buckets.len(), HIST_BUCKETS);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 3);
+        // Each recorded value lands in the bucket whose range covers it.
+        for (i, &c) in s.buckets.iter().enumerate() {
+            if c > 0 {
+                assert!(HistogramSnapshot::bucket_upper_ns(i) >= 1_000);
+            }
+        }
+        assert_eq!(HistogramSnapshot::bucket_upper_ns(0), 2);
+        assert_eq!(HistogramSnapshot::bucket_upper_ns(9), 1024);
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Observability integration: the span timeline must be invisible in the
+//! answers (recording on ⇒ bit-identical replies), a real served run must
+//! export a Chrome trace with the full per-request lifecycle on per-shard
+//! tracks, and the exposition/burn gauges must cover that run's snapshot.
+//! Pure-Rust CPU shard mixes throughout — no artifacts needed.
+
+use std::collections::{BTreeSet, HashMap};
+use std::time::Duration;
+
+use batch_lp2d::coordinator::{BackendSpec, Config, Service};
+use batch_lp2d::gen;
+use batch_lp2d::lp::types::Problem;
+use batch_lp2d::obs::export::{chrome_trace_json, prometheus_exposition};
+use batch_lp2d::obs::spans::SpanRecorder;
+use batch_lp2d::trace::{render_frame, render_frame_with_history, SnapshotRing};
+use batch_lp2d::util::prop::check;
+use batch_lp2d::util::Rng;
+
+mod common;
+use common::bit_identical;
+
+/// A small heterogeneous CPU-only mix (multicore batch shard + the
+/// single-thread stand-in) — starts on any host, no artifacts.
+fn cpu_config(spans: Option<SpanRecorder>, n: usize) -> Config {
+    Config {
+        max_wait: Duration::from_millis(1),
+        backends: vec![BackendSpec::BatchCpu { threads: 2 }, BackendSpec::Cpu],
+        max_queue: n + 64,
+        spans,
+        ..Config::default()
+    }
+}
+
+fn mixed_stream(rng: &mut Rng, n: usize) -> Vec<Problem> {
+    (0..n)
+        .map(|i| {
+            let m = [6usize, 16, 24, 48][i % 4];
+            if i % 9 == 0 {
+                gen::infeasible(rng, m)
+            } else {
+                gen::feasible(rng, m)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_span_recording_is_bit_identical_to_off() {
+    // The acceptance property: span recording (at any sampling stride)
+    // only *observes* the pipeline. Replies must match the untraced
+    // service bit for bit, in submission order.
+    check("span recording equivalence", 3, |rng| {
+        let n = rng.range_usize(40, 120);
+        let stream = mixed_stream(rng, n);
+        let off = Service::start("definitely-missing-artifact-dir", cpu_config(None, n))
+            .expect("CPU-only service starts without artifacts");
+        let want = off.solve_all(&stream).expect("untraced solve_all");
+        off.shutdown();
+        for sample in [1u64, 3] {
+            let rec = SpanRecorder::new(4_096, sample);
+            let on = Service::start(
+                "definitely-missing-artifact-dir",
+                cpu_config(Some(rec.clone()), n),
+            )
+            .expect("CPU-only service starts without artifacts");
+            let got = on.solve_all(&stream).expect("traced solve_all");
+            on.shutdown();
+            assert_eq!(got.len(), stream.len(), "sample={sample}");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    bit_identical(a, b),
+                    "sample={sample} problem {i} (m={}): {a:?} vs {b:?}",
+                    stream[i].m()
+                );
+            }
+            // The tap actually recorded: stride 1 samples every request.
+            if sample == 1 {
+                assert!(!rec.is_empty(), "stride-1 recorder stayed empty");
+            }
+        }
+    });
+}
+
+#[test]
+fn served_run_exports_full_lifecycle_chrome_trace() {
+    let n = 80usize;
+    let rec = SpanRecorder::new(16_384, 1);
+    let svc = Service::start(
+        "definitely-missing-artifact-dir",
+        cpu_config(Some(rec.clone()), n),
+    )
+    .expect("CPU-only service starts without artifacts");
+    let mut rng = Rng::new(0x0B5);
+    let stream = mixed_stream(&mut rng, n);
+    let sols = svc.solve_all(&stream).expect("solve_all");
+    assert_eq!(sols.len(), n);
+    let snap = svc.metrics().snapshot();
+    svc.shutdown();
+
+    // Every sampled request accumulated >= 6 distinct lifecycle phases,
+    // bracketed by admitted ... replied.
+    let events = rec.events();
+    let mut phases: HashMap<u64, BTreeSet<&'static str>> = HashMap::new();
+    for e in &events {
+        if let Some(req) = e.req {
+            phases.entry(req).or_default().insert(e.phase.as_str());
+        }
+    }
+    assert_eq!(phases.len(), n, "stride-1 sampling tracks every request");
+    for (req, seen) in &phases {
+        assert!(seen.len() >= 6, "request {req} saw only {seen:?}");
+        assert!(seen.contains("admitted") && seen.contains("replied"), "{seen:?}");
+    }
+    // Batch-scope events attribute work to concrete shard tracks.
+    assert!(events.iter().any(|e| e.req.is_none() && e.shard.is_some()));
+
+    let json = chrome_trace_json(&rec);
+    assert!(json.contains("\"displayTimeUnit\":\"ms\""));
+    assert!(json.contains("\"traceEvents\":["));
+    // One named track per shard (even an idle one), plus requests.
+    assert!(json.contains("\"name\":\"requests\""));
+    assert!(json.contains("shard 0 [batch-cpu]"));
+    assert!(json.contains("shard 1 [cpu-seidel]"));
+    for phase in
+        ["admitted", "enqueued", "batch-closed", "staged", "executed", "unpacked", "replied"]
+    {
+        assert!(json.contains(&format!("\"name\":\"{phase}\"")), "missing {phase}");
+    }
+
+    // The same run's exposition covers its counters, histograms, and the
+    // burn gauges (every solved interactive request was judged once).
+    let names: Vec<String> = ["batch-cpu", "cpu-seidel"].iter().map(|s| s.to_string()).collect();
+    let text = prometheus_exposition(&snap, &names);
+    assert!(text.contains(&format!("batch_lp2d_submitted_total {n}")));
+    assert!(text.contains(&format!("batch_lp2d_solved_total {n}")));
+    assert!(text.contains(&format!("batch_lp2d_queue_wait_seconds_count {n}")));
+    assert!(text.contains("batch_lp2d_exec_latency_seconds_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("batch_lp2d_slo_burn{class_m="));
+    let judged: u64 = snap.burn.iter().map(|b| b.observed).sum();
+    assert_eq!(judged, n as u64, "each reply judged against its class SLO once");
+
+    // Burn gauges surface in the dashboard too — plain and with trends.
+    let frame = render_frame(&snap, &["batch-cpu", "cpu-seidel"], 1.0);
+    assert!(frame.contains("slo burn"), "frame missing burn panel:\n{frame}");
+    assert!(frame.contains("interactive"));
+    let mut ring = SnapshotRing::new(8);
+    ring.push(snap.clone());
+    ring.push(snap.clone());
+    let hist = render_frame_with_history(&snap, &["batch-cpu", "cpu-seidel"], 1.0, &ring);
+    assert!(hist.contains("trends (last 2 samples)"), "no trend panel:\n{hist}");
+}
+
+#[test]
+fn sampling_stride_records_a_subset_of_requests() {
+    let n = 60usize;
+    let rec = SpanRecorder::new(4_096, 4);
+    let svc = Service::start(
+        "definitely-missing-artifact-dir",
+        cpu_config(Some(rec.clone()), n),
+    )
+    .expect("CPU-only service starts without artifacts");
+    let mut rng = Rng::new(0x5A);
+    let stream = mixed_stream(&mut rng, n);
+    svc.solve_all(&stream).expect("solve_all");
+    svc.shutdown();
+
+    let sampled: BTreeSet<u64> = rec.events().iter().filter_map(|e| e.req).collect();
+    assert!(!sampled.is_empty(), "stride 4 over 60 requests samples some");
+    assert!(
+        sampled.len() <= n.div_ceil(4),
+        "1-in-4 sampling kept {} of {n} requests",
+        sampled.len()
+    );
+}
